@@ -1,0 +1,88 @@
+//! Post-training quantization tool (the paper's 'mismatch' path as a
+//! utility): load a float `.qam`, quantize every weight matrix with the
+//! §3 scheme, report size/error statistics, save the quantized model, and
+//! compare WER before/after on the clean eval set.
+//!
+//! ```bash
+//! cargo run --release --example quantize_model -- \
+//!     artifacts/models/p24.float.qam /tmp/p24.ptq.qam
+//! ```
+
+use anyhow::{Context, Result};
+use quantasr::decoder::DecoderConfig;
+use quantasr::eval::{build_decoder, evaluate};
+use quantasr::io::feat_fmt::read_feats;
+use quantasr::io::model_fmt::{QamFile, Tensor};
+use quantasr::nn::{AcousticModel, ExecMode};
+use quantasr::quant::scheme::QuantParams;
+use quantasr::sim::World;
+
+fn main() -> Result<()> {
+    let mut args = std::env::args().skip(1);
+    let src = args.next().unwrap_or_else(|| "artifacts/models/p24.float.qam".into());
+    let dst = args.next().unwrap_or_else(|| "/tmp/quantasr.ptq.qam".into());
+    let art = args.next().unwrap_or_else(|| "artifacts".into());
+
+    let mut qam = QamFile::load(&src).context("loading source model")?;
+    let before = qam.storage_bytes();
+    println!("source: {src} ({} KB)", before / 1024);
+
+    // Quantize every 2-D tensor except the softmax (paper's 'quant' choice).
+    let names: Vec<String> = qam.tensors.keys().cloned().collect();
+    for name in names {
+        let t = qam.tensors.get(&name).unwrap();
+        if t.shape().len() != 2 || name.starts_with("out.") {
+            continue;
+        }
+        let w = t.to_f32();
+        let p = QuantParams::from_slice(&w);
+        let mut data = vec![0u8; w.len()];
+        p.quantize_slice(&w, &mut data);
+        // report per-tensor error
+        let mut rec = vec![0f32; w.len()];
+        p.recover_slice(&data, &mut rec);
+        let rms = (w
+            .iter()
+            .zip(&rec)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / w.len() as f64)
+            .sqrt();
+        println!("  {name:<10} {:?} rms-err {rms:.2e} (½step {:.2e})", t.shape(), p.half_step());
+        qam.tensors.insert(
+            name,
+            Tensor::U8Q {
+                shape: t.shape().to_vec(),
+                data,
+                vmin: p.vmin,
+                q: p.q,
+            },
+        );
+    }
+    qam.header.quantized = true;
+    qam.save(&dst)?;
+    let after = qam.storage_bytes();
+    println!(
+        "quantized: {dst} ({} KB) — {:.2}× smaller",
+        after / 1024,
+        before as f64 / after as f64
+    );
+
+    // WER before vs after (mismatch condition).
+    let utts = read_feats(format!("{art}/data/eval_clean.feats"))
+        .context("run `make artifacts` first")?;
+    let world = World::new();
+    let decoder = build_decoder(&world, DecoderConfig::default());
+    let m_f = AcousticModel::load(&src, ExecMode::Float)?;
+    let m_q = AcousticModel::load(&dst, ExecMode::Quant)?;
+    let r_f = evaluate(&m_f, &decoder, &utts, 4);
+    let r_q = evaluate(&m_q, &decoder, &utts, 4);
+    println!(
+        "\nclean eval: float WER {:.2}%  → post-training-quantized WER {:.2}% \
+         (relative loss {:+.1}%)",
+        100.0 * r_f.wer,
+        100.0 * r_q.wer,
+        100.0 * (r_q.wer - r_f.wer) / r_f.wer.max(1e-9)
+    );
+    Ok(())
+}

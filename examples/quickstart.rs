@@ -1,0 +1,57 @@
+//! Quickstart: synthesize an utterance, run the full embedded pipeline
+//! (frontend → quantized LSTM acoustic model → lexicon+LM decoder) and
+//! print the transcript next to the truth.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::{Context, Result};
+use quantasr::decoder::DecoderConfig;
+use quantasr::eval::build_decoder;
+use quantasr::frontend;
+use quantasr::nn::{AcousticModel, ExecMode};
+use quantasr::sim::dataset::{gen_wave, Style};
+use quantasr::sim::World;
+
+fn main() -> Result<()> {
+    let art = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let world = World::new();
+
+    // The QAT-trained quickstart model, executed with the paper's §3.1
+    // integer arithmetic (weights stay in their stored u8 grid).
+    let model = AcousticModel::load(format!("{art}/models/p24.qat.qam"), ExecMode::Quant)
+        .context("run `make artifacts` first")?;
+    println!(
+        "model: {} ({} params, {} KB quantized)",
+        model.header.name,
+        model.header.param_count,
+        model.storage_bytes() / 1024
+    );
+    let decoder = build_decoder(&world, DecoderConfig::default());
+
+    let mut correct = 0;
+    let n = 10;
+    for uid in 0..n {
+        // 1. synthesize speech
+        let utt = gen_wave(uid, 0xDE40, &world, Style::Clean);
+        // 2. frontend: PCM → 64-d stacked log-mel @ 20ms
+        let feats = frontend::features(&utt.wave);
+        let frames = feats.len() / frontend::spec::FEAT_DIM;
+        // 3. acoustic model: int8 inference
+        let log_probs = model.forward_utt(&feats, frames);
+        // 4. decode: CTC beam + lexicon trie + LM rescore
+        let hyp = decoder.decode(&log_probs, model.num_labels());
+        let ok = hyp.words == utt.words;
+        correct += ok as usize;
+        println!(
+            "utt {uid}: {:5.2}s audio, {frames} frames  ref={:?}  hyp={:?}  {}",
+            utt.wave.len() as f64 / 8000.0,
+            utt.words,
+            hyp.words,
+            if ok { "✓" } else { "✗" }
+        );
+    }
+    println!("\n{correct}/{n} exact sentence matches");
+    Ok(())
+}

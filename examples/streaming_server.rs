@@ -1,0 +1,115 @@
+//! End-to-end serving driver (the DESIGN.md E4 experiment): start the
+//! streaming coordinator with a quantized acoustic model, launch N
+//! concurrent clients over real TCP, stream synthetic speech in real-time-
+//! ish chunks, and report accuracy, latency percentiles, throughput and
+//! the AM real-time factor.
+//!
+//! ```bash
+//! cargo run --release --example streaming_server -- \
+//!     [--streams 8] [--utts 48] [--mode quant] [--max-batch 8]
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §E4.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use quantasr::coordinator::server::{serve, Client};
+use quantasr::coordinator::{Engine, EngineConfig};
+use quantasr::decoder::DecoderConfig;
+use quantasr::eval::build_decoder;
+use quantasr::nn::{AcousticModel, ExecMode};
+use quantasr::sim::dataset::{gen_wave, Style};
+use quantasr::sim::World;
+use quantasr::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let art = args.get_or("artifacts", "artifacts").to_string();
+    let n_streams = args.get_usize("streams", 8);
+    let n_utts = args.get_usize("utts", 48);
+    let mode = ExecMode::parse(args.get_or("mode", "quant"))?;
+
+    let world = Arc::new(World::new());
+    let model = Arc::new(
+        AcousticModel::load(format!("{art}/models/p24.qat.qam"), mode)
+            .context("run `make artifacts` first")?,
+    );
+    let decoder = Arc::new(build_decoder(&world, DecoderConfig::default()));
+    let mut cfg = EngineConfig::default();
+    cfg.policy.max_batch = args.get_usize("max-batch", 8);
+    let engine = Arc::new(Engine::start(model.clone(), decoder, cfg));
+    println!(
+        "engine up: model={} mode={mode:?} storage={}KB max_batch={}",
+        model.header.name,
+        model.storage_bytes() / 1024,
+        args.get_usize("max-batch", 8),
+    );
+
+    // Start the TCP server on an ephemeral port.
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv_engine = engine.clone();
+    let srv_stop = stop.clone();
+    let server_thread = std::thread::spawn(move || {
+        serve(srv_engine, "127.0.0.1:0", srv_stop, move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .expect("server failed");
+    });
+    let addr = addr_rx.recv()?.to_string();
+    println!("server bound on {addr}");
+
+    // N concurrent clients, each streaming utterances in 100 ms chunks.
+    let correct = AtomicUsize::new(0);
+    let total = AtomicUsize::new(0);
+    let total_audio = std::sync::Mutex::new(0.0f64);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for s in 0..n_streams {
+            let addr = addr.clone();
+            let world = world.clone();
+            let correct = &correct;
+            let total = &total;
+            let total_audio = &total_audio;
+            scope.spawn(move || {
+                for u in 0..n_utts.div_ceil(n_streams) {
+                    let uid = (s * 4096 + u) as u32;
+                    let utt = gen_wave(uid, 0x5E4E, &world, Style::Clean);
+                    *total_audio.lock().unwrap() += utt.wave.len() as f64 / 8000.0;
+                    let mut client = Client::connect(&addr).expect("connect");
+                    for chunk in utt.wave.chunks(800) {
+                        client.send_audio(chunk).expect("send");
+                    }
+                    let r = client.finish().expect("finish");
+                    total.fetch_add(1, Ordering::Relaxed);
+                    if r.words == utt.words {
+                        correct.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::SeqCst);
+    let _ = server_thread.join();
+
+    let n = total.load(Ordering::Relaxed);
+    let audio = *total_audio.lock().unwrap();
+    println!("\n=== streaming_server results ===");
+    println!(
+        "{n} utterances ({audio:.1}s audio) over {n_streams} TCP streams in {wall:.2}s \
+         → {:.1} utt/s, {:.2}× realtime aggregate",
+        n as f64 / wall,
+        audio / wall
+    );
+    println!(
+        "sentence accuracy: {}/{} = {:.1}%",
+        correct.load(Ordering::Relaxed),
+        n,
+        100.0 * correct.load(Ordering::Relaxed) as f64 / n.max(1) as f64
+    );
+    println!("{}", engine.metrics().report());
+    Ok(())
+}

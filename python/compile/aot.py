@@ -1,0 +1,212 @@
+"""AOT lowering: model step functions → HLO *text* artifacts for rust/PJRT.
+
+For each exported model we lower single-timestep inference functions with
+the weights baked in as constants, at a set of batch sizes:
+
+    artifacts/hlo/<model>.<variant>.b<B>.hlo.txt
+    artifacts/hlo/<model>.<variant>.b<B>.json     (I/O manifest for rust)
+
+Variants:
+    float        — f32 graph from the float model ('match' numerics)
+    quant        — §3.1 integer pipeline (quantize → int32 dot → recover)
+                   built from the stored u8 weights, pure-jnp ops
+    quant_pallas — same numerics but the gate/output matmuls go through the
+                   L1 Pallas kernel (interpret=True) so the Figure-1 fused
+                   kernel itself is what lowers into the HLO
+
+Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits 64-bit
+instruction ids that the image's xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Step signature (row-major f32 unless noted):
+    inputs : x [B, input_dim], then per layer l: c_l [B, N], h_l [B, rec]
+    outputs: log_probs [B, num_labels], then per layer: c_l', h_l'
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import export, model, quantlib, spec
+from .kernels import qmatmul as qmk
+from .quantlib import QParams
+
+FLOAT = "float"
+QUANT = "quant"
+QUANT_PALLAS = "quant_pallas"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring).
+
+    ``print_large_constants=True`` is essential: the baked weight matrices
+    must survive the text round-trip (the default elides them as ``{...}``).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+# ---------------------------------------------------------------------------
+# Inference-step builders (weights closed over as constants)
+# ---------------------------------------------------------------------------
+
+
+def _mk_mm(records: dict, name: str, variant: str):
+    """Matmul closure for one weight matrix under the chosen variant."""
+    dtype, arr, vmin, q = records[name]
+    if dtype == export.F32 or variant == FLOAT:
+        if dtype == export.F32:
+            w = jnp.asarray(arr, jnp.float32)
+        else:  # recover stored u8 to float (float graph of a quant model)
+            zp = round(q * vmin)
+            w = (jnp.asarray(arr, jnp.float32) + zp) / q
+        return lambda x: x @ w
+    # quantized: stored u8 weights enter the integer pipeline directly
+    wq = jnp.asarray(arr, jnp.float32)          # V' values
+    zp = float(round(q * vmin))
+    wp = QParams(
+        q=jnp.asarray(q, jnp.float32),
+        zp=jnp.asarray(zp, jnp.float32),
+        vmin=jnp.asarray(vmin, jnp.float32),
+    )
+    if variant == QUANT:
+        return lambda x: quantlib.quantized_matmul_q(x, wq, wp)
+
+    # QUANT_PALLAS: the L1 kernel (bias/activation stay outside: the LSTM
+    # gate math needs the raw pre-activations of two matmuls summed).
+    zeros_b = jnp.zeros((arr.shape[1],), jnp.float32)
+
+    def mm(x):
+        xp = quantlib.compute_qparams(x)
+        return qmk.qmatmul(
+            x, wq, zeros_b, xp.q, xp.zp, wp.q, wp.zp, activation="none",
+        )
+
+    return mm
+
+
+def build_step(header: dict, records: dict, variant: str):
+    """Returns (step_fn, cfg).  step_fn(x, *state) → (log_probs, *state')."""
+    cfg = export.config_from_header(header)
+    quantize_output = header.get("quantize_output", False)
+
+    mms = {}
+    for l in range(cfg.num_layers):
+        mms[f"l{l}.wx"] = _mk_mm(records, f"l{l}.wx", variant)
+        mms[f"l{l}.wh"] = _mk_mm(records, f"l{l}.wh", variant)
+        if cfg.proj_dim is not None:
+            mms[f"l{l}.wp"] = _mk_mm(records, f"l{l}.wp", variant)
+    out_variant = variant if quantize_output else FLOAT
+    mms["out.w"] = _mk_mm(records, "out.w", out_variant)
+    biases = {
+        k: jnp.asarray(v[1], jnp.float32)
+        for k, v in records.items()
+        if k.endswith(".b") or k == "out.b"
+    }
+
+    def step(x, *state):
+        h_in = x
+        new_state = []
+        for l in range(cfg.num_layers):
+            c_prev = state[2 * l]
+            h_prev = state[2 * l + 1]
+            gates = (
+                mms[f"l{l}.wx"](h_in)
+                + mms[f"l{l}.wh"](h_prev)
+                + biases[f"l{l}.b"]
+            )
+            n = cfg.cell_dim
+            i_g = jax.nn.sigmoid(gates[:, 0 * n:1 * n])
+            f_g = jax.nn.sigmoid(gates[:, 1 * n:2 * n])
+            g_g = jnp.tanh(gates[:, 2 * n:3 * n])
+            o_g = jax.nn.sigmoid(gates[:, 3 * n:4 * n])
+            c_new = f_g * c_prev + i_g * g_g
+            h_new = o_g * jnp.tanh(c_new)
+            if cfg.proj_dim is not None:
+                h_new = mms[f"l{l}.wp"](h_new)
+            new_state += [c_new, h_new]
+            h_in = h_new
+        logits = mms["out.w"](h_in) + biases["out.b"]
+        log_probs = jax.nn.log_softmax(logits, axis=-1)
+        return (log_probs, *new_state)
+
+    return step, cfg
+
+
+def lower_model(qam_path: str, variant: str, batch: int, out_dir: str,
+                tag: str):
+    header, records = export.read_qam_raw(qam_path)
+    step, cfg = build_step(header, records, variant)
+    x = jax.ShapeDtypeStruct((batch, cfg.input_dim), jnp.float32)
+    state_specs = []
+    state_names = []
+    for l in range(cfg.num_layers):
+        state_specs.append(
+            jax.ShapeDtypeStruct((batch, cfg.cell_dim), jnp.float32)
+        )
+        state_specs.append(
+            jax.ShapeDtypeStruct((batch, cfg.rec_dim), jnp.float32)
+        )
+        state_names += [f"l{l}.c", f"l{l}.h"]
+    lowered = jax.jit(step).lower(x, *state_specs)
+    text = to_hlo_text(lowered)
+    base = f"{out_dir}/{tag}.{variant}.b{batch}"
+    with open(base + ".hlo.txt", "w") as fh:
+        fh.write(text)
+    manifest = {
+        "model": tag,
+        "variant": variant,
+        "batch": batch,
+        "input_dim": cfg.input_dim,
+        "num_labels": cfg.num_labels,
+        "num_layers": cfg.num_layers,
+        "cell_dim": cfg.cell_dim,
+        "rec_dim": cfg.rec_dim,
+        "inputs": ["x"] + state_names,
+        "outputs": ["log_probs"] + state_names,
+        "output_is_tuple": True,
+    }
+    with open(base + ".json", "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    return len(text)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batches", default="1,8")
+    args = ap.parse_args()
+    art = args.out
+    out_dir = f"{art}/hlo"
+    os.makedirs(out_dir, exist_ok=True)
+    batches = [int(b) for b in args.batches.split(",")]
+
+    # train.py writes models under cfg.name; the quickstart config is p24.
+    name = model.QUICKSTART_CONFIG.name
+    jobs = [
+        (f"{art}/models/{name}.float.qam", FLOAT, name),
+        (f"{art}/models/{name}.qat.qam", QUANT, name),
+        (f"{art}/models/{name}.qat.qam", QUANT_PALLAS, name),
+    ]
+    for qam, variant, tag in jobs:
+        if not os.path.exists(qam):
+            print(f"skip {qam} (not trained)")
+            continue
+        for b in batches:
+            n = lower_model(qam, variant, b, out_dir, tag)
+            print(f"lowered {tag}.{variant}.b{b}: {n} chars")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Connectionist Temporal Classification loss (Graves et al. 2006) in JAX.
+
+Log-space forward (alpha) recursion over the blank-extended label sequence
+``z = [∅, l₁, ∅, l₂, …, ∅]`` of length 2U+1:
+
+    α_t(s) = logsumexp(α_{t-1}(s), α_{t-1}(s-1), [α_{t-1}(s-2)]) + logP_t(z_s)
+
+where the s-2 skip is allowed only for non-blank z_s with z_s ≠ z_{s-2}.
+Loss = −logsumexp(α_T(2U), α_T(2U−1)).
+
+Batched with padding: ``input_lengths`` freezes α past each utterance's end;
+``label_lengths`` selects the final states.  Everything is fixed-shape and
+scan-based so it jits once per (T, U) bucket.
+
+Tested against brute-force enumeration of all alignments (test_ctc.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _extend_labels(labels: jnp.ndarray, blank: int) -> jnp.ndarray:
+    """[B, U] → blank-extended [B, 2U+1]."""
+    b, u = labels.shape
+    z = jnp.full((b, 2 * u + 1), blank, dtype=labels.dtype)
+    return z.at[:, 1::2].set(labels)
+
+
+def ctc_loss(
+    log_probs: jnp.ndarray,      # [B, T, L] log-softmax outputs
+    labels: jnp.ndarray,         # [B, U] padded label ids (pad value free)
+    input_lengths: jnp.ndarray,  # [B]
+    label_lengths: jnp.ndarray,  # [B]
+    blank: int = 0,
+) -> jnp.ndarray:
+    """Per-utterance negative log-likelihood, shape [B]."""
+    b, t_max, _ = log_probs.shape
+    u_max = labels.shape[1]
+    z = _extend_labels(labels, blank)                       # [B, S]
+    s_len = 2 * u_max + 1
+
+    # Allowed s-2 skip: z_s non-blank and z_s != z_{s-2}.
+    z_shift2 = jnp.concatenate(
+        [jnp.full((b, 2), -1, dtype=z.dtype), z[:, :-2]], axis=1
+    )
+    can_skip = (z != blank) & (z != z_shift2)               # [B, S]
+
+    # Emission log-probs per extended state, per time: gather.
+    # emit[t][b, s] = log_probs[b, t, z[b, s]]
+    def emit(t):
+        return jnp.take_along_axis(log_probs[:, t, :], z, axis=1)
+
+    alpha0 = jnp.full((b, s_len), NEG_INF)
+    alpha0 = alpha0.at[:, 0].set(emit(0)[:, 0])
+    alpha0 = alpha0.at[:, 1].set(
+        jnp.where(label_lengths > 0, emit(0)[:, 1], NEG_INF)
+    )
+
+    def lse3(a, b_, c):
+        m = jnp.maximum(jnp.maximum(a, b_), c)
+        m_safe = jnp.maximum(m, NEG_INF)
+        return m_safe + jnp.log(
+            jnp.exp(a - m_safe) + jnp.exp(b_ - m_safe) + jnp.exp(c - m_safe)
+        )
+
+    def body(alpha, t):
+        prev1 = jnp.concatenate(
+            [jnp.full((b, 1), NEG_INF), alpha[:, :-1]], axis=1
+        )
+        prev2 = jnp.concatenate(
+            [jnp.full((b, 2), NEG_INF), alpha[:, :-2]], axis=1
+        )
+        prev2 = jnp.where(can_skip, prev2, NEG_INF)
+        new = lse3(alpha, prev1, prev2) + emit(t)
+        # Freeze finished utterances (t >= input_length).
+        active = (t < input_lengths)[:, None]
+        new = jnp.where(active, new, alpha)
+        return new, None
+
+    alpha, _ = jax.lax.scan(body, alpha0, jnp.arange(1, t_max))
+
+    # Final: logsumexp over states 2U and 2U-1 (per utterance U).
+    idx_last = 2 * label_lengths          # [B]
+    idx_prev = jnp.maximum(idx_last - 1, 0)
+    a_last = jnp.take_along_axis(alpha, idx_last[:, None], axis=1)[:, 0]
+    a_prev = jnp.take_along_axis(alpha, idx_prev[:, None], axis=1)[:, 0]
+    a_prev = jnp.where(label_lengths > 0, a_prev, NEG_INF)
+    m = jnp.maximum(a_last, a_prev)
+    ll = m + jnp.log(jnp.exp(a_last - m) + jnp.exp(a_prev - m))
+    return -ll
+
+
+def ctc_loss_mean(log_probs, labels, input_lengths, label_lengths, blank=0):
+    """Mean per-label NLL (normalizes by label length — stabler LR across
+    utterance lengths)."""
+    nll = ctc_loss(log_probs, labels, input_lengths, label_lengths, blank)
+    return jnp.mean(nll / jnp.maximum(label_lengths, 1))
+
+
+def greedy_decode(log_probs: jnp.ndarray, input_lengths: jnp.ndarray,
+                  blank: int = 0):
+    """Best-path decode + CTC collapse. Returns [B, T] ids padded with -1.
+
+    (Python-level collapse; used for LER monitoring during training.)
+    """
+    best = jnp.argmax(log_probs, axis=-1)  # [B, T]
+    import numpy as np
+
+    best = np.asarray(best)
+    lens = np.asarray(input_lengths)
+    out = []
+    for i in range(best.shape[0]):
+        seq, prev = [], blank
+        for t in range(int(lens[i])):
+            s = int(best[i, t])
+            if s != blank and s != prev:
+                seq.append(s)
+            prev = s
+        out.append(seq)
+    return out
+
+
+def label_error_rate(hyps: list, refs: list) -> float:
+    """Σ edit distances / Σ ref lengths (the paper's LER, Figure 2)."""
+    total_err, total_len = 0, 0
+    for h, r in zip(hyps, refs):
+        total_err += edit_distance(h, list(r))
+        total_len += len(r)
+    return total_err / max(total_len, 1)
+
+
+def edit_distance(a: list, b: list) -> int:
+    """Levenshtein distance (python-side scoring helper)."""
+    if not a:
+        return len(b)
+    if not b:
+        return len(a)
+    prev = list(range(len(b) + 1))
+    for i, x in enumerate(a, 1):
+        cur = [i] + [0] * len(b)
+        for j, y in enumerate(b, 1):
+            cur[j] = min(prev[j] + 1, cur[j - 1] + 1, prev[j - 1] + (x != y))
+        prev = cur
+    return prev[-1]

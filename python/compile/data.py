@@ -1,0 +1,417 @@
+"""Synthetic speech world: waveform synthesis, frontend, dataset export.
+
+Replaces the paper's proprietary Google voice-search/dictation corpora
+(DESIGN.md §2).  The generative process:
+
+    sentence (bigram/Zipf over 200-word lexicon)
+      → phone sequence (lexicon lookup, optional inter-word pauses)
+      → waveform (per-phone formant sinusoids + noise, 8 kHz)
+      → [multistyle distortion: colored noise + babble + reverb @ SNR]
+      → log-mel frontend (25ms/10ms, 16 mel, stack 4 / skip 2 → 64-d @ 20ms)
+
+Everything is deterministic given the split seed.  Discrete structure
+(sentences, durations) uses the shared SplitMix64 (bit-identical with
+rust/src/sim); bulk float noise uses numpy PCG64 (distribution-identical).
+
+Exports (``python -m compile.data --out ../artifacts``):
+    artifacts/data/{train,dev,eval_clean,eval_noisy}.feats   (io/feat_fmt)
+    artifacts/golden/frontend_{i}.wav.f32 + .feat.f32        (rust golden tests)
+    artifacts/world.json                                     (lexicon/bigram dump)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import numpy as np
+
+from . import spec
+from .spec import SplitMix64, World
+
+# ---------------------------------------------------------------------------
+# Frontend (mirrored by rust/src/frontend; golden-tested)
+# ---------------------------------------------------------------------------
+
+
+def mel_scale(f: np.ndarray | float) -> np.ndarray | float:
+    return 2595.0 * np.log10(1.0 + np.asarray(f, dtype=np.float64) / 700.0)
+
+
+def mel_inv(m: np.ndarray | float) -> np.ndarray | float:
+    return 700.0 * (10.0 ** (np.asarray(m, dtype=np.float64) / 2595.0) - 1.0)
+
+
+def mel_filterbank() -> np.ndarray:
+    """Triangular mel filterbank [N_MEL, FFT/2+1] (HTK-style)."""
+    n_bins = spec.FFT_SIZE // 2 + 1
+    freqs = np.arange(n_bins) * spec.SAMPLE_RATE / spec.FFT_SIZE
+    mel_pts = np.linspace(
+        mel_scale(spec.MEL_FMIN), mel_scale(spec.MEL_FMAX), spec.N_MEL + 2
+    )
+    hz_pts = mel_inv(mel_pts)
+    fb = np.zeros((spec.N_MEL, n_bins), dtype=np.float64)
+    for m in range(spec.N_MEL):
+        lo, ctr, hi = hz_pts[m], hz_pts[m + 1], hz_pts[m + 2]
+        up = (freqs - lo) / (ctr - lo)
+        down = (hi - freqs) / (hi - ctr)
+        fb[m] = np.clip(np.minimum(up, down), 0.0, None)
+    return fb.astype(np.float32)
+
+
+_FB = None
+_WIN = None
+
+
+def _tables():
+    global _FB, _WIN
+    if _FB is None:
+        _FB = mel_filterbank()
+        n = spec.FRAME_LEN
+        _WIN = (0.5 - 0.5 * np.cos(2.0 * np.pi * np.arange(n) / (n - 1))).astype(
+            np.float32
+        )
+    return _FB, _WIN
+
+
+def log_mel(wave: np.ndarray) -> np.ndarray:
+    """Waveform → log-mel frames [T_raw, N_MEL]."""
+    fb, win = _tables()
+    # Preemphasis: x'[n] = x[n] - a*x[n-1]; x'[0] = x[0].
+    w = wave.astype(np.float32)
+    pre = np.empty_like(w)
+    pre[0] = w[0]
+    pre[1:] = w[1:] - spec.PREEMPHASIS * w[:-1]
+    n_frames = 1 + (len(pre) - spec.FRAME_LEN) // spec.FRAME_HOP
+    if n_frames <= 0:
+        return np.zeros((0, spec.N_MEL), dtype=np.float32)
+    idx = (
+        np.arange(spec.FRAME_LEN)[None, :]
+        + spec.FRAME_HOP * np.arange(n_frames)[:, None]
+    )
+    frames = pre[idx] * win[None, :]
+    spec_pow = np.abs(np.fft.rfft(frames, n=spec.FFT_SIZE, axis=1)) ** 2
+    mel = spec_pow @ fb.T
+    return np.log(np.maximum(mel, spec.LOG_FLOOR)).astype(np.float32)
+
+
+def stack_frames(frames: np.ndarray) -> np.ndarray:
+    """Stack ``STACK`` frames (right context) and decimate by ``DECIMATE``.
+
+    Output frame t covers raw frames [D*t .. D*t+STACK-1]; the tail is
+    dropped when fewer than STACK raw frames remain (matches rust).
+    """
+    t_raw = frames.shape[0]
+    n_out = (t_raw - spec.STACK) // spec.DECIMATE + 1
+    if n_out <= 0:
+        return np.zeros((0, spec.FEAT_DIM), dtype=np.float32)
+    out = np.empty((n_out, spec.FEAT_DIM), dtype=np.float32)
+    for k in range(spec.STACK):
+        cols = frames[
+            k : k + (n_out - 1) * spec.DECIMATE + 1 : spec.DECIMATE
+        ]
+        out[:, k * spec.N_MEL : (k + 1) * spec.N_MEL] = cols
+    return out
+
+
+def features(wave: np.ndarray) -> np.ndarray:
+    """Full frontend: log-mel → stack/decimate → global scaling."""
+    return stack_frames(log_mel(wave)) * np.float32(spec.FEAT_SCALE)
+
+
+# ---------------------------------------------------------------------------
+# Waveform synthesis
+# ---------------------------------------------------------------------------
+
+
+def synth_phone(
+    phone, dur_samples: int, nprng: np.random.Generator
+) -> np.ndarray:
+    """One phone: 3 formant sinusoids (vibrato, raised-cosine envelope) + noise."""
+    t = np.arange(dur_samples, dtype=np.float64) / spec.SAMPLE_RATE
+    sig = np.zeros(dur_samples, dtype=np.float64)
+    vib = 1.0 + 0.01 * np.sin(2.0 * np.pi * 3.0 * t)
+    for f_hz, amp in phone.formants:
+        phase = nprng.uniform(0.0, 2.0 * np.pi)
+        sig += amp * np.sin(2.0 * np.pi * f_hz * vib * t + phase)
+    if not phone.voiced:
+        sig *= 0.2
+    sig += phone.noise_amp * nprng.standard_normal(dur_samples)
+    # Raised-cosine attack/decay over 10 ms.
+    edge = min(int(0.010 * spec.SAMPLE_RATE), dur_samples // 2)
+    env = np.ones(dur_samples)
+    if edge > 0:
+        ramp = 0.5 - 0.5 * np.cos(np.pi * np.arange(edge) / edge)
+        env[:edge] = ramp
+        env[-edge:] = ramp[::-1]
+    return (0.3 * sig * env).astype(np.float32)
+
+
+def synth_utterance(
+    words: list, world: World, rng: SplitMix64, nprng: np.random.Generator
+):
+    """Words → (waveform, phone labels, per-raw-frame phone alignment).
+
+    Returns ``(wave, phones, raw_align)`` where ``raw_align[t]`` is the phone
+    id active at raw frame t (0 = silence/pause).
+    """
+    sil = int(0.050 * spec.SAMPLE_RATE)
+    chunks = [np.zeros(sil, dtype=np.float32)]
+    align_spans = [(0, sil)]  # (phone id, n samples)
+    phones = []
+    for wi, w in enumerate(words):
+        if wi > 0 and rng.next_f64() < 0.3:
+            pause = int(
+                (0.020 + 0.040 * rng.next_f64()) * spec.SAMPLE_RATE
+            )
+            chunks.append(np.zeros(pause, dtype=np.float32))
+            align_spans.append((0, pause))
+        for pid in world.word_phones(w):
+            dur_ms = rng.next_range(spec.PHONE_DUR_MIN_MS, spec.PHONE_DUR_MAX_MS)
+            n = int(dur_ms * spec.SAMPLE_RATE / 1000)
+            chunks.append(synth_phone(world.phones[pid - 1], n, nprng))
+            align_spans.append((pid, n))
+            phones.append(pid)
+    chunks.append(np.zeros(sil, dtype=np.float32))
+    align_spans.append((0, sil))
+    wave = np.concatenate(chunks)
+    wave += spec.SYNTH_NOISE_FLOOR * nprng.standard_normal(len(wave)).astype(np.float32)
+
+    # Per-raw-frame alignment: phone active at the frame center.
+    sample_phone = np.zeros(len(wave), dtype=np.uint32)
+    pos = 0
+    for pid, n in align_spans:
+        sample_phone[pos : pos + n] = pid
+        pos += n
+    n_frames = 1 + (len(wave) - spec.FRAME_LEN) // spec.FRAME_HOP
+    centers = spec.FRAME_HOP * np.arange(max(n_frames, 0)) + spec.FRAME_LEN // 2
+    raw_align = sample_phone[np.minimum(centers, len(wave) - 1)]
+    return wave, np.asarray(phones, dtype=np.uint32), raw_align
+
+
+def decimate_align(raw_align: np.ndarray) -> np.ndarray:
+    """Raw-frame alignment → output-frame alignment (matches stack_frames)."""
+    t_raw = raw_align.shape[0]
+    n_out = (t_raw - spec.STACK) // spec.DECIMATE + 1
+    if n_out <= 0:
+        return np.zeros(0, dtype=np.uint32)
+    # label of the first stacked frame (the 'current' frame; rest is context)
+    return raw_align[0 : (n_out - 1) * spec.DECIMATE + 1 : spec.DECIMATE]
+
+
+# ---------------------------------------------------------------------------
+# Distortion ('multistyle' training data / 'noisy' eval)
+# ---------------------------------------------------------------------------
+
+
+def colored_noise(n: int, nprng: np.random.Generator) -> np.ndarray:
+    """One-pole low-passed white noise (pink-ish)."""
+    white = nprng.standard_normal(n).astype(np.float32)
+    out = np.empty(n, dtype=np.float32)
+    acc = 0.0
+    a = 0.85
+    for i in range(n):  # small n per utt; fine in numpy loop? vectorize below
+        acc = a * acc + (1 - a) * white[i]
+        out[i] = acc
+    return out
+
+
+def colored_noise_fast(n: int, nprng: np.random.Generator) -> np.ndarray:
+    """Vectorized one-pole filter via FFT-free recursion using lfilter-free
+    cumulative trick: y[i] = (1-a) * sum_j a^(i-j) w[j].  Uses a chunked
+    scan to stay O(n)."""
+    white = nprng.standard_normal(n).astype(np.float64)
+    a = 0.85
+    y = np.empty(n, dtype=np.float64)
+    acc = 0.0
+    # Chunked exact recursion (vectorized inner via cumsum in log-space is
+    # numerically dicey; chunk size 4096 keeps python overhead negligible).
+    step = 4096
+    for s in range(0, n, step):
+        e = min(s + step, n)
+        w = white[s:e] * (1 - a)
+        powers = a ** np.arange(1, e - s + 1)
+        # y[i] = acc*a^(i+1) + sum_{j<=i} a^(i-j) w[j]
+        conv = np.convolve(w, a ** np.arange(e - s))[: e - s]
+        y[s:e] = acc * powers + conv
+        acc = y[e - 1]
+    return y.astype(np.float32)
+
+
+def babble(n: int, world: World, rng: SplitMix64, nprng) -> np.ndarray:
+    """Background babble: superpose 3 random phone streams."""
+    out = np.zeros(n, dtype=np.float32)
+    for _ in range(3):
+        pos = 0
+        while pos < n:
+            pid = rng.next_range(1, spec.N_PHONES)
+            dur = int(
+                rng.next_range(spec.PHONE_DUR_MIN_MS, spec.PHONE_DUR_MAX_MS)
+                * spec.SAMPLE_RATE / 1000
+            )
+            seg = synth_phone(world.phones[pid - 1], dur, nprng)
+            end = min(pos + dur, n)
+            out[pos:end] += seg[: end - pos]
+            pos = end
+    return out / 3.0
+
+
+def reverb(wave: np.ndarray, nprng) -> np.ndarray:
+    """Cheap exponential-decay reverb (30 ms tail, 3 taps)."""
+    taps = [(int(0.011 * spec.SAMPLE_RATE), 0.35),
+            (int(0.019 * spec.SAMPLE_RATE), 0.20),
+            (int(0.031 * spec.SAMPLE_RATE), 0.10)]
+    out = wave.copy()
+    for d, g in taps:
+        out[d:] += g * wave[:-d]
+    return out
+
+
+def distort(wave, world, rng: SplitMix64, nprng, snr_db_range) -> np.ndarray:
+    """Additive colored noise + babble at a sampled SNR, optional reverb."""
+    snr_db = snr_db_range[0] + (snr_db_range[1] - snr_db_range[0]) * rng.next_f64()
+    if rng.next_f64() < 0.3:
+        wave = reverb(wave, nprng)
+    mix = 0.5 * colored_noise_fast(len(wave), nprng) + 0.5 * babble(
+        len(wave), world, rng, nprng
+    )
+    p_sig = float(np.mean(wave**2)) + 1e-12
+    p_noise = float(np.mean(mix**2)) + 1e-12
+    gain = np.sqrt(p_sig / (p_noise * 10.0 ** (snr_db / 10.0)))
+    return wave + gain.astype(np.float32) * mix
+
+
+# ---------------------------------------------------------------------------
+# Dataset assembly + .feats format (mirrored by rust/src/io/feat_fmt.rs)
+# ---------------------------------------------------------------------------
+
+
+class Utt:
+    __slots__ = ("uid", "feats", "phones", "words", "align")
+
+    def __init__(self, uid, feats, phones, words, align):
+        self.uid, self.feats, self.phones, self.words, self.align = (
+            uid, feats, phones, words, align,
+        )
+
+
+def gen_utt(uid: int, split_seed: int, world: World, noisy: str) -> Utt:
+    """noisy ∈ {'clean', 'noisy', 'multistyle'} (multistyle: 50% distorted)."""
+    mix = SplitMix64((split_seed << 20) ^ (uid * 0x9E37))
+    seed64 = mix.next_u64()
+    rng = SplitMix64(seed64)
+    nprng = np.random.default_rng(seed64 & 0x7FFFFFFF)
+    words = spec.sample_sentence(rng, world)
+    wave, phones, raw_align = synth_utterance(words, world, rng, nprng)
+    if noisy == "noisy" or (noisy == "multistyle" and rng.next_f64() < 0.5):
+        rng_band = spec.NOISY_SNR_DB if noisy == "noisy" else (10.0, 20.0)
+        wave = distort(wave, world, rng, nprng, rng_band)
+    f = features(wave)
+    align = decimate_align(raw_align)[: f.shape[0]]
+    return Utt(uid, f, phones, np.asarray(words, np.uint32), align)
+
+
+MAGIC = b"FEA1"
+
+
+def write_feats(path: str, utts: list):
+    with open(path, "wb") as fh:
+        fh.write(MAGIC)
+        fh.write(struct.pack("<II", 1, len(utts)))  # version, count
+        for u in utts:
+            t, d = u.feats.shape
+            fh.write(
+                struct.pack(
+                    "<IIIII", u.uid, t, d, len(u.phones), len(u.words)
+                )
+            )
+            fh.write(u.feats.astype("<f4").tobytes())
+            fh.write(u.phones.astype("<u4").tobytes())
+            fh.write(u.words.astype("<u4").tobytes())
+            fh.write(u.align.astype("<u4").tobytes())
+
+
+def read_feats(path: str) -> list:
+    utts = []
+    with open(path, "rb") as fh:
+        assert fh.read(4) == MAGIC, path
+        _ver, n = struct.unpack("<II", fh.read(8))
+        for _ in range(n):
+            uid, t, d, nu, nw = struct.unpack("<IIIII", fh.read(20))
+            feats = np.frombuffer(fh.read(4 * t * d), dtype="<f4").reshape(t, d)
+            phones = np.frombuffer(fh.read(4 * nu), dtype="<u4")
+            words = np.frombuffer(fh.read(4 * nw), dtype="<u4")
+            align = np.frombuffer(fh.read(4 * t), dtype="<u4")
+            utts.append(Utt(uid, feats.copy(), phones.copy(), words.copy(), align.copy()))
+    return utts
+
+
+def generate_split(name: str, n: int, seed: int, style: str, world: World):
+    return [gen_utt(i, seed, world, style) for i in range(n)]
+
+
+def export_world(world: World, path: str):
+    """Dump the derived world for inspection / rust cross-checks."""
+    obj = {
+        "phones": [
+            {
+                "id": p.id,
+                "formants": [[f, a] for f, a in p.formants],
+                "noise_amp": p.noise_amp,
+                "voiced": p.voiced,
+            }
+            for p in world.phones
+        ],
+        "lexicon": world.lexicon,
+        "bigram": [[[s, w] for s, w in row] for row in world.bigram],
+    }
+    with open(path, "w") as fh:
+        json.dump(obj, fh)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--small", action="store_true",
+                    help="tiny splits for CI/tests")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(f"{out}/data", exist_ok=True)
+    os.makedirs(f"{out}/golden", exist_ok=True)
+    world = World()
+    export_world(world, f"{out}/world.json")
+
+    n_train = 256 if args.small else spec.N_TRAIN_UTTS
+    n_dev = 64 if args.small else spec.N_DEV_UTTS
+    n_eval = 64 if args.small else spec.N_EVAL_UTTS
+
+    splits = [
+        ("train", n_train, spec.DATA_SEED_TRAIN, "multistyle"),
+        ("dev", n_dev, spec.DATA_SEED_DEV, "clean"),
+        ("eval_clean", n_eval, spec.DATA_SEED_EVAL, "clean"),
+        ("eval_noisy", n_eval, spec.DATA_SEED_EVAL, "noisy"),
+    ]
+    for name, n, seed, style in splits:
+        utts = generate_split(name, n, seed, style, world)
+        write_feats(f"{out}/data/{name}.feats", utts)
+        frames = sum(u.feats.shape[0] for u in utts)
+        print(f"{name}: {n} utts, {frames} frames")
+
+    # Golden frontend pairs for the rust cross-test.
+    grng = SplitMix64(0xA0)
+    nprng = np.random.default_rng(7)
+    for i in range(4):
+        words = spec.sample_sentence(grng, world)
+        wave, _, _ = synth_utterance(words, world, grng, nprng)
+        feat = features(wave)
+        wave.astype("<f4").tofile(f"{out}/golden/frontend_{i}.wav.f32")
+        feat.astype("<f4").tofile(f"{out}/golden/frontend_{i}.feat.f32")
+        with open(f"{out}/golden/frontend_{i}.meta", "w") as fh:
+            fh.write(f"{len(wave)} {feat.shape[0]} {feat.shape[1]}\n")
+    print("golden frontend pairs written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Export trained models to the ``.qam`` binary format (io/model_fmt.rs).
+
+Layout (little-endian):
+    magic  b"QAM1"
+    u32    version (1)
+    u32    header_len;  header_len bytes of JSON (architecture + flags)
+    u32    n_tensors
+    per tensor:
+        u32 name_len; name bytes (utf-8)
+        u8  dtype         (0 = f32, 1 = u8-quantized)
+        u32 ndim; u32 shape[ndim]
+        if dtype == 1:  f32 vmin, f32 q      (zero point = round(q*vmin))
+        data              (f32 LE or u8, row-major)
+
+Weights of a quantized export hold the eq. (2) values
+``V' = round(Q·V) − round(Q·vmin) ∈ [0, 255]``; biases stay f32 (Figure 1
+applies them after recovery).  The rust loader recovers with eq. (3) for the
+float path or feeds V' straight into the integer GEMM.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+from . import quantlib
+from .model import ModelConfig
+
+MAGIC = b"QAM1"
+
+F32 = 0
+U8Q = 1
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.float32)
+
+
+def _quantize_np(v: np.ndarray, scale: float = quantlib.S):
+    """Eq. 2 on the host; returns (u8 values, vmin, q).  ``scale`` is
+    2^bits − 1 (storage stays u8 for any bits ≤ 8; recovery only needs q)."""
+    vmin = float(v.min())
+    vmax = float(v.max())
+    rng = max(vmax - vmin, 1e-6)
+    q = scale / rng
+    zp = round(q * vmin)
+    vq = np.clip(np.round(q * v) - zp, 0, scale).astype(np.uint8)
+    return vq, vmin, q
+
+
+def write_qam(
+    path: str,
+    params: dict,
+    cfg: ModelConfig,
+    quantized: bool,
+    quantize_output: bool = False,
+    meta: dict | None = None,
+    bits: int = 8,
+):
+    """Serialize ``params`` (jnp or np arrays keyed like model.init_params).
+
+    ``quantized`` — store weight matrices as u8 (eq. 2) with (vmin, q);
+    ``quantize_output`` — also quantize the softmax matrix ('quant-all').
+    """
+    header = {
+        "name": cfg.name,
+        "num_layers": cfg.num_layers,
+        "cell_dim": cfg.cell_dim,
+        "proj_dim": -1 if cfg.proj_dim is None else cfg.proj_dim,
+        "input_dim": cfg.input_dim,
+        "num_labels": cfg.num_labels,
+        "quantized": quantized,
+        "quantize_output": quantize_output,
+        "param_count": cfg.param_count(),
+    }
+    if meta:
+        header["meta"] = meta
+    hdr = json.dumps(header).encode()
+
+    names = sorted(params.keys())
+    with open(path, "wb") as fh:
+        fh.write(MAGIC)
+        fh.write(struct.pack("<I", 1))
+        fh.write(struct.pack("<I", len(hdr)))
+        fh.write(hdr)
+        fh.write(struct.pack("<I", len(names)))
+        for name in names:
+            v = _np(params[name])
+            is_matrix = v.ndim == 2
+            is_out = name.startswith("out.")
+            as_quant = (
+                quantized and is_matrix and (quantize_output or not is_out)
+            )
+            nb = name.encode()
+            fh.write(struct.pack("<I", len(nb)))
+            fh.write(nb)
+            fh.write(struct.pack("<B", U8Q if as_quant else F32))
+            fh.write(struct.pack("<I", v.ndim))
+            for d in v.shape:
+                fh.write(struct.pack("<I", d))
+            if as_quant:
+                vq, vmin, q = _quantize_np(v, scale=float((1 << bits) - 1))
+                fh.write(struct.pack("<ff", vmin, q))
+                fh.write(vq.tobytes())
+            else:
+                fh.write(v.astype("<f4").tobytes())
+
+
+def read_qam(path: str):
+    """Read back (header, params-as-float) — used by tests for round-trip."""
+    with open(path, "rb") as fh:
+        assert fh.read(4) == MAGIC
+        (_ver,) = struct.unpack("<I", fh.read(4))
+        (hlen,) = struct.unpack("<I", fh.read(4))
+        header = json.loads(fh.read(hlen))
+        (n,) = struct.unpack("<I", fh.read(4))
+        params = {}
+        qinfo = {}
+        for _ in range(n):
+            (nl,) = struct.unpack("<I", fh.read(4))
+            name = fh.read(nl).decode()
+            (dtype,) = struct.unpack("<B", fh.read(1))
+            (nd,) = struct.unpack("<I", fh.read(4))
+            shape = struct.unpack(f"<{nd}I", fh.read(4 * nd))
+            count = int(np.prod(shape))
+            if dtype == U8Q:
+                vmin, q = struct.unpack("<ff", fh.read(8))
+                vq = np.frombuffer(fh.read(count), dtype=np.uint8)
+                zp = round(q * vmin)
+                v = ((vq.astype(np.float64) + zp) / q).astype(np.float32)
+                qinfo[name] = (vmin, q)
+            else:
+                v = np.frombuffer(fh.read(4 * count), dtype="<f4")
+            params[name] = v.reshape(shape).copy()
+        return header, params, qinfo
+
+
+def read_qam_raw(path: str):
+    """Read (header, records) keeping quantized tensors in u8 form.
+
+    records: name → (dtype, array, vmin, q); array is u8 V' for U8Q tensors
+    and f32 otherwise (vmin/q are None then).  Used by aot.py to bake the
+    exact stored weights into the AOT inference graphs.
+    """
+    with open(path, "rb") as fh:
+        assert fh.read(4) == MAGIC
+        (_ver,) = struct.unpack("<I", fh.read(4))
+        (hlen,) = struct.unpack("<I", fh.read(4))
+        header = json.loads(fh.read(hlen))
+        (n,) = struct.unpack("<I", fh.read(4))
+        records = {}
+        for _ in range(n):
+            (nl,) = struct.unpack("<I", fh.read(4))
+            name = fh.read(nl).decode()
+            (dtype,) = struct.unpack("<B", fh.read(1))
+            (nd,) = struct.unpack("<I", fh.read(4))
+            shape = struct.unpack(f"<{nd}I", fh.read(4 * nd))
+            count = int(np.prod(shape))
+            if dtype == U8Q:
+                vmin, q = struct.unpack("<ff", fh.read(8))
+                arr = np.frombuffer(fh.read(count), dtype=np.uint8)
+                records[name] = (U8Q, arr.reshape(shape).copy(), vmin, q)
+            else:
+                arr = np.frombuffer(fh.read(4 * count), dtype="<f4")
+                records[name] = (F32, arr.reshape(shape).copy(), None, None)
+        return header, records
+
+
+def config_from_header(header: dict) -> ModelConfig:
+    pd = header["proj_dim"]
+    return ModelConfig(
+        num_layers=header["num_layers"],
+        cell_dim=header["cell_dim"],
+        proj_dim=None if pd < 0 else pd,
+        input_dim=header["input_dim"],
+        num_labels=header["num_labels"],
+    )

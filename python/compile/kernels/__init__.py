@@ -1,0 +1,2 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+from . import lstm_step, qmatmul, ref  # noqa: F401

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: fused LSTM elementwise cell update.
+
+The LSTM step is two (quantized) matmuls — handled by
+:mod:`.qmatmul` — followed by the gate nonlinearities and state update:
+
+    i, f, g, o = split(gates, 4)
+    c' = sigmoid(f) * c + sigmoid(i) * tanh(g)
+    h' = sigmoid(o) * tanh(c')
+
+This kernel fuses the whole elementwise tail so the [B, 4N] gate
+pre-activations are read from VMEM once and (h', c') are produced without
+intermediate HBM round-trips.  On the VPU this is a pure elementwise block;
+the tile shape follows the gate matmul's output tile.
+
+Gate block layout [i | f | g | o] matches ``ref.lstm_elementwise_ref``,
+``model.py`` and ``rust/src/nn/lstm.rs``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_ew_kernel(gates_ref, c_ref, h_out_ref, c_out_ref):
+    n = c_ref.shape[-1]
+    g = gates_ref[...]
+    i_g = jax.nn.sigmoid(g[:, 0 * n:1 * n])
+    f_g = jax.nn.sigmoid(g[:, 1 * n:2 * n])
+    g_g = jnp.tanh(g[:, 2 * n:3 * n])
+    o_g = jax.nn.sigmoid(g[:, 3 * n:4 * n])
+    c_new = f_g * c_ref[...] + i_g * g_g
+    h_out_ref[...] = o_g * jnp.tanh(c_new)
+    c_out_ref[...] = c_new
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def lstm_elementwise(
+    gates: jnp.ndarray,   # [B, 4N] pre-activations
+    c: jnp.ndarray,       # [B, N] previous cell state
+    bm: int = 32,
+    interpret: bool = True,
+):
+    """Fused LSTM cell tail; returns ``(h_new, c_new)``.
+
+    Grid walks the batch in ``bm`` rows; N is kept whole per tile (cells are
+    small in this model family: N ≤ 512 ⇒ ≤ 8KB f32 per row-block column,
+    well inside VMEM).
+    """
+    b, four_n = gates.shape
+    n = four_n // 4
+    assert c.shape == (b, n), (gates.shape, c.shape)
+    while b % bm != 0:
+        bm -= 1
+    grid = (b // bm,)
+    return pl.pallas_call(
+        _lstm_ew_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 4 * n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(gates, c)

@@ -1,0 +1,171 @@
+"""L1 Pallas kernel: the paper's Figure-1 fused quantized layer.
+
+    y = F( R( Q(x) · Wq ) + b )
+
+One kernel performs, tile by tile:
+  1. on-the-fly quantization of the float input tile (eq. 2),
+  2. the integer matrix multiply on offset-shifted values with int32
+     accumulation (eq. 1, the MXU-friendly part),
+  3. recovery to float by 1/(Qx·Qw) (eq. 3),
+  4. bias add + activation (VPU elementwise), fused so the recovered tile
+     never round-trips through HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the weight tile
+``[bk, bn]`` and input tile ``[bm, bk]`` live in VMEM via BlockSpec; the
+inner ``jnp.dot(..., preferred_element_type=int32)`` targets the MXU int8
+path on real hardware; quantize/recover are VPU ops.  The grid walks
+(M/bm, N/bn, K/bk) with the K axis innermost so the f32 accumulator tile in
+the output block is revisited (standard Pallas matmul accumulation).
+
+Under ``interpret=True`` (required on CPU — real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute) the numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .. import quantlib
+
+S = quantlib.S
+
+
+def _qmatmul_kernel(x_ref, w_ref, b_ref, scale_ref, o_ref, acc_ref,
+                    xsum_ref, wsum_ref, *, activation: str, n_k: int,
+                    k_total: int):
+    """Inner kernel. Grid = (M/bm, N/bn, K/bk); K innermost.
+
+    scale_ref holds [x_q, x_zp, w_q, w_zp] (small vector).
+    acc_ref is the int32 VMEM dot accumulator [bm, bn]; xsum_ref [bm, 1] and
+    wsum_ref [1, bn] accumulate the per-row/per-col u8 sums for the
+    zero-point folding (see quantlib.quantized_matmul_q — the i32 dot only
+    sees u8·u8 products, overflow-free).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xsum_ref[...] = jnp.zeros_like(xsum_ref)
+        wsum_ref[...] = jnp.zeros_like(wsum_ref)
+
+    x_q, x_zp, w_q, w_zp = (scale_ref[0], scale_ref[1],
+                            scale_ref[2], scale_ref[3])
+
+    # (1) quantize the input tile on the fly (eq. 2): V' ∈ [0, 255].
+    xq = jnp.clip(jnp.round(x_q * x_ref[...]) - x_zp, 0.0, S)
+    wq = w_ref[...]
+
+    # (2) integer tile matmul on the u8 grids, int32 accumulation
+    #     (MXU int8 path on real TPU) + running offset sums (VPU).
+    acc_ref[...] += jax.lax.dot_general(
+        xq.astype(jnp.int32), wq.astype(jnp.int32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    xsum_ref[...] += jnp.sum(xq, axis=1, keepdims=True)
+    wsum_ref[...] += jnp.sum(wq, axis=0, keepdims=True)
+
+    # (3)+(4) on the last K step: fold zero points, recover (eq. 1/3),
+    # bias, activation, write out.
+    @pl.when(k == n_k - 1)
+    def _finish():
+        full = (
+            acc_ref[...].astype(jnp.float32)
+            + x_zp * wsum_ref[...]
+            + w_zp * xsum_ref[...]
+            + jnp.asarray(k_total, jnp.float32) * x_zp * w_zp
+        )
+        y = full / (x_q * w_q) + b_ref[...]
+        if activation == "sigmoid":
+            y = jax.nn.sigmoid(y)
+        elif activation == "tanh":
+            y = jnp.tanh(y)
+        elif activation == "relu":
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ pref (block shapes must tile)."""
+    b = min(dim, pref)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "bm", "bn", "bk", "interpret"),
+)
+def qmatmul(
+    x: jnp.ndarray,          # [M, K] float32
+    wq: jnp.ndarray,         # [K, N] float32 holding u8 values (eq. 2 form)
+    b: jnp.ndarray,          # [N]
+    x_q: jnp.ndarray,        # scalar: input quantization factor Qx
+    x_zp: jnp.ndarray,       # scalar: round(Qx * xmin)
+    w_q: jnp.ndarray,        # scalar: weight quantization factor Qw
+    w_zp: jnp.ndarray,       # scalar: round(Qw * wmin)
+    activation: str = "none",
+    bm: int = 32,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused quantized ``y = F(R(Q(x)·Wq) + b)``; see module docstring.
+
+    Block sizes were tuned in the L1 perf pass (EXPERIMENTS.md §Perf-L1):
+    bn=bk=128 aligns with the 128×128 MXU tile; bm adapts to batch.
+    """
+    m, k = x.shape
+    k2, n = wq.shape
+    assert k == k2, (x.shape, wq.shape)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    n_k = k // bk
+    scales = jnp.stack([
+        jnp.asarray(x_q, jnp.float32), jnp.asarray(x_zp, jnp.float32),
+        jnp.asarray(w_q, jnp.float32), jnp.asarray(w_zp, jnp.float32),
+    ])
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(
+            _qmatmul_kernel, activation=activation, n_k=n_k, k_total=k
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((4,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.int32),
+            pltpu.VMEM((bm, 1), jnp.float32),
+            pltpu.VMEM((1, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, wq, b, scales)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int) -> int:
+    """VMEM footprint estimate for one grid step (DESIGN.md §Perf-L1).
+
+    x tile (f32) + w tile (u8 on real TPU; f32 under interpret — we count
+    the TPU layout) + bias + f32 out tile + i32 accumulator, double-buffered
+    inputs (×2) as the Mosaic pipeliner would.
+    """
+    x_t = bm * bk * 4
+    w_t = bk * bn * 1
+    b_t = bn * 4
+    o_t = bm * bn * 4
+    acc = bm * bn * 4
+    return 2 * (x_t + w_t + b_t) + o_t + acc

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here with identical signature
+and semantics; pytest (``python/tests/test_kernels.py``) sweeps shapes and
+value ranges (hypothesis) asserting allclose between kernel and oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import quantlib
+from ..quantlib import QParams
+
+
+def qmatmul_ref(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    b: jnp.ndarray,
+    x_q: jnp.ndarray,
+    x_zp: jnp.ndarray,
+    w_q: jnp.ndarray,
+    w_zp: jnp.ndarray,
+    activation: str = "none",
+) -> jnp.ndarray:
+    """Reference for the Figure-1 fused layer: Q(x) → int matmul → R → +b → F.
+
+    ``x``  — float input, pre-scaled quantization params (x_q, x_zp) supplied
+             by the caller (computed from the true min/max outside).
+    ``wq`` — weights already in quantized u8-valued form (float dtype).
+    The i32 dot runs on the u8 grids; zero points are folded out
+    algebraically (same expansion as quantlib.quantized_matmul_q and the
+    rust engine) so the accumulator cannot overflow.
+    """
+    k = x.shape[-1]
+    xq = jnp.clip(jnp.round(x_q * x) - x_zp, 0.0, quantlib.S)
+    acc = jax.lax.dot_general(
+        xq.astype(jnp.int32), wq.astype(jnp.int32),
+        dimension_numbers=(((xq.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    full = (
+        acc
+        + x_zp * jnp.sum(wq, axis=0, keepdims=True)
+        + w_zp * jnp.sum(xq, axis=-1, keepdims=True)
+        + jnp.asarray(k, jnp.float32) * x_zp * w_zp
+    )
+    y = full / (x_q * w_q) + b
+    return apply_activation(y, activation)
+
+
+def apply_activation(y: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "none":
+        return y
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(y)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "relu":
+        return jax.nn.relu(y)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def lstm_elementwise_ref(
+    gates: jnp.ndarray, c: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference LSTM cell elementwise update.
+
+    ``gates`` is the [B, 4N] pre-activation (i, f, g, o blocked layout —
+    i = gates[:, 0:N] etc.), ``c`` the [B, N] previous cell state.
+    Returns (h_new, c_new).  Gate order matches rust/src/nn/lstm.rs and
+    model.py.
+    """
+    n = c.shape[-1]
+    i = jax.nn.sigmoid(gates[..., 0 * n:1 * n])
+    f = jax.nn.sigmoid(gates[..., 1 * n:2 * n])
+    g = jnp.tanh(gates[..., 2 * n:3 * n])
+    o = jax.nn.sigmoid(gates[..., 3 * n:4 * n])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def float_matmul_ref(x, w, b, activation: str = "none"):
+    """Float baseline for the same fused layer (the 'match' path)."""
+    return apply_activation(x @ w + b, activation)

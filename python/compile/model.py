@@ -1,0 +1,267 @@
+"""L2: the LSTM acoustic model (Sak et al. 2014 LSTMP variant) in JAX.
+
+Architecture (paper §4): a stack of ``num_layers`` LSTM layers of
+``cell_dim`` cells, optionally each followed by a linear recurrent
+projection layer of ``proj_dim`` units, topped by a softmax output layer
+over ``N_LABELS`` (40 phones + CTC blank).
+
+Execution modes (paper Table 1 columns):
+    ``float``      — f32 everywhere ('match' training / eval path).
+    ``quant``      — every matmul runs through the §3.1 quantized path
+                     (inputs quantized on the fly per-tensor, weights
+                     per-matrix) EXCEPT the final softmax layer.
+    ``quant_all``  — as ``quant`` but the output layer is quantized too.
+
+The quantized forward here uses :func:`quantlib.fake_quant_ste` /
+``fake_quant`` — mathematically identical to the integer pipeline of eq. (1)
+(``V''_a·V''_b/(Qa·Qb) == recover(a)·recover(b)`` summed), which the kernel
+tests assert.  Training (QAT, §3.2) therefore gets inference-exact numerics
+in the forward pass while gradients flow straight-through to the
+full-precision master weights.
+
+``step`` is the single-timestep function that gets AOT-lowered (aot.py) and
+executed by the rust runtime; ``forward`` scans it over time for training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import quantlib, spec
+
+# Execution modes
+FLOAT = "float"
+QUANT = "quant"
+QUANT_ALL = "quant_all"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Acoustic model architecture (one row of Table 1)."""
+
+    num_layers: int
+    cell_dim: int
+    proj_dim: Optional[int] = None
+    input_dim: int = spec.FEAT_DIM
+    num_labels: int = spec.N_LABELS
+
+    @property
+    def name(self) -> str:
+        if self.proj_dim is not None:
+            return f"p{self.proj_dim}"
+        return f"{self.num_layers}x{self.cell_dim}"
+
+    @property
+    def rec_dim(self) -> int:
+        """Dimension fed recurrently and to the next layer (P or N)."""
+        return self.proj_dim if self.proj_dim is not None else self.cell_dim
+
+    def layer_in_dim(self, layer: int) -> int:
+        return self.input_dim if layer == 0 else self.rec_dim
+
+    def param_count(self) -> int:
+        total = 0
+        for l in range(self.num_layers):
+            total += self.layer_in_dim(l) * 4 * self.cell_dim      # W_x
+            total += self.rec_dim * 4 * self.cell_dim              # W_h
+            total += 4 * self.cell_dim                             # b
+            if self.proj_dim is not None:
+                total += self.cell_dim * self.proj_dim             # W_p
+        total += self.rec_dim * self.num_labels + self.num_labels  # softmax
+        return total
+
+
+# The Table-1 architecture grid, scaled ~×1/10 in width (DESIGN.md §2).
+# Paper: 4-5 layers × {300,400,500} cells; P ∈ {100..400} on a 5×500 stack.
+TABLE1_CONFIGS = [
+    ModelConfig(4, 30), ModelConfig(5, 30),
+    ModelConfig(4, 40), ModelConfig(5, 40),
+    ModelConfig(4, 50), ModelConfig(5, 50),
+    ModelConfig(5, 50, proj_dim=10), ModelConfig(5, 50, proj_dim=20),
+    ModelConfig(5, 50, proj_dim=30), ModelConfig(5, 50, proj_dim=40),
+]
+QUICKSTART_CONFIG = ModelConfig(3, 48, proj_dim=24)
+FIGURE2_CONFIG = ModelConfig(5, 50, proj_dim=20)   # paper's P=200 analog
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """Uniform ±1/√fan_in init; forget-gate bias +1 for training stability.
+
+    (Fan-in scaling keeps the activation magnitude roughly unit through the
+    stack — a fixed ±0.05 collapses the signal by ~10⁻⁶ over 3 LSTMP layers
+    and CTC then sticks in the all-blank plateau.)"""
+
+    def uni(key, shape, scale=None):
+        if scale is None:
+            scale = (3.0 / float(shape[0])) ** 0.5  # Glorot-style gain 1
+        return jax.random.uniform(key, shape, jnp.float32, -scale, scale)
+
+    params = {}
+    for l in range(cfg.num_layers):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        params[f"l{l}.wx"] = uni(k1, (cfg.layer_in_dim(l), 4 * cfg.cell_dim))
+        params[f"l{l}.wh"] = uni(k2, (cfg.rec_dim, 4 * cfg.cell_dim))
+        b = jnp.zeros((4 * cfg.cell_dim,), jnp.float32)
+        # forget gate block is [N:2N] (layout [i|f|g|o])
+        b = b.at[cfg.cell_dim : 2 * cfg.cell_dim].set(1.0)
+        params[f"l{l}.b"] = b
+        if cfg.proj_dim is not None:
+            params[f"l{l}.wp"] = uni(k3, (cfg.cell_dim, cfg.proj_dim))
+    key, k1 = jax.random.split(key)
+    params["out.w"] = uni(k1, (cfg.rec_dim, cfg.num_labels))
+    params["out.b"] = jnp.zeros((cfg.num_labels,), jnp.float32)
+    return params
+
+
+def init_state(cfg: ModelConfig, batch: int) -> dict:
+    """Zero recurrent state: per layer (c [B,N], h [B,rec])."""
+    st = {}
+    for l in range(cfg.num_layers):
+        st[f"l{l}.c"] = jnp.zeros((batch, cfg.cell_dim), jnp.float32)
+        st[f"l{l}.h"] = jnp.zeros((batch, cfg.rec_dim), jnp.float32)
+    return st
+
+
+def _mode_scale(mode: str) -> float:
+    """Quantization scale for a mode string.
+
+    ``quant``/``quant_all`` → 255 (8 bits); ``quant<b>``/``quant_all<b>``
+    (e.g. ``quant4``) → 2^b − 1, the E5/QAT-bits extension."""
+    digits = "".join(c for c in mode if c.isdigit())
+    bits = int(digits) if digits else 8
+    return float((1 << bits) - 1)
+
+
+def _mm(x, w, mode: str):
+    """Matmul under the requested numerics (float vs §3.1 quantized)."""
+    if mode == FLOAT:
+        return x @ w
+    # Quantized path — fake-quant == integer pipeline (see module docstring).
+    scale = _mode_scale(mode)
+    xq = quantlib.fake_quant_ste(x)          # activations stay 8-bit
+    wq = quantlib.fake_quant_ste(w, scale=scale)
+    return xq @ wq
+
+
+def step(params: dict, cfg: ModelConfig, x_t: jnp.ndarray, state: dict,
+         mode: str = FLOAT) -> tuple:
+    """One timestep: features [B, D] + state → (logits [B, L], new state).
+
+    ``mode`` selects Table-1 numerics.  In ``quant`` mode the final softmax
+    matmul stays float; ``quant_all`` quantizes it as well.
+    """
+    inner = FLOAT if mode == FLOAT else ("quant" + "".join(c for c in mode if c.isdigit()))
+    h_in = x_t
+    new_state = {}
+    for l in range(cfg.num_layers):
+        gates = (
+            _mm(h_in, params[f"l{l}.wx"], inner)
+            + _mm(state[f"l{l}.h"], params[f"l{l}.wh"], inner)
+            + params[f"l{l}.b"]
+        )
+        n = cfg.cell_dim
+        i_g = jax.nn.sigmoid(gates[:, 0 * n:1 * n])
+        f_g = jax.nn.sigmoid(gates[:, 1 * n:2 * n])
+        g_g = jnp.tanh(gates[:, 2 * n:3 * n])
+        o_g = jax.nn.sigmoid(gates[:, 3 * n:4 * n])
+        c_new = f_g * state[f"l{l}.c"] + i_g * g_g
+        h_new = o_g * jnp.tanh(c_new)
+        if cfg.proj_dim is not None:
+            h_new = _mm(h_new, params[f"l{l}.wp"], inner)
+        new_state[f"l{l}.c"] = c_new
+        new_state[f"l{l}.h"] = h_new
+        h_in = h_new
+    out_mode = inner if mode.startswith("quant_all") else FLOAT
+    logits = _mm(h_in, params["out.w"], out_mode) + params["out.b"]
+    return logits, new_state
+
+
+def forward(params: dict, cfg: ModelConfig, feats: jnp.ndarray,
+            mode: str = FLOAT) -> jnp.ndarray:
+    """Full-sequence forward: feats [B, T, D] → logits [B, T, L] (scan)."""
+    batch = feats.shape[0]
+    state0 = init_state(cfg, batch)
+
+    def body(state, x_t):
+        logits, state = step(params, cfg, x_t, state, mode=mode)
+        return state, logits
+
+    _, logits = jax.lax.scan(body, state0, jnp.swapaxes(feats, 0, 1))
+    return jnp.swapaxes(logits, 0, 1)
+
+
+def log_posteriors(params, cfg, feats, mode=FLOAT):
+    return jax.nn.log_softmax(forward(params, cfg, feats, mode), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# SVD-based projection initialization (paper §5.1, 'SVD initialization')
+# ---------------------------------------------------------------------------
+
+
+def svd_init_from_uncompressed(
+    params_unc: dict, cfg_unc: ModelConfig, cfg_proj: ModelConfig,
+) -> dict:
+    """Initialize a projection model from an uncompressed one [23].
+
+    Each recurrent matrix W_h [N, 4N] of the uncompressed model is factored
+    by truncated SVD: W_h ≈ (U_k Σ_k)(V_kᵀ) with rank k = P.  The projection
+    matrix gets W_p = V_k [N→P] and the new recurrent matrix
+    W_h' = (U_k Σ_k) [P→4N] — wait: dimensional bookkeeping below.
+
+    Concretely with W_h: [rec=N, 4N] and target [P, 4N] plus W_p: [N, P]:
+        W_h ≈ W_p @ W_h'   where  W_p = U_k Σ_k  [N, P],  W_h' = V_kᵀ [P, 4N].
+    Inter-layer input matrices W_x (which consume the projected h of the
+    previous layer) are truncated the same way through the previous layer's
+    W_p basis.
+    """
+    assert cfg_proj.proj_dim is not None
+    assert cfg_unc.cell_dim == cfg_proj.cell_dim
+    assert cfg_unc.num_layers == cfg_proj.num_layers
+    p = cfg_proj.proj_dim
+    out = {}
+    prev_basis = None  # [N, P] mapping of previous layer's h to proj space
+    for l in range(cfg_proj.num_layers):
+        wh = params_unc[f"l{l}.wh"]            # [N, 4N]
+        u, s, vt = jnp.linalg.svd(wh, full_matrices=False)
+        wp = u[:, :p] * s[:p][None, :]         # [N, P]
+        wh_new = vt[:p, :]                     # [P, 4N]
+        wx = params_unc[f"l{l}.wx"]            # [in, 4N]
+        if l > 0:
+            # The previous layer now emits r = h @ W_p instead of h.  The
+            # least-squares W_x' with r @ W_x' ≈ h @ W_x is pinv(W_p) @ W_x:
+            # [P, N] @ [N, 4N] → [P, 4N].
+            wx = jnp.linalg.pinv(prev_basis) @ wx
+        out[f"l{l}.wx"] = wx
+        out[f"l{l}.wh"] = wh_new
+        out[f"l{l}.b"] = params_unc[f"l{l}.b"]
+        out[f"l{l}.wp"] = wp
+        prev_basis = wp
+    wo = params_unc["out.w"]                   # [N, L]
+    out["out.w"] = jnp.linalg.pinv(prev_basis) @ wo
+    out["out.b"] = params_unc["out.b"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parameter-space helpers shared by train/export
+# ---------------------------------------------------------------------------
+
+
+def quantized_view(params: dict, quantize_output: bool) -> dict:
+    """Post-training quantization ('mismatch' condition): every weight
+    matrix fake-quantized per-matrix; biases stay float (paper Fig. 1 adds
+    biases after recovery)."""
+    out = {}
+    for k, v in params.items():
+        is_matrix = v.ndim == 2
+        is_out = k.startswith("out.")
+        if is_matrix and (quantize_output or not is_out):
+            out[k] = quantlib.fake_quant(v)
+        else:
+            out[k] = v
+    return out

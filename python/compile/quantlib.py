@@ -1,0 +1,181 @@
+"""The paper's §3 quantization scheme, in JAX.
+
+Uniform linear quantizer over a range ``R = vmax - vmin`` onto the scale
+``S = 255`` (8 bits):
+
+    Q   = S / R                                  (quantization factor)
+    V'  = round(Q*V) - round(Q*vmin)             (eq. 2 — quantize)
+    V   = (V' + round(Q*vmin)) / Q               (eq. 3 — recover)
+
+The ``round(Q*vmin)`` term is the *zero point* ``zp``.  Keeping the SAME
+rounded zero point in eq. 2 and eq. 3 is what cancels the bias error the
+paper discusses in §3 ("Integer multiplication: effects on quantization and
+recovery"): the offset-shifted integer ``V'' = V' + zp = round(Q*V)`` is then
+an unbiased fixed-point representation of ``Q*V``.
+
+Products of two independently quantized tensors recover with the inverse
+product of their factors (eq. 1):
+
+    Vc = (Va'' * Vb'') / (Qa * Qb)
+
+A *naive* variant (``quantize_naive``) floors instead of rounding and applies
+the float (unrounded) offset at recovery; it exists purely as the bias-error
+ablation baseline (experiment E2 in DESIGN.md).
+
+All functions are shape-polymorphic and jit-safe.  ``QParams`` holds scalars
+(or per-row vectors, for the granularity ablation E3).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import spec
+
+S = float(spec.QUANT_SCALE)  # 255.0
+# Minimum quantization range: degenerate (all-equal) tensors would give
+# Q ~ 1e14 whose f32 products cancel catastrophically in eq. (2).  1e-6
+# keeps every intermediate exactly representable enough (error ≤ ~1e-6/Q).
+MIN_RANGE = 1e-6
+
+
+class QParams(NamedTuple):
+    """Quantization parameters: ``q`` factor and integer zero point ``zp``.
+
+    ``vmin`` is retained for inspection/export; ``zp == round(q*vmin)``.
+    Fields are scalars for per-tensor granularity or ``[rows, 1]`` arrays for
+    per-row granularity.
+    """
+
+    q: jnp.ndarray
+    zp: jnp.ndarray   # float dtype but integer-valued
+    vmin: jnp.ndarray
+
+
+def compute_qparams(v: jnp.ndarray, axis=None, scale: float = S) -> QParams:
+    """Derive (Q, zp) from the min/max of ``v``.
+
+    ``axis=None`` → per-tensor; ``axis=1`` on a 2-D matrix → per-row
+    (keepdims), the sub-matrix granularity knob of §3.1.  ``scale`` is
+    ``2^bits − 1`` (255 default; smaller for the E5 bit-width ablation).
+    Degenerate ranges (all-equal tensors) quantize to mid-scale losslessly.
+    """
+    vmin = jnp.min(v, axis=axis, keepdims=axis is not None)
+    vmax = jnp.max(v, axis=axis, keepdims=axis is not None)
+    rng = jnp.maximum(vmax - vmin, MIN_RANGE)
+    q = scale / rng
+    zp = jnp.round(q * vmin)
+    return QParams(q=q, zp=zp, vmin=vmin)
+
+
+def quantize(v: jnp.ndarray, p: QParams, scale: float = S) -> jnp.ndarray:
+    """Eq. 2: ``V' = round(Q*V) - round(Q*vmin)``, clipped to [0, scale].
+
+    Returns float-dtype integers (uint8-valued); stays in float for jit
+    friendliness — the Pallas kernels cast to int32 for the MXU path.
+    """
+    return jnp.clip(jnp.round(p.q * v) - p.zp, 0.0, scale)
+
+
+def recover(vq: jnp.ndarray, p: QParams) -> jnp.ndarray:
+    """Eq. 3: ``V = (V' + zp) / Q`` — consistent with :func:`quantize`."""
+    return (vq + p.zp) / p.q
+
+
+def fake_quant(v: jnp.ndarray, axis=None, scale: float = S) -> jnp.ndarray:
+    """Quantize-then-recover (the QAT forward transform), no gradient magic."""
+    p = compute_qparams(v, axis=axis, scale=scale)
+    return recover(quantize(v, p, scale=scale), p)
+
+
+def fake_quant_ste(v: jnp.ndarray, axis=None, scale: float = S) -> jnp.ndarray:
+    """QAT straight-through fake-quant (paper §3.2 / Algorithm 1).
+
+    Forward: quantized-then-recovered value (inference numerics).
+    Backward: identity — the gradient is computed "in full precision ...
+    based on the error from the quantized forward pass", and applied to the
+    full-precision master weights.  The paper explicitly does NOT add a
+    quantization term to the backward pass.
+    """
+    return v + jax.lax.stop_gradient(fake_quant(v, axis=axis, scale=scale) - v)
+
+
+def quantized_matmul(x: jnp.ndarray, w: jnp.ndarray, wp: QParams) -> jnp.ndarray:
+    """Figure 1 inference path for ``y = x @ w`` (pure-jnp reference).
+
+    ``x`` is float input quantized on the fly per-tensor; ``w`` arrives
+    pre-quantized with params ``wp``.  Mathematically this is eq. (1),
+    ``Σ V''x·V''w / (Qx·Qw)``, but computed with the zero points folded out
+    (the standard gemmlowp expansion, identical to rust quant/gemm.rs):
+
+        Σ (x'+zpx)(w'+zpw) = Σ x'w' + zpx·Σw' + zpw·Σx' + K·zpx·zpw
+
+    so the i32 accumulator only ever sees u8·u8 products (≤ 255²·K — no
+    overflow even for pathologically off-center ranges where V'' itself
+    would exceed i32 when squared).  The correction terms are applied in
+    f32 — they are exact there relative to the final 1/(Qx·Qw) scaling.
+
+    The Pallas kernel (kernels/qmatmul.py) implements the same algebra
+    tile-by-tile; this function is its oracle.
+    """
+    wq = quantize(w, wp)
+    return quantized_matmul_q(x, wq, wp)
+
+
+def quantized_matmul_q(x: jnp.ndarray, wq: jnp.ndarray, wp: QParams) -> jnp.ndarray:
+    """As :func:`quantized_matmul` but with the weights already in eq. 2
+    form (u8-valued ``V'``) — the shape used at inference when weights are
+    stored quantized (.qam files, AOT graphs)."""
+    xp = compute_qparams(x)
+    xq = quantize(x, xp)                     # u8-valued float
+    k = x.shape[-1]
+    acc = jax.lax.dot_general(
+        xq.astype(jnp.int32), wq.astype(jnp.int32),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    x_sums = jnp.sum(xq, axis=-1, keepdims=True)          # Σx' per row
+    w_sums = jnp.sum(wq, axis=0, keepdims=True)           # Σw' per col
+    full = (
+        acc
+        + xp.zp * w_sums
+        + wp.zp * x_sums
+        + jnp.asarray(k, jnp.float32) * xp.zp * wp.zp
+    )
+    return full / (xp.q * wp.q)
+
+
+def quantize_naive(v: jnp.ndarray, p: QParams) -> jnp.ndarray:
+    """Bias-error ablation: truncating quantizer (floor of shifted value).
+
+    Mirrors rust `NaiveQuantParams`: every value lands on the grid point
+    below it, so recovery keeps a systematic −½·step bias."""
+    return jnp.clip(jnp.floor(p.q * (v - p.vmin)), 0.0, S)
+
+
+def recover_naive(vq: jnp.ndarray, p: QParams) -> jnp.ndarray:
+    """Bias-error ablation: recovery with the *unrounded* float offset.
+
+    The mismatch between ``floor``/float-offset here and the integer
+    arithmetic of eq. 1 is exactly the inconsistency §3 warns about; the E2
+    ablation measures the systematic bias it introduces.
+    """
+    return vq / p.q + p.vmin
+
+
+def quant_error_stats(v: jnp.ndarray, consistent: bool = True):
+    """Mean (bias) and RMS of the quantization error, for E2.
+
+    With the consistent scheme the error is pure precision loss: zero-mean,
+    RMS ≈ 1/(Q*sqrt(12)).  The naive scheme shows a ~half-step bias.
+    """
+    p = compute_qparams(v)
+    if consistent:
+        r = recover(quantize(v, p), p)
+    else:
+        r = recover_naive(quantize_naive(v, p), p)
+    err = r - v
+    return jnp.mean(err), jnp.sqrt(jnp.mean(err * err))

@@ -1,0 +1,144 @@
+"""Approximate sMBR sequence-discriminative training (paper §5.2).
+
+The paper sequence-trains CTC models with lattice-based state-level minimum
+Bayes risk.  Lattices require the production decoder; we substitute an
+N-best/sampled **minimum expected label-error risk** (MWER-style; DESIGN.md
+§2), which preserves what matters for this paper: a *second*,
+sequence-discriminative training stage in which quantization-aware forward
+passes run (§3.2) and full-precision gradients update master weights.
+
+Risk:
+    paths k ~ per-frame categorical(log_probs / τ)   (+ the greedy path)
+    r_k   = editdist(collapse(path_k), ref) / |ref|
+    L     = Σ_k softmax(logP(path_k))·(r_k − r̄)      (baseline-subtracted)
+
+The edit distance runs as a fixed-shape DP inside jit (no host callback);
+gradients flow only through the path log-probabilities, as in MWER.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+BLANK = 0
+BIG = 1e9
+
+
+def collapse_paths(paths: jnp.ndarray, input_lengths: jnp.ndarray):
+    """CTC-collapse frame paths [K, B, T] → padded labels + lengths.
+
+    Keeps positions where ``p_t != blank and p_t != p_{t-1}`` (and t within
+    the utterance).  Returns (labels [K, B, T] padded with 0, lengths).
+    Fixed-shape: uses a stable scatter by cumulative-count.
+    """
+    k, b, t = paths.shape
+    prev = jnp.concatenate(
+        [jnp.full((k, b, 1), -1, paths.dtype), paths[:, :, :-1]], axis=2
+    )
+    valid = (
+        (paths != BLANK)
+        & (paths != prev)
+        & (jnp.arange(t)[None, None, :] < input_lengths[None, :, None])
+    )
+    # position of each kept symbol in the output
+    pos = jnp.cumsum(valid, axis=2) - 1
+    pos = jnp.where(valid, pos, t - 1)  # dump invalid into last slot
+    out = jnp.zeros((k, b, t), paths.dtype)
+    out = jax.vmap(
+        jax.vmap(lambda o, p, v, x: o.at[p].add(jnp.where(v, x, 0)))
+    )(out, pos, valid, paths)
+    # Note: two symbols can't collide on a slot because pos is strictly
+    # increasing over kept symbols; invalid symbols add 0 to the dump slot —
+    # mask the dump slot explicitly when it wasn't legitimately assigned.
+    lengths = jnp.sum(valid, axis=2)
+    slot_ok = jnp.arange(t)[None, None, :] < lengths[:, :, None]
+    out = jnp.where(slot_ok, out, 0)
+    return out, lengths
+
+
+def edit_distance_padded(a, la, b_, lb):
+    """Levenshtein DP over padded sequences a [Ta], b [Tb] (scalar lengths).
+
+    Fixed-shape scan over rows of the DP table; entries beyond (la, lb) are
+    neutralized so the result is exact for the true lengths.
+    """
+    ta = a.shape[0]
+    tb = b_.shape[0]
+    row0 = jnp.minimum(jnp.arange(tb + 1, dtype=jnp.float32), lb.astype(jnp.float32) + 0 * jnp.arange(tb + 1))
+    row0 = jnp.arange(tb + 1, dtype=jnp.float32)
+
+    def body(row, i):
+        # computing DP row i (1-based) against symbol a[i-1]
+        sym = a[i - 1]
+        sub_cost = jnp.where(b_ == sym, 0.0, 1.0)  # [Tb]
+
+        def inner(carry, j):
+            left = carry
+            diag = row[j - 1]
+            up = row[j]
+            val = jnp.minimum(
+                jnp.minimum(left + 1.0, up + 1.0), diag + sub_cost[j - 1]
+            )
+            return val, val
+
+        first = row[0] + 1.0
+        _, rest = jax.lax.scan(inner, first, jnp.arange(1, tb + 1))
+        new_row = jnp.concatenate([first[None], rest])
+        # rows beyond la: keep previous (frozen)
+        return jnp.where(i <= la, new_row, row), None
+
+    row, _ = jax.lax.scan(body, row0, jnp.arange(1, ta + 1))
+    return row[lb.astype(jnp.int32)]
+
+
+def _sample_paths(key, log_probs, k_samples, temperature):
+    """Gumbel-max sampling of K frame paths from [B, T, L] posteriors."""
+    noise = jax.random.gumbel(
+        key, (k_samples,) + log_probs.shape, log_probs.dtype
+    )
+    return jnp.argmax(log_probs[None] / temperature + noise, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k_samples",))
+def smbr_risk(
+    key: jax.Array,
+    log_probs: jnp.ndarray,      # [B, T, L]
+    labels: jnp.ndarray,         # [B, U]
+    input_lengths: jnp.ndarray,  # [B]
+    label_lengths: jnp.ndarray,  # [B]
+    k_samples: int = 4,
+    temperature: float = 1.0,
+):
+    """Expected normalized label-error risk; scalar loss."""
+    b, t, _ = log_probs.shape
+    sampled = _sample_paths(key, log_probs, k_samples, temperature)  # [K,B,T]
+    greedy = jnp.argmax(log_probs, axis=-1)[None]                    # [1,B,T]
+    paths = jnp.concatenate([greedy, sampled], axis=0)               # [K+1,B,T]
+    k = paths.shape[0]
+
+    # Path log-probabilities (sum over valid frames).
+    lp_frames = jnp.take_along_axis(
+        jnp.broadcast_to(log_probs[None], (k,) + log_probs.shape),
+        paths[..., None],
+        axis=-1,
+    )[..., 0]                                                        # [K,B,T]
+    t_mask = jnp.arange(t)[None, None, :] < input_lengths[None, :, None]
+    path_lp = jnp.sum(jnp.where(t_mask, lp_frames, 0.0), axis=2)     # [K,B]
+
+    hyps, hyp_lens = collapse_paths(paths, input_lengths)            # [K,B,T]
+
+    risk = jax.vmap(
+        jax.vmap(edit_distance_padded, in_axes=(0, 0, 0, 0)),
+        in_axes=(0, 0, None, None),
+    )(hyps, hyp_lens.astype(jnp.float32), labels,
+      label_lengths.astype(jnp.float32))                             # [K,B]
+    risk = risk / jnp.maximum(label_lengths[None].astype(jnp.float32), 1.0)
+    risk = jax.lax.stop_gradient(risk)
+
+    w = jax.nn.softmax(path_lp, axis=0)                              # [K,B]
+    baseline = jnp.mean(risk, axis=0, keepdims=True)
+    loss = jnp.sum(w * (risk - baseline), axis=0)                    # [B]
+    return jnp.mean(loss), jnp.mean(jnp.min(risk, axis=0))

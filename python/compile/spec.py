@@ -1,0 +1,239 @@
+"""Shared world/frontend/model specification.
+
+Single source of truth for every constant that the Rust side
+(``rust/src/sim``, ``rust/src/frontend``) mirrors.  Anything changed here must
+be changed there; the golden tests (``python/tests/test_golden.py`` emitting
+``artifacts/golden/*`` consumed by ``rust/tests/golden_frontend.rs``) catch
+drift between the two implementations.
+
+The synthetic speech world replaces the paper's proprietary Google
+voice-search/dictation corpora (see DESIGN.md §2): a 40-phone inventory with
+formant-like spectra, a 200-word lexicon, and a bigram sentence generator.
+The derived quantities that MUST be bit-identical between python and rust
+(phone formants, lexicon, bigram table) are generated from the shared
+SplitMix64 PRNG below; bulk float noise only has to be distributionally
+identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# ---------------------------------------------------------------------------
+# Audio / frontend (paper §4: 40-d log-mel, 8kHz, 25ms/10ms, stack 8 skip 3;
+# here scaled to 16 mel, stack 4 skip 2 — same pipeline, laptop-sized).
+# ---------------------------------------------------------------------------
+SAMPLE_RATE = 8000
+FRAME_LEN = 200          # 25 ms
+FRAME_HOP = 80           # 10 ms
+FFT_SIZE = 256
+N_MEL = 16
+MEL_FMIN = 125.0
+MEL_FMAX = 3800.0
+PREEMPHASIS = 0.97
+LOG_FLOOR = 1e-7
+
+STACK = 4                # frames stacked (3 right context)
+DECIMATE = 2             # present every 2nd stacked frame
+FEAT_DIM = N_MEL * STACK  # 64
+FEAT_SCALE = 1.0 / 3.0   # global feature scaling → unit-ish variance
+                         # (applied in data.py and rust frontend identically)
+
+# ---------------------------------------------------------------------------
+# Phone inventory / lexicon / text
+# ---------------------------------------------------------------------------
+N_PHONES = 40            # phone ids 1..40; 0 is the CTC blank
+BLANK = 0
+N_LABELS = N_PHONES + 1  # network output dimension
+
+N_WORDS = 200            # lexicon size
+WORD_MIN_PHONES = 2
+WORD_MAX_PHONES = 6
+SENT_MIN_WORDS = 1
+SENT_MAX_WORDS = 4
+
+# Phone duration range in milliseconds.
+PHONE_DUR_MIN_MS = 40
+PHONE_DUR_MAX_MS = 100
+
+# Master seed for the world (lexicon, phones, bigram LM).
+WORLD_SEED = 0x5EED_2016
+
+# Dataset sizes (train scaled for laptop CTC training).
+N_TRAIN_UTTS = 4096
+N_DEV_UTTS = 256
+N_EVAL_UTTS = 4096
+DATA_SEED_TRAIN = 101
+DATA_SEED_DEV = 202
+DATA_SEED_EVAL = 303
+NOISY_SNR_DB = (0.0, 10.0)   # uniform range for the 'noisy' eval condition
+SYNTH_NOISE_FLOOR = 0.02     # white-noise floor added to every waveform
+
+# ---------------------------------------------------------------------------
+# Quantization (paper §3)
+# ---------------------------------------------------------------------------
+QUANT_BITS = 8
+QUANT_SCALE = (1 << QUANT_BITS) - 1  # S = 255
+
+
+# ---------------------------------------------------------------------------
+# SplitMix64 — shared deterministic PRNG (mirrored in rust/src/sim/rng.rs)
+# ---------------------------------------------------------------------------
+_MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    """SplitMix64 PRNG; bit-identical to ``rust/src/sim/rng.rs``."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+        return (z ^ (z >> 31)) & _MASK
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53 bits of precision (same as rust)."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_range(self, lo: int, hi: int) -> int:
+        """Uniform integer in [lo, hi] (inclusive); hi > lo required."""
+        span = hi - lo + 1
+        return lo + self.next_u64() % span
+
+
+# ---------------------------------------------------------------------------
+# World derivation (phones, lexicon, bigram) — bit-identical across languages
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Phone:
+    """Formant-like description of a synthetic phone.
+
+    ``formants`` are three (freq_hz, amplitude) pairs; ``noise_amp`` adds a
+    fricative-like white-noise component; ``voiced`` gates the harmonic part.
+    """
+
+    id: int
+    formants: list  # [(f_hz, amp)] * 3
+    noise_amp: float
+    voiced: bool
+
+
+def derive_phones(rng: SplitMix64) -> list:
+    """Derive the 40-phone inventory. Consumes exactly 8 draws per phone."""
+    phones = []
+    for pid in range(1, N_PHONES + 1):
+        f1 = 220.0 + 1000.0 * rng.next_f64()
+        f2 = f1 + 300.0 + 1200.0 * rng.next_f64()
+        f3 = f2 + 400.0 + 1000.0 * rng.next_f64()
+        a1 = 0.5 + 0.5 * rng.next_f64()
+        a2 = 0.25 + 0.45 * rng.next_f64()
+        a3 = 0.1 + 0.3 * rng.next_f64()
+        noise = 0.02 + 0.1 * rng.next_f64()
+        voiced_draw = rng.next_f64()
+        voiced = voiced_draw > 0.25  # ~25% unvoiced/fricative-like
+        if not voiced:
+            noise += 0.35
+        # Clamp formants under Nyquist with margin.
+        f3 = min(f3, 3600.0)
+        f2 = min(f2, f3 - 100.0)
+        phones.append(
+            Phone(pid, [(f1, a1), (f2, a2), (f3, a3)], noise, voiced)
+        )
+    return phones
+
+
+def derive_lexicon(rng: SplitMix64) -> list:
+    """200 words, each a phone sequence of length 2..6.
+
+    Consumes 1 + len draws per word. Rejects duplicate pronunciations by
+    re-drawing the final phone (deterministic, mirrored in rust).
+    """
+    seen = set()
+    lex = []
+    for _w in range(N_WORDS):
+        n = rng.next_range(WORD_MIN_PHONES, WORD_MAX_PHONES)
+        seq = [rng.next_range(1, N_PHONES) for _ in range(n)]
+        while tuple(seq) in seen:
+            seq[-1] = rng.next_range(1, N_PHONES)
+        seen.add(tuple(seq))
+        lex.append(seq)
+    return lex
+
+
+def derive_bigram(rng: SplitMix64) -> list:
+    """Sparse bigram successor table: for each word, 8 (successor, weight).
+
+    Sentence generation picks from these with prob 0.8, otherwise from the
+    Zipf-ish unigram (rank-based) distribution.  Returned as a list of lists
+    of (word_id, weight) with weights summing to 1 per row.
+    """
+    table = []
+    for _w in range(N_WORDS):
+        succ = []
+        total = 0.0
+        for _k in range(8):
+            s = rng.next_range(0, N_WORDS - 1)
+            wgt = 0.1 + rng.next_f64()
+            succ.append([s, wgt])
+            total += wgt
+        for e in succ:
+            e[1] /= total
+        table.append([(s, w) for s, w in succ])
+    return table
+
+
+class World:
+    """The full derived synthetic world (phones + lexicon + bigram)."""
+
+    def __init__(self, seed: int = WORLD_SEED):
+        # Independent streams so adding draws to one stage cannot shift
+        # another (rust mirrors the same three sub-seeds).
+        self.phones = derive_phones(SplitMix64(seed ^ 0x01))
+        self.lexicon = derive_lexicon(SplitMix64(seed ^ 0x02))
+        self.bigram = derive_bigram(SplitMix64(seed ^ 0x03))
+
+    def word_phones(self, word_id: int) -> list:
+        return self.lexicon[word_id]
+
+
+def zipf_word(rng: SplitMix64) -> int:
+    """Zipf-ish unigram draw over word ids (rank = id)."""
+    # Inverse-CDF over 1/(rank+1) weights, computed incrementally and
+    # identically in rust (harmonic normalization constant H).
+    h = _HARMONIC
+    u = rng.next_f64() * h
+    acc = 0.0
+    for w in range(N_WORDS):
+        acc += 1.0 / (w + 1.0)
+        if u <= acc:
+            return w
+    return N_WORDS - 1
+
+
+_HARMONIC = sum(1.0 / (w + 1.0) for w in range(N_WORDS))
+
+
+def sample_sentence(rng: SplitMix64, world: World) -> list:
+    """Sample a word-id sentence from the bigram/unigram mixture."""
+    n = rng.next_range(SENT_MIN_WORDS, SENT_MAX_WORDS)
+    words = [zipf_word(rng)]
+    while len(words) < n:
+        use_bigram = rng.next_f64() < 0.8
+        if use_bigram:
+            row = world.bigram[words[-1]]
+            u = rng.next_f64()
+            acc = 0.0
+            nxt = row[-1][0]
+            for s, wgt in row:
+                acc += wgt
+                if u <= acc:
+                    nxt = s
+                    break
+            words.append(nxt)
+        else:
+            words.append(zipf_word(rng))
+    return words

@@ -1,0 +1,552 @@
+"""Training: float CTC → (QAT) sMBR, with the paper's LR schedules (§5).
+
+Pipeline per architecture (exactly the paper's §5 recipe):
+
+    1. float CTC training                      (§5.1; scheduled projection LR
+                                                for models with projection)
+    2. float sMBR        → 'match'/'mismatch' baseline model
+    3. QAT sMBR (quant)  → 'quant'      (softmax stays float, §6)
+    4. QAT sMBR (all)    → 'quant-all'
+
+Learning-rate schedules (paper §5.1/§5.2, time measured in steps here
+instead of days — the shape is what matters):
+
+    global      η_g(t) = c_g · 10^(−t / T_g)
+    projection  η_p(t) = c_p^(1 − min(t/T_p, 1))     (CTC, 'sched_proj')
+                η_p(t) = c_p_smbr (constant)          (sMBR)
+
+Presets:
+    --preset quickstart   one small model for artifacts/ + examples
+    --preset table1       the 10-architecture grid, all four conditions
+    --preset figure2      P-model CTC under {low_lr, svd_init, sched_proj},
+                          exporting LER-vs-time curves
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ctc, data, export, model, smbr, spec
+from .model import (FIGURE2_CONFIG, QUICKSTART_CONFIG, TABLE1_CONFIGS, FLOAT,
+                    QUANT, QUANT_ALL, ModelConfig)
+
+# ---------------------------------------------------------------------------
+# Hyper-parameters (tuned once on the dev split; see EXPERIMENTS.md)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class HParams:
+    batch_size: int = 32
+    warmup_steps: int = 200       # frame-CE alignment warmup (see below)
+    ctc_steps: int = 700
+    smbr_steps: int = 120
+    lr_ctc: float = 0.05          # c_g (CTC)
+    lr_decay_steps: float = 3000  # T_g: 10× decay horizon
+    lr_smbr: float = 0.004        # c_g (sMBR)
+    proj_cp: float = 1e-3         # c_p (scheduled projection LR)
+    proj_tp: float = 250.0        # T_p in steps
+    proj_cp_smbr: float = 0.5     # c_p^sMBR (constant multiplier)
+    momentum: float = 0.9
+    clip_norm: float = 5.0
+    eval_every: int = 50
+    seed: int = 0
+
+
+def eta_g(t: float, c_g: float, t_g: float) -> float:
+    """Global LR: exponential decay (paper §5.1)."""
+    return c_g * 10.0 ** (-t / t_g)
+
+
+def eta_p_sched(t: float, c_p: float, t_p: float) -> float:
+    """Scheduled projection LR multiplier: c_p^(1−min(t/T_p,1)) → 1."""
+    return c_p ** (1.0 - min(t / t_p, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Batching
+# ---------------------------------------------------------------------------
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def make_batches(utts, batch_size, rng: np.random.Generator, shuffle=True):
+    """Length-bucketed padded batches.
+
+    Sorts by frame count, chunks, pads T to a multiple of 16 and U to a
+    multiple of 8 (bounds jit-cache variants), then shuffles batch order.
+    """
+    order = np.argsort([u.feats.shape[0] for u in utts], kind="stable")
+    batches = []
+    for s in range(0, len(order), batch_size):
+        chunk = [utts[i] for i in order[s : s + batch_size]]
+        t_max = _round_up(max(u.feats.shape[0] for u in chunk), 16)
+        u_max = _round_up(max(len(u.phones) for u in chunk), 8)
+        b = len(chunk)
+        feats = np.zeros((b, t_max, spec.FEAT_DIM), np.float32)
+        labels = np.zeros((b, u_max), np.int32)
+        t_len = np.zeros(b, np.int32)
+        u_len = np.zeros(b, np.int32)
+        align = np.zeros((b, t_max), np.int32)
+        for i, u in enumerate(chunk):
+            t, _ = u.feats.shape
+            feats[i, :t] = u.feats
+            labels[i, : len(u.phones)] = u.phones
+            t_len[i] = t
+            u_len[i] = len(u.phones)
+            align[i, :t] = u.align[:t]
+        batches.append((feats, labels, t_len, u_len, align))
+    if shuffle:
+        rng.shuffle(batches)
+    return batches
+
+
+class BatchStream:
+    """Endless shuffled epoch stream."""
+
+    def __init__(self, utts, batch_size, seed):
+        self.utts = utts
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self._cur = []
+
+    def next(self):
+        if not self._cur:
+            self._cur = make_batches(self.utts, self.batch_size, self.rng)
+        return self._cur.pop()
+
+
+# ---------------------------------------------------------------------------
+# Optimizer: momentum SGD + global-norm clipping
+# ---------------------------------------------------------------------------
+
+
+def sgd_init(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _clip_by_global_norm(grads, max_norm):
+    norm = jnp.sqrt(
+        sum(jnp.sum(g * g) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def sgd_update(params, vel, grads, lr_tree, momentum, clip):
+    """Per-parameter learning rates via ``lr_tree`` (projection multiplier)."""
+    grads, gnorm = _clip_by_global_norm(grads, clip)
+
+    new_vel = jax.tree.map(
+        lambda v, g: momentum * v + g, vel, grads
+    )
+    new_params = jax.tree.map(
+        lambda p, v, lr: p - lr * v, params, new_vel, lr_tree
+    )
+    return new_params, new_vel, gnorm
+
+
+def lr_tree_for(params, base_lr, proj_mult):
+    """Projection matrices (``l*.wp``) get ``base_lr * proj_mult``."""
+    return {
+        k: jnp.asarray(
+            base_lr * (proj_mult if k.endswith(".wp") else 1.0), jnp.float32
+        )
+        for k in params
+    }
+
+
+# ---------------------------------------------------------------------------
+# Train steps (jitted factories per (cfg, mode))
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def ctc_step_fn(cfg: ModelConfig, mode: str):
+    @jax.jit
+    def step(params, vel, feats, labels, t_len, u_len, lr_base, lr_proj,
+             momentum, clip):
+        def loss_fn(p):
+            lp = model.log_posteriors(p, cfg, feats, mode)
+            return ctc.ctc_loss_mean(lp, labels, t_len, u_len)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr_tree = {
+            k: lr_base * lr_proj if k.endswith(".wp") else lr_base
+            for k in params
+        }
+        params, vel, gnorm = sgd_update(
+            params, vel, grads, lr_tree, momentum, clip
+        )
+        return params, vel, loss, gnorm
+
+    return step
+
+
+@functools.lru_cache(maxsize=64)
+def ce_step_fn(cfg: ModelConfig):
+    """Frame-CE warmup step on the forced alignment.
+
+    The paper constrains CTC alignments to within 100 ms of a forced
+    alignment (§4) to stabilize training; with the synthetic world we have
+    the exact alignment, so the equivalent stabilizer is a short frame-level
+    cross-entropy warmup before the CTC stage (without it, small models at
+    this data scale stick in the all-blank CTC plateau)."""
+
+    @jax.jit
+    def step(params, vel, feats, align, t_len, lr_base, lr_proj, momentum,
+             clip):
+        t = feats.shape[1]
+        mask = (jnp.arange(t)[None, :] < t_len[:, None]).astype(jnp.float32)
+
+        def loss_fn(p):
+            lp = model.log_posteriors(p, cfg, feats, FLOAT)
+            nll = -jnp.take_along_axis(lp, align[..., None], -1)[..., 0]
+            return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr_tree = {
+            k: lr_base * lr_proj if k.endswith(".wp") else lr_base
+            for k in params
+        }
+        params, vel, gnorm = sgd_update(
+            params, vel, grads, lr_tree, momentum, clip
+        )
+        return params, vel, loss, gnorm
+
+    return step
+
+
+@functools.lru_cache(maxsize=64)
+def smbr_step_fn(cfg: ModelConfig, mode: str):
+    @jax.jit
+    def step(key, params, vel, feats, labels, t_len, u_len, lr_base, lr_proj,
+             momentum, clip):
+        def loss_fn(p):
+            lp = model.log_posteriors(p, cfg, feats, mode)
+            risk, min_risk = smbr.smbr_risk(key, lp, labels, t_len, u_len)
+            # small CTC anchor keeps paths from degenerating (standard MWER
+            # practice; analogous to the paper's CE smoothing in sMBR).
+            anchor = ctc.ctc_loss_mean(lp, labels, t_len, u_len)
+            return risk + 0.1 * anchor, min_risk
+
+        (loss, min_risk), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params
+        )
+        lr_tree = {
+            k: lr_base * lr_proj if k.endswith(".wp") else lr_base
+            for k in params
+        }
+        params, vel, gnorm = sgd_update(
+            params, vel, grads, lr_tree, momentum, clip
+        )
+        return params, vel, loss, min_risk
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Evaluation (dev LER, used for curves + early sanity)
+# ---------------------------------------------------------------------------
+
+
+def dev_ler(params, cfg, dev_batches, mode=FLOAT) -> float:
+    hyps_all, refs_all = [], []
+    fwd = functools.partial(model.log_posteriors, params, cfg, mode=mode)
+    for feats, labels, t_len, u_len, _align in dev_batches:
+        lp = jax.jit(fwd)(jnp.asarray(feats))
+        hyps = ctc.greedy_decode(lp, t_len)
+        for i in range(len(hyps)):
+            hyps_all.append(hyps[i])
+            refs_all.append(list(labels[i, : u_len[i]]))
+    return ctc.label_error_rate(hyps_all, refs_all)
+
+
+# ---------------------------------------------------------------------------
+# Stage drivers
+# ---------------------------------------------------------------------------
+
+
+def train_ctc(
+    cfg: ModelConfig,
+    train_utts,
+    dev_batches,
+    hp: HParams,
+    schedule: str = "sched_proj",   # sched_proj | low_lr | none
+    init: dict | None = None,
+    time_offset: float = 0.0,
+    log=print,
+):
+    """Float CTC training.  Returns (params, curve[(wall_s, step, ler)])."""
+    params = init if init is not None else model.init_params(
+        cfg, jax.random.PRNGKey(hp.seed)
+    )
+    vel = sgd_init(params)
+    stream = BatchStream(train_utts, hp.batch_size, hp.seed + 1)
+    step_fn = ctc_step_fn(cfg, FLOAT)
+    warm_fn = ce_step_fn(cfg)
+    curve = []
+    c_g = hp.lr_ctc * (0.01 if schedule == "low_lr" else 1.0)
+    t0 = time.time()
+
+    def lr_pm(it):
+        lr = eta_g(it, c_g, hp.lr_decay_steps)
+        if schedule == "sched_proj" and cfg.proj_dim is not None:
+            pm = eta_p_sched(it, hp.proj_cp, hp.proj_tp)
+        else:
+            pm = 1.0
+        return lr, pm
+
+    # Phase 0: frame-CE alignment warmup (see ce_step_fn docstring); the
+    # global/projection schedules apply across warmup+CTC with a shared
+    # step clock, so Figure-2 comparisons include warmup time.
+    for it in range(hp.warmup_steps):
+        lr, pm = lr_pm(it)
+        feats, labels, t_len, u_len, align = stream.next()
+        params, vel, loss, _ = warm_fn(
+            params, vel, jnp.asarray(feats), jnp.asarray(align),
+            jnp.asarray(t_len),
+            jnp.asarray(lr, jnp.float32), jnp.asarray(pm, jnp.float32),
+            hp.momentum, hp.clip_norm,
+        )
+        if (it + 1) % hp.eval_every == 0 or it == 0:
+            ler = dev_ler(params, cfg, dev_batches)
+            curve.append((time.time() - t0 + time_offset, it + 1, ler))
+            log(
+                f"  [{cfg.name}/{schedule}] warmup {it+1:4d} "
+                f"ce {float(loss):6.3f} dev-LER {ler:.3f}"
+            )
+
+    for it0 in range(hp.ctc_steps):
+        it = it0 + hp.warmup_steps
+        lr, pm = lr_pm(it)
+        feats, labels, t_len, u_len, _align = stream.next()
+        params, vel, loss, gnorm = step_fn(
+            params, vel, jnp.asarray(feats), jnp.asarray(labels),
+            jnp.asarray(t_len), jnp.asarray(u_len),
+            jnp.asarray(lr, jnp.float32), jnp.asarray(pm, jnp.float32),
+            hp.momentum, hp.clip_norm,
+        )
+        if not np.isfinite(float(loss)):
+            log(f"  [{cfg.name}] DIVERGED at step {it} (loss={float(loss)})")
+            curve.append((time.time() - t0 + time_offset, it, 1.0))
+            break
+        if (it + 1) % hp.eval_every == 0 or it0 == 0:
+            ler = dev_ler(params, cfg, dev_batches)
+            curve.append((time.time() - t0 + time_offset, it + 1, ler))
+            log(
+                f"  [{cfg.name}/{schedule}] step {it+1:4d} "
+                f"loss {float(loss):6.3f} lr {lr:.2e} pm {pm:.2e} "
+                f"dev-LER {ler:.3f}"
+            )
+    return params, curve
+
+
+def train_smbr(
+    cfg: ModelConfig,
+    params: dict,
+    train_utts,
+    dev_batches,
+    hp: HParams,
+    mode: str,
+    log=print,
+):
+    """sMBR stage; ``mode`` ∈ {float, quant, quant_all} — quant modes are the
+    paper's quantization-aware training (§3.2/§5.2)."""
+    params = dict(params)
+    vel = sgd_init(params)
+    stream = BatchStream(train_utts, hp.batch_size, hp.seed + 2)
+    step_fn = smbr_step_fn(cfg, mode)
+    key = jax.random.PRNGKey(hp.seed + 3)
+    pm = hp.proj_cp_smbr if cfg.proj_dim is not None else 1.0
+    for it in range(hp.smbr_steps):
+        lr = eta_g(it, hp.lr_smbr, hp.lr_decay_steps)
+        key, sub = jax.random.split(key)
+        feats, labels, t_len, u_len, _align = stream.next()
+        params, vel, loss, min_risk = step_fn(
+            sub, params, vel, jnp.asarray(feats), jnp.asarray(labels),
+            jnp.asarray(t_len), jnp.asarray(u_len),
+            jnp.asarray(lr, jnp.float32), jnp.asarray(pm, jnp.float32),
+            hp.momentum, hp.clip_norm,
+        )
+        if (it + 1) % hp.eval_every == 0 or it == 0:
+            ler = dev_ler(params, cfg, dev_batches, mode=mode)
+            log(
+                f"  [{cfg.name}/smbr-{mode}] step {it+1:4d} "
+                f"risk {float(loss):6.3f} dev-LER({mode}) {ler:.3f}"
+            )
+    return params
+
+
+def train_all_conditions(cfg, train_utts, dev_batches, hp, out_dir, log=print):
+    """Full paper recipe for one architecture; exports the 3 model files."""
+    log(f"[{cfg.name}] CTC float training ({cfg.param_count()} params)")
+    sched = "sched_proj" if cfg.proj_dim is not None else "none"
+    ctc_params, _ = train_ctc(cfg, train_utts, dev_batches, hp, sched, log=log)
+
+    log(f"[{cfg.name}] sMBR float (match/mismatch baseline)")
+    float_params = train_smbr(
+        cfg, ctc_params, train_utts, dev_batches, hp, FLOAT, log=log
+    )
+    export.write_qam(
+        f"{out_dir}/{cfg.name}.float.qam", float_params, cfg, quantized=False
+    )
+    log(f"[{cfg.name}] QAT sMBR (quant: softmax stays float)")
+    qat = train_smbr(
+        cfg, ctc_params, train_utts, dev_batches, hp, QUANT, log=log
+    )
+    export.write_qam(
+        f"{out_dir}/{cfg.name}.qat.qam", qat, cfg,
+        quantized=True, quantize_output=False,
+    )
+    log(f"[{cfg.name}] QAT sMBR (quant-all)")
+    qat_all = train_smbr(
+        cfg, ctc_params, train_utts, dev_batches, hp, QUANT_ALL, log=log
+    )
+    export.write_qam(
+        f"{out_dir}/{cfg.name}.qatall.qam", qat_all, cfg,
+        quantized=True, quantize_output=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+
+def load_data(art: str):
+    train_utts = data.read_feats(f"{art}/data/train.feats")
+    dev_utts = data.read_feats(f"{art}/data/dev.feats")
+    dev_batches = make_batches(
+        dev_utts, 32, np.random.default_rng(0), shuffle=False
+    )
+    return train_utts, dev_batches
+
+
+def preset_quickstart(art: str, hp: HParams):
+    train_utts, dev_batches = load_data(art)
+    os.makedirs(f"{art}/models", exist_ok=True)
+    train_all_conditions(
+        QUICKSTART_CONFIG, train_utts, dev_batches, hp, f"{art}/models"
+    )
+
+
+def preset_table1(art: str, hp: HParams, arch: str | None = None):
+    """Train the grid.  ``arch`` filters to one architecture — the Makefile
+    drives one python process per arch (a long-lived process accumulating
+    dozens of jitted executables can hit XLA-CPU's JIT dylib limits)."""
+    train_utts, dev_batches = load_data(art)
+    os.makedirs(f"{art}/models", exist_ok=True)
+    for cfg in TABLE1_CONFIGS:
+        if arch is not None and cfg.name != arch:
+            continue
+        if arch is None and os.path.exists(
+            f"{art}/models/{cfg.name}.qatall.qam"
+        ):
+            print(f"[{cfg.name}] already trained — skip")
+            continue
+        train_all_conditions(cfg, train_utts, dev_batches, hp, f"{art}/models")
+
+
+def preset_qat_bits(art: str, hp: HParams, bits: int = 4):
+    """Extension: QAT at reduced bit width (DESIGN.md E5-QAT).
+
+    Starts from the float sMBR quickstart model, runs quantization-aware
+    sMBR with ``quant<bits>`` numerics, and exports
+    ``<name>.qat<bits>.qam``.  Together with `quantasr ablate-bits` this
+    shows QAT recovering the post-training loss at the bit widths where it
+    is unambiguous (4 bits), amplifying the paper's §3.2 result.
+    """
+    train_utts, dev_batches = load_data(art)
+    cfg = QUICKSTART_CONFIG
+    header, params, _ = export.read_qam(f"{art}/models/{cfg.name}.float.qam")
+    params = {k: jnp.asarray(v) for k, v in params.items()}
+    mode = f"quant{bits}"
+    hp = dataclasses.replace(hp, smbr_steps=max(hp.smbr_steps, 200))
+    qat = train_smbr(cfg, params, train_utts, dev_batches, hp, mode)
+    export.write_qam(
+        f"{art}/models/{cfg.name}.qat{bits}.qam", qat, cfg,
+        quantized=True, quantize_output=False, bits=bits,
+    )
+    print(f"wrote {cfg.name}.qat{bits}.qam")
+
+
+def preset_figure2(art: str, hp: HParams):
+    """The §5.1 schedule comparison on the P-model (paper's P=200 analog)."""
+    train_utts, dev_batches = load_data(art)
+    os.makedirs(f"{art}/curves", exist_ok=True)
+    cfg = FIGURE2_CONFIG
+    curves = {}
+
+    # (a) Low global LR, no multiplier.
+    _, curves["low_lr"] = train_ctc(
+        cfg, train_utts, dev_batches, hp, schedule="low_lr"
+    )
+    # (b) SVD initialization: pre-train the uncompressed model, factor, then
+    #     train the projection model (two-stage; time includes stage 1).
+    cfg_unc = ModelConfig(cfg.num_layers, cfg.cell_dim)
+    hp_pre = dataclasses.replace(hp, ctc_steps=hp.ctc_steps // 2)
+    t0 = time.time()
+    unc_params, _ = train_ctc(
+        cfg_unc, train_utts, dev_batches, hp_pre, schedule="none"
+    )
+    pre_time = time.time() - t0
+    svd_params = model.svd_init_from_uncompressed(unc_params, cfg_unc, cfg)
+    _, curves["svd_init"] = train_ctc(
+        cfg, train_utts, dev_batches, hp, schedule="none",
+        init=svd_params, time_offset=pre_time,
+    )
+    # (c) Scheduled projection LR (the paper's proposal).
+    _, curves["sched_proj"] = train_ctc(
+        cfg, train_utts, dev_batches, hp, schedule="sched_proj"
+    )
+
+    for name, curve in curves.items():
+        with open(f"{art}/curves/figure2_{name}.csv", "w") as fh:
+            fh.write("wall_seconds,step,dev_ler\n")
+            for wall, it, ler in curve:
+                fh.write(f"{wall:.2f},{it},{ler:.4f}\n")
+    print("figure2 curves written")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", required=True,
+                    choices=["quickstart", "table1", "figure2", "qat_bits"])
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--arch", default=None,
+                    help="table1: train only this architecture")
+    ap.add_argument("--ctc-steps", type=int, default=None)
+    ap.add_argument("--smbr-steps", type=int, default=None)
+    args = ap.parse_args()
+    hp = HParams()
+    if args.ctc_steps is not None:
+        hp = dataclasses.replace(hp, ctc_steps=args.ctc_steps)
+    if args.smbr_steps is not None:
+        hp = dataclasses.replace(hp, smbr_steps=args.smbr_steps)
+    t0 = time.time()
+    if args.preset == "table1":
+        preset_table1(args.out, hp, arch=args.arch)
+    elif args.preset == "qat_bits":
+        preset_qat_bits(args.out, hp, bits=args.bits)
+    else:
+        {"quickstart": preset_quickstart,
+         "figure2": preset_figure2}[args.preset](args.out, hp)
+    print(f"preset {args.preset} done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""CTC loss vs brute-force enumeration + batching/masking invariants."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import ctc
+
+
+def brute_force_nll(log_probs, labels, blank=0):
+    """Sum over all alignments that collapse to `labels`."""
+    t, l = log_probs.shape
+    total = -np.inf
+    for path in itertools.product(range(l), repeat=t):
+        seq, prev = [], blank
+        for s in path:
+            if s != blank and s != prev:
+                seq.append(s)
+            prev = s
+        if seq == list(labels):
+            lp = sum(log_probs[i, path[i]] for i in range(t))
+            total = np.logaddexp(total, lp)
+    return -total
+
+
+def rand_logprobs(t, l, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(1, t, l)), jnp.float32)
+    return jax.nn.log_softmax(logits, -1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 6),
+    l=st.integers(2, 4),
+    u=st.integers(0, 3),
+    seed=st.integers(0, 500),
+)
+def test_ctc_matches_brute_force(t, l, u, seed):
+    rng = np.random.default_rng(seed + 10_000)
+    labels = rng.integers(1, l, size=u)
+    # CTC needs t >= required frames (repeated labels need a blank gap)
+    required = u + sum(labels[i] == labels[i - 1] for i in range(1, u))
+    if t < required:
+        return
+    lp = rand_logprobs(t, l, seed)
+    pad = max(u, 1)
+    lab = np.zeros((1, pad), np.int32)
+    lab[0, :u] = labels
+    got = float(
+        ctc.ctc_loss(lp, jnp.asarray(lab), jnp.asarray([t]), jnp.asarray([u]))[0]
+    )
+    want = brute_force_nll(np.asarray(lp[0]), labels)
+    assert got == pytest.approx(want, rel=1e-4, abs=1e-4)
+
+
+def test_batch_equals_individual():
+    lp1 = rand_logprobs(8, 5, 1)
+    lp2 = rand_logprobs(8, 5, 2)
+    l1 = np.array([[1, 2, 0]], np.int32)
+    l2 = np.array([[3, 3, 4]], np.int32)
+    a = float(ctc.ctc_loss(lp1, jnp.asarray(l1), jnp.asarray([8]), jnp.asarray([2]))[0])
+    b = float(ctc.ctc_loss(lp2, jnp.asarray(l2), jnp.asarray([8]), jnp.asarray([3]))[0])
+    batch_lp = jnp.concatenate([lp1, lp2], axis=0)
+    batch_lab = jnp.asarray(np.concatenate([l1, l2], axis=0))
+    both = ctc.ctc_loss(batch_lp, batch_lab, jnp.asarray([8, 8]), jnp.asarray([2, 3]))
+    assert float(both[0]) == pytest.approx(a, rel=1e-5)
+    assert float(both[1]) == pytest.approx(b, rel=1e-5)
+
+
+def test_padding_frames_are_ignored():
+    lp = rand_logprobs(6, 4, 3)
+    lab = jnp.asarray([[1, 2]], jnp.int32)
+    short = float(ctc.ctc_loss(lp, lab, jnp.asarray([4]), jnp.asarray([2]))[0])
+    # pad with 4 extra frames of random data; input_length stays 4
+    extra = rand_logprobs(4, 4, 4)
+    padded = jnp.concatenate([lp, extra], axis=1)
+    got = float(ctc.ctc_loss(padded, lab, jnp.asarray([4]), jnp.asarray([2]))[0])
+    assert got == pytest.approx(short, rel=1e-5)
+
+
+def test_impossible_label_longer_than_input():
+    lp = rand_logprobs(2, 4, 5)
+    lab = jnp.asarray([[1, 2, 3]], jnp.int32)
+    nll = float(ctc.ctc_loss(lp, lab, jnp.asarray([2]), jnp.asarray([3]))[0])
+    assert nll > 1e9  # -NEG_INF-ish: zero probability
+
+
+def test_gradient_flows():
+    lp = rand_logprobs(6, 4, 6)
+    lab = jnp.asarray([[1, 2]], jnp.int32)
+
+    def f(x):
+        return ctc.ctc_loss(
+            jax.nn.log_softmax(x, -1), lab, jnp.asarray([6]), jnp.asarray([2])
+        )[0]
+
+    g = jax.grad(f)(lp)
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+def test_greedy_decode_and_ler():
+    # peaked posteriors → greedy recovers the sequence
+    t, l = 7, 4
+    ids = [1, 1, 0, 2, 0, 3, 3]
+    logits = np.full((1, t, l), -5.0, np.float32)
+    for i, s in enumerate(ids):
+        logits[0, i, s] = 5.0
+    lp = jax.nn.log_softmax(jnp.asarray(logits), -1)
+    hyps = ctc.greedy_decode(lp, np.asarray([t]))
+    assert hyps[0] == [1, 2, 3]
+    assert ctc.label_error_rate(hyps, [[1, 2, 3]]) == 0.0
+    assert ctc.label_error_rate(hyps, [[1, 3]]) == pytest.approx(0.5)
+
+
+def test_edit_distance():
+    assert ctc.edit_distance([], []) == 0
+    assert ctc.edit_distance([1, 2], [1, 2]) == 0
+    assert ctc.edit_distance([1, 2, 3], [1, 3]) == 1
+    assert ctc.edit_distance([1], [2, 3, 4]) == 3

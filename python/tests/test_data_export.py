@@ -1,0 +1,132 @@
+"""Data pipeline + export formats: determinism, frontend maths, round-trips."""
+
+import numpy as np
+import pytest
+
+from compile import data, export, model, spec
+
+
+@pytest.fixture(scope="module")
+def world():
+    return spec.World()
+
+
+def test_world_derivation_deterministic(world):
+    w2 = spec.World()
+    assert world.lexicon == w2.lexicon
+    assert [p.formants for p in world.phones] == [p.formants for p in w2.phones]
+    assert world.bigram == w2.bigram
+
+
+def test_lexicon_shapes(world):
+    assert len(world.lexicon) == spec.N_WORDS
+    assert all(2 <= len(s) <= 6 for s in world.lexicon)
+    assert len({tuple(s) for s in world.lexicon}) == spec.N_WORDS
+    assert all(1 <= p <= spec.N_PHONES for s in world.lexicon for p in s)
+
+
+def test_mel_filterbank_properties():
+    fb = data.mel_filterbank()
+    assert fb.shape == (spec.N_MEL, spec.FFT_SIZE // 2 + 1)
+    assert (fb >= 0).all()
+    assert (fb.sum(axis=1) > 0).all()
+    # DC and Nyquist excluded (fmin=125, fmax=3800)
+    assert (fb[:, 0] == 0).all()
+    assert (fb[:, -1] == 0).all()
+
+
+def test_features_shape_and_scale(world):
+    rng = spec.SplitMix64(7)
+    nprng = np.random.default_rng(7)
+    wave, phones, align = data.synth_utterance([3, 5], world, rng, nprng)
+    f = data.features(wave)
+    assert f.shape[1] == spec.FEAT_DIM
+    t_raw = 1 + (len(wave) - spec.FRAME_LEN) // spec.FRAME_HOP
+    assert f.shape[0] == (t_raw - spec.STACK) // spec.DECIMATE + 1
+    # FEAT_SCALE applied → roughly unit variance
+    assert 0.1 < float(f.std()) < 3.0
+
+
+def test_stacking_matches_manual():
+    t_raw, m = 10, spec.N_MEL
+    frames = np.arange(t_raw * m, dtype=np.float32).reshape(t_raw, m)
+    out = data.stack_frames(frames)
+    # frame 1 covers raw frames 2..5
+    want = np.concatenate([frames[2], frames[3], frames[4], frames[5]])
+    np.testing.assert_allclose(out[1], want)
+
+
+def test_gen_utt_deterministic(world):
+    a = data.gen_utt(5, 101, world, "clean")
+    b = data.gen_utt(5, 101, world, "clean")
+    np.testing.assert_array_equal(a.feats, b.feats)
+    np.testing.assert_array_equal(a.phones, b.phones)
+
+
+def test_clean_noisy_share_content(world):
+    c = data.gen_utt(9, 303, world, "clean")
+    n = data.gen_utt(9, 303, world, "noisy")
+    np.testing.assert_array_equal(c.words, n.words)
+    assert not np.allclose(c.feats, n.feats)
+
+
+def test_feats_file_roundtrip(tmp_path, world):
+    utts = [data.gen_utt(i, 11, world, "clean") for i in range(5)]
+    p = tmp_path / "t.feats"
+    data.write_feats(str(p), utts)
+    back = data.read_feats(str(p))
+    assert len(back) == 5
+    for a, b in zip(utts, back):
+        np.testing.assert_allclose(a.feats, b.feats)
+        np.testing.assert_array_equal(a.phones, b.phones)
+        np.testing.assert_array_equal(a.align, b.align)
+
+
+def test_qam_roundtrip_float_and_quant(tmp_path):
+    import jax
+
+    cfg = model.ModelConfig(2, 8, proj_dim=4)
+    params = model.init_params(cfg, jax.random.PRNGKey(3))
+    for quantized, qo in [(False, False), (True, False), (True, True)]:
+        p = tmp_path / f"m_{quantized}_{qo}.qam"
+        export.write_qam(str(p), params, cfg, quantized=quantized, quantize_output=qo)
+        header, back, qinfo = export.read_qam(str(p))
+        assert header["quantized"] == quantized
+        cfg2 = export.config_from_header(header)
+        assert cfg2 == cfg
+        for k, v in params.items():
+            got = back[k]
+            if quantized and got.ndim == 2 and (qo or not k.startswith("out.")):
+                # quantized: within half a step
+                q = qinfo[k][1]
+                assert np.max(np.abs(got - np.asarray(v))) <= 0.5 / q * 1.01
+            else:
+                np.testing.assert_allclose(got, np.asarray(v), atol=1e-7)
+
+
+def test_qam_quantized_file_smaller(tmp_path):
+    import jax
+    import os
+
+    cfg = model.ModelConfig(3, 32, proj_dim=16)
+    params = model.init_params(cfg, jax.random.PRNGKey(4))
+    pf = tmp_path / "f.qam"
+    pq = tmp_path / "q.qam"
+    export.write_qam(str(pf), params, cfg, quantized=False)
+    export.write_qam(str(pq), params, cfg, quantized=True, quantize_output=True)
+    assert os.path.getsize(pq) * 3 < os.path.getsize(pf)
+
+
+def test_read_qam_raw_preserves_u8(tmp_path):
+    import jax
+
+    cfg = model.ModelConfig(1, 8)
+    params = model.init_params(cfg, jax.random.PRNGKey(5))
+    p = tmp_path / "r.qam"
+    export.write_qam(str(p), params, cfg, quantized=True)
+    _, records = export.read_qam_raw(str(p))
+    dtype, arr, vmin, q = records["l0.wx"]
+    assert dtype == export.U8Q
+    assert arr.dtype == np.uint8
+    assert vmin is not None and q is not None
+    assert arr.min() >= 0 and arr.max() <= 255

@@ -1,0 +1,104 @@
+"""L1 Pallas kernels vs pure-jnp oracles (the core correctness signal).
+
+Hypothesis sweeps shapes, value ranges and block sizes; kernels run under
+interpret=True (CPU) and must match ref.py exactly (integer pipeline) or to
+f32 tolerance (elementwise tails).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quantlib
+from compile.kernels import lstm_step, qmatmul, ref
+
+
+def rand(shape, scale, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, size=shape), jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 16),
+    k=st.integers(1, 96),
+    n=st.integers(1, 48),
+    act=st.sampled_from(["none", "sigmoid", "tanh", "relu"]),
+    seed=st.integers(0, 999),
+)
+def test_qmatmul_kernel_matches_ref(m, k, n, act, seed):
+    x = rand((m, k), 1.0, seed)
+    w = rand((k, n), 0.5, seed + 1)
+    b = rand((n,), 0.3, seed + 2)
+    wp = quantlib.compute_qparams(w)
+    wq = quantlib.quantize(w, wp)
+    xp = quantlib.compute_qparams(x)
+    got = qmatmul.qmatmul(x, wq, b, xp.q, xp.zp, wp.q, wp.zp, activation=act)
+    want = ref.qmatmul_ref(x, wq, b, xp.q, xp.zp, wp.q, wp.zp, activation=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([1, 2, 8, 32]),
+    bn=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([16, 64, 128]),
+)
+def test_qmatmul_block_shape_invariance(bm, bn, bk):
+    # Result must not depend on the BlockSpec tiling.
+    x = rand((8, 96), 1.0, 1)
+    w = rand((96, 64), 0.5, 2)
+    b = jnp.zeros((64,))
+    wp = quantlib.compute_qparams(w)
+    wq = quantlib.quantize(w, wp)
+    xp = quantlib.compute_qparams(x)
+    got = qmatmul.qmatmul(x, wq, b, xp.q, xp.zp, wp.q, wp.zp, bm=bm, bn=bn, bk=bk)
+    want = ref.qmatmul_ref(x, wq, b, xp.q, xp.zp, wp.q, wp.zp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+def test_qmatmul_integer_exactness():
+    # The kernel's integer accumulation must be bit-identical to the
+    # reference (same int32 algebra), so the diff is exactly zero.
+    x = rand((4, 64), 2.0, 3)
+    w = rand((64, 32), 0.8, 4)
+    b = rand((32,), 0.1, 5)
+    wp = quantlib.compute_qparams(w)
+    wq = quantlib.quantize(w, wp)
+    xp = quantlib.compute_qparams(x)
+    got = qmatmul.qmatmul(x, wq, b, xp.q, xp.zp, wp.q, wp.zp)
+    want = ref.qmatmul_ref(x, wq, b, xp.q, xp.zp, wp.q, wp.zp)
+    assert float(jnp.max(jnp.abs(got - want))) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 16),
+    n=st.integers(1, 64),
+    bm=st.sampled_from([1, 4, 32]),
+    seed=st.integers(0, 99),
+)
+def test_lstm_elementwise_matches_ref(b, n, bm, seed):
+    gates = rand((b, 4 * n), 1.5, seed)
+    c = rand((b, n), 1.0, seed + 1)
+    h1, c1 = lstm_step.lstm_elementwise(gates, c, bm=bm)
+    h2, c2 = ref.lstm_elementwise_ref(gates, c)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-6)
+
+
+def test_lstm_elementwise_state_bounds():
+    # |h| ≤ 1 always (o·tanh(c')), regardless of inputs.
+    gates = rand((8, 4 * 32), 10.0, 6)
+    c = rand((8, 32), 5.0, 7)
+    h1, c1 = lstm_step.lstm_elementwise(gates, c)
+    assert float(jnp.max(jnp.abs(h1))) <= 1.0 + 1e-6
+
+
+def test_vmem_estimate_monotone():
+    small = qmatmul.vmem_bytes(8, 128, 128)
+    big = qmatmul.vmem_bytes(32, 256, 256)
+    assert big > small
+    # default tile fits comfortably in 16 MB VMEM
+    assert qmatmul.vmem_bytes(32, 128, 128) < 16 * 1024 * 1024

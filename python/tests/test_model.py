@@ -1,0 +1,126 @@
+"""L2 model: shapes, modes, step-vs-scan equivalence, SVD init, QAT grads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, quantlib
+from compile.model import FLOAT, QUANT, QUANT_ALL, ModelConfig
+
+
+def feats(b, t, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(b, t, 64)), jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = ModelConfig(2, 12, proj_dim=6)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_param_count_matches_init(small):
+    cfg, params = small
+    total = sum(int(np.prod(v.shape)) for v in params.values())
+    assert total == cfg.param_count()
+
+
+def test_table1_grid_names_and_sizes():
+    names = [c.name for c in model.TABLE1_CONFIGS]
+    assert names == ["4x30", "5x30", "4x40", "5x40", "4x50", "5x50",
+                     "p10", "p20", "p30", "p40"]
+    counts = [c.param_count() for c in model.TABLE1_CONFIGS]
+    # parameter count grows within each family (paper's x-axis)
+    assert counts[0] < counts[2] < counts[4]
+    assert counts[6] < counts[7] < counts[8] < counts[9]
+
+
+def test_forward_shapes_all_modes(small):
+    cfg, params = small
+    x = feats(3, 5)
+    for mode in [FLOAT, QUANT, QUANT_ALL]:
+        out = model.forward(params, cfg, x, mode)
+        assert out.shape == (3, 5, cfg.num_labels)
+
+
+def test_step_equals_scan(small):
+    cfg, params = small
+    x = feats(2, 6, 1)
+    want = model.forward(params, cfg, x, FLOAT)
+    state = model.init_state(cfg, 2)
+    outs = []
+    for t in range(6):
+        logits, state = model.step(params, cfg, x[:, t], state, FLOAT)
+        outs.append(logits)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_quant_close_to_float(small):
+    cfg, params = small
+    x = feats(2, 10, 2)
+    lf = model.log_posteriors(params, cfg, x, FLOAT)
+    lq = model.log_posteriors(params, cfg, x, QUANT)
+    # quantization perturbs but does not destroy the distribution
+    assert float(jnp.max(jnp.abs(lf - lq))) < 1.0
+    assert float(jnp.mean(jnp.abs(lf - lq))) < 0.1
+
+
+def test_quant_modes_differ(small):
+    cfg, params = small
+    x = feats(1, 4, 3)
+    lq = model.forward(params, cfg, x, QUANT)
+    lqa = model.forward(params, cfg, x, QUANT_ALL)
+    assert not np.allclose(np.asarray(lq), np.asarray(lqa))
+
+
+def test_no_projection_model():
+    cfg = ModelConfig(2, 10)
+    params = model.init_params(cfg, jax.random.PRNGKey(1))
+    assert "l0.wp" not in params
+    out = model.forward(params, cfg, feats(1, 3), FLOAT)
+    assert out.shape == (1, 3, cfg.num_labels)
+
+
+def test_svd_init_shapes_and_fidelity():
+    cfg_unc = ModelConfig(2, 16)
+    cfg_p = ModelConfig(2, 16, proj_dim=14)  # nearly full rank
+    pu = model.init_params(cfg_unc, jax.random.PRNGKey(2))
+    ps = model.svd_init_from_uncompressed(pu, cfg_unc, cfg_p)
+    assert ps["l0.wp"].shape == (16, 14)
+    assert ps["l0.wh"].shape == (14, 64)
+    assert ps["l1.wx"].shape == (14, 64)
+    # near-full-rank factorization ≈ reconstructs the recurrent matrix
+    rec = np.asarray(ps["l0.wp"] @ ps["l0.wh"])
+    orig = np.asarray(pu["l0.wh"])
+    rel = np.linalg.norm(rec - orig) / np.linalg.norm(orig)
+    assert rel < 0.35, rel
+
+
+def test_qat_gradients_reach_all_params(small):
+    cfg, params = small
+    x = feats(2, 5, 4)
+
+    def loss(p):
+        return jnp.sum(model.forward(p, cfg, x, QUANT) ** 2)
+
+    g = jax.grad(loss)(params)
+    for k, v in g.items():
+        assert np.isfinite(np.asarray(v)).all(), k
+        assert float(jnp.max(jnp.abs(v))) > 0, f"no gradient for {k}"
+
+
+def test_quantized_view_quantizes_matrices_only(small):
+    cfg, params = small
+    qv = model.quantized_view(params, quantize_output=False)
+    # biases unchanged
+    np.testing.assert_array_equal(np.asarray(qv["l0.b"]), np.asarray(params["l0.b"]))
+    # output layer unchanged when quantize_output=False
+    np.testing.assert_array_equal(np.asarray(qv["out.w"]), np.asarray(params["out.w"]))
+    # weight matrices on the u8 grid: re-fake-quant is idempotent
+    w = qv["l0.wx"]
+    np.testing.assert_allclose(
+        np.asarray(quantlib.fake_quant(w)), np.asarray(w), atol=1e-6
+    )

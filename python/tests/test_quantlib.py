@@ -1,0 +1,133 @@
+"""quantlib: eqs. (1)-(3) invariants, QAT transform, bias ablation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantlib
+from compile.quantlib import (QParams, compute_qparams, fake_quant,
+                              fake_quant_ste, quantize, quantize_naive,
+                              quantized_matmul, quantized_matmul_q, recover,
+                              recover_naive)
+
+
+def rand(shape, lo, hi, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape), jnp.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(2, 200),
+    lo=st.floats(-10.0, 0.0),
+    width=st.floats(0.05, 20.0),
+    seed=st.integers(0, 1000),
+)
+def test_roundtrip_error_bounded_by_half_step(n, lo, width, seed):
+    v = rand((n,), lo, lo + width, seed)
+    p = compute_qparams(v)
+    r = recover(quantize(v, p), p)
+    half = 0.5 / p.q
+    # 1% headroom + small absolute: f32 arithmetic adds epsilon-level error
+    # (|q·v| can be ~1e4 with only 24-bit mantissas) on top of the exact
+    # half-step quantization bound.
+    err = float(jnp.max(jnp.abs(r - v)))
+    assert err <= float(half) * 1.01 + 1e-6 * (1.0 + abs(lo))
+
+
+def test_quantized_values_span_scale():
+    v = jnp.linspace(0.0, 1.0, 101)
+    p = compute_qparams(v)
+    q = quantize(v, p)
+    assert float(q[0]) == 0.0
+    assert float(q[-1]) == 255.0
+    assert float(jnp.min(q)) >= 0.0 and float(jnp.max(q)) <= 255.0
+
+
+def test_consistent_bias_much_smaller_than_naive():
+    v = rand((65536,), -1.0, 1.0, 3)
+    p = compute_qparams(v)
+    err_c = recover(quantize(v, p), p) - v
+    err_n = recover_naive(quantize_naive(v, p), p) - v
+    assert abs(float(jnp.mean(err_c))) < 2e-4
+    assert abs(float(jnp.mean(err_n))) > 5 * abs(float(jnp.mean(err_c)))
+    # the naive bias is ~ -half step
+    assert float(jnp.mean(err_n)) < 0
+
+
+def test_shifted_integer_equals_round_qv():
+    v = rand((100,), -2.0, 3.0, 4)
+    p = compute_qparams(v)
+    shifted = quantize(v, p) + p.zp
+    assert np.allclose(np.asarray(shifted), np.round(np.asarray(p.q * v)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    k=st.integers(1, 64),
+    n=st.integers(1, 32),
+    seed=st.integers(0, 99),
+)
+def test_quantized_matmul_close_to_float(m, k, n, seed):
+    x = rand((m, k), -2.0, 2.0, seed)
+    w = rand((k, n), -0.5, 0.5, seed + 1)
+    wp = compute_qparams(w)
+    got = quantized_matmul(x, w, wp)
+    want = x @ w
+    scale = float(jnp.max(jnp.abs(want))) + 1.0
+    assert float(jnp.max(jnp.abs(got - want))) < 0.05 * scale
+
+
+def test_quantized_matmul_q_matches_quantized_matmul():
+    x = rand((4, 32), -1.0, 1.0, 7)
+    w = rand((32, 16), -0.7, 0.7, 8)
+    wp = compute_qparams(w)
+    wq = quantize(w, wp)
+    a = quantized_matmul(x, w, wp)
+    b = quantized_matmul_q(x, wq, wp)
+    assert np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_fake_quant_equals_integer_pipeline():
+    # fake-quant matmul == eq. (1) integer matmul (the QAT faithfulness
+    # claim in model.py's docstring).
+    x = rand((3, 24), -1.5, 1.5, 9)
+    w = rand((24, 10), -0.4, 0.4, 10)
+    wp = compute_qparams(w)
+    xp = compute_qparams(x)
+    xf = recover(quantize(x, xp), xp)
+    wf = recover(quantize(w, wp), wp)
+    want = xf @ wf
+    got = quantized_matmul(x, w, wp)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-4
+
+
+def test_fake_quant_ste_gradient_is_identity():
+    v = rand((16, 16), -1.0, 1.0, 11)
+
+    def f(w):
+        return jnp.sum(fake_quant_ste(w) ** 2)
+
+    g = jax.grad(f)(v)
+    # STE: d/dw sum(fq(w)^2) ≈ 2*fq(w) (gradient flows as if identity)
+    want = 2 * fake_quant(v)
+    assert float(jnp.max(jnp.abs(g - want))) < 1e-5
+
+
+def test_degenerate_range_safe():
+    v = jnp.full((7,), 3.0)
+    p = compute_qparams(v)
+    r = recover(quantize(v, p), p)
+    assert float(jnp.max(jnp.abs(r - 3.0))) < 1e-3
+
+
+def test_per_row_granularity_reduces_error():
+    rng = np.random.default_rng(5)
+    w = rng.normal(0, 0.1, size=(32, 64)).astype(np.float32)
+    w[0] *= 10
+    w = jnp.asarray(w)
+    err = lambda axis: float(jnp.sqrt(jnp.mean((fake_quant(w, axis=axis) - w) ** 2)))
+    assert err(1) < err(None)

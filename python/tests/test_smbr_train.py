@@ -1,0 +1,131 @@
+"""sMBR approximation + training machinery (schedules, batching, SGD)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, smbr, train
+
+
+def test_collapse_paths():
+    paths = jnp.asarray(
+        [[[0, 1, 1, 0, 2, 2, 3]]], jnp.int32
+    )  # [K=1, B=1, T=7]
+    labels, lengths = smbr.collapse_paths(paths, jnp.asarray([7]))
+    assert int(lengths[0, 0]) == 3
+    assert list(np.asarray(labels[0, 0][:3])) == [1, 2, 3]
+
+
+def test_collapse_respects_input_length():
+    paths = jnp.asarray([[[1, 0, 2, 3, 3]]], jnp.int32)
+    labels, lengths = smbr.collapse_paths(paths, jnp.asarray([3]))
+    assert int(lengths[0, 0]) == 2
+    assert list(np.asarray(labels[0, 0][:2])) == [1, 2]
+
+
+@pytest.mark.parametrize(
+    "a,la,b,lb,want",
+    [
+        ([1, 2, 3], 3, [1, 2, 3], 3, 0),
+        ([1, 2, 3], 3, [1, 3], 2, 1),
+        ([], 0, [1, 2], 2, 2),
+        ([5, 5], 2, [], 0, 2),
+        ([1, 9, 3, 0], 3, [1, 2, 3, 0], 3, 1),
+    ],
+)
+def test_edit_distance_padded(a, la, b, lb, want):
+    pad = 6
+    av = jnp.asarray(a + [0] * (pad - len(a)), jnp.int32)
+    bv = jnp.asarray(b + [0] * (pad - len(b)), jnp.int32)
+    got = float(
+        smbr.edit_distance_padded(av, jnp.asarray(float(la)), bv, jnp.asarray(float(lb)))
+    )
+    assert got == want
+
+
+def test_smbr_risk_zero_when_model_is_perfect():
+    # construct posteriors that deterministically emit the reference
+    t, l = 8, 5
+    ref_path = [1, 1, 0, 2, 0, 3, 0, 0]
+    logits = np.full((1, t, l), -30.0, np.float32)
+    for i, s in enumerate(ref_path):
+        logits[0, i, s] = 0.0
+    lp = jax.nn.log_softmax(jnp.asarray(logits), -1)
+    labels = jnp.asarray([[1, 2, 3]], jnp.int32)
+    risk, min_risk = smbr.smbr_risk(
+        jax.random.PRNGKey(0), lp, labels, jnp.asarray([t]), jnp.asarray([3])
+    )
+    assert float(min_risk) == 0.0
+    # baseline-subtracted expected risk ≈ 0 when all paths agree
+    assert abs(float(risk)) < 1e-3
+
+
+def test_smbr_gradient_finite():
+    cfg = model.ModelConfig(1, 8)
+    params = model.init_params(cfg, jax.random.PRNGKey(1))
+    feats = jnp.asarray(np.random.default_rng(0).normal(size=(2, 6, 64)), jnp.float32)
+
+    def loss(p):
+        lp = model.log_posteriors(p, cfg, feats, "quant")
+        r, _ = smbr.smbr_risk(
+            jax.random.PRNGKey(2), lp, jnp.asarray([[1, 2], [3, 0]]),
+            jnp.asarray([6, 6]), jnp.asarray([2, 1]),
+        )
+        return r
+
+    g = jax.grad(loss)(params)
+    for k, v in g.items():
+        assert np.isfinite(np.asarray(v)).all(), k
+
+
+# ---------------------------------------------------------------------------
+# train.py machinery
+# ---------------------------------------------------------------------------
+
+
+def test_lr_schedules():
+    assert train.eta_g(0, 0.05, 3000) == pytest.approx(0.05)
+    assert train.eta_g(3000, 0.05, 3000) == pytest.approx(0.005)
+    # projection multiplier ramps from c_p to 1
+    assert train.eta_p_sched(0, 1e-3, 250) == pytest.approx(1e-3)
+    assert train.eta_p_sched(125, 1e-3, 250) == pytest.approx(1e-3**0.5)
+    assert train.eta_p_sched(250, 1e-3, 250) == pytest.approx(1.0)
+    assert train.eta_p_sched(9999, 1e-3, 250) == pytest.approx(1.0)
+
+
+def test_make_batches_shapes_and_content():
+    class U:
+        def __init__(self, t, phones):
+            self.feats = np.ones((t, 64), np.float32)
+            self.phones = np.asarray(phones, np.uint32)
+            self.align = np.zeros(t, np.uint32)
+
+    utts = [U(10, [1, 2]), U(33, [3]), U(7, [4, 5, 6])]
+    batches = train.make_batches(utts, 2, np.random.default_rng(0), shuffle=False)
+    assert len(batches) == 2
+    feats, labels, t_len, u_len, align = batches[0]
+    assert feats.shape[1] % 16 == 0
+    assert labels.shape[1] % 8 == 0
+    assert feats.shape[0] == 2
+    # sorted by length: first batch has the two shortest
+    assert sorted(t_len.tolist()) == [7, 10]
+    assert align.shape == feats.shape[:2]
+
+
+def test_sgd_update_applies_proj_multiplier():
+    params = {"l0.wx": jnp.ones((2, 2)), "l0.wp": jnp.ones((2, 2))}
+    vel = train.sgd_init(params)
+    grads = {k: jnp.ones_like(v) for k, v in params.items()}
+    lr_tree = {"l0.wx": jnp.asarray(1.0), "l0.wp": jnp.asarray(0.5)}
+    new, _, _ = train.sgd_update(params, vel, grads, lr_tree, 0.0, 1e9)
+    assert float(new["l0.wx"][0, 0]) == pytest.approx(0.0)
+    assert float(new["l0.wp"][0, 0]) == pytest.approx(0.5)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = train._clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    got = float(jnp.linalg.norm(clipped["a"]))
+    assert got == pytest.approx(1.0, rel=1e-5)

@@ -1,0 +1,93 @@
+//! Decoder benches: word beam search cost vs beam width, phone prefix beam,
+//! n-gram LM scoring throughput, WER scoring.  (§4 decoding setup; the
+//! decoder shares the embedded real-time budget with the AM.)
+
+use quantasr::decoder::lm::NGramLm;
+use quantasr::decoder::trie::LexTrie;
+use quantasr::decoder::{ctc, wer, Decoder, DecoderConfig};
+use quantasr::sim::dataset::text_corpus;
+use quantasr::sim::World;
+use quantasr::util::bench::Bench;
+use quantasr::util::rng::Xoshiro256;
+
+/// Synthetic peaked posteriors for a random in-lexicon word sequence.
+fn posteriors(world: &World, n_words: usize, rng: &mut Xoshiro256) -> (Vec<f32>, usize) {
+    let labels = quantasr::frontend::spec::N_LABELS;
+    let mut rows: Vec<f32> = Vec::new();
+    let mut push = |id: u32, rng: &mut Xoshiro256| {
+        let mut r = vec![0f32; labels];
+        for v in r.iter_mut() {
+            *v = rng.normal() as f32 * 0.3 - 6.0;
+        }
+        r[id as usize] = -0.05;
+        rows.extend(r);
+    };
+    push(0, rng);
+    for _ in 0..n_words {
+        let w = rng.below(world.lexicon.len());
+        for &p in &world.lexicon[w] {
+            for _ in 0..3 {
+                push(p, rng);
+            }
+            push(0, rng);
+        }
+    }
+    let t = rows.len() / labels;
+    (rows, t)
+}
+
+fn main() {
+    let b = Bench::default();
+    let world = World::new();
+    let mut rng = Xoshiro256::new(0xDEC);
+    let corpus = text_corpus(20_000, 0xC0_0C, &world);
+    let labels = quantasr::frontend::spec::N_LABELS;
+
+    println!("== bench_decoder ==");
+    let (lp, t) = posteriors(&world, 3, &mut rng);
+    println!("utterance: {t} frames (~{:.1}s audio)\n", t as f64 * 0.02);
+
+    for beam in [4usize, 8, 16, 24, 48] {
+        let dec = Decoder::new(
+            LexTrie::from_world(&world),
+            NGramLm::small(&corpus, 200),
+            NGramLm::large(&corpus, 200),
+            DecoderConfig { beam, ..Default::default() },
+        );
+        let m = b.run_with_items(&format!("word beam search beam={beam}"), t as f64, || {
+            dec.decode(&lp, labels)
+        });
+        println!(
+            "  → {:.1}× realtime\n",
+            (t as f64 * 0.02) / (m.mean_ns * 1e-9)
+        );
+    }
+
+    b.run_with_items("phone prefix beam (8)", t as f64, || {
+        ctc::prefix_beam(&lp, labels, 8)
+    });
+    b.run_with_items("greedy decode", t as f64, || ctc::greedy(&lp, labels));
+
+    // LM scoring throughput.
+    let lm = NGramLm::large(&corpus, 200);
+    let hist = [3u32, 17];
+    b.run_with_items("trigram LM log_prob", 1.0, || lm.log_prob(&hist, 42));
+
+    // WER scoring.
+    let mut a = vec![0u32; 30];
+    let mut c = vec![0u32; 30];
+    for v in a.iter_mut() {
+        *v = rng.below(200) as u32;
+    }
+    for v in c.iter_mut() {
+        *v = rng.below(200) as u32;
+    }
+    b.run_with_items("wer align 30×30", 900.0, || wer::align(&a, &c));
+
+    println!("\nLM stats: small {} n-grams, large {} n-grams, ppl(held-out) small {:.1} large {:.1}",
+        NGramLm::small(&corpus, 200).num_ngrams(),
+        lm.num_ngrams(),
+        NGramLm::small(&corpus, 200).perplexity(&text_corpus(500, 1, &world)),
+        lm.perplexity(&text_corpus(500, 1, &world)),
+    );
+}

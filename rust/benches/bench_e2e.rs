@@ -1,0 +1,151 @@
+//! E1/E4 — end-to-end acoustic-model benches:
+//! (a) full-model single-stream step latency + real-time factor, float vs
+//!     int8, across the Table-1 architecture grid ("the cost of inference",
+//!     §3.1) — uses trained artifacts when present, random weights else;
+//! (b) the serving engine's batched throughput vs max_batch (the L3
+//!     batching ablation).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use quantasr::coordinator::batcher::BatchPolicy;
+use quantasr::coordinator::{Engine, EngineConfig};
+use quantasr::decoder::DecoderConfig;
+use quantasr::eval::build_decoder;
+use quantasr::frontend::spec;
+use quantasr::io::model_fmt::{ModelHeader, QamFile, Tensor};
+use quantasr::nn::{AcousticModel, ExecMode};
+use quantasr::sim::World;
+use quantasr::util::bench::Bench;
+use quantasr::util::rng::Xoshiro256;
+
+fn random_qam(layers: usize, cells: usize, proj: Option<usize>) -> QamFile {
+    let input_dim = spec::FEAT_DIM;
+    let labels = spec::N_LABELS;
+    let rec = proj.unwrap_or(cells);
+    let mut rng = Xoshiro256::new(0xE2E);
+    let mut tensors = BTreeMap::new();
+    let mut mk = |name: String, i: usize, o: usize, rng: &mut Xoshiro256| {
+        let mut data = vec![0f32; i * o];
+        rng.fill_normal(&mut data);
+        for v in data.iter_mut() {
+            *v *= (1.0 / i as f32).sqrt();
+        }
+        (name, Tensor::F32 { shape: vec![i, o], data })
+    };
+    for l in 0..layers {
+        let ind = if l == 0 { input_dim } else { rec };
+        let (nm, t) = mk(format!("l{l}.wx"), ind, 4 * cells, &mut rng);
+        tensors.insert(nm, t);
+        let (nm, t) = mk(format!("l{l}.wh"), rec, 4 * cells, &mut rng);
+        tensors.insert(nm, t);
+        tensors.insert(
+            format!("l{l}.b"),
+            Tensor::F32 { shape: vec![4 * cells], data: vec![0.0; 4 * cells] },
+        );
+        if let Some(p) = proj {
+            let (nm, t) = mk(format!("l{l}.wp"), cells, p, &mut rng);
+            tensors.insert(nm, t);
+        }
+    }
+    let (nm, t) = mk("out.w".into(), rec, labels, &mut rng);
+    tensors.insert(nm, t);
+    tensors.insert("out.b".into(), Tensor::F32 { shape: vec![labels], data: vec![0.0; labels] });
+    QamFile {
+        header: ModelHeader {
+            name: format!("{layers}x{cells}{}", proj.map(|p| format!("p{p}")).unwrap_or_default()),
+            num_layers: layers,
+            cell_dim: cells,
+            proj_dim: proj,
+            input_dim,
+            num_labels: labels,
+            quantized: false,
+            quantize_output: false,
+            param_count: 0,
+        },
+        tensors,
+    }
+}
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Xoshiro256::new(7);
+    println!("== bench_e2e: full acoustic model, float vs int8 ==");
+    println!("(frame = 20 ms of audio; RTF = compute time / audio time)\n");
+
+    // The Table-1 grid + the paper-scale 5×500 P=200 for reference.
+    let grid: &[(usize, usize, Option<usize>)] = &[
+        (4, 30, None),
+        (5, 50, None),
+        (5, 50, Some(20)),
+        (5, 500, Some(200)), // paper-scale width
+    ];
+    for &(layers, cells, proj) in grid {
+        let qam = random_qam(layers, cells, proj);
+        let mf = AcousticModel::from_qam(&qam, ExecMode::Float).unwrap();
+        let mq = AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap();
+        let mut x = vec![0f32; spec::FEAT_DIM];
+        rng.fill_normal(&mut x);
+        let mut st_f = mf.new_state(1);
+        let mut st_q = mq.new_state(1);
+        let mut out = vec![0f32; mf.num_labels()];
+        let name = qam.header.name.clone();
+        let m_f = b.run_with_items(&format!("model f32  {name} b1"), 1.0, || {
+            mf.step(&x, &mut st_f, &mut out)
+        });
+        let m_q = b.run_with_items(&format!("model int8 {name} b1"), 1.0, || {
+            mq.step(&x, &mut st_q, &mut out)
+        });
+        let frame_s = spec::FRAME_SECONDS;
+        println!(
+            "  → int8 speedup {:.2}×;  RTF f32 {:.4}  int8 {:.4};  storage {}KB → {}KB\n",
+            m_f.mean_ns / m_q.mean_ns,
+            m_f.mean_ns * 1e-9 / frame_s,
+            m_q.mean_ns * 1e-9 / frame_s,
+            mf.storage_bytes() / 1024,
+            mq.storage_bytes() / 1024,
+        );
+    }
+
+    // (b) serving engine: throughput vs max_batch.
+    println!("== serving engine: batched frames/s vs max_batch ==");
+    let qam = random_qam(3, 48, Some(24));
+    let world = World::new();
+    let decoder = Arc::new(build_decoder(&world, DecoderConfig { beam: 8, ..Default::default() }));
+    for max_batch in [1usize, 2, 4, 8, 16] {
+        let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+        let cfg = EngineConfig {
+            policy: BatchPolicy {
+                max_batch,
+                deadline: std::time::Duration::from_millis(2),
+            },
+            decode_workers: 2,
+            max_pending_frames: 128,
+        };
+        let engine = Arc::new(Engine::start(model, decoder.clone(), cfg));
+        let n_streams = 16;
+        let frames_per_stream = 100;
+        let mut frame = vec![0f32; spec::FEAT_DIM * frames_per_stream];
+        rng.fill_normal(&mut frame);
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..n_streams {
+                let engine = engine.clone();
+                let frame = frame.clone();
+                scope.spawn(move || {
+                    let (id, rx) = engine.open_stream();
+                    engine.push_frames(id, &frame).unwrap();
+                    engine.finish_stream(id).unwrap();
+                    let _ = rx.recv().unwrap();
+                });
+            }
+        });
+        let dt = t0.elapsed().as_secs_f64();
+        let total_frames = (n_streams * frames_per_stream) as f64;
+        println!(
+            "max_batch={max_batch:<3} {total_frames:>6} frames in {dt:>6.3}s → {:>9.0} frames/s  (mean batch {:.2})",
+            total_frames / dt,
+            engine.metrics().batch_size.summary().mean,
+        );
+    }
+}

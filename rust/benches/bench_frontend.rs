@@ -1,0 +1,50 @@
+//! Frontend throughput: PCM → features, batch and streaming, plus the FFT
+//! kernel in isolation.  (The paper's embedded budget: the frontend must be
+//! a negligible slice of the real-time budget.)
+
+use quantasr::frontend::fft::{Complex, FftPlan};
+use quantasr::frontend::{features, spec, Frontend};
+use quantasr::util::bench::Bench;
+use quantasr::util::rng::Xoshiro256;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Xoshiro256::new(0xFE);
+
+    println!("== bench_frontend ==");
+    let secs = 4.0;
+    let n = (secs * spec::SAMPLE_RATE as f64) as usize;
+    let mut wave = vec![0f32; n];
+    for (i, v) in wave.iter_mut().enumerate() {
+        let t = i as f64 / spec::SAMPLE_RATE as f64;
+        *v = (2.0 * std::f64::consts::PI * 700.0 * t).sin() as f32 * 0.3
+            + rng.normal() as f32 * 0.02;
+    }
+
+    let m = b.run_with_items(&format!("batch features {secs}s audio"), n as f64, || {
+        features(&wave)
+    });
+    println!(
+        "  → {:.0}× realtime\n",
+        secs / (m.mean_ns * 1e-9)
+    );
+
+    let mut fe = Frontend::new();
+    let mut out = Vec::new();
+    b.run_with_items("streaming push 80ms chunks", n as f64, || {
+        fe.reset();
+        out.clear();
+        for chunk in wave.chunks(640) {
+            fe.push(chunk, &mut out);
+        }
+        out.len()
+    });
+
+    let plan = FftPlan::new(spec::FFT_SIZE);
+    let mut scratch = vec![Complex::default(); spec::FFT_SIZE];
+    let mut power = vec![0f32; spec::FFT_SIZE / 2 + 1];
+    let frame: Vec<f32> = wave[..spec::FRAME_LEN].to_vec();
+    b.run_with_items("fft256 power spectrum", spec::FFT_SIZE as f64, || {
+        plan.power_spectrum(&frame, &mut scratch, &mut power)
+    });
+}

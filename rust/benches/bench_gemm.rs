@@ -1,0 +1,85 @@
+//! E1 — the paper's §3.1 efficiency claim at the kernel level: integer
+//! (u8·u8→i32) GEMM vs f32 GEMM, across the matrix shapes of the Table-1
+//! model family plus square sizes, and across the kernel ladder
+//! (scalar → unrolled → AVX2).
+//!
+//! Reported as MACs/s; the "speedup" lines are what EXPERIMENTS.md §E1
+//! quotes.  Run with `cargo bench --bench bench_gemm`.
+
+use quantasr::quant::gemm::{fgemm, qgemm, FMatrix, Kernel, QScratch};
+use quantasr::quant::{Granularity, QMatrix};
+use quantasr::util::bench::Bench;
+use quantasr::util::rng::Xoshiro256;
+
+fn randv(n: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+    let mut v = vec![0f32; n];
+    rng.fill_normal(&mut v);
+    v
+}
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Xoshiro256::new(0xE1);
+    println!("== bench_gemm: integer vs float GEMM (E1) ==");
+    println!("host AVX2: {}", std::arch::is_x86_feature_detected!("avx2"));
+
+    // (batch, in, out): LSTM gate matmuls of the Table-1 grid + squares.
+    let shapes = [
+        (1usize, 64usize, 120usize),   // 4x30 wx (stream)
+        (1, 50, 200),                  // 5x50 wh
+        (8, 64, 200),                  // batched serving
+        (8, 50, 200),
+        (1, 256, 256),
+        (8, 256, 256),
+        (8, 512, 512),
+        (1, 1024, 1024),
+    ];
+    for (batch, k, n) in shapes {
+        let x = randv(batch * k, &mut rng);
+        let wf = randv(k * n, &mut rng);
+        let bias = randv(n, &mut rng);
+        let qm = QMatrix::from_f32_math_layout(&wf, k, n, Granularity::PerMatrix);
+        let fm = FMatrix::from_math_layout(&wf, k, n);
+        let macs = (batch * k * n) as f64;
+        let mut y = vec![0f32; batch * n];
+        let mut scratch = QScratch::default();
+
+        let m_f32 = b.run_with_items(
+            &format!("f32 gemm        {batch}x{k}x{n}"),
+            macs,
+            || fgemm(&x, batch, &fm, Some(&bias), &mut y, false),
+        );
+        let m_scalar = b.run_with_items(
+            &format!("u8 gemm scalar  {batch}x{k}x{n}"),
+            macs,
+            || qgemm(&x, batch, &qm, Some(&bias), &mut y, &mut scratch, Kernel::Scalar, false),
+        );
+        let m_unroll = b.run_with_items(
+            &format!("u8 gemm unroll  {batch}x{k}x{n}"),
+            macs,
+            || qgemm(&x, batch, &qm, Some(&bias), &mut y, &mut scratch, Kernel::Unrolled, false),
+        );
+        let m_best = b.run_with_items(
+            &format!("u8 gemm auto    {batch}x{k}x{n}"),
+            macs,
+            || qgemm(&x, batch, &qm, Some(&bias), &mut y, &mut scratch, Kernel::Auto, false),
+        );
+        println!(
+            "  → int8 speedup vs f32: scalar {:.2}×  unrolled {:.2}×  auto {:.2}×\n",
+            m_f32.mean_ns / m_scalar.mean_ns,
+            m_f32.mean_ns / m_unroll.mean_ns,
+            m_f32.mean_ns / m_best.mean_ns,
+        );
+    }
+
+    // Memory footprint comparison (the 4× claim).
+    let wf = randv(512 * 512, &mut rng);
+    let qm = QMatrix::from_f32_math_layout(&wf, 512, 512, Granularity::PerMatrix);
+    let fm = FMatrix::from_math_layout(&wf, 512, 512);
+    println!(
+        "storage 512×512: f32 {} KB vs u8 {} KB ({:.2}× smaller)",
+        fm.storage_bytes() / 1024,
+        qm.storage_bytes() / 1024,
+        fm.storage_bytes() as f64 / qm.storage_bytes() as f64
+    );
+}

@@ -1,0 +1,71 @@
+//! E1 — LSTM(P) layer step: float vs quantized execution across the
+//! Table-1 architecture family and batch sizes.
+
+use quantasr::io::model_fmt::Tensor;
+use quantasr::nn::linear::Linear;
+use quantasr::nn::lstm::{LstmLayer, LstmScratch};
+use quantasr::quant::gemm::Kernel;
+use quantasr::util::bench::Bench;
+use quantasr::util::rng::Xoshiro256;
+
+fn linear(i: usize, o: usize, rng: &mut Xoshiro256) -> Linear {
+    let mut data = vec![0f32; i * o];
+    rng.fill_normal(&mut data);
+    for v in data.iter_mut() {
+        *v *= (1.0 / i as f32).sqrt();
+    }
+    Linear::from_tensor(&Tensor::F32 { shape: vec![i, o], data }).unwrap()
+}
+
+fn layer(in_dim: usize, n: usize, p: Option<usize>, rng: &mut Xoshiro256) -> LstmLayer {
+    LstmLayer {
+        wx: linear(in_dim, 4 * n, rng),
+        wh: linear(p.unwrap_or(n), 4 * n, rng),
+        bias: vec![0.0; 4 * n],
+        wp: p.map(|pp| linear(n, pp, rng)),
+        cell_dim: n,
+    }
+}
+
+fn quantize(l: &LstmLayer) -> LstmLayer {
+    LstmLayer {
+        wx: l.wx.quantize_now(),
+        wh: l.wh.quantize_now(),
+        bias: l.bias.clone(),
+        wp: l.wp.as_ref().map(Linear::quantize_now),
+        cell_dim: l.cell_dim,
+    }
+}
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Xoshiro256::new(0x15F);
+    println!("== bench_lstm: LSTMP step float vs int8 (E1) ==");
+
+    // (name, N, P) from the Table-1 grid (input dim 64 as in the models).
+    let archs: &[(&str, usize, Option<usize>)] = &[
+        ("N=30", 30, None),
+        ("N=50", 50, None),
+        ("N=50,P=20", 50, Some(20)),
+        ("N=200", 200, None),
+        ("N=500,P=200", 500, Some(200)),
+    ];
+    for &(name, n, p) in archs {
+        for batch in [1usize, 8] {
+            let lf = layer(64, n, p, &mut rng);
+            let lq = quantize(&lf);
+            let mut x = vec![0f32; batch * 64];
+            rng.fill_normal(&mut x);
+            let mut st_f = lf.zero_state(batch);
+            let mut st_q = lq.zero_state(batch);
+            let mut s = LstmScratch::default();
+            let m_f = b.run_with_items(&format!("lstm f32  {name} b{batch}"), batch as f64, || {
+                lf.step(&x, batch, &mut st_f, &mut s, Kernel::Auto)
+            });
+            let m_q = b.run_with_items(&format!("lstm int8 {name} b{batch}"), batch as f64, || {
+                lq.step(&x, batch, &mut st_q, &mut s, Kernel::Auto)
+            });
+            println!("  → int8 speedup {:.2}×\n", m_f.mean_ns / m_q.mean_ns);
+        }
+    }
+}

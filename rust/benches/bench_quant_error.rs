@@ -1,0 +1,79 @@
+//! E2/E3 — quantization quality + cost benches:
+//! quantize/recover throughput, the rounding-consistency (bias) ablation,
+//! and the granularity sweep error/storage trade-off.
+
+use quantasr::quant::error::{dot_bias_experiment, granularity_sweep, stats_consistent, stats_naive};
+use quantasr::quant::scheme::QuantParams;
+use quantasr::util::bench::Bench;
+use quantasr::util::rng::Xoshiro256;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Xoshiro256::new(0xE23);
+
+    println!("== bench_quant_error: quantize/recover throughput ==");
+    for n in [4096usize, 65536, 1 << 20] {
+        let mut v = vec![0f32; n];
+        rng.fill_normal(&mut v);
+        let p = QuantParams::from_slice(&v);
+        let mut q = vec![0u8; n];
+        let mut r = vec![0f32; n];
+        b.run_with_items(&format!("quantize eq.2   n={n}"), n as f64, || {
+            p.quantize_slice(&v, &mut q)
+        });
+        b.run_with_items(&format!("recover  eq.3   n={n}"), n as f64, || {
+            p.recover_slice(&q, &mut r)
+        });
+        b.run_with_items(&format!("derive params   n={n}"), n as f64, || {
+            QuantParams::from_slice(&v)
+        });
+    }
+
+    println!("\n== E2: bias of consistent vs naive scheme (N(0,1) values) ==");
+    println!("{:<10} {:>13} {:>11} {:>13} {:>11}", "n", "bias(eq2/3)", "rms", "bias(naive)", "rms");
+    for n in [1024usize, 16384, 262144] {
+        let mut v = vec![0f32; n];
+        rng.fill_normal(&mut v);
+        let c = stats_consistent(&v);
+        let na = stats_naive(&v);
+        println!(
+            "{n:<10} {:>13.3e} {:>11.3e} {:>13.3e} {:>11.3e}",
+            c.bias, c.rms, na.bias, na.rms
+        );
+    }
+    println!("\ndot-product |error| (mean over 300 trials):");
+    for k in [50usize, 200, 800] {
+        let (mut cs, mut ns) = (0.0, 0.0);
+        for _ in 0..300 {
+            let mut x = vec![0f32; k];
+            let mut w = vec![0f32; k];
+            rng.fill_normal(&mut x);
+            rng.fill_normal(&mut w);
+            let (c, na) = dot_bias_experiment(&x, &w);
+            cs += c;
+            ns += na;
+        }
+        println!(
+            "  k={k:<5} consistent {:.4}  naive {:.4}  ({:.1}× worse)",
+            cs / 300.0,
+            ns / 300.0,
+            ns / cs.max(1e-12)
+        );
+    }
+
+    println!("\n== E3: granularity sweep (512×512 heterogeneous matrix) ==");
+    // Rows with 10× magnitude spread — the case finer granularity helps.
+    let (in_dim, out_dim) = (512usize, 512usize);
+    let mut w = vec![0f32; in_dim * out_dim];
+    rng.fill_normal(&mut w);
+    for o in 0..out_dim {
+        let gain = 0.2 + 3.0 * (o as f32 / out_dim as f32);
+        for i in 0..in_dim {
+            w[i * out_dim + o] *= gain;
+        }
+    }
+    println!("{:<22} {:>12} {:>12}", "granularity", "rms err", "KB");
+    for (name, rms, bytes) in granularity_sweep(&w, in_dim, out_dim) {
+        println!("{name:<22} {rms:>12.3e} {:>12}", bytes / 1024);
+    }
+}

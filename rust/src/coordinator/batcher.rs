@@ -1,0 +1,124 @@
+//! Dynamic-batching flush policy.
+//!
+//! The acoustic-model worker asks, each tick: *given which streams have a
+//! frame ready and how long the oldest has waited, do I run a batch now or
+//! wait for more?*  Policy (vLLM-router-ish, scaled to RNN streaming):
+//!
+//! - flush immediately when `ready ≥ max_batch`;
+//! - otherwise flush when the oldest ready frame has waited ≥ `deadline`;
+//! - otherwise wait (the worker parks on a condvar with a timeout).
+//!
+//! Pure decision logic — no clocks or locks — so it is property-testable.
+
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum streams per batched step.
+    pub max_batch: usize,
+    /// Longest a ready frame may wait for co-riders.
+    pub deadline: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, deadline: Duration::from_millis(5) }
+    }
+}
+
+/// The decision for the current tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Run a batch over (up to max_batch) ready streams now.
+    Flush,
+    /// Park for at most this long, then re-evaluate.
+    Wait(Duration),
+    /// Nothing ready and nothing pending — park until woken.
+    Idle,
+}
+
+impl BatchPolicy {
+    /// `ready` = number of streams with a frame queued;
+    /// `oldest_wait` = how long the longest-queued frame has waited.
+    pub fn decide(&self, ready: usize, oldest_wait: Duration) -> Decision {
+        if ready == 0 {
+            return Decision::Idle;
+        }
+        if ready >= self.max_batch || oldest_wait >= self.deadline {
+            return Decision::Flush;
+        }
+        Decision::Wait(self.deadline - oldest_wait)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let p = BatchPolicy { max_batch: 4, deadline: Duration::from_millis(10) };
+        assert_eq!(p.decide(4, Duration::ZERO), Decision::Flush);
+        assert_eq!(p.decide(9, Duration::ZERO), Decision::Flush);
+    }
+
+    #[test]
+    fn deadline_forces_flush() {
+        let p = BatchPolicy { max_batch: 8, deadline: Duration::from_millis(5) };
+        assert_eq!(p.decide(1, Duration::from_millis(5)), Decision::Flush);
+        assert_eq!(p.decide(1, Duration::from_millis(50)), Decision::Flush);
+    }
+
+    #[test]
+    fn partial_batch_waits_out_remaining_deadline() {
+        let p = BatchPolicy { max_batch: 8, deadline: Duration::from_millis(10) };
+        match p.decide(3, Duration::from_millis(4)) {
+            Decision::Wait(d) => assert_eq!(d, Duration::from_millis(6)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_is_idle() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.decide(0, Duration::ZERO), Decision::Idle);
+        assert_eq!(p.decide(0, Duration::from_secs(1)), Decision::Idle);
+    }
+
+    #[test]
+    fn decision_is_monotone_in_ready_and_wait() {
+        // If (ready, wait) flushes, any (ready+, wait+) must also flush.
+        forall("batcher monotone", 200, 0xBA7C, |g: &mut Gen| {
+            let p = BatchPolicy {
+                max_batch: g.usize_in(1, 16),
+                deadline: Duration::from_micros(g.usize_in(0, 20_000) as u64),
+            };
+            let ready = g.usize_in(0, 20);
+            let wait = Duration::from_micros(g.usize_in(0, 30_000) as u64);
+            if p.decide(ready, wait) == Decision::Flush {
+                assert_eq!(p.decide(ready + 1, wait), Decision::Flush);
+                assert_eq!(
+                    p.decide(ready, wait + Duration::from_millis(1)),
+                    Decision::Flush
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn wait_never_exceeds_deadline() {
+        forall("batcher wait bound", 200, 0xBA7D, |g: &mut Gen| {
+            let p = BatchPolicy {
+                max_batch: g.usize_in(2, 16),
+                deadline: Duration::from_micros(g.usize_in(1, 20_000) as u64),
+            };
+            let ready = g.usize_in(1, p.max_batch - 1);
+            let wait = Duration::from_micros(g.usize_in(0, 20_000) as u64);
+            if let Decision::Wait(d) = p.decide(ready, wait) {
+                assert!(d <= p.deadline);
+                assert!(wait + d >= p.deadline);
+            }
+        });
+    }
+}

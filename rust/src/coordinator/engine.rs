@@ -1,0 +1,421 @@
+//! The serving engine: streams in, batched acoustic-model steps, final
+//! lexicon+LM decodes out.
+//!
+//! Thread topology (std threads; the image has no tokio):
+//!
+//! ```text
+//! callers ──push_audio──▶ per-stream Frontend ──▶ pending frame queues
+//!                                                (bounded; backpressure)
+//! AM worker ── BatchPolicy ──▶ pack states ▶ model.step(batch) ▶ scatter
+//! decode workers ◀── finished streams' posteriors ──▶ FinalResult channel
+//! ```
+//!
+//! The AM worker copies each participating stream's recurrent state into a
+//! contiguous batch `ModelState`, runs one step, and copies states back —
+//! the gather/scatter is O(batch·state) floats and is dwarfed by the GEMMs
+//! (measured in `bench_e2e`).  Decoding (CTC beam + LM rescore) is heavier
+//! and utterance-final, so it runs on its own worker pool.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::batcher::{BatchPolicy, Decision};
+use crate::coordinator::metrics::Metrics;
+use crate::decoder::Decoder;
+use crate::frontend::{spec, Frontend};
+use crate::nn::{AcousticModel, ModelState};
+
+/// Engine configuration.
+#[derive(Clone)]
+pub struct EngineConfig {
+    pub policy: BatchPolicy,
+    pub decode_workers: usize,
+    /// Per-stream pending-frame cap (backpressure bound).
+    pub max_pending_frames: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: BatchPolicy::default(),
+            decode_workers: 2,
+            max_pending_frames: 256,
+        }
+    }
+}
+
+/// Final recognition result for one stream.
+#[derive(Clone, Debug)]
+pub struct FinalResult {
+    pub stream_id: u64,
+    pub words: Vec<u32>,
+    /// Greedy phone sequence (diagnostic / LER).
+    pub phones: Vec<u32>,
+    pub num_frames: usize,
+    /// finish() called → result ready.
+    pub finalize_latency: Duration,
+}
+
+struct StreamSlot {
+    frontend: Frontend,
+    /// Feature frames awaiting the AM, flattened FEAT_DIM each.
+    pending: VecDeque<Vec<f32>>,
+    oldest_enqueue: Option<Instant>,
+    /// Accumulated log-posteriors [frames_done, num_labels].
+    posteriors: Vec<f32>,
+    frames_done: usize,
+    state: ModelState,
+    finished: bool,
+    finish_time: Option<Instant>,
+    result_tx: Sender<FinalResult>,
+}
+
+struct DecodeJob {
+    stream_id: u64,
+    posteriors: Vec<f32>,
+    num_frames: usize,
+    finish_time: Instant,
+    result_tx: Sender<FinalResult>,
+}
+
+struct Inner {
+    streams: HashMap<u64, StreamSlot>,
+    next_id: u64,
+    decode_queue: VecDeque<DecodeJob>,
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    /// Wakes the AM worker (new frames / finished streams).
+    work_cv: Condvar,
+    /// Wakes decode workers.
+    decode_cv: Condvar,
+    /// Wakes producers blocked on backpressure.
+    space_cv: Condvar,
+    metrics: Metrics,
+    config: EngineConfig,
+    shutdown: AtomicBool,
+}
+
+/// The streaming serving engine.
+pub struct Engine {
+    model: Arc<AcousticModel>,
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    pub fn start(model: Arc<AcousticModel>, decoder: Arc<Decoder>, config: EngineConfig) -> Self {
+        let shared = Arc::new(Shared {
+            inner: Mutex::new(Inner {
+                streams: HashMap::new(),
+                next_id: 0,
+                decode_queue: VecDeque::new(),
+            }),
+            work_cv: Condvar::new(),
+            decode_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            metrics: Metrics::default(),
+            config,
+            shutdown: AtomicBool::new(false),
+        });
+        let mut workers = Vec::new();
+        {
+            let s = shared.clone();
+            let m = model.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name("am-worker".into())
+                    .spawn(move || am_worker(s, m))
+                    .expect("spawn am worker"),
+            );
+        }
+        for i in 0..shared.config.decode_workers {
+            let s = shared.clone();
+            let d = decoder.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("decode-{i}"))
+                    .spawn(move || decode_worker(s, d))
+                    .expect("spawn decode worker"),
+            );
+        }
+        Engine { model, shared, workers }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.shared.metrics
+    }
+
+    /// Open a new stream; returns its id and the final-result receiver.
+    pub fn open_stream(&self) -> (u64, Receiver<FinalResult>) {
+        let (tx, rx) = channel();
+        let mut inner = self.shared.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.streams.insert(
+            id,
+            StreamSlot {
+                frontend: Frontend::new(),
+                pending: VecDeque::new(),
+                oldest_enqueue: None,
+                posteriors: Vec::new(),
+                frames_done: 0,
+                state: self.model.new_state(1),
+                finished: false,
+                finish_time: None,
+                result_tx: tx,
+            },
+        );
+        (id, rx)
+    }
+
+    /// Push PCM samples (blocks under backpressure).
+    pub fn push_audio(&self, id: u64, pcm: &[f32]) -> Result<()> {
+        self.shared.metrics.add_audio(pcm.len() as f64 / spec::SAMPLE_RATE as f64);
+        let mut frames = Vec::new();
+        {
+            let mut inner = self.shared.inner.lock().unwrap();
+            let slot = match inner.streams.get_mut(&id) {
+                Some(s) => s,
+                None => bail!("unknown stream {id}"),
+            };
+            if slot.finished {
+                bail!("stream {id} already finished");
+            }
+            slot.frontend.push(pcm, &mut frames);
+        }
+        self.push_frames(id, &frames)
+    }
+
+    /// Push pre-computed feature frames (len = k·FEAT_DIM).
+    pub fn push_frames(&self, id: u64, frames: &[f32]) -> Result<()> {
+        let d = spec::FEAT_DIM;
+        assert_eq!(frames.len() % d, 0);
+        let mut offset = 0;
+        while offset < frames.len() {
+            let mut inner = self.shared.inner.lock().unwrap();
+            // backpressure: wait for queue space
+            loop {
+                let slot = match inner.streams.get(&id) {
+                    Some(s) => s,
+                    None => bail!("unknown stream {id}"),
+                };
+                if slot.pending.len() < self.shared.config.max_pending_frames {
+                    break;
+                }
+                inner = self.shared.space_cv.wait(inner).unwrap();
+            }
+            let cap = self.shared.config.max_pending_frames;
+            let slot = inner.streams.get_mut(&id).unwrap();
+            let now = Instant::now();
+            while offset < frames.len() && slot.pending.len() < cap {
+                slot.pending.push_back(frames[offset..offset + d].to_vec());
+                offset += d;
+            }
+            slot.oldest_enqueue.get_or_insert(now);
+            drop(inner);
+            self.shared.work_cv.notify_all();
+        }
+        Ok(())
+    }
+
+    /// Signal end of audio; the final decode is delivered on the stream's
+    /// receiver once all pending frames are processed.
+    pub fn finish_stream(&self, id: u64) -> Result<()> {
+        let mut inner = self.shared.inner.lock().unwrap();
+        let slot = match inner.streams.get_mut(&id) {
+            Some(s) => s,
+            None => bail!("unknown stream {id}"),
+        };
+        slot.finished = true;
+        slot.finish_time = Some(Instant::now());
+        drop(inner);
+        self.shared.work_cv.notify_all();
+        Ok(())
+    }
+
+    /// Convenience: run one utterance synchronously through the engine.
+    pub fn recognize(&self, pcm: &[f32]) -> Result<FinalResult> {
+        let (id, rx) = self.open_stream();
+        self.push_audio(id, pcm)?;
+        self.finish_stream(id)?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work_cv.notify_all();
+        self.shared.decode_cv.notify_all();
+        self.shared.space_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work_cv.notify_all();
+        self.shared.decode_cv.notify_all();
+        self.shared.space_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn am_worker(s: Arc<Shared>, model: Arc<AcousticModel>) {
+    let labels = model.num_labels();
+    let d = model.input_dim();
+    // Reusable batch buffers sized to max_batch.  Per-batch states are
+    // rebuilt each flush (cache of states per batch size; see perf pass).
+    let max_b = s.config.policy.max_batch;
+    let mut state_cache: Vec<Option<ModelState>> = (0..=max_b).map(|_| None).collect();
+    let mut xbuf = vec![0f32; max_b * d];
+    let mut ybuf = vec![0f32; max_b * labels];
+
+    loop {
+        if s.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut inner = s.inner.lock().unwrap();
+        // Streams can finish *after* their last frame was computed (the
+        // finish() raced the final batch) or with no audio at all — drain
+        // them to the decode queue every tick, before the policy decision.
+        drain_finished(&mut inner, &s);
+        // Evaluate policy.
+        let now = Instant::now();
+        let mut ready: Vec<(u64, Duration)> = inner
+            .streams
+            .iter()
+            .filter(|(_, sl)| !sl.pending.is_empty())
+            .map(|(&id, sl)| {
+                (id, sl.oldest_enqueue.map(|t| now - t).unwrap_or_default())
+            })
+            .collect();
+        ready.sort_by(|a, b| b.1.cmp(&a.1)); // oldest first
+        let oldest = ready.first().map(|r| r.1).unwrap_or_default();
+        match s.config.policy.decide(ready.len(), oldest) {
+            Decision::Idle => {
+                let (guard, _t) = s
+                    .work_cv
+                    .wait_timeout(inner, Duration::from_millis(20))
+                    .unwrap();
+                drop(guard);
+                continue;
+            }
+            Decision::Wait(d) => {
+                let (guard, _t) = s.work_cv.wait_timeout(inner, d).unwrap();
+                drop(guard);
+                continue;
+            }
+            Decision::Flush => {}
+        }
+        // Assemble the batch: pop one frame per ready stream (oldest first).
+        let batch_ids: Vec<u64> =
+            ready.iter().take(max_b).map(|&(id, _)| id).collect();
+        let b = batch_ids.len();
+        let mut batch_state = state_cache[b]
+            .take()
+            .unwrap_or_else(|| model.new_state(b));
+        let mut enqueue_times = Vec::with_capacity(b);
+        for (slot_idx, &id) in batch_ids.iter().enumerate() {
+            let slot = inner.streams.get_mut(&id).unwrap();
+            let frame = slot.pending.pop_front().unwrap();
+            xbuf[slot_idx * d..(slot_idx + 1) * d].copy_from_slice(&frame);
+            enqueue_times.push(slot.oldest_enqueue);
+            slot.oldest_enqueue =
+                if slot.pending.is_empty() { None } else { Some(now) };
+            batch_state.copy_stream_from(&model, slot_idx, &slot.state, 0);
+        }
+        drop(inner);
+        s.space_cv.notify_all();
+
+        // Batched AM step (lock-free; states are private copies).
+        let t0 = Instant::now();
+        model.step(&xbuf[..b * d], &mut batch_state, &mut ybuf[..b * labels]);
+        let dt = t0.elapsed();
+        s.metrics.add_am_compute(dt.as_secs_f64(), b as u64);
+        s.metrics.batch_size.record(b as f64);
+        for t in &enqueue_times {
+            if let Some(t0q) = t {
+                s.metrics.frame_latency.record_duration(now - *t0q + dt);
+            }
+        }
+
+        // Scatter results back; queue decodes for drained finished streams.
+        let mut inner = s.inner.lock().unwrap();
+        for (slot_idx, &id) in batch_ids.iter().enumerate() {
+            if let Some(slot) = inner.streams.get_mut(&id) {
+                slot.state.copy_stream_from(&model, 0, &batch_state, slot_idx);
+                slot.posteriors
+                    .extend_from_slice(&ybuf[slot_idx * labels..(slot_idx + 1) * labels]);
+                slot.frames_done += 1;
+            }
+        }
+        state_cache[b] = Some(batch_state);
+        drain_finished(&mut inner, &s);
+    }
+}
+
+/// Move every (finished && drained) stream to the decode queue.
+fn drain_finished(inner: &mut Inner, s: &Arc<Shared>) {
+    let done: Vec<u64> = inner
+        .streams
+        .iter()
+        .filter(|(_, sl)| sl.finished && sl.pending.is_empty())
+        .map(|(&id, _)| id)
+        .collect();
+    for id in done {
+        let slot = inner.streams.remove(&id).unwrap();
+        inner.decode_queue.push_back(DecodeJob {
+            stream_id: id,
+            posteriors: slot.posteriors,
+            num_frames: slot.frames_done,
+            finish_time: slot.finish_time.unwrap_or_else(Instant::now),
+            result_tx: slot.result_tx,
+        });
+        s.decode_cv.notify_one();
+    }
+}
+
+fn decode_worker(s: Arc<Shared>, decoder: Arc<Decoder>) {
+    loop {
+        let job = {
+            let mut inner = s.inner.lock().unwrap();
+            loop {
+                if s.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(job) = inner.decode_queue.pop_front() {
+                    break job;
+                }
+                let (guard, _t) = s
+                    .decode_cv
+                    .wait_timeout(inner, Duration::from_millis(20))
+                    .unwrap();
+                inner = guard;
+            }
+        };
+        let labels = job.posteriors.len() / job.num_frames.max(1);
+        let hyp = decoder.decode(&job.posteriors, labels.max(1));
+        let phones = crate::decoder::ctc::greedy(&job.posteriors, labels.max(1));
+        s.metrics.add_utterance();
+        let latency = job.finish_time.elapsed();
+        s.metrics.finalize_latency.record_duration(latency);
+        let _ = job.result_tx.send(FinalResult {
+            stream_id: job.stream_id,
+            words: hyp.words,
+            phones,
+            num_frames: job.num_frames,
+            finalize_latency: latency,
+        });
+    }
+}

@@ -1,0 +1,161 @@
+//! Serving metrics: latency percentiles, throughput, real-time factor.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Reservoir-free exact histogram (serving runs are small enough to keep
+/// every sample; sorts on read).
+#[derive(Default)]
+pub struct Histogram {
+    samples: Mutex<Vec<f64>>,
+}
+
+impl Histogram {
+    pub fn record(&self, v: f64) {
+        self.samples.lock().unwrap().push(v);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_secs_f64() * 1e3); // ms
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        let mut s = self.samples.lock().unwrap().clone();
+        if s.is_empty() {
+            return HistSummary::default();
+        }
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let pct = |p: f64| s[((n as f64 * p) as usize).min(n - 1)];
+        HistSummary {
+            count: n,
+            mean: s.iter().sum::<f64>() / n as f64,
+            p50: pct(0.50),
+            p90: pct(0.90),
+            p99: pct(0.99),
+            max: s[n - 1],
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistSummary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl HistSummary {
+    pub fn fmt_ms(&self, name: &str) -> String {
+        format!(
+            "{name:<22} n={:<5} mean={:7.2}ms p50={:7.2}ms p90={:7.2}ms p99={:7.2}ms max={:7.2}ms",
+            self.count, self.mean, self.p50, self.p90, self.p99, self.max
+        )
+    }
+}
+
+/// Engine-wide counters + histograms.
+#[derive(Default)]
+pub struct Metrics {
+    /// end-to-end: stream finish requested → final result ready (ms)
+    pub finalize_latency: Histogram,
+    /// per-frame: frame ready → logits produced (ms)
+    pub frame_latency: Histogram,
+    /// batched-step batch sizes
+    pub batch_size: Histogram,
+    /// audio seconds processed
+    pub audio_seconds: Mutex<f64>,
+    /// wall seconds of AM compute
+    pub am_compute_seconds: Mutex<f64>,
+    pub frames_processed: Mutex<u64>,
+    pub utterances: Mutex<u64>,
+}
+
+impl Metrics {
+    pub fn add_audio(&self, secs: f64) {
+        *self.audio_seconds.lock().unwrap() += secs;
+    }
+
+    pub fn add_am_compute(&self, secs: f64, frames: u64) {
+        *self.am_compute_seconds.lock().unwrap() += secs;
+        *self.frames_processed.lock().unwrap() += frames;
+    }
+
+    pub fn add_utterance(&self) {
+        *self.utterances.lock().unwrap() += 1;
+    }
+
+    /// Real-time factor of the AM stage: compute seconds per audio second
+    /// (< 1 means faster than real time).
+    pub fn rtf(&self) -> f64 {
+        let audio = *self.audio_seconds.lock().unwrap();
+        let compute = *self.am_compute_seconds.lock().unwrap();
+        if audio <= 0.0 {
+            return 0.0;
+        }
+        compute / audio
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.finalize_latency.summary().fmt_ms("finalize_latency"));
+        out.push('\n');
+        out.push_str(&self.frame_latency.summary().fmt_ms("frame_latency"));
+        out.push('\n');
+        let bs = self.batch_size.summary();
+        out.push_str(&format!(
+            "batch_size             n={:<5} mean={:5.2}  p50={:4.0}  p99={:4.0}\n",
+            bs.count, bs.mean, bs.p50, bs.p99
+        ));
+        // Take each value before formatting: std::sync::Mutex is not
+        // reentrant, and rtf() locks two of these again.
+        let utts = *self.utterances.lock().unwrap();
+        let frames = *self.frames_processed.lock().unwrap();
+        let audio = *self.audio_seconds.lock().unwrap();
+        let compute = *self.am_compute_seconds.lock().unwrap();
+        let rtf = if audio > 0.0 { compute / audio } else { 0.0 };
+        out.push_str(&format!(
+            "utterances={utts}  frames={frames}  audio={audio:.1}s  \
+             am_compute={compute:.2}s  RTF={rtf:.4}\n",
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = Histogram::default();
+        for i in 0..100 {
+            h.record(i as f64);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 100);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+        assert_eq!(s.max, 99.0);
+        assert!((s.mean - 49.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::default();
+        let s = h.summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.max, 0.0);
+    }
+
+    #[test]
+    fn rtf_math() {
+        let m = Metrics::default();
+        m.add_audio(10.0);
+        m.add_am_compute(2.0, 500);
+        assert!((m.rtf() - 0.2).abs() < 1e-12);
+        assert!(m.report().contains("RTF=0.2000"));
+    }
+}

@@ -1,0 +1,22 @@
+//! The streaming ASR serving coordinator (L3).
+//!
+//! The paper targets *embedded* recognition — one utterance, lowest
+//! latency/power — but its quantized engine is exactly what a server-side
+//! deployment batches across streams.  This module provides both shapes:
+//! single-stream synchronous decoding (embedded, see [`crate::eval`]) and a
+//! thread-based streaming server with **cross-stream dynamic batching**:
+//! frames from concurrent streams are gathered each tick into one batched
+//! acoustic-model step (deadline-bounded), then scattered back to
+//! per-stream decoders.
+//!
+//! - [`batcher`] — the flush policy (pure logic, property-tested).
+//! - [`engine`]  — streams, state packing, workers, lifecycle.
+//! - [`metrics`] — latency/throughput instrumentation.
+//! - [`server`]  — length-prefixed TCP protocol + client helper.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use engine::{Engine, EngineConfig, FinalResult};

@@ -1,0 +1,175 @@
+//! TCP streaming protocol: one recognition stream per connection.
+//!
+//! Little-endian framing, client → server:
+//! ```text
+//! 'A' u32 n  f32×n     audio chunk (PCM at 8 kHz)
+//! 'E'                  end of audio
+//! ```
+//! server → client:
+//! ```text
+//! 'F' u32 n  u32×n  u32 m  u32×m  f32 latency_ms
+//!     final words, greedy phones, finalize latency
+//! ```
+//!
+//! A thread per connection feeds the shared [`Engine`] — batching happens
+//! across connections inside the engine, not per socket.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::engine::{Engine, FinalResult};
+
+/// Serve until `stop` is set.  Returns the bound local address via the
+/// callback (useful with port 0 in tests).
+pub fn serve(
+    engine: Arc<Engine>,
+    addr: &str,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    let mut handles = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let eng = engine.clone();
+                handles.push(std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(eng, stream) {
+                        eprintln!("connection error: {e:#}");
+                    }
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(engine: Arc<Engine>, mut sock: TcpStream) -> Result<()> {
+    sock.set_nodelay(true).ok();
+    let (id, rx) = engine.open_stream();
+    loop {
+        let mut tag = [0u8; 1];
+        if sock.read_exact(&mut tag).is_err() {
+            // peer vanished: finish what we have
+            engine.finish_stream(id)?;
+            let _ = rx.recv();
+            return Ok(());
+        }
+        match tag[0] {
+            b'A' => {
+                let n = read_u32(&mut sock)? as usize;
+                if n > 10_000_000 {
+                    bail!("oversized audio chunk ({n})");
+                }
+                let mut raw = vec![0u8; n * 4];
+                sock.read_exact(&mut raw)?;
+                let pcm: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                engine.push_audio(id, &pcm)?;
+            }
+            b'E' => {
+                engine.finish_stream(id)?;
+                let result = rx.recv()?;
+                write_final(&mut sock, &result)?;
+                return Ok(());
+            }
+            other => bail!("unknown message tag {other:#x}"),
+        }
+    }
+}
+
+fn write_final(sock: &mut TcpStream, r: &FinalResult) -> Result<()> {
+    let mut buf = Vec::with_capacity(16 + 4 * (r.words.len() + r.phones.len()));
+    buf.push(b'F');
+    buf.extend_from_slice(&(r.words.len() as u32).to_le_bytes());
+    for w in &r.words {
+        buf.extend_from_slice(&w.to_le_bytes());
+    }
+    buf.extend_from_slice(&(r.phones.len() as u32).to_le_bytes());
+    for p in &r.phones {
+        buf.extend_from_slice(&p.to_le_bytes());
+    }
+    buf.extend_from_slice(&((r.finalize_latency.as_secs_f64() * 1e3) as f32).to_le_bytes());
+    sock.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_u32(sock: &mut TcpStream) -> Result<u32> {
+    let mut b = [0u8; 4];
+    sock.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Blocking client for the protocol above (used by examples/benches).
+pub struct Client {
+    sock: TcpStream,
+}
+
+/// Client-side view of a final result.
+#[derive(Clone, Debug)]
+pub struct ClientResult {
+    pub words: Vec<u32>,
+    pub phones: Vec<u32>,
+    pub server_latency_ms: f32,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let sock = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        sock.set_nodelay(true).ok();
+        Ok(Client { sock })
+    }
+
+    pub fn send_audio(&mut self, pcm: &[f32]) -> Result<()> {
+        let mut buf = Vec::with_capacity(5 + pcm.len() * 4);
+        buf.push(b'A');
+        buf.extend_from_slice(&(pcm.len() as u32).to_le_bytes());
+        for v in pcm {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.sock.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// End the stream and read the final result.
+    pub fn finish(mut self) -> Result<ClientResult> {
+        self.sock.write_all(b"E")?;
+        let mut tag = [0u8; 1];
+        self.sock.read_exact(&mut tag)?;
+        if tag[0] != b'F' {
+            bail!("expected final frame, got {:#x}", tag[0]);
+        }
+        let n = read_u32(&mut self.sock)? as usize;
+        let mut words = Vec::with_capacity(n);
+        for _ in 0..n {
+            words.push(read_u32(&mut self.sock)?);
+        }
+        let m = read_u32(&mut self.sock)? as usize;
+        let mut phones = Vec::with_capacity(m);
+        for _ in 0..m {
+            phones.push(read_u32(&mut self.sock)?);
+        }
+        let mut lat = [0u8; 4];
+        self.sock.read_exact(&mut lat)?;
+        Ok(ClientResult {
+            words,
+            phones,
+            server_latency_ms: f32::from_le_bytes(lat),
+        })
+    }
+}

@@ -1,0 +1,157 @@
+//! Phone-level CTC decoding: greedy best-path and prefix beam search
+//! (Hannun et al. 2014 style, log domain, no LM).
+
+use std::collections::HashMap;
+
+pub const BLANK: u32 = 0;
+const NEG_INF: f64 = -1e30;
+
+#[inline]
+fn logsumexp2(a: f64, b: f64) -> f64 {
+    if a < b {
+        b + (1.0 + (a - b).exp()).ln()
+    } else if a == NEG_INF {
+        NEG_INF
+    } else {
+        a + (1.0 + (b - a).exp()).ln()
+    }
+}
+
+/// Greedy best-path + collapse. `log_probs` is `[t, num_labels]` row-major.
+pub fn greedy(log_probs: &[f32], num_labels: usize) -> Vec<u32> {
+    let t = log_probs.len() / num_labels;
+    let mut out = Vec::new();
+    let mut prev = BLANK;
+    for i in 0..t {
+        let row = &log_probs[i * num_labels..(i + 1) * num_labels];
+        let best = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as u32;
+        if best != BLANK && best != prev {
+            out.push(best);
+        }
+        prev = best;
+    }
+    out
+}
+
+/// CTC prefix beam search over phones (no lexicon/LM).  Returns the best
+/// collapsed label sequence.
+pub fn prefix_beam(log_probs: &[f32], num_labels: usize, beam: usize) -> Vec<u32> {
+    let t = log_probs.len() / num_labels;
+    // prefix → (lp ending in blank, lp ending in non-blank)
+    let mut beams: HashMap<Vec<u32>, (f64, f64)> = HashMap::new();
+    beams.insert(Vec::new(), (0.0, NEG_INF));
+    for i in 0..t {
+        let row = &log_probs[i * num_labels..(i + 1) * num_labels];
+        let mut next: HashMap<Vec<u32>, (f64, f64)> = HashMap::new();
+        for (prefix, &(lb, lnb)) in &beams {
+            let total = logsumexp2(lb, lnb);
+            // 1) blank: prefix unchanged
+            {
+                let e = next.entry(prefix.clone()).or_insert((NEG_INF, NEG_INF));
+                e.0 = logsumexp2(e.0, total + row[BLANK as usize] as f64);
+            }
+            // 2) repeat last symbol: stays in the same prefix (non-blank)
+            if let Some(&last) = prefix.last() {
+                let e = next.entry(prefix.clone()).or_insert((NEG_INF, NEG_INF));
+                e.1 = logsumexp2(e.1, lnb + row[last as usize] as f64);
+            }
+            // 3) extend with symbol s
+            for s in 1..num_labels as u32 {
+                let p_s = row[s as usize] as f64;
+                if p_s < -14.0 {
+                    continue; // inaudible — prune early
+                }
+                let base = if Some(&s) == prefix.last() {
+                    lb // same symbol: only via the blank path
+                } else {
+                    total
+                };
+                if base <= NEG_INF {
+                    continue;
+                }
+                let mut ext = prefix.clone();
+                ext.push(s);
+                let e = next.entry(ext).or_insert((NEG_INF, NEG_INF));
+                e.1 = logsumexp2(e.1, base + p_s);
+            }
+        }
+        // prune to beam
+        let mut items: Vec<(Vec<u32>, (f64, f64))> = next.into_iter().collect();
+        items.sort_by(|a, b| {
+            logsumexp2(b.1 .0, b.1 .1).partial_cmp(&logsumexp2(a.1 .0, a.1 .1)).unwrap()
+        });
+        items.truncate(beam);
+        beams = items.into_iter().collect();
+    }
+    beams
+        .into_iter()
+        .max_by(|a, b| {
+            logsumexp2(a.1 .0, a.1 .1).partial_cmp(&logsumexp2(b.1 .0, b.1 .1)).unwrap()
+        })
+        .map(|(p, _)| p)
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// log-softmax a small [t, l] matrix of logits.
+    fn lsm(logits: &[f32], l: usize) -> Vec<f32> {
+        let mut out = logits.to_vec();
+        crate::nn::activation::log_softmax_rows(&mut out, logits.len() / l, l);
+        out
+    }
+
+    #[test]
+    fn greedy_collapses_repeats_and_blanks() {
+        // labels: 0=blank, seq of argmaxes: 1 1 0 2 2 0 1 → collapsed 1 2 1
+        let l = 3;
+        let mk = |id: usize| {
+            let mut r = vec![0.0f32; l];
+            r[id] = 5.0;
+            r
+        };
+        let rows: Vec<f32> =
+            [1, 1, 0, 2, 2, 0, 1].iter().flat_map(|&i| mk(i)).collect();
+        let lp = lsm(&rows, l);
+        assert_eq!(greedy(&lp, l), vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn beam_recovers_greedy_on_peaked_posteriors() {
+        let l = 4;
+        let mk = |id: usize| {
+            let mut r = vec![-3.0f32; l];
+            r[id] = 6.0;
+            r
+        };
+        let rows: Vec<f32> =
+            [1, 0, 2, 0, 3, 3].iter().flat_map(|&i| mk(i)).collect();
+        let lp = lsm(&rows, l);
+        assert_eq!(prefix_beam(&lp, l, 8), greedy(&lp, l));
+    }
+
+    #[test]
+    fn beam_beats_greedy_on_ambiguous_case() {
+        // Classic case: per-frame argmax is blank everywhere, but the
+        // aggregated non-blank mass wins.  p(blank)=0.6/0.6, p(1)=0.4/0.4:
+        // best path = [] with p 0.36; prefix [1] has p 0.4*0.6+0.6*0.4+0.4*0.4 = 0.64.
+        let l = 2;
+        let row = [0.6f32.ln(), 0.4f32.ln()];
+        let lp: Vec<f32> = [row, row].concat();
+        assert_eq!(greedy(&lp, l), Vec::<u32>::new());
+        assert_eq!(prefix_beam(&lp, l, 8), vec![1]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(greedy(&[], 3).is_empty());
+        assert!(prefix_beam(&[], 3, 4).is_empty());
+    }
+}

@@ -1,0 +1,197 @@
+//! Interpolated n-gram language model over word ids.
+//!
+//! Substitute for the paper's production LMs (§4: a 69.5K-n-gram first-pass
+//! LM + a larger 5-gram rescoring LM).  Trained on the synthetic text
+//! corpus with Jelinek–Mercer interpolation:
+//!
+//! ```text
+//! p(w | h) = λ·p_ML(w | h) + (1−λ)·p(w | shorter h)     (down to uniform)
+//! ```
+//!
+//! [`NGramLm::small`] builds the pruned first-pass bigram;
+//! [`NGramLm::large`] the trigram rescorer.
+
+use std::collections::HashMap;
+
+pub const BOS: u32 = u32::MAX; // sentence-start pseudo-word
+
+/// Interpolated n-gram LM.
+pub struct NGramLm {
+    pub order: usize,
+    pub vocab: usize,
+    lambda: f64,
+    /// counts[k]: (k+1)-gram counts keyed by [context..., word]
+    counts: Vec<HashMap<Vec<u32>, u32>>,
+    /// context totals per level (sum over final word)
+    totals: Vec<HashMap<Vec<u32>, u32>>,
+}
+
+impl NGramLm {
+    /// Train an `order`-gram LM on sentences.  `prune_min` drops n-grams
+    /// (n ≥ 2) seen fewer times (the "small first-pass LM" knob).
+    pub fn train(
+        sentences: &[Vec<u32>],
+        order: usize,
+        vocab: usize,
+        lambda: f64,
+        prune_min: u32,
+    ) -> Self {
+        assert!(order >= 1);
+        let mut counts = vec![HashMap::new(); order];
+        let mut totals = vec![HashMap::new(); order];
+        for s in sentences {
+            let padded: Vec<u32> =
+                std::iter::repeat(BOS).take(order - 1).chain(s.iter().copied()).collect();
+            for i in (order - 1)..padded.len() {
+                for k in 0..order {
+                    let ctx_start = i - k;
+                    let key: Vec<u32> = padded[ctx_start..=i].to_vec();
+                    *counts[k].entry(key).or_insert(0) += 1;
+                    let ctx: Vec<u32> = padded[ctx_start..i].to_vec();
+                    *totals[k].entry(ctx).or_insert(0) += 1;
+                }
+            }
+        }
+        // prune rare higher-order n-grams
+        for k in 1..order {
+            let removed: Vec<Vec<u32>> = counts[k]
+                .iter()
+                .filter(|(_, &c)| c < prune_min)
+                .map(|(k2, _)| k2.clone())
+                .collect();
+            for key in removed {
+                let c = counts[k].remove(&key).unwrap();
+                let ctx = key[..key.len() - 1].to_vec();
+                if let Some(t) = totals[k].get_mut(&ctx) {
+                    *t -= c.min(*t);
+                }
+            }
+        }
+        NGramLm { order, vocab, lambda, counts, totals }
+    }
+
+    /// Convenience: the small pruned first-pass bigram.
+    pub fn small(sentences: &[Vec<u32>], vocab: usize) -> Self {
+        Self::train(sentences, 2, vocab, 0.7, 3)
+    }
+
+    /// Convenience: the larger trigram rescoring LM.
+    pub fn large(sentences: &[Vec<u32>], vocab: usize) -> Self {
+        Self::train(sentences, 3, vocab, 0.8, 1)
+    }
+
+    /// log p(word | history).  `history` = previously emitted words
+    /// (most recent last); BOS padding is implicit.
+    pub fn log_prob(&self, history: &[u32], word: u32) -> f64 {
+        let mut ctx: Vec<u32> = std::iter::repeat(BOS)
+            .take(self.order.saturating_sub(1 + history.len()))
+            .chain(history.iter().copied())
+            .collect();
+        if ctx.len() > self.order - 1 {
+            ctx = ctx[ctx.len() - (self.order - 1)..].to_vec();
+        }
+        self.interp(&ctx, word).ln()
+    }
+
+    fn interp(&self, ctx: &[u32], word: u32) -> f64 {
+        // level k uses the last k context words
+        let uniform = 1.0 / self.vocab as f64;
+        let mut p = uniform;
+        for k in 0..self.order {
+            if k > ctx.len() {
+                break;
+            }
+            let c_start = ctx.len() - k;
+            let mut key: Vec<u32> = ctx[c_start..].to_vec();
+            key.push(word);
+            let num = *self.counts[k].get(&key).unwrap_or(&0) as f64;
+            let den = *self.totals[k].get(&ctx[c_start..].to_vec()).unwrap_or(&0) as f64;
+            if den > 0.0 {
+                let ml = num / den;
+                p = self.lambda * ml + (1.0 - self.lambda) * p;
+            }
+        }
+        p.max(1e-12)
+    }
+
+    /// Number of stored n-grams (model size metric).
+    pub fn num_ngrams(&self) -> usize {
+        self.counts.iter().map(HashMap::len).sum()
+    }
+
+    /// Per-word perplexity on held-out sentences.
+    pub fn perplexity(&self, sentences: &[Vec<u32>]) -> f64 {
+        let mut lp = 0.0;
+        let mut n = 0usize;
+        for s in sentences {
+            let mut hist: Vec<u32> = Vec::new();
+            for &w in s {
+                lp += self.log_prob(&hist, w);
+                hist.push(w);
+                n += 1;
+            }
+        }
+        (-lp / n.max(1) as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dataset::text_corpus;
+    use crate::sim::World;
+
+    fn corpus(n: usize, seed: u64) -> Vec<Vec<u32>> {
+        text_corpus(n, seed, &World::new())
+    }
+
+    #[test]
+    fn probabilities_normalize() {
+        let c = corpus(400, 1);
+        let lm = NGramLm::train(&c, 2, 200, 0.7, 1);
+        for hist in [vec![], vec![3u32], vec![7, 11]] {
+            let total: f64 = (0..200u32).map(|w| lm.log_prob(&hist, w).exp()).sum();
+            assert!((total - 1.0).abs() < 1e-6, "hist {hist:?} total {total}");
+        }
+    }
+
+    #[test]
+    fn trained_lm_beats_uniform() {
+        let train = corpus(2000, 2);
+        let held = corpus(200, 3);
+        let lm = NGramLm::large(&train, 200);
+        let ppl = lm.perplexity(&held);
+        assert!(ppl < 170.0, "ppl {ppl} vs uniform 200");
+    }
+
+    #[test]
+    fn higher_order_helps() {
+        let train = corpus(3000, 4);
+        let held = corpus(300, 5);
+        let uni = NGramLm::train(&train, 1, 200, 0.9, 1);
+        let tri = NGramLm::train(&train, 3, 200, 0.8, 1);
+        assert!(
+            tri.perplexity(&held) < uni.perplexity(&held),
+            "tri {} vs uni {}",
+            tri.perplexity(&held),
+            uni.perplexity(&held)
+        );
+    }
+
+    #[test]
+    fn pruning_shrinks_model() {
+        let train = corpus(2000, 6);
+        let full = NGramLm::train(&train, 2, 200, 0.7, 1);
+        let pruned = NGramLm::train(&train, 2, 200, 0.7, 5);
+        assert!(pruned.num_ngrams() < full.num_ngrams());
+    }
+
+    #[test]
+    fn bos_context_matters() {
+        let train = corpus(2000, 7);
+        let lm = NGramLm::small(&train, 200);
+        // sentence-initial distribution is Zipf-heavy → word 0 should be
+        // much likelier than word 199 at BOS
+        assert!(lm.log_prob(&[], 0) > lm.log_prob(&[], 199));
+    }
+}

@@ -1,0 +1,20 @@
+//! Decoding stack: CTC posteriors → words.
+//!
+//! Mirrors the paper's §4 decoding setup at simulator scale: a lexicon
+//! transducer (here a phone-trie), a small first-pass n-gram LM, and
+//! on-the-fly rescoring with a larger LM.
+//!
+//! - [`wer`]    — Levenshtein alignment, WER/LER scoring.
+//! - [`lm`]     — interpolated n-gram language model (trained on the
+//!   synthetic text corpus).
+//! - [`trie`]   — lexicon prefix trie over phones.
+//! - [`ctc`]    — greedy + phone-level CTC prefix beam search.
+//! - [`search`] — word-level lexicon+LM CTC beam search with rescoring.
+
+pub mod ctc;
+pub mod lm;
+pub mod search;
+pub mod trie;
+pub mod wer;
+
+pub use search::{Decoder, DecoderConfig};

@@ -1,0 +1,371 @@
+//! Word-level CTC beam search: lexicon trie × first-pass LM, with
+//! on-the-fly rescoring by the large LM (paper §4's decoding setup).
+//!
+//! Time-synchronous prefix beam search where each hypothesis tracks its
+//! position in the lexicon trie.  Phone expansions are constrained to trie
+//! arcs; when an arc completes a word, a boundary hypothesis is spawned
+//! with the word emitted, the small (first-pass) LM score added to the
+//! pruning score, and the large-LM score accumulated on the side.  Final
+//! ranking uses the large LM — the on-the-fly rescoring pass.
+
+use std::collections::HashMap;
+
+use crate::decoder::lm::NGramLm;
+use crate::decoder::trie::LexTrie;
+
+const NEG_INF: f64 = -1e30;
+const BLANK: usize = 0;
+
+#[inline]
+fn lse(a: f64, b: f64) -> f64 {
+    if a < b {
+        b + (1.0 + (a - b).exp()).ln()
+    } else if a == NEG_INF {
+        NEG_INF
+    } else {
+        a + (1.0 + (b - a).exp()).ln()
+    }
+}
+
+/// Search hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DecoderConfig {
+    /// Max live hypotheses per frame.
+    pub beam: usize,
+    /// Weight of the small first-pass LM in the pruning score.
+    pub lm_weight_small: f64,
+    /// Weight of the large rescoring LM in the final score.
+    pub lm_weight_large: f64,
+    /// Per-word bonus (>0 fights deletion bias of LM-weighted search).
+    pub word_insertion_bonus: f64,
+    /// Skip phones with log-posterior below this (per frame).
+    pub phone_floor: f64,
+}
+
+impl Default for DecoderConfig {
+    fn default() -> Self {
+        DecoderConfig {
+            beam: 24,
+            lm_weight_small: 0.8,
+            lm_weight_large: 1.0,
+            word_insertion_bonus: 0.5,
+            phone_floor: -12.0,
+        }
+    }
+}
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct Key {
+    node: u32,
+    last: u32,
+    words: Vec<u32>,
+}
+
+#[derive(Clone)]
+struct Entry {
+    lb: f64,
+    lnb: f64,
+    lm_small: f64,
+    lm_large: f64,
+}
+
+impl Entry {
+    fn new() -> Self {
+        Entry { lb: NEG_INF, lnb: NEG_INF, lm_small: 0.0, lm_large: 0.0 }
+    }
+
+    fn acoustic(&self) -> f64 {
+        lse(self.lb, self.lnb)
+    }
+}
+
+/// The assembled decoder.
+pub struct Decoder {
+    pub trie: LexTrie,
+    pub lm_small: NGramLm,
+    pub lm_large: NGramLm,
+    pub config: DecoderConfig,
+}
+
+/// A decode result with score breakdown.
+#[derive(Clone, Debug, Default)]
+pub struct Hypothesis {
+    pub words: Vec<u32>,
+    pub acoustic: f64,
+    pub lm_small: f64,
+    pub lm_large: f64,
+}
+
+impl Decoder {
+    pub fn new(trie: LexTrie, lm_small: NGramLm, lm_large: NGramLm, config: DecoderConfig) -> Self {
+        Decoder { trie, lm_small, lm_large, config }
+    }
+
+    /// Decode `[t, num_labels]` log-posteriors into the best word sequence.
+    pub fn decode(&self, log_probs: &[f32], num_labels: usize) -> Hypothesis {
+        let beams = self.run_beams_impl(log_probs, num_labels);
+        let cfg = &self.config;
+        // Final: prefer complete hypotheses (trie at root); rescore with
+        // the large LM.
+        let score = |k: &Key, e: &Entry| {
+            e.acoustic()
+                + cfg.lm_weight_large * e.lm_large
+                + cfg.word_insertion_bonus * k.words.len() as f64
+        };
+        let best = beams
+            .iter()
+            .filter(|(k, _)| k.node == 0)
+            .max_by(|a, b| score(a.0, a.1).partial_cmp(&score(b.0, b.1)).unwrap())
+            .or_else(|| {
+                beams
+                    .iter()
+                    .max_by(|a, b| score(a.0, a.1).partial_cmp(&score(b.0, b.1)).unwrap())
+            });
+        match best {
+            Some((k, e)) => Hypothesis {
+                words: k.words.clone(),
+                acoustic: e.acoustic(),
+                lm_small: e.lm_small,
+                lm_large: e.lm_large,
+            },
+            None => Hypothesis::default(),
+        }
+    }
+
+    /// Time-synchronous beam propagation (the core of decode/decode_nbest).
+    fn run_beams_impl(&self, log_probs: &[f32], num_labels: usize) -> HashMap<Key, Entry> {
+        let cfg = &self.config;
+        let t = log_probs.len() / num_labels.max(1);
+        let mut beams: HashMap<Key, Entry> = HashMap::new();
+        beams.insert(
+            Key { node: 0, last: BLANK as u32, words: Vec::new() },
+            Entry { lb: 0.0, lnb: NEG_INF, lm_small: 0.0, lm_large: 0.0 },
+        );
+
+        for i in 0..t {
+            let row = &log_probs[i * num_labels..(i + 1) * num_labels];
+            let mut next: HashMap<Key, Entry> = HashMap::new();
+            for (key, e) in &beams {
+                let total = e.acoustic();
+                // 1) blank: state unchanged.
+                {
+                    let n = next.entry(key.clone()).or_insert_with(Entry::new);
+                    let v = total + row[BLANK] as f64;
+                    if v > n.lb {
+                        n.lm_small = e.lm_small;
+                        n.lm_large = e.lm_large;
+                    }
+                    n.lb = lse(n.lb, v);
+                }
+                // 2) repeat last emitted phone (stays in the same prefix).
+                if key.last != BLANK as u32 && e.lnb > NEG_INF {
+                    let n = next.entry(key.clone()).or_insert_with(Entry::new);
+                    let v = e.lnb + row[key.last as usize] as f64;
+                    if v > n.lnb {
+                        n.lm_small = e.lm_small;
+                        n.lm_large = e.lm_large;
+                    }
+                    n.lnb = lse(n.lnb, v);
+                }
+                // 3) extend along trie arcs.
+                for &(phone, child) in self.trie.exits(key.node) {
+                    let p_s = row[phone as usize] as f64;
+                    if p_s < cfg.phone_floor {
+                        continue;
+                    }
+                    let base = if phone == key.last { e.lb } else { total };
+                    if base <= NEG_INF {
+                        continue;
+                    }
+                    let v = base + p_s;
+                    // 3a) continue inside the word.
+                    let k_cont =
+                        Key { node: child, last: phone, words: key.words.clone() };
+                    {
+                        let n = next.entry(k_cont).or_insert_with(Entry::new);
+                        if v > n.lnb {
+                            n.lm_small = e.lm_small;
+                            n.lm_large = e.lm_large;
+                        }
+                        n.lnb = lse(n.lnb, v);
+                    }
+                    // 3b) word boundary: emit every word ending here.
+                    for &w in self.trie.words_at(child) {
+                        let mut words = key.words.clone();
+                        let ls = self.lm_small.log_prob(&words, w);
+                        let ll = self.lm_large.log_prob(&words, w);
+                        words.push(w);
+                        let k_end = Key { node: 0, last: phone, words };
+                        let n = next.entry(k_end).or_insert_with(Entry::new);
+                        if v > n.lnb {
+                            n.lm_small = e.lm_small + ls;
+                            n.lm_large = e.lm_large + ll;
+                        }
+                        n.lnb = lse(n.lnb, v);
+                    }
+                }
+            }
+            // Prune by acoustic + small-LM + insertion bonus.
+            let mut items: Vec<(Key, Entry)> = next.into_iter().collect();
+            items.sort_by(|a, b| {
+                let sa = a.1.acoustic()
+                    + cfg.lm_weight_small * a.1.lm_small
+                    + cfg.word_insertion_bonus * a.0.words.len() as f64;
+                let sb = b.1.acoustic()
+                    + cfg.lm_weight_small * b.1.lm_small
+                    + cfg.word_insertion_bonus * b.0.words.len() as f64;
+                sb.partial_cmp(&sa).unwrap()
+            });
+            items.truncate(cfg.beam);
+            beams = items.into_iter().collect();
+        }
+        beams
+    }
+
+    /// N-best list (rescored, deduplicated by word sequence, best first).
+    /// The sequence-discriminative training recipes (MWER/sMBR) and
+    /// confidence estimation consume these.
+    pub fn decode_nbest(
+        &self,
+        log_probs: &[f32],
+        num_labels: usize,
+        n: usize,
+    ) -> Vec<Hypothesis> {
+        let beams = self.run_beams_impl(log_probs, num_labels);
+        let cfg = &self.config;
+        let mut items: Vec<Hypothesis> = beams
+            .into_iter()
+            .filter(|(k, _)| k.node == 0)
+            .map(|(k, e)| Hypothesis {
+                words: k.words,
+                acoustic: e.acoustic(),
+                lm_small: e.lm_small,
+                lm_large: e.lm_large,
+            })
+            .collect();
+        items.sort_by(|a, b| {
+            let sa = a.acoustic
+                + cfg.lm_weight_large * a.lm_large
+                + cfg.word_insertion_bonus * a.words.len() as f64;
+            let sb = b.acoustic
+                + cfg.lm_weight_large * b.lm_large
+                + cfg.word_insertion_bonus * b.words.len() as f64;
+            sb.partial_cmp(&sa).unwrap()
+        });
+        items.dedup_by(|a, b| a.words == b.words);
+        items.truncate(n);
+        items
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoder::trie::LexTrie;
+    use crate::sim::dataset::text_corpus;
+    use crate::sim::World;
+
+    fn decoder(beam: usize) -> (Decoder, World) {
+        let world = World::new();
+        let corpus = text_corpus(1500, 77, &world);
+        let trie = LexTrie::from_world(&world);
+        let lm_s = NGramLm::small(&corpus, 200);
+        let lm_l = NGramLm::large(&corpus, 200);
+        let cfg = DecoderConfig { beam, ..Default::default() };
+        (Decoder::new(trie, lm_s, lm_l, cfg), world)
+    }
+
+    /// Synthesize ideal peaked posteriors for a phone sequence: each phone
+    /// lasts 3 frames then 1 blank frame.
+    fn ideal_posteriors(phones: &[u32], num_labels: usize) -> Vec<f32> {
+        let mut rows: Vec<f32> = Vec::new();
+        let mut push = |id: u32| {
+            let mut r = vec![-8.0f32; num_labels];
+            r[id as usize] = 0.0;
+            // renormalize roughly (log-softmax-ish): fine for tests
+            rows.extend(r);
+        };
+        push(0);
+        for &p in phones {
+            for _ in 0..3 {
+                push(p);
+            }
+            push(0);
+        }
+        rows
+    }
+
+    #[test]
+    fn decodes_clean_word_sequence() {
+        let (dec, world) = decoder(24);
+        let words = vec![3u32, 17, 42];
+        let phones: Vec<u32> =
+            words.iter().flat_map(|&w| world.word_phones(w).to_vec()).collect();
+        let lp = ideal_posteriors(&phones, 41);
+        let hyp = dec.decode(&lp, 41);
+        assert_eq!(hyp.words, words, "phones {phones:?}");
+    }
+
+    #[test]
+    fn empty_input_gives_empty_hyp() {
+        let (dec, _) = decoder(8);
+        let hyp = dec.decode(&[], 41);
+        assert!(hyp.words.is_empty());
+    }
+
+    #[test]
+    fn lexicon_constraint_repairs_minor_corruption() {
+        // Corrupt one phone frame of a word; the trie + LM should still
+        // recover the intended words since no other word matches better.
+        let (dec, world) = decoder(32);
+        let words = vec![7u32, 19];
+        let phones: Vec<u32> =
+            words.iter().flat_map(|&w| world.word_phones(w).to_vec()).collect();
+        let mut lp = ideal_posteriors(&phones, 41);
+        // soften frames of the middle phone occurrence
+        let frames = lp.len() / 41;
+        let mid = frames / 2;
+        for f in mid..(mid + 1).min(frames) {
+            for v in lp[f * 41..(f + 1) * 41].iter_mut() {
+                *v = -3.7; // ~uniform
+            }
+        }
+        let hyp = dec.decode(&lp, 41);
+        assert_eq!(hyp.words, words);
+    }
+
+    #[test]
+    fn nbest_first_equals_decode_best() {
+        let (dec, world) = decoder(24);
+        let words = vec![3u32, 17, 42];
+        let phones: Vec<u32> =
+            words.iter().flat_map(|&w| world.word_phones(w).to_vec()).collect();
+        let lp = ideal_posteriors(&phones, 41);
+        let best = dec.decode(&lp, 41);
+        let nbest = dec.decode_nbest(&lp, 41, 5);
+        assert!(!nbest.is_empty());
+        assert_eq!(nbest[0].words, best.words);
+        // list is sorted and deduplicated
+        for w in nbest.windows(2) {
+            assert_ne!(w[0].words, w[1].words);
+        }
+    }
+
+    #[test]
+    fn bigger_beam_never_scores_worse() {
+        let (dec_small, world) = decoder(2);
+        let (dec_big, _) = decoder(32);
+        let words = vec![11u32, 3, 90];
+        let phones: Vec<u32> =
+            words.iter().flat_map(|&w| world.word_phones(w).to_vec()).collect();
+        let lp = ideal_posteriors(&phones, 41);
+        let h_small = dec_small.decode(&lp, 41);
+        let h_big = dec_big.decode(&lp, 41);
+        let score = |h: &Hypothesis| {
+            h.acoustic + h.lm_large + 0.5 * h.words.len() as f64
+        };
+        assert!(score(&h_big) >= score(&h_small) - 1e-9);
+        assert_eq!(h_big.words, words);
+    }
+}

@@ -1,0 +1,120 @@
+//! Lexicon prefix trie over phone ids — the simulator-scale stand-in for
+//! the paper's lexicon transducer (§4).
+
+use crate::sim::World;
+
+/// Flat-array trie.  Node 0 is the root.
+pub struct LexTrie {
+    /// children[node] : sorted (phone, child) pairs.
+    children: Vec<Vec<(u32, u32)>>,
+    /// word ids terminating at each node.
+    terminal: Vec<Vec<u32>>,
+    num_words: usize,
+}
+
+impl LexTrie {
+    pub fn from_world(world: &World) -> Self {
+        let mut t = LexTrie {
+            children: vec![Vec::new()],
+            terminal: vec![Vec::new()],
+            num_words: world.lexicon.len(),
+        };
+        for (wid, phones) in world.lexicon.iter().enumerate() {
+            let mut node = 0u32;
+            for &p in phones {
+                node = t.child_or_insert(node, p);
+            }
+            t.terminal[node as usize].push(wid as u32);
+        }
+        t
+    }
+
+    fn child_or_insert(&mut self, node: u32, phone: u32) -> u32 {
+        if let Some(c) = self.child(node, phone) {
+            return c;
+        }
+        let new = self.children.len() as u32;
+        self.children.push(Vec::new());
+        self.terminal.push(Vec::new());
+        let row = &mut self.children[node as usize];
+        let pos = row.partition_point(|&(p, _)| p < phone);
+        row.insert(pos, (phone, new));
+        new
+    }
+
+    /// Child reached by `phone` from `node`, if any.
+    #[inline]
+    pub fn child(&self, node: u32, phone: u32) -> Option<u32> {
+        let row = &self.children[node as usize];
+        row.binary_search_by_key(&phone, |&(p, _)| p).ok().map(|i| row[i].1)
+    }
+
+    /// Words ending exactly at `node`.
+    #[inline]
+    pub fn words_at(&self, node: u32) -> &[u32] {
+        &self.terminal[node as usize]
+    }
+
+    /// Phones leaving `node` (for beam expansion).
+    #[inline]
+    pub fn exits(&self, node: u32) -> &[(u32, u32)] {
+        &self.children[node as usize]
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.children.len()
+    }
+
+    pub fn num_words(&self) -> usize {
+        self.num_words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_lexicon_word_is_reachable() {
+        let w = World::new();
+        let t = LexTrie::from_world(&w);
+        for (wid, phones) in w.lexicon.iter().enumerate() {
+            let mut node = 0u32;
+            for &p in phones {
+                node = t.child(node, p).expect("path must exist");
+            }
+            assert!(
+                t.words_at(node).contains(&(wid as u32)),
+                "word {wid} missing at terminal node"
+            );
+        }
+    }
+
+    #[test]
+    fn no_false_terminals_at_root() {
+        let w = World::new();
+        let t = LexTrie::from_world(&w);
+        assert!(t.words_at(0).is_empty(), "root must terminate no word");
+        assert!(t.num_nodes() > w.lexicon.len()); // at least one node per word end
+    }
+
+    #[test]
+    fn invalid_phone_has_no_child() {
+        let w = World::new();
+        let t = LexTrie::from_world(&w);
+        assert!(t.child(0, 0).is_none()); // blank never enters the lexicon
+        assert!(t.child(0, 999).is_none());
+    }
+
+    #[test]
+    fn exits_are_sorted_unique() {
+        let w = World::new();
+        let t = LexTrie::from_world(&w);
+        for n in 0..t.num_nodes() as u32 {
+            let ex = t.exits(n);
+            for win in ex.windows(2) {
+                assert!(win[0].0 < win[1].0);
+            }
+        }
+    }
+}

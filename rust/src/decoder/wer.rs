@@ -1,0 +1,145 @@
+//! Word/label error rate scoring (Levenshtein alignment).
+
+/// Edit-distance breakdown.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EditStats {
+    pub substitutions: usize,
+    pub deletions: usize,
+    pub insertions: usize,
+    pub ref_len: usize,
+}
+
+impl EditStats {
+    pub fn errors(&self) -> usize {
+        self.substitutions + self.deletions + self.insertions
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.errors() as f64 / self.ref_len.max(1) as f64
+    }
+
+    pub fn add(&mut self, o: &EditStats) {
+        self.substitutions += o.substitutions;
+        self.deletions += o.deletions;
+        self.insertions += o.insertions;
+        self.ref_len += o.ref_len;
+    }
+}
+
+/// Full DP with back-trace to attribute S/D/I (hyp vs ref).
+pub fn align(hyp: &[u32], r: &[u32]) -> EditStats {
+    let (n, m) = (hyp.len(), r.len());
+    // dp[i][j] = cost of aligning hyp[..i] with ref[..j]
+    let mut dp = vec![0u32; (n + 1) * (m + 1)];
+    let idx = |i: usize, j: usize| i * (m + 1) + j;
+    for i in 0..=n {
+        dp[idx(i, 0)] = i as u32;
+    }
+    for j in 0..=m {
+        dp[idx(0, j)] = j as u32;
+    }
+    for i in 1..=n {
+        for j in 1..=m {
+            let sub = dp[idx(i - 1, j - 1)] + (hyp[i - 1] != r[j - 1]) as u32;
+            let del = dp[idx(i, j - 1)] + 1; // ref word dropped
+            let ins = dp[idx(i - 1, j)] + 1; // extra hyp word
+            dp[idx(i, j)] = sub.min(del).min(ins);
+        }
+    }
+    // backtrace
+    let (mut i, mut j) = (n, m);
+    let mut st = EditStats { ref_len: m, ..Default::default() };
+    while i > 0 || j > 0 {
+        if i > 0 && j > 0 && dp[idx(i, j)] == dp[idx(i - 1, j - 1)] + (hyp[i - 1] != r[j - 1]) as u32
+        {
+            if hyp[i - 1] != r[j - 1] {
+                st.substitutions += 1;
+            }
+            i -= 1;
+            j -= 1;
+        } else if j > 0 && dp[idx(i, j)] == dp[idx(i, j - 1)] + 1 {
+            st.deletions += 1;
+            j -= 1;
+        } else {
+            st.insertions += 1;
+            i -= 1;
+        }
+    }
+    st
+}
+
+/// Plain edit distance (no breakdown).
+pub fn edit_distance(a: &[u32], b: &[u32]) -> usize {
+    align(a, b).errors()
+}
+
+/// Corpus-level error rate: Σ errors / Σ ref lengths.
+pub fn corpus_rate<'a>(pairs: impl Iterator<Item = (&'a [u32], &'a [u32])>) -> f64 {
+    let mut total = EditStats::default();
+    for (h, r) in pairs {
+        total.add(&align(h, r));
+    }
+    total.rate()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    #[test]
+    fn identity_and_simple_cases() {
+        assert_eq!(align(&[1, 2, 3], &[1, 2, 3]).errors(), 0);
+        assert_eq!(align(&[], &[1, 2]).errors(), 2); // 2 deletions
+        assert_eq!(align(&[1, 2], &[]).errors(), 2); // 2 insertions
+        let st = align(&[1, 9, 3], &[1, 2, 3]);
+        assert_eq!(st.substitutions, 1);
+        assert_eq!(st.errors(), 1);
+    }
+
+    #[test]
+    fn breakdown_attribution() {
+        // hyp=[1,3,4,4] vs ref=[1,2,3,4]: distance 2, reachable either as
+        // {del 2, ins 4} or {sub 3→2, sub 4→3}; the backtrace picks one
+        // optimal attribution — only the total is canonical.
+        let st = align(&[1, 3, 4, 4], &[1, 2, 3, 4]);
+        assert_eq!(st.errors(), 2);
+        assert_eq!(st.substitutions + st.deletions + st.insertions, 2);
+    }
+
+    #[test]
+    fn symmetric_distance() {
+        forall("wer symmetric", 60, 0x3E, |g: &mut Gen| {
+            let na = g.usize_in(0, 12);
+            let a = g.vec_ids(na, 10);
+            let nb = g.usize_in(0, 12);
+            let b = g.vec_ids(nb, 10);
+            assert_eq!(edit_distance(&a, &b), edit_distance(&b, &a));
+        });
+    }
+
+    #[test]
+    fn triangle_inequality() {
+        forall("wer triangle", 40, 0x3F, |g: &mut Gen| {
+            let na = g.usize_in(0, 10);
+            let a = g.vec_ids(na, 8);
+            let nb = g.usize_in(0, 10);
+            let b = g.vec_ids(nb, 8);
+            let nc = g.usize_in(0, 10);
+            let c = g.vec_ids(nc, 8);
+            assert!(
+                edit_distance(&a, &c) <= edit_distance(&a, &b) + edit_distance(&b, &c)
+            );
+        });
+    }
+
+    #[test]
+    fn corpus_rate_pools_lengths() {
+        let h1: Vec<u32> = vec![1, 2];
+        let r1: Vec<u32> = vec![1, 2];
+        let h2: Vec<u32> = vec![9];
+        let r2: Vec<u32> = vec![1, 2, 3];
+        let rate = corpus_rate([(h1.as_slice(), r1.as_slice()), (h2.as_slice(), r2.as_slice())].into_iter());
+        assert!((rate - 3.0 / 5.0).abs() < 1e-9);
+    }
+}

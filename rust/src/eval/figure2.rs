@@ -1,0 +1,116 @@
+//! Figure 2 regeneration: dev LER vs training time for the three CTC
+//! learning-rate schedules (§5.1), from the CSV curves exported by
+//! `python -m compile.train --preset figure2`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One curve: (wall seconds, step, dev LER).
+#[derive(Clone, Debug)]
+pub struct Curve {
+    pub name: String,
+    pub points: Vec<(f64, u64, f64)>,
+}
+
+pub const SCHEDULES: &[&str] = &["low_lr", "svd_init", "sched_proj"];
+
+pub fn load_curves(artifacts: &Path) -> Result<Vec<Curve>> {
+    let mut out = Vec::new();
+    for name in SCHEDULES {
+        let path = artifacts.join(format!("curves/figure2_{name}.csv"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("{} (run `make figure2` first)", path.display()))?;
+        let mut points = Vec::new();
+        for line in text.lines().skip(1) {
+            let mut it = line.split(',');
+            let wall: f64 = it.next().unwrap_or("0").parse()?;
+            let step: u64 = it.next().unwrap_or("0").parse()?;
+            let ler: f64 = it.next().unwrap_or("1").parse()?;
+            points.push((wall, step, ler));
+        }
+        out.push(Curve { name: name.to_string(), points });
+    }
+    Ok(out)
+}
+
+/// ASCII rendering of the three curves (LER vs wall time), plus the final
+/// values — the textual analogue of the paper's Figure 2.
+pub fn format_figure(curves: &[Curve]) -> String {
+    let mut out = String::new();
+    out.push_str("Figure 2: dev label error rate vs training time (CTC, projection model)\n\n");
+    let t_max = curves
+        .iter()
+        .flat_map(|c| c.points.last().map(|p| p.0))
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let rows = 16;
+    let cols = 64;
+    // grid[r][c] = char
+    let mut grid = vec![vec![b' '; cols]; rows];
+    let ler_max = 1.0f64;
+    for (ci, c) in curves.iter().enumerate() {
+        let ch = [b'*', b'o', b'+'][ci % 3];
+        for &(wall, _step, ler) in &c.points {
+            let x = ((wall / t_max) * (cols - 1) as f64) as usize;
+            let y = ((ler / ler_max) * (rows - 1) as f64).min((rows - 1) as f64) as usize;
+            let y = rows - 1 - y;
+            grid[y][x.min(cols - 1)] = ch;
+        }
+    }
+    out.push_str("LER 1.0 ┤\n");
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == rows - 1 { "LER 0.0 " } else { "        " };
+        out.push_str(label);
+        out.push('│');
+        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "        └{} t={:.0}s\n",
+        "─".repeat(cols),
+        t_max
+    ));
+    out.push_str("legend: * low_lr   o svd_init   + sched_proj\n\n");
+    for c in curves {
+        if let Some(&(wall, step, ler)) = c.points.last() {
+            let best = c
+                .points
+                .iter()
+                .map(|p| p.2)
+                .fold(f64::INFINITY, f64::min);
+            out.push_str(&format!(
+                "{:<12} final LER {:.3} (best {:.3}) after {} steps / {:.0}s\n",
+                c.name, ler, best, step, wall
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_renders_without_curves_present() {
+        let curves = vec![
+            Curve {
+                name: "low_lr".into(),
+                points: vec![(0.0, 1, 1.0), (10.0, 100, 0.8), (20.0, 200, 0.7)],
+            },
+            Curve {
+                name: "svd_init".into(),
+                points: vec![(5.0, 1, 0.9), (20.0, 200, 0.3)],
+            },
+            Curve {
+                name: "sched_proj".into(),
+                points: vec![(0.0, 1, 1.0), (20.0, 200, 0.15)],
+            },
+        ];
+        let s = format_figure(&curves);
+        assert!(s.contains("legend"));
+        assert!(s.contains("sched_proj"));
+        assert!(s.contains("final LER 0.150"));
+    }
+}

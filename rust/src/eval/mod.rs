@@ -1,0 +1,14 @@
+//! Evaluation harnesses that regenerate the paper's tables and figures.
+//!
+//! - [`wer_eval`] — dataset → WER/LER under an execution mode (the core
+//!   measurement behind Table 1).
+//! - [`table1`]   — the full Table-1 grid: {match, mismatch, quant,
+//!   quant-all} × architectures × {clean, noisy}.
+//! - [`figure2`]  — formats the LR-schedule LER curves exported by
+//!   `python -m compile.train --preset figure2`.
+
+pub mod figure2;
+pub mod table1;
+pub mod wer_eval;
+
+pub use wer_eval::{build_decoder, evaluate, EvalResult};

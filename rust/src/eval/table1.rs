@@ -1,0 +1,148 @@
+//! Table 1 regeneration: WER on clean/noisy eval sets for every
+//! architecture under the four conditions.
+//!
+//! Models come from `python -m compile.train --preset table1` (or just the
+//! quickstart model when only that was trained):
+//! `<name>.float.qam` → 'match' (f32 eval) and 'mismatch' (quantized eval);
+//! `<name>.qat.qam` → 'quant'; `<name>.qatall.qam` → 'quant-all'.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::decoder::Decoder;
+use crate::eval::wer_eval::{evaluate_model_file, EvalResult};
+use crate::io::feat_fmt::{read_feats, Utt};
+use crate::nn::ExecMode;
+
+/// WERs for one architecture on one eval set.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Row {
+    pub matched: f64,
+    pub mismatch: f64,
+    pub quant: f64,
+    pub quant_all: f64,
+}
+
+impl Row {
+    fn rel(&self, v: f64) -> f64 {
+        if self.matched <= 0.0 {
+            0.0
+        } else {
+            100.0 * (v - self.matched) / self.matched
+        }
+    }
+}
+
+/// Everything measured for one architecture.
+#[derive(Clone, Debug)]
+pub struct ArchResult {
+    pub name: String,
+    pub param_count: usize,
+    pub clean: Row,
+    pub noisy: Row,
+}
+
+/// The architecture names of the Table-1 grid, in paper order
+/// (must match `model.py::TABLE1_CONFIGS` names).
+pub const TABLE1_ARCHS: &[&str] = &[
+    "4x30", "5x30", "4x40", "5x40", "4x50", "5x50", "p10", "p20", "p30", "p40",
+];
+
+/// Evaluate one architecture (4 model-file × mode combinations × 2 sets).
+pub fn eval_arch(
+    models_dir: &Path,
+    name: &str,
+    clean: &[Utt],
+    noisy: &[Utt],
+    decoder: &Decoder,
+    threads: usize,
+) -> Result<ArchResult> {
+    let float_qam = models_dir.join(format!("{name}.float.qam"));
+    let qat_qam = models_dir.join(format!("{name}.qat.qam"));
+    let qatall_qam = models_dir.join(format!("{name}.qatall.qam"));
+    let header = crate::io::model_fmt::QamFile::load(&float_qam)
+        .with_context(|| format!("loading {}", float_qam.display()))?
+        .header;
+
+    let run = |qam: &PathBuf, mode: ExecMode, utts: &[Utt]| -> Result<EvalResult> {
+        evaluate_model_file(qam, mode, utts, decoder, threads)
+    };
+    let mut result = ArchResult {
+        name: name.to_string(),
+        param_count: header.param_count,
+        clean: Row::default(),
+        noisy: Row::default(),
+    };
+    for (set, utts) in [("clean", clean), ("noisy", noisy)] {
+        let row = Row {
+            matched: run(&float_qam, ExecMode::Float, utts)?.wer,
+            mismatch: run(&float_qam, ExecMode::Quant, utts)?.wer,
+            quant: run(&qat_qam, ExecMode::Quant, utts)?.wer,
+            quant_all: run(&qatall_qam, ExecMode::QuantAll, utts)?.wer,
+        };
+        if set == "clean" {
+            result.clean = row;
+        } else {
+            result.noisy = row;
+        }
+    }
+    Ok(result)
+}
+
+/// Run the full table over whatever architectures have model files.
+pub fn run_table1(artifacts: &Path, decoder: &Decoder, threads: usize) -> Result<Vec<ArchResult>> {
+    let clean = read_feats(artifacts.join("data/eval_clean.feats"))?;
+    let noisy = read_feats(artifacts.join("data/eval_noisy.feats"))?;
+    let models = artifacts.join("models");
+    let mut rows = Vec::new();
+    // include the quickstart model name if present but not in the grid
+    let mut archs: Vec<String> = TABLE1_ARCHS.iter().map(|s| s.to_string()).collect();
+    archs.push("p24".to_string());
+    for name in archs {
+        if !models.join(format!("{name}.float.qam")).exists() {
+            continue;
+        }
+        eprintln!("[table1] evaluating {name} …");
+        rows.push(eval_arch(&models, &name, &clean, &noisy, decoder, threads)?);
+    }
+    Ok(rows)
+}
+
+/// Format in the paper's layout (WER % with relative loss in parens).
+pub fn format_table(rows: &[ArchResult]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| System (Params.) | Clean: match | mismatch | quant | quant-all | Noisy: match | mismatch | quant | quant-all |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|---|---|\n");
+    let cell = |r: &Row, v: f64| format!("{:.1} ({:+.1}%)", 100.0 * v, r.rel(v));
+    let mut avg = [0.0f64; 6]; // rel losses: clean mm/q/qa, noisy mm/q/qa
+    for a in rows {
+        out.push_str(&format!(
+            "| {} (~{}K) | {:.1} | {} | {} | {} | {:.1} | {} | {} | {} |\n",
+            a.name,
+            a.param_count / 1000,
+            100.0 * a.clean.matched,
+            cell(&a.clean, a.clean.mismatch),
+            cell(&a.clean, a.clean.quant),
+            cell(&a.clean, a.clean.quant_all),
+            100.0 * a.noisy.matched,
+            cell(&a.noisy, a.noisy.mismatch),
+            cell(&a.noisy, a.noisy.quant),
+            cell(&a.noisy, a.noisy.quant_all),
+        ));
+        avg[0] += a.clean.rel(a.clean.mismatch);
+        avg[1] += a.clean.rel(a.clean.quant);
+        avg[2] += a.clean.rel(a.clean.quant_all);
+        avg[3] += a.noisy.rel(a.noisy.mismatch);
+        avg[4] += a.noisy.rel(a.noisy.quant);
+        avg[5] += a.noisy.rel(a.noisy.quant_all);
+    }
+    let n = rows.len().max(1) as f64;
+    out.push_str(&format!(
+        "| Avg. relative loss | – | {:+.1}% | {:+.1}% | {:+.1}% | – | {:+.1}% | {:+.1}% | {:+.1}% |\n",
+        avg[0] / n, avg[1] / n, avg[2] / n, avg[3] / n, avg[4] / n, avg[5] / n
+    ));
+    out
+}

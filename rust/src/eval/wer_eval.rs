@@ -1,0 +1,94 @@
+//! WER evaluation: run a model over a `.feats` split, decode, score.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::decoder::lm::NGramLm;
+use crate::decoder::trie::LexTrie;
+use crate::decoder::{ctc, wer, Decoder, DecoderConfig};
+use crate::io::feat_fmt::Utt;
+use crate::nn::{AcousticModel, ExecMode};
+use crate::sim::dataset::text_corpus;
+use crate::sim::World;
+
+/// Aggregate evaluation result on one split.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub wer: f64,
+    pub ler: f64,
+    pub utts: usize,
+    pub frames: usize,
+    /// AM forward seconds (all utterances, batch 1).
+    pub am_seconds: f64,
+    pub decode_seconds: f64,
+}
+
+/// Build the standard decoder (lexicon trie + small/large LMs) from the
+/// shared world.  LM training text is a fixed 20k-sentence corpus.
+pub fn build_decoder(world: &World, config: DecoderConfig) -> Decoder {
+    let corpus = text_corpus(20_000, 0xC0_0C, world);
+    let trie = LexTrie::from_world(world);
+    let lm_small = NGramLm::small(&corpus, world.lexicon.len());
+    let lm_large = NGramLm::large(&corpus, world.lexicon.len());
+    Decoder::new(trie, lm_small, lm_large, config)
+}
+
+/// Evaluate a model on a set of utterances (multi-threaded over utts).
+pub fn evaluate(
+    model: &AcousticModel,
+    decoder: &Decoder,
+    utts: &[Utt],
+    threads: usize,
+) -> EvalResult {
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let acc = Mutex::new((wer::EditStats::default(), wer::EditStats::default(), 0.0f64, 0.0f64, 0usize));
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= utts.len() {
+                    break;
+                }
+                let u = &utts[i];
+                let t0 = std::time::Instant::now();
+                let lp = model.forward_utt(&u.feats, u.num_frames);
+                let am_dt = t0.elapsed().as_secs_f64();
+                let t1 = std::time::Instant::now();
+                let hyp = decoder.decode(&lp, model.num_labels());
+                let phones = ctc::greedy(&lp, model.num_labels());
+                let dec_dt = t1.elapsed().as_secs_f64();
+                let w_st = wer::align(&hyp.words, &u.words);
+                let l_st = wer::align(&phones, &u.phones);
+                let mut g = acc.lock().unwrap();
+                g.0.add(&w_st);
+                g.1.add(&l_st);
+                g.2 += am_dt;
+                g.3 += dec_dt;
+                g.4 += u.num_frames;
+            });
+        }
+    });
+    let g = acc.into_inner().unwrap();
+    EvalResult {
+        wer: g.0.rate(),
+        ler: g.1.rate(),
+        utts: utts.len(),
+        frames: g.4,
+        am_seconds: g.2,
+        decode_seconds: g.3,
+    }
+}
+
+/// Load a `.qam` under a mode and evaluate a split file.
+pub fn evaluate_model_file(
+    qam: impl AsRef<Path>,
+    mode: ExecMode,
+    utts: &[Utt],
+    decoder: &Decoder,
+    threads: usize,
+) -> Result<EvalResult> {
+    let model = AcousticModel::load(qam, mode)?;
+    Ok(evaluate(&model, decoder, utts, threads))
+}

@@ -1,0 +1,181 @@
+//! Radix-2 FFT and the real-input power spectrum used by the frontend.
+//!
+//! Iterative in-place Cooley–Tukey over `Complex` pairs; sizes are powers
+//! of two (the frontend uses 256).  A precomputed twiddle table makes the
+//! per-frame cost ~O(N log N) with no allocation.
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Complex {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl Complex {
+    #[inline]
+    pub fn new(re: f32, im: f32) -> Self {
+        Complex { re, im }
+    }
+
+    #[inline]
+    fn mul(self, o: Complex) -> Complex {
+        Complex::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+
+    #[inline]
+    fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+
+    #[inline]
+    fn sub(self, o: Complex) -> Complex {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+
+    #[inline]
+    pub fn norm_sq(self) -> f32 {
+        self.re * self.re + self.im * self.im
+    }
+}
+
+/// Precomputed-twiddle FFT plan for a fixed power-of-two size.
+pub struct FftPlan {
+    pub n: usize,
+    twiddles: Vec<Complex>,
+    /// bit-reversal permutation
+    rev: Vec<u32>,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "FFT size must be a power of two");
+        let mut twiddles = Vec::with_capacity(n / 2);
+        for k in 0..n / 2 {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            twiddles.push(Complex::new(ang.cos() as f32, ang.sin() as f32));
+        }
+        let bits = n.trailing_zeros();
+        let rev = (0..n as u32).map(|i| i.reverse_bits() >> (32 - bits)).collect();
+        FftPlan { n, twiddles, rev }
+    }
+
+    /// In-place forward FFT.
+    pub fn forward(&self, buf: &mut [Complex]) {
+        let n = self.n;
+        debug_assert_eq!(buf.len(), n);
+        for i in 0..n {
+            let j = self.rev[i] as usize;
+            if i < j {
+                buf.swap(i, j);
+            }
+        }
+        let mut len = 2;
+        while len <= n {
+            let half = len / 2;
+            let step = n / len;
+            let mut start = 0;
+            while start < n {
+                for k in 0..half {
+                    let w = self.twiddles[k * step];
+                    let a = buf[start + k];
+                    let b = buf[start + k + half].mul(w);
+                    buf[start + k] = a.add(b);
+                    buf[start + k + half] = a.sub(b);
+                }
+                start += len;
+            }
+            len <<= 1;
+        }
+    }
+
+    /// Power spectrum of a real signal: returns `n/2 + 1` values
+    /// `|FFT(x)|²` (zero-padding `x` to n).  `scratch` must be length n.
+    pub fn power_spectrum(&self, x: &[f32], scratch: &mut [Complex], out: &mut [f32]) {
+        let n = self.n;
+        debug_assert!(x.len() <= n);
+        debug_assert_eq!(scratch.len(), n);
+        debug_assert_eq!(out.len(), n / 2 + 1);
+        for (i, s) in scratch.iter_mut().enumerate() {
+            *s = Complex::new(if i < x.len() { x[i] } else { 0.0 }, 0.0);
+        }
+        self.forward(scratch);
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = scratch[k].norm_sq();
+        }
+    }
+}
+
+/// Naive O(N²) DFT — correctness oracle for tests.
+pub fn dft_power(x: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n / 2 + 1];
+    for (k, o) in out.iter_mut().enumerate() {
+        let (mut re, mut im) = (0f64, 0f64);
+        for (i, &v) in x.iter().enumerate() {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 * i as f64 / n as f64;
+            re += v as f64 * ang.cos();
+            im += v as f64 * ang.sin();
+        }
+        *o = (re * re + im * im) as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    #[test]
+    fn fft_matches_dft_power() {
+        forall("fft vs dft", 20, 0xFF7, |g: &mut Gen| {
+            let n = 1 << g.usize_in(3, 8); // 8..256
+            let len = g.usize_in(1, n);
+            let x = g.vec_normal(len, 1.0);
+            let plan = FftPlan::new(n);
+            let mut scratch = vec![Complex::default(); n];
+            let mut got = vec![0f32; n / 2 + 1];
+            plan.power_spectrum(&x, &mut scratch, &mut got);
+            let want = dft_power(&x, n);
+            for (a, b) in got.iter().zip(&want) {
+                let tol = 1e-3 * (1.0 + b.abs());
+                assert!((a - b).abs() < tol, "{a} vs {b} (n={n})");
+            }
+        });
+    }
+
+    #[test]
+    fn impulse_is_flat() {
+        let plan = FftPlan::new(64);
+        let mut scratch = vec![Complex::default(); 64];
+        let mut out = vec![0f32; 33];
+        plan.power_spectrum(&[1.0], &mut scratch, &mut out);
+        for &v in &out {
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sine_peaks_at_bin() {
+        let n = 256;
+        let k = 17;
+        let x: Vec<f32> = (0..n)
+            .map(|i| (2.0 * std::f64::consts::PI * k as f64 * i as f64 / n as f64).sin() as f32)
+            .collect();
+        let plan = FftPlan::new(n);
+        let mut scratch = vec![Complex::default(); n];
+        let mut out = vec![0f32; n / 2 + 1];
+        plan.power_spectrum(&x, &mut scratch, &mut out);
+        let max_bin = out
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(max_bin, k);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        FftPlan::new(100);
+    }
+}

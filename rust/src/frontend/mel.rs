@@ -1,0 +1,120 @@
+//! Triangular mel filterbank (HTK-style), mirroring `data.py::mel_filterbank`.
+
+use crate::frontend::spec;
+
+pub fn mel_scale(f: f64) -> f64 {
+    2595.0 * (1.0 + f / 700.0).log10()
+}
+
+pub fn mel_inv(m: f64) -> f64 {
+    700.0 * (10f64.powf(m / 2595.0) - 1.0)
+}
+
+/// Filterbank matrix `[N_MEL, FFT/2+1]` row-major.
+pub struct MelBank {
+    pub n_mel: usize,
+    pub n_bins: usize,
+    pub weights: Vec<f32>,
+}
+
+impl Default for MelBank {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MelBank {
+    pub fn new() -> Self {
+        let n_bins = spec::FFT_SIZE / 2 + 1;
+        let n_mel = spec::N_MEL;
+        let mut weights = vec![0f32; n_mel * n_bins];
+        let m_lo = mel_scale(spec::MEL_FMIN);
+        let m_hi = mel_scale(spec::MEL_FMAX);
+        let pts: Vec<f64> = (0..n_mel + 2)
+            .map(|i| mel_inv(m_lo + (m_hi - m_lo) * i as f64 / (n_mel + 1) as f64))
+            .collect();
+        for m in 0..n_mel {
+            let (lo, ctr, hi) = (pts[m], pts[m + 1], pts[m + 2]);
+            for b in 0..n_bins {
+                let f = b as f64 * spec::SAMPLE_RATE as f64 / spec::FFT_SIZE as f64;
+                let up = (f - lo) / (ctr - lo);
+                let down = (hi - f) / (hi - ctr);
+                weights[m * n_bins + b] = up.min(down).max(0.0) as f32;
+            }
+        }
+        MelBank { n_mel, n_bins, weights }
+    }
+
+    /// Apply: log(max(power·Wᵀ, floor)) into `out [n_mel]`.
+    pub fn apply_log(&self, power: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(power.len(), self.n_bins);
+        debug_assert_eq!(out.len(), self.n_mel);
+        for m in 0..self.n_mel {
+            let row = &self.weights[m * self.n_bins..(m + 1) * self.n_bins];
+            let mut acc = 0f32;
+            for (w, p) in row.iter().zip(power) {
+                acc += w * p;
+            }
+            out[m] = acc.max(spec::LOG_FLOOR).ln();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mel_scale_roundtrip() {
+        for f in [125.0, 500.0, 1000.0, 3800.0] {
+            assert!((mel_inv(mel_scale(f)) - f).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn filters_are_triangular_and_cover_band() {
+        let fb = MelBank::new();
+        // every filter has positive mass and a single peak
+        for m in 0..fb.n_mel {
+            let row = &fb.weights[m * fb.n_bins..(m + 1) * fb.n_bins];
+            let mass: f32 = row.iter().sum();
+            assert!(mass > 0.0, "filter {m} empty");
+            let peak = row.iter().cloned().fold(0.0f32, f32::max);
+            assert!(peak <= 1.0 + 1e-6);
+            // unimodal: rises then falls
+            let peak_idx = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            for w in row[..peak_idx].windows(2) {
+                assert!(w[0] <= w[1] + 1e-6);
+            }
+            for w in row[peak_idx..].windows(2) {
+                assert!(w[0] >= w[1] - 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_band_bins_are_zero() {
+        let fb = MelBank::new();
+        // bin 0 = 0 Hz < fmin, last bin = 4000 Hz > fmax
+        for m in 0..fb.n_mel {
+            assert_eq!(fb.weights[m * fb.n_bins], 0.0);
+            assert_eq!(fb.weights[m * fb.n_bins + fb.n_bins - 1], 0.0);
+        }
+    }
+
+    #[test]
+    fn log_floor_applies() {
+        let fb = MelBank::new();
+        let power = vec![0f32; fb.n_bins];
+        let mut out = vec![0f32; fb.n_mel];
+        fb.apply_log(&power, &mut out);
+        for &v in &out {
+            assert!((v - spec::LOG_FLOOR.ln()).abs() < 1e-6);
+        }
+    }
+}

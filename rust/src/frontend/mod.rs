@@ -1,0 +1,23 @@
+//! Audio frontend: PCM → stacked log-mel features.
+//!
+//! Mirrors `python/compile/data.py` exactly (constants in [`spec`] =
+//! `python/compile/spec.py`); the cross-language golden test
+//! (`rust/tests/golden_frontend.rs`) asserts agreement on exported
+//! waveform/feature pairs.  Pipeline (paper §4, scaled):
+//!
+//! ```text
+//! preemphasis(0.97) → 25ms Hann frames @10ms → |rFFT₂₅₆|² → 16 mel → log
+//!   → stack 4 / decimate 2 → ×FEAT_SCALE → 64-d @ 20ms
+//! ```
+//!
+//! [`pipeline::Frontend`] is the *streaming* version used by the serving
+//! coordinator: it accepts arbitrary PCM chunks and emits feature frames
+//! incrementally with the same output as the batch path.
+
+pub mod fft;
+pub mod mel;
+pub mod pipeline;
+pub mod spec;
+pub mod stacker;
+
+pub use pipeline::{features, Frontend};

@@ -1,0 +1,232 @@
+//! The assembled frontend: batch ([`features`]) and streaming
+//! ([`Frontend`]) versions with identical output.
+
+use crate::frontend::fft::{Complex, FftPlan};
+use crate::frontend::mel::MelBank;
+use crate::frontend::spec;
+use crate::frontend::stacker::{stack_all, Stacker};
+
+/// Hann window (symmetric, N−1 denominator — matches numpy/data.py).
+fn hann() -> Vec<f32> {
+    (0..spec::FRAME_LEN)
+        .map(|n| {
+            0.5 - 0.5
+                * (2.0 * std::f64::consts::PI * n as f64 / (spec::FRAME_LEN - 1) as f64).cos()
+                    as f32
+        })
+        .collect()
+}
+
+/// Batch path: whole waveform → `[T, FEAT_DIM]` features (row-major).
+/// Mirrors `data.py::features` (preemphasis → log-mel → stack → scale).
+pub fn features(wave: &[f32]) -> Vec<f32> {
+    let mut fe = Frontend::new();
+    let mut out = Vec::new();
+    fe.push(wave, &mut out);
+    // Batch semantics == streaming semantics by construction; the python
+    // batch code also never flushes a partial final frame.
+    out
+}
+
+/// Raw (unstacked) log-mel of a whole waveform — `[t_raw, N_MEL]`.
+pub fn log_mel(wave: &[f32]) -> Vec<f32> {
+    let win = hann();
+    let plan = FftPlan::new(spec::FFT_SIZE);
+    let bank = MelBank::new();
+    let mut pre = vec![0f32; wave.len()];
+    if !wave.is_empty() {
+        pre[0] = wave[0];
+        for i in 1..wave.len() {
+            pre[i] = wave[i] - spec::PREEMPHASIS * wave[i - 1];
+        }
+    }
+    if pre.len() < spec::FRAME_LEN {
+        return Vec::new();
+    }
+    let t_raw = 1 + (pre.len() - spec::FRAME_LEN) / spec::FRAME_HOP;
+    let mut out = Vec::with_capacity(t_raw * spec::N_MEL);
+    let mut frame = vec![0f32; spec::FRAME_LEN];
+    let mut scratch = vec![Complex::default(); spec::FFT_SIZE];
+    let mut power = vec![0f32; spec::FFT_SIZE / 2 + 1];
+    let mut mel = vec![0f32; spec::N_MEL];
+    for t in 0..t_raw {
+        let s = t * spec::FRAME_HOP;
+        for i in 0..spec::FRAME_LEN {
+            frame[i] = pre[s + i] * win[i];
+        }
+        plan.power_spectrum(&frame, &mut scratch, &mut power);
+        bank.apply_log(&power, &mut mel);
+        out.extend_from_slice(&mel);
+    }
+    out
+}
+
+/// Streaming frontend: push PCM chunks of any size, feature frames come out.
+pub struct Frontend {
+    win: Vec<f32>,
+    plan: FftPlan,
+    bank: MelBank,
+    stacker: Stacker,
+    /// Pre-emphasized samples not yet consumed by framing.
+    buf: Vec<f32>,
+    /// Last raw sample seen (for preemphasis across chunk boundaries).
+    prev_sample: f32,
+    started: bool,
+    // reusable scratch
+    frame: Vec<f32>,
+    fft_scratch: Vec<Complex>,
+    power: Vec<f32>,
+    mel: Vec<f32>,
+}
+
+impl Default for Frontend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Frontend {
+    pub fn new() -> Self {
+        Frontend {
+            win: hann(),
+            plan: FftPlan::new(spec::FFT_SIZE),
+            bank: MelBank::new(),
+            stacker: Stacker::new(),
+            buf: Vec::new(),
+            prev_sample: 0.0,
+            started: false,
+            frame: vec![0f32; spec::FRAME_LEN],
+            fft_scratch: vec![Complex::default(); spec::FFT_SIZE],
+            power: vec![0f32; spec::FFT_SIZE / 2 + 1],
+            mel: vec![0f32; spec::N_MEL],
+        }
+    }
+
+    /// Push PCM samples; completed feature frames (FEAT_DIM each) are
+    /// appended to `out`.  Returns the number of frames emitted.
+    pub fn push(&mut self, pcm: &[f32], out: &mut Vec<f32>) -> usize {
+        // Preemphasis with cross-chunk memory; x'[0] = x[0] like python.
+        for &s in pcm {
+            let p = if self.started { s - spec::PREEMPHASIS * self.prev_sample } else { s };
+            self.started = true;
+            self.buf.push(p);
+            self.prev_sample = s;
+        }
+        let mut emitted = 0;
+        while self.buf.len() >= spec::FRAME_LEN {
+            for i in 0..spec::FRAME_LEN {
+                self.frame[i] = self.buf[i] * self.win[i];
+            }
+            self.plan.power_spectrum(&self.frame, &mut self.fft_scratch, &mut self.power);
+            self.bank.apply_log(&self.power, &mut self.mel);
+            emitted += self.stacker.push(&self.mel, out);
+            self.buf.drain(0..spec::FRAME_HOP);
+        }
+        emitted
+    }
+
+    /// Reset all streaming state (utterance boundary).
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.prev_sample = 0.0;
+        self.started = false;
+        self.stacker.reset();
+    }
+}
+
+/// Batch oracle built from parts (used in tests against the streaming path).
+pub fn features_batch_oracle(wave: &[f32]) -> Vec<f32> {
+    stack_all(&log_mel(wave))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+    use crate::util::rng::Xoshiro256;
+
+    fn tone(n: usize, f: f64, seed: u64) -> Vec<f32> {
+        let mut r = Xoshiro256::new(seed);
+        (0..n)
+            .map(|i| {
+                let t = i as f64 / spec::SAMPLE_RATE as f64;
+                ((2.0 * std::f64::consts::PI * f * t).sin() * 0.3 + r.normal() * 0.01) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn streaming_equals_batch_any_chunking() {
+        forall("frontend stream==batch", 12, 0xFE, |g: &mut Gen| {
+            let n = g.usize_in(0, 6000);
+            let wave = tone(n, 440.0 + g.f64_in(0.0, 1000.0), g.seed);
+            let want = features_batch_oracle(&wave);
+            let mut fe = Frontend::new();
+            let mut got = Vec::new();
+            let mut i = 0;
+            while i < wave.len() {
+                let chunk = g.usize_in(1, 700).min(wave.len() - i);
+                fe.push(&wave[i..i + chunk], &mut got);
+                i += chunk;
+            }
+            assert_eq!(got.len(), want.len(), "n={n}");
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn feature_dim_and_count() {
+        let wave = tone(8000, 700.0, 1); // 1s → 98 raw frames → 48 stacked
+        let f = features(&wave);
+        assert_eq!(f.len() % spec::FEAT_DIM, 0);
+        let t_raw = 1 + (8000 - spec::FRAME_LEN) / spec::FRAME_HOP;
+        let want = (t_raw - spec::STACK) / spec::DECIMATE + 1;
+        assert_eq!(f.len() / spec::FEAT_DIM, want);
+    }
+
+    #[test]
+    fn tone_lights_up_expected_mel_bin() {
+        // 1 kHz tone: energy concentrates in the mel bin containing 1 kHz.
+        let wave = tone(4000, 1000.0, 2);
+        let mel = log_mel(&wave);
+        let t = mel.len() / spec::N_MEL;
+        // average over frames
+        let mut avg = vec![0f32; spec::N_MEL];
+        for i in 0..t {
+            for j in 0..spec::N_MEL {
+                avg[j] += mel[i * spec::N_MEL + j] / t as f32;
+            }
+        }
+        let peak = avg
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        // 1 kHz lies in the middle third of the 125..3800 Hz mel range.
+        assert!((4..=11).contains(&peak), "peak bin {peak}: {avg:?}");
+    }
+
+    #[test]
+    fn reset_gives_fresh_stream() {
+        let wave = tone(3000, 500.0, 3);
+        let mut fe = Frontend::new();
+        let mut a = Vec::new();
+        fe.push(&wave, &mut a);
+        fe.reset();
+        let mut b = Vec::new();
+        fe.push(&wave, &mut b);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_and_short_inputs() {
+        assert!(features(&[]).is_empty());
+        assert!(features(&vec![0.1; 100]).is_empty()); // < one frame
+    }
+}

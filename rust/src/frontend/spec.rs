@@ -1,0 +1,38 @@
+//! Shared world/frontend constants — the rust mirror of
+//! `python/compile/spec.py`.  Any change must be made in both files; the
+//! golden tests catch drift.
+
+pub const SAMPLE_RATE: usize = 8000;
+pub const FRAME_LEN: usize = 200; // 25 ms
+pub const FRAME_HOP: usize = 80; // 10 ms
+pub const FFT_SIZE: usize = 256;
+pub const N_MEL: usize = 16;
+pub const MEL_FMIN: f64 = 125.0;
+pub const MEL_FMAX: f64 = 3800.0;
+pub const PREEMPHASIS: f32 = 0.97;
+pub const LOG_FLOOR: f32 = 1e-7;
+
+pub const STACK: usize = 4;
+pub const DECIMATE: usize = 2;
+pub const FEAT_DIM: usize = N_MEL * STACK;
+pub const FEAT_SCALE: f32 = 1.0 / 3.0;
+
+pub const N_PHONES: usize = 40;
+pub const BLANK: u32 = 0;
+pub const N_LABELS: usize = N_PHONES + 1;
+
+pub const N_WORDS: usize = 200;
+pub const WORD_MIN_PHONES: i64 = 2;
+pub const WORD_MAX_PHONES: i64 = 6;
+pub const SENT_MIN_WORDS: i64 = 1;
+pub const SENT_MAX_WORDS: i64 = 4;
+
+pub const PHONE_DUR_MIN_MS: i64 = 40;
+pub const PHONE_DUR_MAX_MS: i64 = 100;
+
+pub const WORLD_SEED: u64 = 0x5EED_2016;
+pub const NOISY_SNR_DB: (f64, f64) = (0.0, 10.0);
+pub const SYNTH_NOISE_FLOOR: f64 = 0.02;
+
+/// Seconds of audio represented by one output feature frame.
+pub const FRAME_SECONDS: f64 = (FRAME_HOP * DECIMATE) as f64 / SAMPLE_RATE as f64;

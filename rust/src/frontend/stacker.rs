@@ -1,0 +1,134 @@
+//! Frame stacking + decimation (paper §4: stack 8 / every 3rd; here 4/2).
+//!
+//! Output frame `t` concatenates raw frames `[D·t .. D·t+STACK-1]`
+//! (1 current + 3 right-context) and is emitted only when all of them
+//! exist — identical to `data.py::stack_frames`.
+
+use crate::frontend::spec;
+
+/// Streaming stacker: push raw mel frames, pop stacked feature frames.
+#[derive(Default)]
+pub struct Stacker {
+    /// Raw frames seen so far, pending stacking (bounded ring would do;
+    /// frames are small so a rolling Vec with drain keeps it simple).
+    pending: Vec<f32>,
+    /// Index (in raw frames) of pending[0].
+    base: usize,
+    /// Next output index to emit.
+    next_out: usize,
+}
+
+impl Stacker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Push one raw mel frame; append any completed stacked frames
+    /// (already FEAT_SCALE-scaled) to `out`.
+    pub fn push(&mut self, frame: &[f32], out: &mut Vec<f32>) -> usize {
+        debug_assert_eq!(frame.len(), spec::N_MEL);
+        self.pending.extend_from_slice(frame);
+        let mut emitted = 0;
+        loop {
+            let start_raw = self.next_out * spec::DECIMATE;
+            let end_raw = start_raw + spec::STACK;
+            let have = self.base + self.pending.len() / spec::N_MEL;
+            if end_raw > have {
+                break;
+            }
+            for k in 0..spec::STACK {
+                let idx = (start_raw + k - self.base) * spec::N_MEL;
+                for j in 0..spec::N_MEL {
+                    out.push(self.pending[idx + j] * spec::FEAT_SCALE);
+                }
+            }
+            self.next_out += 1;
+            emitted += 1;
+            // Drop raw frames no longer needed (before next start).
+            let keep_from = self.next_out * spec::DECIMATE;
+            if keep_from > self.base {
+                let drop = (keep_from - self.base).min(self.pending.len() / spec::N_MEL);
+                self.pending.drain(0..drop * spec::N_MEL);
+                self.base += drop;
+            }
+        }
+        emitted
+    }
+
+    pub fn reset(&mut self) {
+        self.pending.clear();
+        self.base = 0;
+        self.next_out = 0;
+    }
+}
+
+/// Batch stacking of a whole `[t_raw, N_MEL]` buffer (oracle for the
+/// streaming version; mirrors `data.py::stack_frames` + FEAT_SCALE).
+pub fn stack_all(frames: &[f32]) -> Vec<f32> {
+    let t_raw = frames.len() / spec::N_MEL;
+    if t_raw < spec::STACK {
+        return Vec::new();
+    }
+    let n_out = (t_raw - spec::STACK) / spec::DECIMATE + 1;
+    let mut out = Vec::with_capacity(n_out * spec::FEAT_DIM);
+    for t in 0..n_out {
+        for k in 0..spec::STACK {
+            let r = t * spec::DECIMATE + k;
+            for j in 0..spec::N_MEL {
+                out.push(frames[r * spec::N_MEL + j] * spec::FEAT_SCALE);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    #[test]
+    fn streaming_matches_batch() {
+        forall("stacker stream==batch", 40, 0x57AC, |g: &mut Gen| {
+            let t_raw = g.usize_in(0, 50);
+            let frames = g.vec_normal(t_raw * spec::N_MEL, 1.0);
+            let want = stack_all(&frames);
+            let mut s = Stacker::new();
+            let mut got = Vec::new();
+            for t in 0..t_raw {
+                s.push(&frames[t * spec::N_MEL..(t + 1) * spec::N_MEL], &mut got);
+            }
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn output_count_formula() {
+        for t_raw in 0..30 {
+            let frames = vec![0.5f32; t_raw * spec::N_MEL];
+            let out = stack_all(&frames);
+            let want = if t_raw < spec::STACK {
+                0
+            } else {
+                (t_raw - spec::STACK) / spec::DECIMATE + 1
+            };
+            assert_eq!(out.len() / spec::FEAT_DIM, want, "t_raw={t_raw}");
+        }
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut s = Stacker::new();
+        let mut out = Vec::new();
+        for _ in 0..10 {
+            s.push(&[1.0; spec::N_MEL], &mut out);
+        }
+        s.reset();
+        out.clear();
+        let n = s.push(&[2.0; spec::N_MEL], &mut out);
+        assert_eq!(n, 0); // needs STACK frames again
+    }
+}

@@ -1,0 +1,158 @@
+//! `.feats` dataset files (written by `python/compile/data.py`).
+//!
+//! Layout (LE): magic `FEA1`, u32 version, u32 count; per utterance:
+//! u32 uid, u32 T, u32 dim, u32 U, u32 W; f32 feats [T·dim];
+//! u32 phones [U]; u32 words [W]; u32 align [T].
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: &[u8; 4] = b"FEA1";
+
+/// One evaluation/training utterance.
+#[derive(Clone, Debug, Default)]
+pub struct Utt {
+    pub uid: u32,
+    /// [T, dim] row-major features.
+    pub feats: Vec<f32>,
+    pub num_frames: usize,
+    pub dim: usize,
+    /// Reference phone sequence (no blanks).
+    pub phones: Vec<u32>,
+    /// Reference word-id sequence.
+    pub words: Vec<u32>,
+    /// Per-frame phone alignment (0 = silence).
+    pub align: Vec<u32>,
+}
+
+impl Utt {
+    pub fn frame(&self, t: usize) -> &[f32] {
+        &self.feats[t * self.dim..(t + 1) * self.dim]
+    }
+}
+
+pub fn read_feats(path: impl AsRef<Path>) -> Result<Vec<Utt>> {
+    let path = path.as_ref();
+    let b = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut i = 0usize;
+    let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
+        if *i + n > b.len() {
+            bail!("truncated feats file at {}", *i);
+        }
+        let s = &b[*i..*i + n];
+        *i += n;
+        Ok(s)
+    };
+    let u32le = |i: &mut usize| -> Result<u32> {
+        let s = take(i, 4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    };
+    if take(&mut i, 4)? != MAGIC.as_slice() {
+        bail!("bad feats magic in {}", path.display());
+    }
+    let _version = u32le(&mut i)?;
+    let count = u32le(&mut i)? as usize;
+    let mut utts = Vec::with_capacity(count);
+    for _ in 0..count {
+        let uid = u32le(&mut i)?;
+        let t = u32le(&mut i)? as usize;
+        let dim = u32le(&mut i)? as usize;
+        let nu = u32le(&mut i)? as usize;
+        let nw = u32le(&mut i)? as usize;
+        let raw = take(&mut i, 4 * t * dim)?;
+        let feats = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let read_u32s = |i: &mut usize, n: usize| -> Result<Vec<u32>> {
+            Ok(take(i, 4 * n)?
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        let phones = read_u32s(&mut i, nu)?;
+        let words = read_u32s(&mut i, nw)?;
+        let align = read_u32s(&mut i, t)?;
+        utts.push(Utt { uid, feats, num_frames: t, dim, phones, words, align });
+    }
+    Ok(utts)
+}
+
+pub fn write_feats(path: impl AsRef<Path>, utts: &[Utt]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&1u32.to_le_bytes())?;
+    f.write_all(&(utts.len() as u32).to_le_bytes())?;
+    for u in utts {
+        f.write_all(&u.uid.to_le_bytes())?;
+        f.write_all(&(u.num_frames as u32).to_le_bytes())?;
+        f.write_all(&(u.dim as u32).to_le_bytes())?;
+        f.write_all(&(u.phones.len() as u32).to_le_bytes())?;
+        f.write_all(&(u.words.len() as u32).to_le_bytes())?;
+        for v in &u.feats {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        for v in &u.phones {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        for v in &u.words {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        for v in &u.align {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let utts = vec![
+            Utt {
+                uid: 7,
+                feats: (0..3 * 4).map(|i| i as f32 * 0.25).collect(),
+                num_frames: 3,
+                dim: 4,
+                phones: vec![5, 9],
+                words: vec![1],
+                align: vec![0, 5, 9],
+            },
+            Utt {
+                uid: 8,
+                feats: vec![1.5; 8],
+                num_frames: 2,
+                dim: 4,
+                phones: vec![],
+                words: vec![],
+                align: vec![0, 0],
+            },
+        ];
+        let dir = std::env::temp_dir().join("quantasr_test_feats");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.feats");
+        write_feats(&p, &utts).unwrap();
+        let back = read_feats(&p).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].uid, 7);
+        assert_eq!(back[0].feats, utts[0].feats);
+        assert_eq!(back[0].phones, utts[0].phones);
+        assert_eq!(back[0].align, utts[0].align);
+        assert_eq!(back[1].num_frames, 2);
+        assert_eq!(back[0].frame(1), &[1.0, 1.25, 1.5, 1.75]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("quantasr_test_feats");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.feats");
+        std::fs::write(&p, b"XXXX0000").unwrap();
+        assert!(read_feats(&p).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! File formats shared with the python build path, plus a minimal JSON
+//! reader (the vendored snapshot has no serde).
+//!
+//! - [`json`]     — tiny JSON parser (objects/arrays/strings/numbers/bools).
+//! - [`model_fmt`] — `.qam` acoustic-model files written by
+//!   `python/compile/export.py`.
+//! - [`feat_fmt`] — `.feats` dataset files written by
+//!   `python/compile/data.py`.
+
+pub mod feat_fmt;
+pub mod json;
+pub mod model_fmt;

@@ -1,0 +1,390 @@
+//! `.qam` acoustic-model files (written by `python/compile/export.py`).
+//!
+//! See export.py for the byte layout.  The loader keeps quantized tensors
+//! in their stored u8 form (plus `(vmin, q)`), so the native engine computes
+//! on exactly the grid QAT trained — no re-quantization drift.  This module
+//! can also *write* `.qam` files (used by the `quantize_model` example and
+//! round-trip tests).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::io::json::Json;
+use crate::quant::scheme::QuantParams;
+
+pub const MAGIC: &[u8; 4] = b"QAM1";
+
+/// One stored tensor: f32 or u8-quantized (eq. 2 values).
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    U8Q { shape: Vec<usize>, data: Vec<u8>, vmin: f32, q: f32 },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::U8Q { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Quant params for a U8Q tensor (zp derived as in export.py).
+    pub fn qparams(&self) -> Option<QuantParams> {
+        match self {
+            Tensor::U8Q { vmin, q, .. } => {
+                Some(QuantParams {
+                    vmin: *vmin,
+                    q: *q,
+                    zp: (*q as f64 * *vmin as f64).round() as i64,
+                    scale: crate::quant::scheme::SCALE,
+                })
+            }
+            Tensor::F32 { .. } => None,
+        }
+    }
+
+    /// Recover to f32 (row-major, original shape).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self {
+            Tensor::F32 { data, .. } => data.clone(),
+            Tensor::U8Q { data, .. } => {
+                let p = self.qparams().unwrap();
+                let mut out = vec![0f32; data.len()];
+                p.recover_slice(data, &mut out);
+                out
+            }
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len() * 4,
+            Tensor::U8Q { data, .. } => data.len() + 8,
+        }
+    }
+}
+
+/// Model architecture parsed from the `.qam` header (one Table-1 row).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelHeader {
+    pub name: String,
+    pub num_layers: usize,
+    pub cell_dim: usize,
+    /// `None` ⇒ no projection layer.
+    pub proj_dim: Option<usize>,
+    pub input_dim: usize,
+    pub num_labels: usize,
+    pub quantized: bool,
+    pub quantize_output: bool,
+    pub param_count: usize,
+}
+
+impl ModelHeader {
+    /// Recurrent/inter-layer width (P if projected else N).
+    pub fn rec_dim(&self) -> usize {
+        self.proj_dim.unwrap_or(self.cell_dim)
+    }
+
+    pub fn layer_in_dim(&self, layer: usize) -> usize {
+        if layer == 0 {
+            self.input_dim
+        } else {
+            self.rec_dim()
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let need = |k: &str| {
+            j.int(k).with_context(|| format!("qam header missing int field '{k}'"))
+        };
+        let proj = need("proj_dim")?;
+        Ok(ModelHeader {
+            name: j.str_field("name").unwrap_or("?").to_string(),
+            num_layers: need("num_layers")? as usize,
+            cell_dim: need("cell_dim")? as usize,
+            proj_dim: if proj < 0 { None } else { Some(proj as usize) },
+            input_dim: need("input_dim")? as usize,
+            num_labels: need("num_labels")? as usize,
+            quantized: j.get("quantized").and_then(Json::as_bool).unwrap_or(false),
+            quantize_output: j.get("quantize_output").and_then(Json::as_bool).unwrap_or(false),
+            param_count: j.int("param_count").unwrap_or(0) as usize,
+        })
+    }
+
+    fn to_json_string(&self) -> String {
+        format!(
+            concat!(
+                "{{\"name\": \"{}\", \"num_layers\": {}, \"cell_dim\": {}, ",
+                "\"proj_dim\": {}, \"input_dim\": {}, \"num_labels\": {}, ",
+                "\"quantized\": {}, \"quantize_output\": {}, \"param_count\": {}}}"
+            ),
+            self.name,
+            self.num_layers,
+            self.cell_dim,
+            self.proj_dim.map(|p| p as i64).unwrap_or(-1),
+            self.input_dim,
+            self.num_labels,
+            self.quantized,
+            self.quantize_output,
+            self.param_count,
+        )
+    }
+}
+
+/// A loaded `.qam` file.
+#[derive(Clone, Debug)]
+pub struct QamFile {
+    pub header: ModelHeader,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl QamFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading qam file {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Self> {
+        let mut r = Cursor { b, i: 0 };
+        if r.take(4)? != MAGIC.as_slice() {
+            bail!("bad magic");
+        }
+        let version = r.u32()?;
+        if version != 1 {
+            bail!("unsupported qam version {version}");
+        }
+        let hlen = r.u32()? as usize;
+        let hdr_bytes = r.take(hlen)?;
+        let hdr_json = Json::parse(std::str::from_utf8(hdr_bytes)?)
+            .map_err(|e| anyhow::anyhow!("header json: {e}"))?;
+        let header = ModelHeader::from_json(&hdr_json)?;
+        let n = r.u32()? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = r.u32()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+            let dtype = r.u8()?;
+            let ndim = r.u32()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u32()? as usize);
+            }
+            let count: usize = shape.iter().product();
+            let t = match dtype {
+                0 => {
+                    let raw = r.take(count * 4)?;
+                    let mut data = vec![0f32; count];
+                    for (i, c) in raw.chunks_exact(4).enumerate() {
+                        data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                    }
+                    Tensor::F32 { shape, data }
+                }
+                1 => {
+                    let vmin = r.f32()?;
+                    let q = r.f32()?;
+                    let data = r.take(count)?.to_vec();
+                    Tensor::U8Q { shape, data, vmin, q }
+                }
+                other => bail!("unknown dtype {other} for tensor {name}"),
+            };
+            tensors.insert(name, t);
+        }
+        Ok(QamFile { header, tensors })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&1u32.to_le_bytes())?;
+        let hdr = self.header.to_json_string();
+        f.write_all(&(hdr.len() as u32).to_le_bytes())?;
+        f.write_all(hdr.as_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            match t {
+                Tensor::F32 { shape, data } => {
+                    f.write_all(&[0u8])?;
+                    f.write_all(&(shape.len() as u32).to_le_bytes())?;
+                    for d in shape {
+                        f.write_all(&(*d as u32).to_le_bytes())?;
+                    }
+                    for v in data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Tensor::U8Q { shape, data, vmin, q } => {
+                    f.write_all(&[1u8])?;
+                    f.write_all(&(shape.len() as u32).to_le_bytes())?;
+                    for d in shape {
+                        f.write_all(&(*d as u32).to_le_bytes())?;
+                    }
+                    f.write_all(&vmin.to_le_bytes())?;
+                    f.write_all(&q.to_le_bytes())?;
+                    f.write_all(data)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("model is missing tensor '{name}'"))
+    }
+
+    /// Total parameter storage (the paper's memory-reduction metric).
+    pub fn storage_bytes(&self) -> usize {
+        self.tensors.values().map(Tensor::storage_bytes).sum()
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated file at byte {} (want {n})", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let s = self.take(4)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+}
+
+/// Read a raw little-endian f32 file (golden waveforms/features).
+pub fn read_f32_file(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?
+        .read_to_end(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> QamFile {
+        let mut tensors = BTreeMap::new();
+        tensors.insert(
+            "l0.wx".to_string(),
+            Tensor::U8Q {
+                shape: vec![3, 8],
+                data: (0..24).map(|i| (i * 10) as u8).collect(),
+                vmin: -1.25,
+                q: 100.0,
+            },
+        );
+        tensors.insert(
+            "l0.b".to_string(),
+            Tensor::F32 { shape: vec![8], data: (0..8).map(|i| i as f32 * 0.5).collect() },
+        );
+        QamFile {
+            header: ModelHeader {
+                name: "t".into(),
+                num_layers: 1,
+                cell_dim: 2,
+                proj_dim: Some(4),
+                input_dim: 3,
+                num_labels: 5,
+                quantized: true,
+                quantize_output: false,
+                param_count: 32,
+            },
+            tensors,
+        }
+    }
+
+    #[test]
+    fn roundtrip_save_load() {
+        let q = sample();
+        let dir = std::env::temp_dir().join("quantasr_test_qam");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.qam");
+        q.save(&p).unwrap();
+        let back = QamFile::load(&p).unwrap();
+        assert_eq!(back.header, q.header);
+        assert_eq!(back.tensors.len(), 2);
+        match (back.tensor("l0.wx").unwrap(), q.tensor("l0.wx").unwrap()) {
+            (
+                Tensor::U8Q { data: d1, vmin: v1, q: q1, shape: s1 },
+                Tensor::U8Q { data: d2, vmin: v2, q: q2, shape: s2 },
+            ) => {
+                assert_eq!(d1, d2);
+                assert_eq!(v1, v2);
+                assert_eq!(q1, q2);
+                assert_eq!(s1, s2);
+            }
+            _ => panic!("dtype changed"),
+        }
+    }
+
+    #[test]
+    fn recover_matches_eq3() {
+        let q = sample();
+        let t = q.tensor("l0.wx").unwrap();
+        let p = t.qparams().unwrap();
+        let f = t.to_f32();
+        if let Tensor::U8Q { data, .. } = t {
+            for (i, &vq) in data.iter().enumerate() {
+                assert_eq!(f[i], p.recover(vq));
+            }
+        }
+        // zp = round(q*vmin) = round(-125) = -125
+        assert_eq!(p.zp, -125);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(QamFile::from_bytes(b"NOPE").is_err());
+        let q = sample();
+        let dir = std::env::temp_dir().join("quantasr_test_qam");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trunc.qam");
+        q.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(QamFile::from_bytes(&bytes[..bytes.len() - 5]).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let q = sample();
+        assert!(q.tensor("does.not.exist").is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! # quantasr
+//!
+//! A reproduction of *“On the efficient representation and execution of deep
+//! acoustic models”* (Alvarez, Prabhavalkar, Bakhtin — Interspeech 2016).
+//!
+//! The library implements the paper's 8-bit uniform linear quantization
+//! scheme (§3), a quantized LSTM acoustic-model inference engine (§3.1), the
+//! infrastructure consumed by quantization-aware training (§3.2, training
+//! itself lives in `python/compile/train.py`), and the full embedded-ASR
+//! substrate the paper evaluates on: an audio frontend, a synthetic speech
+//! world, a CTC + lexicon + n-gram-LM decoder, and a streaming serving
+//! coordinator.
+//!
+//! Layers (see DESIGN.md):
+//! - **L3 (this crate)** — coordinator, decoder, native int8 engine.
+//! - **L2** — JAX model, AOT-lowered to HLO text, executed via [`runtime`].
+//! - **L1** — Pallas kernels (build-time; numerics cross-checked in tests).
+
+pub mod coordinator;
+pub mod decoder;
+pub mod eval;
+pub mod frontend;
+pub mod io;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;

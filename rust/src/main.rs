@@ -1,0 +1,358 @@
+//! `quantasr` CLI — the L3 entrypoint.
+//!
+//! ```text
+//! quantasr table1   --artifacts artifacts [--threads N]
+//! quantasr figure2  --artifacts artifacts
+//! quantasr eval     --model artifacts/models/p24.qat.qam --mode quant
+//!                   [--set eval_clean] [--artifacts artifacts]
+//! quantasr serve    --model … --mode quant [--addr 127.0.0.1:7700]
+//! quantasr bench-serve --model … [--streams 16] [--utts 64]
+//! quantasr ablate-rounding
+//! quantasr ablate-granularity [--model …]
+//! quantasr inspect  --model …
+//! quantasr pjrt-check --artifacts artifacts   (native vs AOT numerics)
+//! ```
+
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use quantasr::coordinator::{server, Engine, EngineConfig};
+use quantasr::decoder::DecoderConfig;
+use quantasr::eval::{build_decoder, evaluate, table1};
+use quantasr::io::feat_fmt::read_feats;
+use quantasr::io::model_fmt::QamFile;
+use quantasr::nn::{AcousticModel, ExecMode};
+use quantasr::quant::error as qerror;
+use quantasr::sim::dataset::{gen_wave, Style};
+use quantasr::sim::World;
+use quantasr::util::cli::Args;
+use quantasr::util::rng::Xoshiro256;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("table1") => cmd_table1(args),
+        Some("figure2") => cmd_figure2(args),
+        Some("eval") => cmd_eval(args),
+        Some("transcribe") => cmd_transcribe(args),
+        Some("serve") => cmd_serve(args),
+        Some("bench-serve") => cmd_bench_serve(args),
+        Some("ablate-rounding") => cmd_ablate_rounding(args),
+        Some("ablate-bits") => cmd_ablate_bits(args),
+        Some("ablate-granularity") => cmd_ablate_granularity(args),
+        Some("inspect") => cmd_inspect(args),
+        Some("pjrt-check") => cmd_pjrt_check(args),
+        Some(other) => bail!("unknown command '{other}' (see src/main.rs docs)"),
+        None => {
+            println!(
+                "quantasr — efficient representation and execution of deep acoustic models\n\
+                 commands: table1 figure2 eval serve bench-serve ablate-rounding \
+                 ablate-granularity inspect pjrt-check"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn threads(args: &Args) -> usize {
+    args.get_usize(
+        "threads",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    )
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let art = artifacts_dir(args);
+    let world = World::new();
+    let decoder = build_decoder(&world, DecoderConfig::default());
+    let rows = table1::run_table1(&art, &decoder, threads(args))?;
+    if rows.is_empty() {
+        bail!("no trained models found under {}/models — run `make table1`", art.display());
+    }
+    println!("\nTable 1 (reproduction): WER on clean/noisy eval sets\n");
+    println!("{}", table1::format_table(&rows));
+    Ok(())
+}
+
+fn cmd_figure2(args: &Args) -> Result<()> {
+    let art = artifacts_dir(args);
+    let curves = quantasr::eval::figure2::load_curves(&art)?;
+    println!("{}", quantasr::eval::figure2::format_figure(&curves));
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let art = artifacts_dir(args);
+    let model_path = args.get("model").context("--model required")?;
+    let mode = ExecMode::parse(args.get_or("mode", "quant"))?;
+    let set = args.get_or("set", "eval_clean");
+    let utts = read_feats(art.join(format!("data/{set}.feats")))?;
+    let model = AcousticModel::load(model_path, mode)?;
+    let world = World::new();
+    let decoder = build_decoder(&world, DecoderConfig::default());
+    let r = evaluate(&model, &decoder, &utts, threads(args));
+    println!(
+        "{model_path} mode={mode:?} set={set}\n  WER {:.2}%  LER {:.2}%  ({} utts, {} frames)\n  \
+         AM {:.2}s ({:.1} µs/frame)  decode {:.2}s  storage {} KB",
+        100.0 * r.wer,
+        100.0 * r.ler,
+        r.utts,
+        r.frames,
+        r.am_seconds,
+        1e6 * r.am_seconds / r.frames.max(1) as f64,
+        r.decode_seconds,
+        model.storage_bytes() / 1024,
+    );
+    Ok(())
+}
+
+fn load_engine(args: &Args) -> Result<Arc<Engine>> {
+    let model_path = args.get("model").context("--model required")?;
+    let mode = ExecMode::parse(args.get_or("mode", "quant"))?;
+    let model = Arc::new(AcousticModel::load(model_path, mode)?);
+    let world = World::new();
+    let decoder = Arc::new(build_decoder(&world, DecoderConfig::default()));
+    let mut cfg = EngineConfig::default();
+    cfg.policy.max_batch = args.get_usize("max-batch", cfg.policy.max_batch);
+    cfg.policy.deadline =
+        std::time::Duration::from_micros((args.get_f64("deadline-ms", 5.0) * 1e3) as u64);
+    Ok(Arc::new(Engine::start(model, decoder, cfg)))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let addr = args.get_or("addr", "127.0.0.1:7700").to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    println!("serving on {addr} (ctrl-c to stop)");
+    server::serve(engine, &addr, stop, |a| println!("bound {a}"))
+}
+
+/// In-process serving benchmark: N concurrent synthetic clients.
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let n_streams = args.get_usize("streams", 16);
+    let n_utts = args.get_usize("utts", 64);
+    let world = Arc::new(World::new());
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for s in 0..n_streams {
+            let engine = engine.clone();
+            let world = world.clone();
+            scope.spawn(move || {
+                for u in 0..n_utts.div_ceil(n_streams) {
+                    let uid = (s * 1000 + u) as u32;
+                    let wave = gen_wave(uid, 0xBE7C, &world, Style::Clean);
+                    let (id, rx) = engine.open_stream();
+                    // stream in 100 ms chunks
+                    for chunk in wave.wave.chunks(800) {
+                        engine.push_audio(id, chunk).unwrap();
+                    }
+                    engine.finish_stream(id).unwrap();
+                    let _ = rx.recv().unwrap();
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    println!("bench-serve: {n_streams} streams, ~{n_utts} utts in {wall:.2}s");
+    println!("{}", engine.metrics().report());
+    Ok(())
+}
+
+/// Batch transcription tool: decode a .feats file, print transcripts with
+/// N-best alternatives and per-utterance WER.
+fn cmd_transcribe(args: &Args) -> Result<()> {
+    let art = artifacts_dir(args);
+    let model_path = args.get("model").context("--model required")?;
+    let mode = ExecMode::parse(args.get_or("mode", "quant"))?;
+    let set = args.get_or("set", "eval_clean");
+    let nbest = args.get_usize("nbest", 1);
+    let limit = args.get_usize("utts", 10);
+    let utts = read_feats(art.join(format!("data/{set}.feats")))?;
+    let model = AcousticModel::load(model_path, mode)?;
+    let world = World::new();
+    let decoder = build_decoder(&world, DecoderConfig::default());
+    let mut stats = quantasr::decoder::wer::EditStats::default();
+    for u in utts.iter().take(limit) {
+        let lp = model.forward_utt(&u.feats, u.num_frames);
+        let hyps = decoder.decode_nbest(&lp, model.num_labels(), nbest.max(1));
+        let best = hyps.first().cloned().unwrap_or_default();
+        let st = quantasr::decoder::wer::align(&best.words, &u.words);
+        stats.add(&st);
+        println!(
+            "utt {:>5}  ref {:?}
+          hyp {:?}  ({} err)",
+            u.uid, u.words, best.words, st.errors()
+        );
+        for (rank, h) in hyps.iter().enumerate().skip(1) {
+            println!(
+                "          #{:<2} {:?}  (ac {:.1} lm {:.1})",
+                rank + 1, h.words, h.acoustic, h.lm_large
+            );
+        }
+    }
+    println!(
+        "
+WER over {} utts: {:.2}% ({} sub, {} del, {} ins / {} ref words)",
+        limit.min(utts.len()),
+        100.0 * stats.rate(),
+        stats.substitutions,
+        stats.deletions,
+        stats.insertions,
+        stats.ref_len
+    );
+    Ok(())
+}
+
+/// E2: bias error of consistent (eq. 2/3) vs naive quantization.
+fn cmd_ablate_rounding(_args: &Args) -> Result<()> {
+    let mut rng = Xoshiro256::new(0xE2);
+    println!("E2 — rounding-consistency ablation (paper §3, bias vs precision error)\n");
+    println!("{:<12} {:>12} {:>12} {:>12} {:>12}", "n", "bias(cons)", "rms(cons)", "bias(naive)", "rms(naive)");
+    for n in [256usize, 4096, 65536] {
+        let mut v = vec![0f32; n];
+        rng.fill_normal(&mut v);
+        let c = qerror::stats_consistent(&v);
+        let na = qerror::stats_naive(&v);
+        println!(
+            "{n:<12} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e}",
+            c.bias, c.rms, na.bias, na.rms
+        );
+    }
+    println!("\ndot-product error (k=512, 200 trials): |err| consistent vs naive");
+    let mut sum = (0.0, 0.0);
+    for _ in 0..200 {
+        let mut x = vec![0f32; 512];
+        let mut w = vec![0f32; 512];
+        rng.fill_normal(&mut x);
+        rng.fill_normal(&mut w);
+        let (c, na) = qerror::dot_bias_experiment(&x, &w);
+        sum.0 += c;
+        sum.1 += na;
+    }
+    println!("  mean |err| consistent = {:.4}   naive = {:.4}   ratio = {:.1}x",
+        sum.0 / 200.0, sum.1 / 200.0, sum.1 / sum.0.max(1e-12));
+    Ok(())
+}
+
+/// E5: weight bit-width sweep — post-training quantization at 8/6/5/4/3/2
+/// bits, WER on the clean eval set.  Reproduces the resolution-threshold
+/// finding the paper cites (Dündar & Rose: ≥10 bits needed without QAT;
+/// the paper's point is that 8 bits + their scheme is already enough).
+fn cmd_ablate_bits(args: &Args) -> Result<()> {
+    let art = artifacts_dir(args);
+    let default_model = art.join("models/p24.float.qam");
+    let model_path = args.get("model").map(PathBuf::from).unwrap_or(default_model);
+    let set = args.get_or("set", "eval_clean");
+    let utts = read_feats(art.join(format!("data/{set}.feats")))?;
+    let n = args.get_usize("utts", 1024).min(utts.len());
+    let world = World::new();
+    let decoder = build_decoder(&world, DecoderConfig::default());
+    println!("E5 — weight bit-width sweep on {} ({set}, {n} utts)\n", model_path.display());
+    let float = AcousticModel::load(&model_path, ExecMode::Float)?;
+    let base = evaluate(&float, &decoder, &utts[..n], threads(args));
+    println!("{:<8} {:>8} {:>8} {:>12}", "bits", "WER%", "LER%", "rel. loss");
+    println!("{:<8} {:>8.2} {:>8.2} {:>12}", "float", 100.0 * base.wer, 100.0 * base.ler, "-");
+    for bits in [8u32, 6, 5, 4, 3, 2] {
+        let mut m = AcousticModel::load(&model_path, ExecMode::Float)?;
+        m.requantize_bits(bits, false);
+        let r = evaluate(&m, &decoder, &utts[..n], threads(args));
+        println!(
+            "{:<8} {:>8.2} {:>8.2} {:>+11.1}%",
+            bits,
+            100.0 * r.wer,
+            100.0 * r.ler,
+            100.0 * (r.wer - base.wer) / base.wer.max(1e-9)
+        );
+    }
+    Ok(())
+}
+
+/// E3: granularity sweep on a real trained model's matrices.
+fn cmd_ablate_granularity(args: &Args) -> Result<()> {
+    let art = artifacts_dir(args);
+    let default_model = art.join("models/p24.float.qam");
+    let model_path = args
+        .get("model")
+        .map(PathBuf::from)
+        .unwrap_or(default_model);
+    let qam = QamFile::load(&model_path)?;
+    println!("E3 — quantization granularity (paper §3.1) on {}\n", model_path.display());
+    println!("{:<10} {:<20} {:>12} {:>12}", "tensor", "granularity", "rms err", "bytes");
+    for (name, t) in &qam.tensors {
+        let shape = t.shape();
+        if shape.len() != 2 {
+            continue;
+        }
+        let w = t.to_f32();
+        for (gname, rms, bytes) in qerror::granularity_sweep(&w, shape[0], shape[1]) {
+            println!("{name:<10} {gname:<20} {rms:>12.3e} {bytes:>12}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let model_path = args.get("model").context("--model required")?;
+    let qam = QamFile::load(model_path)?;
+    let h = &qam.header;
+    println!(
+        "{model_path}\n  name={} layers={} cells={} proj={:?} in={} labels={} quantized={} \
+         quantize_output={} params={}",
+        h.name, h.num_layers, h.cell_dim, h.proj_dim, h.input_dim, h.num_labels,
+        h.quantized, h.quantize_output, h.param_count
+    );
+    println!("  storage: {} KB", qam.storage_bytes() / 1024);
+    for (name, t) in &qam.tensors {
+        let kind = match t {
+            quantasr::io::model_fmt::Tensor::F32 { .. } => "f32",
+            quantasr::io::model_fmt::Tensor::U8Q { .. } => "u8q",
+        };
+        println!("    {name:<10} {kind} {:?}", t.shape());
+    }
+    Ok(())
+}
+
+/// Cross-check native int8 engine vs the AOT/PJRT graph on real frames.
+fn cmd_pjrt_check(args: &Args) -> Result<()> {
+    let art = artifacts_dir(args);
+    let utts = read_feats(art.join("data/eval_clean.feats"))?;
+    let u = &utts[0];
+    let rt = quantasr::runtime::Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    for (variant, qam, mode) in [
+        ("float", "p24.float.qam", ExecMode::Float),
+        ("quant", "p24.qat.qam", ExecMode::Quant),
+    ] {
+        let base = art.join(format!("hlo/p24.{variant}.b1"));
+        let exe = rt.load_model(&base)?;
+        let pjrt_lp = exe.forward_utt(&u.feats, u.num_frames)?;
+        let native = AcousticModel::load(art.join("models").join(qam), mode)?;
+        let native_lp = native.forward_utt(&u.feats, u.num_frames);
+        let max_err = pjrt_lp
+            .iter()
+            .zip(&native_lp)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("variant {variant:<6} frames={} max |dlogprob| native-vs-pjrt = {max_err:.4}", u.num_frames);
+    }
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Activation functions.  Plain f32 math — the paper recovers to float
+//! before activations precisely so these stay simple ("this simplifies the
+//! implementation of complex activation functions", §3.1).
+
+/// Numerically-stable logistic sigmoid.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        let z = (-x).exp();
+        1.0 / (1.0 + z)
+    } else {
+        let z = x.exp();
+        z / (1.0 + z)
+    }
+}
+
+#[inline]
+pub fn tanh(x: f32) -> f32 {
+    x.tanh()
+}
+
+pub fn sigmoid_slice(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = sigmoid(*v);
+    }
+}
+
+pub fn tanh_slice(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.tanh();
+    }
+}
+
+/// In-place log-softmax over each row of an `[batch, n]` buffer.
+pub fn log_softmax_rows(x: &mut [f32], batch: usize, n: usize) {
+    debug_assert_eq!(x.len(), batch * n);
+    for b in 0..batch {
+        let row = &mut x[b * n..(b + 1) * n];
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v -= mx;
+            sum += v.exp();
+        }
+        let ln = sum.ln();
+        for v in row.iter_mut() {
+            *v -= ln;
+        }
+    }
+}
+
+/// In-place softmax over each row.
+pub fn softmax_rows(x: &mut [f32], batch: usize, n: usize) {
+    log_softmax_rows(x, batch, n);
+    for v in x.iter_mut() {
+        *v = v.exp();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_matches_definition() {
+        for &x in &[-50.0f32, -5.0, -0.5, 0.0, 0.5, 5.0, 50.0] {
+            let want = 1.0 / (1.0 + (-x as f64).exp());
+            assert!((sigmoid(x) as f64 - want).abs() < 1e-6, "x={x}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_extremes_are_finite() {
+        assert_eq!(sigmoid(1e10), 1.0);
+        assert_eq!(sigmoid(-1e10), 0.0);
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let mut x = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        log_softmax_rows(&mut x, 2, 3);
+        for b in 0..2 {
+            let s: f32 = x[b * 3..(b + 1) * 3].iter().map(|v| v.exp()).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        // monotone: bigger logits → bigger log-probs
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut x = vec![0.5f32; 8];
+        softmax_rows(&mut x, 2, 4);
+        for b in 0..2 {
+            let s: f32 = x[b * 4..(b + 1) * 4].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!((x[b * 4] - 0.25).abs() < 1e-6);
+        }
+    }
+}

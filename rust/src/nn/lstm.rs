@@ -1,0 +1,282 @@
+//! The LSTMP cell (Sak et al. 2014): standard LSTM with an optional linear
+//! recurrent projection, executing over [`Linear`] layers so each weight
+//! matrix is independently float or §3.1-quantized (the paper's per-matrix
+//! granularity: Wx, Wh, Wp are separate quantization groups).
+//!
+//! Gate block layout is `[i | f | g | o]`, matching `model.py`,
+//! `kernels/lstm_step.py` and the `.qam` export.
+
+use anyhow::{ensure, Result};
+
+use crate::nn::activation::{sigmoid, tanh};
+use crate::nn::linear::Linear;
+use crate::quant::gemm::{Kernel, QScratch};
+
+/// One LSTM(P) layer.
+#[derive(Clone, Debug)]
+pub struct LstmLayer {
+    /// Input weights `[in, 4N]`.
+    pub wx: Linear,
+    /// Recurrent weights `[rec, 4N]`.
+    pub wh: Linear,
+    /// Gate bias `[4N]` (always f32; applied after recovery, Figure 1).
+    pub bias: Vec<f32>,
+    /// Projection `[N, P]` (None ⇒ plain LSTM, rec = N).
+    pub wp: Option<Linear>,
+    pub cell_dim: usize,
+}
+
+/// Recurrent state for one layer at a fixed batch size.
+#[derive(Clone, Debug)]
+pub struct LayerState {
+    /// Cell state `[batch, N]`.
+    pub c: Vec<f32>,
+    /// Output/recurrent state `[batch, rec]`.
+    pub h: Vec<f32>,
+}
+
+/// Reusable per-step scratch (allocation-free hot loop).
+#[derive(Default, Clone)]
+pub struct LstmScratch {
+    pub gates: Vec<f32>,
+    pub h_raw: Vec<f32>,
+    pub q: QScratch,
+}
+
+impl LstmLayer {
+    pub fn rec_dim(&self) -> usize {
+        self.wp.as_ref().map_or(self.cell_dim, Linear::out_dim)
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.wx.in_dim()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.wx.out_dim() == 4 * self.cell_dim, "wx out != 4N");
+        ensure!(self.wh.out_dim() == 4 * self.cell_dim, "wh out != 4N");
+        ensure!(self.wh.in_dim() == self.rec_dim(), "wh in != rec");
+        ensure!(self.bias.len() == 4 * self.cell_dim, "bias != 4N");
+        if let Some(wp) = &self.wp {
+            ensure!(wp.in_dim() == self.cell_dim, "wp in != N");
+        }
+        Ok(())
+    }
+
+    pub fn zero_state(&self, batch: usize) -> LayerState {
+        LayerState {
+            c: vec![0.0; batch * self.cell_dim],
+            h: vec![0.0; batch * self.rec_dim()],
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.wx.storage_bytes()
+            + self.wh.storage_bytes()
+            + self.bias.len() * 4
+            + self.wp.as_ref().map_or(0, Linear::storage_bytes)
+    }
+
+    /// One timestep: `x [batch, in]` + state → state updated in place.
+    /// After the call `state.h` holds the layer output (projected if P).
+    pub fn step(
+        &self,
+        x: &[f32],
+        batch: usize,
+        state: &mut LayerState,
+        s: &mut LstmScratch,
+        kernel: Kernel,
+    ) {
+        let n = self.cell_dim;
+        debug_assert_eq!(x.len(), batch * self.in_dim());
+        s.gates.resize(batch * 4 * n, 0.0);
+
+        // gates = x·Wx + h·Wh + b   (two GEMMs fused via accumulate)
+        self.wx.forward(x, batch, Some(&self.bias), &mut s.gates, &mut s.q, kernel, false);
+        self.wh.forward(&state.h, batch, None, &mut s.gates, &mut s.q, kernel, true);
+
+        // Elementwise cell update (layout [i | f | g | o]).
+        for bi in 0..batch {
+            let g = &mut s.gates[bi * 4 * n..(bi + 1) * 4 * n];
+            let c = &mut state.c[bi * n..(bi + 1) * n];
+            for j in 0..n {
+                let i_g = sigmoid(g[j]);
+                let f_g = sigmoid(g[n + j]);
+                let g_g = tanh(g[2 * n + j]);
+                let o_g = sigmoid(g[3 * n + j]);
+                let c_new = f_g * c[j] + i_g * g_g;
+                c[j] = c_new;
+                // stash pre-projection output in the gates buffer (i slot)
+                g[j] = o_g * c_new.tanh();
+            }
+        }
+
+        match &self.wp {
+            None => {
+                // h = pre-projection output
+                for bi in 0..batch {
+                    let src = &s.gates[bi * 4 * n..bi * 4 * n + n];
+                    state.h[bi * n..(bi + 1) * n].copy_from_slice(src);
+                }
+            }
+            Some(wp) => {
+                let p = wp.out_dim();
+                s.h_raw.resize(batch * n, 0.0);
+                for bi in 0..batch {
+                    let src = &s.gates[bi * 4 * n..bi * 4 * n + n];
+                    s.h_raw[bi * n..(bi + 1) * n].copy_from_slice(src);
+                }
+                state.h.resize(batch * p, 0.0);
+                wp.forward(&s.h_raw, batch, None, &mut state.h, &mut s.q, kernel, false);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::model_fmt::Tensor;
+    use crate::util::prop::Gen;
+
+    fn layer(in_dim: usize, n: usize, p: Option<usize>, g: &mut Gen) -> LstmLayer {
+        let t = |i: usize, o: usize, g: &mut Gen| {
+            Linear::from_tensor(&Tensor::F32 {
+                shape: vec![i, o],
+                data: g.vec_normal(i * o, (1.0 / (i as f32).sqrt()) * 1.7),
+            })
+            .unwrap()
+        };
+        let rec = p.unwrap_or(n);
+        LstmLayer {
+            wx: t(in_dim, 4 * n, g),
+            wh: t(rec, 4 * n, g),
+            bias: g.vec_normal(4 * n, 0.1),
+            wp: p.map(|pp| t(n, pp, g)),
+            cell_dim: n,
+        }
+    }
+
+    /// Direct (unfused, f64) reference implementation of one step.
+    fn reference_step(
+        l: &LstmLayer,
+        x: &[f32],
+        batch: usize,
+        c: &mut Vec<f32>,
+        h: &mut Vec<f32>,
+    ) {
+        let n = l.cell_dim;
+        let in_dim = l.in_dim();
+        let rec = l.rec_dim();
+        let wx = match &l.wx { Linear::Float(f) => f, _ => panic!() };
+        let wh = match &l.wh { Linear::Float(f) => f, _ => panic!() };
+        let mut new_h = vec![0f32; batch * rec];
+        for bi in 0..batch {
+            let mut gates = vec![0f64; 4 * n];
+            for o in 0..4 * n {
+                let mut acc = l.bias[o] as f64;
+                for k in 0..in_dim {
+                    acc += x[bi * in_dim + k] as f64 * wx.data[o * in_dim + k] as f64;
+                }
+                for k in 0..rec {
+                    acc += h[bi * rec + k] as f64 * wh.data[o * rec + k] as f64;
+                }
+                gates[o] = acc;
+            }
+            let sig = |v: f64| 1.0 / (1.0 + (-v).exp());
+            let mut pre = vec![0f32; n];
+            for j in 0..n {
+                let i_g = sig(gates[j]);
+                let f_g = sig(gates[n + j]);
+                let g_g = gates[2 * n + j].tanh();
+                let o_g = sig(gates[3 * n + j]);
+                let c_new = f_g * c[bi * n + j] as f64 + i_g * g_g;
+                c[bi * n + j] = c_new as f32;
+                pre[j] = (o_g * c_new.tanh()) as f32;
+            }
+            match &l.wp {
+                None => new_h[bi * rec..(bi + 1) * rec].copy_from_slice(&pre),
+                Some(Linear::Float(wp)) => {
+                    for o in 0..rec {
+                        let mut acc = 0f64;
+                        for k in 0..n {
+                            acc += pre[k] as f64 * wp.data[o * n + k] as f64;
+                        }
+                        new_h[bi * rec + o] = acc as f32;
+                    }
+                }
+                _ => panic!(),
+            }
+        }
+        *h = new_h;
+    }
+
+    #[test]
+    fn step_matches_reference_plain_and_projected() {
+        for p in [None, Some(5)] {
+            let mut g = Gen::new(42);
+            let l = layer(12, 8, p, &mut g);
+            l.validate().unwrap();
+            let batch = 3;
+            let mut st = l.zero_state(batch);
+            let mut c_ref = st.c.clone();
+            let mut h_ref = st.h.clone();
+            let mut s = LstmScratch::default();
+            for _t in 0..6 {
+                let x = g.vec_normal(batch * 12, 1.0);
+                l.step(&x, batch, &mut st, &mut s, Kernel::Auto);
+                reference_step(&l, &x, batch, &mut c_ref, &mut h_ref);
+            }
+            for (a, b) in st.c.iter().zip(&c_ref) {
+                assert!((a - b).abs() < 1e-4, "c: {a} vs {b} (p={p:?})");
+            }
+            for (a, b) in st.h.iter().zip(&h_ref) {
+                assert!((a - b).abs() < 1e-4, "h: {a} vs {b} (p={p:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_step_close_to_float() {
+        let mut g = Gen::new(7);
+        let l = layer(16, 12, Some(6), &mut g);
+        let lq = LstmLayer {
+            wx: l.wx.quantize_now(),
+            wh: l.wh.quantize_now(),
+            bias: l.bias.clone(),
+            wp: l.wp.as_ref().map(Linear::quantize_now),
+            cell_dim: l.cell_dim,
+        };
+        let batch = 2;
+        let mut st_f = l.zero_state(batch);
+        let mut st_q = lq.zero_state(batch);
+        let mut s = LstmScratch::default();
+        for _t in 0..10 {
+            let x = g.vec_normal(batch * 16, 1.0);
+            l.step(&x, batch, &mut st_f, &mut s, Kernel::Auto);
+            lq.step(&x, batch, &mut st_q, &mut s, Kernel::Auto);
+        }
+        // States drift slowly; must stay within a small absolute envelope.
+        for (a, b) in st_f.h.iter().zip(&st_q.h) {
+            assert!((a - b).abs() < 0.15, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn state_shapes() {
+        let mut g = Gen::new(1);
+        let l = layer(10, 6, Some(3), &mut g);
+        let st = l.zero_state(4);
+        assert_eq!(st.c.len(), 24);
+        assert_eq!(st.h.len(), 12);
+        assert_eq!(l.rec_dim(), 3);
+    }
+
+    #[test]
+    fn validate_catches_shape_bugs() {
+        let mut g = Gen::new(2);
+        let mut l = layer(10, 6, None, &mut g);
+        l.bias = vec![0.0; 3];
+        assert!(l.validate().is_err());
+    }
+}

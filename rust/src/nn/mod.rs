@@ -1,0 +1,16 @@
+//! The native inference engine: float and 8-bit-quantized execution of the
+//! paper's LSTM acoustic models (§3.1), loaded from `.qam` files.
+//!
+//! - [`activation`] — sigmoid/tanh/softmax primitives.
+//! - [`linear`]     — a dense layer that is either f32 or quantized
+//!   (Figure 1: quantize input → integer GEMM → recover → bias → F).
+//! - [`lstm`]       — the LSTMP cell (Sak et al. 2014) on top of `linear`.
+//! - [`model`]      — the full stacked acoustic model + streaming state.
+
+pub mod activation;
+pub mod linear;
+pub mod lstm;
+pub mod model;
+
+pub use linear::Linear;
+pub use model::{AcousticModel, ExecMode, ModelState};

@@ -1,0 +1,377 @@
+//! The full acoustic model: stacked LSTMP layers + softmax output,
+//! loaded from `.qam`, streaming per-timestep execution.
+//!
+//! [`ExecMode`] reproduces the paper's Table-1 conditions:
+//! - `Float`           — everything f32 ('match'; also recovers quantized
+//!                        models to their float grid for cross-checks).
+//! - `Quant`           — every matrix through the §3.1 integer path except
+//!                        the softmax ('mismatch' for float-trained models,
+//!                        'quant' for QAT models).
+//! - `QuantAll`        — softmax quantized too ('quant-all').
+//!
+//! Models exported by QAT already store u8 grids; `Quant`/`QuantAll` uses
+//! them untouched.  Float-trained models get post-hoc quantization
+//! (`Linear::quantize_now`) — exactly the paper's mismatch condition.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::io::model_fmt::{ModelHeader, QamFile, Tensor};
+use crate::nn::activation::log_softmax_rows;
+use crate::nn::linear::Linear;
+use crate::nn::lstm::{LayerState, LstmLayer, LstmScratch};
+use crate::quant::gemm::{Kernel, QScratch};
+
+/// Execution numerics (Table-1 column).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    Float,
+    Quant,
+    QuantAll,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "float" | "match" => ExecMode::Float,
+            "quant" | "mismatch" => ExecMode::Quant,
+            "quant-all" | "quant_all" => ExecMode::QuantAll,
+            other => anyhow::bail!("unknown exec mode '{other}'"),
+        })
+    }
+}
+
+/// Streaming state + scratch for a fixed batch size.
+pub struct ModelState {
+    pub batch: usize,
+    pub layers: Vec<LayerState>,
+    pub scratch: LstmScratch,
+    pub qout: QScratch,
+    /// Layer-output ping/pong buffers.
+    buf: Vec<f32>,
+}
+
+impl ModelState {
+    /// Reset one stream's recurrent state to zero (utterance boundary).
+    pub fn reset_stream(&mut self, model: &AcousticModel, stream: usize) {
+        for (l, st) in model.layers.iter().zip(self.layers.iter_mut()) {
+            let n = l.cell_dim;
+            let r = l.rec_dim();
+            st.c[stream * n..(stream + 1) * n].fill(0.0);
+            st.h[stream * r..(stream + 1) * r].fill(0.0);
+        }
+    }
+
+    /// Copy one stream's state from another `ModelState` (used by the
+    /// batcher when migrating streams between batch slots).
+    pub fn copy_stream_from(
+        &mut self,
+        model: &AcousticModel,
+        dst: usize,
+        src_state: &ModelState,
+        src: usize,
+    ) {
+        for (l, (d, s)) in model
+            .layers
+            .iter()
+            .zip(self.layers.iter_mut().zip(src_state.layers.iter()))
+        {
+            let n = l.cell_dim;
+            let r = l.rec_dim();
+            d.c[dst * n..(dst + 1) * n].copy_from_slice(&s.c[src * n..(src + 1) * n]);
+            d.h[dst * r..(dst + 1) * r].copy_from_slice(&s.h[src * r..(src + 1) * r]);
+        }
+    }
+}
+
+/// The stacked acoustic model.
+pub struct AcousticModel {
+    pub header: ModelHeader,
+    pub layers: Vec<LstmLayer>,
+    pub out: Linear,
+    pub out_bias: Vec<f32>,
+    pub mode: ExecMode,
+    pub kernel: Kernel,
+}
+
+impl AcousticModel {
+    /// Load a `.qam` and prepare it under the given execution mode.
+    pub fn load(path: impl AsRef<Path>, mode: ExecMode) -> Result<Self> {
+        let qam = QamFile::load(path)?;
+        Self::from_qam(&qam, mode)
+    }
+
+    pub fn from_qam(qam: &QamFile, mode: ExecMode) -> Result<Self> {
+        let h = &qam.header;
+        let adapt = |t: &Tensor, want_quant: bool| -> Result<Linear> {
+            let l = Linear::from_tensor(t)?;
+            Ok(match (want_quant, l.is_quant()) {
+                (true, false) => l.quantize_now(), // mismatch path
+                (false, true) => l.to_float(),     // float view of QAT model
+                _ => l,
+            })
+        };
+        let quant_inner = mode != ExecMode::Float;
+        let quant_out = mode == ExecMode::QuantAll;
+
+        let mut layers = Vec::with_capacity(h.num_layers);
+        for l in 0..h.num_layers {
+            let wx = adapt(qam.tensor(&format!("l{l}.wx"))?, quant_inner)?;
+            let wh = adapt(qam.tensor(&format!("l{l}.wh"))?, quant_inner)?;
+            let bias = qam.tensor(&format!("l{l}.b"))?.to_f32();
+            let wp = match h.proj_dim {
+                Some(_) => Some(adapt(qam.tensor(&format!("l{l}.wp"))?, quant_inner)?),
+                None => None,
+            };
+            let layer = LstmLayer { wx, wh, bias, wp, cell_dim: h.cell_dim };
+            layer.validate().with_context(|| format!("layer {l}"))?;
+            layers.push(layer);
+        }
+        let out = adapt(qam.tensor("out.w")?, quant_out)?;
+        let out_bias = qam.tensor("out.b")?.to_f32();
+        ensure!(out.out_dim() == h.num_labels, "output dim mismatch");
+        ensure!(out_bias.len() == h.num_labels, "output bias mismatch");
+        ensure!(layers[0].in_dim() == h.input_dim, "input dim mismatch");
+        Ok(AcousticModel { header: h.clone(), layers, out, out_bias, mode, kernel: Kernel::Auto })
+    }
+
+    /// Re-quantize every weight matrix at the given bit width (from the
+    /// float view) — the E5 bit-width ablation path.
+    pub fn requantize_bits(&mut self, bits: u32, include_output: bool) {
+        for l in self.layers.iter_mut() {
+            l.wx = l.wx.to_float().quantize_bits(bits);
+            l.wh = l.wh.to_float().quantize_bits(bits);
+            if let Some(wp) = &l.wp {
+                l.wp = Some(wp.to_float().quantize_bits(bits));
+            }
+        }
+        if include_output {
+            self.out = self.out.to_float().quantize_bits(bits);
+        }
+    }
+
+    pub fn num_labels(&self) -> usize {
+        self.header.num_labels
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.header.input_dim
+    }
+
+    /// Weight storage under the current mode (paper's memory claim).
+    pub fn storage_bytes(&self) -> usize {
+        self.layers.iter().map(LstmLayer::storage_bytes).sum::<usize>()
+            + self.out.storage_bytes()
+            + self.out_bias.len() * 4
+    }
+
+    pub fn new_state(&self, batch: usize) -> ModelState {
+        ModelState {
+            batch,
+            layers: self.layers.iter().map(|l| l.zero_state(batch)).collect(),
+            scratch: LstmScratch::default(),
+            qout: QScratch::default(),
+            buf: Vec::new(),
+        }
+    }
+
+    /// One timestep for the whole batch: `x [batch, input_dim]` →
+    /// `log_probs [batch, num_labels]` written into `out`.
+    pub fn step(&self, x: &[f32], state: &mut ModelState, out: &mut [f32]) {
+        let batch = state.batch;
+        debug_assert_eq!(x.len(), batch * self.input_dim());
+        debug_assert_eq!(out.len(), batch * self.num_labels());
+
+        // Layer 0 reads x; subsequent layers read the previous layer's h.
+        // We copy h into `buf` because `step` mutates state.h in place.
+        let mut first = true;
+        for (li, layer) in self.layers.iter().enumerate() {
+            if first {
+                layer.step(x, batch, &mut state.layers[li], &mut state.scratch, self.kernel);
+                first = false;
+            } else {
+                let (prev, cur) = state.layers.split_at_mut(li);
+                state.buf.clear();
+                state.buf.extend_from_slice(&prev[li - 1].h);
+                layer.step(&state.buf, batch, &mut cur[0], &mut state.scratch, self.kernel);
+            }
+        }
+        let h_top = &state.layers[self.layers.len() - 1].h;
+        self.out.forward(
+            h_top,
+            batch,
+            Some(&self.out_bias),
+            out,
+            &mut state.qout,
+            self.kernel,
+            false,
+        );
+        log_softmax_rows(out, batch, self.num_labels());
+    }
+
+    /// Run a full utterance (batch 1) and return `[T, num_labels]`
+    /// log-posteriors — the evaluation path.
+    pub fn forward_utt(&self, feats: &[f32], num_frames: usize) -> Vec<f32> {
+        let d = self.input_dim();
+        debug_assert_eq!(feats.len(), num_frames * d);
+        let mut state = self.new_state(1);
+        let l = self.num_labels();
+        let mut out = vec![0f32; num_frames * l];
+        for t in 0..num_frames {
+            let (x, y) = (&feats[t * d..(t + 1) * d], &mut out[t * l..(t + 1) * l]);
+            self.step(x, &mut state, y);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::model_fmt::{ModelHeader, QamFile};
+    use crate::util::prop::Gen;
+    use std::collections::BTreeMap;
+
+    /// Construct a random float .qam in memory.
+    pub fn random_qam(
+        num_layers: usize,
+        cell: usize,
+        proj: Option<usize>,
+        input_dim: usize,
+        labels: usize,
+        g: &mut Gen,
+    ) -> QamFile {
+        let rec = proj.unwrap_or(cell);
+        let mut tensors = BTreeMap::new();
+        fn mk(
+            tensors: &mut BTreeMap<String, Tensor>,
+            name: String,
+            i: usize,
+            o: usize,
+            g: &mut Gen,
+        ) {
+            let scale = 1.0 / (i as f32).sqrt();
+            tensors.insert(
+                name,
+                Tensor::F32 { shape: vec![i, o], data: g.vec_normal(i * o, scale) },
+            );
+        }
+        for l in 0..num_layers {
+            let ind = if l == 0 { input_dim } else { rec };
+            mk(&mut tensors, format!("l{l}.wx"), ind, 4 * cell, g);
+            mk(&mut tensors, format!("l{l}.wh"), rec, 4 * cell, g);
+            tensors.insert(
+                format!("l{l}.b"),
+                Tensor::F32 { shape: vec![4 * cell], data: vec![0.0; 4 * cell] },
+            );
+            if let Some(p) = proj {
+                mk(&mut tensors, format!("l{l}.wp"), cell, p, g);
+            }
+        }
+        mk(&mut tensors, "out.w".into(), rec, labels, g);
+        tensors.insert(
+            "out.b".into(),
+            Tensor::F32 { shape: vec![labels], data: vec![0.0; labels] },
+        );
+        QamFile {
+            header: ModelHeader {
+                name: "rand".into(),
+                num_layers,
+                cell_dim: cell,
+                proj_dim: proj,
+                input_dim,
+                num_labels: labels,
+                quantized: false,
+                quantize_output: false,
+                param_count: 0,
+            },
+            tensors,
+        }
+    }
+
+    #[test]
+    fn step_output_is_log_distribution() {
+        let mut g = Gen::new(5);
+        let qam = random_qam(2, 8, Some(4), 10, 7, &mut g);
+        for mode in [ExecMode::Float, ExecMode::Quant, ExecMode::QuantAll] {
+            let m = AcousticModel::from_qam(&qam, mode).unwrap();
+            let mut st = m.new_state(3);
+            let x = g.vec_normal(3 * 10, 1.0);
+            let mut out = vec![0f32; 3 * 7];
+            m.step(&x, &mut st, &mut out);
+            for b in 0..3 {
+                let s: f32 = out[b * 7..(b + 1) * 7].iter().map(|v| v.exp()).sum();
+                assert!((s - 1.0).abs() < 1e-4, "mode {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_close_to_float_on_sequence() {
+        let mut g = Gen::new(6);
+        let qam = random_qam(2, 12, None, 8, 5, &mut g);
+        let mf = AcousticModel::from_qam(&qam, ExecMode::Float).unwrap();
+        let mq = AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap();
+        let feats = g.vec_normal(20 * 8, 1.0);
+        let of = mf.forward_utt(&feats, 20);
+        let oq = mq.forward_utt(&feats, 20);
+        let mut max_err = 0.0f32;
+        for (a, b) in of.iter().zip(&oq) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 0.5, "quantized log-probs drifted: {max_err}");
+    }
+
+    #[test]
+    fn batch_and_single_stream_agree() {
+        // Running 2 streams batched must equal running them separately.
+        let mut g = Gen::new(8);
+        let qam = random_qam(2, 10, Some(5), 6, 9, &mut g);
+        let m = AcousticModel::from_qam(&qam, ExecMode::Float).unwrap();
+        let xa = g.vec_normal(5 * 6, 1.0);
+        let xb = g.vec_normal(5 * 6, 1.0);
+        let oa = m.forward_utt(&xa, 5);
+        let ob = m.forward_utt(&xb, 5);
+        let mut st = m.new_state(2);
+        let mut out = vec![0f32; 2 * 9];
+        for t in 0..5 {
+            let mut x = Vec::new();
+            x.extend_from_slice(&xa[t * 6..(t + 1) * 6]);
+            x.extend_from_slice(&xb[t * 6..(t + 1) * 6]);
+            m.step(&x, &mut st, &mut out);
+            for j in 0..9 {
+                assert!((out[j] - oa[t * 9 + j]).abs() < 2e-4, "t={t} j={j}");
+                assert!((out[9 + j] - ob[t * 9 + j]).abs() < 2e-4, "t={t} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_stream_isolates_state() {
+        let mut g = Gen::new(9);
+        let qam = random_qam(1, 6, None, 4, 5, &mut g);
+        let m = AcousticModel::from_qam(&qam, ExecMode::Float).unwrap();
+        let mut st = m.new_state(2);
+        let x = g.vec_normal(2 * 4, 1.0);
+        let mut out = vec![0f32; 2 * 5];
+        m.step(&x, &mut st, &mut out);
+        st.reset_stream(&m, 0);
+        assert!(st.layers[0].c[..6].iter().all(|&v| v == 0.0));
+        assert!(st.layers[0].c[6..].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn quant_storage_smaller_than_float() {
+        let mut g = Gen::new(10);
+        let qam = random_qam(3, 32, Some(16), 64, 41, &mut g);
+        let mf = AcousticModel::from_qam(&qam, ExecMode::Float).unwrap();
+        let mq = AcousticModel::from_qam(&qam, ExecMode::QuantAll).unwrap();
+        assert!(
+            (mq.storage_bytes() as f64) < mf.storage_bytes() as f64 / 3.0,
+            "{} vs {}",
+            mq.storage_bytes(),
+            mf.storage_bytes()
+        );
+    }
+}

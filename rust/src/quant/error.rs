@@ -1,0 +1,156 @@
+//! Quantization error analysis (experiments E2 and E3).
+//!
+//! The paper (§3) distinguishes **precision loss** (unavoidable, zero-mean,
+//! small variance impact) from **bias error** (avoidable via the
+//! rounding-consistent zero point of eqs. 2–3).  These helpers measure both
+//! for the consistent and the naive scheme, plus the granularity sweep.
+
+use crate::quant::qmatrix::{Granularity, QMatrix};
+use crate::quant::scheme::{NaiveQuantParams, QuantParams};
+
+/// First/second moments of the quantization error `recover(quantize(x)) − x`.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorStats {
+    pub bias: f64,
+    pub rms: f64,
+    pub max_abs: f64,
+}
+
+pub fn stats_consistent(v: &[f32]) -> ErrorStats {
+    let p = QuantParams::from_slice(v);
+    collect(v.iter().map(|&x| (p.recover(p.quantize(x)) - x) as f64))
+}
+
+pub fn stats_naive(v: &[f32]) -> ErrorStats {
+    let p = NaiveQuantParams::from_slice(v);
+    collect(v.iter().map(|&x| (p.recover(p.quantize(x)) - x) as f64))
+}
+
+fn collect(errs: impl Iterator<Item = f64>) -> ErrorStats {
+    let mut n = 0usize;
+    let (mut sum, mut sq, mut mx) = (0.0, 0.0, 0.0f64);
+    for e in errs {
+        n += 1;
+        sum += e;
+        sq += e * e;
+        mx = mx.max(e.abs());
+    }
+    let n = n.max(1) as f64;
+    ErrorStats { bias: sum / n, rms: (sq / n).sqrt(), max_abs: mx }
+}
+
+/// Variance preservation check (paper §3 cites [22]: the variance of V and
+/// V' differs only slightly).  Returns (var_in, var_recovered).
+pub fn variance_ratio(v: &[f32]) -> (f64, f64) {
+    let p = QuantParams::from_slice(v);
+    let mean = |s: &mut dyn Iterator<Item = f64>| -> (f64, f64) {
+        let xs: Vec<f64> = s.collect();
+        let m = xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+        let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len().max(1) as f64;
+        (m, var)
+    };
+    let (_, var_in) = mean(&mut v.iter().map(|&x| x as f64));
+    let (_, var_out) = mean(&mut v.iter().map(|&x| p.recover(p.quantize(x)) as f64));
+    (var_in, var_out)
+}
+
+/// RMS weight-matrix reconstruction error per granularity (E3).
+pub fn granularity_sweep(w: &[f32], in_dim: usize, out_dim: usize) -> Vec<(String, f64, usize)> {
+    let grans = [
+        ("per-tensor(matrix)".to_string(), Granularity::PerMatrix),
+        ("per-row".to_string(), Granularity::PerRow),
+        ("block-64".to_string(), Granularity::SubBlock { size: 64 }),
+        ("block-16".to_string(), Granularity::SubBlock { size: 16 }),
+    ];
+    grans
+        .into_iter()
+        .map(|(name, g)| {
+            let m = QMatrix::from_f32_math_layout(w, in_dim, out_dim, g);
+            let r = m.recover_math_layout();
+            let rms = (w
+                .iter()
+                .zip(&r)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / w.len() as f64)
+                .sqrt();
+            (name, rms, m.storage_bytes())
+        })
+        .collect()
+}
+
+/// Bias accumulation in a dot product of length `k` (why eq. 2/3 matter):
+/// returns (consistent_err, naive_err) of `Σ q(x)·q(w)` vs `Σ x·w`.
+pub fn dot_bias_experiment(x: &[f32], w: &[f32]) -> (f64, f64) {
+    let exact: f64 = x.iter().zip(w).map(|(&a, &b)| a as f64 * b as f64).sum();
+    let px = QuantParams::from_slice(x);
+    let pw = QuantParams::from_slice(w);
+    let cons: f64 = x
+        .iter()
+        .zip(w)
+        .map(|(&a, &b)| px.recover(px.quantize(a)) as f64 * pw.recover(pw.quantize(b)) as f64)
+        .sum();
+    let nx = NaiveQuantParams::from_slice(x);
+    let nw = NaiveQuantParams::from_slice(w);
+    let naive: f64 = x
+        .iter()
+        .zip(w)
+        .map(|(&a, &b)| nx.recover(nx.quantize(a)) as f64 * nw.recover(nw.quantize(b)) as f64)
+        .sum();
+    ((cons - exact).abs(), (naive - exact).abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    #[test]
+    fn consistent_bias_much_smaller_than_naive() {
+        forall("bias e2", 30, 0xE2, |g: &mut Gen| {
+            let n = g.usize_in(512, 4096);
+            let v = g.vec_normal(n, 1.0);
+            let c = stats_consistent(&v);
+            let na = stats_naive(&v);
+            // consistent: |bias| ≪ rms; naive: bias comparable to step/2.
+            assert!(c.bias.abs() < 0.2 * c.rms + 1e-6, "c={c:?}");
+            assert!(na.bias.abs() > 2.0 * c.bias.abs().max(1e-6), "c={c:?} n={na:?}");
+        });
+    }
+
+    #[test]
+    fn variance_nearly_preserved() {
+        let mut g = Gen::new(4);
+        let v = g.vec_normal(8192, 0.7);
+        let (vi, vo) = variance_ratio(&v);
+        assert!((vi / vo - 1.0).abs() < 0.01, "{vi} vs {vo}");
+    }
+
+    #[test]
+    fn granularity_sweep_monotone_error() {
+        let mut g = Gen::new(5);
+        let w = g.vec_normal(128 * 96, 0.4);
+        let sweep = granularity_sweep(&w, 128, 96);
+        let per_matrix = sweep[0].1;
+        let per_row = sweep[1].1;
+        assert!(per_row <= per_matrix * 1.01, "{sweep:?}");
+        // storage grows with granularity
+        assert!(sweep[1].2 >= sweep[0].2);
+    }
+
+    #[test]
+    fn dot_bias_consistent_wins_on_average() {
+        let mut g = Gen::new(6);
+        let (mut wins, n) = (0, 40);
+        for _ in 0..n {
+            let k = g.usize_in(64, 512);
+            let x = g.vec_normal(k, 1.0);
+            let w = g.vec_normal(k, 0.5);
+            let (c, na) = dot_bias_experiment(&x, &w);
+            if c <= na {
+                wins += 1;
+            }
+        }
+        assert!(wins * 10 >= n * 6, "consistent won only {wins}/{n}");
+    }
+}

@@ -1,0 +1,677 @@
+//! GEMM kernels: the inference hot path.
+//!
+//! Quantized layer contract (paper Figure 1): `y = F(R(Q(x)·W') + b)` with
+//! activation `F` applied by the caller.  The integer product uses the
+//! offset algebra of eq. (1): with `V'' = V' + zp`,
+//!
+//! ```text
+//! Σ_k (x'+zpx)(w'+zpw) = Σ x'w' + zpx·Σw'[o] + zpw·Σx'[i] + K·zpx·zpw
+//! ```
+//!
+//! so the kernel only computes the u8·u8 dot `Σ x'w'`; `Σw'[o]` is
+//! precomputed per weight row ([`QMatrix::row_sums`]) and `Σx'[i]` once per
+//! input row.  Recovery divides by `qx·qw` (eq. 1) and adds the f32 bias.
+//!
+//! Three integer kernels (perf-pass ladder, EXPERIMENTS.md §Perf-L3):
+//!   - `Scalar`   — straight loop (baseline)
+//!   - `Unrolled` — 4-way unrolled u32 accumulation
+//!   - `Avx2`     — `cvtepu8→madd_epi16` 16-lane dot (runtime-detected)
+//!
+//! plus f32 baselines (`f32` scalar / FMA) for the paper's int8-vs-float
+//! speedup claim (experiment E1).
+
+use crate::quant::qmatrix::QMatrix;
+use crate::quant::scheme::QuantParams;
+
+/// Kernel selection for the integer GEMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    Scalar,
+    Unrolled,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// Best available on this CPU.
+    Auto,
+}
+
+impl Kernel {
+    pub fn resolve(self) -> Kernel {
+        match self {
+            Kernel::Auto => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    if std::arch::is_x86_feature_detected!("avx2") {
+                        return Kernel::Avx2;
+                    }
+                }
+                Kernel::Unrolled
+            }
+            k => k,
+        }
+    }
+}
+
+/// Reusable scratch buffers — keeps the hot loop allocation-free.
+#[derive(Default, Clone)]
+pub struct QScratch {
+    pub xq: Vec<u8>,
+    pub xrow_sums: Vec<i32>,
+    /// Per-input-row quantization params.
+    pub xparams: Vec<QuantParams>,
+}
+
+/// Quantize the input batch on the fly (eq. 2), **per row**: each batch row
+/// (= each stream in cross-stream serving) gets its own (Q, zp), so results
+/// are independent of batch composition — running a stream alone or packed
+/// with co-riders yields identical numerics.  At batch 1 this coincides
+/// with the per-tensor quantization of the JAX reference.
+pub fn quantize_input(x: &[f32], batch: usize, in_dim: usize, s: &mut QScratch) {
+    debug_assert_eq!(x.len(), batch * in_dim);
+    s.xq.resize(x.len(), 0);
+    s.xrow_sums.clear();
+    s.xparams.clear();
+    for i in 0..batch {
+        let row = &x[i * in_dim..(i + 1) * in_dim];
+        let p = QuantParams::from_slice(row);
+        p.quantize_slice(row, &mut s.xq[i * in_dim..(i + 1) * in_dim]);
+        s.xrow_sums.push(
+            s.xq[i * in_dim..(i + 1) * in_dim]
+                .iter()
+                .map(|&v| v as i32)
+                .sum::<i32>(),
+        );
+        s.xparams.push(p);
+    }
+}
+
+/// Integer GEMM: `y[b, o] (+)= recover(Q(x)·Wᵀ) + bias[o]`.
+///
+/// `accumulate` adds into `y` instead of overwriting — used by the LSTM
+/// step to fuse `x·Wx + h·Wh` without an intermediate buffer.
+/// Only `Granularity::PerMatrix` weight matrices are accepted here (the
+/// paper's deployment choice); finer granularities go through
+/// [`qgemm_any_granularity`] (ablation path).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm(
+    x: &[f32],
+    batch: usize,
+    w: &QMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    scratch: &mut QScratch,
+    kernel: Kernel,
+    accumulate: bool,
+) {
+    assert_eq!(x.len(), batch * w.in_dim);
+    assert_eq!(y.len(), batch * w.out_dim);
+    assert_eq!(w.params.len(), 1, "qgemm requires per-matrix granularity");
+    quantize_input(x, batch, w.in_dim, scratch);
+    qgemm_prequantized(batch, w, bias, y, scratch, kernel, accumulate);
+}
+
+/// Integer GEMM on an already-quantized input (scratch holds xq/row sums/
+/// per-row params).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_prequantized(
+    batch: usize,
+    w: &QMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    scratch: &QScratch,
+    kernel: Kernel,
+    accumulate: bool,
+) {
+    let wp = w.params[0];
+    let k = w.in_dim;
+    let kernel = kernel.resolve();
+    for i in 0..batch {
+        let xp = &scratch.xparams[i];
+        let inv = 1.0 / (xp.q as f64 * wp.q as f64);
+        let kzz = k as i64 * xp.zp * wp.zp;
+        let xrow = &scratch.xq[i * k..(i + 1) * k];
+        let xsum = scratch.xrow_sums[i] as i64;
+        let yrow = &mut y[i * w.out_dim..(i + 1) * w.out_dim];
+        let finish = |o: usize, raw: i64, yrow: &mut [f32]| {
+            let full = raw + xp.zp * w.row_sums[o] as i64 + wp.zp * xsum + kzz;
+            let v = (full as f64 * inv) as f32 + bias.map_or(0.0, |b| b[o]);
+            if accumulate {
+                yrow[o] += v;
+            } else {
+                yrow[o] = v;
+            }
+        };
+        let mut o = 0;
+        // 4-row blocked AVX2 path: x is loaded/widened once per 4 rows.
+        #[cfg(target_arch = "x86_64")]
+        if kernel == Kernel::Avx2 {
+            while o + 4 <= w.out_dim {
+                let raws = unsafe {
+                    dot4_u8_avx2(
+                        xrow,
+                        [
+                            &w.data[o * k..(o + 1) * k],
+                            &w.data[(o + 1) * k..(o + 2) * k],
+                            &w.data[(o + 2) * k..(o + 3) * k],
+                            &w.data[(o + 3) * k..(o + 4) * k],
+                        ],
+                    )
+                };
+                for (d, &raw) in raws.iter().enumerate() {
+                    finish(o + d, raw as i64, yrow);
+                }
+                o += 4;
+            }
+        }
+        while o < w.out_dim {
+            let wrow = &w.data[o * k..(o + 1) * k];
+            let raw = match kernel {
+                Kernel::Scalar => dot_u8_scalar(xrow, wrow),
+                Kernel::Unrolled => dot_u8_unrolled(xrow, wrow),
+                #[cfg(target_arch = "x86_64")]
+                Kernel::Avx2 => unsafe { dot_u8_avx2(xrow, wrow) },
+                Kernel::Auto => unreachable!("resolved above"),
+            } as i64;
+            finish(o, raw, yrow);
+            o += 1;
+        }
+    }
+}
+
+/// Granularity-generic (slow) integer matmul for the E3 ablation: honors
+/// per-row / sub-block params by recovering per element group.
+pub fn qgemm_any_granularity(
+    x: &[f32],
+    batch: usize,
+    w: &QMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+) {
+    let k = w.in_dim;
+    let mut xq = vec![0u8; x.len()];
+    let xps: Vec<QuantParams> = (0..batch)
+        .map(|i| {
+            let p = QuantParams::from_slice(&x[i * k..(i + 1) * k]);
+            p.quantize_slice(&x[i * k..(i + 1) * k], &mut xq[i * k..(i + 1) * k]);
+            p
+        })
+        .collect();
+    for i in 0..batch {
+        let xp = &xps[i];
+        for o in 0..w.out_dim {
+            let mut acc = 0.0f64;
+            // Group by parameter region so the integer dot stays exact
+            // within each region (same structure as the paper's
+            // sub-matrix granularity).
+            match w.granularity {
+                crate::quant::Granularity::PerMatrix | crate::quant::Granularity::PerRow => {
+                    let wp = w.param_for(o, 0);
+                    let mut raw: i64 = 0;
+                    let mut wsum: i64 = 0;
+                    let mut xsum: i64 = 0;
+                    for c in 0..k {
+                        let xv = xq[i * k + c] as i64;
+                        let wv = w.data[o * k + c] as i64;
+                        raw += xv * wv;
+                        wsum += wv;
+                        xsum += xv;
+                    }
+                    let full = raw
+                        + xp.zp * wsum
+                        + wp.zp * xsum
+                        + k as i64 * xp.zp * wp.zp;
+                    acc = full as f64 / (xp.q as f64 * wp.q as f64);
+                }
+                crate::quant::Granularity::SubBlock { size } => {
+                    let mut c0 = 0;
+                    while c0 < k {
+                        let c1 = (c0 + size).min(k);
+                        let wp = w.param_for(o, c0);
+                        let mut raw: i64 = 0;
+                        let mut wsum: i64 = 0;
+                        let mut xsum: i64 = 0;
+                        for c in c0..c1 {
+                            let xv = xq[i * k + c] as i64;
+                            let wv = w.data[o * k + c] as i64;
+                            raw += xv * wv;
+                            wsum += wv;
+                            xsum += xv;
+                        }
+                        let full = raw
+                            + xp.zp * wsum
+                            + wp.zp * xsum
+                            + (c1 - c0) as i64 * xp.zp * wp.zp;
+                        acc += full as f64 / (xp.q as f64 * wp.q as f64);
+                        c0 = c1;
+                    }
+                }
+            }
+            y[i * w.out_dim + o] = acc as f32 + bias.map_or(0.0, |b| b[o]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// u8·u8 → i32 dot kernels
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn dot_u8_scalar(a: &[u8], b: &[u8]) -> i32 {
+    let mut acc: i32 = 0;
+    for (&x, &w) in a.iter().zip(b) {
+        acc += x as i32 * w as i32;
+    }
+    acc
+}
+
+/// 4-way unrolled variant — helps older LLVM autovectorize.
+#[inline]
+pub fn dot_u8_unrolled(a: &[u8], b: &[u8]) -> i32 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] as i32 * b[i] as i32;
+        s1 += a[i + 1] as i32 * b[i + 1] as i32;
+        s2 += a[i + 2] as i32 * b[i + 2] as i32;
+        s3 += a[i + 3] as i32 * b[i + 3] as i32;
+    }
+    let mut acc = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        acc += a[i] as i32 * b[i] as i32;
+    }
+    acc
+}
+
+/// AVX2: 32 u8 lanes per step (2 × `cvtepu8_epi16` + `madd_epi16`, two
+/// independent accumulators for ILP).  Exact: u8×u8 products fit
+/// i16×i16→i32 madd without saturation.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available (see [`Kernel::resolve`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_u8_avx2(a: &[u8], b: &[u8]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let mut acc0 = _mm256_setzero_si256();
+    let mut acc1 = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 32 <= n {
+        let a0 = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+        let b0 = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+        acc0 = _mm256_add_epi32(
+            acc0,
+            _mm256_madd_epi16(_mm256_cvtepu8_epi16(a0), _mm256_cvtepu8_epi16(b0)),
+        );
+        let a1 = _mm_loadu_si128(a.as_ptr().add(i + 16) as *const __m128i);
+        let b1 = _mm_loadu_si128(b.as_ptr().add(i + 16) as *const __m128i);
+        acc1 = _mm256_add_epi32(
+            acc1,
+            _mm256_madd_epi16(_mm256_cvtepu8_epi16(a1), _mm256_cvtepu8_epi16(b1)),
+        );
+        i += 32;
+    }
+    while i + 16 <= n {
+        let av = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+        let bv = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+        acc0 = _mm256_add_epi32(
+            acc0,
+            _mm256_madd_epi16(_mm256_cvtepu8_epi16(av), _mm256_cvtepu8_epi16(bv)),
+        );
+        i += 16;
+    }
+    let acc = _mm256_add_epi32(acc0, acc1);
+    // Horizontal sum of 8 × i32.
+    let hi = _mm256_extracti128_si256(acc, 1);
+    let lo = _mm256_castsi256_si128(acc);
+    let s = _mm_add_epi32(hi, lo);
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_01_10_11));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
+    let mut total = _mm_cvtsi128_si32(s);
+    while i < n {
+        total += a[i] as i32 * b[i] as i32;
+        i += 1;
+    }
+    total
+}
+
+/// AVX2, 4 weight rows at once sharing the x loads/widening — the GEMV hot
+/// path (perf pass L3.2): loading + widening x is half of the 1-row
+/// kernel's work, so amortizing it over 4 output rows raises throughput.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot4_u8_avx2(x: &[u8], w: [&[u8]; 4]) -> [i32; 4] {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let mut acc = [_mm256_setzero_si256(); 4];
+    let mut i = 0;
+    while i + 16 <= n {
+        let xv =
+            _mm256_cvtepu8_epi16(_mm_loadu_si128(x.as_ptr().add(i) as *const __m128i));
+        for r in 0..4 {
+            let wv = _mm256_cvtepu8_epi16(_mm_loadu_si128(
+                w[r].as_ptr().add(i) as *const __m128i
+            ));
+            acc[r] = _mm256_add_epi32(acc[r], _mm256_madd_epi16(xv, wv));
+        }
+        i += 16;
+    }
+    let mut out = [0i32; 4];
+    for r in 0..4 {
+        let hi = _mm256_extracti128_si256(acc[r], 1);
+        let lo = _mm256_castsi256_si128(acc[r]);
+        let s = _mm_add_epi32(hi, lo);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_01_10_11));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
+        out[r] = _mm_cvtsi128_si32(s);
+        for j in i..n {
+            out[r] += x[j] as i32 * w[r][j] as i32;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// f32 baseline (the 'match' path and the E1 comparison target)
+// ---------------------------------------------------------------------------
+
+/// Dense f32 matrix in the same transposed `[out, in]` layout.
+#[derive(Clone, Debug)]
+pub struct FMatrix {
+    pub out_dim: usize,
+    pub in_dim: usize,
+    pub data: Vec<f32>,
+}
+
+impl FMatrix {
+    /// From math layout `[in, out]` row-major.
+    pub fn from_math_layout(w: &[f32], in_dim: usize, out_dim: usize) -> Self {
+        assert_eq!(w.len(), in_dim * out_dim);
+        let mut t = vec![0f32; w.len()];
+        for i in 0..in_dim {
+            for o in 0..out_dim {
+                t[o * in_dim + i] = w[i * out_dim + o];
+            }
+        }
+        FMatrix { out_dim, in_dim, data: t }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// f32 GEMM `y = x·Wᵀ + b`, with optional accumulate (see [`qgemm`]).
+pub fn fgemm(
+    x: &[f32],
+    batch: usize,
+    w: &FMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    accumulate: bool,
+) {
+    assert_eq!(x.len(), batch * w.in_dim);
+    assert_eq!(y.len(), batch * w.out_dim);
+    let k = w.in_dim;
+    #[cfg(target_arch = "x86_64")]
+    let use_fma = std::arch::is_x86_feature_detected!("fma")
+        && std::arch::is_x86_feature_detected!("avx2");
+    for i in 0..batch {
+        let xrow = &x[i * k..(i + 1) * k];
+        let yrow = &mut y[i * w.out_dim..(i + 1) * w.out_dim];
+        for o in 0..w.out_dim {
+            let wrow = &w.data[o * k..(o + 1) * k];
+            #[cfg(target_arch = "x86_64")]
+            let raw = if use_fma {
+                unsafe { dot_f32_fma(xrow, wrow) }
+            } else {
+                dot_f32_scalar(xrow, wrow)
+            };
+            #[cfg(not(target_arch = "x86_64"))]
+            let raw = dot_f32_scalar(xrow, wrow);
+            let v = raw + bias.map_or(0.0, |b| b[o]);
+            if accumulate {
+                yrow[o] += v;
+            } else {
+                yrow[o] = v;
+            }
+        }
+    }
+}
+
+#[inline]
+pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut acc = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// # Safety
+/// Requires AVX2 + FMA.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot_f32_fma(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 16 <= n {
+        let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
+        let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc0 = _mm256_fmadd_ps(a0, b0, acc0);
+        let a1 = _mm256_loadu_ps(a.as_ptr().add(i + 8));
+        let b1 = _mm256_loadu_ps(b.as_ptr().add(i + 8));
+        acc1 = _mm256_fmadd_ps(a1, b1, acc1);
+        i += 16;
+    }
+    while i + 8 <= n {
+        let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
+        let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc0 = _mm256_fmadd_ps(a0, b0, acc0);
+        i += 8;
+    }
+    let acc = _mm256_add_ps(acc0, acc1);
+    let hi = _mm256_extractf128_ps(acc, 1);
+    let lo = _mm256_castps256_ps128(acc);
+    let s = _mm_add_ps(hi, lo);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+    let mut total = _mm_cvtss_f32(s);
+    while i < n {
+        total += a[i] * b[i];
+        i += 1;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Granularity;
+    use crate::util::prop::{forall, Gen};
+
+    /// Float reference of the full quantized pipeline: recover weights and
+    /// recovered-quantized inputs, multiply in f64.
+    fn reference(x: &[f32], batch: usize, w: &QMatrix, bias: Option<&[f32]>) -> Vec<f32> {
+        let k = w.in_dim;
+        let mut y = vec![0f32; batch * w.out_dim];
+        for i in 0..batch {
+            let xp = QuantParams::from_slice(&x[i * k..(i + 1) * k]);
+            for o in 0..w.out_dim {
+                let mut acc = 0f64;
+                for c in 0..k {
+                    let xr = xp.shifted(xp.quantize(x[i * k + c])) as f64 / xp.q as f64;
+                    let wr = w.param_for(o, c).recover(w.data[o * k + c]) as f64;
+                    acc += xr * wr;
+                }
+                y[i * w.out_dim + o] = acc as f32 + bias.map_or(0.0, |b| b[o]);
+            }
+        }
+        y
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn qgemm_matches_reference_all_kernels() {
+        forall("qgemm vs ref", 40, 0xD07, |g: &mut Gen| {
+            let batch = g.usize_in(1, 6);
+            let in_dim = g.usize_in(1, 70);
+            let out_dim = g.usize_in(1, 40);
+            let x = g.vec_normal(batch * in_dim, 1.0);
+            let wf = g.vec_normal(in_dim * out_dim, 0.5);
+            let bias = g.vec_normal(out_dim, 0.2);
+            let w = QMatrix::from_f32_math_layout(&wf, in_dim, out_dim, Granularity::PerMatrix);
+            let want = reference(&x, batch, &w, Some(&bias));
+            let mut scratch = QScratch::default();
+            let kernels: &[Kernel] = {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    &[Kernel::Scalar, Kernel::Unrolled, Kernel::Avx2]
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    &[Kernel::Scalar, Kernel::Unrolled]
+                }
+            };
+            for &kern in kernels {
+                #[cfg(target_arch = "x86_64")]
+                if kern == Kernel::Avx2 && !std::arch::is_x86_feature_detected!("avx2") {
+                    continue;
+                }
+                let mut y = vec![0f32; batch * out_dim];
+                qgemm(&x, batch, &w, Some(&bias), &mut y, &mut scratch, kern, false);
+                assert_close(&y, &want, 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn qgemm_approximates_float_matmul() {
+        // End-to-end quantization error must stay small relative to range.
+        let mut g = Gen::new(1);
+        let (batch, in_dim, out_dim) = (4, 128, 64);
+        let x = g.vec_normal(batch * in_dim, 1.0);
+        let wf = g.vec_normal(in_dim * out_dim, 0.3);
+        let w = QMatrix::from_f32_math_layout(&wf, in_dim, out_dim, Granularity::PerMatrix);
+        let fw = FMatrix::from_math_layout(&wf, in_dim, out_dim);
+        let mut yq = vec![0f32; batch * out_dim];
+        let mut yf = vec![0f32; batch * out_dim];
+        let mut s = QScratch::default();
+        qgemm(&x, batch, &w, None, &mut yq, &mut s, Kernel::Auto, false);
+        fgemm(&x, batch, &fw, None, &mut yf, false);
+        let scale = yf.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+        let max_err = yq.iter().zip(&yf).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max_err < 0.02 * scale.max(1.0), "err {max_err} scale {scale}");
+    }
+
+    #[test]
+    fn accumulate_fuses_two_matmuls() {
+        let mut g = Gen::new(2);
+        let (batch, k1, k2, out) = (2, 20, 12, 10);
+        let x1 = g.vec_normal(batch * k1, 1.0);
+        let x2 = g.vec_normal(batch * k2, 1.0);
+        let w1f = g.vec_normal(k1 * out, 0.4);
+        let w2f = g.vec_normal(k2 * out, 0.4);
+        let w1 = QMatrix::from_f32_math_layout(&w1f, k1, out, Granularity::PerMatrix);
+        let w2 = QMatrix::from_f32_math_layout(&w2f, k2, out, Granularity::PerMatrix);
+        let mut s = QScratch::default();
+        let mut y = vec![0f32; batch * out];
+        qgemm(&x1, batch, &w1, None, &mut y, &mut s, Kernel::Auto, false);
+        qgemm(&x2, batch, &w2, None, &mut y, &mut s, Kernel::Auto, true);
+        let mut y1 = vec![0f32; batch * out];
+        let mut y2 = vec![0f32; batch * out];
+        qgemm(&x1, batch, &w1, None, &mut y1, &mut s, Kernel::Auto, false);
+        qgemm(&x2, batch, &w2, None, &mut y2, &mut s, Kernel::Auto, false);
+        for i in 0..y.len() {
+            assert!((y[i] - (y1[i] + y2[i])).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn any_granularity_matches_per_matrix_when_trivial() {
+        let mut g = Gen::new(3);
+        let (batch, in_dim, out_dim) = (2, 32, 8);
+        let x = g.vec_normal(batch * in_dim, 1.0);
+        let wf = g.vec_normal(in_dim * out_dim, 0.5);
+        let w = QMatrix::from_f32_math_layout(&wf, in_dim, out_dim, Granularity::PerMatrix);
+        let mut y1 = vec![0f32; batch * out_dim];
+        let mut y2 = vec![0f32; batch * out_dim];
+        let mut s = QScratch::default();
+        qgemm(&x, batch, &w, None, &mut y1, &mut s, Kernel::Scalar, false);
+        qgemm_any_granularity(&x, batch, &w, None, &mut y2);
+        assert_close(&y1, &y2, 1e-5);
+    }
+
+    #[test]
+    fn dot_kernels_agree() {
+        forall("dot kernels", 60, 0xBEEF, |g: &mut Gen| {
+            let n = g.usize_in(0, 200);
+            let a: Vec<u8> = (0..n).map(|_| g.usize_in(0, 255) as u8).collect();
+            let b: Vec<u8> = (0..n).map(|_| g.usize_in(0, 255) as u8).collect();
+            let want = dot_u8_scalar(&a, &b);
+            assert_eq!(dot_u8_unrolled(&a, &b), want);
+            #[cfg(target_arch = "x86_64")]
+            if std::arch::is_x86_feature_detected!("avx2") {
+                assert_eq!(unsafe { dot_u8_avx2(&a, &b) }, want);
+            }
+        });
+    }
+
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn dot4_agrees_with_scalar() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            return;
+        }
+        forall("dot4", 50, 0xD04, |g: &mut Gen| {
+            let n = g.usize_in(0, 150);
+            let x: Vec<u8> = (0..n).map(|_| g.usize_in(0, 255) as u8).collect();
+            let rows: Vec<Vec<u8>> = (0..4)
+                .map(|_| (0..n).map(|_| g.usize_in(0, 255) as u8).collect())
+                .collect();
+            let got = unsafe {
+                dot4_u8_avx2(&x, [&rows[0], &rows[1], &rows[2], &rows[3]])
+            };
+            for r in 0..4 {
+                assert_eq!(got[r], dot_u8_scalar(&x, &rows[r]));
+            }
+        });
+    }
+
+    #[test]
+    fn f32_dot_kernels_agree() {
+        forall("f32 dot", 40, 0xF00D, |g: &mut Gen| {
+            let n = g.usize_in(0, 300);
+            let a = g.vec_normal(n, 1.0);
+            let b = g.vec_normal(n, 1.0);
+            let want = dot_f32_scalar(&a, &b);
+            #[cfg(target_arch = "x86_64")]
+            if std::arch::is_x86_feature_detected!("fma") {
+                let got = unsafe { dot_f32_fma(&a, &b) };
+                assert!((got - want).abs() <= 1e-4 * (1.0 + want.abs()));
+            }
+        });
+    }
+}

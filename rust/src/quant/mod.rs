@@ -1,0 +1,18 @@
+//! The paper's §3 quantization scheme and its integer execution kernels.
+//!
+//! - [`scheme`] — eqs. (1)–(3): the uniform linear quantizer with the
+//!   rounding-consistent zero point that cancels bias error, plus the
+//!   deliberately *inconsistent* naive variant used by the E2 ablation.
+//! - [`qmatrix`] — quantized weight matrices at the paper's granularity
+//!   choices (per-matrix, per-row, sub-block).
+//! - [`gemm`] — the hot path: f32 GEMM baseline and u8×u8→i32 integer
+//!   GEMM (scalar, blocked, and AVX2 `maddubs` kernels).
+//! - [`error`] — precision/bias error measurement (E2/E3 experiments).
+
+pub mod error;
+pub mod gemm;
+pub mod qmatrix;
+pub mod scheme;
+
+pub use qmatrix::{Granularity, QMatrix};
+pub use scheme::{QuantParams, SCALE};

@@ -1,0 +1,286 @@
+//! Quantized weight matrices.
+//!
+//! Storage layout is **transposed** relative to the math: for a layer
+//! computing `y = x·W` with `W: [in, out]`, the [`QMatrix`] stores `Wᵀ`
+//! row-major as `[out, in]` so each output neuron's weights are contiguous
+//! — the natural layout for the GEMV-style inner loops of streaming
+//! inference (batch 1–16).
+//!
+//! Granularity (paper §3.1 "our scheme can be applied at a given level of
+//! granularity"): the paper settles on per-weight-matrix; [`Granularity`]
+//! also implements per-row (per output neuron) and fixed sub-blocks for the
+//! E3 ablation.
+
+use crate::quant::scheme::QuantParams;
+
+/// Quantization granularity for a weight matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One (Q, zp) for the whole matrix — the paper's choice.
+    PerMatrix,
+    /// One (Q, zp) per output row (finer; more metadata).
+    PerRow,
+    /// One (Q, zp) per `size × size` block of the stored layout.
+    SubBlock { size: usize },
+}
+
+/// A u8-quantized matrix in `[out, in]` (transposed) layout.
+#[derive(Clone, Debug)]
+pub struct QMatrix {
+    pub out_dim: usize,
+    pub in_dim: usize,
+    pub granularity: Granularity,
+    /// V' values (eq. 2), row-major `[out, in]`.
+    pub data: Vec<u8>,
+    /// Quant params; length depends on granularity (1, out_dim, or #blocks).
+    pub params: Vec<QuantParams>,
+    /// Per output row: Σ_k V'[o, k] — precomputed for the eq. (1) offset
+    /// algebra in the integer GEMM (only valid for PerMatrix).
+    pub row_sums: Vec<i32>,
+}
+
+impl QMatrix {
+    /// Quantize a float matrix given in **math layout** `[in, out]`
+    /// row-major (the .qam / numpy layout), transposing into `[out, in]`.
+    pub fn from_f32_math_layout(
+        w: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        granularity: Granularity,
+    ) -> Self {
+        assert_eq!(w.len(), in_dim * out_dim);
+        let mut t = vec![0f32; w.len()];
+        for i in 0..in_dim {
+            for o in 0..out_dim {
+                t[o * in_dim + i] = w[i * out_dim + o];
+            }
+        }
+        Self::from_f32_transposed(&t, in_dim, out_dim, granularity)
+    }
+
+    /// Quantize from an already-transposed `[out, in]` float matrix.
+    pub fn from_f32_transposed(
+        t: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        granularity: Granularity,
+    ) -> Self {
+        Self::from_f32_transposed_scaled(t, in_dim, out_dim, granularity, crate::quant::scheme::SCALE)
+    }
+
+    /// As [`from_f32_transposed`] with an explicit scale `S = 2^bits − 1`
+    /// (E5 bit-width ablation; storage stays u8).
+    pub fn from_f32_transposed_scaled(
+        t: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        granularity: Granularity,
+        scale: f32,
+    ) -> Self {
+        assert_eq!(t.len(), in_dim * out_dim);
+        let mut data = vec![0u8; t.len()];
+        let params = match granularity {
+            Granularity::PerMatrix => {
+                let p = QuantParams::from_slice_scaled(t, scale);
+                p.quantize_slice(t, &mut data);
+                vec![p]
+            }
+            Granularity::PerRow => (0..out_dim)
+                .map(|o| {
+                    let row = &t[o * in_dim..(o + 1) * in_dim];
+                    let p = QuantParams::from_slice_scaled(row, scale);
+                    p.quantize_slice(row, &mut data[o * in_dim..(o + 1) * in_dim]);
+                    p
+                })
+                .collect(),
+            Granularity::SubBlock { size } => {
+                let blocks_r = out_dim.div_ceil(size);
+                let blocks_c = in_dim.div_ceil(size);
+                let mut ps = Vec::with_capacity(blocks_r * blocks_c);
+                for br in 0..blocks_r {
+                    for bc in 0..blocks_c {
+                        let r0 = br * size;
+                        let r1 = (r0 + size).min(out_dim);
+                        let c0 = bc * size;
+                        let c1 = (c0 + size).min(in_dim);
+                        let mut vals = Vec::with_capacity((r1 - r0) * (c1 - c0));
+                        for r in r0..r1 {
+                            vals.extend_from_slice(&t[r * in_dim + c0..r * in_dim + c1]);
+                        }
+                        let p = QuantParams::from_slice_scaled(&vals, scale);
+                        for r in r0..r1 {
+                            for c in c0..c1 {
+                                data[r * in_dim + c] = p.quantize(t[r * in_dim + c]);
+                            }
+                        }
+                        ps.push(p);
+                    }
+                }
+                ps
+            }
+        };
+        let row_sums = (0..out_dim)
+            .map(|o| {
+                data[o * in_dim..(o + 1) * in_dim]
+                    .iter()
+                    .map(|&v| v as i32)
+                    .sum()
+            })
+            .collect();
+        QMatrix { out_dim, in_dim, granularity, data, params, row_sums }
+    }
+
+    /// Build directly from pre-quantized V' bytes (as stored in .qam files;
+    /// math layout `[in, out]`) with explicit params — no re-quantization,
+    /// so the rust engine computes on exactly the trained/stored grid.
+    pub fn from_stored(
+        vq: &[u8],
+        in_dim: usize,
+        out_dim: usize,
+        params: QuantParams,
+    ) -> Self {
+        assert_eq!(vq.len(), in_dim * out_dim);
+        let mut data = vec![0u8; vq.len()];
+        for i in 0..in_dim {
+            for o in 0..out_dim {
+                data[o * in_dim + i] = vq[i * out_dim + o];
+            }
+        }
+        let row_sums = (0..out_dim)
+            .map(|o| {
+                data[o * in_dim..(o + 1) * in_dim]
+                    .iter()
+                    .map(|&v| v as i32)
+                    .sum()
+            })
+            .collect();
+        QMatrix {
+            out_dim,
+            in_dim,
+            granularity: Granularity::PerMatrix,
+            data,
+            params: vec![params],
+            row_sums,
+        }
+    }
+
+    /// Recover to float, **math layout** `[in, out]` (for cross-checks).
+    pub fn recover_math_layout(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.data.len()];
+        for o in 0..self.out_dim {
+            for i in 0..self.in_dim {
+                let p = self.param_for(o, i);
+                out[i * self.out_dim + o] = p.recover(self.data[o * self.in_dim + i]);
+            }
+        }
+        out
+    }
+
+    /// Params governing element (out_row, in_col).
+    #[inline]
+    pub fn param_for(&self, o: usize, i: usize) -> &QuantParams {
+        match self.granularity {
+            Granularity::PerMatrix => &self.params[0],
+            Granularity::PerRow => &self.params[o],
+            Granularity::SubBlock { size } => {
+                let blocks_c = self.in_dim.div_ceil(size);
+                &self.params[(o / size) * blocks_c + i / size]
+            }
+        }
+    }
+
+    /// Weight-storage bytes (the paper's 4× memory claim: u8 data + params).
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len()
+            + self.params.len() * std::mem::size_of::<QuantParams>()
+            + self.row_sums.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    fn max_abs_err(w: &[f32], r: &[f32]) -> f32 {
+        w.iter().zip(r).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn per_matrix_roundtrip_within_half_step() {
+        forall("qmatrix roundtrip", 50, 0xAB, |g: &mut Gen| {
+            let in_dim = g.usize_in(1, 40);
+            let out_dim = g.usize_in(1, 40);
+            let w = g.vec_normal(in_dim * out_dim, 0.5);
+            let m = QMatrix::from_f32_math_layout(&w, in_dim, out_dim, Granularity::PerMatrix);
+            let r = m.recover_math_layout();
+            let step = m.params[0].half_step();
+            assert!(max_abs_err(&w, &r) <= step * 1.0001);
+        });
+    }
+
+    #[test]
+    fn finer_granularity_reduces_error() {
+        let mut g = Gen::new(77);
+        // Heterogeneous rows: one row has 10× the magnitude of the others,
+        // which is exactly where per-row granularity wins.
+        let (in_dim, out_dim) = (64, 16);
+        let mut w = g.vec_normal(in_dim * out_dim, 0.1);
+        for i in 0..in_dim {
+            w[i * out_dim] *= 10.0;
+        }
+        let errs: Vec<f32> = [
+            Granularity::PerMatrix,
+            Granularity::SubBlock { size: 16 },
+            Granularity::PerRow,
+        ]
+        .iter()
+        .map(|&gr| {
+            let m = QMatrix::from_f32_math_layout(&w, in_dim, out_dim, gr);
+            let r = m.recover_math_layout();
+            let sum: f32 = w.iter().zip(&r).map(|(a, b)| (a - b) * (a - b)).sum();
+            (sum / w.len() as f32).sqrt()
+        })
+        .collect();
+        assert!(errs[2] < errs[1] && errs[1] <= errs[0] * 1.05, "{errs:?}");
+    }
+
+    #[test]
+    fn stored_roundtrip_is_exact() {
+        // from_stored must preserve the exact V' grid (no re-quantization).
+        let mut g = Gen::new(3);
+        let (in_dim, out_dim) = (10, 6);
+        let w = g.vec_normal(in_dim * out_dim, 1.0);
+        let m1 = QMatrix::from_f32_math_layout(&w, in_dim, out_dim, Granularity::PerMatrix);
+        // Serialize to math-layout V' (as export.py does)
+        let mut vq_math = vec![0u8; w.len()];
+        for o in 0..out_dim {
+            for i in 0..in_dim {
+                vq_math[i * out_dim + o] = m1.data[o * in_dim + i];
+            }
+        }
+        let m2 = QMatrix::from_stored(&vq_math, in_dim, out_dim, m1.params[0]);
+        assert_eq!(m1.data, m2.data);
+        assert_eq!(m1.row_sums, m2.row_sums);
+    }
+
+    #[test]
+    fn storage_is_about_4x_smaller() {
+        let w = vec![0.5f32; 256 * 256];
+        let m = QMatrix::from_f32_math_layout(&w, 256, 256, Granularity::PerMatrix);
+        let f32_bytes = w.len() * 4;
+        assert!((m.storage_bytes() as f64) < f32_bytes as f64 / 3.5);
+    }
+
+    #[test]
+    fn row_sums_match_data() {
+        let mut g = Gen::new(11);
+        let m = QMatrix::from_f32_math_layout(
+            &g.vec_normal(12 * 5, 1.0), 12, 5, Granularity::PerMatrix,
+        );
+        for o in 0..5 {
+            let s: i32 = m.data[o * 12..(o + 1) * 12].iter().map(|&v| v as i32).sum();
+            assert_eq!(s, m.row_sums[o]);
+        }
+    }
+}

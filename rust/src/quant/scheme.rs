@@ -1,0 +1,217 @@
+//! Eqs. (1)–(3): the uniform linear quantizer (paper §3).
+//!
+//! Given values in `R = [vmin, vmax]` and scale `S = 255`:
+//!
+//! ```text
+//! Q   = S / R                      quantization factor
+//! zp  = round(Q · vmin)            integer zero point
+//! V'  = round(Q·V) − zp            eq. (2)  (stored u8)
+//! V   = (V' + zp) / Q              eq. (3)  (recovery)
+//! V'' = V' + zp = round(Q·V)       offset-shifted integer (eq. 1 operand)
+//! ```
+//!
+//! Using the *rounded* `zp` in both eq. (2) and eq. (3) makes the
+//! quantize→recover error pure precision loss (zero-mean, ≤ ½ step); the
+//! naive variant below floors and recovers with the unrounded offset, which
+//! introduces the systematic bias the paper warns about (§3, "quantization
+//! error and bias").
+
+/// S = 2⁸ − 1.
+pub const SCALE: f32 = 255.0;
+
+/// Quantization parameters for one group of values.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    /// Range minimum (kept for export/inspection).
+    pub vmin: f32,
+    /// Quantization factor `Q = S / (vmax − vmin)`.
+    pub q: f32,
+    /// Integer zero point `round(Q · vmin)` (i64: degenerate ranges can
+    /// produce huge Q·vmin; arithmetic is f64 to match python's round()).
+    pub zp: i64,
+    /// Scale S (255 for the paper's 8 bits; smaller for the E5 bit-width
+    /// ablation — storage stays u8).
+    pub scale: f32,
+}
+
+impl QuantParams {
+    /// Derive params from an explicit range.  The 1e-6 floor mirrors
+    /// python quantlib.MIN_RANGE (degenerate ranges would give Q ~ 1e14
+    /// and f32 cancellation on the python side).
+    pub fn from_range(vmin: f32, vmax: f32) -> Self {
+        Self::from_range_scaled(vmin, vmax, SCALE)
+    }
+
+    /// As [`from_range`] with an explicit scale `S = 2^bits − 1`.
+    pub fn from_range_scaled(vmin: f32, vmax: f32, scale: f32) -> Self {
+        let range = (vmax - vmin).max(1e-6);
+        let q = scale / range;
+        QuantParams { vmin, q, zp: (q as f64 * vmin as f64).round() as i64, scale }
+    }
+
+    /// Derive params from the min/max of a slice (per-tensor granularity).
+    pub fn from_slice(v: &[f32]) -> Self {
+        Self::from_slice_scaled(v, SCALE)
+    }
+
+    /// As [`from_slice`] with an explicit scale (E5 bit-width ablation).
+    pub fn from_slice_scaled(v: &[f32], scale: f32) -> Self {
+        let mut vmin = f32::INFINITY;
+        let mut vmax = f32::NEG_INFINITY;
+        for &x in v {
+            vmin = vmin.min(x);
+            vmax = vmax.max(x);
+        }
+        if !vmin.is_finite() || !vmax.is_finite() {
+            // Empty or non-finite input: degenerate unit range.
+            return Self::from_range_scaled(0.0, 1.0, scale);
+        }
+        Self::from_range_scaled(vmin, vmax, scale)
+    }
+
+    /// Eq. (2): quantize one value to the integer grid [0, S].
+    #[inline]
+    pub fn quantize(&self, v: f32) -> u8 {
+        let vq = (self.q as f64 * v as f64).round() as i64 - self.zp;
+        vq.clamp(0, self.scale as i64) as u8
+    }
+
+    /// Eq. (3): recover one quantized value.
+    #[inline]
+    pub fn recover(&self, vq: u8) -> f32 {
+        ((vq as i64 + self.zp) as f64 / self.q as f64) as f32
+    }
+
+    /// The offset-shifted integer `V'' = V' + zp` used in eq. (1).
+    #[inline]
+    pub fn shifted(&self, vq: u8) -> i64 {
+        vq as i64 + self.zp
+    }
+
+    /// Quantize a slice into `out` (same length).
+    pub fn quantize_slice(&self, v: &[f32], out: &mut [u8]) {
+        debug_assert_eq!(v.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(v) {
+            *o = self.quantize(x);
+        }
+    }
+
+    /// Recover a slice of quantized values into `out`.
+    pub fn recover_slice(&self, vq: &[u8], out: &mut [f32]) {
+        debug_assert_eq!(vq.len(), out.len());
+        let inv_q = 1.0 / self.q as f64;
+        for (o, &x) in out.iter_mut().zip(vq) {
+            *o = ((x as i64 + self.zp) as f64 * inv_q) as f32;
+        }
+    }
+
+    /// Maximum precision-loss magnitude: half a quantization step.
+    pub fn half_step(&self) -> f32 {
+        0.5 / self.q
+    }
+}
+
+/// The E2-ablation *naive* quantizer: truncation + unrounded offset.
+/// Same storage format, biased numerics — exists to demonstrate why the
+/// paper's rounding consistency matters.
+#[derive(Clone, Copy, Debug)]
+pub struct NaiveQuantParams {
+    pub vmin: f32,
+    pub q: f32,
+}
+
+impl NaiveQuantParams {
+    pub fn from_slice(v: &[f32]) -> Self {
+        let p = QuantParams::from_slice(v);
+        NaiveQuantParams { vmin: p.vmin, q: p.q }
+    }
+
+    /// floor() of the shifted value — the classic truncating quantizer.
+    /// Every value lands on the grid point *below* it, so recovery with the
+    /// float offset keeps a systematic −½·step bias.
+    #[inline]
+    pub fn quantize(&self, v: f32) -> u8 {
+        let vq = (self.q as f64 * (v - self.vmin) as f64).floor();
+        vq.clamp(0.0, SCALE as f64) as u8
+    }
+
+    /// Recovery with the unrounded float offset — inconsistent with the
+    /// integer arithmetic of eq. (1); introduces ~half-step bias.
+    #[inline]
+    pub fn recover(&self, vq: u8) -> f32 {
+        vq as f32 / self.q + self.vmin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        forall("quant roundtrip", 200, 0xC0FFEE, |g: &mut Gen| {
+            let n = g.usize_in(2, 300);
+            let lo = g.f32_in(-8.0, 0.0);
+            let hi = lo + g.f32_in(0.01, 16.0);
+            let v = g.vec_f32(n, lo, hi);
+            let p = QuantParams::from_slice(&v);
+            for &x in &v {
+                let r = p.recover(p.quantize(x));
+                assert!(
+                    (r - x).abs() <= p.half_step() * 1.0001,
+                    "x={x} r={r} step={}",
+                    p.half_step()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn quantized_values_span_scale() {
+        let v: Vec<f32> = (0..=100).map(|i| i as f32 / 100.0).collect();
+        let p = QuantParams::from_slice(&v);
+        assert_eq!(p.quantize(0.0), 0);
+        assert_eq!(p.quantize(1.0), 255);
+    }
+
+    #[test]
+    fn consistent_scheme_has_no_bias() {
+        // Mean error over a dense grid must be ~0 for the consistent scheme
+        // and visibly negative (half-step truncation) for the naive one.
+        let v: Vec<f32> = (0..4096).map(|i| -1.0 + i as f32 * (2.0 / 4095.0)).collect();
+        let p = QuantParams::from_slice(&v);
+        let np = NaiveQuantParams::from_slice(&v);
+        let bias = |f: &dyn Fn(f32) -> f32| -> f64 {
+            v.iter().map(|&x| (f(x) - x) as f64).sum::<f64>() / v.len() as f64
+        };
+        let b_cons = bias(&|x| p.recover(p.quantize(x)));
+        let b_naive = bias(&|x| np.recover(np.quantize(x)));
+        assert!(b_cons.abs() < 2e-4, "consistent bias {b_cons}");
+        assert!(b_naive.abs() > 5.0 * b_cons.abs().max(1e-5), "naive bias {b_naive}");
+    }
+
+    #[test]
+    fn shifted_equals_round_qv() {
+        let p = QuantParams::from_range(-2.0, 3.0);
+        for &x in &[-2.0f32, -1.0, 0.0, 0.5, 2.9999] {
+            let vq = p.quantize(x);
+            assert_eq!(p.shifted(vq), (p.q as f64 * x as f64).round() as i64, "x={x}");
+        }
+    }
+
+    #[test]
+    fn degenerate_range_is_safe() {
+        let v = vec![3.0f32; 7];
+        let p = QuantParams::from_slice(&v);
+        let r = p.recover(p.quantize(3.0));
+        assert!((r - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let p = QuantParams::from_range(0.0, 1.0);
+        assert_eq!(p.quantize(-5.0), 0);
+        assert_eq!(p.quantize(9.0), 255);
+    }
+}

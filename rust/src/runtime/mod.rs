@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT artifacts (HLO text lowered by
+//! `python/compile/aot.py`) and execute them from rust.
+//!
+//! This is the L2 execution path of the three-layer architecture — the JAX
+//! model graph (with the Pallas kernels lowered into it) compiled once by
+//! XLA and driven from the rust coordinator.  The native engine
+//! ([`crate::nn`]) is the production hot path; the PJRT path exists to
+//! (a) prove the AOT bridge works end-to-end and (b) cross-check numerics
+//! between the handwritten int8 kernels and the JAX/Pallas reference
+//! (test `rust/tests/native_vs_pjrt.rs`).
+
+pub mod model_exec;
+
+pub use model_exec::{Manifest, ModelExecutable, PjrtState, Runtime};

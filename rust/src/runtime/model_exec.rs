@@ -1,0 +1,165 @@
+//! Compile + execute one AOT-lowered acoustic-model step function.
+//!
+//! Artifacts come in pairs:
+//! `<tag>.<variant>.b<B>.hlo.txt` (HLO text — the interchange format the
+//! image's xla_extension 0.5.1 accepts, see aot.py) and
+//! `<tag>.<variant>.b<B>.json` (I/O manifest).
+//!
+//! Step signature (from the manifest):
+//!   inputs : `x [B, input_dim]`, then per layer `c_l [B, N]`, `h_l [B, rec]`
+//!   outputs: tuple `(log_probs [B, L], c_0', h_0', …)`
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::io::json::Json;
+
+/// Artifact I/O manifest (written by aot.py next to each .hlo.txt).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub variant: String,
+    pub batch: usize,
+    pub input_dim: usize,
+    pub num_labels: usize,
+    pub num_layers: usize,
+    pub cell_dim: usize,
+    pub rec_dim: usize,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading manifest {}", path.as_ref().display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let need = |k: &str| j.int(k).with_context(|| format!("manifest missing '{k}'"));
+        Ok(Manifest {
+            model: j.str_field("model").unwrap_or("?").into(),
+            variant: j.str_field("variant").unwrap_or("?").into(),
+            batch: need("batch")? as usize,
+            input_dim: need("input_dim")? as usize,
+            num_labels: need("num_labels")? as usize,
+            num_layers: need("num_layers")? as usize,
+            cell_dim: need("cell_dim")? as usize,
+            rec_dim: need("rec_dim")? as usize,
+        })
+    }
+}
+
+/// A PJRT CPU client (wraps the `xla` crate).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact pair by its base path (without extension).
+    pub fn load_model(&self, base: impl AsRef<Path>) -> Result<ModelExecutable> {
+        let base = base.as_ref();
+        let hlo: PathBuf = PathBuf::from(format!("{}.hlo.txt", base.display()));
+        let man: PathBuf = PathBuf::from(format!("{}.json", base.display()));
+        let manifest = Manifest::load(&man)?;
+        let proto = xla::HloModuleProto::from_text_file(&hlo)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", hlo.display()))?;
+        Ok(ModelExecutable { exe, manifest })
+    }
+}
+
+/// Recurrent state held as PJRT literals between steps.
+pub struct PjrtState {
+    pub tensors: Vec<xla::Literal>,
+}
+
+/// One compiled step function.
+pub struct ModelExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+impl ModelExecutable {
+    /// Zero recurrent state matching the manifest layout.
+    pub fn zero_state(&self) -> PjrtState {
+        let m = &self.manifest;
+        let mut tensors = Vec::with_capacity(2 * m.num_layers);
+        for _ in 0..m.num_layers {
+            tensors.push(literal_2d(&vec![0f32; m.batch * m.cell_dim], m.batch, m.cell_dim));
+            tensors.push(literal_2d(&vec![0f32; m.batch * m.rec_dim], m.batch, m.rec_dim));
+        }
+        PjrtState { tensors }
+    }
+
+    /// One step: `x [batch, input_dim]` row-major → log-probs
+    /// `[batch, num_labels]`; recurrent state updated in place.
+    pub fn step(&self, x: &[f32], state: &mut PjrtState) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        if x.len() != m.batch * m.input_dim {
+            bail!("step input len {} != {}x{}", x.len(), m.batch, m.input_dim);
+        }
+        let x_lit = literal_2d(x, m.batch, m.input_dim);
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + state.tensors.len());
+        args.push(&x_lit);
+        for t in &state.tensors {
+            args.push(t);
+        }
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let mut parts = out.to_tuple().map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        if parts.len() != 1 + state.tensors.len() {
+            bail!("expected {} outputs, got {}", 1 + state.tensors.len(), parts.len());
+        }
+        let new_state = parts.split_off(1);
+        state.tensors = new_state;
+        let log_probs = parts[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("read log_probs: {e:?}"))?;
+        Ok(log_probs)
+    }
+
+    /// Run a full utterance at batch 1 (repeating the frame across the
+    /// batch if the artifact was lowered with batch > 1 — row 0 is used).
+    pub fn forward_utt(&self, feats: &[f32], num_frames: usize) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let d = m.input_dim;
+        let l = m.num_labels;
+        let mut state = self.zero_state();
+        let mut out = Vec::with_capacity(num_frames * l);
+        let mut xbuf = vec![0f32; m.batch * d];
+        for t in 0..num_frames {
+            for b in 0..m.batch {
+                xbuf[b * d..(b + 1) * d].copy_from_slice(&feats[t * d..(t + 1) * d]);
+            }
+            let lp = self.step(&xbuf, &mut state)?;
+            out.extend_from_slice(&lp[..l]);
+        }
+        Ok(out)
+    }
+}
+
+fn literal_2d(data: &[f32], rows: usize, cols: usize) -> xla::Literal {
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .expect("reshape literal")
+}
+
+// Integration tests against real artifacts live in rust/tests/ (they need
+// `make artifacts` to have run).

@@ -1,0 +1,128 @@
+//! Utterance generation (serving demos, benches, tests).
+//!
+//! Mirrors `data.py::gen_utt`'s seed chain, so the *word/phone content* of
+//! utterance `uid` in split `seed` matches the python dataset exactly
+//! (waveform noise differs — see sim/mod.rs).
+
+use crate::frontend::{self, spec};
+use crate::io::feat_fmt::Utt;
+use crate::sim::noise::distort;
+use crate::sim::synth::{decimate_align, synth_utterance, SynthUtt};
+use crate::sim::world::{sample_sentence, World};
+use crate::util::rng::{SplitMix64, Xoshiro256};
+
+/// Distortion style per split (mirrors `data.py` styles).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Style {
+    Clean,
+    Noisy,
+    /// 50% of utterances distorted at 10–20 dB.
+    Multistyle,
+}
+
+/// Generate the waveform + supervision for one utterance id.
+pub fn gen_wave(uid: u32, split_seed: u64, world: &World, style: Style) -> SynthUtt {
+    let mut mix = SplitMix64::new((split_seed << 20) ^ (uid as u64 * 0x9E37));
+    let seed64 = mix.next_u64();
+    let mut rng = SplitMix64::new(seed64);
+    let mut nrng = Xoshiro256::new(seed64 ^ 0xF00D);
+    let words = sample_sentence(&mut rng, world);
+    let mut u = synth_utterance(&words, world, &mut rng, &mut nrng);
+    let distorted = match style {
+        Style::Noisy => true,
+        Style::Multistyle => rng.next_f64() < 0.5,
+        Style::Clean => false,
+    };
+    if distorted {
+        let band = if style == Style::Noisy { spec::NOISY_SNR_DB } else { (10.0, 20.0) };
+        u.wave = distort(&u.wave, world, &mut rng, &mut nrng, band);
+    }
+    u
+}
+
+/// Full utterance record: waveform → rust frontend → features + labels.
+pub fn gen_utt(uid: u32, split_seed: u64, world: &World, style: Style) -> (Utt, Vec<f32>) {
+    let s = gen_wave(uid, split_seed, world, style);
+    let feats = frontend::features(&s.wave);
+    let t = feats.len() / spec::FEAT_DIM;
+    let mut align = decimate_align(&s.raw_align);
+    align.truncate(t);
+    align.resize(t, 0);
+    (
+        Utt {
+            uid,
+            feats,
+            num_frames: t,
+            dim: spec::FEAT_DIM,
+            phones: s.phones.clone(),
+            words: s.words.clone(),
+            align,
+        },
+        s.wave,
+    )
+}
+
+/// Generate a split of utterances (features only).
+pub fn generate_split(n: usize, seed: u64, world: &World, style: Style) -> Vec<Utt> {
+    (0..n).map(|i| gen_utt(i as u32, seed, world, style).0).collect()
+}
+
+/// Sample a large body of sentences for LM training (text side only).
+pub fn text_corpus(n_sentences: usize, seed: u64, world: &World) -> Vec<Vec<u32>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n_sentences).map(|_| sample_sentence(&mut rng, world)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_is_deterministic() {
+        let w = World::new();
+        let (a, _) = gen_utt(3, 101, &w, Style::Clean);
+        let (b, _) = gen_utt(3, 101, &w, Style::Clean);
+        assert_eq!(a.feats, b.feats);
+        assert_eq!(a.phones, b.phones);
+        assert_eq!(a.words, b.words);
+    }
+
+    #[test]
+    fn different_uid_different_content() {
+        let w = World::new();
+        let (a, _) = gen_utt(0, 101, &w, Style::Clean);
+        let (b, _) = gen_utt(1, 101, &w, Style::Clean);
+        assert!(a.words != b.words || a.feats != b.feats);
+    }
+
+    #[test]
+    fn features_and_align_consistent() {
+        let w = World::new();
+        let (u, wave) = gen_utt(7, 202, &w, Style::Clean);
+        assert_eq!(u.feats.len(), u.num_frames * spec::FEAT_DIM);
+        assert_eq!(u.align.len(), u.num_frames);
+        assert!(!u.phones.is_empty());
+        assert!(wave.len() > spec::FRAME_LEN);
+        // phones referenced by align ⊆ utterance phones ∪ {0}
+        for &a in &u.align {
+            assert!(a == 0 || u.phones.contains(&a));
+        }
+    }
+
+    #[test]
+    fn noisy_differs_from_clean() {
+        let w = World::new();
+        let (c, _) = gen_utt(5, 303, &w, Style::Clean);
+        let (n, _) = gen_utt(5, 303, &w, Style::Noisy);
+        assert_eq!(c.phones, n.phones); // same content
+        assert!(c.feats != n.feats); // different acoustics
+    }
+
+    #[test]
+    fn corpus_sizes() {
+        let w = World::new();
+        let c = text_corpus(100, 9, &w);
+        assert_eq!(c.len(), 100);
+        assert!(c.iter().all(|s| !s.is_empty()));
+    }
+}

@@ -1,0 +1,19 @@
+//! The synthetic speech world — rust mirror of `python/compile/data.py` +
+//! `spec.py` (see DESIGN.md §2 for why this replaces the paper's corpora).
+//!
+//! Structural randomness (lexicon, phones, bigram, sentences, durations)
+//! comes from the shared [`crate::util::rng::SplitMix64`] stream and is
+//! **bit-identical** with python; waveform noise uses xoshiro and is
+//! distribution-identical.
+//!
+//! - [`world`]   — phones, lexicon, bigram text model.
+//! - [`synth`]   — formant waveform synthesis.
+//! - [`noise`]   — multistyle distortion (colored noise, babble, reverb).
+//! - [`dataset`] — utterance generation for serving demos and tests.
+
+pub mod dataset;
+pub mod noise;
+pub mod synth;
+pub mod world;
+
+pub use world::World;

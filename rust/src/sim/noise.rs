@@ -1,0 +1,134 @@
+//! Multistyle distortion (mirrors `data.py`): colored noise + babble at a
+//! target SNR, optional exponential-decay reverb.
+
+use crate::frontend::spec;
+use crate::sim::synth::synth_phone;
+use crate::sim::world::World;
+use crate::util::rng::{SplitMix64, Xoshiro256};
+
+/// One-pole low-passed white noise (pink-ish), `data.py::colored_noise_fast`.
+pub fn colored_noise(n: usize, nrng: &mut Xoshiro256) -> Vec<f32> {
+    let a = 0.85f64;
+    let mut acc = 0f64;
+    (0..n)
+        .map(|_| {
+            acc = a * acc + (1.0 - a) * nrng.normal();
+            acc as f32
+        })
+        .collect()
+}
+
+/// Background babble: 3 superposed random phone streams.
+pub fn babble(n: usize, world: &World, rng: &mut SplitMix64, nrng: &mut Xoshiro256) -> Vec<f32> {
+    let mut out = vec![0f32; n];
+    for _ in 0..3 {
+        let mut pos = 0usize;
+        while pos < n {
+            let pid = rng.next_range(1, spec::N_PHONES as i64) as usize;
+            let dur = (rng.next_range(spec::PHONE_DUR_MIN_MS, spec::PHONE_DUR_MAX_MS) as f64
+                * spec::SAMPLE_RATE as f64
+                / 1000.0) as usize;
+            let seg = synth_phone(&world.phones[pid - 1], dur, nrng);
+            let end = (pos + dur).min(n);
+            for i in pos..end {
+                out[i] += seg[i - pos];
+            }
+            pos = end;
+        }
+    }
+    for v in out.iter_mut() {
+        *v /= 3.0;
+    }
+    out
+}
+
+/// Cheap 3-tap exponential-decay reverb (11/19/31 ms).
+pub fn reverb(wave: &[f32]) -> Vec<f32> {
+    let taps = [
+        ((0.011 * spec::SAMPLE_RATE as f64) as usize, 0.35f32),
+        ((0.019 * spec::SAMPLE_RATE as f64) as usize, 0.20),
+        ((0.031 * spec::SAMPLE_RATE as f64) as usize, 0.10),
+    ];
+    let mut out = wave.to_vec();
+    for (d, g) in taps {
+        for i in d..wave.len() {
+            out[i] += g * wave[i - d];
+        }
+    }
+    out
+}
+
+/// Additive colored noise + babble at a sampled SNR, 30% chance of reverb.
+/// Consumes the same SplitMix64 draws as `data.py::distort`.
+pub fn distort(
+    wave: &[f32],
+    world: &World,
+    rng: &mut SplitMix64,
+    nrng: &mut Xoshiro256,
+    snr_db_range: (f64, f64),
+) -> Vec<f32> {
+    let snr_db = snr_db_range.0 + (snr_db_range.1 - snr_db_range.0) * rng.next_f64();
+    let base = if rng.next_f64() < 0.3 { reverb(wave) } else { wave.to_vec() };
+    let cn = colored_noise(base.len(), nrng);
+    let bb = babble(base.len(), world, rng, nrng);
+    let mix: Vec<f32> = cn.iter().zip(&bb).map(|(a, b)| 0.5 * a + 0.5 * b).collect();
+    let p_sig = base.iter().map(|v| (v * v) as f64).sum::<f64>() / base.len() as f64 + 1e-12;
+    let p_noise = mix.iter().map(|v| (v * v) as f64).sum::<f64>() / mix.len() as f64 + 1e-12;
+    let gain = (p_sig / (p_noise * 10f64.powf(snr_db / 10.0))).sqrt() as f32;
+    base.iter().zip(&mix).map(|(s, m)| s + gain * m).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snr_db(sig: &[f32], noisy: &[f32]) -> f64 {
+        let p_sig = sig.iter().map(|v| (v * v) as f64).sum::<f64>();
+        let p_noise: f64 =
+            sig.iter().zip(noisy).map(|(s, n)| ((n - s) * (n - s)) as f64).sum();
+        10.0 * (p_sig / p_noise.max(1e-12)).log10()
+    }
+
+    #[test]
+    fn distort_hits_target_snr_band() {
+        let world = World::new();
+        let mut rng = SplitMix64::new(11);
+        let mut nrng = Xoshiro256::new(12);
+        // deterministic signal with real energy
+        let sig: Vec<f32> = (0..8000)
+            .map(|i| (2.0 * std::f64::consts::PI * 500.0 * i as f64 / 8000.0).sin() as f32 * 0.3)
+            .collect();
+        for _ in 0..5 {
+            let noisy = distort(&sig, &world, &mut rng, &mut nrng, (10.0, 10.0));
+            let s = snr_db(&sig, &noisy);
+            // Reverb (30% of draws) perturbs the "signal" itself and counts
+            // as noise in this crude measurement; accept a generous band
+            // around the 10 dB target.
+            assert!((2.5..=17.0).contains(&s), "snr {s}");
+        }
+    }
+
+    #[test]
+    fn colored_noise_is_lowpassed() {
+        let mut nrng = Xoshiro256::new(1);
+        let n = colored_noise(8192, &mut nrng);
+        // lag-1 autocorrelation should be strongly positive (~0.85)
+        let mean = n.iter().map(|v| *v as f64).sum::<f64>() / n.len() as f64;
+        let var: f64 = n.iter().map(|v| (*v as f64 - mean).powi(2)).sum();
+        let cov: f64 = n
+            .windows(2)
+            .map(|w| (w[0] as f64 - mean) * (w[1] as f64 - mean))
+            .sum();
+        let rho = cov / var;
+        assert!(rho > 0.7, "rho {rho}");
+    }
+
+    #[test]
+    fn reverb_preserves_length_and_adds_tail_energy() {
+        let mut w = vec![0f32; 1000];
+        w[0] = 1.0;
+        let r = reverb(&w);
+        assert_eq!(r.len(), 1000);
+        assert!(r[(0.011 * 8000.0) as usize] > 0.3);
+    }
+}

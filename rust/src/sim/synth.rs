@@ -1,0 +1,189 @@
+//! Formant waveform synthesis (mirrors `data.py::synth_phone/synth_utterance`).
+//!
+//! Discrete structure (durations, pauses) draws from the shared SplitMix64
+//! stream in the same order as python; float noise/phases use xoshiro
+//! (distribution-identical, not bit-identical — see sim/mod.rs).
+
+use crate::frontend::spec;
+use crate::sim::world::{Phone, World};
+use crate::util::rng::{SplitMix64, Xoshiro256};
+
+/// One phone: 3 formant sinusoids (3 Hz vibrato, raised-cosine edges) + noise.
+pub fn synth_phone(phone: &Phone, dur_samples: usize, nrng: &mut Xoshiro256) -> Vec<f32> {
+    let sr = spec::SAMPLE_RATE as f64;
+    let mut sig = vec![0f64; dur_samples];
+    let phases: Vec<f64> = (0..3).map(|_| nrng.uniform(0.0, 2.0 * std::f64::consts::PI)).collect();
+    for i in 0..dur_samples {
+        let t = i as f64 / sr;
+        let vib = 1.0 + 0.01 * (2.0 * std::f64::consts::PI * 3.0 * t).sin();
+        let mut v = 0.0;
+        for (fi, &(f_hz, amp)) in phone.formants.iter().enumerate() {
+            v += amp * (2.0 * std::f64::consts::PI * f_hz * vib * t + phases[fi]).sin();
+        }
+        sig[i] = v;
+    }
+    if !phone.voiced {
+        for v in sig.iter_mut() {
+            *v *= 0.2;
+        }
+    }
+    for v in sig.iter_mut() {
+        *v += phone.noise_amp * nrng.normal();
+    }
+    // Raised-cosine attack/decay over 10 ms.
+    let edge = ((0.010 * sr) as usize).min(dur_samples / 2);
+    let mut out = vec![0f32; dur_samples];
+    for i in 0..dur_samples {
+        let env = if edge == 0 {
+            1.0
+        } else if i < edge {
+            0.5 - 0.5 * (std::f64::consts::PI * i as f64 / edge as f64).cos()
+        } else if i >= dur_samples - edge {
+            let j = dur_samples - 1 - i;
+            0.5 - 0.5 * (std::f64::consts::PI * j as f64 / edge as f64).cos()
+        } else {
+            1.0
+        };
+        out[i] = (0.3 * sig[i] * env) as f32;
+    }
+    out
+}
+
+/// A synthesized utterance with its supervision.
+pub struct SynthUtt {
+    pub wave: Vec<f32>,
+    pub phones: Vec<u32>,
+    pub words: Vec<u32>,
+    /// Phone id active at each raw frame center (0 = silence).
+    pub raw_align: Vec<u32>,
+}
+
+/// Words → waveform + labels (mirrors `data.py::synth_utterance`).
+pub fn synth_utterance(
+    words: &[u32],
+    world: &World,
+    rng: &mut SplitMix64,
+    nrng: &mut Xoshiro256,
+) -> SynthUtt {
+    let sr = spec::SAMPLE_RATE as f64;
+    let sil = (0.050 * sr) as usize;
+    let mut wave: Vec<f32> = vec![0.0; sil];
+    let mut spans: Vec<(u32, usize)> = vec![(0, sil)];
+    let mut phones = Vec::new();
+    for (wi, &w) in words.iter().enumerate() {
+        if wi > 0 && rng.next_f64() < 0.3 {
+            let pause = ((0.020 + 0.040 * rng.next_f64()) * sr) as usize;
+            wave.extend(std::iter::repeat(0f32).take(pause));
+            spans.push((0, pause));
+        }
+        for &pid in world.word_phones(w) {
+            let dur_ms = rng.next_range(spec::PHONE_DUR_MIN_MS, spec::PHONE_DUR_MAX_MS);
+            let n = (dur_ms as f64 * sr / 1000.0) as usize;
+            wave.extend(synth_phone(&world.phones[(pid - 1) as usize], n, nrng));
+            spans.push((pid, n));
+            phones.push(pid);
+        }
+    }
+    wave.extend(std::iter::repeat(0f32).take(sil));
+    spans.push((0, sil));
+    for v in wave.iter_mut() {
+        *v += spec::SYNTH_NOISE_FLOOR as f32 * nrng.normal() as f32;
+    }
+
+    // Per-raw-frame phone alignment at frame centers.
+    let mut sample_phone = vec![0u32; wave.len()];
+    let mut pos = 0;
+    for (pid, n) in spans {
+        for s in sample_phone.iter_mut().skip(pos).take(n) {
+            *s = pid;
+        }
+        pos += n;
+    }
+    let n_frames = if wave.len() >= spec::FRAME_LEN {
+        1 + (wave.len() - spec::FRAME_LEN) / spec::FRAME_HOP
+    } else {
+        0
+    };
+    let raw_align = (0..n_frames)
+        .map(|t| {
+            let c = (spec::FRAME_HOP * t + spec::FRAME_LEN / 2).min(wave.len() - 1);
+            sample_phone[c]
+        })
+        .collect();
+    SynthUtt { wave, phones, words: words.to_vec(), raw_align }
+}
+
+/// Raw-frame alignment → output-frame alignment (`data.py::decimate_align`).
+pub fn decimate_align(raw_align: &[u32]) -> Vec<u32> {
+    let t_raw = raw_align.len();
+    if t_raw < spec::STACK {
+        return Vec::new();
+    }
+    let n_out = (t_raw - spec::STACK) / spec::DECIMATE + 1;
+    (0..n_out).map(|t| raw_align[t * spec::DECIMATE]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::world::sample_sentence;
+
+    #[test]
+    fn utterance_has_reasonable_shape() {
+        let world = World::new();
+        let mut rng = SplitMix64::new(1);
+        let mut nrng = Xoshiro256::new(2);
+        let words = sample_sentence(&mut rng, &world);
+        let u = synth_utterance(&words, &world, &mut rng, &mut nrng);
+        // ≥ 2×50ms silence + phones
+        assert!(u.wave.len() > 800);
+        assert_eq!(
+            u.phones.len(),
+            words.iter().map(|&w| world.word_phones(w).len()).sum::<usize>()
+        );
+        assert!(!u.raw_align.is_empty());
+        // amplitude bounded
+        assert!(u.wave.iter().all(|v| v.abs() < 4.0));
+    }
+
+    #[test]
+    fn alignment_covers_phone_sequence() {
+        let world = World::new();
+        let mut rng = SplitMix64::new(3);
+        let mut nrng = Xoshiro256::new(4);
+        let u = synth_utterance(&[5, 17], &world, &mut rng, &mut nrng);
+        // collapse the alignment: should equal the phone sequence
+        let mut collapsed = Vec::new();
+        let mut prev = u32::MAX;
+        for &a in &u.raw_align {
+            if a != 0 && a != prev {
+                collapsed.push(a);
+            }
+            prev = a;
+        }
+        assert_eq!(collapsed, u.phones, "align {:?}", u.raw_align);
+    }
+
+    #[test]
+    fn phone_energy_concentrates_at_formants() {
+        let world = World::new();
+        let p = &world.phones[9];
+        let mut nrng = Xoshiro256::new(5);
+        let wav = synth_phone(p, 1600, &mut nrng);
+        // energy present
+        let rms: f32 =
+            (wav.iter().map(|v| v * v).sum::<f32>() / wav.len() as f32).sqrt();
+        assert!(rms > 0.01, "rms {rms}");
+        // envelope edges near zero
+        assert!(wav[0].abs() < 0.2 && wav[wav.len() - 1].abs() < 0.2);
+    }
+
+    #[test]
+    fn decimate_align_matches_formula() {
+        let align: Vec<u32> = (0..20).collect();
+        let d = decimate_align(&align);
+        assert_eq!(d.len(), (20 - spec::STACK) / spec::DECIMATE + 1);
+        assert_eq!(d[0], 0);
+        assert_eq!(d[1], 2);
+    }
+}

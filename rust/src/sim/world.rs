@@ -1,0 +1,226 @@
+//! Derived world: phone inventory, lexicon, bigram sentence model.
+//! Bit-identical mirror of `spec.py::derive_phones/derive_lexicon/
+//! derive_bigram/sample_sentence` (same SplitMix64 draws inted same order).
+
+use std::collections::HashSet;
+
+use crate::frontend::spec;
+use crate::util::rng::SplitMix64;
+
+/// Formant-like description of a synthetic phone (`spec.py::Phone`).
+#[derive(Clone, Debug)]
+pub struct Phone {
+    pub id: u32,
+    /// Three (freq_hz, amplitude) pairs.
+    pub formants: [(f64, f64); 3],
+    pub noise_amp: f64,
+    pub voiced: bool,
+}
+
+/// The full derived world.
+pub struct World {
+    pub phones: Vec<Phone>,
+    /// word id → phone-id sequence
+    pub lexicon: Vec<Vec<u32>>,
+    /// word id → 8 (successor, weight) rows, weights sum to 1
+    pub bigram: Vec<Vec<(u32, f64)>>,
+}
+
+pub fn derive_phones(rng: &mut SplitMix64) -> Vec<Phone> {
+    let mut phones = Vec::with_capacity(spec::N_PHONES);
+    for pid in 1..=spec::N_PHONES as u32 {
+        let f1 = 220.0 + 1000.0 * rng.next_f64();
+        let mut f2 = f1 + 300.0 + 1200.0 * rng.next_f64();
+        let mut f3 = f2 + 400.0 + 1000.0 * rng.next_f64();
+        let a1 = 0.5 + 0.5 * rng.next_f64();
+        let a2 = 0.25 + 0.45 * rng.next_f64();
+        let a3 = 0.1 + 0.3 * rng.next_f64();
+        let mut noise = 0.02 + 0.1 * rng.next_f64();
+        let voiced_draw = rng.next_f64();
+        let voiced = voiced_draw > 0.25;
+        if !voiced {
+            noise += 0.35;
+        }
+        f3 = f3.min(3600.0);
+        f2 = f2.min(f3 - 100.0);
+        phones.push(Phone {
+            id: pid,
+            formants: [(f1, a1), (f2, a2), (f3, a3)],
+            noise_amp: noise,
+            voiced,
+        });
+    }
+    phones
+}
+
+pub fn derive_lexicon(rng: &mut SplitMix64) -> Vec<Vec<u32>> {
+    let mut seen: HashSet<Vec<u32>> = HashSet::new();
+    let mut lex = Vec::with_capacity(spec::N_WORDS);
+    for _ in 0..spec::N_WORDS {
+        let n = rng.next_range(spec::WORD_MIN_PHONES, spec::WORD_MAX_PHONES) as usize;
+        let mut seq: Vec<u32> =
+            (0..n).map(|_| rng.next_range(1, spec::N_PHONES as i64) as u32).collect();
+        while seen.contains(&seq) {
+            let last = seq.len() - 1;
+            seq[last] = rng.next_range(1, spec::N_PHONES as i64) as u32;
+        }
+        seen.insert(seq.clone());
+        lex.push(seq);
+    }
+    lex
+}
+
+pub fn derive_bigram(rng: &mut SplitMix64) -> Vec<Vec<(u32, f64)>> {
+    let mut table = Vec::with_capacity(spec::N_WORDS);
+    for _ in 0..spec::N_WORDS {
+        let mut succ = Vec::with_capacity(8);
+        let mut total = 0.0;
+        for _ in 0..8 {
+            let s = rng.next_range(0, spec::N_WORDS as i64 - 1) as u32;
+            let w = 0.1 + rng.next_f64();
+            succ.push((s, w));
+            total += w;
+        }
+        for e in succ.iter_mut() {
+            e.1 /= total;
+        }
+        table.push(succ);
+    }
+    table
+}
+
+impl World {
+    pub fn new() -> Self {
+        Self::with_seed(spec::WORLD_SEED)
+    }
+
+    pub fn with_seed(seed: u64) -> Self {
+        World {
+            phones: derive_phones(&mut SplitMix64::new(seed ^ 0x01)),
+            lexicon: derive_lexicon(&mut SplitMix64::new(seed ^ 0x02)),
+            bigram: derive_bigram(&mut SplitMix64::new(seed ^ 0x03)),
+        }
+    }
+
+    pub fn word_phones(&self, word: u32) -> &[u32] {
+        &self.lexicon[word as usize]
+    }
+}
+
+impl Default for World {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn harmonic() -> f64 {
+    (0..spec::N_WORDS).map(|w| 1.0 / (w as f64 + 1.0)).sum()
+}
+
+/// Zipf-ish unigram draw (mirrors `spec.py::zipf_word`).
+pub fn zipf_word(rng: &mut SplitMix64) -> u32 {
+    let h = harmonic();
+    let u = rng.next_f64() * h;
+    let mut acc = 0.0;
+    for w in 0..spec::N_WORDS {
+        acc += 1.0 / (w as f64 + 1.0);
+        if u <= acc {
+            return w as u32;
+        }
+    }
+    spec::N_WORDS as u32 - 1
+}
+
+/// Sample a sentence (mirrors `spec.py::sample_sentence`).
+pub fn sample_sentence(rng: &mut SplitMix64, world: &World) -> Vec<u32> {
+    let n = rng.next_range(spec::SENT_MIN_WORDS, spec::SENT_MAX_WORDS) as usize;
+    let mut words = vec![zipf_word(rng)];
+    while words.len() < n {
+        let use_bigram = rng.next_f64() < 0.8;
+        if use_bigram {
+            let row = &world.bigram[*words.last().unwrap() as usize];
+            let u = rng.next_f64();
+            let mut acc = 0.0;
+            let mut nxt = row.last().unwrap().0;
+            for &(s, w) in row {
+                acc += w;
+                if u <= acc {
+                    nxt = s;
+                    break;
+                }
+            }
+            words.push(nxt);
+        } else {
+            words.push(zipf_word(rng));
+        }
+    }
+    words
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_shapes() {
+        let w = World::new();
+        assert_eq!(w.phones.len(), spec::N_PHONES);
+        assert_eq!(w.lexicon.len(), spec::N_WORDS);
+        assert_eq!(w.bigram.len(), spec::N_WORDS);
+        for p in &w.phones {
+            assert!(p.formants[0].0 < p.formants[1].0);
+            assert!(p.formants[2].0 <= 3600.0);
+        }
+        for seq in &w.lexicon {
+            assert!((2..=6).contains(&seq.len()));
+            assert!(seq.iter().all(|&p| (1..=40).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn lexicon_pronunciations_unique() {
+        let w = World::new();
+        let set: HashSet<_> = w.lexicon.iter().collect();
+        assert_eq!(set.len(), w.lexicon.len());
+    }
+
+    #[test]
+    fn bigram_rows_normalized() {
+        let w = World::new();
+        for row in &w.bigram {
+            let s: f64 = row.iter().map(|e| e.1).sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sentences_deterministic_and_in_range() {
+        let w = World::new();
+        let mut r1 = SplitMix64::new(99);
+        let mut r2 = SplitMix64::new(99);
+        for _ in 0..50 {
+            let a = sample_sentence(&mut r1, &w);
+            let b = sample_sentence(&mut r2, &w);
+            assert_eq!(a, b);
+            assert!((1..=4).contains(&a.len()));
+            assert!(a.iter().all(|&x| (x as usize) < spec::N_WORDS));
+        }
+    }
+
+    #[test]
+    fn zipf_head_is_heavier() {
+        let mut r = SplitMix64::new(5);
+        let mut lo = 0;
+        let mut hi = 0;
+        for _ in 0..5000 {
+            let w = zipf_word(&mut r);
+            if w < 20 {
+                lo += 1;
+            }
+            if w >= 180 {
+                hi += 1;
+            }
+        }
+        assert!(lo > hi * 3, "lo={lo} hi={hi}");
+    }
+}

@@ -1,0 +1,187 @@
+//! Mini-criterion: a self-contained micro-benchmark harness.
+//!
+//! The image has no network access and `criterion` is not in the vendored
+//! snapshot, so `cargo bench` targets use this instead (Cargo.toml sets
+//! `harness = false`).  It does what we need from criterion: warmup,
+//! calibrated iteration counts, mean/σ/p50/p99, throughput, and a
+//! machine-greppable one-line report per benchmark.
+
+use std::time::{Duration, Instant};
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Optional work-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// items/second if `items_per_iter` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / (self.mean_ns * 1e-9))
+    }
+
+    pub fn report(&self) -> String {
+        let thr = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:8.2} Gitem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:8.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:8.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {t:8.2} item/s"),
+            None => String::new(),
+        };
+        format!(
+            "bench {:<44} {:>12} mean {:>10} p50 {:>10} p99 ±{:>4.1}%{}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            100.0 * self.std_ns / self.mean_ns.max(1e-9),
+            thr
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with criterion-like calibration.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    min_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(1),
+            min_samples: 20,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(250),
+            min_samples: 10,
+        }
+    }
+
+    /// Run `f` repeatedly; `f` should perform one logical iteration and
+    /// return a value that is consumed via [`black_box`].
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed() < self.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        // Aim for ~min_samples..1000 samples, batching fast iterations.
+        let target_samples =
+            ((self.measure.as_secs_f64() / per_iter) as usize).clamp(self.min_samples, 1000);
+        let batch =
+            ((self.measure.as_secs_f64() / per_iter / target_samples as f64) as u64).max(1);
+
+        let mut samples = Vec::with_capacity(target_samples);
+        for _ in 0..target_samples {
+            let s = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(s.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        Measurement {
+            name: name.to_string(),
+            iters: batch * n as u64,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            p50_ns: samples[n / 2],
+            p99_ns: samples[(n * 99 / 100).min(n - 1)],
+            items_per_iter: None,
+        }
+    }
+
+    /// Like [`run`] but annotates items-per-iteration (throughput).
+    pub fn run_with_items<T>(
+        &self,
+        name: &str,
+        items: f64,
+        f: impl FnMut() -> T,
+    ) -> Measurement {
+        let mut m = self.run(name, f);
+        m.items_per_iter = Some(items);
+        println!("{}", m.report());
+        m
+    }
+
+    /// Run + print.
+    pub fn bench<T>(&self, name: &str, f: impl FnMut() -> T) -> Measurement {
+        let m = self.run(name, f);
+        println!("{}", m.report());
+        m
+    }
+}
+
+/// Opaque value sink (stable alternative to `std::hint::black_box` that also
+/// works for non-Copy types by reference).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::quick();
+        let m = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters > 0);
+        assert!(m.p99_ns >= m.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let b = Bench::quick();
+        let mut m = b.run("noop", || 1u64);
+        m.items_per_iter = Some(100.0);
+        assert!(m.throughput().unwrap() > 0.0);
+        assert!(m.report().contains("item/s"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Minimal CLI argument parsing (no `clap` in the offline snapshot).
+//!
+//! Supports `command --flag value --switch positional` style:
+//! ```text
+//! quantasr table1 --artifacts artifacts --backend native
+//! ```
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, `--key value` options, bare switches,
+/// and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub options: HashMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(items: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(name) = item.strip_prefix("--") {
+                // `--key value` unless next token is another flag / absent.
+                match iter.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = iter.next().unwrap();
+                        out.options.insert(name.to_string(), v);
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else if out.command.is_none() {
+                out.command = Some(item);
+            } else {
+                out.positional.push(item);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn basic_command_and_options() {
+        let a = parse("table1 --artifacts art --batch 8 --verbose");
+        assert_eq!(a.command.as_deref(), Some("table1"));
+        assert_eq!(a.get("artifacts"), Some("art"));
+        assert_eq!(a.get_usize("batch", 1), 8);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn positionals_after_command() {
+        let a = parse("decode file1 file2 --beam 8");
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+        assert_eq!(a.get_usize("beam", 0), 8);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("serve");
+        assert_eq!(a.get_or("port", "7700"), "7700");
+        assert_eq!(a.get_f64("deadline-ms", 5.0), 5.0);
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn trailing_switch_then_option() {
+        let a = parse("x --quiet --n 3");
+        assert!(a.has("quiet"));
+        assert_eq!(a.get_usize("n", 0), 3);
+    }
+}

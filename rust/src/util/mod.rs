@@ -1,0 +1,7 @@
+//! Infrastructure the offline image forces us to own: RNG, bench harness,
+//! property-testing helpers, and CLI parsing.
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod rng;

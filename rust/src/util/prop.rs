@@ -1,0 +1,102 @@
+//! proptest-lite: seeded randomized property testing.
+//!
+//! The vendored crate snapshot has no `proptest`, so tests use this tiny
+//! harness: a deterministic generator seeded per case, a fixed case count,
+//! and on failure a report of the failing case seed so it can be replayed
+//! by constructing `Gen::new(seed)` directly.  No shrinking — cases are
+//! kept small instead.
+
+use crate::util::rng::Xoshiro256;
+
+/// Random-value source handed to properties.
+pub struct Gen {
+    pub rng: Xoshiro256,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256::new(seed), seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo as f64, hi as f64) as f32
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vec of f32 drawn uniformly from [lo, hi).
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Vec of normal f32 with the given std.
+    pub fn vec_normal(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal() as f32 * std).collect()
+    }
+
+    /// Vec of u32 ids below `max`.
+    pub fn vec_ids(&mut self, n: usize, max: u32) -> Vec<u32> {
+        (0..n).map(|_| self.rng.below(max as usize) as u32).collect()
+    }
+}
+
+/// Run `prop` for `cases` deterministic cases derived from `seed`.
+/// Panics with the failing case seed on the first failure.
+pub fn forall(name: &str, cases: u32, seed: u64, mut prop: impl FnMut(&mut Gen)) {
+    for i in 0..cases {
+        let case_seed = seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1));
+        let mut g = Gen::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed on case {i} (replay: Gen::new({case_seed:#x}))"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall("counter", 25, 1, |_g| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(5);
+        let mut b = Gen::new(5);
+        assert_eq!(a.vec_f32(8, -1.0, 1.0), b.vec_f32(8, -1.0, 1.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall("fails", 10, 2, |g| {
+            let x = g.usize_in(0, 9);
+            assert!(x < 100, "unreachable");
+            if x >= 0 {
+                // always fail after a few cases
+                assert!(g.usize_in(0, 3) != 1);
+            }
+        });
+    }
+}

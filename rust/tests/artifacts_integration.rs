@@ -1,0 +1,138 @@
+//! Integration tests against the real build artifacts (`make artifacts`):
+//! trained models, datasets, and the AOT/PJRT bridge.  All tests skip
+//! gracefully when artifacts/ is absent.
+
+mod common;
+
+use quantasr::decoder::DecoderConfig;
+use quantasr::eval::{build_decoder, evaluate};
+use quantasr::io::feat_fmt::read_feats;
+use quantasr::nn::{AcousticModel, ExecMode};
+use quantasr::sim::World;
+
+#[test]
+fn trained_model_beats_chance_by_a_lot() {
+    let Some(art) = common::artifacts() else { return };
+    let utts = read_feats(art.join("data/eval_clean.feats")).unwrap();
+    let model =
+        AcousticModel::load(art.join("models/p24.qat.qam"), ExecMode::Quant).unwrap();
+    let decoder = build_decoder(&World::new(), DecoderConfig::default());
+    let r = evaluate(&model, &decoder, &utts[..64.min(utts.len())], 4);
+    assert!(r.ler < 0.5, "LER {} — model did not learn", r.ler);
+    assert!(r.wer < 0.5, "WER {} — decoding broken", r.wer);
+}
+
+#[test]
+fn exec_modes_agree_on_trained_model() {
+    // The quantized path must track the float path closely on real data
+    // (that is the entire point of the paper).
+    let Some(art) = common::artifacts() else { return };
+    let utts = read_feats(art.join("data/eval_clean.feats")).unwrap();
+    let qam = quantasr::io::model_fmt::QamFile::load(art.join("models/p24.float.qam")).unwrap();
+    let mf = AcousticModel::from_qam(&qam, ExecMode::Float).unwrap();
+    let mq = AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap();
+    let u = &utts[0];
+    let lf = mf.forward_utt(&u.feats, u.num_frames);
+    let lq = mq.forward_utt(&u.feats, u.num_frames);
+    // compare greedy decisions, not raw floats (quantization shifts both)
+    let gf = quantasr::decoder::ctc::greedy(&lf, mf.num_labels());
+    let gq = quantasr::decoder::ctc::greedy(&lq, mq.num_labels());
+    let dist = quantasr::decoder::wer::edit_distance(&gf, &gq);
+    assert!(
+        dist <= 1 + gf.len() / 5,
+        "quantized path diverged: {gf:?} vs {gq:?}"
+    );
+}
+
+#[test]
+fn python_dataset_readable_and_consistent() {
+    let Some(art) = common::artifacts() else { return };
+    for split in ["eval_clean", "eval_noisy", "dev"] {
+        let utts = read_feats(art.join(format!("data/{split}.feats"))).unwrap();
+        assert!(!utts.is_empty());
+        for u in utts.iter().take(50) {
+            assert_eq!(u.feats.len(), u.num_frames * u.dim);
+            assert_eq!(u.dim, quantasr::frontend::spec::FEAT_DIM);
+            assert_eq!(u.align.len(), u.num_frames);
+            assert!(u.phones.iter().all(|&p| (1..=40).contains(&p)));
+            assert!(u.words.iter().all(|&w| w < 200));
+            assert!(u.feats.iter().all(|v| v.is_finite()));
+        }
+    }
+}
+
+#[test]
+fn clean_and_noisy_eval_share_references() {
+    let Some(art) = common::artifacts() else { return };
+    let clean = read_feats(art.join("data/eval_clean.feats")).unwrap();
+    let noisy = read_feats(art.join("data/eval_noisy.feats")).unwrap();
+    assert_eq!(clean.len(), noisy.len());
+    for (c, n) in clean.iter().zip(&noisy).take(100) {
+        assert_eq!(c.words, n.words, "same seed ⇒ same content");
+        assert_eq!(c.phones, n.phones);
+    }
+}
+
+#[test]
+fn qam_files_load_with_expected_flags() {
+    let Some(art) = common::artifacts() else { return };
+    use quantasr::io::model_fmt::QamFile;
+    let f = QamFile::load(art.join("models/p24.float.qam")).unwrap();
+    assert!(!f.header.quantized);
+    let q = QamFile::load(art.join("models/p24.qat.qam")).unwrap();
+    assert!(q.header.quantized && !q.header.quantize_output);
+    let qa = QamFile::load(art.join("models/p24.qatall.qam")).unwrap();
+    assert!(qa.header.quantized && qa.header.quantize_output);
+    // quantized files are much smaller (the paper's memory claim)
+    assert!(q.storage_bytes() * 3 < f.storage_bytes());
+}
+
+#[test]
+fn native_matches_pjrt_artifacts() {
+    // The handwritten int8 engine and the AOT JAX graph (with the stored u8
+    // weights baked in) must agree numerically.
+    let Some(art) = common::artifacts() else { return };
+    if !art.join("hlo/p24.quant.b1.hlo.txt").exists() {
+        eprintln!("SKIPPED: hlo artifacts missing");
+        return;
+    }
+    let utts = read_feats(art.join("data/eval_clean.feats")).unwrap();
+    let u = &utts[0];
+    let rt = quantasr::runtime::Runtime::cpu().unwrap();
+    for (variant, qam, mode, tol) in [
+        ("float", "p24.float.qam", ExecMode::Float, 2e-3f32),
+        ("quant", "p24.qat.qam", ExecMode::Quant, 2e-3),
+    ] {
+        let exe = rt.load_model(art.join(format!("hlo/p24.{variant}.b1"))).unwrap();
+        let pjrt = exe.forward_utt(&u.feats, u.num_frames).unwrap();
+        let native = AcousticModel::load(art.join("models").join(qam), mode).unwrap();
+        let nat = native.forward_utt(&u.feats, u.num_frames);
+        let max = pjrt
+            .iter()
+            .zip(&nat)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max < tol, "{variant}: native vs pjrt max err {max}");
+    }
+}
+
+#[test]
+fn pallas_variant_matches_jnp_variant() {
+    // The AOT graph whose matmuls lower through the Pallas kernel must be
+    // numerically identical to the plain-jnp quant graph.
+    let Some(art) = common::artifacts() else { return };
+    if !art.join("hlo/p24.quant_pallas.b1.hlo.txt").exists() {
+        eprintln!("SKIPPED: pallas hlo missing");
+        return;
+    }
+    let utts = read_feats(art.join("data/eval_clean.feats")).unwrap();
+    let u = &utts[0];
+    let t = 20.min(u.num_frames);
+    let rt = quantasr::runtime::Runtime::cpu().unwrap();
+    let jnp = rt.load_model(art.join("hlo/p24.quant.b1")).unwrap();
+    let pal = rt.load_model(art.join("hlo/p24.quant_pallas.b1")).unwrap();
+    let a = jnp.forward_utt(&u.feats[..t * u.dim], t).unwrap();
+    let b = pal.forward_utt(&u.feats[..t * u.dim], t).unwrap();
+    let max = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(max < 1e-4, "pallas vs jnp max err {max}");
+}

@@ -1,0 +1,78 @@
+//! Shared helpers for integration tests.
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory (built by `make artifacts`).  Tests that
+/// need trained models/golden files skip (print + return None) when it is
+/// absent, so `cargo test` works on a fresh checkout too.
+pub fn artifacts() -> Option<PathBuf> {
+    let p = std::env::var("QUANTASR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    if p.join("data/eval_clean.feats").exists() {
+        Some(p)
+    } else {
+        eprintln!(
+            "SKIPPED: artifacts not found at {} (run `make artifacts`)",
+            p.display()
+        );
+        None
+    }
+}
+
+/// Build a small random float model (same shape family as the paper grid).
+pub fn random_model(
+    layers: usize,
+    cells: usize,
+    proj: Option<usize>,
+) -> quantasr::io::model_fmt::QamFile {
+    use quantasr::io::model_fmt::{ModelHeader, QamFile, Tensor};
+    use quantasr::util::rng::Xoshiro256;
+    use std::collections::BTreeMap;
+
+    let input_dim = quantasr::frontend::spec::FEAT_DIM;
+    let labels = quantasr::frontend::spec::N_LABELS;
+    let rec = proj.unwrap_or(cells);
+    let mut rng = Xoshiro256::new(0x7E57);
+    let mut tensors = BTreeMap::new();
+    let mut mk = |name: String, i: usize, o: usize, rng: &mut Xoshiro256| {
+        let scale = (1.0 / i as f64).sqrt() as f32 * 1.7;
+        let mut data = vec![0f32; i * o];
+        for v in data.iter_mut() {
+            *v = rng.normal() as f32 * scale;
+        }
+        (name, Tensor::F32 { shape: vec![i, o], data })
+    };
+    for l in 0..layers {
+        let ind = if l == 0 { input_dim } else { rec };
+        let (n, t) = mk(format!("l{l}.wx"), ind, 4 * cells, &mut rng);
+        tensors.insert(n, t);
+        let (n, t) = mk(format!("l{l}.wh"), rec, 4 * cells, &mut rng);
+        tensors.insert(n, t);
+        tensors.insert(
+            format!("l{l}.b"),
+            Tensor::F32 { shape: vec![4 * cells], data: vec![0.0; 4 * cells] },
+        );
+        if let Some(p) = proj {
+            let (n, t) = mk(format!("l{l}.wp"), cells, p, &mut rng);
+            tensors.insert(n, t);
+        }
+    }
+    let (n, t) = mk("out.w".into(), rec, labels, &mut rng);
+    tensors.insert(n, t);
+    tensors.insert("out.b".into(), Tensor::F32 { shape: vec![labels], data: vec![0.0; labels] });
+    QamFile {
+        header: ModelHeader {
+            name: format!("rand{layers}x{cells}"),
+            num_layers: layers,
+            cell_dim: cells,
+            proj_dim: proj,
+            input_dim,
+            num_labels: labels,
+            quantized: false,
+            quantize_output: false,
+            param_count: 0,
+        },
+        tensors,
+    }
+}

@@ -1,0 +1,50 @@
+//! Cross-language golden test: the rust frontend must reproduce the python
+//! frontend (`data.py`) on exported waveform→feature pairs.
+
+mod common;
+
+use quantasr::frontend;
+use quantasr::io::model_fmt::read_f32_file;
+
+#[test]
+fn rust_frontend_matches_python_features() {
+    let Some(art) = common::artifacts() else { return };
+    let mut checked = 0;
+    for i in 0..4 {
+        let wav_path = art.join(format!("golden/frontend_{i}.wav.f32"));
+        let feat_path = art.join(format!("golden/frontend_{i}.feat.f32"));
+        if !wav_path.exists() {
+            continue;
+        }
+        let wave = read_f32_file(&wav_path).unwrap();
+        let want = read_f32_file(&feat_path).unwrap();
+        let got = frontend::features(&wave);
+        assert_eq!(got.len(), want.len(), "frame count mismatch on pair {i}");
+        let mut max_err = 0f32;
+        for (a, b) in got.iter().zip(&want) {
+            max_err = max_err.max((a - b).abs());
+        }
+        // Tolerance: different FFT implementations + f32 accumulation order;
+        // features are log-compressed so 1e-3 abs is far below any model
+        // sensitivity (feature std is ~1.0).
+        assert!(max_err < 1e-3, "pair {i}: max err {max_err}");
+        checked += 1;
+    }
+    assert!(checked > 0, "no golden pairs found");
+}
+
+#[test]
+fn rust_frontend_streaming_matches_python_features() {
+    let Some(art) = common::artifacts() else { return };
+    let wave = read_f32_file(art.join("golden/frontend_0.wav.f32")).unwrap();
+    let want = read_f32_file(art.join("golden/frontend_0.feat.f32")).unwrap();
+    let mut fe = frontend::Frontend::new();
+    let mut got = Vec::new();
+    for chunk in wave.chunks(333) {
+        fe.push(chunk, &mut got);
+    }
+    assert_eq!(got.len(), want.len());
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-3);
+    }
+}
