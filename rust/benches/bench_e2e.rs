@@ -3,9 +3,16 @@
 //!     int8, across the Table-1 architecture grid ("the cost of inference",
 //!     §3.1) — uses trained artifacts when present, random weights else;
 //! (b) the serving engine's batched throughput vs max_batch (the L3
-//!     batching ablation).
+//!     batching ablation);
+//! (c) per-tick state movement: the legacy gather/scatter batch assembly
+//!     vs in-place `BatchArena` lane stepping — the copies the
+//!     lane-resident engine eliminated.
+//!
+//! Results are also written to `BENCH_engine.json` so the perf trajectory
+//! is recorded across PRs.
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 use std::sync::Arc;
 
 use quantasr::coordinator::batcher::BatchPolicy;
@@ -16,7 +23,7 @@ use quantasr::frontend::spec;
 use quantasr::io::model_fmt::{ModelHeader, QamFile, Tensor};
 use quantasr::nn::{AcousticModel, ExecMode};
 use quantasr::sim::World;
-use quantasr::util::bench::Bench;
+use quantasr::util::bench::{fmt_ns, Bench, Measurement};
 use quantasr::util::rng::Xoshiro256;
 
 fn random_qam(layers: usize, cells: usize, proj: Option<usize>) -> QamFile {
@@ -70,6 +77,8 @@ fn random_qam(layers: usize, cells: usize, proj: Option<usize>) -> QamFile {
 fn main() {
     let b = Bench::default();
     let mut rng = Xoshiro256::new(7);
+    let mut recorded: Vec<Measurement> = Vec::new();
+    let mut throughput_rows: Vec<(usize, f64, f64)> = Vec::new();
     println!("== bench_e2e: full acoustic model, float vs int8 ==");
     println!("(frame = 20 ms of audio; RTF = compute time / audio time)\n");
 
@@ -105,6 +114,63 @@ fn main() {
             mf.storage_bytes() / 1024,
             mq.storage_bytes() / 1024,
         );
+        recorded.push(m_f);
+        recorded.push(m_q);
+    }
+
+    // (c) per-tick state movement: legacy gather/scatter vs BatchArena.
+    // The seed engine assembled every batch by copying each stream's
+    // recurrent state into a contiguous batch ModelState and copying it
+    // back after the step; the lane-resident arena steps in place.
+    println!("== per-tick state movement: gather/scatter vs BatchArena (batch 8) ==");
+    {
+        let nb = 8usize;
+        let qam = random_qam(3, 48, Some(24));
+        let model = AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap();
+        let d = spec::FEAT_DIM;
+        let labels = model.num_labels();
+        let mut x = vec![0f32; nb * d];
+        rng.fill_normal(&mut x);
+        let mut out = vec![0f32; nb * labels];
+
+        // Legacy tick: gather states → batched step → scatter states.
+        let mut stream_states: Vec<_> = (0..nb).map(|_| model.new_state(1)).collect();
+        let mut batch_state = model.new_state(nb);
+        let m_legacy =
+            b.run_with_items("tick legacy gather+step+scatter b8", nb as f64, || {
+                for (i, st) in stream_states.iter().enumerate() {
+                    batch_state.copy_stream_from(&model, i, st, 0);
+                }
+                model.step(&x, &mut batch_state, &mut out);
+                for (i, st) in stream_states.iter_mut().enumerate() {
+                    st.copy_stream_from(&model, 0, &batch_state, i);
+                }
+            });
+        // The gather/scatter copies alone (the overhead the arena removes).
+        let m_gs = b.run_with_items("tick gather/scatter copies only b8", nb as f64, || {
+            for (i, st) in stream_states.iter().enumerate() {
+                batch_state.copy_stream_from(&model, i, st, 0);
+            }
+            for (i, st) in stream_states.iter_mut().enumerate() {
+                st.copy_stream_from(&model, 0, &batch_state, i);
+            }
+        });
+        // Arena tick: step active lanes in place — no state movement.
+        let mut arena = model.new_arena(nb);
+        let lanes: Vec<usize> = (0..nb).collect();
+        let m_arena = b.run_with_items("tick BatchArena in-place b8", nb as f64, || {
+            model.arena_step(&mut arena, &lanes, &x, &mut out)
+        });
+        println!(
+            "  → gather/scatter cost {} per tick ({:.1}% of the legacy tick) — \
+             eliminated; arena tick speedup {:.2}× vs legacy\n",
+            fmt_ns(m_gs.mean_ns),
+            100.0 * m_gs.mean_ns / m_legacy.mean_ns.max(1e-9),
+            m_legacy.mean_ns / m_arena.mean_ns.max(1e-9),
+        );
+        recorded.push(m_legacy);
+        recorded.push(m_gs);
+        recorded.push(m_arena);
     }
 
     // (b) serving engine: throughput vs max_batch.
@@ -142,10 +208,39 @@ fn main() {
         });
         let dt = t0.elapsed().as_secs_f64();
         let total_frames = (n_streams * frames_per_stream) as f64;
+        let mean_batch = engine.metrics().batch_size.summary().mean;
         println!(
-            "max_batch={max_batch:<3} {total_frames:>6} frames in {dt:>6.3}s → {:>9.0} frames/s  (mean batch {:.2})",
+            "max_batch={max_batch:<3} {total_frames:>6} frames in {dt:>6.3}s → {:>9.0} frames/s  (mean batch {:.2}, lane occupancy {:.2}, evictions {})",
             total_frames / dt,
-            engine.metrics().batch_size.summary().mean,
+            mean_batch,
+            engine.metrics().lane_occupancy.summary().mean,
+            *engine.metrics().evictions.lock().unwrap(),
         );
+        throughput_rows.push((max_batch, total_frames / dt, mean_batch));
+    }
+
+    // Emit BENCH_engine.json so the perf trajectory is recorded across PRs.
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"engine\",\n  \"results\": [\n");
+    for (i, m) in recorded.iter().enumerate() {
+        let comma = if i + 1 < recorded.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"iters\": {}}}{comma}",
+            m.name, m.mean_ns, m.p50_ns, m.p99_ns, m.iters
+        );
+    }
+    json.push_str("  ],\n  \"engine_throughput\": [\n");
+    for (i, (mb, fps, mean_batch)) in throughput_rows.iter().enumerate() {
+        let comma = if i + 1 < throughput_rows.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"max_batch\": {mb}, \"frames_per_s\": {fps:.1}, \"mean_batch\": {mean_batch:.2}}}{comma}"
+        );
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_engine.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_engine.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_engine.json: {e}"),
     }
 }

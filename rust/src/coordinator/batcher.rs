@@ -1,4 +1,4 @@
-//! Dynamic-batching flush policy.
+//! Dynamic-batching flush policy + lane bookkeeping.
 //!
 //! The acoustic-model worker asks, each tick: *given which streams have a
 //! frame ready and how long the oldest has waited, do I run a batch now or
@@ -8,7 +8,10 @@
 //! - otherwise flush when the oldest ready frame has waited ≥ `deadline`;
 //! - otherwise wait (the worker parks on a condvar with a timeout).
 //!
-//! Pure decision logic — no clocks or locks — so it is property-testable.
+//! [`LaneAllocator`] tracks which arena lanes (stable per-stream slots in
+//! the backend's [`crate::nn::model::BatchArena`]) are occupied.  Both are
+//! pure decision logic — no clocks or locks — so they are
+//! property-testable.
 
 use std::time::Duration;
 
@@ -48,6 +51,58 @@ impl BatchPolicy {
             return Decision::Flush;
         }
         Decision::Wait(self.deadline - oldest_wait)
+    }
+}
+
+/// Occupancy tracking for the backend arena's lanes.
+///
+/// A stream acquires a lane when it is first scheduled, keeps it while it
+/// lives in the arena (its recurrent state is lane-resident), and the lane
+/// is released when the stream drains — or handed directly to another
+/// stream on eviction (the allocator's occupancy doesn't change then).
+/// Invariants (property-tested below): an acquired lane is `< capacity`
+/// and never double-assigned; release of a free lane panics (double-free
+/// is an engine bug, not a recoverable condition); no lanes leak.
+#[derive(Clone, Debug)]
+pub struct LaneAllocator {
+    free: Vec<usize>,
+    occupied: Vec<bool>,
+}
+
+impl LaneAllocator {
+    pub fn new(capacity: usize) -> Self {
+        LaneAllocator {
+            // Pop order: lane 0 first (cosmetic, keeps traces readable).
+            free: (0..capacity).rev().collect(),
+            occupied: vec![false; capacity],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.occupied.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.capacity() - self.free.len()
+    }
+
+    /// Claim a free lane, if any.
+    pub fn acquire(&mut self) -> Option<usize> {
+        let lane = self.free.pop()?;
+        debug_assert!(!self.occupied[lane]);
+        self.occupied[lane] = true;
+        Some(lane)
+    }
+
+    /// Return a lane to the free pool.  Panics on double-release or on a
+    /// lane that was never handed out — both are engine logic errors.
+    pub fn release(&mut self, lane: usize) {
+        assert!(
+            self.occupied.get(lane).copied().unwrap_or(false),
+            "release of unoccupied lane {lane}"
+        );
+        self.occupied[lane] = false;
+        self.free.push(lane);
     }
 }
 
@@ -104,6 +159,53 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn lane_allocator_no_reuse_while_occupied_no_leaks() {
+        forall("lane allocator", 200, 0x1A9E5, |g: &mut Gen| {
+            let cap = g.usize_in(1, 16);
+            let mut a = LaneAllocator::new(cap);
+            let mut held: Vec<usize> = Vec::new();
+            let ops = g.usize_in(1, 64);
+            for _ in 0..ops {
+                if held.is_empty() || g.bool() {
+                    match a.acquire() {
+                        Some(l) => {
+                            assert!(l < cap, "lane {l} out of range");
+                            assert!(!held.contains(&l), "lane {l} reused while occupied");
+                            held.push(l);
+                        }
+                        None => assert_eq!(held.len(), cap, "acquire failed with free lanes"),
+                    }
+                } else {
+                    let i = g.usize_in(0, held.len() - 1);
+                    let l = held.swap_remove(i);
+                    a.release(l);
+                }
+                assert_eq!(a.in_use(), held.len());
+                assert_eq!(a.capacity(), cap);
+            }
+            // No leaks: after releasing everything, the full capacity is
+            // acquirable exactly once.
+            for l in held.drain(..) {
+                a.release(l);
+            }
+            assert_eq!(a.in_use(), 0);
+            let mut all: Vec<usize> = (0..cap).map(|_| a.acquire().unwrap()).collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..cap).collect::<Vec<usize>>());
+            assert!(a.acquire().is_none());
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "release of unoccupied lane")]
+    fn lane_allocator_double_release_panics() {
+        let mut a = LaneAllocator::new(2);
+        let l = a.acquire().unwrap();
+        a.release(l);
+        a.release(l);
     }
 
     #[test]

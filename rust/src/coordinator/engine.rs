@@ -1,20 +1,39 @@
 //! The serving engine: streams in, batched acoustic-model steps, final
-//! lexicon+LM decodes out.
+//! lexicon+LM decodes out.  Generic over the execution backend
+//! ([`AmBackend`]): the native int8 engine is the production path, the
+//! PJRT/AOT graph (feature `pjrt`) is a one-line swap at [`Engine::start`].
 //!
 //! Thread topology (std threads; the image has no tokio):
 //!
 //! ```text
 //! callers ──push_audio──▶ per-stream Frontend ──▶ pending frame queues
 //!                                                (bounded; backpressure)
-//! AM worker ── BatchPolicy ──▶ pack states ▶ model.step(batch) ▶ scatter
+//! AM worker ── BatchPolicy ──▶ step active lanes of the arena, in place
 //! decode workers ◀── finished streams' posteriors ──▶ FinalResult channel
 //! ```
 //!
-//! The AM worker copies each participating stream's recurrent state into a
-//! contiguous batch `ModelState`, runs one step, and copies states back —
-//! the gather/scatter is O(batch·state) floats and is dwarfed by the GEMMs
-//! (measured in `bench_e2e`).  Decoding (CTC beam + LM rescore) is heavier
-//! and utterance-final, so it runs on its own worker pool.
+//! **Lane-resident batching.**  Each live stream owns a stable *lane* in
+//! the backend's pre-allocated arena (`[max_batch, state]` buffers); the
+//! AM worker writes each scheduled stream's frame into its lane's row of a
+//! lane-resident input buffer and steps the active lanes **in place** —
+//! recurrent state never moves.  The previous design copied every
+//! participating stream's state into a fresh contiguous batch and copied
+//! it back after the step, an O(batch·state) gather/scatter per tick that
+//! `bench_e2e` now shows eliminated.  Lane numerics are bit-identical to
+//! running the stream alone (per-row quantization, `quant::gemm`), so lane
+//! assignment is invisible to results.
+//!
+//! When live streams outnumber lanes, lane-less ready streams wait for a
+//! free lane; if every lane is held but some holder is *idle* (no frame
+//! pending), the holder is **evicted** — its lane state is parked on the
+//! stream slot ([`AmBackend::save_lane`]) and restored when it is next
+//! scheduled.  Eviction is the only remaining state copy and happens per
+//! lane *transition*, not per tick.  A stream that never goes idle cannot
+//! be evicted; under full saturation newcomers therefore wait for a
+//! holder to drain (fair preemption is a ROADMAP follow-on).
+//!
+//! Decoding (CTC beam + LM rescore) is heavier and utterance-final, so it
+//! runs on its own worker pool.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -24,11 +43,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::batcher::{BatchPolicy, Decision};
+use crate::coordinator::batcher::{BatchPolicy, Decision, LaneAllocator};
 use crate::coordinator::metrics::Metrics;
 use crate::decoder::Decoder;
 use crate::frontend::{spec, Frontend};
-use crate::nn::{AcousticModel, ModelState};
+use crate::nn::AcousticModel;
+use crate::runtime::backend::AmBackend;
 
 /// Engine configuration.
 #[derive(Clone)]
@@ -61,7 +81,7 @@ pub struct FinalResult {
     pub finalize_latency: Duration,
 }
 
-struct StreamSlot {
+struct StreamSlot<B: AmBackend> {
     frontend: Frontend,
     /// Feature frames awaiting the AM, flattened FEAT_DIM each.
     pending: VecDeque<Vec<f32>>,
@@ -69,7 +89,11 @@ struct StreamSlot {
     /// Accumulated log-posteriors [frames_done, num_labels].
     posteriors: Vec<f32>,
     frames_done: usize,
-    state: ModelState,
+    /// Arena lane holding this stream's recurrent state, if admitted.
+    lane: Option<usize>,
+    /// State parked outside the arena (evicted / not yet admitted).
+    /// `None` with `lane: None` ⇒ fresh zero state.
+    parked: Option<B::Parked>,
     finished: bool,
     finish_time: Option<Instant>,
     result_tx: Sender<FinalResult>,
@@ -83,14 +107,15 @@ struct DecodeJob {
     result_tx: Sender<FinalResult>,
 }
 
-struct Inner {
-    streams: HashMap<u64, StreamSlot>,
+struct Inner<B: AmBackend> {
+    streams: HashMap<u64, StreamSlot<B>>,
+    lanes: LaneAllocator,
     next_id: u64,
     decode_queue: VecDeque<DecodeJob>,
 }
 
-struct Shared {
-    inner: Mutex<Inner>,
+struct Shared<B: AmBackend> {
+    inner: Mutex<Inner<B>>,
     /// Wakes the AM worker (new frames / finished streams).
     work_cv: Condvar,
     /// Wakes decode workers.
@@ -102,18 +127,29 @@ struct Shared {
     shutdown: AtomicBool,
 }
 
-/// The streaming serving engine.
-pub struct Engine {
-    model: Arc<AcousticModel>,
-    shared: Arc<Shared>,
+/// The streaming serving engine, generic over the execution backend
+/// (defaults to the native [`AcousticModel`]).
+pub struct Engine<B: AmBackend = AcousticModel> {
+    backend: Arc<B>,
+    shared: Arc<Shared<B>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
-impl Engine {
-    pub fn start(model: Arc<AcousticModel>, decoder: Arc<Decoder>, config: EngineConfig) -> Self {
+impl<B: AmBackend> Engine<B> {
+    pub fn start(backend: Arc<B>, decoder: Arc<Decoder>, config: EngineConfig) -> Self {
+        if let Some(cap) = backend.lane_capacity() {
+            assert!(
+                config.policy.max_batch <= cap,
+                "backend '{}' supports at most {cap} lanes (max_batch {})",
+                backend.backend_name(),
+                config.policy.max_batch
+            );
+        }
+        let max_lanes = config.policy.max_batch;
         let shared = Arc::new(Shared {
             inner: Mutex::new(Inner {
                 streams: HashMap::new(),
+                lanes: LaneAllocator::new(max_lanes),
                 next_id: 0,
                 decode_queue: VecDeque::new(),
             }),
@@ -127,11 +163,11 @@ impl Engine {
         let mut workers = Vec::new();
         {
             let s = shared.clone();
-            let m = model.clone();
+            let b = backend.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name("am-worker".into())
-                    .spawn(move || am_worker(s, m))
+                    .spawn(move || am_worker(s, b))
                     .expect("spawn am worker"),
             );
         }
@@ -145,14 +181,21 @@ impl Engine {
                     .expect("spawn decode worker"),
             );
         }
-        Engine { model, shared, workers }
+        Engine { backend, shared, workers }
     }
 
     pub fn metrics(&self) -> &Metrics {
         &self.shared.metrics
     }
 
+    /// The execution backend this engine drives.
+    pub fn backend(&self) -> &Arc<B> {
+        &self.backend
+    }
+
     /// Open a new stream; returns its id and the final-result receiver.
+    /// The stream is admitted to an arena lane lazily, when it is first
+    /// scheduled into a batch.
     pub fn open_stream(&self) -> (u64, Receiver<FinalResult>) {
         let (tx, rx) = channel();
         let mut inner = self.shared.inner.lock().unwrap();
@@ -166,7 +209,8 @@ impl Engine {
                 oldest_enqueue: None,
                 posteriors: Vec::new(),
                 frames_done: 0,
-                state: self.model.new_state(1),
+                lane: None,
+                parked: None,
                 finished: false,
                 finish_time: None,
                 result_tx: tx,
@@ -193,9 +237,9 @@ impl Engine {
         self.push_frames(id, &frames)
     }
 
-    /// Push pre-computed feature frames (len = k·FEAT_DIM).
+    /// Push pre-computed feature frames (len = k·input_dim).
     pub fn push_frames(&self, id: u64, frames: &[f32]) -> Result<()> {
-        let d = spec::FEAT_DIM;
+        let d = self.backend.input_dim();
         assert_eq!(frames.len() % d, 0);
         let mut offset = 0;
         while offset < frames.len() {
@@ -259,7 +303,7 @@ impl Engine {
     }
 }
 
-impl Drop for Engine {
+impl<B: AmBackend> Drop for Engine<B> {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.work_cv.notify_all();
@@ -271,15 +315,17 @@ impl Drop for Engine {
     }
 }
 
-fn am_worker(s: Arc<Shared>, model: Arc<AcousticModel>) {
-    let labels = model.num_labels();
-    let d = model.input_dim();
-    // Reusable batch buffers sized to max_batch.  Per-batch states are
-    // rebuilt each flush (cache of states per batch size; see perf pass).
-    let max_b = s.config.policy.max_batch;
-    let mut state_cache: Vec<Option<ModelState>> = (0..=max_b).map(|_| None).collect();
-    let mut xbuf = vec![0f32; max_b * d];
-    let mut ybuf = vec![0f32; max_b * labels];
+fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, backend: Arc<B>) {
+    let labels = backend.num_labels();
+    let d = backend.input_dim();
+    let max_lanes = s.config.policy.max_batch;
+    // The persistent arena: every live stream's recurrent state lives in
+    // its lane for the engine's lifetime.  Allocated once, stepped in
+    // place — zero per-tick state copies.
+    let mut arena = backend.alloc_arena(max_lanes);
+    // Lane-resident I/O buffers (row `lane` belongs to that lane's stream).
+    let mut xbuf = vec![0f32; max_lanes * d];
+    let mut ybuf = vec![0f32; max_lanes * labels];
 
     loop {
         if s.shutdown.load(Ordering::SeqCst) {
@@ -318,29 +364,108 @@ fn am_worker(s: Arc<Shared>, model: Arc<AcousticModel>) {
             }
             Decision::Flush => {}
         }
-        // Assemble the batch: pop one frame per ready stream (oldest first).
-        let batch_ids: Vec<u64> =
-            ready.iter().take(max_b).map(|&(id, _)| id).collect();
-        let b = batch_ids.len();
-        let mut batch_state = state_cache[b]
-            .take()
-            .unwrap_or_else(|| model.new_state(b));
-        let mut enqueue_times = Vec::with_capacity(b);
-        for (slot_idx, &id) in batch_ids.iter().enumerate() {
+        // Plan the batch.  Pass 1: ready streams that already hold a lane
+        // ride for free.  Pass 2: admit lane-less ready streams (oldest
+        // first) into free lanes, evicting idle holders when none are
+        // free.  At most `max_lanes` streams step per tick by
+        // construction (there are only `max_lanes` lanes).
+        let mut planned: Vec<(u64, usize)> = Vec::with_capacity(max_lanes);
+        for &(id, _) in &ready {
+            if let Some(lane) = inner.streams[&id].lane {
+                planned.push((id, lane));
+            }
+        }
+        for &(id, _) in &ready {
+            if planned.len() == max_lanes {
+                break;
+            }
+            if inner.streams[&id].lane.is_some() {
+                continue;
+            }
+            let lane = match inner.lanes.acquire() {
+                Some(l) => Some(l),
+                None => {
+                    // Evict an idle lane holder (no pending frame ⇒ not in
+                    // `ready` ⇒ not planned this tick).  The lane changes
+                    // hands without passing through the allocator.
+                    let victim = inner
+                        .streams
+                        .iter()
+                        .find(|(_, vs)| vs.lane.is_some() && vs.pending.is_empty())
+                        .map(|(&vid, _)| vid);
+                    victim.map(|vid| {
+                        let vslot = inner.streams.get_mut(&vid).unwrap();
+                        let l = vslot.lane.take().unwrap();
+                        vslot.parked = Some(backend.save_lane(&arena, l));
+                        s.metrics.add_eviction();
+                        l
+                    })
+                }
+            };
+            // No free lane and no idle holder: every lane is stepping this
+            // tick; the remaining ready streams wait for a drain/idle.
+            let Some(lane) = lane else { break };
+            let slot = inner.streams.get_mut(&id).unwrap();
+            match slot.parked.take() {
+                Some(p) => backend.load_lane(&mut arena, lane, &p),
+                None => backend.reset_lane(&mut arena, lane),
+            }
+            slot.lane = Some(lane);
+            planned.push((id, lane));
+        }
+        // Unreachable with max_batch > 0 (a ready stream either holds a
+        // lane, or a lane is free, or some holder is idle) — but parking
+        // beats a busy-spin if that invariant ever breaks.
+        if planned.is_empty() {
+            let (guard, _t) = s
+                .work_cv
+                .wait_timeout(inner, Duration::from_millis(20))
+                .unwrap();
+            drop(guard);
+            continue;
+        }
+        // Pop one frame per planned stream into its lane's input row.
+        let mut lanes_list: Vec<usize> = Vec::with_capacity(planned.len());
+        let mut enqueue_times = Vec::with_capacity(planned.len());
+        for &(id, lane) in &planned {
             let slot = inner.streams.get_mut(&id).unwrap();
             let frame = slot.pending.pop_front().unwrap();
-            xbuf[slot_idx * d..(slot_idx + 1) * d].copy_from_slice(&frame);
+            xbuf[lane * d..(lane + 1) * d].copy_from_slice(&frame);
             enqueue_times.push(slot.oldest_enqueue);
             slot.oldest_enqueue =
                 if slot.pending.is_empty() { None } else { Some(now) };
-            batch_state.copy_stream_from(&model, slot_idx, &slot.state, 0);
+            lanes_list.push(lane);
         }
+        let b = planned.len();
+        s.metrics
+            .lane_occupancy
+            .record(inner.lanes.in_use() as f64 / max_lanes.max(1) as f64);
         drop(inner);
         s.space_cv.notify_all();
 
-        // Batched AM step (lock-free; states are private copies).
+        // Batched AM step over the active lanes, in place (lock-free; the
+        // arena is worker-local and lane rows belong to planned streams).
         let t0 = Instant::now();
-        model.step(&xbuf[..b * d], &mut batch_state, &mut ybuf[..b * labels]);
+        if let Err(e) = backend.step_lanes(&mut arena, &lanes_list, &xbuf, &mut ybuf) {
+            // Backend failure (only fallible for the PJRT path): surface
+            // loudly, put the popped frames back at the head of their
+            // queues (no silent truncation of posteriors), and back off
+            // before retrying so a persistently-dead backend applies
+            // backpressure instead of busy-looping through the audio.
+            eprintln!("am backend '{}' step failed: {e:#}", backend.backend_name());
+            let mut inner = s.inner.lock().unwrap();
+            let now_err = Instant::now();
+            for &(id, lane) in &planned {
+                if let Some(slot) = inner.streams.get_mut(&id) {
+                    slot.pending.push_front(xbuf[lane * d..(lane + 1) * d].to_vec());
+                    slot.oldest_enqueue.get_or_insert(now_err);
+                }
+            }
+            drain_finished(&mut inner, &s);
+            drop(inner);
+            std::thread::sleep(Duration::from_millis(50));
+            continue;
+        }
         let dt = t0.elapsed();
         s.metrics.add_am_compute(dt.as_secs_f64(), b as u64);
         s.metrics.batch_size.record(b as f64);
@@ -350,23 +475,24 @@ fn am_worker(s: Arc<Shared>, model: Arc<AcousticModel>) {
             }
         }
 
-        // Scatter results back; queue decodes for drained finished streams.
+        // Append each lane's posteriors to its stream; queue decodes for
+        // drained finished streams.  (This is result delivery, not state
+        // movement — recurrent state stayed in the arena.)
         let mut inner = s.inner.lock().unwrap();
-        for (slot_idx, &id) in batch_ids.iter().enumerate() {
+        for &(id, lane) in &planned {
             if let Some(slot) = inner.streams.get_mut(&id) {
-                slot.state.copy_stream_from(&model, 0, &batch_state, slot_idx);
                 slot.posteriors
-                    .extend_from_slice(&ybuf[slot_idx * labels..(slot_idx + 1) * labels]);
+                    .extend_from_slice(&ybuf[lane * labels..(lane + 1) * labels]);
                 slot.frames_done += 1;
             }
         }
-        state_cache[b] = Some(batch_state);
         drain_finished(&mut inner, &s);
     }
 }
 
-/// Move every (finished && drained) stream to the decode queue.
-fn drain_finished(inner: &mut Inner, s: &Arc<Shared>) {
+/// Move every (finished && drained) stream to the decode queue, releasing
+/// its arena lane.
+fn drain_finished<B: AmBackend>(inner: &mut Inner<B>, s: &Shared<B>) {
     let done: Vec<u64> = inner
         .streams
         .iter()
@@ -375,6 +501,9 @@ fn drain_finished(inner: &mut Inner, s: &Arc<Shared>) {
         .collect();
     for id in done {
         let slot = inner.streams.remove(&id).unwrap();
+        if let Some(lane) = slot.lane {
+            inner.lanes.release(lane);
+        }
         inner.decode_queue.push_back(DecodeJob {
             stream_id: id,
             posteriors: slot.posteriors,
@@ -386,7 +515,7 @@ fn drain_finished(inner: &mut Inner, s: &Arc<Shared>) {
     }
 }
 
-fn decode_worker(s: Arc<Shared>, decoder: Arc<Decoder>) {
+fn decode_worker<B: AmBackend>(s: Arc<Shared<B>>, decoder: Arc<Decoder>) {
     loop {
         let job = {
             let mut inner = s.inner.lock().unwrap();

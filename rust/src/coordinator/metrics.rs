@@ -66,12 +66,16 @@ pub struct Metrics {
     pub frame_latency: Histogram,
     /// batched-step batch sizes
     pub batch_size: Histogram,
+    /// arena lane occupancy at each flush (lanes in use / lanes total)
+    pub lane_occupancy: Histogram,
     /// audio seconds processed
     pub audio_seconds: Mutex<f64>,
     /// wall seconds of AM compute
     pub am_compute_seconds: Mutex<f64>,
     pub frames_processed: Mutex<u64>,
     pub utterances: Mutex<u64>,
+    /// idle streams parked out of the arena to admit waiting streams
+    pub evictions: Mutex<u64>,
 }
 
 impl Metrics {
@@ -86,6 +90,10 @@ impl Metrics {
 
     pub fn add_utterance(&self) {
         *self.utterances.lock().unwrap() += 1;
+    }
+
+    pub fn add_eviction(&self) {
+        *self.evictions.lock().unwrap() += 1;
     }
 
     /// Real-time factor of the AM stage: compute seconds per audio second
@@ -110,16 +118,22 @@ impl Metrics {
             "batch_size             n={:<5} mean={:5.2}  p50={:4.0}  p99={:4.0}\n",
             bs.count, bs.mean, bs.p50, bs.p99
         ));
+        let lo = self.lane_occupancy.summary();
+        out.push_str(&format!(
+            "lane_occupancy         n={:<5} mean={:5.2}  p50={:4.2}  p99={:4.2}\n",
+            lo.count, lo.mean, lo.p50, lo.p99
+        ));
         // Take each value before formatting: std::sync::Mutex is not
         // reentrant, and rtf() locks two of these again.
         let utts = *self.utterances.lock().unwrap();
         let frames = *self.frames_processed.lock().unwrap();
         let audio = *self.audio_seconds.lock().unwrap();
         let compute = *self.am_compute_seconds.lock().unwrap();
+        let evictions = *self.evictions.lock().unwrap();
         let rtf = if audio > 0.0 { compute / audio } else { 0.0 };
         out.push_str(&format!(
             "utterances={utts}  frames={frames}  audio={audio:.1}s  \
-             am_compute={compute:.2}s  RTF={rtf:.4}\n",
+             am_compute={compute:.2}s  RTF={rtf:.4}  evictions={evictions}\n",
         ));
         out
     }

@@ -4,14 +4,17 @@
 //! latency/power — but its quantized engine is exactly what a server-side
 //! deployment batches across streams.  This module provides both shapes:
 //! single-stream synchronous decoding (embedded, see [`crate::eval`]) and a
-//! thread-based streaming server with **cross-stream dynamic batching**:
-//! frames from concurrent streams are gathered each tick into one batched
-//! acoustic-model step (deadline-bounded), then scattered back to
-//! per-stream decoders.
+//! thread-based streaming server with **lane-resident cross-stream
+//! batching**: each live stream owns a stable lane in the execution
+//! backend's pre-allocated [`crate::nn::model::BatchArena`], and every
+//! deadline-bounded tick steps the active lanes in place — recurrent state
+//! never moves between per-stream and batch buffers.  The engine is
+//! generic over [`crate::runtime::AmBackend`], so the native int8 engine
+//! and the PJRT/AOT graph (feature `pjrt`) serve through the same spine.
 //!
-//! - [`batcher`] — the flush policy (pure logic, property-tested).
-//! - [`engine`]  — streams, state packing, workers, lifecycle.
-//! - [`metrics`] — latency/throughput instrumentation.
+//! - [`batcher`] — flush policy + lane allocator (pure, property-tested).
+//! - [`engine`]  — streams, lane scheduling/eviction, workers, lifecycle.
+//! - [`metrics`] — latency/throughput/occupancy instrumentation.
 //! - [`server`]  — length-prefixed TCP protocol + client helper.
 
 pub mod batcher;

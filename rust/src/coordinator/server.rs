@@ -22,11 +22,14 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::engine::{Engine, FinalResult};
+use crate::runtime::backend::AmBackend;
 
 /// Serve until `stop` is set.  Returns the bound local address via the
-/// callback (useful with port 0 in tests).
-pub fn serve(
-    engine: Arc<Engine>,
+/// callback (useful with port 0 in tests).  Generic over the engine's
+/// execution backend — batching happens across connections inside the
+/// engine regardless of what executes the model.
+pub fn serve<B: AmBackend>(
+    engine: Arc<Engine<B>>,
     addr: &str,
     stop: Arc<AtomicBool>,
     on_bound: impl FnOnce(std::net::SocketAddr),
@@ -57,7 +60,7 @@ pub fn serve(
     Ok(())
 }
 
-fn handle_conn(engine: Arc<Engine>, mut sock: TcpStream) -> Result<()> {
+fn handle_conn<B: AmBackend>(engine: Arc<Engine<B>>, mut sock: TcpStream) -> Result<()> {
     sock.set_nodelay(true).ok();
     let (id, rx) = engine.open_stream();
     loop {

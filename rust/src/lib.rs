@@ -13,8 +13,28 @@
 //!
 //! Layers (see DESIGN.md):
 //! - **L3 (this crate)** — coordinator, decoder, native int8 engine.
-//! - **L2** — JAX model, AOT-lowered to HLO text, executed via [`runtime`].
+//! - **L2** — JAX model, AOT-lowered to HLO text, executed via [`runtime`]
+//!   (feature `pjrt`).
 //! - **L1** — Pallas kernels (build-time; numerics cross-checked in tests).
+//!
+//! ## Serving architecture: `AmBackend` + `BatchArena`
+//!
+//! The streaming coordinator ([`coordinator::engine`]) is generic over the
+//! [`runtime::AmBackend`] trait — the single, lane-resident execution
+//! interface that both the native engine ([`nn::AcousticModel`]) and the
+//! PJRT/AOT path (`runtime::model_exec::ModelExecutable`, feature `pjrt`)
+//! implement, so swapping execution backends is a one-line change at
+//! `Engine::start`.
+//!
+//! State lives in a persistent [`nn::model::BatchArena`]: each live stream
+//! owns a stable *lane* in pre-allocated `[max_batch, state]` buffers and
+//! every batched tick steps the active lanes **in place**
+//! ([`nn::AcousticModel::arena_step`], lane-masked GEMM entry points in
+//! [`quant::gemm`]).  There is no per-tick gather/scatter of recurrent
+//! state; idle streams can be evicted (state parked on the stream, lane
+//! handed to a waiter) and restored exactly.  Per-row input quantization
+//! makes a lane's numerics bit-identical to running its stream alone, so
+//! batching and lane placement are invisible to results.
 
 pub mod coordinator;
 pub mod decoder;

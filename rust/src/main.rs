@@ -55,7 +55,12 @@ fn run(args: &Args) -> Result<()> {
         Some("ablate-bits") => cmd_ablate_bits(args),
         Some("ablate-granularity") => cmd_ablate_granularity(args),
         Some("inspect") => cmd_inspect(args),
+        #[cfg(feature = "pjrt")]
         Some("pjrt-check") => cmd_pjrt_check(args),
+        #[cfg(not(feature = "pjrt"))]
+        Some("pjrt-check") => {
+            bail!("built without the 'pjrt' feature — rebuild with `--features pjrt`")
+        }
         Some(other) => bail!("unknown command '{other}' (see src/main.rs docs)"),
         None => {
             println!(
@@ -332,6 +337,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 }
 
 /// Cross-check native int8 engine vs the AOT/PJRT graph on real frames.
+#[cfg(feature = "pjrt")]
 fn cmd_pjrt_check(args: &Args) -> Result<()> {
     let art = artifacts_dir(args);
     let utts = read_feats(art.join("data/eval_clean.feats"))?;

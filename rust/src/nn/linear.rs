@@ -9,7 +9,7 @@
 use anyhow::{bail, Result};
 
 use crate::io::model_fmt::Tensor;
-use crate::quant::gemm::{fgemm, qgemm, FMatrix, Kernel, QScratch};
+use crate::quant::gemm::{fgemm, fgemm_lanes, qgemm, qgemm_lanes, FMatrix, Kernel, QScratch};
 use crate::quant::{Granularity, QMatrix};
 
 /// A `y = x·W (+ b)` layer; weights `[in, out]` in math terms.
@@ -93,6 +93,29 @@ impl Linear {
         match self {
             Linear::Float(f) => f.storage_bytes(),
             Linear::Quant(q) => q.storage_bytes(),
+        }
+    }
+
+    /// Lane-masked `y (+)= x·W + b` over lane-resident `[max_lanes, in]` /
+    /// `[max_lanes, out]` buffers: only rows listed in `lanes` are read and
+    /// written (the serving arena's in-place hot path).
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_lanes(
+        &self,
+        x: &[f32],
+        max_lanes: usize,
+        lanes: &[usize],
+        bias: Option<&[f32]>,
+        y: &mut [f32],
+        scratch: &mut QScratch,
+        kernel: Kernel,
+        accumulate: bool,
+    ) {
+        match self {
+            Linear::Float(f) => fgemm_lanes(x, max_lanes, lanes, f, bias, y, accumulate),
+            Linear::Quant(q) => {
+                qgemm_lanes(x, max_lanes, lanes, q, bias, y, scratch, kernel, accumulate)
+            }
         }
     }
 

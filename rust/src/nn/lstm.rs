@@ -131,6 +131,67 @@ impl LstmLayer {
             }
         }
     }
+
+    /// Lane-masked timestep over **lane-resident** buffers: `x` is
+    /// `[max_lanes, in]` and `state` holds `[max_lanes, N]` / `[max_lanes,
+    /// rec]`; only the rows listed in `lanes` are read and updated, in
+    /// place.  This is the [`crate::nn::model::BatchArena`] hot path — a
+    /// stream's recurrent state never leaves its lane, so the serving
+    /// engine does no per-tick gather/scatter.  Numerics per lane are
+    /// bit-identical to [`LstmLayer::step`] on that lane's row alone (the
+    /// per-row quantization contract in `quant::gemm`).
+    pub fn step_lanes(
+        &self,
+        x: &[f32],
+        max_lanes: usize,
+        lanes: &[usize],
+        state: &mut LayerState,
+        s: &mut LstmScratch,
+        kernel: Kernel,
+    ) {
+        let n = self.cell_dim;
+        debug_assert_eq!(x.len(), max_lanes * self.in_dim());
+        debug_assert_eq!(state.c.len(), max_lanes * n);
+        debug_assert_eq!(state.h.len(), max_lanes * self.rec_dim());
+        s.gates.resize(max_lanes * 4 * n, 0.0);
+
+        // gates = x·Wx + h·Wh + b, active lanes only.
+        self.wx.forward_lanes(x, max_lanes, lanes, Some(&self.bias), &mut s.gates, &mut s.q, kernel, false);
+        self.wh.forward_lanes(&state.h, max_lanes, lanes, None, &mut s.gates, &mut s.q, kernel, true);
+
+        // Elementwise cell update (layout [i | f | g | o]) per active lane.
+        for &lane in lanes {
+            let g = &mut s.gates[lane * 4 * n..(lane + 1) * 4 * n];
+            let c = &mut state.c[lane * n..(lane + 1) * n];
+            for j in 0..n {
+                let i_g = sigmoid(g[j]);
+                let f_g = sigmoid(g[n + j]);
+                let g_g = tanh(g[2 * n + j]);
+                let o_g = sigmoid(g[3 * n + j]);
+                let c_new = f_g * c[j] + i_g * g_g;
+                c[j] = c_new;
+                // stash pre-projection output in the gates buffer (i slot)
+                g[j] = o_g * c_new.tanh();
+            }
+        }
+
+        match &self.wp {
+            None => {
+                for &lane in lanes {
+                    let src = &s.gates[lane * 4 * n..lane * 4 * n + n];
+                    state.h[lane * n..(lane + 1) * n].copy_from_slice(src);
+                }
+            }
+            Some(wp) => {
+                s.h_raw.resize(max_lanes * n, 0.0);
+                for &lane in lanes {
+                    let src = &s.gates[lane * 4 * n..lane * 4 * n + n];
+                    s.h_raw[lane * n..(lane + 1) * n].copy_from_slice(src);
+                }
+                wp.forward_lanes(&s.h_raw, max_lanes, lanes, None, &mut state.h, &mut s.q, kernel, false);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -260,6 +321,63 @@ mod tests {
         for (a, b) in st_f.h.iter().zip(&st_q.h) {
             assert!((a - b).abs() < 0.15, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn step_lanes_full_set_matches_step_bitwise() {
+        // Stepping every lane of a lane-resident state must equal the
+        // contiguous batch step bit-for-bit (same per-row arithmetic).
+        for p in [None, Some(5)] {
+            for quant in [false, true] {
+                let mut g = Gen::new(77);
+                let mut l = layer(12, 8, p, &mut g);
+                if quant {
+                    l = LstmLayer {
+                        wx: l.wx.quantize_now(),
+                        wh: l.wh.quantize_now(),
+                        bias: l.bias.clone(),
+                        wp: l.wp.as_ref().map(Linear::quantize_now),
+                        cell_dim: l.cell_dim,
+                    };
+                }
+                let batch = 4;
+                let mut st_a = l.zero_state(batch);
+                let mut st_b = l.zero_state(batch);
+                let mut sa = LstmScratch::default();
+                let mut sb = LstmScratch::default();
+                let lanes: Vec<usize> = (0..batch).collect();
+                for _t in 0..5 {
+                    let x = g.vec_normal(batch * 12, 1.0);
+                    l.step(&x, batch, &mut st_a, &mut sa, Kernel::Auto);
+                    l.step_lanes(&x, batch, &lanes, &mut st_b, &mut sb, Kernel::Auto);
+                    assert_eq!(st_a.c, st_b.c, "p={p:?} quant={quant}");
+                    assert_eq!(st_a.h, st_b.h, "p={p:?} quant={quant}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_lanes_leaves_inactive_lanes_untouched() {
+        let mut g = Gen::new(78);
+        let l = layer(10, 6, Some(3), &mut g);
+        let max_lanes = 3;
+        let mut st = l.zero_state(max_lanes);
+        let mut s = LstmScratch::default();
+        // Warm every lane with one full step so state is nonzero.
+        let x = g.vec_normal(max_lanes * 10, 1.0);
+        let all: Vec<usize> = (0..max_lanes).collect();
+        l.step_lanes(&x, max_lanes, &all, &mut st, &mut s, Kernel::Auto);
+        let c_before = st.c.clone();
+        let h_before = st.h.clone();
+        // Step lane 1 only.
+        let x2 = g.vec_normal(max_lanes * 10, 1.0);
+        l.step_lanes(&x2, max_lanes, &[1], &mut st, &mut s, Kernel::Auto);
+        for lane in [0, 2] {
+            assert_eq!(st.c[lane * 6..(lane + 1) * 6], c_before[lane * 6..(lane + 1) * 6]);
+            assert_eq!(st.h[lane * 3..(lane + 1) * 3], h_before[lane * 3..(lane + 1) * 3]);
+        }
+        assert_ne!(st.c[6..12], c_before[6..12], "active lane must advance");
     }
 
     #[test]

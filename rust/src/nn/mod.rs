@@ -5,7 +5,9 @@
 //! - [`linear`]     — a dense layer that is either f32 or quantized
 //!   (Figure 1: quantize input → integer GEMM → recover → bias → F).
 //! - [`lstm`]       — the LSTMP cell (Sak et al. 2014) on top of `linear`.
-//! - [`model`]      — the full stacked acoustic model + streaming state.
+//! - [`model`]      — the full stacked acoustic model + streaming state:
+//!   per-stream [`ModelState`] (batch-contiguous, evaluation path) and the
+//!   lane-resident [`BatchArena`] the serving engine steps in place.
 
 pub mod activation;
 pub mod linear;
@@ -13,4 +15,4 @@ pub mod lstm;
 pub mod model;
 
 pub use linear::Linear;
-pub use model::{AcousticModel, ExecMode, ModelState};
+pub use model::{AcousticModel, BatchArena, ExecMode, ModelState, ParkedLane};

@@ -85,6 +85,75 @@ impl ModelState {
     }
 }
 
+/// Persistent lane-resident batch state for the serving engine.
+///
+/// Streams are assigned stable **lanes** in pre-allocated `[max_lanes, …]`
+/// recurrent buffers for the engine's lifetime; the engine steps the
+/// active lanes in place ([`AcousticModel::arena_step`]) instead of
+/// gathering per-stream states into a fresh batch and scattering them back
+/// every tick.  Lane numerics are bit-identical to running the stream
+/// alone (per-row quantization contract in [`crate::quant::gemm`]), so
+/// lane residency is invisible to results.
+pub struct BatchArena {
+    pub max_lanes: usize,
+    /// Per layer: `[max_lanes, N]` cell + `[max_lanes, rec]` output state.
+    pub layers: Vec<LayerState>,
+    scratch: LstmScratch,
+    qout: QScratch,
+}
+
+/// One stream's recurrent state parked outside the arena (lane eviction:
+/// the engine saves an idle stream's lane so a waiting stream can use it,
+/// and restores it when the stream is scheduled again).
+pub struct ParkedLane {
+    /// Per layer: (cell row, output row).
+    layers: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl BatchArena {
+    /// Zero one lane's recurrent state (fresh stream / utterance boundary).
+    pub fn reset_lane(&mut self, lane: usize) {
+        debug_assert!(lane < self.max_lanes);
+        for st in self.layers.iter_mut() {
+            let n = st.c.len() / self.max_lanes;
+            let r = st.h.len() / self.max_lanes;
+            st.c[lane * n..(lane + 1) * n].fill(0.0);
+            st.h[lane * r..(lane + 1) * r].fill(0.0);
+        }
+    }
+
+    /// Copy one lane's state out of the arena (eviction).
+    pub fn save_lane(&self, lane: usize) -> ParkedLane {
+        debug_assert!(lane < self.max_lanes);
+        ParkedLane {
+            layers: self
+                .layers
+                .iter()
+                .map(|st| {
+                    let n = st.c.len() / self.max_lanes;
+                    let r = st.h.len() / self.max_lanes;
+                    (
+                        st.c[lane * n..(lane + 1) * n].to_vec(),
+                        st.h[lane * r..(lane + 1) * r].to_vec(),
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    /// Restore a parked state into a lane (re-admission after eviction).
+    pub fn load_lane(&mut self, lane: usize, parked: &ParkedLane) {
+        debug_assert!(lane < self.max_lanes);
+        debug_assert_eq!(parked.layers.len(), self.layers.len());
+        for (st, (c, h)) in self.layers.iter_mut().zip(parked.layers.iter()) {
+            let n = st.c.len() / self.max_lanes;
+            let r = st.h.len() / self.max_lanes;
+            st.c[lane * n..(lane + 1) * n].copy_from_slice(c);
+            st.h[lane * r..(lane + 1) * r].copy_from_slice(h);
+        }
+    }
+}
+
 /// The stacked acoustic model.
 pub struct AcousticModel {
     pub header: ModelHeader,
@@ -210,6 +279,53 @@ impl AcousticModel {
         log_softmax_rows(out, batch, self.num_labels());
     }
 
+    /// Allocate a lane-resident [`BatchArena`] for `max_lanes` concurrent
+    /// streams (all lanes start zeroed).
+    pub fn new_arena(&self, max_lanes: usize) -> BatchArena {
+        BatchArena {
+            max_lanes,
+            layers: self.layers.iter().map(|l| l.zero_state(max_lanes)).collect(),
+            scratch: LstmScratch::default(),
+            qout: QScratch::default(),
+        }
+    }
+
+    /// One timestep over the arena's **active lanes, in place**: `x` and
+    /// `out` are lane-resident `[max_lanes, input_dim]` / `[max_lanes,
+    /// num_labels]` buffers of which only the rows listed in `lanes` are
+    /// read/written; recurrent state updates inside the arena.  Inactive
+    /// lanes cost nothing.  Per lane this computes exactly what
+    /// [`AcousticModel::step`] computes for that stream alone —
+    /// bit-identical, by the per-row quantization contract.
+    pub fn arena_step(
+        &self,
+        arena: &mut BatchArena,
+        lanes: &[usize],
+        x: &[f32],
+        out: &mut [f32],
+    ) {
+        let ml = arena.max_lanes;
+        debug_assert_eq!(x.len(), ml * self.input_dim());
+        debug_assert_eq!(out.len(), ml * self.num_labels());
+        let BatchArena { layers: states, scratch, qout, .. } = arena;
+        for (li, layer) in self.layers.iter().enumerate() {
+            if li == 0 {
+                layer.step_lanes(x, ml, lanes, &mut states[0], scratch, self.kernel);
+            } else {
+                // Layer li reads the previous layer's (already-updated)
+                // lane-resident h and updates its own state in place.
+                let (prev, cur) = states.split_at_mut(li);
+                layer.step_lanes(&prev[li - 1].h, ml, lanes, &mut cur[0], scratch, self.kernel);
+            }
+        }
+        let h_top = &states[self.layers.len() - 1].h;
+        let l = self.num_labels();
+        self.out.forward_lanes(h_top, ml, lanes, Some(&self.out_bias), out, qout, self.kernel, false);
+        for &lane in lanes {
+            log_softmax_rows(&mut out[lane * l..(lane + 1) * l], 1, l);
+        }
+    }
+
     /// Run a full utterance (batch 1) and return `[T, num_labels]`
     /// log-posteriors — the evaluation path.
     pub fn forward_utt(&self, feats: &[f32], num_frames: usize) -> Vec<f32> {
@@ -225,6 +341,9 @@ impl AcousticModel {
         out
     }
 }
+
+#[cfg(test)]
+pub use tests::random_qam;
 
 #[cfg(test)]
 mod tests {
@@ -345,6 +464,90 @@ mod tests {
                 assert!((out[9 + j] - ob[t * 9 + j]).abs() < 2e-4, "t={t} j={j}");
             }
         }
+    }
+
+    #[test]
+    fn arena_lane_bit_identical_to_solo_utterance() {
+        // A stream stepped in a shared arena lane, packed with random
+        // co-rider lanes, must produce *bit-identical* posteriors to the
+        // same stream run alone through the batch-1 path — the per-row
+        // quantization contract that makes lane residency invisible.
+        for mode in [ExecMode::Float, ExecMode::Quant, ExecMode::QuantAll] {
+            let mut g = Gen::new(31);
+            let qam = random_qam(2, 10, Some(5), 6, 9, &mut g);
+            let m = AcousticModel::from_qam(&qam, mode).unwrap();
+            let (t_steps, ml, lane) = (7usize, 4usize, 2usize);
+            let feats = g.vec_normal(t_steps * 6, 1.0);
+            let solo = m.forward_utt(&feats, t_steps);
+
+            let mut arena = m.new_arena(ml);
+            let lanes: Vec<usize> = (0..ml).collect();
+            let mut x = vec![0f32; ml * 6];
+            let mut out = vec![0f32; ml * 9];
+            for t in 0..t_steps {
+                // co-riders get fresh random frames each tick
+                for co in 0..ml {
+                    let frame = g.vec_normal(6, 1.0);
+                    x[co * 6..(co + 1) * 6].copy_from_slice(&frame);
+                }
+                x[lane * 6..(lane + 1) * 6].copy_from_slice(&feats[t * 6..(t + 1) * 6]);
+                m.arena_step(&mut arena, &lanes, &x, &mut out);
+                for j in 0..9 {
+                    assert!(
+                        out[lane * 9 + j] == solo[t * 9 + j],
+                        "mode {mode:?} t={t} j={j}: {} != {} (not bit-identical)",
+                        out[lane * 9 + j],
+                        solo[t * 9 + j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_save_load_roundtrips_lane_state() {
+        let mut g = Gen::new(32);
+        let qam = random_qam(2, 8, Some(4), 6, 7, &mut g);
+        let m = AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap();
+        let ml = 3;
+        let mut arena = m.new_arena(ml);
+        let lanes: Vec<usize> = (0..ml).collect();
+        let mut out = vec![0f32; ml * 7];
+        // Advance all lanes a few steps.
+        for _ in 0..4 {
+            let x = g.vec_normal(ml * 6, 1.0);
+            m.arena_step(&mut arena, &lanes, &x, &mut out);
+        }
+        // Park lane 1, trash it with another stream, restore, and check the
+        // next step matches what an untouched lane would produce.
+        let mut reference = m.new_arena(ml);
+        reference.load_lane(1, &arena.save_lane(1));
+        let parked = arena.save_lane(1);
+        arena.reset_lane(1);
+        for _ in 0..3 {
+            let x = g.vec_normal(ml * 6, 1.0);
+            m.arena_step(&mut arena, &[1], &x, &mut out);
+        }
+        arena.load_lane(1, &parked);
+        let x = g.vec_normal(ml * 6, 1.0);
+        let mut out_ref = vec![0f32; ml * 7];
+        m.arena_step(&mut arena, &[1], &x, &mut out);
+        m.arena_step(&mut reference, &[1], &x, &mut out_ref);
+        assert_eq!(out[7..14], out_ref[7..14], "save/load must round-trip exactly");
+    }
+
+    #[test]
+    fn arena_reset_lane_zeroes_state() {
+        let mut g = Gen::new(33);
+        let qam = random_qam(1, 6, None, 4, 5, &mut g);
+        let m = AcousticModel::from_qam(&qam, ExecMode::Float).unwrap();
+        let mut arena = m.new_arena(2);
+        let x = g.vec_normal(2 * 4, 1.0);
+        let mut out = vec![0f32; 2 * 5];
+        m.arena_step(&mut arena, &[0, 1], &x, &mut out);
+        arena.reset_lane(0);
+        assert!(arena.layers[0].c[..6].iter().all(|&v| v == 0.0));
+        assert!(arena.layers[0].c[6..].iter().any(|&v| v != 0.0));
     }
 
     #[test]

@@ -71,16 +71,50 @@ pub fn quantize_input(x: &[f32], batch: usize, in_dim: usize, s: &mut QScratch) 
     s.xrow_sums.clear();
     s.xparams.clear();
     for i in 0..batch {
-        let row = &x[i * in_dim..(i + 1) * in_dim];
-        let p = QuantParams::from_slice(row);
-        p.quantize_slice(row, &mut s.xq[i * in_dim..(i + 1) * in_dim]);
-        s.xrow_sums.push(
-            s.xq[i * in_dim..(i + 1) * in_dim]
-                .iter()
-                .map(|&v| v as i32)
-                .sum::<i32>(),
+        let (p, sum) = quantize_row(
+            &x[i * in_dim..(i + 1) * in_dim],
+            &mut s.xq[i * in_dim..(i + 1) * in_dim],
         );
+        s.xrow_sums.push(sum);
         s.xparams.push(p);
+    }
+}
+
+/// Quantize one input row (eq. 2) and return its (params, integer row sum)
+/// — the single definition of per-row input quantization shared by the
+/// batch-contiguous and lane-strided entry points, so they cannot drift.
+fn quantize_row(row: &[f32], out: &mut [u8]) -> (QuantParams, i32) {
+    let p = QuantParams::from_slice(row);
+    p.quantize_slice(row, out);
+    let sum = out.iter().map(|&v| v as i32).sum::<i32>();
+    (p, sum)
+}
+
+/// Lane-masked input quantization over a **lane-resident** buffer
+/// `x [max_lanes, in_dim]`: only the rows listed in `lanes` are quantized
+/// (scratch entries are lane-indexed; inactive lanes keep stale data that
+/// is never read).  The per-row contract of [`quantize_input`] holds
+/// unchanged — a lane's (Q, zp) depends on its own row only, so posteriors
+/// are bit-identical whether a stream runs alone or packed with co-riders.
+pub fn quantize_input_lanes(
+    x: &[f32],
+    max_lanes: usize,
+    lanes: &[usize],
+    in_dim: usize,
+    s: &mut QScratch,
+) {
+    debug_assert_eq!(x.len(), max_lanes * in_dim);
+    s.xq.resize(x.len(), 0);
+    s.xrow_sums.resize(max_lanes, 0);
+    s.xparams.resize(max_lanes, QuantParams::from_range(0.0, 1.0));
+    for &lane in lanes {
+        debug_assert!(lane < max_lanes);
+        let (p, sum) = quantize_row(
+            &x[lane * in_dim..(lane + 1) * in_dim],
+            &mut s.xq[lane * in_dim..(lane + 1) * in_dim],
+        );
+        s.xrow_sums[lane] = sum;
+        s.xparams[lane] = p;
     }
 }
 
@@ -121,59 +155,119 @@ pub fn qgemm_prequantized(
     kernel: Kernel,
     accumulate: bool,
 ) {
-    let wp = w.params[0];
     let k = w.in_dim;
     let kernel = kernel.resolve();
     for i in 0..batch {
-        let xp = &scratch.xparams[i];
-        let inv = 1.0 / (xp.q as f64 * wp.q as f64);
-        let kzz = k as i64 * xp.zp * wp.zp;
-        let xrow = &scratch.xq[i * k..(i + 1) * k];
-        let xsum = scratch.xrow_sums[i] as i64;
-        let yrow = &mut y[i * w.out_dim..(i + 1) * w.out_dim];
-        let finish = |o: usize, raw: i64, yrow: &mut [f32]| {
-            let full = raw + xp.zp * w.row_sums[o] as i64 + wp.zp * xsum + kzz;
-            let v = (full as f64 * inv) as f32 + bias.map_or(0.0, |b| b[o]);
-            if accumulate {
-                yrow[o] += v;
-            } else {
-                yrow[o] = v;
-            }
-        };
-        let mut o = 0;
-        // 4-row blocked AVX2 path: x is loaded/widened once per 4 rows.
-        #[cfg(target_arch = "x86_64")]
-        if kernel == Kernel::Avx2 {
-            while o + 4 <= w.out_dim {
-                let raws = unsafe {
-                    dot4_u8_avx2(
-                        xrow,
-                        [
-                            &w.data[o * k..(o + 1) * k],
-                            &w.data[(o + 1) * k..(o + 2) * k],
-                            &w.data[(o + 2) * k..(o + 3) * k],
-                            &w.data[(o + 3) * k..(o + 4) * k],
-                        ],
-                    )
-                };
-                for (d, &raw) in raws.iter().enumerate() {
-                    finish(o + d, raw as i64, yrow);
-                }
-                o += 4;
-            }
+        qgemm_input_row(
+            w,
+            bias,
+            &scratch.xq[i * k..(i + 1) * k],
+            &scratch.xparams[i],
+            scratch.xrow_sums[i] as i64,
+            &mut y[i * w.out_dim..(i + 1) * w.out_dim],
+            kernel,
+            accumulate,
+        );
+    }
+}
+
+/// Lane-masked integer GEMM over a lane-resident `x [max_lanes, in_dim]`
+/// buffer: only rows listed in `lanes` are quantized, multiplied and
+/// written into the matching rows of `y [max_lanes, out_dim]`.  Inactive
+/// lanes cost nothing — this is the serving engine's in-place hot path
+/// (no gather into a packed batch, no scatter back).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_lanes(
+    x: &[f32],
+    max_lanes: usize,
+    lanes: &[usize],
+    w: &QMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    scratch: &mut QScratch,
+    kernel: Kernel,
+    accumulate: bool,
+) {
+    assert_eq!(x.len(), max_lanes * w.in_dim);
+    assert_eq!(y.len(), max_lanes * w.out_dim);
+    assert_eq!(w.params.len(), 1, "qgemm requires per-matrix granularity");
+    quantize_input_lanes(x, max_lanes, lanes, w.in_dim, scratch);
+    let k = w.in_dim;
+    let kernel = kernel.resolve();
+    for &lane in lanes {
+        qgemm_input_row(
+            w,
+            bias,
+            &scratch.xq[lane * k..(lane + 1) * k],
+            &scratch.xparams[lane],
+            scratch.xrow_sums[lane] as i64,
+            &mut y[lane * w.out_dim..(lane + 1) * w.out_dim],
+            kernel,
+            accumulate,
+        );
+    }
+}
+
+/// One quantized input row × every weight row → one output row.  Shared by
+/// the batch-contiguous and lane-strided entry points; `kernel` must
+/// already be resolved (never `Auto`).
+#[allow(clippy::too_many_arguments)]
+fn qgemm_input_row(
+    w: &QMatrix,
+    bias: Option<&[f32]>,
+    xrow: &[u8],
+    xp: &QuantParams,
+    xsum: i64,
+    yrow: &mut [f32],
+    kernel: Kernel,
+    accumulate: bool,
+) {
+    let wp = w.params[0];
+    let k = w.in_dim;
+    let inv = 1.0 / (xp.q as f64 * wp.q as f64);
+    let kzz = k as i64 * xp.zp * wp.zp;
+    let finish = |o: usize, raw: i64, yrow: &mut [f32]| {
+        let full = raw + xp.zp * w.row_sums[o] as i64 + wp.zp * xsum + kzz;
+        let v = (full as f64 * inv) as f32 + bias.map_or(0.0, |b| b[o]);
+        if accumulate {
+            yrow[o] += v;
+        } else {
+            yrow[o] = v;
         }
-        while o < w.out_dim {
-            let wrow = &w.data[o * k..(o + 1) * k];
-            let raw = match kernel {
-                Kernel::Scalar => dot_u8_scalar(xrow, wrow),
-                Kernel::Unrolled => dot_u8_unrolled(xrow, wrow),
-                #[cfg(target_arch = "x86_64")]
-                Kernel::Avx2 => unsafe { dot_u8_avx2(xrow, wrow) },
-                Kernel::Auto => unreachable!("resolved above"),
-            } as i64;
-            finish(o, raw, yrow);
-            o += 1;
+    };
+    let mut o = 0;
+    // 4-row blocked AVX2 path: x is loaded/widened once per 4 rows.
+    #[cfg(target_arch = "x86_64")]
+    if kernel == Kernel::Avx2 {
+        while o + 4 <= w.out_dim {
+            let raws = unsafe {
+                dot4_u8_avx2(
+                    xrow,
+                    [
+                        &w.data[o * k..(o + 1) * k],
+                        &w.data[(o + 1) * k..(o + 2) * k],
+                        &w.data[(o + 2) * k..(o + 3) * k],
+                        &w.data[(o + 3) * k..(o + 4) * k],
+                    ],
+                )
+            };
+            for (d, &raw) in raws.iter().enumerate() {
+                finish(o + d, raw as i64, yrow);
+            }
+            o += 4;
         }
+    }
+    while o < w.out_dim {
+        let wrow = &w.data[o * k..(o + 1) * k];
+        let raw = match kernel {
+            Kernel::Scalar => dot_u8_scalar(xrow, wrow),
+            Kernel::Unrolled => dot_u8_unrolled(xrow, wrow),
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => unsafe { dot_u8_avx2(xrow, wrow) },
+            Kernel::Auto => unreachable!("resolved above"),
+        } as i64;
+        finish(o, raw, yrow);
+        o += 1;
     }
 }
 
@@ -417,28 +511,88 @@ pub fn fgemm(
     assert_eq!(x.len(), batch * w.in_dim);
     assert_eq!(y.len(), batch * w.out_dim);
     let k = w.in_dim;
-    #[cfg(target_arch = "x86_64")]
-    let use_fma = std::arch::is_x86_feature_detected!("fma")
-        && std::arch::is_x86_feature_detected!("avx2");
+    let use_fma = f32_fma_available();
     for i in 0..batch {
-        let xrow = &x[i * k..(i + 1) * k];
-        let yrow = &mut y[i * w.out_dim..(i + 1) * w.out_dim];
-        for o in 0..w.out_dim {
-            let wrow = &w.data[o * k..(o + 1) * k];
-            #[cfg(target_arch = "x86_64")]
-            let raw = if use_fma {
-                unsafe { dot_f32_fma(xrow, wrow) }
-            } else {
-                dot_f32_scalar(xrow, wrow)
-            };
-            #[cfg(not(target_arch = "x86_64"))]
-            let raw = dot_f32_scalar(xrow, wrow);
-            let v = raw + bias.map_or(0.0, |b| b[o]);
-            if accumulate {
-                yrow[o] += v;
-            } else {
-                yrow[o] = v;
-            }
+        fgemm_input_row(
+            w,
+            bias,
+            &x[i * k..(i + 1) * k],
+            &mut y[i * w.out_dim..(i + 1) * w.out_dim],
+            use_fma,
+            accumulate,
+        );
+    }
+}
+
+/// Lane-masked f32 GEMM over a lane-resident `x [max_lanes, in_dim]`
+/// buffer (the float twin of [`qgemm_lanes`]).
+pub fn fgemm_lanes(
+    x: &[f32],
+    max_lanes: usize,
+    lanes: &[usize],
+    w: &FMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    accumulate: bool,
+) {
+    assert_eq!(x.len(), max_lanes * w.in_dim);
+    assert_eq!(y.len(), max_lanes * w.out_dim);
+    let k = w.in_dim;
+    let use_fma = f32_fma_available();
+    for &lane in lanes {
+        debug_assert!(lane < max_lanes);
+        fgemm_input_row(
+            w,
+            bias,
+            &x[lane * k..(lane + 1) * k],
+            &mut y[lane * w.out_dim..(lane + 1) * w.out_dim],
+            use_fma,
+            accumulate,
+        );
+    }
+}
+
+#[inline]
+fn f32_fma_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("fma")
+            && std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// One f32 input row × every weight row → one output row (shared by the
+/// batch-contiguous and lane-strided entry points).
+fn fgemm_input_row(
+    w: &FMatrix,
+    bias: Option<&[f32]>,
+    xrow: &[f32],
+    yrow: &mut [f32],
+    use_fma: bool,
+    accumulate: bool,
+) {
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = use_fma;
+    let k = w.in_dim;
+    for o in 0..w.out_dim {
+        let wrow = &w.data[o * k..(o + 1) * k];
+        #[cfg(target_arch = "x86_64")]
+        let raw = if use_fma {
+            unsafe { dot_f32_fma(xrow, wrow) }
+        } else {
+            dot_f32_scalar(xrow, wrow)
+        };
+        #[cfg(not(target_arch = "x86_64"))]
+        let raw = dot_f32_scalar(xrow, wrow);
+        let v = raw + bias.map_or(0.0, |b| b[o]);
+        if accumulate {
+            yrow[o] += v;
+        } else {
+            yrow[o] = v;
         }
     }
 }
@@ -657,6 +811,77 @@ mod tests {
             for r in 0..4 {
                 assert_eq!(got[r], dot_u8_scalar(&x, &rows[r]));
             }
+        });
+    }
+
+    #[test]
+    fn qgemm_lanes_bit_identical_to_solo_rows() {
+        // The per-row quantization contract: a lane's output is a pure
+        // function of its own input row — bit-identical whether the lane
+        // runs alone, packed with co-riders, or via the batch entry point.
+        forall("qgemm lanes invariance", 40, 0x1A7E5, |g: &mut Gen| {
+            let max_lanes = g.usize_in(1, 8);
+            let in_dim = g.usize_in(1, 60);
+            let out_dim = g.usize_in(1, 30);
+            let wf = g.vec_normal(in_dim * out_dim, 0.5);
+            let bias = g.vec_normal(out_dim, 0.2);
+            let w = QMatrix::from_f32_math_layout(&wf, in_dim, out_dim, Granularity::PerMatrix);
+            let x = g.vec_normal(max_lanes * in_dim, 1.0);
+            // random non-empty active-lane subset
+            let lanes: Vec<usize> =
+                (0..max_lanes).filter(|_| g.bool()).collect();
+            let lanes = if lanes.is_empty() { vec![g.usize_in(0, max_lanes - 1)] } else { lanes };
+            let mut scratch = QScratch::default();
+            let mut y = vec![f32::NAN; max_lanes * out_dim];
+            qgemm_lanes(&x, max_lanes, &lanes, &w, Some(&bias), &mut y, &mut scratch, Kernel::Auto, false);
+            for &lane in &lanes {
+                // solo run of the same row through the batch-1 entry point
+                let mut y1 = vec![0f32; out_dim];
+                qgemm(
+                    &x[lane * in_dim..(lane + 1) * in_dim],
+                    1,
+                    &w,
+                    Some(&bias),
+                    &mut y1,
+                    &mut QScratch::default(),
+                    Kernel::Auto,
+                    false,
+                );
+                for o in 0..out_dim {
+                    assert!(
+                        y[lane * out_dim + o] == y1[o],
+                        "lane {lane} o {o}: {} != {} (not bit-identical)",
+                        y[lane * out_dim + o],
+                        y1[o]
+                    );
+                }
+            }
+            // inactive lanes untouched
+            for lane in 0..max_lanes {
+                if !lanes.contains(&lane) {
+                    assert!(y[lane * out_dim..(lane + 1) * out_dim]
+                        .iter()
+                        .all(|v| v.is_nan()));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn fgemm_lanes_bit_identical_to_batch() {
+        forall("fgemm lanes", 40, 0xF1A7, |g: &mut Gen| {
+            let max_lanes = g.usize_in(1, 6);
+            let in_dim = g.usize_in(1, 64);
+            let out_dim = g.usize_in(1, 24);
+            let wf = g.vec_normal(in_dim * out_dim, 0.4);
+            let w = FMatrix::from_math_layout(&wf, in_dim, out_dim);
+            let x = g.vec_normal(max_lanes * in_dim, 1.0);
+            let all: Vec<usize> = (0..max_lanes).collect();
+            let mut y_lanes = vec![0f32; max_lanes * out_dim];
+            let mut y_batch = vec![0f32; max_lanes * out_dim];
+            fgemm_lanes(&x, max_lanes, &all, &w, None, &mut y_lanes, false);
+            fgemm(&x, max_lanes, &w, None, &mut y_batch, false);
+            assert_eq!(y_lanes, y_batch);
         });
     }
 

@@ -1,0 +1,287 @@
+//! [`AmBackend`] — the one execution interface the serving coordinator
+//! speaks.
+//!
+//! The engine used to be welded to the native [`AcousticModel`], with the
+//! PJRT/AOT path (`runtime::model_exec`) living behind a disjoint API.
+//! This trait makes `coordinator::engine` generic over *how* a batched
+//! acoustic-model step executes, so the native int8 engine and the
+//! AOT-compiled XLA graph are a one-line swap at `Engine::start`, and
+//! future backends (sharded, remote, GPU) land on the same interface.
+//!
+//! The interface is **lane-resident** (see [`crate::nn::model::BatchArena`]):
+//! a backend allocates an arena of `max_lanes` recurrent-state lanes once,
+//! and every step updates the listed active lanes **in place** over
+//! lane-resident `[max_lanes, dim]` I/O buffers.  The contract that makes
+//! serving correct:
+//!
+//! 1. **Lane isolation** — a step must read/write only the listed lanes.
+//! 2. **Batch invariance** — a lane's outputs and state trajectory must be
+//!    independent of which other lanes are active (the native engine makes
+//!    this *bit-exact* via per-row input quantization; see `quant::gemm`).
+//! 3. **Parkability** — `save_lane`/`load_lane` round-trip a lane's state
+//!    exactly, so the engine can evict idle streams and re-admit them.
+
+use anyhow::Result;
+
+use crate::nn::model::{BatchArena, ParkedLane};
+use crate::nn::AcousticModel;
+
+/// A batched, lane-resident acoustic-model execution backend.
+pub trait AmBackend: Send + Sync + 'static {
+    /// Lane-resident recurrent state for `max_lanes` streams.
+    type Arena: Send + 'static;
+    /// One lane's state parked outside the arena (eviction).
+    type Parked: Send + 'static;
+
+    /// Feature dimension of one input frame.
+    fn input_dim(&self) -> usize;
+
+    /// Output posterior dimension.
+    fn num_labels(&self) -> usize;
+
+    /// Upper bound on `max_lanes`, if the backend has one (e.g. an AOT
+    /// graph lowered at a fixed batch size).  `None` ⇒ any size.
+    fn lane_capacity(&self) -> Option<usize> {
+        None
+    }
+
+    /// Allocate an arena with all lanes zeroed.
+    fn alloc_arena(&self, max_lanes: usize) -> Self::Arena;
+
+    /// One timestep for the listed active lanes, in place.  `x` and `out`
+    /// are lane-resident `[max_lanes, input_dim]` / `[max_lanes,
+    /// num_labels]`; only rows in `lanes` are read/written.  `out` rows
+    /// receive log-posteriors.
+    fn step_lanes(
+        &self,
+        arena: &mut Self::Arena,
+        lanes: &[usize],
+        x: &[f32],
+        out: &mut [f32],
+    ) -> Result<()>;
+
+    /// Zero one lane's recurrent state (new stream admitted to the lane).
+    fn reset_lane(&self, arena: &mut Self::Arena, lane: usize);
+
+    /// Copy one lane's state out of the arena (evicting its stream).
+    fn save_lane(&self, arena: &Self::Arena, lane: usize) -> Self::Parked;
+
+    /// Restore a parked state into a lane (re-admitting its stream).
+    fn load_lane(&self, arena: &mut Self::Arena, lane: usize, parked: &Self::Parked);
+
+    /// Short human-readable backend name (metrics / logs).
+    fn backend_name(&self) -> &'static str;
+}
+
+/// The native int8/f32 engine — the production hot path.  `Arena` is the
+/// pre-allocated [`BatchArena`]; stepping is allocation-free and in place.
+impl AmBackend for AcousticModel {
+    type Arena = BatchArena;
+    type Parked = ParkedLane;
+
+    fn input_dim(&self) -> usize {
+        self.header.input_dim
+    }
+
+    fn num_labels(&self) -> usize {
+        self.header.num_labels
+    }
+
+    fn alloc_arena(&self, max_lanes: usize) -> BatchArena {
+        self.new_arena(max_lanes)
+    }
+
+    fn step_lanes(
+        &self,
+        arena: &mut BatchArena,
+        lanes: &[usize],
+        x: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.arena_step(arena, lanes, x, out);
+        Ok(())
+    }
+
+    fn reset_lane(&self, arena: &mut BatchArena, lane: usize) {
+        arena.reset_lane(lane);
+    }
+
+    fn save_lane(&self, arena: &BatchArena, lane: usize) -> ParkedLane {
+        arena.save_lane(lane)
+    }
+
+    fn load_lane(&self, arena: &mut BatchArena, lane: usize, parked: &ParkedLane) {
+        arena.load_lane(lane, parked);
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT backend: the AOT-compiled XLA step function drives the same engine
+/// (the cross-check path — numerics over throughput).  The graph is
+/// lowered at a fixed batch size, so `lane_capacity` is `Some(batch)` and
+/// every step executes the full batch; lane state is mirrored on the host
+/// so lanes can be reset/parked without device-side scatter support.
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use anyhow::Result;
+
+    use super::AmBackend;
+    use crate::runtime::model_exec::ModelExecutable;
+
+    /// Host-mirrored lane state for the fixed-batch AOT step function.
+    pub struct PjrtLanes {
+        max_lanes: usize,
+        /// One host vector per state tensor (ordered c0, h0, c1, h1, …),
+        /// each `[manifest.batch, dim]` row-major.
+        host: Vec<Vec<f32>>,
+        /// Row dim of each state tensor.
+        dims: Vec<usize>,
+        /// Fixed-batch input staging buffer `[manifest.batch, input_dim]`.
+        xfull: Vec<f32>,
+    }
+
+    /// One lane's rows across all state tensors.
+    pub struct PjrtParked {
+        rows: Vec<Vec<f32>>,
+    }
+
+    impl AmBackend for ModelExecutable {
+        type Arena = PjrtLanes;
+        type Parked = PjrtParked;
+
+        fn input_dim(&self) -> usize {
+            self.manifest.input_dim
+        }
+
+        fn num_labels(&self) -> usize {
+            self.manifest.num_labels
+        }
+
+        fn lane_capacity(&self) -> Option<usize> {
+            Some(self.manifest.batch)
+        }
+
+        fn alloc_arena(&self, max_lanes: usize) -> PjrtLanes {
+            let m = &self.manifest;
+            assert!(
+                max_lanes <= m.batch,
+                "AOT graph was lowered at batch {}, cannot serve {max_lanes} lanes",
+                m.batch
+            );
+            let mut host = Vec::with_capacity(2 * m.num_layers);
+            let mut dims = Vec::with_capacity(2 * m.num_layers);
+            for _ in 0..m.num_layers {
+                host.push(vec![0f32; m.batch * m.cell_dim]);
+                dims.push(m.cell_dim);
+                host.push(vec![0f32; m.batch * m.rec_dim]);
+                dims.push(m.rec_dim);
+            }
+            PjrtLanes { max_lanes, host, dims, xfull: vec![0f32; m.batch * m.input_dim] }
+        }
+
+        fn step_lanes(
+            &self,
+            arena: &mut PjrtLanes,
+            lanes: &[usize],
+            x: &[f32],
+            out: &mut [f32],
+        ) -> Result<()> {
+            let m = &self.manifest;
+            let (d, l) = (m.input_dim, m.num_labels);
+            debug_assert_eq!(x.len(), arena.max_lanes * d);
+            debug_assert_eq!(out.len(), arena.max_lanes * l);
+            // Lanes map 1:1 onto batch rows; inactive rows step on zeros
+            // and their results/state updates are discarded below, so an
+            // idle-but-occupied lane's state never advances (the trait's
+            // lane-isolation contract).
+            arena.xfull.iter_mut().for_each(|v| *v = 0.0);
+            for &lane in lanes {
+                arena.xfull[lane * d..(lane + 1) * d]
+                    .copy_from_slice(&x[lane * d..(lane + 1) * d]);
+            }
+            let mut state = self.state_from_host(&arena.host);
+            let lp = self.step(&arena.xfull, &mut state)?;
+            // Write back only the listed lanes' state rows.
+            let new_host = self.state_to_host(&state)?;
+            for ((t, new_t), &dim) in
+                arena.host.iter_mut().zip(new_host.iter()).zip(arena.dims.iter())
+            {
+                for &lane in lanes {
+                    t[lane * dim..(lane + 1) * dim]
+                        .copy_from_slice(&new_t[lane * dim..(lane + 1) * dim]);
+                }
+            }
+            for &lane in lanes {
+                out[lane * l..(lane + 1) * l].copy_from_slice(&lp[lane * l..(lane + 1) * l]);
+            }
+            Ok(())
+        }
+
+        fn reset_lane(&self, arena: &mut PjrtLanes, lane: usize) {
+            for (t, &dim) in arena.host.iter_mut().zip(arena.dims.iter()) {
+                t[lane * dim..(lane + 1) * dim].fill(0.0);
+            }
+        }
+
+        fn save_lane(&self, arena: &PjrtLanes, lane: usize) -> PjrtParked {
+            PjrtParked {
+                rows: arena
+                    .host
+                    .iter()
+                    .zip(arena.dims.iter())
+                    .map(|(t, &dim)| t[lane * dim..(lane + 1) * dim].to_vec())
+                    .collect(),
+            }
+        }
+
+        fn load_lane(&self, arena: &mut PjrtLanes, lane: usize, parked: &PjrtParked) {
+            for ((t, &dim), row) in
+                arena.host.iter_mut().zip(arena.dims.iter()).zip(parked.rows.iter())
+            {
+                t[lane * dim..(lane + 1) * dim].copy_from_slice(row);
+            }
+        }
+
+        fn backend_name(&self) -> &'static str {
+            "pjrt"
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::{PjrtLanes, PjrtParked};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ExecMode;
+    use crate::util::prop::Gen;
+
+    #[test]
+    fn native_backend_roundtrips_through_trait() {
+        // Drive the native model exclusively through the trait object
+        // surface the engine uses, and check lane behavior end to end.
+        let mut g = Gen::new(44);
+        let qam = crate::nn::model::random_qam(2, 8, Some(4), 6, 7, &mut g);
+        let m = AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap();
+        let ml = 3;
+        let mut arena = AmBackend::alloc_arena(&m, ml);
+        let mut x = vec![0f32; ml * 6];
+        let mut out = vec![0f32; ml * 7];
+        for v in x.iter_mut() {
+            *v = g.f32_in(-1.0, 1.0);
+        }
+        AmBackend::step_lanes(&m, &mut arena, &[0, 2], &x, &mut out).unwrap();
+        let parked = AmBackend::save_lane(&m, &arena, 2);
+        AmBackend::reset_lane(&m, &mut arena, 2);
+        AmBackend::load_lane(&m, &mut arena, 2, &parked);
+        AmBackend::step_lanes(&m, &mut arena, &[2], &x, &mut out).unwrap();
+        assert_eq!(AmBackend::input_dim(&m), 6);
+        assert_eq!(AmBackend::num_labels(&m), 7);
+        assert!(AmBackend::lane_capacity(&m).is_none());
+        assert_eq!(m.backend_name(), "native");
+    }
+}

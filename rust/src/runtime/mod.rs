@@ -1,14 +1,23 @@
-//! PJRT runtime: load AOT artifacts (HLO text lowered by
-//! `python/compile/aot.py`) and execute them from rust.
+//! Execution backends for the serving coordinator.
 //!
-//! This is the L2 execution path of the three-layer architecture — the JAX
-//! model graph (with the Pallas kernels lowered into it) compiled once by
-//! XLA and driven from the rust coordinator.  The native engine
-//! ([`crate::nn`]) is the production hot path; the PJRT path exists to
-//! (a) prove the AOT bridge works end-to-end and (b) cross-check numerics
-//! between the handwritten int8 kernels and the JAX/Pallas reference
-//! (test `rust/tests/native_vs_pjrt.rs`).
+//! - [`backend`] — the [`AmBackend`] trait: the single, lane-resident
+//!   execution interface `coordinator::engine` is generic over.  The
+//!   native int8 engine ([`crate::nn::AcousticModel`]) implements it as
+//!   the production hot path.
+//! - [`model_exec`] *(feature `pjrt`)* — load AOT artifacts (HLO text
+//!   lowered by `python/compile/aot.py`) and execute them via PJRT.  This
+//!   is the L2 path of the three-layer architecture — the JAX model graph
+//!   (with the Pallas kernels lowered into it) compiled once by XLA and
+//!   driven from rust.  `ModelExecutable` also implements [`AmBackend`],
+//!   so the native-vs-PJRT cross-check is a one-line swap at
+//!   `Engine::start`.  The feature is off by default because the real
+//!   `xla` bindings need a prebuilt xla_extension library; the default
+//!   build links an offline stub (see `rust/vendor/xla`).
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod model_exec;
 
+pub use backend::AmBackend;
+#[cfg(feature = "pjrt")]
 pub use model_exec::{Manifest, ModelExecutable, PjrtState, Runtime};

@@ -135,6 +135,33 @@ impl ModelExecutable {
         Ok(log_probs)
     }
 
+    /// Build a [`PjrtState`] from host-layout rows: one vector per state
+    /// tensor, ordered `c0, h0, c1, h1, …`, each `[batch, dim]` row-major
+    /// (the layout [`ModelExecutable::zero_state`] uses).  Used by the
+    /// [`crate::runtime::backend::AmBackend`] impl, which mirrors lane
+    /// state on the host.
+    pub fn state_from_host(&self, host: &[Vec<f32>]) -> PjrtState {
+        let m = &self.manifest;
+        debug_assert_eq!(host.len(), 2 * m.num_layers);
+        let mut tensors = Vec::with_capacity(host.len());
+        for (i, t) in host.iter().enumerate() {
+            let dim = if i % 2 == 0 { m.cell_dim } else { m.rec_dim };
+            debug_assert_eq!(t.len(), m.batch * dim);
+            tensors.push(literal_2d(t, m.batch, dim));
+        }
+        PjrtState { tensors }
+    }
+
+    /// Download a [`PjrtState`] into host vectors (inverse of
+    /// [`ModelExecutable::state_from_host`]).
+    pub fn state_to_host(&self, state: &PjrtState) -> Result<Vec<Vec<f32>>> {
+        state
+            .tensors
+            .iter()
+            .map(|t| t.to_vec::<f32>().map_err(|e| anyhow::anyhow!("read state: {e:?}")))
+            .collect()
+    }
+
     /// Run a full utterance at batch 1 (repeating the frame across the
     /// batch if the artifact was lowered with batch > 1 — row 0 is used).
     pub fn forward_utt(&self, feats: &[f32], num_frames: usize) -> Result<Vec<f32>> {

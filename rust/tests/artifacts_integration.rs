@@ -87,6 +87,7 @@ fn qam_files_load_with_expected_flags() {
     assert!(q.storage_bytes() * 3 < f.storage_bytes());
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn native_matches_pjrt_artifacts() {
     // The handwritten int8 engine and the AOT JAX graph (with the stored u8
@@ -116,6 +117,7 @@ fn native_matches_pjrt_artifacts() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pallas_variant_matches_jnp_variant() {
     // The AOT graph whose matmuls lower through the Pallas kernel must be

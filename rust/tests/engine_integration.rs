@@ -84,6 +84,60 @@ fn batched_results_match_unbatched() {
 }
 
 #[test]
+fn lane_churn_with_more_streams_than_lanes() {
+    // 6 streams over 2 arena lanes with interleaved chunked pushes: forces
+    // lane admission, eviction of idle holders (a third stream cannot make
+    // progress before an eviction happens, since lanes are only *released*
+    // at stream drain), state park/restore, and release.  Lane residency
+    // must be invisible: every stream's phones match its solo reference.
+    let (eng, model) = engine(2);
+    let n_streams = 6usize;
+    let (chunks, chunk_len) = (4usize, 3usize);
+    let total = chunks * chunk_len;
+    let content: Vec<Vec<f32>> =
+        (0..n_streams).map(|s| frames(total, 500 + s as u64)).collect();
+    let want: Vec<Vec<u32>> = content
+        .iter()
+        .map(|f| {
+            let lp = model.forward_utt(f, total);
+            quantasr::decoder::ctc::greedy(&lp, model.num_labels())
+        })
+        .collect();
+
+    let d = spec::FEAT_DIM;
+    let mut ids = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..n_streams {
+        let (id, rx) = eng.open_stream();
+        ids.push(id);
+        rxs.push(rx);
+    }
+    // Round-robin chunk pushes with pauses so holders go idle between
+    // chunks and waiting streams must evict them.
+    for c in 0..chunks {
+        for (i, &id) in ids.iter().enumerate() {
+            let chunk = &content[i][c * chunk_len * d..(c + 1) * chunk_len * d];
+            eng.push_frames(id, chunk).unwrap();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    for &id in &ids {
+        eng.finish_stream(id).unwrap();
+    }
+    for (rx, want_phones) in rxs.into_iter().zip(want) {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(r.num_frames, total, "frame conservation under lane churn");
+        assert_eq!(r.phones, want_phones, "lane churn changed numerics");
+    }
+    // With 6 streams contending for 2 lanes and releases only at drain,
+    // at least one eviction must have occurred for stream 3+ to progress.
+    assert!(
+        *eng.metrics().evictions.lock().unwrap() >= 1,
+        "expected lane evictions under contention"
+    );
+}
+
+#[test]
 fn empty_stream_finishes_cleanly() {
     let (eng, _) = engine(4);
     let (id, rx) = eng.open_stream();

@@ -1,0 +1,176 @@
+//! Offline **stub** of the `xla` crate surface used by `quantasr`'s PJRT
+//! path (`runtime::model_exec`).
+//!
+//! The real bindings wrap a prebuilt `xla_extension` C++ library that is
+//! not available in this build image, so this crate provides the same API
+//! shapes with constructors that fail at *runtime* ("xla unavailable")
+//! instead of failing the *build*.  That keeps `--features pjrt` compiling
+//! everywhere — the `AmBackend` implementation, the `pjrt-check` command
+//! and the artifact tests all type-check — while real execution requires
+//! swapping this path dependency for the actual bindings.
+//!
+//! Only the API surface `quantasr` uses is modelled; this is not a general
+//! xla binding.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real bindings' `Result<_, xla::Error>` shape.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} requires the real xla_extension bindings \
+         (this build vendors rust/vendor/xla, an offline stub)"
+    )))
+}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy + Default {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side tensor value (the only part of the stub that actually works;
+/// it is pure data and needs no native library).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f32>,
+    shape: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 f32 literal.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), shape: vec![data.len() as i64] }
+    }
+
+    /// Reshape without changing the element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), shape: dims.to_vec() })
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.shape
+    }
+
+    /// Destructure a tuple literal.  The stub never produces tuples (no
+    /// execution), so this is only reachable with real bindings.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple on an executed result")
+    }
+
+    /// Read the elements back.  f32 data round-trips; other element types
+    /// only exist on executed results, which the stub cannot produce.
+    pub fn to_vec<T: NativeType + 'static>(&self) -> Result<Vec<T>> {
+        // The stub stores f32 only; a same-size transmute-free copy is
+        // possible just for f32.
+        if std::any::TypeId::of::<T>() == std::any::TypeId::of::<f32>() {
+            let mut out: Vec<T> = Vec::with_capacity(self.data.len());
+            for &v in &self.data {
+                // T == f32 here; go through a trivially-checked cast.
+                let as_t: T = unsafe { std::mem::transmute_copy(&v) };
+                out.push(as_t);
+            }
+            Ok(out)
+        } else {
+            unavailable("Literal::to_vec for non-f32 element types")
+        }
+    }
+}
+
+/// Parsed HLO module (text format).  Parsing needs the native library.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT CPU client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device buffer produced by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.shape(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent").is_err());
+    }
+}
