@@ -6,7 +6,7 @@
 //!
 //! ```bash
 //! cargo run --release --example streaming_server -- \
-//!     [--streams 8] [--utts 48] [--mode quant] [--max-batch 8]
+//!     [--streams 8] [--utts 48] [--mode quant] [--max-batch 32]
 //! ```
 //!
 //! Results are recorded in EXPERIMENTS.md §E4.
@@ -38,13 +38,13 @@ fn main() -> Result<()> {
     );
     let decoder = Arc::new(build_decoder(&world, DecoderConfig::default()));
     let mut cfg = EngineConfig::default();
-    cfg.policy.max_batch = args.get_usize("max-batch", 8);
+    cfg.policy.max_batch = args.get_usize("max-batch", cfg.policy.max_batch);
+    let max_batch = cfg.policy.max_batch;
     let engine = Arc::new(Engine::start(model.clone(), decoder, cfg));
     println!(
-        "engine up: model={} mode={mode:?} storage={}KB max_batch={}",
+        "engine up: model={} mode={mode:?} storage={}KB max_batch={max_batch}",
         model.header.name,
         model.storage_bytes() / 1024,
-        args.get_usize("max-batch", 8),
     );
 
     // Start the TCP server on an ephemeral port.

@@ -173,12 +173,16 @@ fn main() {
         recorded.push(m_arena);
     }
 
-    // (b) serving engine: throughput vs max_batch.
-    println!("== serving engine: batched frames/s vs max_batch ==");
+    // (b) serving engine: throughput vs max_batch — the lane-masked GEMM
+    // scaling curve (ROADMAP "Bigger batches"): lanes are O(max_batch)
+    // pre-allocated memory and the packed-panel GEMM computes every active
+    // lane per panel pass, so this sweep (now through the raised default
+    // of 32) records how far weight-streaming amortization carries.
+    println!("== serving engine: batched frames/s vs max_batch (lane scaling curve) ==");
     let qam = random_qam(3, 48, Some(24));
     let world = World::new();
     let decoder = Arc::new(build_decoder(&world, DecoderConfig { beam: 8, ..Default::default() }));
-    for max_batch in [1usize, 2, 4, 8, 16] {
+    for max_batch in [1usize, 2, 4, 8, 16, 32] {
         let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
         let cfg = EngineConfig {
             policy: BatchPolicy {
@@ -189,7 +193,7 @@ fn main() {
             max_pending_frames: 128,
         };
         let engine = Arc::new(Engine::start(model, decoder.clone(), cfg));
-        let n_streams = 16;
+        let n_streams = 32;
         let frames_per_stream = 100;
         let mut frame = vec![0f32; spec::FEAT_DIM * frames_per_stream];
         rng.fill_normal(&mut frame);

@@ -1,14 +1,22 @@
-//! E1 — the paper's §3.1 efficiency claim at the kernel level: integer
-//! (u8·u8→i32) GEMM vs f32 GEMM, across the matrix shapes of the Table-1
-//! model family plus square sizes, and across the kernel ladder
-//! (scalar → unrolled → AVX2).
+//! E1 + the packed-panel perf gate: the integer GEMM **kernel ladder**
+//! (scalar → unrolled → AVX2 row-dot → packed panels → packed VNNI) across
+//! representative LSTM shapes at batch 1/8/32, against the f32 baseline.
 //!
-//! Reported as MACs/s; the "speedup" lines are what EXPERIMENTS.md §E1
-//! quotes.  Run with `cargo bench --bench bench_gemm`.
+//! The acceptance bar for the packed-panel work is recorded here: on the
+//! representative 512×2048 shape at batch 8, the packed path (with panel
+//! parallelism, as dispatched in production) must beat the old `Avx2`
+//! row-dot rung ≥ 2×.  Results are written to `BENCH_gemm.json` (CI
+//! uploads it as an artifact) so the perf trajectory persists across PRs.
+//!
+//! Env knobs: `QUANTASR_GEMM_THREADS=1` pins the packed path serial (to
+//! isolate microkernel gains from parallel gains); `QUANTASR_KERNEL`
+//! forces the Auto rung.
+
+use std::fmt::Write as _;
 
 use quantasr::quant::gemm::{fgemm, qgemm, FMatrix, Kernel, QScratch};
 use quantasr::quant::{Granularity, QMatrix};
-use quantasr::util::bench::Bench;
+use quantasr::util::bench::{Bench, Measurement};
 use quantasr::util::rng::Xoshiro256;
 
 fn randv(n: usize, rng: &mut Xoshiro256) -> Vec<f32> {
@@ -17,69 +25,172 @@ fn randv(n: usize, rng: &mut Xoshiro256) -> Vec<f32> {
     v
 }
 
+/// One ladder row destined for BENCH_gemm.json.
+struct Row {
+    batch: usize,
+    k: usize,
+    n: usize,
+    kernel: String,
+    m: Measurement,
+    macs: f64,
+}
+
+fn find_ns(rows: &[Row], batch: usize, k: usize, n: usize, kernel: &str) -> Option<f64> {
+    rows.iter()
+        .find(|r| r.batch == batch && r.k == k && r.n == n && r.kernel == kernel)
+        .map(|r| r.m.mean_ns)
+}
+
 fn main() {
     let b = Bench::default();
     let mut rng = Xoshiro256::new(0xE1);
-    println!("== bench_gemm: integer vs float GEMM (E1) ==");
-    println!("host AVX2: {}", std::arch::is_x86_feature_detected!("avx2"));
+    let mut rows: Vec<Row> = Vec::new();
+    println!("== bench_gemm: integer GEMM kernel ladder vs f32 (E1 + packed panels) ==");
+    let avx2 = {
+        #[cfg(target_arch = "x86_64")]
+        {
+            quantasr::quant::gemm::avx2_available()
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("host: avx2={avx2} vnni_feature={} cpus={threads}", cfg!(feature = "vnni"));
 
-    // (batch, in, out): LSTM gate matmuls of the Table-1 grid + squares.
-    let shapes = [
-        (1usize, 64usize, 120usize),   // 4x30 wx (stream)
-        (1, 50, 200),                  // 5x50 wh
-        (8, 64, 200),                  // batched serving
-        (8, 50, 200),
-        (1, 256, 256),
-        (8, 256, 256),
-        (8, 512, 512),
-        (1, 1024, 1024),
+    // The forced-kernel ladder this host can run (f32 benched separately).
+    let mut ladder: Vec<(&str, Kernel)> = vec![
+        ("scalar", Kernel::Scalar),
+        ("unrolled", Kernel::Unrolled),
+        ("packed-scalar", Kernel::PackedScalar),
     ];
-    for (batch, k, n) in shapes {
-        let x = randv(batch * k, &mut rng);
-        let wf = randv(k * n, &mut rng);
-        let bias = randv(n, &mut rng);
-        let qm = QMatrix::from_f32_math_layout(&wf, k, n, Granularity::PerMatrix);
-        let fm = FMatrix::from_math_layout(&wf, k, n);
-        let macs = (batch * k * n) as f64;
-        let mut y = vec![0f32; batch * n];
-        let mut scratch = QScratch::default();
+    #[cfg(target_arch = "x86_64")]
+    if avx2 {
+        ladder.push(("avx2-rowdot", Kernel::Avx2));
+        ladder.push(("packed-avx2", Kernel::PackedAvx2));
+    }
+    #[cfg(all(target_arch = "x86_64", feature = "vnni"))]
+    if quantasr::quant::gemm::vnni_available() {
+        ladder.push(("packed-vnni", Kernel::PackedVnni));
+    }
+    ladder.push(("auto", Kernel::Auto));
 
-        let m_f32 = b.run_with_items(
-            &format!("f32 gemm        {batch}x{k}x{n}"),
-            macs,
-            || fgemm(&x, batch, &fm, Some(&bias), &mut y, false),
-        );
-        let m_scalar = b.run_with_items(
-            &format!("u8 gemm scalar  {batch}x{k}x{n}"),
-            macs,
-            || qgemm(&x, batch, &qm, Some(&bias), &mut y, &mut scratch, Kernel::Scalar, false),
-        );
-        let m_unroll = b.run_with_items(
-            &format!("u8 gemm unroll  {batch}x{k}x{n}"),
-            macs,
-            || qgemm(&x, batch, &qm, Some(&bias), &mut y, &mut scratch, Kernel::Unrolled, false),
-        );
-        let m_best = b.run_with_items(
-            &format!("u8 gemm auto    {batch}x{k}x{n}"),
-            macs,
-            || qgemm(&x, batch, &qm, Some(&bias), &mut y, &mut scratch, Kernel::Auto, false),
-        );
-        println!(
-            "  → int8 speedup vs f32: scalar {:.2}×  unrolled {:.2}×  auto {:.2}×\n",
-            m_f32.mean_ns / m_scalar.mean_ns,
-            m_f32.mean_ns / m_unroll.mean_ns,
-            m_f32.mean_ns / m_best.mean_ns,
-        );
+    // Representative LSTM shapes (k = in, n = out):
+    //   512×2048 — the acceptance shape (cell 512 gate block);
+    //   200×2000 — paper-scale 5×500 P=200 wx/wh gate matmul;
+    //   500×200  — the recurrent projection.
+    let shapes = [(512usize, 2048usize), (200, 2000), (500, 200)];
+    let batches = [1usize, 8, 32];
+    for (k, n) in shapes {
+        for batch in batches {
+            let x = randv(batch * k, &mut rng);
+            let wf = randv(k * n, &mut rng);
+            let bias = randv(n, &mut rng);
+            let qm = QMatrix::from_f32_math_layout(&wf, k, n, Granularity::PerMatrix);
+            let fm = FMatrix::from_math_layout(&wf, k, n);
+            let macs = (batch * k * n) as f64;
+            let mut y = vec![0f32; batch * n];
+            let mut scratch = QScratch::default();
+
+            let m_f32 = b.run_with_items(
+                &format!("f32 gemm           {batch}x{k}x{n}"),
+                macs,
+                || fgemm(&x, batch, &fm, Some(&bias), &mut y, false),
+            );
+            rows.push(Row { batch, k, n, kernel: "f32".into(), m: m_f32, macs });
+            for &(name, kern) in &ladder {
+                let m = b.run_with_items(
+                    &format!("u8 {name:<15} {batch}x{k}x{n}"),
+                    macs,
+                    || qgemm(&x, batch, &qm, Some(&bias), &mut y, &mut scratch, kern, false),
+                );
+                rows.push(Row { batch, k, n, kernel: name.into(), m, macs });
+            }
+            let f32_ns = find_ns(&rows, batch, k, n, "f32");
+            let avx2_ns = find_ns(&rows, batch, k, n, "avx2-rowdot");
+            let auto_ns = find_ns(&rows, batch, k, n, "auto");
+            if let (Some(f), Some(a)) = (f32_ns, auto_ns) {
+                let vs_avx2 = avx2_ns
+                    .map(|r| format!("  vs avx2-rowdot {:.2}×", r / a))
+                    .unwrap_or_default();
+                println!("  → auto vs f32 {:.2}×{vs_avx2}\n", f / a);
+            }
+        }
     }
 
-    // Memory footprint comparison (the 4× claim).
+    // Memory footprint comparison (the 4× claim) + the packed mirror cost.
     let wf = randv(512 * 512, &mut rng);
     let qm = QMatrix::from_f32_math_layout(&wf, 512, 512, Granularity::PerMatrix);
     let fm = FMatrix::from_math_layout(&wf, 512, 512);
     println!(
-        "storage 512×512: f32 {} KB vs u8 {} KB ({:.2}× smaller)",
+        "storage 512×512: f32 {} KB vs u8 {} KB ({:.2}× smaller); packed mirror +{} KB",
         fm.storage_bytes() / 1024,
         qm.storage_bytes() / 1024,
-        fm.storage_bytes() as f64 / qm.storage_bytes() as f64
+        fm.storage_bytes() as f64 / qm.storage_bytes() as f64,
+        qm.packed_bytes() / 1024,
     );
+
+    // Emit BENCH_gemm.json: the raw ladder plus the packed-vs-rowdot and
+    // int8-vs-f32 speedups per shape (the perf-trajectory artifact).
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"gemm\",\n");
+    let _ = writeln!(
+        json,
+        "  \"host\": {{\"avx2\": {avx2}, \"vnni_feature\": {}, \"cpus\": {threads}}},",
+        cfg!(feature = "vnni")
+    );
+    json.push_str("  \"ladder\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"batch\": {}, \"k\": {}, \"n\": {}, \"kernel\": \"{}\", \
+             \"mean_ns\": {:.1}, \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \
+             \"gmacs_per_s\": {:.3}}}{comma}",
+            r.batch,
+            r.k,
+            r.n,
+            r.kernel,
+            r.m.mean_ns,
+            r.m.p50_ns,
+            r.m.p99_ns,
+            r.macs / r.m.mean_ns, // MACs per ns == GMACs per s
+        );
+    }
+    json.push_str("  ],\n  \"speedups\": [\n");
+    let mut lines: Vec<String> = Vec::new();
+    for (k, n) in shapes {
+        for batch in batches {
+            let (Some(f32_ns), Some(auto_ns)) = (
+                find_ns(&rows, batch, k, n, "f32"),
+                find_ns(&rows, batch, k, n, "auto"),
+            ) else {
+                continue;
+            };
+            let packed_vs_rowdot = match (
+                find_ns(&rows, batch, k, n, "avx2-rowdot"),
+                find_ns(&rows, batch, k, n, "packed-avx2"),
+            ) {
+                (Some(r), Some(p)) => format!("{:.3}", r / p),
+                _ => "null".into(),
+            };
+            let auto_vs_rowdot = match find_ns(&rows, batch, k, n, "avx2-rowdot") {
+                Some(r) => format!("{:.3}", r / auto_ns),
+                None => "null".into(),
+            };
+            lines.push(format!(
+                "    {{\"batch\": {batch}, \"k\": {k}, \"n\": {n}, \
+                 \"auto_vs_f32\": {:.3}, \"packed_avx2_vs_avx2_rowdot\": {packed_vs_rowdot}, \
+                 \"auto_vs_avx2_rowdot\": {auto_vs_rowdot}}}",
+                f32_ns / auto_ns
+            ));
+        }
+    }
+    json.push_str(&lines.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    match std::fs::write("BENCH_gemm.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_gemm.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_gemm.json: {e}"),
+    }
 }

@@ -51,7 +51,7 @@ fn main() {
         ("N=500,P=200", 500, Some(200)),
     ];
     for &(name, n, p) in archs {
-        for batch in [1usize, 8] {
+        for batch in [1usize, 8, 32] {
             let lf = layer(64, n, p, &mut rng);
             let lq = quantize(&lf);
             let mut x = vec![0f32; batch * 64];
@@ -65,7 +65,31 @@ fn main() {
             let m_q = b.run_with_items(&format!("lstm int8 {name} b{batch}"), batch as f64, || {
                 lq.step(&x, batch, &mut st_q, &mut s, Kernel::Auto)
             });
-            println!("  → int8 speedup {:.2}×\n", m_f.mean_ns / m_q.mean_ns);
+            let speedup = m_f.mean_ns / m_q.mean_ns;
+            println!("  → int8 speedup (auto = packed dispatch) {speedup:.2}×\n");
+        }
+    }
+
+    // Packed-panel vs the old row-dot rung through a full recurrent step,
+    // at the paper-scale width (the LSTM-level view of bench_gemm's gate).
+    #[cfg(target_arch = "x86_64")]
+    if quantasr::quant::gemm::avx2_available() {
+        println!("== lstm step: avx2 row-dot vs packed panels (N=500,P=200) ==");
+        for batch in [1usize, 8, 32] {
+            let lq = quantize(&layer(64, 500, Some(200), &mut rng));
+            let mut x = vec![0f32; batch * 64];
+            rng.fill_normal(&mut x);
+            let mut st = lq.zero_state(batch);
+            let mut s = LstmScratch::default();
+            let m_rowdot =
+                b.run_with_items(&format!("lstm int8 rowdot b{batch}"), batch as f64, || {
+                    lq.step(&x, batch, &mut st, &mut s, Kernel::Avx2)
+                });
+            let m_packed =
+                b.run_with_items(&format!("lstm int8 packed b{batch}"), batch as f64, || {
+                    lq.step(&x, batch, &mut st, &mut s, Kernel::PackedAvx2)
+                });
+            println!("  → packed vs rowdot {:.2}×\n", m_rowdot.mean_ns / m_packed.mean_ns);
         }
     }
 }

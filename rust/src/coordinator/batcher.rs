@@ -25,7 +25,12 @@ pub struct BatchPolicy {
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, deadline: Duration::from_millis(5) }
+        // 32 lanes (was 8): lanes are O(max_batch) pre-allocated state and
+        // the packed-panel GEMM computes every active lane per panel pass,
+        // so wider batches amortize weight streaming instead of re-reading
+        // the matrix per stream — bench_e2e records the scaling curve in
+        // BENCH_engine.json (ROADMAP "Bigger batches").
+        BatchPolicy { max_batch: 32, deadline: Duration::from_millis(5) }
     }
 }
 

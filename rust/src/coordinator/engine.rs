@@ -136,14 +136,19 @@ pub struct Engine<B: AmBackend = AcousticModel> {
 }
 
 impl<B: AmBackend> Engine<B> {
-    pub fn start(backend: Arc<B>, decoder: Arc<Decoder>, config: EngineConfig) -> Self {
+    pub fn start(backend: Arc<B>, decoder: Arc<Decoder>, mut config: EngineConfig) -> Self {
+        // Lane-capped backends (e.g. an AOT graph lowered at a fixed batch)
+        // bound the arena: clamp rather than panic so the raised default
+        // `max_batch` (32) still works against a smaller fixed-batch graph.
         if let Some(cap) = backend.lane_capacity() {
-            assert!(
-                config.policy.max_batch <= cap,
-                "backend '{}' supports at most {cap} lanes (max_batch {})",
-                backend.backend_name(),
-                config.policy.max_batch
-            );
+            if config.policy.max_batch > cap {
+                eprintln!(
+                    "engine: backend '{}' supports {cap} lanes; clamping max_batch {} -> {cap}",
+                    backend.backend_name(),
+                    config.policy.max_batch
+                );
+                config.policy.max_batch = cap;
+            }
         }
         let max_lanes = config.policy.max_batch;
         let shared = Arc::new(Shared {

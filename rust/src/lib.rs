@@ -35,6 +35,21 @@
 //! handed to a waiter) and restored exactly.  Per-row input quantization
 //! makes a lane's numerics bit-identical to running its stream alone, so
 //! batching and lane placement are invisible to results.
+//!
+//! ## Integer GEMM: packed panels + kernel ladder
+//!
+//! The paper's "optimized hardware instructions for integer arithmetic"
+//! claim is realized in [`quant::gemm`]: every PerMatrix-quantized weight
+//! matrix is repacked **once at load** into a [`quant::PackedQMatrix`] —
+//! K-interleaved panels of 4 output rows — so the register-blocked
+//! microkernels load each input chunk once per 4 outputs and stream the
+//! matrix sequentially.  The microkernel is runtime-dispatched (AVX2
+//! `madd_epi16`; AVX-512-VNNI `vpdpbusd` behind the `vnni` cargo feature;
+//! NEON `dot` on aarch64; scalar reference elsewhere) and large GEMMs
+//! parallelize across panels with scoped threads.  Every rung — and every
+//! thread split — is **bit-identical** to the scalar reference (property-
+//! tested for all K tails, panel remainders and lane subsets), so the
+//! serving engine's batch-invariance guarantee is preserved verbatim.
 
 pub mod coordinator;
 pub mod decoder;

@@ -89,10 +89,25 @@ impl Linear {
         matches!(self, Linear::Quant(_))
     }
 
+    /// Whether this layer carries a packed-panel mirror — every
+    /// PerMatrix-quantized layer does (built once at load/quantization),
+    /// which is what routes its GEMMs onto the packed microkernels.
+    pub fn is_packed(&self) -> bool {
+        matches!(self, Linear::Quant(q) if q.packed.is_some())
+    }
+
     pub fn storage_bytes(&self) -> usize {
         match self {
             Linear::Float(f) => f.storage_bytes(),
             Linear::Quant(q) => q.storage_bytes(),
+        }
+    }
+
+    /// Bytes held by the packed-panel serving mirror (0 for float layers).
+    pub fn packed_bytes(&self) -> usize {
+        match self {
+            Linear::Float(_) => 0,
+            Linear::Quant(q) => q.packed_bytes(),
         }
     }
 
@@ -179,6 +194,31 @@ mod tests {
         // same grid up to possible ±1 from re-deriving range off grid ends
         let diff = a.data.iter().zip(&b.data).filter(|(x, y)| x != y).count();
         assert!(diff <= a.data.len() / 50, "grid drifted: {diff}");
+    }
+
+    #[test]
+    fn quantized_layers_are_packed_at_load() {
+        let mut g = Gen::new(13);
+        let t = tensor_f32(20, 12, &mut g);
+        let lf = Linear::from_tensor(&t).unwrap();
+        assert!(!lf.is_packed() && lf.packed_bytes() == 0);
+        // Both the post-hoc path and the stored-u8 path pack eagerly.
+        let lq = lf.quantize_now();
+        assert!(lq.is_packed() && lq.packed_bytes() > 0);
+        let Linear::Quant(q) = &lq else { panic!() };
+        let mut vq_math = vec![0u8; q.data.len()];
+        for o in 0..q.out_dim {
+            for i in 0..q.in_dim {
+                vq_math[i * q.out_dim + o] = q.data[o * q.in_dim + i];
+            }
+        }
+        let stored = Linear::Quant(crate::quant::QMatrix::from_stored(
+            &vq_math,
+            q.in_dim,
+            q.out_dim,
+            q.params[0],
+        ));
+        assert!(stored.is_packed());
     }
 
     #[test]

@@ -358,6 +358,45 @@ mod tests {
     }
 
     #[test]
+    fn quantized_step_bit_identical_across_kernel_ladder() {
+        // The packed-panel rungs (and their panel-parallel splits) must
+        // reproduce the scalar rung bit-for-bit through a full recurrent
+        // step — gates, cell update and projection included — so kernel
+        // dispatch can never perturb a served stream.
+        let mut kernels = vec![Kernel::Unrolled, Kernel::PackedScalar, Kernel::Auto];
+        #[cfg(target_arch = "x86_64")]
+        if crate::quant::gemm::avx2_available() {
+            kernels.push(Kernel::Avx2);
+            kernels.push(Kernel::PackedAvx2);
+        }
+        let mut g = Gen::new(91);
+        let l = layer(18, 10, Some(6), &mut g);
+        let lq = LstmLayer {
+            wx: l.wx.quantize_now(),
+            wh: l.wh.quantize_now(),
+            bias: l.bias.clone(),
+            wp: l.wp.as_ref().map(Linear::quantize_now),
+            cell_dim: l.cell_dim,
+        };
+        let batch = 3;
+        let xs: Vec<Vec<f32>> = (0..4).map(|_| g.vec_normal(batch * 18, 1.0)).collect();
+        let mut st_ref = lq.zero_state(batch);
+        let mut s_ref = LstmScratch::default();
+        for x in &xs {
+            lq.step(x, batch, &mut st_ref, &mut s_ref, Kernel::Scalar);
+        }
+        for &kern in &kernels {
+            let mut st = lq.zero_state(batch);
+            let mut s = LstmScratch::default();
+            for x in &xs {
+                lq.step(x, batch, &mut st, &mut s, kern);
+            }
+            assert_eq!(st.c, st_ref.c, "kernel {kern:?} drifted (c)");
+            assert_eq!(st.h, st_ref.h, "kernel {kern:?} drifted (h)");
+        }
+    }
+
+    #[test]
     fn step_lanes_leaves_inactive_lanes_untouched() {
         let mut g = Gen::new(78);
         let l = layer(10, 6, Some(3), &mut g);

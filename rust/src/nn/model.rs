@@ -235,6 +235,23 @@ impl AcousticModel {
             + self.out_bias.len() * 4
     }
 
+    /// Bytes held by the packed-panel serving mirrors across all layers —
+    /// built once at load (`Linear::from_tensor` / `quantize_now` pack
+    /// every PerMatrix matrix eagerly), so the serving hot path never
+    /// repacks.  Reported separately from [`Self::storage_bytes`]: the
+    /// mirrors are derived runtime state, not part of the model file.
+    pub fn packed_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.wx.packed_bytes()
+                    + l.wh.packed_bytes()
+                    + l.wp.as_ref().map_or(0, Linear::packed_bytes)
+            })
+            .sum::<usize>()
+            + self.out.packed_bytes()
+    }
+
     pub fn new_state(&self, batch: usize) -> ModelState {
         ModelState {
             batch,
@@ -562,6 +579,27 @@ mod tests {
         st.reset_stream(&m, 0);
         assert!(st.layers[0].c[..6].iter().all(|&v| v == 0.0));
         assert!(st.layers[0].c[6..].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn quant_model_packs_every_matrix_at_load() {
+        // Pack-once-at-load: every inner matrix of a Quant-mode model owns
+        // a packed mirror before the first step (the GEMM never repacks),
+        // and a QuantAll model packs the softmax too.
+        let mut g = Gen::new(34);
+        let qam = random_qam(2, 10, Some(5), 6, 9, &mut g);
+        let mq = AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap();
+        for l in &mq.layers {
+            assert!(l.wx.is_packed() && l.wh.is_packed());
+            assert!(l.wp.as_ref().unwrap().is_packed());
+        }
+        assert!(!mq.out.is_packed(), "Quant mode keeps the softmax float");
+        assert!(mq.packed_bytes() > 0);
+        let mall = AcousticModel::from_qam(&qam, ExecMode::QuantAll).unwrap();
+        assert!(mall.out.is_packed());
+        assert!(mall.packed_bytes() > mq.packed_bytes());
+        let mf = AcousticModel::from_qam(&qam, ExecMode::Float).unwrap();
+        assert_eq!(mf.packed_bytes(), 0);
     }
 
     #[test]

@@ -12,43 +12,230 @@
 //! precomputed per weight row ([`QMatrix::row_sums`]) and `Σx'[i]` once per
 //! input row.  Recovery divides by `qx·qw` (eq. 1) and adds the f32 bias.
 //!
-//! Three integer kernels (perf-pass ladder, EXPERIMENTS.md §Perf-L3):
-//!   - `Scalar`   — straight loop (baseline)
-//!   - `Unrolled` — 4-way unrolled u32 accumulation
-//!   - `Avx2`     — `cvtepu8→madd_epi16` 16-lane dot (runtime-detected)
+//! ## The kernel ladder
 //!
-//! plus f32 baselines (`f32` scalar / FMA) for the paper's int8-vs-float
+//! [`Kernel::Auto`] resolves via runtime CPU feature detection (one-time,
+//! overridable with the `QUANTASR_KERNEL` env var — used by the CI
+//! kernel-matrix job to force every rung):
+//!
+//! **Row-dot kernels** walk the row-major [`QMatrix::data`] one output row
+//! at a time (x is re-streamed per row; kept as baselines and as the
+//! fallback for matrices without a packed mirror):
+//! - `Scalar`   — straight loop: the bit-exactness reference
+//! - `Unrolled` — 4-way unrolled u32 accumulation (autovectorizes)
+//! - `Avx2`     — `cvtepu8→madd_epi16`, 4-row-blocked x reuse
+//!
+//! **Packed-panel kernels** stream a [`PackedQMatrix`] — weights repacked
+//! once at load into K-interleaved panels of `NR = 4` output rows (layout
+//! docs on [`PackedQMatrix`]) — so each 16-byte input chunk is loaded and
+//! widened once per 4 outputs and the whole matrix is one sequential read:
+//! - `PackedScalar`  — portable reference for the packed layout
+//! - `PackedAvx2`    — `cvtepi8→madd_epi16` over interleaved panels
+//! - `PackedVnni`    — AVX-512-VNNI `vpdpbusd`, 64 MACs/instruction
+//!   (cargo feature `vnni`: needs a toolchain with stable AVX-512
+//!   intrinsics; off by default so tier-1 builds never depend on it)
+//! - `PackedNeonDot` — aarch64 `vdotq_u32` (`dotprod`-detected)
+//!
+//! ## Bit-exactness contract
+//!
+//! Every kernel — every packed variant included, at any thread count —
+//! must produce outputs **bit-identical** to `Scalar`.  All integer dots
+//! are exact (no saturation: u8×u8 products fit `madd`'s i16×i16→i32, and
+//! the packed x86 layout stores `w−128` as i8 so `Σ x·w` is recovered
+//! exactly as `Σ x·(w−128) + 128·Σx`), and the float finish applies the
+//! same operations in the same order on every path.  This is what makes
+//! the serving engine's batch-invariance guarantee survive kernel and
+//! layout changes; property tests below enforce it for all K tails,
+//! panel remainders and lane subsets.
+//!
+//! ## Parallel panel execution
+//!
+//! Packed GEMMs above a work threshold ([`packed_threads`]) fan their
+//! panels out over scoped threads.  Panels own disjoint output columns, so
+//! the split is race-free and — since each output is computed by exactly
+//! one thread with identical arithmetic — bit-identical at any thread
+//! count.  Small (batch-1 GEMV) calls stay serial so latency never pays
+//! for thread spawn.  `QUANTASR_GEMM_THREADS` forces a count (1 = serial,
+//! 0/unset = auto).
+//!
+//! Plus f32 baselines (`f32` scalar / FMA) for the paper's int8-vs-float
 //! speedup claim (experiment E1).
 
-use crate::quant::qmatrix::QMatrix;
+use std::sync::OnceLock;
+
+use crate::quant::qmatrix::{PackedQMatrix, QMatrix};
 use crate::quant::scheme::QuantParams;
 
-/// Kernel selection for the integer GEMM.
+/// Kernel selection for the integer GEMM (see the module docs for the
+/// full ladder and the bit-exactness contract).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Kernel {
     Scalar,
     Unrolled,
     #[cfg(target_arch = "x86_64")]
     Avx2,
+    /// Packed-panel path with the portable scalar microkernel.
+    PackedScalar,
+    /// Packed-panel path, `madd_epi16` microkernel (runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    PackedAvx2,
+    /// Packed-panel path, AVX-512-VNNI `vpdpbusd` microkernel.
+    #[cfg(all(target_arch = "x86_64", feature = "vnni"))]
+    PackedVnni,
+    /// Packed-panel path, NEON `vdotq_u32` microkernel.
+    #[cfg(target_arch = "aarch64")]
+    PackedNeonDot,
     /// Best available on this CPU.
     Auto,
 }
 
+/// Runtime detection for the AVX2 rungs (results are cached by std).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// Runtime detection for the AVX-512-VNNI rung — the **single** predicate
+/// gating the unsafe `vpdpbusd` dispatch.  Add any newly required feature
+/// here and every dispatch/test/bench site inherits it.
+#[cfg(all(target_arch = "x86_64", feature = "vnni"))]
+#[inline]
+pub fn vnni_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx512f")
+        && std::arch::is_x86_feature_detected!("avx512bw")
+        && std::arch::is_x86_feature_detected!("avx512vnni")
+}
+
+/// Runtime detection for the NEON `dot` rung.
+#[cfg(target_arch = "aarch64")]
+#[inline]
+pub fn neon_dot_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("dotprod")
+}
+
 impl Kernel {
+    /// Resolve `Auto` to the best kernel this CPU supports (honoring a
+    /// `QUANTASR_KERNEL` override); explicit choices pass through.
     pub fn resolve(self) -> Kernel {
         match self {
             Kernel::Auto => {
-                #[cfg(target_arch = "x86_64")]
-                {
-                    if std::arch::is_x86_feature_detected!("avx2") {
-                        return Kernel::Avx2;
-                    }
+                if let Some(k) = forced_kernel() {
+                    return k;
                 }
-                Kernel::Unrolled
+                Kernel::best_available()
             }
             k => k,
         }
     }
+
+    /// The top of the ladder for this CPU.
+    fn best_available() -> Kernel {
+        #[cfg(target_arch = "x86_64")]
+        {
+            #[cfg(feature = "vnni")]
+            {
+                if vnni_available() {
+                    return Kernel::PackedVnni;
+                }
+            }
+            if avx2_available() {
+                return Kernel::PackedAvx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if neon_dot_available() {
+                return Kernel::PackedNeonDot;
+            }
+        }
+        Kernel::Unrolled
+    }
+
+    /// Does this kernel run the packed-panel path?
+    // match (not matches!): the SIMD arms are cfg-gated per arch/feature.
+    #[allow(clippy::match_like_matches_macro)]
+    pub fn is_packed(self) -> bool {
+        match self {
+            Kernel::PackedScalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::PackedAvx2 => true,
+            #[cfg(all(target_arch = "x86_64", feature = "vnni"))]
+            Kernel::PackedVnni => true,
+            #[cfg(target_arch = "aarch64")]
+            Kernel::PackedNeonDot => true,
+            _ => false,
+        }
+    }
+
+    /// Clamp an **explicitly requested** SIMD kernel to what this CPU can
+    /// actually execute (a forced bench/test may name a rung the host
+    /// lacks).  This is the soundness gate that lets the safe `qgemm*`
+    /// entry points call `#[target_feature]` microkernels: every kernel
+    /// that reaches a dispatch table has passed either the detection in
+    /// [`Kernel::best_available`]/[`forced_kernel`] or this check.
+    /// Detection results are cached by std, so this costs a couple of
+    /// relaxed loads per GEMM call.
+    fn checked(self) -> Kernel {
+        match self {
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 if !avx2_available() => Kernel::Unrolled,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::PackedAvx2 if !avx2_available() => Kernel::PackedScalar,
+            #[cfg(all(target_arch = "x86_64", feature = "vnni"))]
+            Kernel::PackedVnni if !vnni_available() => Kernel::PackedScalar,
+            #[cfg(target_arch = "aarch64")]
+            Kernel::PackedNeonDot if !neon_dot_available() => Kernel::PackedScalar,
+            k => k,
+        }
+    }
+}
+
+/// Row-dot kernel used when a packed kernel was selected but the matrix
+/// has no packed mirror (non-PerMatrix granularity never packs).
+fn demote_packed(k: Kernel) -> Kernel {
+    if !k.is_packed() {
+        return k;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            return Kernel::Avx2;
+        }
+    }
+    Kernel::Unrolled
+}
+
+/// `QUANTASR_KERNEL` override (parsed once): forces the named rung of the
+/// ladder wherever `Kernel::Auto` is used — the CI kernel-matrix job runs
+/// the full quant/nn test suite once per rung this way.  Unknown names or
+/// kernels this CPU/build can't run fall back to auto with a warning.
+fn forced_kernel() -> Option<Kernel> {
+    static FORCED: OnceLock<Option<Kernel>> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        let v = std::env::var("QUANTASR_KERNEL").ok()?;
+        match v.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => None,
+            "scalar" => Some(Kernel::Scalar),
+            "unrolled" => Some(Kernel::Unrolled),
+            "packed-scalar" => Some(Kernel::PackedScalar),
+            #[cfg(target_arch = "x86_64")]
+            "avx2" if avx2_available() => Some(Kernel::Avx2),
+            #[cfg(target_arch = "x86_64")]
+            "packed-avx2" if avx2_available() => Some(Kernel::PackedAvx2),
+            #[cfg(all(target_arch = "x86_64", feature = "vnni"))]
+            "packed-vnni" if vnni_available() => Some(Kernel::PackedVnni),
+            #[cfg(target_arch = "aarch64")]
+            "packed-neon-dot" if neon_dot_available() => Some(Kernel::PackedNeonDot),
+            other => {
+                eprintln!(
+                    "QUANTASR_KERNEL='{other}' unknown or unavailable on this CPU/build; \
+                     falling back to auto dispatch"
+                );
+                None
+            }
+        }
+    })
 }
 
 /// Reusable scratch buffers — keeps the hot loop allocation-free.
@@ -58,6 +245,12 @@ pub struct QScratch {
     pub xrow_sums: Vec<i32>,
     /// Per-input-row quantization params.
     pub xparams: Vec<QuantParams>,
+    /// Zero-padded copies of the quantized rows (`[rows, k_padded]`) the
+    /// packed microkernels stream — padding bytes are zero so padded
+    /// products contribute nothing (exactness invariant).
+    pub xpad: Vec<u8>,
+    /// Hoisted per-row constants for the packed path (reused per call).
+    pub(crate) rowctx: Vec<RowCtx>,
 }
 
 /// Quantize the input batch on the fly (eq. 2), **per row**: each batch row
@@ -151,12 +344,21 @@ pub fn qgemm_prequantized(
     w: &QMatrix,
     bias: Option<&[f32]>,
     y: &mut [f32],
-    scratch: &QScratch,
+    scratch: &mut QScratch,
     kernel: Kernel,
     accumulate: bool,
 ) {
     let k = w.in_dim;
-    let kernel = kernel.resolve();
+    let kernel = kernel.resolve().checked();
+    if kernel.is_packed() {
+        if let Some(pk) = w.packed.as_deref() {
+            build_xpad(scratch, k, pk.k_padded, batch, 0..batch);
+            build_rowctx(scratch, 0..batch, w, pk);
+            qgemm_packed(w, pk, bias, scratch, y, kernel, accumulate);
+            return;
+        }
+    }
+    let kernel = demote_packed(kernel);
     for i in 0..batch {
         qgemm_input_row(
             w,
@@ -175,7 +377,9 @@ pub fn qgemm_prequantized(
 /// buffer: only rows listed in `lanes` are quantized, multiplied and
 /// written into the matching rows of `y [max_lanes, out_dim]`.  Inactive
 /// lanes cost nothing — this is the serving engine's in-place hot path
-/// (no gather into a packed batch, no scatter back).
+/// (no gather into a packed batch, no scatter back).  The packed-panel
+/// path parallelizes across panels *and* computes every active lane per
+/// panel pass, so lane count scales the same way batch does.
 #[allow(clippy::too_many_arguments)]
 pub fn qgemm_lanes(
     x: &[f32],
@@ -193,7 +397,16 @@ pub fn qgemm_lanes(
     assert_eq!(w.params.len(), 1, "qgemm requires per-matrix granularity");
     quantize_input_lanes(x, max_lanes, lanes, w.in_dim, scratch);
     let k = w.in_dim;
-    let kernel = kernel.resolve();
+    let kernel = kernel.resolve().checked();
+    if kernel.is_packed() {
+        if let Some(pk) = w.packed.as_deref() {
+            build_xpad(scratch, k, pk.k_padded, max_lanes, lanes.iter().copied());
+            build_rowctx(scratch, lanes.iter().copied(), w, pk);
+            qgemm_packed(w, pk, bias, scratch, y, kernel, accumulate);
+            return;
+        }
+    }
+    let kernel = demote_packed(kernel);
     for &lane in lanes {
         qgemm_input_row(
             w,
@@ -208,9 +421,9 @@ pub fn qgemm_lanes(
     }
 }
 
-/// One quantized input row × every weight row → one output row.  Shared by
-/// the batch-contiguous and lane-strided entry points; `kernel` must
-/// already be resolved (never `Auto`).
+/// One quantized input row × every weight row → one output row (row-dot
+/// path).  Shared by the batch-contiguous and lane-strided entry points;
+/// `kernel` must already be resolved to a non-packed rung.
 #[allow(clippy::too_many_arguments)]
 fn qgemm_input_row(
     w: &QMatrix,
@@ -222,19 +435,67 @@ fn qgemm_input_row(
     kernel: Kernel,
     accumulate: bool,
 ) {
+    // Monomorphize the bias/accumulate combination once per input row so
+    // the per-output finish carries no branches (hoisted constants below).
+    match (bias, accumulate) {
+        (Some(b), false) => qgemm_input_row_mono::<true, false>(w, b, xrow, xp, xsum, yrow, kernel),
+        (Some(b), true) => qgemm_input_row_mono::<true, true>(w, b, xrow, xp, xsum, yrow, kernel),
+        (None, false) => qgemm_input_row_mono::<false, false>(w, &[], xrow, xp, xsum, yrow, kernel),
+        (None, true) => qgemm_input_row_mono::<false, true>(w, &[], xrow, xp, xsum, yrow, kernel),
+    }
+}
+
+/// The eq. (1) recovery core — THE single definition of the integer→float
+/// arithmetic, shared by the row-dot and packed-panel finishes so every
+/// path applies the identical operations in the identical order
+/// (bit-exactness contract; a change here changes all paths together).
+#[inline(always)]
+fn recover_output(raw: i64, row_sum: i32, zpx: i64, base: i64, inv: f64) -> f32 {
+    let full = raw + zpx * row_sum as i64 + base;
+    (full as f64 * inv) as f32
+}
+
+/// Per-output finish for the row-dot monomorphs.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn finish_output<const HAS_BIAS: bool, const ACC: bool>(
+    o: usize,
+    raw: i64,
+    yrow: &mut [f32],
+    row_sums: &[i32],
+    zpx: i64,
+    base: i64,
+    inv: f64,
+    bias: &[f32],
+) {
+    let mut v = recover_output(raw, row_sums[o], zpx, base, inv);
+    if HAS_BIAS {
+        v += bias[o];
+    }
+    if ACC {
+        yrow[o] += v;
+    } else {
+        yrow[o] = v;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn qgemm_input_row_mono<const HAS_BIAS: bool, const ACC: bool>(
+    w: &QMatrix,
+    bias: &[f32],
+    xrow: &[u8],
+    xp: &QuantParams,
+    xsum: i64,
+    yrow: &mut [f32],
+    kernel: Kernel,
+) {
     let wp = w.params[0];
     let k = w.in_dim;
+    // Per-input-row constants, hoisted once: the recovery scale and every
+    // term of eq. (1) that does not depend on the output row.
     let inv = 1.0 / (xp.q as f64 * wp.q as f64);
-    let kzz = k as i64 * xp.zp * wp.zp;
-    let finish = |o: usize, raw: i64, yrow: &mut [f32]| {
-        let full = raw + xp.zp * w.row_sums[o] as i64 + wp.zp * xsum + kzz;
-        let v = (full as f64 * inv) as f32 + bias.map_or(0.0, |b| b[o]);
-        if accumulate {
-            yrow[o] += v;
-        } else {
-            yrow[o] = v;
-        }
-    };
+    let zpx = xp.zp;
+    let base = wp.zp * xsum + k as i64 * xp.zp * wp.zp;
     let mut o = 0;
     // 4-row blocked AVX2 path: x is loaded/widened once per 4 rows.
     #[cfg(target_arch = "x86_64")]
@@ -252,7 +513,16 @@ fn qgemm_input_row(
                 )
             };
             for (d, &raw) in raws.iter().enumerate() {
-                finish(o + d, raw as i64, yrow);
+                finish_output::<HAS_BIAS, ACC>(
+                    o + d,
+                    raw as i64,
+                    yrow,
+                    &w.row_sums,
+                    zpx,
+                    base,
+                    inv,
+                    bias,
+                );
             }
             o += 4;
         }
@@ -264,10 +534,255 @@ fn qgemm_input_row(
             Kernel::Unrolled => dot_u8_unrolled(xrow, wrow),
             #[cfg(target_arch = "x86_64")]
             Kernel::Avx2 => unsafe { dot_u8_avx2(xrow, wrow) },
-            Kernel::Auto => unreachable!("resolved above"),
+            _ => unreachable!("packed/auto kernels are handled before the row loop"),
         } as i64;
-        finish(o, raw, yrow);
+        finish_output::<HAS_BIAS, ACC>(o, raw, yrow, &w.row_sums, zpx, base, inv, bias);
         o += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed-panel execution (the serving hot path)
+// ---------------------------------------------------------------------------
+
+/// Per-input-row constants for the packed path, computed once per GEMM
+/// (nothing here is re-derived per output element).  `base` folds the
+/// signed-storage compensation `w_offset·Σx` into the eq. (1) offsets.
+#[derive(Clone)]
+pub(crate) struct RowCtx {
+    row: usize,
+    zpx: i64,
+    inv: f64,
+    base: i64,
+}
+
+/// Fill `s.rowctx` (reused across calls — no allocation in the steady
+/// state) with the listed rows' hoisted constants.
+fn build_rowctx(
+    s: &mut QScratch,
+    rows: impl Iterator<Item = usize>,
+    w: &QMatrix,
+    pk: &PackedQMatrix,
+) {
+    let wp = w.params[0];
+    let QScratch { xrow_sums, xparams, rowctx, .. } = s;
+    rowctx.clear();
+    rowctx.extend(rows.map(|i| {
+        let xp = &xparams[i];
+        let xsum = xrow_sums[i] as i64;
+        RowCtx {
+            row: i,
+            zpx: xp.zp,
+            inv: 1.0 / (xp.q as f64 * wp.q as f64),
+            base: (pk.w_offset() + wp.zp) * xsum + w.in_dim as i64 * xp.zp * wp.zp,
+        }
+    }));
+}
+
+/// Copy each listed quantized row into the zero-padded `[rows, k_padded]`
+/// scratch the microkernels stream (padding bytes stay zero — exactness).
+fn build_xpad(
+    s: &mut QScratch,
+    k: usize,
+    k_padded: usize,
+    total_rows: usize,
+    rows: impl Iterator<Item = usize>,
+) {
+    let QScratch { xq, xpad, .. } = s;
+    xpad.resize(total_rows * k_padded, 0);
+    for i in rows {
+        let src = &xq[i * k..(i + 1) * k];
+        let dst = &mut xpad[i * k_padded..(i + 1) * k_padded];
+        dst[..k].copy_from_slice(src);
+        dst[k..].fill(0);
+    }
+}
+
+/// Raw output pointer shared across panel threads.  Sound because panels
+/// own disjoint output-column spans (see [`packed_panel_range`]).
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Everything a panel-range worker needs, by reference.
+struct PackedCtx<'a> {
+    w: &'a QMatrix,
+    pk: &'a PackedQMatrix,
+    bias: &'a [f32],
+    rowctx: &'a [RowCtx],
+    xpad: &'a [u8],
+    micro: fn(&[u8], &[u8]) -> [i32; 4],
+}
+
+/// Execute panels `p0..p1` for every row in `ctx.rowctx`.
+///
+/// # Safety
+/// `y` must be valid for writes at `row·out_dim + o` for every listed row
+/// and every live output `o` of panels `p0..p1`.  Distinct panel ranges
+/// write disjoint `o` spans, so concurrent calls over a partition of the
+/// panel space are race-free.
+unsafe fn packed_panel_range<const HAS_BIAS: bool, const ACC: bool>(
+    ctx: &PackedCtx<'_>,
+    y: SendPtr,
+    p0: usize,
+    p1: usize,
+) {
+    const NR: usize = PackedQMatrix::NR;
+    let kp = ctx.pk.k_padded;
+    let out_dim = ctx.w.out_dim;
+    for p in p0..p1 {
+        let panel = ctx.pk.panel(p);
+        let o0 = p * NR;
+        let live = NR.min(out_dim - o0);
+        for rc in ctx.rowctx {
+            let xpad = &ctx.xpad[rc.row * kp..(rc.row + 1) * kp];
+            let raws = (ctx.micro)(xpad, panel);
+            let ybase = y.0.add(rc.row * out_dim + o0);
+            for (d, &raw) in raws.iter().take(live).enumerate() {
+                let o = o0 + d;
+                let mut v =
+                    recover_output(raw as i64, ctx.w.row_sums[o], rc.zpx, rc.base, rc.inv);
+                if HAS_BIAS {
+                    v += ctx.bias[o];
+                }
+                if ACC {
+                    *ybase.add(d) += v;
+                } else {
+                    *ybase.add(d) = v;
+                }
+            }
+        }
+    }
+}
+
+/// How many threads a packed GEMM of `macs` multiply-accumulates over
+/// `panels` panels should use.  Small calls (batch-1 GEMV) stay serial —
+/// scoped-thread spawn costs tens of µs, which would regress single-stream
+/// latency — so parallelism only kicks in once the work dwarfs the spawn.
+fn packed_threads(macs: usize, panels: usize) -> usize {
+    // ~2M MACs ≈ several hundred µs on the scalar rung; cheap calls below
+    // this never pay thread overhead (batch-1 512×2048 ≈ 1M stays serial).
+    const PAR_MIN_MACS: usize = 2 * 1024 * 1024;
+    if panels < 2 {
+        return 1;
+    }
+    if let Some(n) = forced_gemm_threads() {
+        return n.clamp(1, panels);
+    }
+    if macs < PAR_MIN_MACS {
+        return 1;
+    }
+    available_cpus().min(panels).min(8)
+}
+
+fn available_cpus() -> usize {
+    static CPUS: OnceLock<usize> = OnceLock::new();
+    *CPUS.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// `QUANTASR_GEMM_THREADS` override (parsed once): 0/unset = auto.
+/// Unparseable values warn (like [`forced_kernel`]) — a silent fallback
+/// here would quietly turn a "pinned serial" bench into a threaded one.
+fn forced_gemm_threads() -> Option<usize> {
+    static FORCED: OnceLock<Option<usize>> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        let v = std::env::var("QUANTASR_GEMM_THREADS").ok()?;
+        match v.trim().parse::<usize>() {
+            Ok(0) => None,
+            Ok(n) => Some(n),
+            Err(_) => {
+                eprintln!(
+                    "QUANTASR_GEMM_THREADS='{}' is not a thread count; using auto",
+                    v.trim()
+                );
+                None
+            }
+        }
+    })
+}
+
+/// Microkernel for a resolved packed kernel.  The SIMD arms are only
+/// reachable after runtime feature detection — auto dispatch detects in
+/// [`Kernel::best_available`]/[`forced_kernel`], and explicitly requested
+/// kernels pass through [`Kernel::checked`] at the `qgemm*` entry points —
+/// which is what makes the `unsafe` calls sound.
+fn packed_micro(kernel: Kernel, pk: &PackedQMatrix) -> fn(&[u8], &[u8]) -> [i32; 4] {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::PackedAvx2 => |x, p| unsafe { packed_dot4_avx2(x, p) },
+        #[cfg(all(target_arch = "x86_64", feature = "vnni"))]
+        Kernel::PackedVnni => |x, p| unsafe { packed_dot4_vnni(x, p) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::PackedNeonDot => |x, p| unsafe { packed_dot4_neon_dot(x, p) },
+        _ => {
+            if pk.signed {
+                packed_dot4_scalar_s8
+            } else {
+                packed_dot4_scalar_u8
+            }
+        }
+    }
+}
+
+/// Packed-panel GEMM over the listed rows: panel-major loop order (each
+/// NR-row panel is streamed once and dotted against every input row while
+/// it is cache-hot — at batch 8 the old row-dot path re-streamed the whole
+/// matrix per row), parallelized across panels above the work threshold.
+#[allow(clippy::too_many_arguments)]
+fn qgemm_packed(
+    w: &QMatrix,
+    pk: &PackedQMatrix,
+    bias: Option<&[f32]>,
+    scratch: &QScratch,
+    y: &mut [f32],
+    kernel: Kernel,
+    accumulate: bool,
+) {
+    let rowctx: &[RowCtx] = &scratch.rowctx;
+    if rowctx.is_empty() || w.out_dim == 0 {
+        return;
+    }
+    debug_assert_eq!(pk.signed, cfg!(target_arch = "x86_64"));
+    debug_assert_eq!(pk.out_dim, w.out_dim);
+    debug_assert_eq!(pk.in_dim, w.in_dim);
+    let ctx = PackedCtx {
+        w,
+        pk,
+        bias: bias.unwrap_or(&[]),
+        rowctx,
+        xpad: &scratch.xpad,
+        micro: packed_micro(kernel, pk),
+    };
+    let has_bias = bias.is_some();
+    let panels = pk.panels;
+    let macs = rowctx.len() * w.out_dim * w.in_dim;
+    let nthreads = packed_threads(macs, panels);
+    let yptr = SendPtr(y.as_mut_ptr());
+    // SAFETY: every (row, output) cell is written by exactly one panel and
+    // the panel ranges below partition [0, panels) — no write aliases.
+    let run = |p0: usize, p1: usize| unsafe {
+        match (has_bias, accumulate) {
+            (true, true) => packed_panel_range::<true, true>(&ctx, yptr, p0, p1),
+            (true, false) => packed_panel_range::<true, false>(&ctx, yptr, p0, p1),
+            (false, true) => packed_panel_range::<false, true>(&ctx, yptr, p0, p1),
+            (false, false) => packed_panel_range::<false, false>(&ctx, yptr, p0, p1),
+        }
+    };
+    if nthreads <= 1 {
+        run(0, panels);
+    } else {
+        let chunk = panels.div_ceil(nthreads);
+        std::thread::scope(|s| {
+            for t in 0..nthreads {
+                let (p0, p1) = (t * chunk, ((t + 1) * chunk).min(panels));
+                if p0 >= p1 {
+                    break;
+                }
+                let run = &run;
+                s.spawn(move || run(p0, p1));
+            }
+        });
     }
 }
 
@@ -345,7 +860,7 @@ pub fn qgemm_any_granularity(
 }
 
 // ---------------------------------------------------------------------------
-// u8·u8 → i32 dot kernels
+// u8·u8 → i32 dot kernels (row-dot rungs)
 // ---------------------------------------------------------------------------
 
 #[inline]
@@ -431,8 +946,9 @@ pub unsafe fn dot_u8_avx2(a: &[u8], b: &[u8]) -> i32 {
 }
 
 /// AVX2, 4 weight rows at once sharing the x loads/widening — the GEMV hot
-/// path (perf pass L3.2): loading + widening x is half of the 1-row
-/// kernel's work, so amortizing it over 4 output rows raises throughput.
+/// path before panel packing (perf pass L3.2), kept as the fallback for
+/// unpacked matrices: loading + widening x is half of the 1-row kernel's
+/// work, so amortizing it over 4 output rows raises throughput.
 ///
 /// # Safety
 /// Caller must ensure AVX2 is available.
@@ -465,6 +981,177 @@ pub unsafe fn dot4_u8_avx2(x: &[u8], w: [&[u8]; 4]) -> [i32; 4] {
         for j in i..n {
             out[r] += x[j] as i32 * w[r][j] as i32;
         }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Packed-panel microkernels: one input row × one NR-row panel → NR dots
+// ---------------------------------------------------------------------------
+
+/// Packed-panel scalar microkernel over **signed** (w−128 as i8) panels —
+/// the portable reference every SIMD microkernel is property-tested
+/// against.  `xpad` is the zero-padded quantized input row (`k_padded`
+/// bytes); returns the 4 partial dots `Σ x·(w−128)` **without** the
+/// `128·Σx` compensation (the caller's finish adds it via
+/// [`PackedQMatrix::w_offset`]).
+pub fn packed_dot4_scalar_s8(xpad: &[u8], panel: &[u8]) -> [i32; 4] {
+    packed_dot4_scalar_impl::<true>(xpad, panel)
+}
+
+/// As [`packed_dot4_scalar_s8`] for **unsigned** panels (the non-x86
+/// layout, where no compensation is needed).
+pub fn packed_dot4_scalar_u8(xpad: &[u8], panel: &[u8]) -> [i32; 4] {
+    packed_dot4_scalar_impl::<false>(xpad, panel)
+}
+
+fn packed_dot4_scalar_impl<const SIGNED: bool>(xpad: &[u8], panel: &[u8]) -> [i32; 4] {
+    const NR: usize = PackedQMatrix::NR;
+    const C: usize = PackedQMatrix::K_CHUNK;
+    debug_assert_eq!(panel.len(), xpad.len() * NR);
+    debug_assert_eq!(xpad.len() % C, 0);
+    let mut acc = [0i32; NR];
+    for (kb, xchunk) in xpad.chunks_exact(C).enumerate() {
+        let block = &panel[kb * NR * C..(kb + 1) * NR * C];
+        for (r, wrow) in block.chunks_exact(C).enumerate() {
+            let mut s = 0i32;
+            for (&xv, &wv) in xchunk.iter().zip(wrow) {
+                let w = if SIGNED { wv as i8 as i32 } else { wv as i32 };
+                s += xv as i32 * w;
+            }
+            acc[r] += s;
+        }
+    }
+    acc
+}
+
+/// Packed-panel AVX2 microkernel: per 64-byte block the 16 input bytes are
+/// loaded and widened **once** (`cvtepu8`) and madd'ed against the four
+/// interleaved signed weight rows (`cvtepi8` + `madd_epi16`).  Exact:
+/// |x| ≤ 255 and |w−128| ≤ 128 keep every i16 product inside the
+/// i16×i16→i32 madd — no saturation, bit-identical to the scalar rung.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available.  Packed invariants:
+/// `panel.len() == 4·xpad.len()` and `xpad.len() % 16 == 0`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn packed_dot4_avx2(xpad: &[u8], panel: &[u8]) -> [i32; 4] {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(panel.len(), xpad.len() * 4);
+    debug_assert_eq!(xpad.len() % 16, 0);
+    let kp = xpad.len();
+    let mut acc = [_mm256_setzero_si256(); 4];
+    let mut kb = 0;
+    while kb < kp {
+        let xv =
+            _mm256_cvtepu8_epi16(_mm_loadu_si128(xpad.as_ptr().add(kb) as *const __m128i));
+        let bp = panel.as_ptr().add(kb * 4);
+        for (r, a) in acc.iter_mut().enumerate() {
+            let wv = _mm256_cvtepi8_epi16(_mm_loadu_si128(bp.add(r * 16) as *const __m128i));
+            *a = _mm256_add_epi32(*a, _mm256_madd_epi16(xv, wv));
+        }
+        kb += 16;
+    }
+    let mut out = [0i32; 4];
+    for (r, &a) in acc.iter().enumerate() {
+        let hi = _mm256_extracti128_si256(a, 1);
+        let lo = _mm256_castsi256_si128(a);
+        let s = _mm_add_epi32(hi, lo);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_01_10_11));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
+        out[r] = _mm_cvtsi128_si32(s);
+    }
+    out
+}
+
+/// Packed-panel AVX-512-VNNI microkernel: one 64-byte block is one
+/// `vpdpbusd` (u8 activations × s8 weights, 4-byte groups accumulated
+/// straight into i32 lanes — 64 MACs per instruction, no widening, no
+/// saturation).  The input chunk is broadcast to all four 128-bit lanes so
+/// i32 lane group `r` accumulates panel row `r`.  Four independent
+/// accumulator chains hide the instruction latency.
+///
+/// # Safety
+/// Caller must ensure AVX-512 F/BW/VNNI are available.  Packed invariants
+/// as in [`packed_dot4_avx2`].
+#[cfg(all(target_arch = "x86_64", feature = "vnni"))]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+pub unsafe fn packed_dot4_vnni(xpad: &[u8], panel: &[u8]) -> [i32; 4] {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(panel.len(), xpad.len() * 4);
+    debug_assert_eq!(xpad.len() % 16, 0);
+    let kp = xpad.len();
+    let mut acc = [_mm512_setzero_si512(); 4];
+    let mut kb = 0;
+    while kb + 64 <= kp {
+        for (u, a) in acc.iter_mut().enumerate() {
+            let off = kb + u * 16;
+            let xv = _mm512_broadcast_i32x4(_mm_loadu_si128(
+                xpad.as_ptr().add(off) as *const __m128i
+            ));
+            let wv = std::ptr::read_unaligned(panel.as_ptr().add(off * 4) as *const __m512i);
+            *a = _mm512_dpbusd_epi32(*a, xv, wv);
+        }
+        kb += 64;
+    }
+    while kb < kp {
+        let xv = _mm512_broadcast_i32x4(_mm_loadu_si128(
+            xpad.as_ptr().add(kb) as *const __m128i
+        ));
+        let wv = std::ptr::read_unaligned(panel.as_ptr().add(kb * 4) as *const __m512i);
+        acc[0] = _mm512_dpbusd_epi32(acc[0], xv, wv);
+        kb += 16;
+    }
+    let acc = _mm512_add_epi32(
+        _mm512_add_epi32(acc[0], acc[1]),
+        _mm512_add_epi32(acc[2], acc[3]),
+    );
+    // i32 lane group r (one 128-bit lane) holds panel row r's partials.
+    let mut out = [0i32; 4];
+    for (r, o) in out.iter_mut().enumerate() {
+        let q = match r {
+            0 => _mm512_extracti32x4_epi32(acc, 0),
+            1 => _mm512_extracti32x4_epi32(acc, 1),
+            2 => _mm512_extracti32x4_epi32(acc, 2),
+            _ => _mm512_extracti32x4_epi32(acc, 3),
+        };
+        let s = _mm_add_epi32(q, _mm_shuffle_epi32(q, 0b00_01_10_11));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
+        *o = _mm_cvtsi128_si32(s);
+    }
+    out
+}
+
+/// Packed-panel NEON `dot`-product microkernel: `vdotq_u32` accumulates
+/// 4-byte u8×u8 groups straight into u32 lanes (exact — all operands
+/// non-negative and K·255² fits i32 at model scales; the aarch64 packed
+/// layout stays unsigned precisely so `udot` applies).
+///
+/// # Safety
+/// Caller must ensure the `dotprod` feature is available.  Packed
+/// invariants as in [`packed_dot4_avx2`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "dotprod")]
+pub unsafe fn packed_dot4_neon_dot(xpad: &[u8], panel: &[u8]) -> [i32; 4] {
+    use std::arch::aarch64::*;
+    debug_assert_eq!(panel.len(), xpad.len() * 4);
+    debug_assert_eq!(xpad.len() % 16, 0);
+    let kp = xpad.len();
+    let mut acc = [vdupq_n_u32(0); 4];
+    let mut kb = 0;
+    while kb < kp {
+        let xv = vld1q_u8(xpad.as_ptr().add(kb));
+        let bp = panel.as_ptr().add(kb * 4);
+        for (r, a) in acc.iter_mut().enumerate() {
+            let wv = vld1q_u8(bp.add(r * 16));
+            *a = vdotq_u32(*a, xv, wv);
+        }
+        kb += 16;
+    }
+    let mut out = [0i32; 4];
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = vaddvq_u32(acc[r]) as i32;
     }
     out
 }
@@ -661,6 +1348,27 @@ mod tests {
     use crate::quant::Granularity;
     use crate::util::prop::{forall, Gen};
 
+    /// Every kernel this CPU/build can actually run (the full ladder the
+    /// CI kernel-matrix forces one rung at a time).
+    fn available_kernels() -> Vec<Kernel> {
+        let mut ks = vec![Kernel::Scalar, Kernel::Unrolled, Kernel::PackedScalar];
+        #[cfg(target_arch = "x86_64")]
+        if avx2_available() {
+            ks.push(Kernel::Avx2);
+            ks.push(Kernel::PackedAvx2);
+        }
+        #[cfg(all(target_arch = "x86_64", feature = "vnni"))]
+        if vnni_available() {
+            ks.push(Kernel::PackedVnni);
+        }
+        #[cfg(target_arch = "aarch64")]
+        if neon_dot_available() {
+            ks.push(Kernel::PackedNeonDot);
+        }
+        ks.push(Kernel::Auto);
+        ks
+    }
+
     /// Float reference of the full quantized pipeline: recover weights and
     /// recovered-quantized inputs, multiply in f64.
     fn reference(x: &[f32], batch: usize, w: &QMatrix, bias: Option<&[f32]>) -> Vec<f32> {
@@ -699,26 +1407,119 @@ mod tests {
             let w = QMatrix::from_f32_math_layout(&wf, in_dim, out_dim, Granularity::PerMatrix);
             let want = reference(&x, batch, &w, Some(&bias));
             let mut scratch = QScratch::default();
-            let kernels: &[Kernel] = {
-                #[cfg(target_arch = "x86_64")]
-                {
-                    &[Kernel::Scalar, Kernel::Unrolled, Kernel::Avx2]
-                }
-                #[cfg(not(target_arch = "x86_64"))]
-                {
-                    &[Kernel::Scalar, Kernel::Unrolled]
-                }
-            };
-            for &kern in kernels {
-                #[cfg(target_arch = "x86_64")]
-                if kern == Kernel::Avx2 && !std::arch::is_x86_feature_detected!("avx2") {
-                    continue;
-                }
+            for kern in available_kernels() {
                 let mut y = vec![0f32; batch * out_dim];
                 qgemm(&x, batch, &w, Some(&bias), &mut y, &mut scratch, kern, false);
                 assert_close(&y, &want, 1e-4);
             }
         });
+    }
+
+    #[test]
+    fn all_kernels_bit_identical_k_sweep() {
+        // Satellite contract: every rung of the ladder — packed variants
+        // included — must be bit-identical to Scalar for every K in
+        // 0..=130 (crossing every chunk/unroll tail boundary) and for
+        // out_dims leaving 1..=3 live rows in the last packed panel.
+        let kernels = available_kernels();
+        let mut g = Gen::new(0x5EED);
+        for k in 0..=130usize {
+            for &out_dim in &[1usize, 3, 4, 5, 6, 9] {
+                let batch = 2;
+                let x = g.vec_normal(batch * k, 1.0);
+                let wf = g.vec_normal(k * out_dim, 0.5);
+                let bias = g.vec_normal(out_dim, 0.2);
+                let w =
+                    QMatrix::from_f32_math_layout(&wf, k, out_dim, Granularity::PerMatrix);
+                let mut s = QScratch::default();
+                let mut want = vec![0f32; batch * out_dim];
+                qgemm(&x, batch, &w, Some(&bias), &mut want, &mut s, Kernel::Scalar, false);
+                for &kern in &kernels {
+                    let mut y = vec![0f32; batch * out_dim];
+                    qgemm(&x, batch, &w, Some(&bias), &mut y, &mut s, kern, false);
+                    assert!(
+                        y == want,
+                        "kernel {kern:?} k={k} out={out_dim}: not bit-identical"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_microkernels_match_scalar_dot() {
+        // Microkernel-level exactness: packed partial dots, plus the
+        // w_offset·Σx compensation, reconstruct the u8 reference dot for
+        // every panel (including K tails and remainder rows).
+        forall("packed micro", 60, 0x9AC6, |g: &mut Gen| {
+            let k = g.usize_in(0, 130);
+            let out_dim = g.usize_in(1, 9);
+            let wf = g.vec_normal(k * out_dim, 0.5);
+            let w = QMatrix::from_f32_math_layout(&wf, k, out_dim, Granularity::PerMatrix);
+            let pk = w.packed.as_deref().expect("PerMatrix packs");
+            let x: Vec<u8> = (0..k).map(|_| g.usize_in(0, 255) as u8).collect();
+            let xsum: i64 = x.iter().map(|&v| v as i64).sum();
+            let mut xpad = vec![0u8; pk.k_padded];
+            xpad[..k].copy_from_slice(&x);
+            for p in 0..pk.panels {
+                let panel = pk.panel(p);
+                let scalar = if pk.signed {
+                    packed_dot4_scalar_s8(&xpad, panel)
+                } else {
+                    packed_dot4_scalar_u8(&xpad, panel)
+                };
+                for (r, &got) in scalar.iter().enumerate() {
+                    let o = p * PackedQMatrix::NR + r;
+                    if o >= out_dim {
+                        continue;
+                    }
+                    let want = dot_u8_scalar(&x, &w.data[o * k..(o + 1) * k]) as i64;
+                    assert_eq!(
+                        got as i64 + pk.w_offset() * xsum,
+                        want,
+                        "panel {p} row {r} (k={k})"
+                    );
+                }
+                #[cfg(target_arch = "x86_64")]
+                if avx2_available() {
+                    assert_eq!(unsafe { packed_dot4_avx2(&xpad, panel) }, scalar);
+                }
+                #[cfg(all(target_arch = "x86_64", feature = "vnni"))]
+                if vnni_available() {
+                    assert_eq!(unsafe { packed_dot4_vnni(&xpad, panel) }, scalar);
+                }
+                #[cfg(target_arch = "aarch64")]
+                if neon_dot_available() {
+                    assert_eq!(unsafe { packed_dot4_neon_dot(&xpad, panel) }, scalar);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn packed_parallel_matches_serial_bitwise() {
+        // 4·512·2048 = 4M MACs — 2× the panel-parallel threshold, with
+        // clear margin so a threshold tweak can't silently demote this
+        // back to a serial-path re-test.  The threaded split must stay
+        // bit-identical to the scalar rung.
+        let mut g = Gen::new(0x9A11);
+        let (batch, k, out) = (4usize, 512usize, 2048usize);
+        assert!(
+            batch * k * out >= 2 * 2 * 1024 * 1024,
+            "shape no longer clears the parallel threshold with margin"
+        );
+        let x = g.vec_normal(batch * k, 1.0);
+        let wf = g.vec_normal(k * out, 0.3);
+        let w = QMatrix::from_f32_math_layout(&wf, k, out, Granularity::PerMatrix);
+        let bias = g.vec_normal(out, 0.2);
+        let mut s = QScratch::default();
+        let mut y_scalar = vec![0f32; batch * out];
+        qgemm(&x, batch, &w, Some(&bias), &mut y_scalar, &mut s, Kernel::Scalar, false);
+        for kern in available_kernels() {
+            let mut y = vec![0f32; batch * out];
+            qgemm(&x, batch, &w, Some(&bias), &mut y, &mut s, kern, false);
+            assert!(y == y_scalar, "kernel {kern:?} diverged under panel parallelism");
+        }
     }
 
     #[test]
@@ -750,16 +1551,18 @@ mod tests {
         let w2f = g.vec_normal(k2 * out, 0.4);
         let w1 = QMatrix::from_f32_math_layout(&w1f, k1, out, Granularity::PerMatrix);
         let w2 = QMatrix::from_f32_math_layout(&w2f, k2, out, Granularity::PerMatrix);
-        let mut s = QScratch::default();
-        let mut y = vec![0f32; batch * out];
-        qgemm(&x1, batch, &w1, None, &mut y, &mut s, Kernel::Auto, false);
-        qgemm(&x2, batch, &w2, None, &mut y, &mut s, Kernel::Auto, true);
-        let mut y1 = vec![0f32; batch * out];
-        let mut y2 = vec![0f32; batch * out];
-        qgemm(&x1, batch, &w1, None, &mut y1, &mut s, Kernel::Auto, false);
-        qgemm(&x2, batch, &w2, None, &mut y2, &mut s, Kernel::Auto, false);
-        for i in 0..y.len() {
-            assert!((y[i] - (y1[i] + y2[i])).abs() < 1e-5);
+        for kern in available_kernels() {
+            let mut s = QScratch::default();
+            let mut y = vec![0f32; batch * out];
+            qgemm(&x1, batch, &w1, None, &mut y, &mut s, kern, false);
+            qgemm(&x2, batch, &w2, None, &mut y, &mut s, kern, true);
+            let mut y1 = vec![0f32; batch * out];
+            let mut y2 = vec![0f32; batch * out];
+            qgemm(&x1, batch, &w1, None, &mut y1, &mut s, kern, false);
+            qgemm(&x2, batch, &w2, None, &mut y2, &mut s, kern, false);
+            for i in 0..y.len() {
+                assert!((y[i] - (y1[i] + y2[i])).abs() < 1e-5, "kernel {kern:?}");
+            }
         }
     }
 
@@ -818,8 +1621,9 @@ mod tests {
     fn qgemm_lanes_bit_identical_to_solo_rows() {
         // The per-row quantization contract: a lane's output is a pure
         // function of its own input row — bit-identical whether the lane
-        // runs alone, packed with co-riders, or via the batch entry point.
-        forall("qgemm lanes invariance", 40, 0x1A7E5, |g: &mut Gen| {
+        // runs alone, packed with co-riders, or via the batch entry point,
+        // on every rung of the kernel ladder.
+        forall("qgemm lanes invariance", 30, 0x1A7E5, |g: &mut Gen| {
             let max_lanes = g.usize_in(1, 8);
             let in_dim = g.usize_in(1, 60);
             let out_dim = g.usize_in(1, 30);
@@ -831,37 +1635,41 @@ mod tests {
             let lanes: Vec<usize> =
                 (0..max_lanes).filter(|_| g.bool()).collect();
             let lanes = if lanes.is_empty() { vec![g.usize_in(0, max_lanes - 1)] } else { lanes };
-            let mut scratch = QScratch::default();
-            let mut y = vec![f32::NAN; max_lanes * out_dim];
-            qgemm_lanes(&x, max_lanes, &lanes, &w, Some(&bias), &mut y, &mut scratch, Kernel::Auto, false);
-            for &lane in &lanes {
-                // solo run of the same row through the batch-1 entry point
-                let mut y1 = vec![0f32; out_dim];
-                qgemm(
-                    &x[lane * in_dim..(lane + 1) * in_dim],
-                    1,
-                    &w,
-                    Some(&bias),
-                    &mut y1,
-                    &mut QScratch::default(),
-                    Kernel::Auto,
-                    false,
+            for kern in available_kernels() {
+                let mut scratch = QScratch::default();
+                let mut y = vec![f32::NAN; max_lanes * out_dim];
+                qgemm_lanes(
+                    &x, max_lanes, &lanes, &w, Some(&bias), &mut y, &mut scratch, kern, false,
                 );
-                for o in 0..out_dim {
-                    assert!(
-                        y[lane * out_dim + o] == y1[o],
-                        "lane {lane} o {o}: {} != {} (not bit-identical)",
-                        y[lane * out_dim + o],
-                        y1[o]
+                for &lane in &lanes {
+                    // solo run of the same row through the batch-1 entry point
+                    let mut y1 = vec![0f32; out_dim];
+                    qgemm(
+                        &x[lane * in_dim..(lane + 1) * in_dim],
+                        1,
+                        &w,
+                        Some(&bias),
+                        &mut y1,
+                        &mut QScratch::default(),
+                        kern,
+                        false,
                     );
+                    for o in 0..out_dim {
+                        assert!(
+                            y[lane * out_dim + o] == y1[o],
+                            "kernel {kern:?} lane {lane} o {o}: {} != {} (not bit-identical)",
+                            y[lane * out_dim + o],
+                            y1[o]
+                        );
+                    }
                 }
-            }
-            // inactive lanes untouched
-            for lane in 0..max_lanes {
-                if !lanes.contains(&lane) {
-                    assert!(y[lane * out_dim..(lane + 1) * out_dim]
-                        .iter()
-                        .all(|v| v.is_nan()));
+                // inactive lanes untouched
+                for lane in 0..max_lanes {
+                    if !lanes.contains(&lane) {
+                        assert!(y[lane * out_dim..(lane + 1) * out_dim]
+                            .iter()
+                            .all(|v| v.is_nan()));
+                    }
                 }
             }
         });

@@ -4,9 +4,12 @@
 //!   rounding-consistent zero point that cancels bias error, plus the
 //!   deliberately *inconsistent* naive variant used by the E2 ablation.
 //! - [`qmatrix`] — quantized weight matrices at the paper's granularity
-//!   choices (per-matrix, per-row, sub-block).
-//! - [`gemm`] — the hot path: f32 GEMM baseline and u8×u8→i32 integer
-//!   GEMM (scalar, blocked, and AVX2 `maddubs` kernels).
+//!   choices (per-matrix, per-row, sub-block), plus the packed-panel
+//!   serving mirror ([`PackedQMatrix`]) built once at load.
+//! - [`gemm`] — the hot path: f32 GEMM baseline and the u8×u8→i32 integer
+//!   kernel ladder (scalar/unrolled/AVX2 row-dot rungs and the
+//!   packed-panel `madd_epi16` / AVX-512-VNNI `vpdpbusd` / NEON `dot`
+//!   microkernels with runtime dispatch and panel-parallel execution).
 //! - [`error`] — precision/bias error measurement (E2/E3 experiments).
 
 pub mod error;
@@ -14,5 +17,5 @@ pub mod gemm;
 pub mod qmatrix;
 pub mod scheme;
 
-pub use qmatrix::{Granularity, QMatrix};
+pub use qmatrix::{Granularity, PackedQMatrix, QMatrix};
 pub use scheme::{QuantParams, SCALE};

@@ -6,6 +6,13 @@
 //! — the natural layout for the GEMV-style inner loops of streaming
 //! inference (batch 1–16).
 //!
+//! On top of the row-major grid, per-matrix-granularity weights also carry
+//! a [`PackedQMatrix`] — a panel-packed mirror built **once** at
+//! load/quantization time that the register-blocked GEMM microkernels in
+//! [`crate::quant::gemm`] stream instead of walking rows one dot product
+//! at a time (gemmlowp-style packing; see the layout docs on
+//! [`PackedQMatrix`]).
+//!
 //! Granularity (paper §3.1 "our scheme can be applied at a given level of
 //! granularity"): the paper settles on per-weight-matrix; [`Granularity`]
 //! also implements per-row (per output neuron) and fixed sub-blocks for the
@@ -37,6 +44,121 @@ pub struct QMatrix {
     /// Per output row: Σ_k V'[o, k] — precomputed for the eq. (1) offset
     /// algebra in the integer GEMM (only valid for PerMatrix).
     pub row_sums: Vec<i32>,
+    /// Panel-packed serving mirror (PerMatrix only), built once at
+    /// construction so the hot path never repacks.  `None` for the finer
+    /// ablation granularities, which run the slow path anyway.
+    pub packed: Option<Box<PackedQMatrix>>,
+}
+
+/// Packed-panel mirror of a [`QMatrix`] for the register-blocked GEMM
+/// microkernels.  Built **once** (model load / post-hoc quantization);
+/// the row-major grid in [`QMatrix::data`] stays authoritative for
+/// recovery, serialization and the granularity ablations.
+///
+/// # Layout
+///
+/// Output rows are grouped into panels of [`PackedQMatrix::NR`] rows and K
+/// is zero-padded up to a multiple of [`PackedQMatrix::K_CHUNK`], then
+/// interleaved K-major within each panel:
+///
+/// ```text
+/// panel p  (rows o0 = p·NR .. o0+NR), K-block kb (K_CHUNK columns):
+///   w'[o0+0][kb..kb+16] | w'[o0+1][kb..kb+16] | w'[o0+2][kb..kb+16] | w'[o0+3][kb..kb+16]
+/// ```
+///
+/// Each 64-byte block is exactly one microkernel step — a single zmm load
+/// for the AVX-512-VNNI `vpdpbusd` kernel, four xmm loads for the AVX2
+/// `madd_epi16` and NEON `dot` kernels — and successive blocks (and
+/// successive panels) are contiguous, so the whole weight matrix streams
+/// through the kernel as one hardware-prefetch-friendly pass.  K-blocking
+/// is the interleave unit: an input row's padded K bytes stay L1-resident
+/// while a panel streams by, so no second-level blocking is needed at the
+/// GEMV/small-batch shapes this engine serves.
+///
+/// # Signedness
+///
+/// On x86_64, `w' = w − 128` stored as i8 (`signed == true`): both
+/// `madd_epi16` (cvtepi8 widening) and `vpdpbusd` (u8×s8) consume a signed
+/// B operand.  The GEMM adds the exact integer compensation `128·Σx` back
+/// (see `quant::gemm`), so packed results are **bit-identical** to the u8
+/// reference kernels.  On other architectures `w' = w` is kept unsigned
+/// (`signed == false`, compensation 0) — the NEON `vdot` kernel is u8×u8.
+///
+/// Zero padding (K tail and panel-remainder rows) is exact: padded input
+/// bytes are zero, so padded products contribute nothing, and panel
+/// remainder outputs are computed in registers but never written back.
+#[derive(Clone, Debug)]
+pub struct PackedQMatrix {
+    pub out_dim: usize,
+    pub in_dim: usize,
+    /// `in_dim` rounded up to a multiple of [`Self::K_CHUNK`].
+    pub k_padded: usize,
+    /// Number of NR-row panels (`out_dim.div_ceil(NR)`).
+    pub panels: usize,
+    /// true ⇒ bytes hold `(w − 128)` as i8; false ⇒ the raw u8 grid.
+    pub signed: bool,
+    /// `panels · NR · k_padded` bytes in the layout above.
+    pub data: Vec<u8>,
+}
+
+impl PackedQMatrix {
+    /// Output rows per panel (microkernel register-block height).
+    pub const NR: usize = 4;
+    /// K-interleave unit in bytes (one 128-bit lane of input).
+    pub const K_CHUNK: usize = 16;
+
+    /// Pack a PerMatrix-quantized matrix (one-time conversion).
+    pub fn pack(m: &QMatrix) -> Self {
+        let (out_dim, in_dim) = (m.out_dim, m.in_dim);
+        let signed = cfg!(target_arch = "x86_64");
+        let k_padded = in_dim.div_ceil(Self::K_CHUNK) * Self::K_CHUNK;
+        let panels = out_dim.div_ceil(Self::NR);
+        let mut data = vec![0u8; panels * Self::NR * k_padded];
+        for p in 0..panels {
+            let base = p * Self::NR * k_padded;
+            for kb in (0..k_padded).step_by(Self::K_CHUNK) {
+                for r in 0..Self::NR {
+                    let o = p * Self::NR + r;
+                    if o >= out_dim {
+                        continue; // remainder rows stay zero
+                    }
+                    let k_end = in_dim.min(kb + Self::K_CHUNK);
+                    if k_end <= kb {
+                        continue; // K tail stays zero
+                    }
+                    let dst = base + kb * Self::NR + r * Self::K_CHUNK;
+                    let src = &m.data[o * in_dim + kb..o * in_dim + k_end];
+                    for (d, &w) in data[dst..dst + (k_end - kb)].iter_mut().zip(src) {
+                        *d = if signed { w ^ 0x80 } else { w };
+                    }
+                }
+            }
+        }
+        PackedQMatrix { out_dim, in_dim, k_padded, panels, signed, data }
+    }
+
+    /// The integer the GEMM must add back per output as `w_offset · Σx`
+    /// to recover the true u8 dot from a packed (possibly shifted) dot.
+    #[inline]
+    pub fn w_offset(&self) -> i64 {
+        if self.signed {
+            128
+        } else {
+            0
+        }
+    }
+
+    /// One panel's bytes (`NR · k_padded`).
+    #[inline]
+    pub fn panel(&self, p: usize) -> &[u8] {
+        let stride = Self::NR * self.k_padded;
+        &self.data[p * stride..(p + 1) * stride]
+    }
+
+    /// Bytes held by the packed mirror.
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len()
+    }
 }
 
 impl QMatrix {
@@ -127,7 +249,12 @@ impl QMatrix {
                     .sum()
             })
             .collect();
-        QMatrix { out_dim, in_dim, granularity, data, params, row_sums }
+        let mut m =
+            QMatrix { out_dim, in_dim, granularity, data, params, row_sums, packed: None };
+        if granularity == Granularity::PerMatrix {
+            m.packed = Some(Box::new(PackedQMatrix::pack(&m)));
+        }
+        m
     }
 
     /// Build directly from pre-quantized V' bytes (as stored in .qam files;
@@ -154,14 +281,17 @@ impl QMatrix {
                     .sum()
             })
             .collect();
-        QMatrix {
+        let mut m = QMatrix {
             out_dim,
             in_dim,
             granularity: Granularity::PerMatrix,
             data,
             params: vec![params],
             row_sums,
-        }
+            packed: None,
+        };
+        m.packed = Some(Box::new(PackedQMatrix::pack(&m)));
+        m
     }
 
     /// Recover to float, **math layout** `[in, out]` (for cross-checks).
@@ -190,10 +320,18 @@ impl QMatrix {
     }
 
     /// Weight-storage bytes (the paper's 4× memory claim: u8 data + params).
+    /// The packed serving mirror is reported separately via
+    /// [`QMatrix::packed_bytes`] — it is a derived runtime artifact, not
+    /// part of the serialized model.
     pub fn storage_bytes(&self) -> usize {
         self.data.len()
             + self.params.len() * std::mem::size_of::<QuantParams>()
             + self.row_sums.len() * 4
+    }
+
+    /// Bytes held by the packed-panel serving mirror (0 if unpacked).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.as_ref().map_or(0, |p| p.storage_bytes())
     }
 }
 
@@ -270,6 +408,62 @@ mod tests {
         let m = QMatrix::from_f32_math_layout(&w, 256, 256, Granularity::PerMatrix);
         let f32_bytes = w.len() * 4;
         assert!((m.storage_bytes() as f64) < f32_bytes as f64 / 3.5);
+    }
+
+    /// Read one packed element back through the documented panel layout.
+    fn packed_at(p: &PackedQMatrix, o: usize, k: usize) -> u8 {
+        let panel = o / PackedQMatrix::NR;
+        let r = o % PackedQMatrix::NR;
+        let kb = (k / PackedQMatrix::K_CHUNK) * PackedQMatrix::K_CHUNK;
+        let base = panel * PackedQMatrix::NR * p.k_padded;
+        p.data[base + kb * PackedQMatrix::NR + r * PackedQMatrix::K_CHUNK + (k - kb)]
+    }
+
+    #[test]
+    fn packed_layout_roundtrips_every_element() {
+        forall("packed layout", 60, 0x9AC4, |g: &mut Gen| {
+            let in_dim = g.usize_in(0, 70);
+            let out_dim = g.usize_in(0, 30);
+            let w = g.vec_normal(in_dim * out_dim, 0.5);
+            let m = QMatrix::from_f32_math_layout(&w, in_dim, out_dim, Granularity::PerMatrix);
+            let p = m.packed.as_deref().expect("PerMatrix must pack");
+            assert_eq!(p.k_padded % PackedQMatrix::K_CHUNK, 0);
+            assert!(p.k_padded >= in_dim && p.k_padded < in_dim + PackedQMatrix::K_CHUNK);
+            assert_eq!(p.panels, out_dim.div_ceil(PackedQMatrix::NR));
+            assert_eq!(p.data.len(), p.panels * PackedQMatrix::NR * p.k_padded);
+            for o in 0..out_dim {
+                for k in 0..in_dim {
+                    let want = if p.signed {
+                        m.data[o * in_dim + k] ^ 0x80
+                    } else {
+                        m.data[o * in_dim + k]
+                    };
+                    assert_eq!(packed_at(p, o, k), want, "o={o} k={k}");
+                }
+                // K tail padding is zero
+                for k in in_dim..p.k_padded {
+                    assert_eq!(packed_at(p, o, k), 0, "tail o={o} k={k}");
+                }
+            }
+            // panel-remainder rows are zero
+            for o in out_dim..p.panels * PackedQMatrix::NR {
+                for k in 0..p.k_padded {
+                    assert_eq!(packed_at(p, o, k), 0, "pad row o={o} k={k}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn packing_policy_per_granularity() {
+        let mut g = Gen::new(21);
+        let w = g.vec_normal(20 * 10, 0.5);
+        let pm = QMatrix::from_f32_math_layout(&w, 20, 10, Granularity::PerMatrix);
+        assert!(pm.packed.is_some() && pm.packed_bytes() > 0);
+        let pr = QMatrix::from_f32_math_layout(&w, 20, 10, Granularity::PerRow);
+        assert!(pr.packed.is_none() && pr.packed_bytes() == 0);
+        let sb = QMatrix::from_f32_math_layout(&w, 20, 10, Granularity::SubBlock { size: 4 });
+        assert!(sb.packed.is_none());
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //!    this *bit-exact* via per-row input quantization; see `quant::gemm`).
 //! 3. **Parkability** — `save_lane`/`load_lane` round-trip a lane's state
 //!    exactly, so the engine can evict idle streams and re-admit them.
+//!
+//! The native backend's step executes on the packed-panel kernel ladder
+//! (`quant::gemm`): weights are panel-packed once at load, the microkernel
+//! is runtime-dispatched, and large lane-masked GEMMs parallelize across
+//! weight panels.  None of that is visible here — the bit-exactness
+//! contract of the kernel ladder is what lets the execution strategy
+//! change underneath a stable `AmBackend` surface.
 
 use anyhow::Result;
 
@@ -283,5 +290,32 @@ mod tests {
         assert_eq!(AmBackend::num_labels(&m), 7);
         assert!(AmBackend::lane_capacity(&m).is_none());
         assert_eq!(m.backend_name(), "native");
+    }
+
+    #[test]
+    fn native_backend_results_independent_of_kernel_rung() {
+        // Forcing different rungs of the GEMM kernel ladder through the
+        // trait surface must not change a single output bit — the
+        // execution-strategy-invisibility contract in the module docs.
+        let mut g = Gen::new(45);
+        let qam = crate::nn::model::random_qam(2, 8, Some(4), 6, 7, &mut g);
+        let mut x = vec![0f32; 3 * 6];
+        for v in x.iter_mut() {
+            *v = g.f32_in(-1.0, 1.0);
+        }
+        let run = |kernel| {
+            let mut m = AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap();
+            m.kernel = kernel;
+            let mut arena = AmBackend::alloc_arena(&m, 3);
+            let mut out = vec![0f32; 3 * 7];
+            for _ in 0..3 {
+                AmBackend::step_lanes(&m, &mut arena, &[0, 2], &x, &mut out).unwrap();
+            }
+            out
+        };
+        use crate::quant::gemm::Kernel;
+        let want = run(Kernel::Scalar);
+        assert_eq!(run(Kernel::PackedScalar), want);
+        assert_eq!(run(Kernel::Auto), want);
     }
 }
