@@ -17,6 +17,7 @@ use std::fmt::Write as _;
 use quantasr::quant::gemm::{fgemm, qgemm, FMatrix, Kernel, QScratch};
 use quantasr::quant::{Granularity, QMatrix};
 use quantasr::util::bench::{Bench, Measurement};
+use quantasr::util::pool::WorkerPool;
 use quantasr::util::rng::Xoshiro256;
 
 fn randv(n: usize, rng: &mut Xoshiro256) -> Vec<f32> {
@@ -119,6 +120,27 @@ fn main() {
         }
     }
 
+    // Worker-pool dispatch overhead: a no-op job through the persistent
+    // pool measures the fixed cost a parallel GEMM pays over a serial one
+    // (the number that justified dropping the 2M-MAC spawn threshold to
+    // 256K).  Batch-1 latency regressions from the pool would show up in
+    // the b1 ladder rows above; this isolates the mechanism.
+    let pool = WorkerPool::global();
+    let pool_threads = pool.workers() + 1;
+    // With zero workers every run() is inline — there is no dispatch to
+    // measure, so record null rather than a meaningless number.
+    let m_pool = if pool.workers() > 0 {
+        Some(b.run_with_items(
+            &format!("pool dispatch ({pool_threads} executors, no-op job)"),
+            1.0,
+            || pool.run(pool_threads, pool_threads, &|_| {}),
+        ))
+    } else {
+        println!("pool dispatch: 0 workers on this host (inline execution), skipping");
+        None
+    };
+    println!();
+
     // Memory footprint comparison (the 4× claim) + the packed mirror cost.
     let wf = randv(512 * 512, &mut rng);
     let qm = QMatrix::from_f32_math_layout(&wf, 512, 512, Granularity::PerMatrix);
@@ -139,6 +161,12 @@ fn main() {
         json,
         "  \"host\": {{\"avx2\": {avx2}, \"vnni_feature\": {}, \"cpus\": {threads}}},",
         cfg!(feature = "vnni")
+    );
+    let _ = writeln!(
+        json,
+        "  \"pool\": {{\"workers\": {}, \"dispatch_ns\": {}}},",
+        pool.workers(),
+        m_pool.as_ref().map_or("null".into(), |m| format!("{:.1}", m.mean_ns))
     );
     json.push_str("  \"ladder\": [\n");
     for (i, r) in rows.iter().enumerate() {

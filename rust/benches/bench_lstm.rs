@@ -1,11 +1,25 @@
 //! E1 — LSTM(P) layer step: float vs quantized execution across the
-//! Table-1 architecture family and batch sizes.
+//! Table-1 architecture family and batch sizes, plus the **elementwise
+//! ladder**: how much of a step the gate nonlinearities + cell update
+//! cost, and what the fused SIMD kernel buys over the old scalar libm
+//! loop (the PR-3 acceptance bar: fused ≥ 3× the libm loop at batch 32).
+//!
+//! Results land in `BENCH_lstm.json` (CI uploads it) with three sections:
+//! `steps` (whole-step times), `elementwise` (isolated cell-update rungs:
+//! libm-loop baseline, scalar polynomial reference, fused auto), and
+//! `splits` (per-step GEMM vs elementwise share).
+//!
+//! Env knobs: `QUANTASR_KERNEL` / `QUANTASR_EW_KERNEL` force rungs,
+//! `QUANTASR_GEMM_THREADS=1` pins the GEMMs serial.
+
+use std::fmt::Write as _;
 
 use quantasr::io::model_fmt::Tensor;
 use quantasr::nn::linear::Linear;
 use quantasr::nn::lstm::{LstmLayer, LstmScratch};
+use quantasr::quant::elementwise::{lstm_cell_batch, EwKernel};
 use quantasr::quant::gemm::Kernel;
-use quantasr::util::bench::Bench;
+use quantasr::util::bench::{Bench, Measurement};
 use quantasr::util::rng::Xoshiro256;
 
 fn linear(i: usize, o: usize, rng: &mut Xoshiro256) -> Linear {
@@ -37,10 +51,58 @@ fn quantize(l: &LstmLayer) -> LstmLayer {
     }
 }
 
+/// The pre-PR-3 scalar elementwise loop (libm sigmoid/tanh, stash +
+/// copy), kept here verbatim as the baseline the fused kernel is
+/// measured against.
+fn libm_cell_loop(gates: &mut [f32], c: &mut [f32], h: &mut [f32], batch: usize, n: usize) {
+    let sig = |x: f32| {
+        if x >= 0.0 {
+            1.0 / (1.0 + (-x).exp())
+        } else {
+            let z = x.exp();
+            z / (1.0 + z)
+        }
+    };
+    for bi in 0..batch {
+        let g = &mut gates[bi * 4 * n..(bi + 1) * 4 * n];
+        let cr = &mut c[bi * n..(bi + 1) * n];
+        for j in 0..n {
+            let i_g = sig(g[j]);
+            let f_g = sig(g[n + j]);
+            let g_g = g[2 * n + j].tanh();
+            let o_g = sig(g[3 * n + j]);
+            let c_new = f_g * cr[j] + i_g * g_g;
+            cr[j] = c_new;
+            g[j] = o_g * c_new.tanh();
+        }
+    }
+    for bi in 0..batch {
+        let src = &gates[bi * 4 * n..bi * 4 * n + n];
+        h[bi * n..(bi + 1) * n].copy_from_slice(src);
+    }
+}
+
+struct Row {
+    section: &'static str,
+    arch: String,
+    batch: usize,
+    variant: String,
+    m: Measurement,
+}
+
+fn find_ns(rows: &[Row], section: &str, arch: &str, batch: usize, variant: &str) -> Option<f64> {
+    rows.iter()
+        .find(|r| {
+            r.section == section && r.arch == arch && r.batch == batch && r.variant == variant
+        })
+        .map(|r| r.m.mean_ns)
+}
+
 fn main() {
     let b = Bench::default();
     let mut rng = Xoshiro256::new(0x15F);
-    println!("== bench_lstm: LSTMP step float vs int8 (E1) ==");
+    let mut rows: Vec<Row> = Vec::new();
+    println!("== bench_lstm: LSTMP step float vs int8 (E1) + elementwise ladder ==");
 
     // (name, N, P) from the Table-1 grid (input dim 64 as in the models).
     let archs: &[(&str, usize, Option<usize>)] = &[
@@ -67,29 +129,118 @@ fn main() {
             });
             let speedup = m_f.mean_ns / m_q.mean_ns;
             println!("  → int8 speedup (auto = packed dispatch) {speedup:.2}×\n");
+            rows.push(Row {
+                section: "steps",
+                arch: name.into(),
+                batch,
+                variant: "f32".into(),
+                m: m_f,
+            });
+            rows.push(Row {
+                section: "steps",
+                arch: name.into(),
+                batch,
+                variant: "int8-auto".into(),
+                m: m_q,
+            });
         }
     }
 
-    // Packed-panel vs the old row-dot rung through a full recurrent step,
-    // at the paper-scale width (the LSTM-level view of bench_gemm's gate).
-    #[cfg(target_arch = "x86_64")]
-    if quantasr::quant::gemm::avx2_available() {
-        println!("== lstm step: avx2 row-dot vs packed panels (N=500,P=200) ==");
+    // Isolated elementwise cell update: old libm loop vs the polynomial
+    // scalar reference vs the fused SIMD rung (auto dispatch).  This is
+    // the PR-3 acceptance measurement — at batch 32 the fused rung must
+    // be ≥ 3× the libm loop.
+    println!("== elementwise cell update: libm loop vs scalar ref vs fused ==");
+    for &(name, n, _p) in archs {
         for batch in [1usize, 8, 32] {
-            let lq = quantize(&layer(64, 500, Some(200), &mut rng));
-            let mut x = vec![0f32; batch * 64];
-            rng.fill_normal(&mut x);
-            let mut st = lq.zero_state(batch);
-            let mut s = LstmScratch::default();
-            let m_rowdot =
-                b.run_with_items(&format!("lstm int8 rowdot b{batch}"), batch as f64, || {
-                    lq.step(&x, batch, &mut st, &mut s, Kernel::Avx2)
+            let mut gates = vec![0f32; batch * 4 * n];
+            rng.fill_normal(&mut gates);
+            for v in gates.iter_mut() {
+                *v *= 2.0;
+            }
+            let mut c = vec![0f32; batch * n];
+            let mut h = vec![0f32; batch * n];
+            // The old loop mutates its gate buffer (the stash slot), so it
+            // gets its own copy; no restore inside the timed closure — the
+            // baseline must pay exactly what the old hot path paid, or the
+            // fused-vs-libm acceptance ratio would be inflated.  (libm
+            // sigmoid/tanh cost is input-value-independent, so iterating
+            // on the mutated buffer does not skew the measurement.)
+            let mut gates_libm = gates.clone();
+            let m_libm = b.run_with_items(
+                &format!("ew libm-loop  {name} b{batch}"),
+                (batch * n) as f64,
+                || libm_cell_loop(&mut gates_libm, &mut c, &mut h, batch, n),
+            );
+            let m_scalar = b.run_with_items(
+                &format!("ew scalar-ref {name} b{batch}"),
+                (batch * n) as f64,
+                || lstm_cell_batch(&gates, &mut c, &mut h, batch, n, EwKernel::Scalar),
+            );
+            let m_fused = b.run_with_items(
+                &format!("ew fused-auto {name} b{batch}"),
+                (batch * n) as f64,
+                || lstm_cell_batch(&gates, &mut c, &mut h, batch, n, EwKernel::Auto),
+            );
+            println!(
+                "  → fused vs libm-loop {:.2}×, vs scalar-ref {:.2}×\n",
+                m_libm.mean_ns / m_fused.mean_ns,
+                m_scalar.mean_ns / m_fused.mean_ns
+            );
+            for (variant, m) in [
+                ("libm-loop", m_libm),
+                ("scalar-ref", m_scalar),
+                ("fused-auto", m_fused),
+            ] {
+                rows.push(Row {
+                    section: "elementwise",
+                    arch: name.into(),
+                    batch,
+                    variant: variant.into(),
+                    m,
                 });
-            let m_packed =
-                b.run_with_items(&format!("lstm int8 packed b{batch}"), batch as f64, || {
-                    lq.step(&x, batch, &mut st, &mut s, Kernel::PackedAvx2)
-                });
-            println!("  → packed vs rowdot {:.2}×\n", m_rowdot.mean_ns / m_packed.mean_ns);
+            }
         }
+    }
+
+    // Emit BENCH_lstm.json: raw rows + per-(arch, batch) split of a step
+    // into GEMM and elementwise time, and the fused-vs-libm speedup.
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"lstm\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"section\": \"{}\", \"arch\": \"{}\", \"batch\": {}, \
+             \"variant\": \"{}\", \"mean_ns\": {:.1}, \"p50_ns\": {:.1}, \
+             \"p99_ns\": {:.1}}}{comma}",
+            r.section, r.arch, r.batch, r.variant, r.m.mean_ns, r.m.p50_ns, r.m.p99_ns,
+        );
+    }
+    json.push_str("  ],\n  \"splits\": [\n");
+    let mut lines: Vec<String> = Vec::new();
+    for &(name, _n, _p) in archs {
+        for batch in [1usize, 8, 32] {
+            let (Some(step_ns), Some(ew_ns), Some(libm_ns)) = (
+                find_ns(&rows, "steps", name, batch, "int8-auto"),
+                find_ns(&rows, "elementwise", name, batch, "fused-auto"),
+                find_ns(&rows, "elementwise", name, batch, "libm-loop"),
+            ) else {
+                continue;
+            };
+            lines.push(format!(
+                "    {{\"arch\": \"{name}\", \"batch\": {batch}, \
+                 \"step_ns\": {step_ns:.1}, \"elementwise_ns\": {ew_ns:.1}, \
+                 \"elementwise_share\": {:.4}, \"fused_vs_libm_loop\": {:.3}}}",
+                ew_ns / step_ns,
+                libm_ns / ew_ns
+            ));
+        }
+    }
+    json.push_str(&lines.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    match std::fs::write("BENCH_lstm.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_lstm.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_lstm.json: {e}"),
     }
 }

@@ -9,8 +9,16 @@
 //! callers ──push_audio──▶ per-stream Frontend ──▶ pending frame queues
 //!                                                (bounded; backpressure)
 //! AM worker ── BatchPolicy ──▶ step active lanes of the arena, in place
+//!   └── large packed GEMMs fan panels out to the persistent worker pool
+//!       (util::pool; parked threads, QUANTASR_GEMM_THREADS caps them)
 //! decode workers ◀── finished streams' posteriors ──▶ FinalResult channel
 //! ```
+//!
+//! The AM step itself is allocation-free: the arena pre-sizes all scratch
+//! (gates, projection buffer, per-layer activation-quantization caches)
+//! at `Engine::start`, the fused SIMD elementwise kernel updates cell
+//! state in one pass, and each layer output is quantized once per tick
+//! (`quant::gemm::QActRows`) instead of once per consuming GEMM.
 //!
 //! **Lane-resident batching.**  Each live stream owns a stable *lane* in
 //! the backend's pre-allocated arena (`[max_batch, state]` buffers); the

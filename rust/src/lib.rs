@@ -46,10 +46,22 @@
 //! matrix sequentially.  The microkernel is runtime-dispatched (AVX2
 //! `madd_epi16`; AVX-512-VNNI `vpdpbusd` behind the `vnni` cargo feature;
 //! NEON `dot` on aarch64; scalar reference elsewhere) and large GEMMs
-//! parallelize across panels with scoped threads.  Every rung — and every
-//! thread split — is **bit-identical** to the scalar reference (property-
-//! tested for all K tails, panel remainders and lane subsets), so the
-//! serving engine's batch-invariance guarantee is preserved verbatim.
+//! parallelize across panels on the persistent [`util::pool::WorkerPool`]
+//! (parked workers, no per-call spawn — batch-1 GEMVs fan out too).
+//! Every rung — and every thread split — is **bit-identical** to the
+//! scalar reference (property-tested for all K tails, panel remainders
+//! and lane subsets), so the serving engine's batch-invariance guarantee
+//! is preserved verbatim.
+//!
+//! ## Vectorized elementwise path
+//!
+//! Everything around the GEMMs is vectorized too ([`quant::elementwise`]):
+//! the LSTM gate nonlinearities + cell update run as one fused SIMD pass
+//! (polynomial sigmoid/tanh with a scalar reference that every rung
+//! matches **bit-for-bit**, and that stays within a documented 1e-6 of
+//! libm), and per-row activation quantization uses a SIMD min/max +
+//! quantize scan with a per-layer cache ([`quant::gemm::QActRows`]) so a
+//! layer output consumed by two quantized GEMMs is quantized once.
 
 pub mod coordinator;
 pub mod decoder;

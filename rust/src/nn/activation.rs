@@ -1,6 +1,12 @@
-//! Activation functions.  Plain f32 math — the paper recovers to float
-//! before activations precisely so these stay simple ("this simplifies the
-//! implementation of complex activation functions", §3.1).
+//! Activation functions.  Plain f32 libm math — the paper recovers to
+//! float before activations precisely so these stay simple ("this
+//! simplifies the implementation of complex activation functions", §3.1).
+//!
+//! These are the *cold-path* definitions (decoder scores, tests, the
+//! softmax).  The LSTM cell's per-tick gate loop runs on the fused SIMD
+//! kernels in [`crate::quant::elementwise`] instead, whose polynomial
+//! sigmoid/tanh are their own bit-exact scalar reference and stay within
+//! a documented 1e-6 absolute of the functions here.
 
 /// Numerically-stable logistic sigmoid.
 #[inline]

@@ -9,7 +9,11 @@
 use anyhow::{bail, Result};
 
 use crate::io::model_fmt::Tensor;
-use crate::quant::gemm::{fgemm, fgemm_lanes, qgemm, qgemm_lanes, FMatrix, Kernel, QScratch};
+use crate::quant::elementwise::EwKernel;
+use crate::quant::gemm::{
+    fgemm, fgemm_lanes, qgemm, qgemm_cached, qgemm_lanes, qgemm_lanes_cached, FMatrix, Kernel,
+    QActRows, QScratch,
+};
 use crate::quant::{Granularity, QMatrix};
 
 /// A `y = x·W (+ b)` layer; weights `[in, out]` in math terms.
@@ -148,6 +152,55 @@ impl Linear {
         match self {
             Linear::Float(f) => fgemm(x, batch, f, bias, y, accumulate),
             Linear::Quant(q) => qgemm(x, batch, q, bias, y, scratch, kernel, accumulate),
+        }
+    }
+
+    /// [`Linear::forward`] with an optional quantized-activation cache
+    /// for `x`: a quantized layer re-quantizes only the cache's stale
+    /// rows (bit-identical to the uncached path — see
+    /// [`QActRows`]); float layers ignore the cache.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_cached(
+        &self,
+        x: &[f32],
+        cache: Option<&mut QActRows>,
+        batch: usize,
+        bias: Option<&[f32]>,
+        y: &mut [f32],
+        scratch: &mut QScratch,
+        kernel: Kernel,
+        accumulate: bool,
+    ) {
+        match (self, cache) {
+            (Linear::Quant(q), Some(c)) => {
+                c.ensure_batch(x, batch, q.in_dim, EwKernel::for_gemm(kernel));
+                qgemm_cached(c, batch, q, bias, y, scratch, kernel, accumulate);
+            }
+            _ => self.forward(x, batch, bias, y, scratch, kernel, accumulate),
+        }
+    }
+
+    /// [`Linear::forward_lanes`] with an optional activation cache for
+    /// `x` (per listed lane; see [`Linear::forward_cached`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_lanes_cached(
+        &self,
+        x: &[f32],
+        cache: Option<&mut QActRows>,
+        max_lanes: usize,
+        lanes: &[usize],
+        bias: Option<&[f32]>,
+        y: &mut [f32],
+        scratch: &mut QScratch,
+        kernel: Kernel,
+        accumulate: bool,
+    ) {
+        match (self, cache) {
+            (Linear::Quant(q), Some(c)) => {
+                c.ensure_lanes(x, max_lanes, lanes, q.in_dim, EwKernel::for_gemm(kernel));
+                qgemm_lanes_cached(c, max_lanes, lanes, q, bias, y, scratch, kernel, accumulate);
+            }
+            _ => self.forward_lanes(x, max_lanes, lanes, bias, y, scratch, kernel, accumulate),
         }
     }
 }

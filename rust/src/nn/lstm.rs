@@ -8,9 +8,9 @@
 
 use anyhow::{ensure, Result};
 
-use crate::nn::activation::{sigmoid, tanh};
 use crate::nn::linear::Linear;
-use crate::quant::gemm::{Kernel, QScratch};
+use crate::quant::elementwise::{self, EwKernel};
+use crate::quant::gemm::{Kernel, QActRows, QScratch};
 
 /// One LSTM(P) layer.
 #[derive(Clone, Debug)]
@@ -27,6 +27,14 @@ pub struct LstmLayer {
 }
 
 /// Recurrent state for one layer at a fixed batch size.
+///
+/// **Invariant (quantized models):** `h` rows may be consumed through a
+/// [`QActRows`] quantization cache (`ModelState`/`BatchArena` hold one
+/// per layer).  Whoever rewrites an `h` row outside the step functions
+/// must invalidate the matching cache row — go through the provided
+/// helpers (`reset_stream`/`copy_stream_from`/`reset_lane`/`load_lane`),
+/// which do this; writing `h` directly would leave a stale quantization
+/// behind and silently break the cached-equals-uncached contract.
 #[derive(Clone, Debug)]
 pub struct LayerState {
     /// Cell state `[batch, N]`.
@@ -35,12 +43,30 @@ pub struct LayerState {
     pub h: Vec<f32>,
 }
 
-/// Reusable per-step scratch (allocation-free hot loop).
+/// Reusable per-step scratch.  Size it **once** with
+/// [`LstmScratch::ensure`] (the model/arena constructors do) — the hot
+/// loop then only `debug_assert`s, never resizes or allocates.
 #[derive(Default, Clone)]
 pub struct LstmScratch {
     pub gates: Vec<f32>,
     pub h_raw: Vec<f32>,
     pub q: QScratch,
+}
+
+impl LstmScratch {
+    /// Grow the buffers to cover stepping `rows` rows of a layer with
+    /// `cell_dim` cells.  Call at state/arena construction (or before the
+    /// first step); a no-op once sized.
+    pub fn ensure(&mut self, rows: usize, cell_dim: usize) {
+        let g = rows * 4 * cell_dim;
+        if self.gates.len() < g {
+            self.gates.resize(g, 0.0);
+        }
+        let h = rows * cell_dim;
+        if self.h_raw.len() < h {
+            self.h_raw.resize(h, 0.0);
+        }
+    }
 }
 
 impl LstmLayer {
@@ -79,6 +105,8 @@ impl LstmLayer {
 
     /// One timestep: `x [batch, in]` + state → state updated in place.
     /// After the call `state.h` holds the layer output (projected if P).
+    /// Convenience wrapper over [`LstmLayer::step_cached`] with no
+    /// activation caches (sizes the scratch on first use).
     pub fn step(
         &self,
         x: &[f32],
@@ -87,48 +115,74 @@ impl LstmLayer {
         s: &mut LstmScratch,
         kernel: Kernel,
     ) {
+        s.ensure(batch, self.cell_dim);
+        self.step_cached(x, None, batch, state, s, None, kernel);
+    }
+
+    /// One timestep with optional quantized-activation caches:
+    /// `x_cache` holds prequantized rows of `x` (filled by whoever wrote
+    /// `x` — in the model stack, the previous layer's output cache), and
+    /// `h_cache` caches this layer's own `state.h` quantization (consumed
+    /// here by `Wh`, re-consumed by the next layer's `Wx`, and
+    /// invalidated for the rows this step rewrites).  Caches only change
+    /// *when* quantization happens, never its result — outputs are
+    /// bit-identical with any combination of caches present.
+    ///
+    /// The elementwise cell update runs on the fused SIMD kernel
+    /// ([`crate::quant::elementwise`]) and writes the pre-projection
+    /// output straight into `state.h` (plain LSTM) or the projection
+    /// input buffer (LSTMP) — the gate buffer is only read.
+    ///
+    /// The scratch must already be sized ([`LstmScratch::ensure`]); this
+    /// hot path never allocates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_cached(
+        &self,
+        x: &[f32],
+        x_cache: Option<&mut QActRows>,
+        batch: usize,
+        state: &mut LayerState,
+        s: &mut LstmScratch,
+        mut h_cache: Option<&mut QActRows>,
+        kernel: Kernel,
+    ) {
         let n = self.cell_dim;
         debug_assert_eq!(x.len(), batch * self.in_dim());
-        s.gates.resize(batch * 4 * n, 0.0);
+        debug_assert_eq!(state.c.len(), batch * n);
+        debug_assert_eq!(state.h.len(), batch * self.rec_dim());
+        let LstmScratch { gates, h_raw, q } = s;
+        debug_assert!(gates.len() >= batch * 4 * n, "LstmScratch::ensure not called");
+        let gates = &mut gates[..batch * 4 * n];
 
         // gates = x·Wx + h·Wh + b   (two GEMMs fused via accumulate)
-        self.wx.forward(x, batch, Some(&self.bias), &mut s.gates, &mut s.q, kernel, false);
-        self.wh.forward(&state.h, batch, None, &mut s.gates, &mut s.q, kernel, true);
+        self.wx.forward_cached(x, x_cache, batch, Some(&self.bias), gates, q, kernel, false);
+        self.wh.forward_cached(
+            &state.h,
+            h_cache.as_deref_mut(),
+            batch,
+            None,
+            gates,
+            q,
+            kernel,
+            true,
+        );
 
-        // Elementwise cell update (layout [i | f | g | o]).
-        for bi in 0..batch {
-            let g = &mut s.gates[bi * 4 * n..(bi + 1) * 4 * n];
-            let c = &mut state.c[bi * n..(bi + 1) * n];
-            for j in 0..n {
-                let i_g = sigmoid(g[j]);
-                let f_g = sigmoid(g[n + j]);
-                let g_g = tanh(g[2 * n + j]);
-                let o_g = sigmoid(g[3 * n + j]);
-                let c_new = f_g * c[j] + i_g * g_g;
-                c[j] = c_new;
-                // stash pre-projection output in the gates buffer (i slot)
-                g[j] = o_g * c_new.tanh();
-            }
-        }
-
+        // Fused elementwise cell update (layout [i | f | g | o]):
+        // c = f·c + i·g and h = o·tanh(c) in one pass over the gates.
+        let ewk = EwKernel::for_gemm(kernel);
         match &self.wp {
             None => {
-                // h = pre-projection output
-                for bi in 0..batch {
-                    let src = &s.gates[bi * 4 * n..bi * 4 * n + n];
-                    state.h[bi * n..(bi + 1) * n].copy_from_slice(src);
-                }
+                elementwise::lstm_cell_batch(gates, &mut state.c, &mut state.h, batch, n, ewk);
             }
             Some(wp) => {
-                let p = wp.out_dim();
-                s.h_raw.resize(batch * n, 0.0);
-                for bi in 0..batch {
-                    let src = &s.gates[bi * 4 * n..bi * 4 * n + n];
-                    s.h_raw[bi * n..(bi + 1) * n].copy_from_slice(src);
-                }
-                state.h.resize(batch * p, 0.0);
-                wp.forward(&s.h_raw, batch, None, &mut state.h, &mut s.q, kernel, false);
+                debug_assert!(h_raw.len() >= batch * n, "LstmScratch::ensure not called");
+                let h_raw = &mut h_raw[..batch * n];
+                elementwise::lstm_cell_batch(gates, &mut state.c, h_raw, batch, n, ewk);
+                wp.forward(h_raw, batch, None, &mut state.h, q, kernel, false);
             }
+        }
+        if let Some(hc) = h_cache {
+            hc.invalidate_prefix(batch);
         }
     }
 
@@ -149,46 +203,82 @@ impl LstmLayer {
         s: &mut LstmScratch,
         kernel: Kernel,
     ) {
+        s.ensure(max_lanes, self.cell_dim);
+        self.step_lanes_cached(x, None, max_lanes, lanes, state, s, None, kernel);
+    }
+
+    /// Lane-masked timestep with optional activation caches — the cached
+    /// twin of [`LstmLayer::step_lanes`]; cache semantics as in
+    /// [`LstmLayer::step_cached`] (per listed lane).  The scratch must
+    /// already be sized; this hot path never allocates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_lanes_cached(
+        &self,
+        x: &[f32],
+        x_cache: Option<&mut QActRows>,
+        max_lanes: usize,
+        lanes: &[usize],
+        state: &mut LayerState,
+        s: &mut LstmScratch,
+        mut h_cache: Option<&mut QActRows>,
+        kernel: Kernel,
+    ) {
         let n = self.cell_dim;
         debug_assert_eq!(x.len(), max_lanes * self.in_dim());
         debug_assert_eq!(state.c.len(), max_lanes * n);
         debug_assert_eq!(state.h.len(), max_lanes * self.rec_dim());
-        s.gates.resize(max_lanes * 4 * n, 0.0);
+        let LstmScratch { gates, h_raw, q } = s;
+        debug_assert!(gates.len() >= max_lanes * 4 * n, "LstmScratch::ensure not called");
+        let gates = &mut gates[..max_lanes * 4 * n];
 
         // gates = x·Wx + h·Wh + b, active lanes only.
-        self.wx.forward_lanes(x, max_lanes, lanes, Some(&self.bias), &mut s.gates, &mut s.q, kernel, false);
-        self.wh.forward_lanes(&state.h, max_lanes, lanes, None, &mut s.gates, &mut s.q, kernel, true);
+        self.wx.forward_lanes_cached(
+            x,
+            x_cache,
+            max_lanes,
+            lanes,
+            Some(&self.bias),
+            gates,
+            q,
+            kernel,
+            false,
+        );
+        self.wh.forward_lanes_cached(
+            &state.h,
+            h_cache.as_deref_mut(),
+            max_lanes,
+            lanes,
+            None,
+            gates,
+            q,
+            kernel,
+            true,
+        );
 
-        // Elementwise cell update (layout [i | f | g | o]) per active lane.
-        for &lane in lanes {
-            let g = &mut s.gates[lane * 4 * n..(lane + 1) * 4 * n];
-            let c = &mut state.c[lane * n..(lane + 1) * n];
-            for j in 0..n {
-                let i_g = sigmoid(g[j]);
-                let f_g = sigmoid(g[n + j]);
-                let g_g = tanh(g[2 * n + j]);
-                let o_g = sigmoid(g[3 * n + j]);
-                let c_new = f_g * c[j] + i_g * g_g;
-                c[j] = c_new;
-                // stash pre-projection output in the gates buffer (i slot)
-                g[j] = o_g * c_new.tanh();
-            }
-        }
-
+        // Fused elementwise cell update per active lane.
+        let ewk = EwKernel::for_gemm(kernel);
         match &self.wp {
             None => {
-                for &lane in lanes {
-                    let src = &s.gates[lane * 4 * n..lane * 4 * n + n];
-                    state.h[lane * n..(lane + 1) * n].copy_from_slice(src);
-                }
+                elementwise::lstm_cell_lanes(
+                    gates,
+                    &mut state.c,
+                    &mut state.h,
+                    max_lanes,
+                    lanes,
+                    n,
+                    ewk,
+                );
             }
             Some(wp) => {
-                s.h_raw.resize(max_lanes * n, 0.0);
-                for &lane in lanes {
-                    let src = &s.gates[lane * 4 * n..lane * 4 * n + n];
-                    s.h_raw[lane * n..(lane + 1) * n].copy_from_slice(src);
-                }
-                wp.forward_lanes(&s.h_raw, max_lanes, lanes, None, &mut state.h, &mut s.q, kernel, false);
+                debug_assert!(h_raw.len() >= max_lanes * n, "LstmScratch::ensure not called");
+                let h_raw = &mut h_raw[..max_lanes * n];
+                elementwise::lstm_cell_lanes(gates, &mut state.c, h_raw, max_lanes, lanes, n, ewk);
+                wp.forward_lanes(h_raw, max_lanes, lanes, None, &mut state.h, q, kernel, false);
+            }
+        }
+        if let Some(hc) = h_cache {
+            for &lane in lanes {
+                hc.invalidate_row(lane);
             }
         }
     }
@@ -393,6 +483,51 @@ mod tests {
             }
             assert_eq!(st.c, st_ref.c, "kernel {kern:?} drifted (c)");
             assert_eq!(st.h, st_ref.h, "kernel {kern:?} drifted (h)");
+        }
+    }
+
+    #[test]
+    fn cached_step_bit_identical_to_uncached() {
+        // Running a sequence with a persistent h-quantization cache must
+        // equal the cache-free path bit for bit (the cache only changes
+        // *when* rows are quantized, never the result), for plain and
+        // projected layers, float and quantized.
+        for p in [None, Some(5)] {
+            for quant in [false, true] {
+                let mut g = Gen::new(0xCAC);
+                let mut l = layer(12, 9, p, &mut g);
+                if quant {
+                    l = LstmLayer {
+                        wx: l.wx.quantize_now(),
+                        wh: l.wh.quantize_now(),
+                        bias: l.bias.clone(),
+                        wp: l.wp.as_ref().map(Linear::quantize_now),
+                        cell_dim: l.cell_dim,
+                    };
+                }
+                let batch = 3;
+                let mut st_a = l.zero_state(batch);
+                let mut st_b = l.zero_state(batch);
+                let mut sa = LstmScratch::default();
+                let mut sb = LstmScratch::default();
+                sb.ensure(batch, l.cell_dim);
+                let mut h_cache = QActRows::sized(batch, l.rec_dim());
+                for _t in 0..6 {
+                    let x = g.vec_normal(batch * 12, 1.0);
+                    l.step(&x, batch, &mut st_a, &mut sa, Kernel::Auto);
+                    l.step_cached(
+                        &x,
+                        None,
+                        batch,
+                        &mut st_b,
+                        &mut sb,
+                        Some(&mut h_cache),
+                        Kernel::Auto,
+                    );
+                    assert_eq!(st_a.c, st_b.c, "p={p:?} quant={quant}");
+                    assert_eq!(st_a.h, st_b.h, "p={p:?} quant={quant}");
+                }
+            }
         }
     }
 

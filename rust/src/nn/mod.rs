@@ -1,7 +1,9 @@
 //! The native inference engine: float and 8-bit-quantized execution of the
 //! paper's LSTM acoustic models (§3.1), loaded from `.qam` files.
 //!
-//! - [`activation`] — sigmoid/tanh/softmax primitives.
+//! - [`activation`] — sigmoid/tanh/softmax primitives (libm-based; the
+//!   LSTM hot path uses the fused SIMD kernels in
+//!   [`crate::quant::elementwise`] instead).
 //! - [`linear`]     — a dense layer that is either f32 or quantized
 //!   (Figure 1: quantize input → integer GEMM → recover → bias → F).
 //! - [`lstm`]       — the LSTMP cell (Sak et al. 2014) on top of `linear`.

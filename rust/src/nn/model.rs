@@ -21,7 +21,7 @@ use crate::io::model_fmt::{ModelHeader, QamFile, Tensor};
 use crate::nn::activation::log_softmax_rows;
 use crate::nn::linear::Linear;
 use crate::nn::lstm::{LayerState, LstmLayer, LstmScratch};
-use crate::quant::gemm::{Kernel, QScratch};
+use crate::quant::gemm::{Kernel, QActRows, QScratch};
 
 /// Execution numerics (Table-1 column).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -42,24 +42,34 @@ impl ExecMode {
     }
 }
 
-/// Streaming state + scratch for a fixed batch size.
+/// Streaming state + scratch for a fixed batch size.  Everything here is
+/// sized once at construction ([`AcousticModel::new_state`]); stepping
+/// never allocates.
 pub struct ModelState {
     pub batch: usize,
     pub layers: Vec<LayerState>,
     pub scratch: LstmScratch,
     pub qout: QScratch,
-    /// Layer-output ping/pong buffers.
-    buf: Vec<f32>,
+    /// Per-layer quantization cache of that layer's `h` output: filled
+    /// lazily by its consumers (the layer's own `Wh` next step, the next
+    /// layer's `Wx` this tick), invalidated by whoever rewrites the rows.
+    h_caches: Vec<QActRows>,
 }
 
 impl ModelState {
     /// Reset one stream's recurrent state to zero (utterance boundary).
     pub fn reset_stream(&mut self, model: &AcousticModel, stream: usize) {
-        for (l, st) in model.layers.iter().zip(self.layers.iter_mut()) {
+        for ((l, st), hc) in model
+            .layers
+            .iter()
+            .zip(self.layers.iter_mut())
+            .zip(self.h_caches.iter_mut())
+        {
             let n = l.cell_dim;
             let r = l.rec_dim();
             st.c[stream * n..(stream + 1) * n].fill(0.0);
             st.h[stream * r..(stream + 1) * r].fill(0.0);
+            hc.invalidate_row(stream);
         }
     }
 
@@ -72,15 +82,17 @@ impl ModelState {
         src_state: &ModelState,
         src: usize,
     ) {
-        for (l, (d, s)) in model
+        for ((l, (d, s)), hc) in model
             .layers
             .iter()
             .zip(self.layers.iter_mut().zip(src_state.layers.iter()))
+            .zip(self.h_caches.iter_mut())
         {
             let n = l.cell_dim;
             let r = l.rec_dim();
             d.c[dst * n..(dst + 1) * n].copy_from_slice(&s.c[src * n..(src + 1) * n]);
             d.h[dst * r..(dst + 1) * r].copy_from_slice(&s.h[src * r..(src + 1) * r]);
+            hc.invalidate_row(dst);
         }
     }
 }
@@ -100,6 +112,9 @@ pub struct BatchArena {
     pub layers: Vec<LayerState>,
     scratch: LstmScratch,
     qout: QScratch,
+    /// Per-layer quantization cache of `h` rows (see [`ModelState`]);
+    /// lane-indexed, invalidated on reset/load and after each step.
+    h_caches: Vec<QActRows>,
 }
 
 /// One stream's recurrent state parked outside the arena (lane eviction:
@@ -114,11 +129,12 @@ impl BatchArena {
     /// Zero one lane's recurrent state (fresh stream / utterance boundary).
     pub fn reset_lane(&mut self, lane: usize) {
         debug_assert!(lane < self.max_lanes);
-        for st in self.layers.iter_mut() {
+        for (st, hc) in self.layers.iter_mut().zip(self.h_caches.iter_mut()) {
             let n = st.c.len() / self.max_lanes;
             let r = st.h.len() / self.max_lanes;
             st.c[lane * n..(lane + 1) * n].fill(0.0);
             st.h[lane * r..(lane + 1) * r].fill(0.0);
+            hc.invalidate_row(lane);
         }
     }
 
@@ -145,11 +161,17 @@ impl BatchArena {
     pub fn load_lane(&mut self, lane: usize, parked: &ParkedLane) {
         debug_assert!(lane < self.max_lanes);
         debug_assert_eq!(parked.layers.len(), self.layers.len());
-        for (st, (c, h)) in self.layers.iter_mut().zip(parked.layers.iter()) {
+        for ((st, (c, h)), hc) in self
+            .layers
+            .iter_mut()
+            .zip(parked.layers.iter())
+            .zip(self.h_caches.iter_mut())
+        {
             let n = st.c.len() / self.max_lanes;
             let r = st.h.len() / self.max_lanes;
             st.c[lane * n..(lane + 1) * n].copy_from_slice(c);
             st.h[lane * r..(lane + 1) * r].copy_from_slice(h);
+            hc.invalidate_row(lane);
         }
     }
 }
@@ -252,40 +274,72 @@ impl AcousticModel {
             + self.out.packed_bytes()
     }
 
+    /// Scratch + caches sized for stepping `rows` rows — everything the
+    /// hot loop touches is allocated here, once.
+    fn sized_scratch(&self, rows: usize) -> (LstmScratch, Vec<QActRows>) {
+        let mut scratch = LstmScratch::default();
+        let max_cell = self.layers.iter().map(|l| l.cell_dim).max().unwrap_or(0);
+        scratch.ensure(rows, max_cell);
+        let caches =
+            self.layers.iter().map(|l| QActRows::sized(rows, l.rec_dim())).collect();
+        (scratch, caches)
+    }
+
     pub fn new_state(&self, batch: usize) -> ModelState {
+        let (scratch, h_caches) = self.sized_scratch(batch);
         ModelState {
             batch,
             layers: self.layers.iter().map(|l| l.zero_state(batch)).collect(),
-            scratch: LstmScratch::default(),
+            scratch,
             qout: QScratch::default(),
-            buf: Vec::new(),
+            h_caches,
         }
     }
 
     /// One timestep for the whole batch: `x [batch, input_dim]` →
     /// `log_probs [batch, num_labels]` written into `out`.
+    ///
+    /// Each layer's `h` is quantized **once** per tick via the per-layer
+    /// [`QActRows`] caches: the next layer's `Wx` fills the cache, and
+    /// the layer's own `Wh` reuses it on the next step (the cache never
+    /// changes results — see `quant::gemm`).
     pub fn step(&self, x: &[f32], state: &mut ModelState, out: &mut [f32]) {
         let batch = state.batch;
         debug_assert_eq!(x.len(), batch * self.input_dim());
         debug_assert_eq!(out.len(), batch * self.num_labels());
 
-        // Layer 0 reads x; subsequent layers read the previous layer's h.
-        // We copy h into `buf` because `step` mutates state.h in place.
-        let mut first = true;
+        // Layer 0 reads x; layer li reads layer li−1's (already updated)
+        // h — disjoint LayerState entries, so no staging copy is needed.
         for (li, layer) in self.layers.iter().enumerate() {
-            if first {
-                layer.step(x, batch, &mut state.layers[li], &mut state.scratch, self.kernel);
-                first = false;
+            let (prev_s, cur_s) = state.layers.split_at_mut(li);
+            let (prev_c, cur_c) = state.h_caches.split_at_mut(li);
+            if li == 0 {
+                layer.step_cached(
+                    x,
+                    None,
+                    batch,
+                    &mut cur_s[0],
+                    &mut state.scratch,
+                    Some(&mut cur_c[0]),
+                    self.kernel,
+                );
             } else {
-                let (prev, cur) = state.layers.split_at_mut(li);
-                state.buf.clear();
-                state.buf.extend_from_slice(&prev[li - 1].h);
-                layer.step(&state.buf, batch, &mut cur[0], &mut state.scratch, self.kernel);
+                layer.step_cached(
+                    &prev_s[li - 1].h,
+                    Some(&mut prev_c[li - 1]),
+                    batch,
+                    &mut cur_s[0],
+                    &mut state.scratch,
+                    Some(&mut cur_c[0]),
+                    self.kernel,
+                );
             }
         }
         let h_top = &state.layers[self.layers.len() - 1].h;
-        self.out.forward(
+        let top_cache = state.h_caches.last_mut().expect("model has layers");
+        self.out.forward_cached(
             h_top,
+            Some(top_cache),
             batch,
             Some(&self.out_bias),
             out,
@@ -297,13 +351,16 @@ impl AcousticModel {
     }
 
     /// Allocate a lane-resident [`BatchArena`] for `max_lanes` concurrent
-    /// streams (all lanes start zeroed).
+    /// streams (all lanes start zeroed; scratch and activation caches are
+    /// pre-sized so stepping never allocates).
     pub fn new_arena(&self, max_lanes: usize) -> BatchArena {
+        let (scratch, h_caches) = self.sized_scratch(max_lanes);
         BatchArena {
             max_lanes,
             layers: self.layers.iter().map(|l| l.zero_state(max_lanes)).collect(),
-            scratch: LstmScratch::default(),
+            scratch,
             qout: QScratch::default(),
+            h_caches,
         }
     }
 
@@ -324,20 +381,51 @@ impl AcousticModel {
         let ml = arena.max_lanes;
         debug_assert_eq!(x.len(), ml * self.input_dim());
         debug_assert_eq!(out.len(), ml * self.num_labels());
-        let BatchArena { layers: states, scratch, qout, .. } = arena;
+        let BatchArena { layers: states, scratch, qout, h_caches, .. } = arena;
         for (li, layer) in self.layers.iter().enumerate() {
+            // Layer li reads the previous layer's (already-updated)
+            // lane-resident h and updates its own state in place; each
+            // layer's h quantization is cached per lane (see `step`).
+            let (prev_s, cur_s) = states.split_at_mut(li);
+            let (prev_c, cur_c) = h_caches.split_at_mut(li);
             if li == 0 {
-                layer.step_lanes(x, ml, lanes, &mut states[0], scratch, self.kernel);
+                layer.step_lanes_cached(
+                    x,
+                    None,
+                    ml,
+                    lanes,
+                    &mut cur_s[0],
+                    scratch,
+                    Some(&mut cur_c[0]),
+                    self.kernel,
+                );
             } else {
-                // Layer li reads the previous layer's (already-updated)
-                // lane-resident h and updates its own state in place.
-                let (prev, cur) = states.split_at_mut(li);
-                layer.step_lanes(&prev[li - 1].h, ml, lanes, &mut cur[0], scratch, self.kernel);
+                layer.step_lanes_cached(
+                    &prev_s[li - 1].h,
+                    Some(&mut prev_c[li - 1]),
+                    ml,
+                    lanes,
+                    &mut cur_s[0],
+                    scratch,
+                    Some(&mut cur_c[0]),
+                    self.kernel,
+                );
             }
         }
         let h_top = &states[self.layers.len() - 1].h;
+        let top_cache = h_caches.last_mut().expect("model has layers");
         let l = self.num_labels();
-        self.out.forward_lanes(h_top, ml, lanes, Some(&self.out_bias), out, qout, self.kernel, false);
+        self.out.forward_lanes_cached(
+            h_top,
+            Some(top_cache),
+            ml,
+            lanes,
+            Some(&self.out_bias),
+            out,
+            qout,
+            self.kernel,
+            false,
+        );
         for &lane in lanes {
             log_softmax_rows(&mut out[lane * l..(lane + 1) * l], 1, l);
         }

@@ -1,0 +1,931 @@
+//! Vectorized elementwise kernels: the fused LSTM cell update and the
+//! SIMD activation-quantization scan.
+//!
+//! After the packed-panel GEMM work, the per-tick serving cost was
+//! dominated by everything *around* the GEMMs: a scalar gate loop calling
+//! libm `sigmoid`/`tanh` 4·N times per cell per tick, and a scalar
+//! min/max + quantize scan per GEMM input row.  This module retires both
+//! with fixed-function approximations in the spirit of the paper's §3
+//! ("efficient execution"): the nonlinearities are evaluated with an
+//! exp2-based polynomial that vectorizes exactly, and the quantization
+//! scan runs 8 lanes at a time.
+//!
+//! ## The elementwise kernel ladder
+//!
+//! [`EwKernel`] mirrors the GEMM [`Kernel`] ladder: a portable scalar
+//! rung, an AVX2 rung, and a NEON rung, runtime-dispatched.  By default
+//! the rung follows the GEMM kernel in use ([`EwKernel::for_gemm`], so
+//! `QUANTASR_KERNEL=scalar` pins the whole pipeline scalar); the
+//! `QUANTASR_EW_KERNEL` env var forces the elementwise rung independently
+//! (the CI kernel matrix crosses the two).
+//!
+//! ## The scalar reference (and the bit-exactness contract)
+//!
+//! [`sigmoid_ref`]/[`tanh_ref`] are **the** reference semantics for the
+//! elementwise path — *not* libm.  Every rung evaluates the *same*
+//! polynomial with the *same* IEEE-754 single-precision operations in the
+//! *same* order (no FMA contraction, division is exactly rounded, the
+//! round-to-nearest-even argument reduction uses the shared magic-number
+//! trick), so every rung is **bit-identical** to the scalar reference for
+//! all finite inputs, at any batch size or lane subset.  SIMD rows handle
+//! the `N % width` tail by falling back to the scalar code per element —
+//! identical by construction.  NaN *gate* inputs are out of contract for
+//! the cell-update kernels (rungs may disagree on NaN propagation); the
+//! quantization scan below is stricter — NaN elements are ignored by the
+//! range scan and quantize to `clamp(−zp)` identically on every rung, so
+//! a diverged stream cannot make quantization rung-dependent.
+//!
+//! Accuracy versus libm is a separate, *documented* bound: the polynomial
+//! stays within **1e-6 absolute** of the f64 libm `sigmoid`/`tanh`
+//! everywhere (measured max ≈ 9.2e-8 / 1.4e-7; property-tested below), so
+//! swapping the libm gate loop for this path moves posteriors by less
+//! than quantization noise and leaves the WER eval unchanged.
+//!
+//! The math: `exp(-a)` is computed as `2^t` with `t = -a·log2(e)`,
+//! `t = k + f` (`k` integer via round-to-nearest-even, `f ∈ [-½, ½]`),
+//! `2^f` a degree-7 Taylor/Horner polynomial, and the `2^k` scale applied
+//! by integer exponent arithmetic.  Then `sigmoid(x) = 1/(1+e)` (mirrored
+//! via `e/(1+e)` for negative `x` — no cancellation on either side) and
+//! `tanh(x) = sign(x)·(1−e)/(1+e)` with `e = exp(-2|x|)`.  Inputs are
+//! clamped to the saturation range first, which also keeps the exponent
+//! arithmetic away from denormals.
+
+use crate::quant::gemm::Kernel;
+use crate::quant::scheme::QuantParams;
+use std::sync::OnceLock;
+
+/// Elementwise kernel selection (see the module docs for the ladder and
+/// the bit-exactness contract).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EwKernel {
+    /// Portable scalar reference — the bit-exactness anchor.
+    Scalar,
+    /// 8-lane AVX2 rung (runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 4-lane NEON rung (baseline on aarch64).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+    /// Best available on this CPU.
+    Auto,
+}
+
+impl EwKernel {
+    /// Resolve `Auto` (honoring a `QUANTASR_EW_KERNEL` override) and clamp
+    /// explicitly requested SIMD rungs the CPU lacks back to scalar — the
+    /// soundness gate for the `#[target_feature]` dispatch below.
+    pub fn resolve(self) -> EwKernel {
+        let k = match self {
+            EwKernel::Auto => forced_ew_kernel().unwrap_or_else(Self::best_available),
+            k => k,
+        };
+        #[cfg(target_arch = "x86_64")]
+        if k == EwKernel::Avx2 && !crate::quant::gemm::avx2_available() {
+            return EwKernel::Scalar;
+        }
+        k
+    }
+
+    fn best_available() -> EwKernel {
+        #[allow(unused_mut)]
+        let mut k = EwKernel::Scalar;
+        #[cfg(target_arch = "x86_64")]
+        if crate::quant::gemm::avx2_available() {
+            k = EwKernel::Avx2;
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            k = EwKernel::Neon;
+        }
+        k
+    }
+
+    /// The elementwise rung that rides along with a GEMM kernel choice —
+    /// SIMD GEMM rungs get the SIMD elementwise rung, scalar rungs stay
+    /// scalar (so `QUANTASR_KERNEL=scalar` pins the whole pipeline).  A
+    /// `QUANTASR_EW_KERNEL` override wins over the mapping.
+    pub fn for_gemm(k: Kernel) -> EwKernel {
+        if let Some(f) = forced_ew_kernel() {
+            return f;
+        }
+        match k.resolve() {
+            Kernel::Scalar | Kernel::Unrolled | Kernel::PackedScalar => EwKernel::Scalar,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 | Kernel::PackedAvx2 => EwKernel::Avx2,
+            #[cfg(all(target_arch = "x86_64", feature = "vnni"))]
+            Kernel::PackedVnni => EwKernel::Avx2,
+            #[cfg(target_arch = "aarch64")]
+            Kernel::PackedNeonDot => EwKernel::Neon,
+            // `Kernel::resolve` never returns `Auto`, but the compiler
+            // cannot know that; scalar is always safe.
+            Kernel::Auto => EwKernel::Scalar,
+        }
+    }
+}
+
+/// `QUANTASR_EW_KERNEL` override (parsed once): forces the elementwise
+/// rung independently of the GEMM kernel.  Unknown names or rungs this
+/// CPU can't run fall back to auto with a warning.
+fn forced_ew_kernel() -> Option<EwKernel> {
+    static FORCED: OnceLock<Option<EwKernel>> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        let v = std::env::var("QUANTASR_EW_KERNEL").ok()?;
+        match v.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => None,
+            "scalar" => Some(EwKernel::Scalar),
+            #[cfg(target_arch = "x86_64")]
+            "avx2" if crate::quant::gemm::avx2_available() => Some(EwKernel::Avx2),
+            #[cfg(target_arch = "aarch64")]
+            "neon" => Some(EwKernel::Neon),
+            other => {
+                eprintln!(
+                    "QUANTASR_EW_KERNEL='{other}' unknown or unavailable on this CPU; \
+                     falling back to auto dispatch"
+                );
+                None
+            }
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference: the polynomial sigmoid/tanh and their shared exp2 core
+// ---------------------------------------------------------------------------
+
+/// log2(e), rounded to f32.
+const LOG2E: f32 = 1.442_695_f32;
+/// −2·log2(e), rounded to f32 (tanh argument folding).
+const N2LOG2E: f32 = -2.885_39_f32;
+/// 1.5·2²³ — adding and subtracting this rounds to the nearest integer
+/// (ties to even) identically in scalar and SIMD arithmetic.
+const MAGIC: f32 = 12_582_912.0;
+/// `sigmoid(±30)` saturates to 1.0/9.4e-14 in f32; clamping here also
+/// bounds the exp2 exponent far away from denormals.
+const SIG_CLAMP: f32 = 30.0;
+/// `tanh(±15)` saturates to ±1 in f32.
+const TANH_CLAMP: f32 = 15.0;
+
+/// Degree-7 coefficients of 2^f on [-½, ½] (Taylor: (ln2)^k / k!).
+const C1: f32 = 0.693_147_2_f32;
+const C2: f32 = 0.240_226_5_f32;
+const C3: f32 = 0.055_504_11_f32;
+const C4: f32 = 0.009_618_129_f32;
+const C5: f32 = 0.001_333_355_8_f32;
+const C6: f32 = 1.540_353e-4_f32;
+const C7: f32 = 1.525_273_4e-5_f32;
+
+/// `if a < b { a } else { b }` — the exact SIMD `min` semantics
+/// (`_mm256_min_ps(a, b)` returns `b` on NaN/equal), used for the
+/// activation clamps so the scalar reference mirrors the SIMD rungs.
+#[inline(always)]
+fn min_simd(a: f32, b: f32) -> f32 {
+    if a < b {
+        a
+    } else {
+        b
+    }
+}
+
+/// 2^t for t ∈ [−126, 0], bit-identically reproducible in SIMD: magic
+/// round-to-nearest-even, plain (non-FMA) Horner, integer exponent scale.
+#[inline(always)]
+fn exp2m_ref(t: f32) -> f32 {
+    let kf = (t + MAGIC) - MAGIC;
+    let f = t - kf;
+    let mut p = C7;
+    p = p * f + C6;
+    p = p * f + C5;
+    p = p * f + C4;
+    p = p * f + C3;
+    p = p * f + C2;
+    p = p * f + C1;
+    p = p * f + 1.0;
+    // kf is exactly integral, so truncation == nearest == the SIMD cvt.
+    let k = kf as i32;
+    let scale = f32::from_bits(((k + 127) as u32) << 23);
+    p * scale
+}
+
+/// Scalar-reference logistic sigmoid (the elementwise path's reference
+/// semantics — within 1e-6 absolute of libm; see module docs).
+#[inline(always)]
+pub fn sigmoid_ref(x: f32) -> f32 {
+    let ax = min_simd(f32::from_bits(x.to_bits() & 0x7FFF_FFFF), SIG_CLAMP);
+    let e = exp2m_ref(-ax * LOG2E);
+    let sp = 1.0 / (1.0 + e);
+    if x < 0.0 {
+        e * sp
+    } else {
+        sp
+    }
+}
+
+/// Scalar-reference tanh (within 1e-6 absolute of libm).
+#[inline(always)]
+pub fn tanh_ref(x: f32) -> f32 {
+    let ax = min_simd(f32::from_bits(x.to_bits() & 0x7FFF_FFFF), TANH_CLAMP);
+    let e = exp2m_ref(N2LOG2E * ax);
+    let q = 1.0 / (1.0 + e);
+    let r = (1.0 - e) * q;
+    f32::from_bits(r.to_bits() | (x.to_bits() & 0x8000_0000))
+}
+
+/// Scalar fused cell update for elements `j0..j1` of one row — also the
+/// tail handler for the SIMD rows (bit-identical by construction).
+/// Layout: `g` is the `[i | f | g | o]` gate row (4·n), `c`/`h` are the
+/// n-element cell/output rows.
+fn lstm_cell_row_scalar(g: &[f32], c: &mut [f32], h: &mut [f32], n: usize, j0: usize, j1: usize) {
+    for j in j0..j1 {
+        let i_g = sigmoid_ref(g[j]);
+        let f_g = sigmoid_ref(g[n + j]);
+        let g_g = tanh_ref(g[2 * n + j]);
+        let o_g = sigmoid_ref(g[3 * n + j]);
+        let c_new = f_g * c[j] + i_g * g_g;
+        c[j] = c_new;
+        h[j] = o_g * tanh_ref(c_new);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 rung
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn exp2m(t: __m256) -> __m256 {
+        let magic = _mm256_set1_ps(MAGIC);
+        let kf = _mm256_sub_ps(_mm256_add_ps(t, magic), magic);
+        let f = _mm256_sub_ps(t, kf);
+        let mut p = _mm256_set1_ps(C7);
+        p = _mm256_add_ps(_mm256_mul_ps(p, f), _mm256_set1_ps(C6));
+        p = _mm256_add_ps(_mm256_mul_ps(p, f), _mm256_set1_ps(C5));
+        p = _mm256_add_ps(_mm256_mul_ps(p, f), _mm256_set1_ps(C4));
+        p = _mm256_add_ps(_mm256_mul_ps(p, f), _mm256_set1_ps(C3));
+        p = _mm256_add_ps(_mm256_mul_ps(p, f), _mm256_set1_ps(C2));
+        p = _mm256_add_ps(_mm256_mul_ps(p, f), _mm256_set1_ps(C1));
+        p = _mm256_add_ps(_mm256_mul_ps(p, f), _mm256_set1_ps(1.0));
+        let k = _mm256_cvtps_epi32(kf);
+        let scale = _mm256_castsi256_ps(_mm256_slli_epi32(
+            _mm256_add_epi32(k, _mm256_set1_epi32(127)),
+            23,
+        ));
+        _mm256_mul_ps(p, scale)
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn sigmoid(x: __m256) -> __m256 {
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+        let ax = _mm256_min_ps(_mm256_and_ps(x, absmask), _mm256_set1_ps(SIG_CLAMP));
+        let e = exp2m(_mm256_mul_ps(ax, _mm256_set1_ps(-LOG2E)));
+        let one = _mm256_set1_ps(1.0);
+        let sp = _mm256_div_ps(one, _mm256_add_ps(one, e));
+        let sn = _mm256_mul_ps(e, sp);
+        let neg = _mm256_cmp_ps(x, _mm256_setzero_ps(), _CMP_LT_OQ);
+        _mm256_blendv_ps(sp, sn, neg)
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn tanh(x: __m256) -> __m256 {
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+        let ax = _mm256_min_ps(_mm256_and_ps(x, absmask), _mm256_set1_ps(TANH_CLAMP));
+        let e = exp2m(_mm256_mul_ps(ax, _mm256_set1_ps(N2LOG2E)));
+        let one = _mm256_set1_ps(1.0);
+        let q = _mm256_div_ps(one, _mm256_add_ps(one, e));
+        let r = _mm256_mul_ps(_mm256_sub_ps(one, e), q);
+        // tanh is odd and r >= 0: OR the argument's sign bit back in.
+        let sign = _mm256_andnot_ps(absmask, x);
+        _mm256_or_ps(r, sign)
+    }
+
+    /// Fused cell update over one row, 8 lanes at a time (scalar tail).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available; slice lengths as in
+    /// [`lstm_cell_row_scalar`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lstm_cell_row(g: &[f32], c: &mut [f32], h: &mut [f32], n: usize) {
+        let mut j = 0;
+        while j + 8 <= n {
+            let i_g = sigmoid(_mm256_loadu_ps(g.as_ptr().add(j)));
+            let f_g = sigmoid(_mm256_loadu_ps(g.as_ptr().add(n + j)));
+            let g_g = tanh(_mm256_loadu_ps(g.as_ptr().add(2 * n + j)));
+            let o_g = sigmoid(_mm256_loadu_ps(g.as_ptr().add(3 * n + j)));
+            let cv = _mm256_loadu_ps(c.as_ptr().add(j));
+            let c_new = _mm256_add_ps(_mm256_mul_ps(f_g, cv), _mm256_mul_ps(i_g, g_g));
+            _mm256_storeu_ps(c.as_mut_ptr().add(j), c_new);
+            let hv = _mm256_mul_ps(o_g, tanh(c_new));
+            _mm256_storeu_ps(h.as_mut_ptr().add(j), hv);
+            j += 8;
+        }
+        if j < n {
+            lstm_cell_row_scalar(g, c, h, n, j, n);
+        }
+    }
+
+    /// Vector min/max scan.  NaN elements are **ignored** on every rung —
+    /// `_mm256_min_ps(x, acc)` returns `acc` (the second operand) when
+    /// `x` is NaN, the same semantics as the `f32::min` fold the scalar
+    /// rung uses — so the derived quantization range is identical across
+    /// rungs even for non-finite rows (the historical
+    /// `QuantParams::from_slice` behavior).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn minmax(v: &[f32]) -> (f32, f32) {
+        let n = v.len();
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        let mut i = 0;
+        if n >= 8 {
+            let mut vmn = _mm256_set1_ps(f32::INFINITY);
+            let mut vmx = _mm256_set1_ps(f32::NEG_INFINITY);
+            while i + 8 <= n {
+                let x = _mm256_loadu_ps(v.as_ptr().add(i));
+                // x first: NaN lanes keep the accumulator (NaN-ignoring)
+                vmn = _mm256_min_ps(x, vmn);
+                vmx = _mm256_max_ps(x, vmx);
+                i += 8;
+            }
+            let mut lanes = [0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), vmn);
+            for &l in &lanes {
+                mn = mn.min(l);
+            }
+            _mm256_storeu_ps(lanes.as_mut_ptr(), vmx);
+            for &l in &lanes {
+                mx = mx.max(l);
+            }
+        }
+        while i < n {
+            mn = mn.min(v[i]);
+            mx = mx.max(v[i]);
+            i += 1;
+        }
+        (mn, mx)
+    }
+
+    /// Exact round-half-away-from-zero on non-negative doubles: candidate
+    /// `trunc(a + ½)` can only overshoot by one (when `a + ½` rounds up
+    /// across an integer), detected by the exact compare `a < r − ½`
+    /// (`r − ½` is exact for r < 2⁵²).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn round_half_away_abs(a: __m256d, half: __m256d, one: __m256d) -> __m256d {
+        let r = _mm256_round_pd(_mm256_add_pd(a, half), _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC);
+        let over = _mm256_cmp_pd(a, _mm256_sub_pd(r, half), _CMP_LT_OQ);
+        _mm256_sub_pd(r, _mm256_and_pd(over, one))
+    }
+
+    /// Quantize 4 f64 lanes: `clamp(round_half_away(q·x) − zp, 0, scale)`
+    /// as exact integer-valued f64 arithmetic, then an exact cvt to i32.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn quant4(
+        x: __m256d,
+        q: __m256d,
+        zp: __m256d,
+        cap: __m256d,
+        zero: __m256d,
+        half: __m256d,
+        one: __m256d,
+        absmask: __m256d,
+    ) -> __m128i {
+        let t = _mm256_mul_pd(q, x);
+        // Zero NaN lanes up front: the scalar `(NaN).round() as i64` is 0,
+        // so rounding 0.0 here keeps NaN inputs bit-identical to scalar.
+        let t = _mm256_and_pd(t, _mm256_cmp_pd(t, t, _CMP_ORD_Q));
+        let a = _mm256_and_pd(t, absmask);
+        let r = round_half_away_abs(a, half, one);
+        // restore the sign (r >= 0, so OR-ing the sign bit negates)
+        let r = _mm256_or_pd(r, _mm256_andnot_pd(absmask, t));
+        let d = _mm256_min_pd(_mm256_max_pd(_mm256_sub_pd(r, zp), zero), cap);
+        _mm256_cvtpd_epi32(d)
+    }
+
+    /// Quantize a slice against `p` and return the integer sum —
+    /// bit-identical to the scalar [`QuantParams::quantize`] loop (the
+    /// f64 product, the round-half-away, the zero-point subtraction and
+    /// the clamp are all reproduced exactly; the caller's dispatch gate
+    /// bounds |zp| so the f64 arithmetic stays exact).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available; `src.len() == dst.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_slice_sum(p: &QuantParams, src: &[f32], dst: &mut [u8]) -> i32 {
+        let n = src.len();
+        let q = _mm256_set1_pd(p.q as f64);
+        let zp = _mm256_set1_pd(p.zp as f64);
+        let cap = _mm256_set1_pd(p.scale as f64);
+        let zero = _mm256_setzero_pd();
+        let half = _mm256_set1_pd(0.5);
+        let one = _mm256_set1_pd(1.0);
+        let absmask = _mm256_castsi256_pd(_mm256_set1_epi64x(0x7FFF_FFFF_FFFF_FFFFu64 as i64));
+        let mut sumv = _mm_setzero_si128();
+        let mut i = 0;
+        while i + 8 <= n {
+            let x8 = _mm256_loadu_ps(src.as_ptr().add(i));
+            let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(x8));
+            let hi = _mm256_cvtps_pd(_mm256_extractf128_ps(x8, 1));
+            let qlo = quant4(lo, q, zp, cap, zero, half, one, absmask);
+            let qhi = quant4(hi, q, zp, cap, zero, half, one, absmask);
+            let w16 = _mm_packs_epi32(qlo, qhi);
+            let b8 = _mm_packus_epi16(w16, w16);
+            _mm_storel_epi64(dst.as_mut_ptr().add(i) as *mut __m128i, b8);
+            sumv = _mm_add_epi32(sumv, _mm_add_epi32(qlo, qhi));
+            i += 8;
+        }
+        let s = _mm_add_epi32(sumv, _mm_shuffle_epi32(sumv, 0b00_01_10_11));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
+        let mut sum = _mm_cvtsi128_si32(s);
+        while i < n {
+            let v = p.quantize(src[i]);
+            dst[i] = v;
+            sum += v as i32;
+            i += 1;
+        }
+        sum
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON rung (aarch64; NEON is baseline, no runtime detection needed)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::*;
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// aarch64 only (NEON is a baseline feature there).
+    #[inline]
+    unsafe fn exp2m(t: float32x4_t) -> float32x4_t {
+        let magic = vdupq_n_f32(MAGIC);
+        let kf = vsubq_f32(vaddq_f32(t, magic), magic);
+        let f = vsubq_f32(t, kf);
+        let mut p = vdupq_n_f32(C7);
+        p = vaddq_f32(vmulq_f32(p, f), vdupq_n_f32(C6));
+        p = vaddq_f32(vmulq_f32(p, f), vdupq_n_f32(C5));
+        p = vaddq_f32(vmulq_f32(p, f), vdupq_n_f32(C4));
+        p = vaddq_f32(vmulq_f32(p, f), vdupq_n_f32(C3));
+        p = vaddq_f32(vmulq_f32(p, f), vdupq_n_f32(C2));
+        p = vaddq_f32(vmulq_f32(p, f), vdupq_n_f32(C1));
+        p = vaddq_f32(vmulq_f32(p, f), vdupq_n_f32(1.0));
+        let k = vcvtq_s32_f32(kf); // kf integral: truncation is exact
+        let scale = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(k, vdupq_n_s32(127))));
+        vmulq_f32(p, scale)
+    }
+
+    /// `a < b ? a : b` per lane — matches the scalar [`min_simd`] (and the
+    /// x86 `min_ps`) semantics exactly, unlike `vminq_f32` on NaN.
+    #[inline]
+    unsafe fn min_sel(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vbslq_f32(vcltq_f32(a, b), a, b)
+    }
+
+    #[inline]
+    unsafe fn max_sel(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vbslq_f32(vcgtq_f32(a, b), a, b)
+    }
+
+    #[inline]
+    unsafe fn sigmoid(x: float32x4_t) -> float32x4_t {
+        let ax = min_sel(vabsq_f32(x), vdupq_n_f32(SIG_CLAMP));
+        let e = exp2m(vmulq_f32(ax, vdupq_n_f32(-LOG2E)));
+        let one = vdupq_n_f32(1.0);
+        let sp = vdivq_f32(one, vaddq_f32(one, e));
+        let sn = vmulq_f32(e, sp);
+        let neg = vcltq_f32(x, vdupq_n_f32(0.0));
+        vbslq_f32(neg, sn, sp)
+    }
+
+    #[inline]
+    unsafe fn tanh(x: float32x4_t) -> float32x4_t {
+        let ax = min_sel(vabsq_f32(x), vdupq_n_f32(TANH_CLAMP));
+        let e = exp2m(vmulq_f32(ax, vdupq_n_f32(N2LOG2E)));
+        let one = vdupq_n_f32(1.0);
+        let q = vdivq_f32(one, vaddq_f32(one, e));
+        let r = vmulq_f32(vsubq_f32(one, e), q);
+        let sign = vandq_u32(vreinterpretq_u32_f32(x), vdupq_n_u32(0x8000_0000));
+        vreinterpretq_f32_u32(vorrq_u32(vreinterpretq_u32_f32(r), sign))
+    }
+
+    /// Fused cell update over one row, 4 lanes at a time (scalar tail).
+    ///
+    /// # Safety
+    /// aarch64 only; slice lengths as in [`lstm_cell_row_scalar`].
+    pub unsafe fn lstm_cell_row(g: &[f32], c: &mut [f32], h: &mut [f32], n: usize) {
+        let mut j = 0;
+        while j + 4 <= n {
+            let i_g = sigmoid(vld1q_f32(g.as_ptr().add(j)));
+            let f_g = sigmoid(vld1q_f32(g.as_ptr().add(n + j)));
+            let g_g = tanh(vld1q_f32(g.as_ptr().add(2 * n + j)));
+            let o_g = sigmoid(vld1q_f32(g.as_ptr().add(3 * n + j)));
+            let cv = vld1q_f32(c.as_ptr().add(j));
+            let c_new = vaddq_f32(vmulq_f32(f_g, cv), vmulq_f32(i_g, g_g));
+            vst1q_f32(c.as_mut_ptr().add(j), c_new);
+            let hv = vmulq_f32(o_g, tanh(c_new));
+            vst1q_f32(h.as_mut_ptr().add(j), hv);
+            j += 4;
+        }
+        if j < n {
+            lstm_cell_row_scalar(g, c, h, n, j, n);
+        }
+    }
+
+    /// Vector min/max scan.  NaN elements are ignored (the accumulator
+    /// wins the select when the comparison is unordered), matching the
+    /// scalar `f32::min`/`f32::max` fold on every rung.
+    ///
+    /// # Safety
+    /// aarch64 only.
+    pub unsafe fn minmax(v: &[f32]) -> (f32, f32) {
+        let n = v.len();
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        let mut i = 0;
+        if n >= 4 {
+            let mut vmn = vdupq_n_f32(f32::INFINITY);
+            let mut vmx = vdupq_n_f32(f32::NEG_INFINITY);
+            while i + 4 <= n {
+                let x = vld1q_f32(v.as_ptr().add(i));
+                // x first: NaN lanes keep the accumulator (NaN-ignoring)
+                vmn = min_sel(x, vmn);
+                vmx = max_sel(x, vmx);
+                i += 4;
+            }
+            let mut lanes = [0f32; 4];
+            vst1q_f32(lanes.as_mut_ptr(), vmn);
+            for &l in &lanes {
+                mn = mn.min(l);
+            }
+            vst1q_f32(lanes.as_mut_ptr(), vmx);
+            for &l in &lanes {
+                mx = mx.max(l);
+            }
+        }
+        while i < n {
+            mn = mn.min(v[i]);
+            mx = mx.max(v[i]);
+            i += 1;
+        }
+        (mn, mx)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch entry points
+// ---------------------------------------------------------------------------
+
+/// Fused LSTM cell update over contiguous batch rows: one pass over the
+/// `[batch, 4n]` gate buffer computing `i,f,g,o` nonlinearities, the cell
+/// update `c = f·c + i·g` and the pre-projection output `h = o·tanh(c)`
+/// written straight into `h [batch, n]` — the gate buffer is only read.
+pub fn lstm_cell_batch(
+    gates: &[f32],
+    c: &mut [f32],
+    h: &mut [f32],
+    batch: usize,
+    n: usize,
+    kernel: EwKernel,
+) {
+    debug_assert!(gates.len() >= batch * 4 * n);
+    debug_assert!(c.len() >= batch * n);
+    debug_assert!(h.len() >= batch * n);
+    let kernel = kernel.resolve();
+    for r in 0..batch {
+        lstm_cell_row_dispatch(
+            &gates[r * 4 * n..(r + 1) * 4 * n],
+            &mut c[r * n..(r + 1) * n],
+            &mut h[r * n..(r + 1) * n],
+            n,
+            kernel,
+        );
+    }
+}
+
+/// Lane-masked fused cell update over lane-resident buffers: only the
+/// rows listed in `lanes` are read and updated.  Per lane, bit-identical
+/// to [`lstm_cell_batch`] on that row alone.
+pub fn lstm_cell_lanes(
+    gates: &[f32],
+    c: &mut [f32],
+    h: &mut [f32],
+    max_lanes: usize,
+    lanes: &[usize],
+    n: usize,
+    kernel: EwKernel,
+) {
+    debug_assert!(gates.len() >= max_lanes * 4 * n);
+    debug_assert!(c.len() >= max_lanes * n);
+    debug_assert!(h.len() >= max_lanes * n);
+    let kernel = kernel.resolve();
+    for &r in lanes {
+        debug_assert!(r < max_lanes);
+        lstm_cell_row_dispatch(
+            &gates[r * 4 * n..(r + 1) * 4 * n],
+            &mut c[r * n..(r + 1) * n],
+            &mut h[r * n..(r + 1) * n],
+            n,
+            kernel,
+        );
+    }
+}
+
+/// `kernel` must already be resolved.
+fn lstm_cell_row_dispatch(g: &[f32], c: &mut [f32], h: &mut [f32], n: usize, kernel: EwKernel) {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `EwKernel::resolve` clamps Avx2 to Scalar when the CPU
+        // lacks it, so this arm is only reachable with AVX2 present.
+        EwKernel::Avx2 => unsafe { avx2::lstm_cell_row(g, c, h, n) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is an aarch64 baseline feature.
+        EwKernel::Neon => unsafe { neon::lstm_cell_row(g, c, h, n) },
+        _ => lstm_cell_row_scalar(g, c, h, n, 0, n),
+    }
+}
+
+/// Min/max of a slice — the quantization range scan (eq. 2).  Every rung
+/// reproduces the `f32::min`/`f32::max` fold of the historical
+/// `QuantParams::from_slice` — including its NaN-ignoring behavior — so
+/// derived quantization params can never depend on the rung, even for
+/// non-finite rows.  Returns `(+inf, −inf)` for an empty slice.
+pub fn minmax(v: &[f32], kernel: EwKernel) -> (f32, f32) {
+    match kernel.resolve() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: resolve() guarantees AVX2 here.
+        EwKernel::Avx2 => unsafe { avx2::minmax(v) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is an aarch64 baseline feature.
+        EwKernel::Neon => unsafe { neon::minmax(v) },
+        _ => {
+            let mut mn = f32::INFINITY;
+            let mut mx = f32::NEG_INFINITY;
+            for &x in v {
+                mn = mn.min(x);
+                mx = mx.max(x);
+            }
+            (mn, mx)
+        }
+    }
+}
+
+/// Quantize `src` against `p` into `dst` and return the integer row sum —
+/// the single (eq. 2) definition shared by every GEMM input-quantization
+/// path.  The AVX2 rung reproduces [`QuantParams::quantize`] bit-exactly
+/// (f64 product, round-half-away, zero-point, clamp); it is only
+/// dispatched when `|zp| < 2⁵¹` so all intermediate f64 integers stay
+/// exact (degenerate ranges fall back to the scalar loop).
+pub fn quantize_slice_sum(p: &QuantParams, src: &[f32], dst: &mut [u8], kernel: EwKernel) -> i32 {
+    debug_assert_eq!(src.len(), dst.len());
+    match kernel.resolve() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: resolve() guarantees AVX2 here.
+        EwKernel::Avx2 if p.zp.unsigned_abs() < (1u64 << 51) => unsafe {
+            avx2::quantize_slice_sum(p, src, dst)
+        },
+        _ => {
+            let mut sum = 0i32;
+            for (o, &x) in dst.iter_mut().zip(src) {
+                let v = p.quantize(x);
+                *o = v;
+                sum += v as i32;
+            }
+            sum
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    fn available_rungs() -> Vec<EwKernel> {
+        let mut ks = vec![EwKernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        if crate::quant::gemm::avx2_available() {
+            ks.push(EwKernel::Avx2);
+        }
+        #[cfg(target_arch = "aarch64")]
+        ks.push(EwKernel::Neon);
+        ks.push(EwKernel::Auto);
+        ks
+    }
+
+    #[test]
+    fn reference_activations_within_1e6_of_libm() {
+        // The documented accuracy bound: ≤ 1e-6 absolute vs f64 libm,
+        // swept over a dense grid crossing both saturation knees.
+        let mut x = -40.0f64;
+        while x <= 40.0 {
+            let xf = x as f32;
+            let sig = 1.0 / (1.0 + (-x).exp());
+            let th = x.tanh();
+            assert!(
+                (sigmoid_ref(xf) as f64 - sig).abs() <= 1e-6,
+                "sigmoid({xf}): {} vs {sig}",
+                sigmoid_ref(xf)
+            );
+            assert!(
+                (tanh_ref(xf) as f64 - th).abs() <= 1e-6,
+                "tanh({xf}): {} vs {th}",
+                tanh_ref(xf)
+            );
+            x += 1.37e-3;
+        }
+        // extremes saturate and stay finite
+        assert_eq!(sigmoid_ref(1e10), 1.0);
+        assert!(sigmoid_ref(-1e10) >= 0.0 && sigmoid_ref(-1e10) < 1e-12);
+        assert_eq!(tanh_ref(1e10), 1.0);
+        assert_eq!(tanh_ref(-1e10), -1.0);
+        assert_eq!(tanh_ref(0.0), 0.0);
+    }
+
+    #[test]
+    fn fused_rungs_bit_identical_to_scalar_all_widths() {
+        // Odd cell dims crossing every SIMD tail boundary (1..=33 covers
+        // n % 8 and n % 4 remainders), random gates/state.
+        for n in 1..=33usize {
+            let mut g = Gen::new(0xE11 + n as u64);
+            let batch = 3;
+            let gates = g.vec_normal(batch * 4 * n, 3.0);
+            let c0 = g.vec_normal(batch * n, 1.0);
+            let mut c_ref = c0.clone();
+            let mut h_ref = vec![0f32; batch * n];
+            lstm_cell_batch(&gates, &mut c_ref, &mut h_ref, batch, n, EwKernel::Scalar);
+            for &k in &available_rungs() {
+                let mut c = c0.clone();
+                let mut h = vec![0f32; batch * n];
+                lstm_cell_batch(&gates, &mut c, &mut h, batch, n, k);
+                assert_eq!(c, c_ref, "rung {k:?} n={n} diverged (c)");
+                assert_eq!(h, h_ref, "rung {k:?} n={n} diverged (h)");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_lanes_bit_identical_to_batch_rows() {
+        forall("ew lanes", 40, 0x1A4E5, |g: &mut Gen| {
+            let max_lanes = g.usize_in(1, 6);
+            let n = g.usize_in(1, 40);
+            let gates = g.vec_normal(max_lanes * 4 * n, 3.0);
+            let c0 = g.vec_normal(max_lanes * n, 1.0);
+            let lanes: Vec<usize> = (0..max_lanes).filter(|_| g.bool()).collect();
+            let lanes =
+                if lanes.is_empty() { vec![g.usize_in(0, max_lanes - 1)] } else { lanes };
+            for &k in &available_rungs() {
+                let mut c_full = c0.clone();
+                let mut h_full = vec![0f32; max_lanes * n];
+                lstm_cell_batch(&gates, &mut c_full, &mut h_full, max_lanes, n, k);
+                let mut c = c0.clone();
+                let mut h = vec![f32::NAN; max_lanes * n];
+                lstm_cell_lanes(&gates, &mut c, &mut h, max_lanes, &lanes, n, k);
+                for lane in 0..max_lanes {
+                    if lanes.contains(&lane) {
+                        assert_eq!(
+                            c[lane * n..(lane + 1) * n],
+                            c_full[lane * n..(lane + 1) * n],
+                            "rung {k:?}"
+                        );
+                        assert_eq!(
+                            h[lane * n..(lane + 1) * n],
+                            h_full[lane * n..(lane + 1) * n],
+                            "rung {k:?}"
+                        );
+                    } else {
+                        // inactive lanes untouched
+                        assert_eq!(c[lane * n..(lane + 1) * n], c0[lane * n..(lane + 1) * n]);
+                        assert!(h[lane * n..(lane + 1) * n].iter().all(|v| v.is_nan()));
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn minmax_matches_scalar_fold() {
+        forall("minmax", 60, 0x3147, |g: &mut Gen| {
+            let n = g.usize_in(0, 200);
+            let mut v = g.vec_normal(n, 5.0);
+            // NaN elements must be *ignored* identically on every rung
+            // (the f32::min/f32::max fold semantics QuantParams::from_slice
+            // always had) — a diverged stream's NaN row must not make
+            // quantization params rung-dependent.
+            if n >= 3 && g.bool() {
+                v[g.usize_in(0, n - 1)] = f32::NAN;
+            }
+            let mut mn = f32::INFINITY;
+            let mut mx = f32::NEG_INFINITY;
+            for &x in &v {
+                mn = mn.min(x);
+                mx = mx.max(x);
+            }
+            for &k in &available_rungs() {
+                let (a, b) = minmax(&v, k);
+                if n == 0 {
+                    assert!(a.is_infinite() && b.is_infinite());
+                } else {
+                    assert_eq!((a, b), (mn, mx), "rung {k:?}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_rungs_bit_identical_to_scheme() {
+        // Every rung must reproduce QuantParams::quantize exactly —
+        // including values sitting on round-half boundaries and inputs
+        // outside the derived range (clamping).
+        forall("quantize simd", 60, 0x9B172, |g: &mut Gen| {
+            let n = g.usize_in(0, 130);
+            let lo = g.f32_in(-8.0, 0.0);
+            let hi = lo + g.f32_in(1e-5, 16.0);
+            let mut v = g.vec_f32(n, lo, hi);
+            // adversarial: exact range ends, out-of-range values, and a
+            // NaN (params ignore it; its quantized byte is clamp(−zp) on
+            // every rung — determinism must survive diverged streams)
+            if n >= 5 {
+                v[0] = lo;
+                v[1] = hi;
+                v[2] = lo - 1.0;
+                v[3] = hi + 1.0;
+                v[4] = f32::NAN;
+            }
+            let p = QuantParams::from_slice(&v);
+            let mut want = vec![0u8; n];
+            let mut want_sum = 0i32;
+            for (o, &x) in want.iter_mut().zip(&v) {
+                *o = p.quantize(x);
+                want_sum += *o as i32;
+            }
+            for &k in &available_rungs() {
+                let mut got = vec![0u8; n];
+                let sum = quantize_slice_sum(&p, &v, &mut got, k);
+                assert_eq!(got, want, "rung {k:?}");
+                assert_eq!(sum, want_sum, "rung {k:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_grid_halfway_points_exact() {
+        // A uniform grid lands many products exactly on n + 0.5 — the
+        // adversarial case for the SIMD round emulation.
+        let p = QuantParams::from_range(0.0, 255.0);
+        let v: Vec<f32> = (0..511).map(|i| i as f32 * 0.5).collect();
+        let mut want = vec![0u8; v.len()];
+        let mut want_sum = 0i32;
+        for (o, &x) in want.iter_mut().zip(&v) {
+            *o = p.quantize(x);
+            want_sum += *o as i32;
+        }
+        for &k in &available_rungs() {
+            let mut got = vec![0u8; v.len()];
+            let sum = quantize_slice_sum(&p, &v, &mut got, k);
+            assert_eq!(got, want, "rung {k:?}");
+            assert_eq!(sum, want_sum, "rung {k:?}");
+        }
+    }
+
+    #[test]
+    fn forced_gemm_mapping_is_consistent() {
+        // Scalar GEMM rungs ride with the scalar elementwise rung (unless
+        // QUANTASR_EW_KERNEL overrides, which tests must not set).
+        if std::env::var("QUANTASR_EW_KERNEL").is_ok()
+            || std::env::var("QUANTASR_KERNEL").is_ok()
+        {
+            return; // forced environment: mapping intentionally differs
+        }
+        assert_eq!(EwKernel::for_gemm(Kernel::Scalar), EwKernel::Scalar);
+        assert_eq!(EwKernel::for_gemm(Kernel::PackedScalar), EwKernel::Scalar);
+        #[cfg(target_arch = "x86_64")]
+        if crate::quant::gemm::avx2_available() {
+            assert_eq!(EwKernel::for_gemm(Kernel::PackedAvx2), EwKernel::Avx2);
+        }
+        // Auto resolves to something concrete.
+        assert_ne!(EwKernel::Auto.resolve(), EwKernel::Auto);
+    }
+}

@@ -51,20 +51,37 @@
 //! ## Parallel panel execution
 //!
 //! Packed GEMMs above a work threshold ([`packed_threads`]) fan their
-//! panels out over scoped threads.  Panels own disjoint output columns, so
-//! the split is race-free and — since each output is computed by exactly
-//! one thread with identical arithmetic — bit-identical at any thread
-//! count.  Small (batch-1 GEMV) calls stay serial so latency never pays
-//! for thread spawn.  `QUANTASR_GEMM_THREADS` forces a count (1 = serial,
+//! panels out over the **persistent worker pool**
+//! ([`crate::util::pool::WorkerPool`]): workers park between calls, so
+//! dispatch costs a few µs instead of the tens-of-µs scoped-thread spawn
+//! the old path paid — which is why the parallel threshold sits at ~256K
+//! MACs (batch-1 GEMVs at serving shapes now use multiple cores).
+//! Panels own disjoint output columns, so the split is race-free and —
+//! since each output is computed by exactly one executor with identical
+//! arithmetic, wherever a chunk happens to run — bit-identical at any
+//! thread count.  `QUANTASR_GEMM_THREADS` forces a count (1 = serial,
 //! 0/unset = auto).
+//!
+//! ## Input quantization (and the activation cache)
+//!
+//! Per-row input quantization (the min/max scan + eq. 2 quantize) runs on
+//! the SIMD elementwise rungs ([`crate::quant::elementwise`]) and is
+//! bit-identical to the scalar loop.  [`QActRows`] caches a buffer's
+//! quantized rows with per-row dirty tracking, so a vector consumed by
+//! two quantized GEMMs in one tick (an LSTM layer's `h` feeding its own
+//! `Wh` next step and the next layer's `Wx`) is scanned and quantized
+//! once — `qgemm_cached`/`qgemm_lanes_cached` consume the cache and are
+//! bit-identical to the uncached entry points.
 //!
 //! Plus f32 baselines (`f32` scalar / FMA) for the paper's int8-vs-float
 //! speedup claim (experiment E1).
 
 use std::sync::OnceLock;
 
+use crate::quant::elementwise::{self, EwKernel};
 use crate::quant::qmatrix::{PackedQMatrix, QMatrix};
 use crate::quant::scheme::QuantParams;
+use crate::util::pool::{forced_gemm_threads, WorkerPool};
 
 /// Kernel selection for the integer GEMM (see the module docs for the
 /// full ladder and the bit-exactness contract).
@@ -258,7 +275,7 @@ pub struct QScratch {
 /// are independent of batch composition — running a stream alone or packed
 /// with co-riders yields identical numerics.  At batch 1 this coincides
 /// with the per-tensor quantization of the JAX reference.
-pub fn quantize_input(x: &[f32], batch: usize, in_dim: usize, s: &mut QScratch) {
+pub fn quantize_input(x: &[f32], batch: usize, in_dim: usize, s: &mut QScratch, ew: EwKernel) {
     debug_assert_eq!(x.len(), batch * in_dim);
     s.xq.resize(x.len(), 0);
     s.xrow_sums.clear();
@@ -267,6 +284,7 @@ pub fn quantize_input(x: &[f32], batch: usize, in_dim: usize, s: &mut QScratch) 
         let (p, sum) = quantize_row(
             &x[i * in_dim..(i + 1) * in_dim],
             &mut s.xq[i * in_dim..(i + 1) * in_dim],
+            ew,
         );
         s.xrow_sums.push(sum);
         s.xparams.push(p);
@@ -274,12 +292,18 @@ pub fn quantize_input(x: &[f32], batch: usize, in_dim: usize, s: &mut QScratch) 
 }
 
 /// Quantize one input row (eq. 2) and return its (params, integer row sum)
-/// — the single definition of per-row input quantization shared by the
-/// batch-contiguous and lane-strided entry points, so they cannot drift.
-fn quantize_row(row: &[f32], out: &mut [u8]) -> (QuantParams, i32) {
-    let p = QuantParams::from_slice(row);
-    p.quantize_slice(row, out);
-    let sum = out.iter().map(|&v| v as i32).sum::<i32>();
+/// — the single definition of per-row input quantization shared by every
+/// entry point (batch-contiguous, lane-strided, and the [`QActRows`]
+/// cache), so they cannot drift.  The scan and the quantize run on the
+/// SIMD elementwise rungs, which are bit-identical to the scalar
+/// [`QuantParams`] loop (see `quant::elementwise`).
+fn quantize_row(row: &[f32], out: &mut [u8], ew: EwKernel) -> (QuantParams, i32) {
+    let (vmin, vmax) = elementwise::minmax(row, ew);
+    // from_minmax owns the degenerate/non-finite fallback — the same
+    // definition `QuantParams::from_slice` uses, so the SIMD scan path
+    // cannot drift from the scheme.
+    let p = QuantParams::from_minmax(vmin, vmax);
+    let sum = elementwise::quantize_slice_sum(&p, row, out, ew);
     (p, sum)
 }
 
@@ -295,6 +319,7 @@ pub fn quantize_input_lanes(
     lanes: &[usize],
     in_dim: usize,
     s: &mut QScratch,
+    ew: EwKernel,
 ) {
     debug_assert_eq!(x.len(), max_lanes * in_dim);
     s.xq.resize(x.len(), 0);
@@ -305,9 +330,111 @@ pub fn quantize_input_lanes(
         let (p, sum) = quantize_row(
             &x[lane * in_dim..(lane + 1) * in_dim],
             &mut s.xq[lane * in_dim..(lane + 1) * in_dim],
+            ew,
         );
         s.xrow_sums[lane] = sum;
         s.xparams[lane] = p;
+    }
+}
+
+/// Prequantized activation rows with per-row dirty tracking: one
+/// buffer's quantized bytes, integer row sums and (Q, zp) params, shared
+/// by every quantized GEMM that consumes the buffer.  In the LSTM stack a
+/// layer's `h` output feeds *two* quantized GEMMs — its own `Wh` on the
+/// next step and the next layer's `Wx` on the same tick — so caching the
+/// quantization halves the per-tick scan cost.  Rows are re-quantized
+/// lazily: producers call [`QActRows::invalidate_row`] (or
+/// `invalidate_prefix`) after rewriting a row, consumers call
+/// [`QActRows::ensure_batch`]/[`QActRows::ensure_lanes`] before the GEMM.
+/// Cached rows go through the same [`quantize_row`] as the uncached path,
+/// so `qgemm_cached` is **bit-identical** to `qgemm` on the same floats.
+#[derive(Default, Clone)]
+pub struct QActRows {
+    xq: Vec<u8>,
+    sums: Vec<i32>,
+    params: Vec<QuantParams>,
+    dirty: Vec<bool>,
+    rows: usize,
+    in_dim: usize,
+}
+
+impl QActRows {
+    /// Pre-size for `rows` rows of `in_dim` (all rows start dirty).
+    pub fn sized(rows: usize, in_dim: usize) -> QActRows {
+        let mut c = QActRows::default();
+        c.ensure_shape(rows, in_dim);
+        c
+    }
+
+    fn ensure_shape(&mut self, rows: usize, in_dim: usize) {
+        if self.in_dim == in_dim && self.rows >= rows {
+            return;
+        }
+        let rows = if self.in_dim == in_dim { rows.max(self.rows) } else { rows };
+        self.rows = rows;
+        self.in_dim = in_dim;
+        self.xq.clear();
+        self.xq.resize(rows * in_dim, 0);
+        self.sums.clear();
+        self.sums.resize(rows, 0);
+        self.params.clear();
+        self.params.resize(rows, QuantParams::from_range(0.0, 1.0));
+        self.dirty.clear();
+        self.dirty.resize(rows, true);
+    }
+
+    /// Mark rows `0..rows` stale (their source vector was rewritten).
+    pub fn invalidate_prefix(&mut self, rows: usize) {
+        for d in self.dirty.iter_mut().take(rows) {
+            *d = true;
+        }
+    }
+
+    /// Mark one row stale.
+    pub fn invalidate_row(&mut self, row: usize) {
+        if row < self.dirty.len() {
+            self.dirty[row] = true;
+        }
+    }
+
+    /// Re-quantize the stale rows among `0..batch` of `x [batch, in_dim]`.
+    pub fn ensure_batch(&mut self, x: &[f32], batch: usize, in_dim: usize, ew: EwKernel) {
+        self.ensure_shape(batch, in_dim);
+        debug_assert!(x.len() >= batch * in_dim);
+        for i in 0..batch {
+            if self.dirty[i] {
+                self.requant_row(x, i, ew);
+            }
+        }
+    }
+
+    /// Re-quantize the stale rows among the listed lanes of
+    /// `x [max_rows, in_dim]`.
+    pub fn ensure_lanes(
+        &mut self,
+        x: &[f32],
+        max_rows: usize,
+        lanes: &[usize],
+        in_dim: usize,
+        ew: EwKernel,
+    ) {
+        self.ensure_shape(max_rows, in_dim);
+        debug_assert!(x.len() >= max_rows * in_dim);
+        for &lane in lanes {
+            debug_assert!(lane < max_rows);
+            if self.dirty[lane] {
+                self.requant_row(x, lane, ew);
+            }
+        }
+    }
+
+    fn requant_row(&mut self, x: &[f32], i: usize, ew: EwKernel) {
+        let k = self.in_dim;
+        let (p, sum) =
+            quantize_row(&x[i * k..(i + 1) * k], &mut self.xq[i * k..(i + 1) * k], ew);
+        self.params[i] = p;
+        self.sums[i] = sum;
+        self.dirty[i] = false;
     }
 }
 
@@ -332,7 +459,7 @@ pub fn qgemm(
     assert_eq!(x.len(), batch * w.in_dim);
     assert_eq!(y.len(), batch * w.out_dim);
     assert_eq!(w.params.len(), 1, "qgemm requires per-matrix granularity");
-    quantize_input(x, batch, w.in_dim, scratch);
+    quantize_input(x, batch, w.in_dim, scratch, EwKernel::for_gemm(kernel));
     qgemm_prequantized(batch, w, bias, y, scratch, kernel, accumulate);
 }
 
@@ -348,24 +475,130 @@ pub fn qgemm_prequantized(
     kernel: Kernel,
     accumulate: bool,
 ) {
+    let QScratch { xq, xrow_sums, xparams, xpad, rowctx } = scratch;
+    qgemm_quantized_rows(
+        xq, xrow_sums, xparams, batch, 0..batch, w, bias, y, xpad, rowctx, kernel, accumulate,
+    );
+}
+
+/// Integer GEMM over a [`QActRows`] cache's prequantized rows `0..batch`
+/// — bit-identical to [`qgemm`] on the floats the cache was built from.
+/// The listed rows must be clean (see [`QActRows::ensure_batch`]).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_cached(
+    cache: &QActRows,
+    batch: usize,
+    w: &QMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    scratch: &mut QScratch,
+    kernel: Kernel,
+    accumulate: bool,
+) {
+    assert_eq!(cache.in_dim, w.in_dim, "cache/weight in_dim mismatch");
+    assert!(cache.rows >= batch, "cache holds fewer rows than the batch");
+    assert_eq!(y.len(), batch * w.out_dim);
+    assert_eq!(w.params.len(), 1, "qgemm requires per-matrix granularity");
+    debug_assert!(
+        cache.dirty.iter().take(batch).all(|d| !d),
+        "qgemm_cached on stale rows: call ensure_batch first"
+    );
+    let QScratch { xpad, rowctx, .. } = scratch;
+    qgemm_quantized_rows(
+        &cache.xq,
+        &cache.sums,
+        &cache.params,
+        batch,
+        0..batch,
+        w,
+        bias,
+        y,
+        xpad,
+        rowctx,
+        kernel,
+        accumulate,
+    );
+}
+
+/// Lane-masked integer GEMM over a [`QActRows`] cache — the cached twin
+/// of [`qgemm_lanes`].  The listed lanes must be clean
+/// (see [`QActRows::ensure_lanes`]).
+#[allow(clippy::too_many_arguments)]
+pub fn qgemm_lanes_cached(
+    cache: &QActRows,
+    max_lanes: usize,
+    lanes: &[usize],
+    w: &QMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    scratch: &mut QScratch,
+    kernel: Kernel,
+    accumulate: bool,
+) {
+    assert_eq!(cache.in_dim, w.in_dim, "cache/weight in_dim mismatch");
+    assert!(cache.rows >= max_lanes, "cache holds fewer rows than max_lanes");
+    assert_eq!(y.len(), max_lanes * w.out_dim);
+    assert_eq!(w.params.len(), 1, "qgemm requires per-matrix granularity");
+    debug_assert!(
+        lanes.iter().all(|&l| !cache.dirty[l]),
+        "qgemm_lanes_cached on stale lanes: call ensure_lanes first"
+    );
+    let QScratch { xpad, rowctx, .. } = scratch;
+    qgemm_quantized_rows(
+        &cache.xq,
+        &cache.sums,
+        &cache.params,
+        max_lanes,
+        lanes.iter().copied(),
+        w,
+        bias,
+        y,
+        xpad,
+        rowctx,
+        kernel,
+        accumulate,
+    );
+}
+
+/// The shared quantized-row driver: packed-panel path when the kernel and
+/// matrix support it, row-dot fallback otherwise.  `xq`/`sums`/`params`
+/// are row-indexed by the values `rows` yields (whether they come from
+/// `QScratch` or a [`QActRows`] cache — the arithmetic cannot drift
+/// between the cached and uncached paths because this is the only
+/// implementation).
+#[allow(clippy::too_many_arguments)]
+fn qgemm_quantized_rows(
+    xq: &[u8],
+    sums: &[i32],
+    params: &[QuantParams],
+    total_rows: usize,
+    rows: impl Iterator<Item = usize> + Clone,
+    w: &QMatrix,
+    bias: Option<&[f32]>,
+    y: &mut [f32],
+    xpad: &mut Vec<u8>,
+    rowctx: &mut Vec<RowCtx>,
+    kernel: Kernel,
+    accumulate: bool,
+) {
     let k = w.in_dim;
     let kernel = kernel.resolve().checked();
     if kernel.is_packed() {
         if let Some(pk) = w.packed.as_deref() {
-            build_xpad(scratch, k, pk.k_padded, batch, 0..batch);
-            build_rowctx(scratch, 0..batch, w, pk);
-            qgemm_packed(w, pk, bias, scratch, y, kernel, accumulate);
+            build_xpad(xq, xpad, k, pk.k_padded, total_rows, rows.clone());
+            build_rowctx(rowctx, rows, sums, params, w, pk);
+            qgemm_packed(w, pk, bias, rowctx, xpad, y, kernel, accumulate);
             return;
         }
     }
     let kernel = demote_packed(kernel);
-    for i in 0..batch {
+    for i in rows {
         qgemm_input_row(
             w,
             bias,
-            &scratch.xq[i * k..(i + 1) * k],
-            &scratch.xparams[i],
-            scratch.xrow_sums[i] as i64,
+            &xq[i * k..(i + 1) * k],
+            &params[i],
+            sums[i] as i64,
             &mut y[i * w.out_dim..(i + 1) * w.out_dim],
             kernel,
             accumulate,
@@ -395,30 +628,22 @@ pub fn qgemm_lanes(
     assert_eq!(x.len(), max_lanes * w.in_dim);
     assert_eq!(y.len(), max_lanes * w.out_dim);
     assert_eq!(w.params.len(), 1, "qgemm requires per-matrix granularity");
-    quantize_input_lanes(x, max_lanes, lanes, w.in_dim, scratch);
-    let k = w.in_dim;
-    let kernel = kernel.resolve().checked();
-    if kernel.is_packed() {
-        if let Some(pk) = w.packed.as_deref() {
-            build_xpad(scratch, k, pk.k_padded, max_lanes, lanes.iter().copied());
-            build_rowctx(scratch, lanes.iter().copied(), w, pk);
-            qgemm_packed(w, pk, bias, scratch, y, kernel, accumulate);
-            return;
-        }
-    }
-    let kernel = demote_packed(kernel);
-    for &lane in lanes {
-        qgemm_input_row(
-            w,
-            bias,
-            &scratch.xq[lane * k..(lane + 1) * k],
-            &scratch.xparams[lane],
-            scratch.xrow_sums[lane] as i64,
-            &mut y[lane * w.out_dim..(lane + 1) * w.out_dim],
-            kernel,
-            accumulate,
-        );
-    }
+    quantize_input_lanes(x, max_lanes, lanes, w.in_dim, scratch, EwKernel::for_gemm(kernel));
+    let QScratch { xq, xrow_sums, xparams, xpad, rowctx } = scratch;
+    qgemm_quantized_rows(
+        xq,
+        xrow_sums,
+        xparams,
+        max_lanes,
+        lanes.iter().copied(),
+        w,
+        bias,
+        y,
+        xpad,
+        rowctx,
+        kernel,
+        accumulate,
+    );
 }
 
 /// One quantized input row × every weight row → one output row (row-dot
@@ -556,20 +781,21 @@ pub(crate) struct RowCtx {
     base: i64,
 }
 
-/// Fill `s.rowctx` (reused across calls — no allocation in the steady
+/// Fill `rowctx` (reused across calls — no allocation in the steady
 /// state) with the listed rows' hoisted constants.
 fn build_rowctx(
-    s: &mut QScratch,
+    rowctx: &mut Vec<RowCtx>,
     rows: impl Iterator<Item = usize>,
+    sums: &[i32],
+    params: &[QuantParams],
     w: &QMatrix,
     pk: &PackedQMatrix,
 ) {
     let wp = w.params[0];
-    let QScratch { xrow_sums, xparams, rowctx, .. } = s;
     rowctx.clear();
     rowctx.extend(rows.map(|i| {
-        let xp = &xparams[i];
-        let xsum = xrow_sums[i] as i64;
+        let xp = &params[i];
+        let xsum = sums[i] as i64;
         RowCtx {
             row: i,
             zpx: xp.zp,
@@ -582,13 +808,13 @@ fn build_rowctx(
 /// Copy each listed quantized row into the zero-padded `[rows, k_padded]`
 /// scratch the microkernels stream (padding bytes stay zero — exactness).
 fn build_xpad(
-    s: &mut QScratch,
+    xq: &[u8],
+    xpad: &mut Vec<u8>,
     k: usize,
     k_padded: usize,
     total_rows: usize,
     rows: impl Iterator<Item = usize>,
 ) {
-    let QScratch { xq, xpad, .. } = s;
     xpad.resize(total_rows * k_padded, 0);
     for i in rows {
         let src = &xq[i * k..(i + 1) * k];
@@ -657,13 +883,14 @@ unsafe fn packed_panel_range<const HAS_BIAS: bool, const ACC: bool>(
 }
 
 /// How many threads a packed GEMM of `macs` multiply-accumulates over
-/// `panels` panels should use.  Small calls (batch-1 GEMV) stay serial —
-/// scoped-thread spawn costs tens of µs, which would regress single-stream
-/// latency — so parallelism only kicks in once the work dwarfs the spawn.
+/// `panels` panels should use.  The persistent [`WorkerPool`] makes
+/// dispatch a few µs (workers are parked, not spawned), so the threshold
+/// sits far below the old scoped-thread one: batch-1 GEMVs at serving
+/// shapes (512×2048 ≈ 1M MACs) now fan out instead of waiting for a big
+/// batch.  Tiny calls still stay serial — below ~256K MACs the work
+/// doesn't dwarf even a parked-thread wake.
 fn packed_threads(macs: usize, panels: usize) -> usize {
-    // ~2M MACs ≈ several hundred µs on the scalar rung; cheap calls below
-    // this never pay thread overhead (batch-1 512×2048 ≈ 1M stays serial).
-    const PAR_MIN_MACS: usize = 2 * 1024 * 1024;
+    const PAR_MIN_MACS: usize = 256 * 1024;
     if panels < 2 {
         return 1;
     }
@@ -673,33 +900,14 @@ fn packed_threads(macs: usize, panels: usize) -> usize {
     if macs < PAR_MIN_MACS {
         return 1;
     }
-    available_cpus().min(panels).min(8)
+    // Auto caps at the pool's own ceiling so the executor budget the
+    // pool spawns for is the budget dispatch actually uses.
+    available_cpus().min(panels).min(crate::util::pool::MAX_POOL_THREADS)
 }
 
 fn available_cpus() -> usize {
     static CPUS: OnceLock<usize> = OnceLock::new();
     *CPUS.get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
-}
-
-/// `QUANTASR_GEMM_THREADS` override (parsed once): 0/unset = auto.
-/// Unparseable values warn (like [`forced_kernel`]) — a silent fallback
-/// here would quietly turn a "pinned serial" bench into a threaded one.
-fn forced_gemm_threads() -> Option<usize> {
-    static FORCED: OnceLock<Option<usize>> = OnceLock::new();
-    *FORCED.get_or_init(|| {
-        let v = std::env::var("QUANTASR_GEMM_THREADS").ok()?;
-        match v.trim().parse::<usize>() {
-            Ok(0) => None,
-            Ok(n) => Some(n),
-            Err(_) => {
-                eprintln!(
-                    "QUANTASR_GEMM_THREADS='{}' is not a thread count; using auto",
-                    v.trim()
-                );
-                None
-            }
-        }
-    })
 }
 
 /// Microkernel for a resolved packed kernel.  The SIMD arms are only
@@ -728,18 +936,19 @@ fn packed_micro(kernel: Kernel, pk: &PackedQMatrix) -> fn(&[u8], &[u8]) -> [i32;
 /// Packed-panel GEMM over the listed rows: panel-major loop order (each
 /// NR-row panel is streamed once and dotted against every input row while
 /// it is cache-hot — at batch 8 the old row-dot path re-streamed the whole
-/// matrix per row), parallelized across panels above the work threshold.
+/// matrix per row), parallelized across panels above the work threshold
+/// via the persistent [`WorkerPool`] (parked threads, no per-call spawn).
 #[allow(clippy::too_many_arguments)]
 fn qgemm_packed(
     w: &QMatrix,
     pk: &PackedQMatrix,
     bias: Option<&[f32]>,
-    scratch: &QScratch,
+    rowctx: &[RowCtx],
+    xpad: &[u8],
     y: &mut [f32],
     kernel: Kernel,
     accumulate: bool,
 ) {
-    let rowctx: &[RowCtx] = &scratch.rowctx;
     if rowctx.is_empty() || w.out_dim == 0 {
         return;
     }
@@ -751,7 +960,7 @@ fn qgemm_packed(
         pk,
         bias: bias.unwrap_or(&[]),
         rowctx,
-        xpad: &scratch.xpad,
+        xpad,
         micro: packed_micro(kernel, pk),
     };
     let has_bias = bias.is_some();
@@ -760,7 +969,9 @@ fn qgemm_packed(
     let nthreads = packed_threads(macs, panels);
     let yptr = SendPtr(y.as_mut_ptr());
     // SAFETY: every (row, output) cell is written by exactly one panel and
-    // the panel ranges below partition [0, panels) — no write aliases.
+    // the panel ranges below partition [0, panels) — no write aliases, and
+    // which executor runs a range cannot change its outputs (bit-identical
+    // at any thread count).
     let run = |p0: usize, p1: usize| unsafe {
         match (has_bias, accumulate) {
             (true, true) => packed_panel_range::<true, true>(&ctx, yptr, p0, p1),
@@ -772,16 +983,13 @@ fn qgemm_packed(
     if nthreads <= 1 {
         run(0, panels);
     } else {
-        let chunk = panels.div_ceil(nthreads);
-        std::thread::scope(|s| {
-            for t in 0..nthreads {
-                let (p0, p1) = (t * chunk, ((t + 1) * chunk).min(panels));
-                if p0 >= p1 {
-                    break;
-                }
-                let run = &run;
-                s.spawn(move || run(p0, p1));
-            }
+        // Coarse chunks (a few per executor) claimed dynamically from the
+        // pool's counter: load-balances panel tails without per-panel
+        // sync traffic.
+        let chunk = panels.div_ceil(nthreads * 4).max(1);
+        let nchunks = panels.div_ceil(chunk);
+        WorkerPool::global().run(nthreads, nchunks, &|ci| {
+            run(ci * chunk, ((ci + 1) * chunk).min(panels));
         });
     }
 }
@@ -1498,14 +1706,14 @@ mod tests {
 
     #[test]
     fn packed_parallel_matches_serial_bitwise() {
-        // 4·512·2048 = 4M MACs — 2× the panel-parallel threshold, with
-        // clear margin so a threshold tweak can't silently demote this
-        // back to a serial-path re-test.  The threaded split must stay
-        // bit-identical to the scalar rung.
+        // 4·512·2048 = 4M MACs — 16× the pool's panel-parallel threshold,
+        // with clear margin so a threshold tweak can't silently demote
+        // this back to a serial-path re-test.  The worker-pool split must
+        // stay bit-identical to the scalar rung.
         let mut g = Gen::new(0x9A11);
         let (batch, k, out) = (4usize, 512usize, 2048usize);
         assert!(
-            batch * k * out >= 2 * 2 * 1024 * 1024,
+            batch * k * out >= 2 * 256 * 1024,
             "shape no longer clears the parallel threshold with margin"
         );
         let x = g.vec_normal(batch * k, 1.0);
@@ -1520,6 +1728,76 @@ mod tests {
             qgemm(&x, batch, &w, Some(&bias), &mut y, &mut s, kern, false);
             assert!(y == y_scalar, "kernel {kern:?} diverged under panel parallelism");
         }
+    }
+
+    #[test]
+    fn cached_qgemm_bit_identical_to_uncached() {
+        // The activation cache must be invisible to numerics: quantizing
+        // once into QActRows and running N GEMMs off it equals quantizing
+        // inside each qgemm call, bit for bit, on every rung — including
+        // after dirty-row rewrites.
+        forall("qact cache", 30, 0xCAC4E, |g: &mut Gen| {
+            let batch = g.usize_in(1, 6);
+            let in_dim = g.usize_in(1, 70);
+            let out_dim = g.usize_in(1, 40);
+            let mut x = g.vec_normal(batch * in_dim, 1.0);
+            let wf = g.vec_normal(in_dim * out_dim, 0.5);
+            let bias = g.vec_normal(out_dim, 0.2);
+            let w = QMatrix::from_f32_math_layout(&wf, in_dim, out_dim, Granularity::PerMatrix);
+            let mut cache = QActRows::sized(batch, in_dim);
+            for round in 0..3 {
+                if round > 0 {
+                    // rewrite one row and invalidate it (stale-row path)
+                    let r = g.usize_in(0, batch - 1);
+                    let fresh = g.vec_normal(in_dim, 1.0);
+                    x[r * in_dim..(r + 1) * in_dim].copy_from_slice(&fresh);
+                    cache.invalidate_row(r);
+                }
+                for kern in available_kernels() {
+                    let mut s1 = QScratch::default();
+                    let mut s2 = QScratch::default();
+                    let mut want = vec![0f32; batch * out_dim];
+                    qgemm(&x, batch, &w, Some(&bias), &mut want, &mut s1, kern, false);
+                    cache.ensure_batch(&x, batch, in_dim, EwKernel::for_gemm(kern));
+                    let mut got = vec![0f32; batch * out_dim];
+                    qgemm_cached(&cache, batch, &w, Some(&bias), &mut got, &mut s2, kern, false);
+                    assert!(got == want, "kernel {kern:?} cached != uncached");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn cached_lanes_bit_identical_to_uncached() {
+        forall("qact cache lanes", 25, 0xCAC4F, |g: &mut Gen| {
+            let max_lanes = g.usize_in(1, 6);
+            let in_dim = g.usize_in(1, 50);
+            let out_dim = g.usize_in(1, 30);
+            let x = g.vec_normal(max_lanes * in_dim, 1.0);
+            let wf = g.vec_normal(in_dim * out_dim, 0.5);
+            let w = QMatrix::from_f32_math_layout(&wf, in_dim, out_dim, Granularity::PerMatrix);
+            let lanes: Vec<usize> = (0..max_lanes).filter(|_| g.bool()).collect();
+            let lanes = if lanes.is_empty() { vec![0] } else { lanes };
+            for kern in available_kernels() {
+                let mut cache = QActRows::sized(max_lanes, in_dim);
+                let mut s1 = QScratch::default();
+                let mut s2 = QScratch::default();
+                let mut want = vec![0f32; max_lanes * out_dim];
+                qgemm_lanes(&x, max_lanes, &lanes, &w, None, &mut want, &mut s1, kern, false);
+                cache.ensure_lanes(&x, max_lanes, &lanes, in_dim, EwKernel::for_gemm(kern));
+                let mut got = vec![0f32; max_lanes * out_dim];
+                qgemm_lanes_cached(
+                    &cache, max_lanes, &lanes, &w, None, &mut got, &mut s2, kern, false,
+                );
+                for &lane in &lanes {
+                    assert!(
+                        got[lane * out_dim..(lane + 1) * out_dim]
+                            == want[lane * out_dim..(lane + 1) * out_dim],
+                        "kernel {kern:?} lane {lane}"
+                    );
+                }
+            }
+        });
     }
 
     #[test]

@@ -9,13 +9,21 @@
 //! - [`gemm`] — the hot path: f32 GEMM baseline and the u8×u8→i32 integer
 //!   kernel ladder (scalar/unrolled/AVX2 row-dot rungs and the
 //!   packed-panel `madd_epi16` / AVX-512-VNNI `vpdpbusd` / NEON `dot`
-//!   microkernels with runtime dispatch and panel-parallel execution).
+//!   microkernels with runtime dispatch and worker-pool panel
+//!   parallelism), plus the [`gemm::QActRows`] activation-quantization
+//!   cache.
+//! - [`elementwise`] — the vectorized elementwise ladder: the fused
+//!   SIMD LSTM cell update (polynomial sigmoid/tanh with a scalar
+//!   reference every rung matches bit-for-bit) and the SIMD min/max +
+//!   quantize scan behind input quantization.
 //! - [`error`] — precision/bias error measurement (E2/E3 experiments).
 
+pub mod elementwise;
 pub mod error;
 pub mod gemm;
 pub mod qmatrix;
 pub mod scheme;
 
+pub use elementwise::EwKernel;
 pub use qmatrix::{Granularity, PackedQMatrix, QMatrix};
 pub use scheme::{QuantParams, SCALE};

@@ -62,6 +62,19 @@ impl QuantParams {
             vmin = vmin.min(x);
             vmax = vmax.max(x);
         }
+        Self::from_minmax_scaled(vmin, vmax, scale)
+    }
+
+    /// Derive params from a precomputed range scan — the single
+    /// definition of the degenerate/non-finite fallback, shared by
+    /// [`QuantParams::from_slice`] and the SIMD min/max scan in
+    /// `quant::elementwise` (so the two paths cannot drift).
+    pub fn from_minmax(vmin: f32, vmax: f32) -> Self {
+        Self::from_minmax_scaled(vmin, vmax, SCALE)
+    }
+
+    /// As [`from_minmax`] with an explicit scale.
+    pub fn from_minmax_scaled(vmin: f32, vmax: f32, scale: f32) -> Self {
         if !vmin.is_finite() || !vmax.is_finite() {
             // Empty or non-finite input: degenerate unit range.
             return Self::from_range_scaled(0.0, 1.0, scale);

@@ -1,7 +1,9 @@
 //! Infrastructure the offline image forces us to own: RNG, bench harness,
-//! property-testing helpers, and CLI parsing.
+//! property-testing helpers, CLI parsing, and the persistent GEMM worker
+//! pool.
 
 pub mod bench;
 pub mod cli;
+pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,393 @@
+//! A persistent worker pool for the packed GEMM's panel fan-out.
+//!
+//! The packed-panel GEMM used to spawn scoped threads per call; at tens
+//! of µs per spawn that forced a 2M-MAC serial threshold, so batch-1
+//! single-stream GEMVs could never use a second core.  This pool keeps
+//! workers **parked on a condvar** between calls: dispatching a job is a
+//! mutex publish + `notify_all` (a few µs), so the parallel threshold in
+//! `quant::gemm` drops by an order of magnitude.
+//!
+//! ## Execution model
+//!
+//! A job is a `Fn(usize)` over `chunks` indices.  Chunks are claimed
+//! dynamically from a shared atomic counter — the **submitter
+//! participates** (it is always one of the executors), and up to
+//! `nthreads − 1` pool workers join it.  Dynamic claiming load-balances
+//! uneven chunks; because chunk *assignment* never affects chunk
+//! *results* (GEMM panels own disjoint output columns and apply identical
+//! arithmetic wherever they run), results are bit-identical at any
+//! thread count — the same guarantee the scoped-thread version gave.
+//!
+//! One job runs at a time (`submit` mutex); concurrent submitters queue.
+//! `run` returns only after every participating worker has deregistered,
+//! which is what makes the lifetime-erased task pointer sound: no worker
+//! can touch the closure after `run` returns.
+//!
+//! The global pool ([`WorkerPool::global`]) is created lazily on the
+//! first parallel GEMM and sized from `available_parallelism` (or
+//! `QUANTASR_GEMM_THREADS` when that forces a larger count), capped at
+//! [`MAX_POOL_THREADS`].  Workers park between jobs; dropping a
+//! non-global pool shuts its workers down and joins them (the global
+//! pool lives in a static and dies with the process).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Upper bound on pool threads (parked threads are cheap, but there is no
+/// point outnumbering the panel count of the largest layer).
+pub const MAX_POOL_THREADS: usize = 16;
+
+/// Lifetime-erased task pointer (see the module docs for why this is
+/// sound: `run` does not return while any worker holds it).
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is Sync (shared &-calls from many threads are fine)
+// and the pool's completion protocol bounds its use to the `run` call.
+unsafe impl Send for TaskPtr {}
+
+struct Slot {
+    /// Current job, `None` when idle.  Workers only join while `Some`.
+    task: Option<TaskPtr>,
+    /// Total chunk count of the current job.
+    chunks: usize,
+    /// Cap on concurrently registered workers (honors the caller's
+    /// requested thread count; the submitter is participant #max+1).
+    max_workers: usize,
+    /// Workers currently registered on the job.
+    running: usize,
+    /// Pool is being dropped: parked workers exit instead of waiting.
+    shutdown: bool,
+}
+
+struct Shared {
+    m: Mutex<Slot>,
+    /// Parks idle workers.
+    work: Condvar,
+    /// Wakes the submitter when the last worker deregisters.
+    done: Condvar,
+    /// Next unclaimed chunk index of the current job.
+    next: AtomicUsize,
+}
+
+/// The pool. `workers` is the number of spawned threads (the submitting
+/// thread always participates on top of these).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    submit: Mutex<()>,
+    workers: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` parked threads (0 is valid: every
+    /// `run` then executes inline on the caller).  Dropping the pool
+    /// shuts the workers down and joins them (the global pool lives in a
+    /// static and is never dropped).
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            m: Mutex::new(Slot {
+                task: None,
+                chunks: 0,
+                max_workers: 0,
+                running: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            next: AtomicUsize::new(0),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let s = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("gemm-pool-{i}"))
+                    .spawn(move || worker_loop(&s))
+                    .expect("spawn gemm pool worker"),
+            );
+        }
+        WorkerPool { shared, submit: Mutex::new(()), workers, handles }
+    }
+
+    /// The process-global pool, created on first use.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| WorkerPool::new(default_pool_workers()))
+    }
+
+    /// Spawned worker-thread count (the caller adds one more executor).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute `task(0..chunks)` across up to `nthreads` executors (the
+    /// calling thread plus at most `nthreads − 1` pool workers; clamped
+    /// to the spawned worker count).  Blocks until every chunk has run
+    /// and every worker has left the job.  Panics in `task` on a worker
+    /// thread abort the process (kernels must never unwind mid-GEMM); a
+    /// panic on the calling thread drains the job before unwinding, so
+    /// the task borrow never escapes this call either way.
+    pub fn run(&self, nthreads: usize, chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        if nthreads <= 1 || self.workers == 0 || chunks == 1 {
+            for c in 0..chunks {
+                task(c);
+            }
+            return;
+        }
+        // A panicking task on the submitting thread unwinds through this
+        // guard; the `()` payload carries no state, so recover from the
+        // poison instead of failing every later GEMM with a PoisonError.
+        let _submit = self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        // SAFETY (lifetime erasure): the JobGuard below blocks — on the
+        // normal path *and* on unwind — until `running == 0` with `task`
+        // cleared, so no worker dereferences the pointer after this frame
+        // ends.
+        let task_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(task)
+        };
+        {
+            let mut s = self.shared.m.lock().unwrap();
+            debug_assert!(s.task.is_none() && s.running == 0);
+            self.shared.next.store(0, Ordering::Relaxed);
+            s.chunks = chunks;
+            s.max_workers = (nthreads - 1).min(self.workers);
+            s.task = Some(TaskPtr(task_static));
+            self.shared.work.notify_all();
+        }
+        let _drain = JobGuard { shared: &self.shared, chunks };
+        // The submitter is always an executor.
+        loop {
+            let c = self.shared.next.fetch_add(1, Ordering::Relaxed);
+            if c >= chunks {
+                break;
+            }
+            task(c);
+        }
+        // JobGuard's drop closes the job and waits for stragglers (their
+        // chunk writes are ordered before its re-acquisition of the
+        // mutex).
+    }
+}
+
+/// Closes the current job on drop — including when the submitting
+/// thread unwinds out of its chunk loop — and waits until every worker
+/// has deregistered, so the lifetime-erased task pointer is dead before
+/// `run`'s frame (and the closure it borrows) goes away.
+struct JobGuard<'a> {
+    shared: &'a Shared,
+    chunks: usize,
+}
+
+impl Drop for JobGuard<'_> {
+    fn drop(&mut self) {
+        let mut s = self.shared.m.lock().unwrap();
+        s.task = None;
+        // Exhaust the chunk counter so registered workers stop claiming
+        // new chunks (relevant on the unwind path; a no-op afterwards).
+        self.shared.next.fetch_max(self.chunks, Ordering::Relaxed);
+        while s.running > 0 {
+            s = self.shared.done.wait(s).unwrap();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Exclusive access here means no `run` is in flight: every worker
+        // is parked (or about to park) and will observe the flag.
+        {
+            let mut s = self.shared.m.lock().unwrap();
+            s.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut s = shared.m.lock().unwrap();
+    loop {
+        // Park until a live job still has unclaimed chunks and a free
+        // executor slot — or the pool is shutting down.
+        loop {
+            if s.shutdown {
+                return;
+            }
+            let joinable = s.task.is_some()
+                && s.running < s.max_workers
+                && shared.next.load(Ordering::Relaxed) < s.chunks;
+            if joinable {
+                break;
+            }
+            s = shared.work.wait(s).unwrap();
+        }
+        let task = s.task.expect("checked Some above");
+        let chunks = s.chunks;
+        s.running += 1;
+        drop(s);
+        loop {
+            let c = shared.next.fetch_add(1, Ordering::Relaxed);
+            if c >= chunks {
+                break;
+            }
+            // SAFETY: registered on the job (running > 0), so the
+            // submitter cannot return and invalidate the pointer.  A
+            // panicking kernel would leave the submitter waiting forever
+            // (and the GEMM output half-written): abort instead.
+            let f: &(dyn Fn(usize) + Sync) = unsafe { &*task.0 };
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(c)));
+            if ok.is_err() {
+                eprintln!("gemm worker pool: task panicked on a pool thread; aborting");
+                std::process::abort();
+            }
+        }
+        s = shared.m.lock().unwrap();
+        s.running -= 1;
+        if s.running == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// `QUANTASR_GEMM_THREADS` override (parsed once): 0/unset = auto — the
+/// **single** parser of this env var, shared with `quant::gemm`'s
+/// thread-count policy so the contract cannot drift.  Unparseable values
+/// warn — a silent fallback here would quietly turn a "pinned serial"
+/// bench into a threaded one.  Values above [`MAX_POOL_THREADS`] warn
+/// and are honored only up to the pool cap.
+pub fn forced_gemm_threads() -> Option<usize> {
+    static FORCED: OnceLock<Option<usize>> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        let v = std::env::var("QUANTASR_GEMM_THREADS").ok()?;
+        match v.trim().parse::<usize>() {
+            Ok(0) => None,
+            Ok(n) => {
+                if n > MAX_POOL_THREADS {
+                    eprintln!(
+                        "QUANTASR_GEMM_THREADS={n} exceeds the pool cap of \
+                         {MAX_POOL_THREADS}; GEMMs will use at most {MAX_POOL_THREADS} threads"
+                    );
+                }
+                Some(n)
+            }
+            Err(_) => {
+                eprintln!(
+                    "QUANTASR_GEMM_THREADS='{}' is not a thread count; using auto",
+                    v.trim()
+                );
+                None
+            }
+        }
+    })
+}
+
+/// Pool size: `available_parallelism` (or the forced
+/// `QUANTASR_GEMM_THREADS` when larger), minus the submitting thread,
+/// capped at [`MAX_POOL_THREADS`].
+fn default_pool_workers() -> usize {
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let forced = forced_gemm_threads().unwrap_or(0);
+    cpus.max(forced).min(MAX_POOL_THREADS).saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = WorkerPool::new(3);
+        for &chunks in &[1usize, 2, 7, 64, 1000] {
+            let hits: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(4, chunks, &|c| {
+                hits[c].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i} of {chunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_workers_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let sum = AtomicU64::new(0);
+        pool.run(8, 100, &|c| {
+            sum.fetch_add(c as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn serial_request_stays_on_caller() {
+        let pool = WorkerPool::new(2);
+        let main_id = std::thread::current().id();
+        pool.run(1, 16, &|_| {
+            assert_eq!(std::thread::current().id(), main_id, "nthreads=1 must stay serial");
+        });
+    }
+
+    #[test]
+    fn back_to_back_jobs_reuse_workers() {
+        let pool = WorkerPool::new(2);
+        let sum = AtomicU64::new(0);
+        for round in 0..50u64 {
+            pool.run(3, 17, &|c| {
+                sum.fetch_add(round * 1000 + c as u64, Ordering::Relaxed);
+            });
+        }
+        let per_round: u64 = (0..17).sum();
+        let want: u64 = (0..50u64).map(|r| r * 1000 * 17 + per_round).sum();
+        assert_eq!(sum.load(Ordering::Relaxed), want);
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize_safely() {
+        let pool = Arc::new(WorkerPool::new(3));
+        let total = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let pool = pool.clone();
+            let total = total.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    pool.run(3, 11, &|c| {
+                        total.fetch_add(t + c as u64, Ordering::Relaxed);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let per_run: u64 = (0..11u64).sum();
+        let want: u64 = (0..4u64).map(|t| 20 * (t * 11 + per_run)).sum();
+        assert_eq!(total.load(Ordering::Relaxed), want);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        // Dropping a pool must terminate and reclaim its threads — not
+        // hang on parked workers, including right after a job.
+        let pool = WorkerPool::new(2);
+        let sum = AtomicU64::new(0);
+        pool.run(3, 9, &|c| {
+            sum.fetch_add(c as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 36);
+        drop(pool); // joins; a hang here fails the test via timeout
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = WorkerPool::global() as *const _;
+        let b = WorkerPool::global() as *const _;
+        assert_eq!(a, b);
+    }
+}
