@@ -6,8 +6,15 @@
 //!
 //! ```bash
 //! cargo run --release --example streaming_server -- \
-//!     [--streams 8] [--utts 48] [--mode quant] [--max-batch 32]
+//!     [--streams 8] [--utts 48] [--mode quant] [--max-batch 32] \
+//!     [--deadline-ms 5] [--quantum 25] [--bulk-every 0]
 //! ```
+//!
+//! `--deadline-ms` sets the batch-formation deadline (malformed values
+//! warn and keep the default — also settable process-wide via
+//! `QUANTASR_BATCH_DEADLINE_MS`); `--quantum` sets the preemption
+//! time-slice in ticks; `--bulk-every k` opens every k-th client as a
+//! `Bulk`-priority stream (0 = all interactive) to exercise the QoS path.
 //!
 //! Results are recorded in EXPERIMENTS.md §E4.
 
@@ -20,6 +27,7 @@ use quantasr::coordinator::{Engine, EngineConfig};
 use quantasr::decoder::DecoderConfig;
 use quantasr::eval::build_decoder;
 use quantasr::nn::{AcousticModel, ExecMode};
+use quantasr::sched::Priority;
 use quantasr::sim::dataset::{gen_wave, Style};
 use quantasr::sim::World;
 use quantasr::util::cli::Args;
@@ -29,6 +37,7 @@ fn main() -> Result<()> {
     let art = args.get_or("artifacts", "artifacts").to_string();
     let n_streams = args.get_usize("streams", 8);
     let n_utts = args.get_usize("utts", 48);
+    let bulk_every = args.get_usize_warn("bulk-every", 0);
     let mode = ExecMode::parse(args.get_or("mode", "quant"))?;
 
     let world = Arc::new(World::new());
@@ -38,11 +47,14 @@ fn main() -> Result<()> {
     );
     let decoder = Arc::new(build_decoder(&world, DecoderConfig::default()));
     let mut cfg = EngineConfig::default();
-    cfg.policy.max_batch = args.get_usize("max-batch", cfg.policy.max_batch);
+    cfg.apply_cli_flags(&args);
+    let deadline_ms = cfg.policy.deadline.as_secs_f64() * 1e3;
     let max_batch = cfg.policy.max_batch;
+    let quantum = cfg.quantum.quantum_ticks;
     let engine = Arc::new(Engine::start(model.clone(), decoder, cfg));
     println!(
-        "engine up: model={} mode={mode:?} storage={}KB max_batch={max_batch}",
+        "engine up: model={} mode={mode:?} storage={}KB max_batch={max_batch} \
+         deadline={deadline_ms}ms quantum={quantum} ticks",
         model.header.name,
         model.storage_bytes() / 1024,
     );
@@ -79,6 +91,9 @@ fn main() -> Result<()> {
                     let utt = gen_wave(uid, 0x5E4E, &world, Style::Clean);
                     *total_audio.lock().unwrap() += utt.wave.len() as f64 / 8000.0;
                     let mut client = Client::connect(&addr).expect("connect");
+                    if bulk_every > 0 && s % bulk_every == bulk_every - 1 {
+                        client.set_priority(Priority::Bulk).expect("set priority");
+                    }
                     for chunk in utt.wave.chunks(800) {
                         client.send_audio(chunk).expect("send");
                     }

@@ -22,6 +22,7 @@ use quantasr::eval::build_decoder;
 use quantasr::frontend::spec;
 use quantasr::io::model_fmt::{ModelHeader, QamFile, Tensor};
 use quantasr::nn::{AcousticModel, ExecMode};
+use quantasr::sched::{Priority, QuantumPolicy, StreamOptions};
 use quantasr::sim::World;
 use quantasr::util::bench::{fmt_ns, Bench, Measurement};
 use quantasr::util::rng::Xoshiro256;
@@ -191,6 +192,7 @@ fn main() {
             },
             decode_workers: 2,
             max_pending_frames: 128,
+            ..EngineConfig::default()
         };
         let engine = Arc::new(Engine::start(model, decoder.clone(), cfg));
         let n_streams = 32;
@@ -223,6 +225,65 @@ fn main() {
         throughput_rows.push((max_batch, total_frames / dt, mean_batch));
     }
 
+    // (d) saturation: streams ≫ lanes with mixed priority — the quantum
+    // scheduler's regime.  Half the clients are never-idle bulk streams
+    // (long utterances, shallow pending queues keep them saturated); the
+    // other half are interactive newcomers arriving into a fully-held
+    // arena.  Records first-frame wait (admission → first posterior, the
+    // preemption-bound latency) and per-tick frame latency percentiles.
+    println!("\n== saturation: oversubscribed lanes, mixed priority (quantum scheduler) ==");
+    let mut saturation_rows: Vec<(usize, f64, f64, f64, f64, u64)> = Vec::new();
+    let lanes = 4usize;
+    for factor in [2usize, 4] {
+        let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+        let cfg = EngineConfig {
+            policy: BatchPolicy { max_batch: lanes, deadline: std::time::Duration::from_millis(1) },
+            decode_workers: 2,
+            max_pending_frames: 64,
+            quantum: QuantumPolicy { quantum_ticks: 8 },
+            ..EngineConfig::default()
+        };
+        let engine = Arc::new(Engine::start(model, decoder.clone(), cfg));
+        let n_streams = lanes * factor;
+        let bulk_frames = 300usize;
+        let ia_frames = 60usize;
+        let mut bulk_frame = vec![0f32; spec::FEAT_DIM * bulk_frames];
+        rng.fill_normal(&mut bulk_frame);
+        let mut ia_frame = vec![0f32; spec::FEAT_DIM * ia_frames];
+        rng.fill_normal(&mut ia_frame);
+        std::thread::scope(|scope| {
+            for s in 0..n_streams {
+                let engine = engine.clone();
+                let (frame, prio) = if s % 2 == 0 {
+                    (bulk_frame.clone(), Priority::Bulk)
+                } else {
+                    (ia_frame.clone(), Priority::Interactive)
+                };
+                scope.spawn(move || {
+                    // Interactive newcomers arrive after bulk holds lanes.
+                    if prio == Priority::Interactive {
+                        std::thread::sleep(std::time::Duration::from_millis(30));
+                    }
+                    let (id, rx) = engine
+                        .try_open_stream(StreamOptions { model: 0, priority: prio })
+                        .expect("admission");
+                    engine.push_frames(id, &frame).unwrap();
+                    engine.finish_stream(id).unwrap();
+                    let _ = rx.recv().unwrap();
+                });
+            }
+        });
+        let ff = engine.metrics().first_frame_latency.summary();
+        let tick = engine.metrics().frame_latency.summary();
+        let preemptions = *engine.metrics().preemptions.lock().unwrap();
+        println!(
+            "oversub {factor}×  first-frame p50 {:.2}ms p99 {:.2}ms  per-tick p50 {:.2}ms \
+             p99 {:.2}ms  preemptions {preemptions}",
+            ff.p50, ff.p99, tick.p50, tick.p99,
+        );
+        saturation_rows.push((factor, ff.p50, ff.p99, tick.p50, tick.p99, preemptions));
+    }
+
     // Emit BENCH_engine.json so the perf trajectory is recorded across PRs.
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"engine\",\n  \"results\": [\n");
@@ -240,6 +301,18 @@ fn main() {
         let _ = writeln!(
             json,
             "    {{\"max_batch\": {mb}, \"frames_per_s\": {fps:.1}, \"mean_batch\": {mean_batch:.2}}}{comma}"
+        );
+    }
+    json.push_str("  ],\n  \"saturation\": [\n");
+    for (i, (factor, ffp50, ffp99, tp50, tp99, preempts)) in
+        saturation_rows.iter().enumerate()
+    {
+        let comma = if i + 1 < saturation_rows.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"oversubscription\": {factor}, \"first_frame_p50_ms\": {ffp50:.2}, \
+             \"first_frame_p99_ms\": {ffp99:.2}, \"tick_p50_ms\": {tp50:.2}, \
+             \"tick_p99_ms\": {tp99:.2}, \"preemptions\": {preempts}}}{comma}"
         );
     }
     json.push_str("  ]\n}\n");

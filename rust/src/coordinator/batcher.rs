@@ -9,11 +9,15 @@
 //! - otherwise wait (the worker parks on a condvar with a timeout).
 //!
 //! [`LaneAllocator`] tracks which arena lanes (stable per-stream slots in
-//! the backend's [`crate::nn::model::BatchArena`]) are occupied.  Both are
-//! pure decision logic — no clocks or locks — so they are
-//! property-testable.
+//! the backend's [`crate::nn::model::BatchArena`]) are occupied.  Batch
+//! formation order is priority-aware ([`schedule_cmp`]: QoS class first,
+//! then longest wait — see [`crate::sched::Priority`]).  All of it is
+//! pure decision logic — no clocks or locks — so it is property-testable.
 
+use std::cmp::Ordering;
 use std::time::Duration;
+
+use crate::sched::Priority;
 
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
@@ -30,8 +34,46 @@ impl Default for BatchPolicy {
         // so wider batches amortize weight streaming instead of re-reading
         // the matrix per stream — bench_e2e records the scaling curve in
         // BENCH_engine.json (ROADMAP "Bigger batches").
-        BatchPolicy { max_batch: 32, deadline: Duration::from_millis(5) }
+        BatchPolicy { max_batch: 32, deadline: default_deadline() }
     }
+}
+
+/// Parse a `QUANTASR_BATCH_DEADLINE_MS`-style value: non-negative, finite
+/// milliseconds (fractions allowed).  Pure, so the accepted grammar is
+/// testable without touching the process environment.
+pub fn parse_deadline_ms(v: &str) -> Option<Duration> {
+    match v.trim().parse::<f64>() {
+        Ok(ms) if ms.is_finite() && ms >= 0.0 => Some(Duration::from_secs_f64(ms / 1e3)),
+        _ => None,
+    }
+}
+
+/// The built-in 5 ms deadline, overridable via `QUANTASR_BATCH_DEADLINE_MS`
+/// (parsed once per process).  A malformed value warns and falls back —
+/// tuning knobs must never panic a serving process.
+fn default_deadline() -> Duration {
+    static ONCE: std::sync::OnceLock<Duration> = std::sync::OnceLock::new();
+    *ONCE.get_or_init(|| {
+        let base = Duration::from_millis(5);
+        match std::env::var("QUANTASR_BATCH_DEADLINE_MS") {
+            Ok(v) => parse_deadline_ms(&v).unwrap_or_else(|| {
+                eprintln!(
+                    "QUANTASR_BATCH_DEADLINE_MS='{v}' is not a non-negative number of \
+                     milliseconds; using the built-in 5 ms"
+                );
+                base
+            }),
+            Err(_) => base,
+        }
+    })
+}
+
+/// Batch-formation order for ready streams: QoS class first (Interactive
+/// before Bulk), then longest wait.  The engine sorts its ready list with
+/// this before planning lanes, so priorities shape both who rides a batch
+/// when lanes are scarce and who gets to preempt first.
+pub fn schedule_cmp(a: &(Priority, Duration), b: &(Priority, Duration)) -> Ordering {
+    a.0.rank().cmp(&b.0.rank()).then(b.1.cmp(&a.1))
 }
 
 /// The decision for the current tick.
@@ -211,6 +253,58 @@ mod tests {
         let l = a.acquire().unwrap();
         a.release(l);
         a.release(l);
+    }
+
+    #[test]
+    fn deadline_grammar() {
+        assert_eq!(parse_deadline_ms("5"), Some(Duration::from_millis(5)));
+        assert_eq!(parse_deadline_ms(" 2.5 "), Some(Duration::from_micros(2500)));
+        assert_eq!(parse_deadline_ms("0"), Some(Duration::ZERO));
+        assert_eq!(parse_deadline_ms("-1"), None);
+        assert_eq!(parse_deadline_ms("NaN"), None);
+        assert_eq!(parse_deadline_ms("inf"), None);
+        assert_eq!(parse_deadline_ms("5ms"), None);
+        assert_eq!(parse_deadline_ms(""), None);
+    }
+
+    #[test]
+    fn schedule_order_is_class_then_wait() {
+        use crate::sched::Priority::{Bulk, Interactive};
+        let ms = Duration::from_millis;
+        let mut v = vec![
+            (Bulk, ms(50)),
+            (Interactive, ms(1)),
+            (Bulk, ms(2)),
+            (Interactive, ms(30)),
+        ];
+        v.sort_by(schedule_cmp);
+        assert_eq!(
+            v,
+            vec![
+                (Interactive, ms(30)),
+                (Interactive, ms(1)),
+                (Bulk, ms(50)),
+                (Bulk, ms(2)),
+            ]
+        );
+        // Total order sanity under random inputs: interactive never sorts
+        // after bulk, and within a class longer waits sort first.
+        forall("schedule_cmp order", 200, 0x0DE5, |g: &mut Gen| {
+            let n = g.usize_in(2, 12);
+            let mut v: Vec<(crate::sched::Priority, Duration)> = (0..n)
+                .map(|_| {
+                    let p = if g.bool() { Interactive } else { Bulk };
+                    (p, Duration::from_micros(g.usize_in(0, 10_000) as u64))
+                })
+                .collect();
+            v.sort_by(schedule_cmp);
+            for w in v.windows(2) {
+                assert!(w[0].0.rank() <= w[1].0.rank());
+                if w[0].0 == w[1].0 {
+                    assert!(w[0].1 >= w[1].1);
+                }
+            }
+        });
     }
 
     #[test]

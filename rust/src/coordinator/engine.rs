@@ -1,44 +1,49 @@
 //! The serving engine: streams in, batched acoustic-model steps, final
 //! lexicon+LM decodes out.  Generic over the execution backend
 //! ([`AmBackend`]): the native int8 engine is the production path, the
-//! PJRT/AOT graph (feature `pjrt`) is a one-line swap at [`Engine::start`].
+//! PJRT/AOT graph (feature `pjrt`) is a one-line swap at
+//! [`Engine::start`].
 //!
 //! Thread topology (std threads; the image has no tokio):
 //!
 //! ```text
 //! callers ──push_audio──▶ per-stream Frontend ──▶ pending frame queues
 //!                                                (bounded; backpressure)
-//! AM worker ── BatchPolicy ──▶ step active lanes of the arena, in place
+//! AM worker ── BatchPolicy + sched ──▶ step each model's active lanes
 //!   └── large packed GEMMs fan panels out to the persistent worker pool
 //!       (util::pool; parked threads, QUANTASR_GEMM_THREADS caps them)
 //! decode workers ◀── finished streams' posteriors ──▶ FinalResult channel
 //! ```
 //!
-//! The AM step itself is allocation-free: the arena pre-sizes all scratch
-//! (gates, projection buffer, per-layer activation-quantization caches)
-//! at `Engine::start`, the fused SIMD elementwise kernel updates cell
-//! state in one pass, and each layer output is quantized once per tick
-//! (`quant::gemm::QActRows`) instead of once per consuming GEMM.
-//!
 //! **Lane-resident batching.**  Each live stream owns a stable *lane* in
-//! the backend's pre-allocated arena (`[max_batch, state]` buffers); the
-//! AM worker writes each scheduled stream's frame into its lane's row of a
+//! its model's pre-allocated arena (`[max_batch, state]` buffers); the AM
+//! worker writes each scheduled stream's frame into its lane's row of a
 //! lane-resident input buffer and steps the active lanes **in place** —
-//! recurrent state never moves.  The previous design copied every
-//! participating stream's state into a fresh contiguous batch and copied
-//! it back after the step, an O(batch·state) gather/scatter per tick that
-//! `bench_e2e` now shows eliminated.  Lane numerics are bit-identical to
-//! running the stream alone (per-row quantization, `quant::gemm`), so lane
-//! assignment is invisible to results.
+//! recurrent state never moves per tick.  Lane numerics are bit-identical
+//! to running the stream alone (per-row quantization, `quant::gemm`), so
+//! lane assignment is invisible to results.
 //!
-//! When live streams outnumber lanes, lane-less ready streams wait for a
-//! free lane; if every lane is held but some holder is *idle* (no frame
-//! pending), the holder is **evicted** — its lane state is parked on the
-//! stream slot ([`AmBackend::save_lane`]) and restored when it is next
-//! scheduled.  Eviction is the only remaining state copy and happens per
-//! lane *transition*, not per tick.  A stream that never goes idle cannot
-//! be evicted; under full saturation newcomers therefore wait for a
-//! holder to drain (fair preemption is a ROADMAP follow-on).
+//! **Scheduling** is owned by [`crate::sched`]; the engine is mechanism.
+//! When live streams outnumber lanes, lane-less ready streams are placed
+//! in priority order ([`schedule_cmp`]): a free lane if any, else an
+//! *idle* holder is **evicted** (state parked on the stream slot via
+//! [`AmBackend::save_lane`]), else an active holder that has consumed its
+//! tick quantum — or holds a lower QoS class than the waiter — is
+//! **preempted** through the same exact parking path
+//! ([`QuantumPolicy::select_victim`]).  Preemption happens at tick
+//! boundaries only, so a preempted stream's outputs are bit-identical to
+//! an unpreempted run; a newcomer's wait is bounded by one quantum even
+//! when every holder streams continuously (the starvation hole the
+//! pre-scheduler engine documented).  Admission is bounded
+//! ([`crate::sched::admission`]): beyond the live-stream cap,
+//! [`Engine::try_open_stream`] rejects with a reason instead of growing
+//! without limit.
+//!
+//! **Multi-model serving.**  [`Engine::start_registry`] loads N models
+//! ([`ModelRegistry`]); each gets its own lane-tagged arena and allocator,
+//! one scheduler places streams per model, and every flush steps each
+//! model's planned lanes, so models share the AM worker and decode pool
+//! fairly (per-model lane accounting in [`Metrics::per_model`]).
 //!
 //! Decoding (CTC beam + LM rescore) is heavier and utterance-final, so it
 //! runs on its own worker pool.
@@ -51,12 +56,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::batcher::{BatchPolicy, Decision, LaneAllocator};
+use crate::coordinator::batcher::{schedule_cmp, BatchPolicy, Decision, LaneAllocator};
 use crate::coordinator::metrics::Metrics;
 use crate::decoder::Decoder;
 use crate::frontend::{spec, Frontend};
 use crate::nn::AcousticModel;
-use crate::runtime::backend::AmBackend;
+use crate::runtime::backend::{AmBackend, LaneTag};
+use crate::sched::{
+    AdmissionConfig, AdmissionController, HolderView, ModelRegistry, Priority, QuantumPolicy,
+    RejectReason, StreamOptions,
+};
 
 /// Engine configuration.
 #[derive(Clone)]
@@ -65,6 +74,10 @@ pub struct EngineConfig {
     pub decode_workers: usize,
     /// Per-stream pending-frame cap (backpressure bound).
     pub max_pending_frames: usize,
+    /// Time-slice preemption policy (lane quanta).
+    pub quantum: QuantumPolicy,
+    /// Live-stream admission bound.
+    pub admission: AdmissionConfig,
 }
 
 impl Default for EngineConfig {
@@ -73,7 +86,44 @@ impl Default for EngineConfig {
             policy: BatchPolicy::default(),
             decode_workers: 2,
             max_pending_frames: 256,
+            quantum: QuantumPolicy::default(),
+            admission: AdmissionConfig::default(),
         }
+    }
+}
+
+impl EngineConfig {
+    /// Apply the shared serving CLI flags (`--max-batch`, `--deadline-ms`,
+    /// `--quantum`, `--max-streams`), warn-don't-panic: the deadline goes
+    /// through the validated [`parse_deadline_ms`] grammar (finite,
+    /// non-negative — `Duration::from_secs_f64` would panic on `inf`) and
+    /// the quantum parses directly as `u32` so out-of-range values warn
+    /// instead of silently truncating.  Absent flags fall through to the
+    /// env-overridable defaults (`QUANTASR_BATCH_DEADLINE_MS`,
+    /// `QUANTASR_QUANTUM_TICKS`).
+    pub fn apply_cli_flags(&mut self, args: &crate::util::cli::Args) {
+        self.policy.max_batch = args.get_usize("max-batch", self.policy.max_batch);
+        if let Some(v) = args.get("deadline-ms") {
+            match crate::coordinator::batcher::parse_deadline_ms(v) {
+                Some(d) => self.policy.deadline = d,
+                None => eprintln!(
+                    "--deadline-ms '{v}' is not a non-negative number of milliseconds; \
+                     keeping {:.1} ms",
+                    self.policy.deadline.as_secs_f64() * 1e3
+                ),
+            }
+        }
+        if let Some(v) = args.get("quantum") {
+            match v.parse::<u32>() {
+                Ok(q) => self.quantum.quantum_ticks = q,
+                Err(_) => eprintln!(
+                    "--quantum '{v}' is not a tick count (u32); keeping {}",
+                    self.quantum.quantum_ticks
+                ),
+            }
+        }
+        self.admission.max_live_streams =
+            args.get_usize_warn("max-streams", self.admission.max_live_streams);
     }
 }
 
@@ -91,16 +141,24 @@ pub struct FinalResult {
 
 struct StreamSlot<B: AmBackend> {
     frontend: Frontend,
-    /// Feature frames awaiting the AM, flattened FEAT_DIM each.
+    /// Which loaded model serves this stream (index into `Engine::models`).
+    model: usize,
+    /// QoS class: preemption victim selection + batch-formation order.
+    priority: Priority,
+    /// Ticks stepped since the stream last (re)acquired a lane.
+    quantum_used: u32,
+    opened_at: Instant,
+    /// Feature frames awaiting the AM, flattened input_dim each.
     pending: VecDeque<Vec<f32>>,
     oldest_enqueue: Option<Instant>,
     /// Accumulated log-posteriors [frames_done, num_labels].
     posteriors: Vec<f32>,
     frames_done: usize,
-    /// Arena lane holding this stream's recurrent state, if admitted.
+    /// Arena lane (in the stream's model's arena) holding this stream's
+    /// recurrent state, if admitted.
     lane: Option<usize>,
-    /// State parked outside the arena (evicted / not yet admitted).
-    /// `None` with `lane: None` ⇒ fresh zero state.
+    /// State parked outside the arena (evicted / preempted / not yet
+    /// admitted).  `None` with `lane: None` ⇒ fresh zero state.
     parked: Option<B::Parked>,
     finished: bool,
     finish_time: Option<Instant>,
@@ -117,7 +175,8 @@ struct DecodeJob {
 
 struct Inner<B: AmBackend> {
     streams: HashMap<u64, StreamSlot<B>>,
-    lanes: LaneAllocator,
+    /// One allocator per model (lane-tagged arenas).
+    lanes: Vec<LaneAllocator>,
     next_id: u64,
     decode_queue: VecDeque<DecodeJob>,
 }
@@ -131,6 +190,7 @@ struct Shared<B: AmBackend> {
     /// Wakes producers blocked on backpressure.
     space_cv: Condvar,
     metrics: Metrics,
+    admission: AdmissionController,
     config: EngineConfig,
     shutdown: AtomicBool,
 }
@@ -138,31 +198,50 @@ struct Shared<B: AmBackend> {
 /// The streaming serving engine, generic over the execution backend
 /// (defaults to the native [`AcousticModel`]).
 pub struct Engine<B: AmBackend = AcousticModel> {
-    backend: Arc<B>,
+    models: Vec<Arc<B>>,
     shared: Arc<Shared<B>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl<B: AmBackend> Engine<B> {
-    pub fn start(backend: Arc<B>, decoder: Arc<Decoder>, mut config: EngineConfig) -> Self {
-        // Lane-capped backends (e.g. an AOT graph lowered at a fixed batch)
-        // bound the arena: clamp rather than panic so the raised default
-        // `max_batch` (32) still works against a smaller fixed-batch graph.
-        if let Some(cap) = backend.lane_capacity() {
-            if config.policy.max_batch > cap {
-                eprintln!(
-                    "engine: backend '{}' supports {cap} lanes; clamping max_batch {} -> {cap}",
-                    backend.backend_name(),
-                    config.policy.max_batch
-                );
-                config.policy.max_batch = cap;
+    /// Start a single-model engine (the pre-registry surface; equivalent
+    /// to `start_registry(ModelRegistry::single(backend), …)`).
+    pub fn start(backend: Arc<B>, decoder: Arc<Decoder>, config: EngineConfig) -> Self {
+        Self::start_registry(ModelRegistry::single(backend), decoder, config)
+    }
+
+    /// Start an engine serving every model in `registry` through one
+    /// scheduler, AM worker and decode pool.
+    pub fn start_registry(
+        registry: ModelRegistry<B>,
+        decoder: Arc<Decoder>,
+        mut config: EngineConfig,
+    ) -> Self {
+        let (names, models) = registry.into_parts();
+        assert!(!models.is_empty(), "ModelRegistry has no models");
+        // Lane-capped backends (e.g. an AOT graph lowered at a fixed
+        // batch) bound the arena: clamp rather than panic so the raised
+        // default `max_batch` (32) still works against a smaller
+        // fixed-batch graph.  The tightest model wins — lanes-per-model
+        // is uniform so the scheduler's fairness math stays simple.
+        for b in &models {
+            if let Some(cap) = b.lane_capacity() {
+                if config.policy.max_batch > cap {
+                    eprintln!(
+                        "engine: backend '{}' supports {cap} lanes; clamping max_batch {} -> {cap}",
+                        b.backend_name(),
+                        config.policy.max_batch
+                    );
+                    config.policy.max_batch = cap;
+                }
             }
         }
         let max_lanes = config.policy.max_batch;
+        let admission = AdmissionController::new(config.admission);
         let shared = Arc::new(Shared {
             inner: Mutex::new(Inner {
                 streams: HashMap::new(),
-                lanes: LaneAllocator::new(max_lanes),
+                lanes: (0..models.len()).map(|_| LaneAllocator::new(max_lanes)).collect(),
                 next_id: 0,
                 decode_queue: VecDeque::new(),
             }),
@@ -170,17 +249,19 @@ impl<B: AmBackend> Engine<B> {
             decode_cv: Condvar::new(),
             space_cv: Condvar::new(),
             metrics: Metrics::default(),
+            admission,
             config,
             shutdown: AtomicBool::new(false),
         });
+        shared.metrics.init_models(&names, max_lanes);
         let mut workers = Vec::new();
         {
             let s = shared.clone();
-            let b = backend.clone();
+            let ms = models.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name("am-worker".into())
-                    .spawn(move || am_worker(s, b))
+                    .spawn(move || am_worker(s, ms))
                     .expect("spawn am worker"),
             );
         }
@@ -194,30 +275,58 @@ impl<B: AmBackend> Engine<B> {
                     .expect("spawn decode worker"),
             );
         }
-        Engine { backend, shared, workers }
+        Engine { models, shared, workers }
     }
 
     pub fn metrics(&self) -> &Metrics {
         &self.shared.metrics
     }
 
-    /// The execution backend this engine drives.
+    /// The first (or only) execution backend this engine drives.
     pub fn backend(&self) -> &Arc<B> {
-        &self.backend
+        &self.models[0]
     }
 
-    /// Open a new stream; returns its id and the final-result receiver.
-    /// The stream is admitted to an arena lane lazily, when it is first
-    /// scheduled into a batch.
+    /// All loaded models, in registration order (index = model id).
+    pub fn models(&self) -> &[Arc<B>] {
+        &self.models
+    }
+
+    /// Open a new default stream (model 0, `Priority::Interactive`);
+    /// returns its id and the final-result receiver.  The stream is
+    /// admitted to an arena lane lazily, when it is first scheduled into
+    /// a batch.  Panics if admission control rejects — callers that can
+    /// handle backpressure should use [`Engine::try_open_stream`].
     pub fn open_stream(&self) -> (u64, Receiver<FinalResult>) {
+        self.try_open_stream(StreamOptions::default())
+            .expect("stream admission rejected")
+    }
+
+    /// Open a stream with explicit model/priority, subject to admission
+    /// control: beyond the live-stream cap (or for an unknown model) the
+    /// stream is rejected with a reason instead of queued unboundedly.
+    pub fn try_open_stream(
+        &self,
+        opts: StreamOptions,
+    ) -> Result<(u64, Receiver<FinalResult>), RejectReason> {
         let (tx, rx) = channel();
         let mut inner = self.shared.inner.lock().unwrap();
+        if let Err(reason) =
+            self.shared.admission.admit(inner.streams.len(), opts.model, self.models.len())
+        {
+            self.shared.metrics.add_admission_reject();
+            return Err(reason);
+        }
         let id = inner.next_id;
         inner.next_id += 1;
         inner.streams.insert(
             id,
             StreamSlot {
                 frontend: Frontend::new(),
+                model: opts.model,
+                priority: opts.priority,
+                quantum_used: 0,
+                opened_at: Instant::now(),
                 pending: VecDeque::new(),
                 oldest_enqueue: None,
                 posteriors: Vec::new(),
@@ -229,7 +338,7 @@ impl<B: AmBackend> Engine<B> {
                 result_tx: tx,
             },
         );
-        (id, rx)
+        Ok((id, rx))
     }
 
     /// Push PCM samples (blocks under backpressure).
@@ -250,9 +359,16 @@ impl<B: AmBackend> Engine<B> {
         self.push_frames(id, &frames)
     }
 
-    /// Push pre-computed feature frames (len = k·input_dim).
+    /// Push pre-computed feature frames (len = k·input_dim of the
+    /// stream's model).
     pub fn push_frames(&self, id: u64, frames: &[f32]) -> Result<()> {
-        let d = self.backend.input_dim();
+        let d = {
+            let inner = self.shared.inner.lock().unwrap();
+            match inner.streams.get(&id) {
+                Some(slot) => self.models[slot.model].input_dim(),
+                None => bail!("unknown stream {id}"),
+            }
+        };
         assert_eq!(frames.len() % d, 0);
         let mut offset = 0;
         while offset < frames.len() {
@@ -328,17 +444,21 @@ impl<B: AmBackend> Drop for Engine<B> {
     }
 }
 
-fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, backend: Arc<B>) {
-    let labels = backend.num_labels();
-    let d = backend.input_dim();
+fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, models: Vec<Arc<B>>) {
+    let nm = models.len();
     let max_lanes = s.config.policy.max_batch;
-    // The persistent arena: every live stream's recurrent state lives in
-    // its lane for the engine's lifetime.  Allocated once, stepped in
-    // place — zero per-tick state copies.
-    let mut arena = backend.alloc_arena(max_lanes);
-    // Lane-resident I/O buffers (row `lane` belongs to that lane's stream).
-    let mut xbuf = vec![0f32; max_lanes * d];
-    let mut ybuf = vec![0f32; max_lanes * labels];
+    let dims: Vec<usize> = models.iter().map(|m| m.input_dim()).collect();
+    let labels: Vec<usize> = models.iter().map(|m| m.num_labels()).collect();
+    // One persistent arena per model: every live stream's recurrent state
+    // lives in its lane for the engine's lifetime.  Allocated once,
+    // stepped in place — state moves only on eviction/preemption.
+    let mut arenas: Vec<B::Arena> =
+        models.iter().map(|m| m.alloc_arena(max_lanes)).collect();
+    // Lane-resident I/O buffers per model (row `lane` belongs to that
+    // lane's stream).
+    let mut xbufs: Vec<Vec<f32>> = dims.iter().map(|&d| vec![0f32; max_lanes * d]).collect();
+    let mut ybufs: Vec<Vec<f32>> =
+        labels.iter().map(|&l| vec![0f32; max_lanes * l]).collect();
 
     loop {
         if s.shutdown.load(Ordering::SeqCst) {
@@ -349,18 +469,20 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, backend: Arc<B>) {
         // finish() raced the final batch) or with no audio at all — drain
         // them to the decode queue every tick, before the policy decision.
         drain_finished(&mut inner, &s);
-        // Evaluate policy.
+        // Evaluate policy over every ready stream, all models.
         let now = Instant::now();
-        let mut ready: Vec<(u64, Duration)> = inner
+        let mut ready: Vec<(u64, usize, Priority, Duration)> = inner
             .streams
             .iter()
             .filter(|(_, sl)| !sl.pending.is_empty())
             .map(|(&id, sl)| {
-                (id, sl.oldest_enqueue.map(|t| now - t).unwrap_or_default())
+                let wait = sl.oldest_enqueue.map(|t| now - t).unwrap_or_default();
+                (id, sl.model, sl.priority, wait)
             })
             .collect();
-        ready.sort_by(|a, b| b.1.cmp(&a.1)); // oldest first
-        let oldest = ready.first().map(|r| r.1).unwrap_or_default();
+        // Batch-formation order: QoS class first, then longest wait.
+        ready.sort_by(|a, b| schedule_cmp(&(a.2, a.3), &(b.2, b.3)));
+        let oldest = ready.iter().map(|r| r.3).max().unwrap_or_default();
         match s.config.policy.decide(ready.len(), oldest) {
             Decision::Idle => {
                 let (guard, _t) = s
@@ -377,59 +499,106 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, backend: Arc<B>) {
             }
             Decision::Flush => {}
         }
-        // Plan the batch.  Pass 1: ready streams that already hold a lane
-        // ride for free.  Pass 2: admit lane-less ready streams (oldest
-        // first) into free lanes, evicting idle holders when none are
-        // free.  At most `max_lanes` streams step per tick by
-        // construction (there are only `max_lanes` lanes).
-        let mut planned: Vec<(u64, usize)> = Vec::with_capacity(max_lanes);
-        for &(id, _) in &ready {
+        // Plan this tick's batch, per model.  Pass 1: ready streams that
+        // already hold a lane ride for free (unless preempted below).
+        let mut planned: Vec<Vec<(u64, usize)>> = vec![Vec::new(); nm];
+        for &(id, m, _, _) in &ready {
             if let Some(lane) = inner.streams[&id].lane {
-                planned.push((id, lane));
+                planned[m].push((id, lane));
             }
         }
-        for &(id, _) in &ready {
-            if planned.len() == max_lanes {
-                break;
-            }
-            if inner.streams[&id].lane.is_some() {
+        // Pass 2: place lane-less ready streams in schedule order — a
+        // free lane, else evict an idle holder, else preempt an active
+        // holder that exhausted its quantum (or holds a lower QoS class).
+        // A stream preempted *this tick* sits the tick out instead of
+        // cascading (it could otherwise preempt another exhausted holder
+        // later in the same pass — two state round trips where one
+        // rotation sufficed); it re-enters as a normal waiter next tick.
+        let mut displaced: Vec<u64> = Vec::new();
+        for &(id, m, prio, _) in &ready {
+            if inner.streams[&id].lane.is_some() || displaced.contains(&id) {
                 continue;
             }
-            let lane = match inner.lanes.acquire() {
-                Some(l) => Some(l),
-                None => {
-                    // Evict an idle lane holder (no pending frame ⇒ not in
-                    // `ready` ⇒ not planned this tick).  The lane changes
-                    // hands without passing through the allocator.
-                    let victim = inner
-                        .streams
-                        .iter()
-                        .find(|(_, vs)| vs.lane.is_some() && vs.pending.is_empty())
-                        .map(|(&vid, _)| vid);
-                    victim.map(|vid| {
-                        let vslot = inner.streams.get_mut(&vid).unwrap();
-                        let l = vslot.lane.take().unwrap();
-                        vslot.parked = Some(backend.save_lane(&arena, l));
-                        s.metrics.add_eviction();
-                        l
-                    })
+            // (a) a free lane in this model's allocator.
+            let mut lane = inner.lanes[m].acquire();
+            // (b) evict an idle holder (no pending frame ⇒ not in `ready`
+            // ⇒ not planned this tick).  The lane changes hands without
+            // passing through the allocator.
+            if lane.is_none() {
+                let victim = inner
+                    .streams
+                    .iter()
+                    .find(|(_, vs)| vs.model == m && vs.lane.is_some() && vs.pending.is_empty())
+                    .map(|(&vid, _)| vid);
+                if let Some(vid) = victim {
+                    let vslot = inner.streams.get_mut(&vid).unwrap();
+                    let l = vslot.lane.take().unwrap();
+                    vslot.parked = Some(models[m].save_lane(&arenas[m], l));
+                    s.metrics.add_eviction(m);
+                    lane = Some(l);
                 }
-            };
-            // No free lane and no idle holder: every lane is stepping this
-            // tick; the remaining ready streams wait for a drain/idle.
-            let Some(lane) = lane else { break };
+            }
+            // (c) preempt: every lane of this model is held by a stream
+            // stepping this tick — take one from a holder past its
+            // quantum (lowest class first, then most consumed quantum).
+            // Parking happens at the tick boundary, before the victim's
+            // next frame is popped, so the round trip is bit-exact.
+            if lane.is_none() {
+                let holders: Vec<HolderView> = planned[m]
+                    .iter()
+                    .map(|&(hid, hlane)| {
+                        let hs = &inner.streams[&hid];
+                        HolderView {
+                            stream: hid,
+                            priority: hs.priority,
+                            quantum_used: hs.quantum_used,
+                            tag: LaneTag { model: m, lane: hlane },
+                        }
+                    })
+                    .collect();
+                if let Some(vi) = s.config.quantum.select_victim(&holders, prio) {
+                    let vid = holders[vi].stream;
+                    let l = holders[vi].tag.lane;
+                    let pos = planned[m]
+                        .iter()
+                        .position(|&(pid, _)| pid == vid)
+                        .expect("victim came from planned");
+                    planned[m].remove(pos);
+                    let vslot = inner.streams.get_mut(&vid).unwrap();
+                    vslot.lane = None;
+                    vslot.quantum_used = 0;
+                    vslot.parked = Some(models[m].save_lane(&arenas[m], l));
+                    displaced.push(vid);
+                    s.metrics.add_preemption(m);
+                    lane = Some(l);
+                }
+            }
+            // No free lane, no idle holder, nothing preemptible: this
+            // stream keeps waiting — bounded by the quantum, since a
+            // never-idle holder exhausts its quantum within quantum ticks.
+            let Some(lane) = lane else { continue };
             let slot = inner.streams.get_mut(&id).unwrap();
             match slot.parked.take() {
-                Some(p) => backend.load_lane(&mut arena, lane, &p),
-                None => backend.reset_lane(&mut arena, lane),
+                Some(p) => models[m].load_lane(&mut arenas[m], lane, &p),
+                None => models[m].reset_lane(&mut arenas[m], lane),
             }
             slot.lane = Some(lane);
-            planned.push((id, lane));
+            slot.quantum_used = 0;
+            planned[m].push((id, lane));
+            debug_assert!(planned[m].len() <= max_lanes);
         }
-        // Unreachable with max_batch > 0 (a ready stream either holds a
-        // lane, or a lane is free, or some holder is idle) — but parking
-        // beats a busy-spin if that invariant ever breaks.
-        if planned.is_empty() {
+        // Unreachable with max_batch > 0: the highest-priority ready
+        // stream either holds a lane (⇒ planned), or a lane is free, or
+        // some holder is idle, or every holder is an active planned
+        // stream (⇒ planned non-empty).  If it ever happens, count it
+        // loudly — a silent park here would hide scheduler regressions.
+        if planned.iter().all(|p| p.is_empty()) {
+            s.metrics.add_sched_stall();
+            debug_assert!(
+                false,
+                "scheduler stall: {} ready streams but nothing placeable",
+                ready.len()
+            );
             let (guard, _t) = s
                 .work_cv
                 .wait_timeout(inner, Duration::from_millis(20))
@@ -437,66 +606,114 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, backend: Arc<B>) {
             drop(guard);
             continue;
         }
-        // Pop one frame per planned stream into its lane's input row.
-        let mut lanes_list: Vec<usize> = Vec::with_capacity(planned.len());
-        let mut enqueue_times = Vec::with_capacity(planned.len());
-        for &(id, lane) in &planned {
-            let slot = inner.streams.get_mut(&id).unwrap();
-            let frame = slot.pending.pop_front().unwrap();
-            xbuf[lane * d..(lane + 1) * d].copy_from_slice(&frame);
-            enqueue_times.push(slot.oldest_enqueue);
-            slot.oldest_enqueue =
-                if slot.pending.is_empty() { None } else { Some(now) };
-            lanes_list.push(lane);
+        // Pop one frame per planned stream into its lane's input row, and
+        // charge the tick against the holder's quantum.
+        let mut enqueue_times: Vec<Vec<Option<Instant>>> = vec![Vec::new(); nm];
+        let mut total_b = 0usize;
+        let mut lanes_in_use_total = 0usize;
+        for m in 0..nm {
+            let d = dims[m];
+            for &(id, lane) in &planned[m] {
+                let slot = inner.streams.get_mut(&id).unwrap();
+                let frame = slot.pending.pop_front().unwrap();
+                xbufs[m][lane * d..(lane + 1) * d].copy_from_slice(&frame);
+                enqueue_times[m].push(slot.oldest_enqueue);
+                slot.oldest_enqueue =
+                    if slot.pending.is_empty() { None } else { Some(now) };
+                slot.quantum_used = slot.quantum_used.saturating_add(1);
+            }
+            total_b += planned[m].len();
+            let in_use = inner.lanes[m].in_use();
+            lanes_in_use_total += in_use;
+            if !planned[m].is_empty() {
+                s.metrics.record_model_tick(m, in_use, planned[m].len());
+            }
         }
-        let b = planned.len();
         s.metrics
             .lane_occupancy
-            .record(inner.lanes.in_use() as f64 / max_lanes.max(1) as f64);
+            .record(lanes_in_use_total as f64 / (nm * max_lanes).max(1) as f64);
         drop(inner);
         s.space_cv.notify_all();
 
-        // Batched AM step over the active lanes, in place (lock-free; the
-        // arena is worker-local and lane rows belong to planned streams).
+        // Batched AM step per model over its active lanes, in place
+        // (lock-free; arenas are worker-local and lane rows belong to
+        // planned streams).  Every model with planned lanes steps every
+        // flush — a saturated model cannot monopolize the worker.
         let t0 = Instant::now();
-        if let Err(e) = backend.step_lanes(&mut arena, &lanes_list, &xbuf, &mut ybuf) {
-            // Backend failure (only fallible for the PJRT path): surface
-            // loudly, put the popped frames back at the head of their
-            // queues (no silent truncation of posteriors), and back off
-            // before retrying so a persistently-dead backend applies
-            // backpressure instead of busy-looping through the audio.
-            eprintln!("am backend '{}' step failed: {e:#}", backend.backend_name());
-            let mut inner = s.inner.lock().unwrap();
-            let now_err = Instant::now();
-            for &(id, lane) in &planned {
-                if let Some(slot) = inner.streams.get_mut(&id) {
-                    slot.pending.push_front(xbuf[lane * d..(lane + 1) * d].to_vec());
-                    slot.oldest_enqueue.get_or_insert(now_err);
-                }
+        let mut any_failed = false;
+        // Per-model step time: a model's frames are ready once *its* step
+        // returns, so latency is charged per model, not the whole phase
+        // (dt below) — two models stepping sequentially must not inflate
+        // each other's frame_latency.
+        let mut step_times: Vec<Duration> = vec![Duration::ZERO; nm];
+        for m in 0..nm {
+            if planned[m].is_empty() {
+                continue;
             }
+            let tm = Instant::now();
+            let lanes_list: Vec<usize> = planned[m].iter().map(|&(_, l)| l).collect();
+            if let Err(e) =
+                models[m].step_lanes(&mut arenas[m], &lanes_list, &xbufs[m], &mut ybufs[m])
+            {
+                // Backend failure (only fallible for the PJRT path):
+                // surface loudly, put the popped frames back at the head
+                // of their queues (no silent truncation of posteriors),
+                // and back off below so a persistently-dead backend
+                // applies backpressure instead of busy-looping.
+                eprintln!(
+                    "am backend '{}' step failed: {e:#}",
+                    models[m].backend_name()
+                );
+                let d = dims[m];
+                let mut inner = s.inner.lock().unwrap();
+                let now_err = Instant::now();
+                for &(id, lane) in &planned[m] {
+                    if let Some(slot) = inner.streams.get_mut(&id) {
+                        slot.pending.push_front(xbufs[m][lane * d..(lane + 1) * d].to_vec());
+                        slot.oldest_enqueue.get_or_insert(now_err);
+                        slot.quantum_used = slot.quantum_used.saturating_sub(1);
+                    }
+                }
+                drop(inner);
+                planned[m].clear();
+                any_failed = true;
+            }
+            step_times[m] = tm.elapsed();
+        }
+        let dt = t0.elapsed();
+        let stepped: usize = planned.iter().map(|p| p.len()).sum();
+        if stepped > 0 {
+            s.metrics.add_am_compute(dt.as_secs_f64(), stepped as u64);
+            s.metrics.batch_size.record(total_b as f64);
+        }
+        if any_failed && stepped == 0 {
+            let mut inner = s.inner.lock().unwrap();
             drain_finished(&mut inner, &s);
             drop(inner);
             std::thread::sleep(Duration::from_millis(50));
             continue;
-        }
-        let dt = t0.elapsed();
-        s.metrics.add_am_compute(dt.as_secs_f64(), b as u64);
-        s.metrics.batch_size.record(b as f64);
-        for t in &enqueue_times {
-            if let Some(t0q) = t {
-                s.metrics.frame_latency.record_duration(now - *t0q + dt);
-            }
         }
 
         // Append each lane's posteriors to its stream; queue decodes for
         // drained finished streams.  (This is result delivery, not state
         // movement — recurrent state stayed in the arena.)
         let mut inner = s.inner.lock().unwrap();
-        for &(id, lane) in &planned {
-            if let Some(slot) = inner.streams.get_mut(&id) {
-                slot.posteriors
-                    .extend_from_slice(&ybuf[lane * labels..(lane + 1) * labels]);
-                slot.frames_done += 1;
+        for m in 0..nm {
+            let l = labels[m];
+            for (k, &(id, lane)) in planned[m].iter().enumerate() {
+                if let Some(slot) = inner.streams.get_mut(&id) {
+                    if slot.frames_done == 0 {
+                        s.metrics
+                            .first_frame_latency
+                            .record_duration(slot.opened_at.elapsed());
+                    }
+                    slot.posteriors
+                        .extend_from_slice(&ybufs[m][lane * l..(lane + 1) * l]);
+                    slot.frames_done += 1;
+                }
+                if let Some(t0q) = enqueue_times[m][k] {
+                    s.metrics.frame_latency.record_duration(now - t0q + step_times[m]);
+                }
             }
         }
         drain_finished(&mut inner, &s);
@@ -504,7 +721,7 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, backend: Arc<B>) {
 }
 
 /// Move every (finished && drained) stream to the decode queue, releasing
-/// its arena lane.
+/// its arena lane to its model's allocator.
 fn drain_finished<B: AmBackend>(inner: &mut Inner<B>, s: &Shared<B>) {
     let done: Vec<u64> = inner
         .streams
@@ -515,7 +732,7 @@ fn drain_finished<B: AmBackend>(inner: &mut Inner<B>, s: &Shared<B>) {
     for id in done {
         let slot = inner.streams.remove(&id).unwrap();
         if let Some(lane) = slot.lane {
-            inner.lanes.release(lane);
+            inner.lanes[slot.model].release(lane);
         }
         inner.decode_queue.push_back(DecodeJob {
             stream_id: id,

@@ -57,6 +57,35 @@ impl HistSummary {
     }
 }
 
+/// Per-model serving counters (multi-model engine: one entry per
+/// registered model, index = model id).
+#[derive(Clone, Debug, Default)]
+pub struct ModelStats {
+    pub name: String,
+    /// Lanes in this model's arena.
+    pub max_lanes: usize,
+    /// AM frames computed for this model.
+    pub frames: u64,
+    /// Flush ticks in which this model stepped at least one lane.
+    pub ticks: u64,
+    /// Sum over those ticks of lanes in use (holders, idle included).
+    pub lanes_in_use_sum: u64,
+    /// Idle holders parked to admit waiting streams.
+    pub evictions: u64,
+    /// Active holders preempted at a quantum boundary.
+    pub preemptions: u64,
+}
+
+impl ModelStats {
+    /// Mean lane occupancy over the ticks this model stepped.
+    pub fn occupancy(&self) -> f64 {
+        if self.ticks == 0 || self.max_lanes == 0 {
+            return 0.0;
+        }
+        self.lanes_in_use_sum as f64 / (self.ticks as f64 * self.max_lanes as f64)
+    }
+}
+
 /// Engine-wide counters + histograms.
 #[derive(Default)]
 pub struct Metrics {
@@ -64,6 +93,8 @@ pub struct Metrics {
     pub finalize_latency: Histogram,
     /// per-frame: frame ready → logits produced (ms)
     pub frame_latency: Histogram,
+    /// stream admitted → its first posterior frame computed (ms)
+    pub first_frame_latency: Histogram,
     /// batched-step batch sizes
     pub batch_size: Histogram,
     /// arena lane occupancy at each flush (lanes in use / lanes total)
@@ -76,9 +107,27 @@ pub struct Metrics {
     pub utterances: Mutex<u64>,
     /// idle streams parked out of the arena to admit waiting streams
     pub evictions: Mutex<u64>,
+    /// active streams preempted at a quantum boundary (sched::quantum)
+    pub preemptions: Mutex<u64>,
+    /// streams refused admission (sched::admission backpressure)
+    pub admission_rejects: Mutex<u64>,
+    /// flush ticks where ready streams existed but none could be placed —
+    /// a scheduler invariant violation (debug builds also assert)
+    pub sched_stalls: Mutex<u64>,
+    /// per-model lane accounting (index = model id)
+    pub per_model: Mutex<Vec<ModelStats>>,
 }
 
 impl Metrics {
+    /// Install the per-model stat rows (engine start).
+    pub fn init_models(&self, names: &[String], max_lanes: usize) {
+        let mut pm = self.per_model.lock().unwrap();
+        *pm = names
+            .iter()
+            .map(|n| ModelStats { name: n.clone(), max_lanes, ..Default::default() })
+            .collect();
+    }
+
     pub fn add_audio(&self, secs: f64) {
         *self.audio_seconds.lock().unwrap() += secs;
     }
@@ -92,8 +141,36 @@ impl Metrics {
         *self.utterances.lock().unwrap() += 1;
     }
 
-    pub fn add_eviction(&self) {
+    pub fn add_eviction(&self, model: usize) {
         *self.evictions.lock().unwrap() += 1;
+        if let Some(m) = self.per_model.lock().unwrap().get_mut(model) {
+            m.evictions += 1;
+        }
+    }
+
+    pub fn add_preemption(&self, model: usize) {
+        *self.preemptions.lock().unwrap() += 1;
+        if let Some(m) = self.per_model.lock().unwrap().get_mut(model) {
+            m.preemptions += 1;
+        }
+    }
+
+    pub fn add_admission_reject(&self) {
+        *self.admission_rejects.lock().unwrap() += 1;
+    }
+
+    pub fn add_sched_stall(&self) {
+        *self.sched_stalls.lock().unwrap() += 1;
+    }
+
+    /// Record one flush tick for `model`: `lanes_in_use` holders (idle
+    /// included), `frames` lanes actually stepped.
+    pub fn record_model_tick(&self, model: usize, lanes_in_use: usize, frames: usize) {
+        if let Some(m) = self.per_model.lock().unwrap().get_mut(model) {
+            m.ticks += 1;
+            m.lanes_in_use_sum += lanes_in_use as u64;
+            m.frames += frames as u64;
+        }
     }
 
     /// Real-time factor of the AM stage: compute seconds per audio second
@@ -113,6 +190,8 @@ impl Metrics {
         out.push('\n');
         out.push_str(&self.frame_latency.summary().fmt_ms("frame_latency"));
         out.push('\n');
+        out.push_str(&self.first_frame_latency.summary().fmt_ms("first_frame_latency"));
+        out.push('\n');
         let bs = self.batch_size.summary();
         out.push_str(&format!(
             "batch_size             n={:<5} mean={:5.2}  p50={:4.0}  p99={:4.0}\n",
@@ -130,11 +209,28 @@ impl Metrics {
         let audio = *self.audio_seconds.lock().unwrap();
         let compute = *self.am_compute_seconds.lock().unwrap();
         let evictions = *self.evictions.lock().unwrap();
+        let preemptions = *self.preemptions.lock().unwrap();
+        let rejects = *self.admission_rejects.lock().unwrap();
+        let stalls = *self.sched_stalls.lock().unwrap();
         let rtf = if audio > 0.0 { compute / audio } else { 0.0 };
         out.push_str(&format!(
             "utterances={utts}  frames={frames}  audio={audio:.1}s  \
              am_compute={compute:.2}s  RTF={rtf:.4}  evictions={evictions}\n",
         ));
+        out.push_str(&format!(
+            "preemptions={preemptions}  admission_rejects={rejects}  sched_stalls={stalls}\n",
+        ));
+        let pm = self.per_model.lock().unwrap();
+        if pm.len() > 1 || pm.iter().any(|m| m.preemptions + m.evictions > 0) {
+            for (id, m) in pm.iter().enumerate() {
+                out.push_str(&format!(
+                    "model[{id}] {:<14} lanes={} frames={} ticks={} occupancy={:.2} \
+                     evictions={} preemptions={}\n",
+                    m.name, m.max_lanes, m.frames, m.ticks, m.occupancy(), m.evictions,
+                    m.preemptions,
+                ));
+            }
+        }
         out
     }
 }
@@ -162,6 +258,37 @@ mod tests {
         let s = h.summary();
         assert_eq!(s.count, 0);
         assert_eq!(s.max, 0.0);
+    }
+
+    #[test]
+    fn per_model_accounting() {
+        let m = Metrics::default();
+        m.init_models(&["en".to_string(), "de".to_string()], 4);
+        m.record_model_tick(0, 2, 2);
+        m.record_model_tick(0, 4, 3);
+        m.record_model_tick(1, 1, 1);
+        m.add_eviction(0);
+        m.add_preemption(1);
+        m.add_preemption(7); // out of range: global counter only, no panic
+        let pm = m.per_model.lock().unwrap();
+        assert_eq!(pm[0].frames, 5);
+        assert_eq!(pm[0].ticks, 2);
+        assert!((pm[0].occupancy() - 6.0 / 8.0).abs() < 1e-12);
+        assert_eq!(pm[0].evictions, 1);
+        assert_eq!(pm[1].preemptions, 1);
+        assert_eq!(pm[1].frames, 1);
+        drop(pm);
+        assert_eq!(*m.preemptions.lock().unwrap(), 2);
+        let report = m.report();
+        assert!(report.contains("model[0] en"), "{report}");
+        assert!(report.contains("model[1] de"), "{report}");
+        assert!(report.contains("preemptions=2"), "{report}");
+    }
+
+    #[test]
+    fn empty_model_stats_safe() {
+        let s = ModelStats::default();
+        assert_eq!(s.occupancy(), 0.0);
     }
 
     #[test]

@@ -5,17 +5,25 @@
 //! deployment batches across streams.  This module provides both shapes:
 //! single-stream synchronous decoding (embedded, see [`crate::eval`]) and a
 //! thread-based streaming server with **lane-resident cross-stream
-//! batching**: each live stream owns a stable lane in the execution
-//! backend's pre-allocated [`crate::nn::model::BatchArena`], and every
+//! batching**: each live stream owns a stable lane in its model's
+//! pre-allocated [`crate::nn::model::BatchArena`], and every
 //! deadline-bounded tick steps the active lanes in place — recurrent state
 //! never moves between per-stream and batch buffers.  The engine is
 //! generic over [`crate::runtime::AmBackend`], so the native int8 engine
 //! and the PJRT/AOT graph (feature `pjrt`) serve through the same spine.
 //!
-//! - [`batcher`] — flush policy + lane allocator (pure, property-tested).
-//! - [`engine`]  — streams, lane scheduling/eviction, workers, lifecycle.
-//! - [`metrics`] — latency/throughput/occupancy instrumentation.
-//! - [`server`]  — length-prefixed TCP protocol + client helper.
+//! Lane-placement *policy* lives in [`crate::sched`]: time-sliced quantum
+//! preemption (no stream can starve newcomers under saturation), QoS
+//! priority classes, bounded admission with reject-with-reason
+//! backpressure, and a multi-model registry so one engine process serves
+//! N loaded models with per-model lane accounting.
+//!
+//! - [`batcher`] — flush policy, priority-aware batch-formation order,
+//!   lane allocator (pure, property-tested).
+//! - [`engine`]  — streams, lane scheduling mechanism, workers, lifecycle.
+//! - [`metrics`] — latency/throughput/occupancy + per-model accounting.
+//! - [`server`]  — length-prefixed TCP protocol (QoS class, admission
+//!   rejects) + client helper.
 
 pub mod batcher;
 pub mod engine;

@@ -2,6 +2,8 @@
 //!
 //! Little-endian framing, client → server:
 //! ```text
+//! 'P' u8               QoS class (0 = interactive, 1 = bulk); optional,
+//!                      must precede the first audio chunk
 //! 'A' u32 n  f32×n     audio chunk (PCM at 8 kHz)
 //! 'E'                  end of audio
 //! ```
@@ -9,20 +11,29 @@
 //! ```text
 //! 'F' u32 n  u32×n  u32 m  u32×m  f32 latency_ms
 //!     final words, greedy phones, finalize latency
+//! 'R' u32 n  bytes×n
+//!     admission rejected (reason text); the connection then closes
 //! ```
 //!
 //! A thread per connection feeds the shared [`Engine`] — batching happens
-//! across connections inside the engine, not per socket.
+//! across connections inside the engine, not per socket.  The stream is
+//! opened lazily at the first `'A'`/`'E'` so the `'P'` class can ride the
+//! admission request; when the engine's admission controller rejects
+//! (live-stream cap, see [`crate::sched::admission`]), the client gets an
+//! `'R'` frame with the [`crate::sched::RejectReason`] text instead of a
+//! hung connection.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::engine::{Engine, FinalResult};
 use crate::runtime::backend::AmBackend;
+use crate::sched::{Priority, StreamOptions};
 
 /// Serve until `stop` is set.  Returns the bound local address via the
 /// callback (useful with port 0 in tests).  Generic over the engine's
@@ -62,33 +73,81 @@ pub fn serve<B: AmBackend>(
 
 fn handle_conn<B: AmBackend>(engine: Arc<Engine<B>>, mut sock: TcpStream) -> Result<()> {
     sock.set_nodelay(true).ok();
-    let (id, rx) = engine.open_stream();
+    let mut opened: Option<(u64, Receiver<FinalResult>)> = None;
+    let r = conn_loop(&engine, &mut sock, &mut opened);
+    // Whatever ended the loop (peer vanished, protocol error, engine
+    // error), never leak a live stream: one left open here would hold an
+    // admission slot forever, and enough broken connections would wedge
+    // the engine at its live-stream cap.  Finishing drains it.
+    if let Some((id, rx)) = opened {
+        let _ = engine.finish_stream(id);
+        let _ = rx.recv();
+    }
+    r
+}
+
+fn conn_loop<B: AmBackend>(
+    engine: &Arc<Engine<B>>,
+    sock: &mut TcpStream,
+    opened: &mut Option<(u64, Receiver<FinalResult>)>,
+) -> Result<()> {
+    let mut opts = StreamOptions::default();
+    // A rejected connection keeps draining the client's audio (discarded)
+    // and delivers the 'R' frame at 'E' — writing it mid-stream and
+    // closing would race the client's in-flight sends into a broken pipe
+    // and the reason would be lost with the connection reset.
+    let mut rejected: Option<String> = None;
     loop {
         let mut tag = [0u8; 1];
         if sock.read_exact(&mut tag).is_err() {
-            // peer vanished: finish what we have
-            engine.finish_stream(id)?;
-            let _ = rx.recv();
+            // peer vanished: the caller finishes what we have
             return Ok(());
         }
+        // Open lazily so a preceding 'P' can set the admission class.
+        if matches!(tag[0], b'A' | b'E') && opened.is_none() && rejected.is_none() {
+            match engine.try_open_stream(opts) {
+                Ok(o) => *opened = Some(o),
+                Err(reason) => rejected = Some(reason.to_string()),
+            }
+        }
         match tag[0] {
+            b'P' => {
+                let mut class = [0u8; 1];
+                sock.read_exact(&mut class)?;
+                if opened.is_some() {
+                    bail!("'P' after the stream was opened");
+                }
+                match Priority::from_wire(class[0]) {
+                    Some(p) => opts.priority = p,
+                    None => bail!("unknown priority class {}", class[0]),
+                }
+            }
             b'A' => {
-                let n = read_u32(&mut sock)? as usize;
+                let n = read_u32(sock)? as usize;
                 if n > 10_000_000 {
                     bail!("oversized audio chunk ({n})");
                 }
                 let mut raw = vec![0u8; n * 4];
                 sock.read_exact(&mut raw)?;
+                if rejected.is_some() {
+                    continue; // drained, not served
+                }
                 let pcm: Vec<f32> = raw
                     .chunks_exact(4)
                     .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect();
-                engine.push_audio(id, &pcm)?;
+                let (id, _) = opened.as_ref().unwrap();
+                engine.push_audio(*id, &pcm)?;
             }
             b'E' => {
+                if let Some(reason) = rejected {
+                    write_reject(sock, &reason)?;
+                    return Ok(());
+                }
+                let (id, rx) = opened.take().unwrap();
                 engine.finish_stream(id)?;
                 let result = rx.recv()?;
-                write_final(&mut sock, &result)?;
+                write_final(sock, &result)?;
                 return Ok(());
             }
             other => bail!("unknown message tag {other:#x}"),
@@ -108,6 +167,16 @@ fn write_final(sock: &mut TcpStream, r: &FinalResult) -> Result<()> {
         buf.extend_from_slice(&p.to_le_bytes());
     }
     buf.extend_from_slice(&((r.finalize_latency.as_secs_f64() * 1e3) as f32).to_le_bytes());
+    sock.write_all(&buf)?;
+    Ok(())
+}
+
+fn write_reject(sock: &mut TcpStream, reason: &str) -> Result<()> {
+    let bytes = reason.as_bytes();
+    let mut buf = Vec::with_capacity(5 + bytes.len());
+    buf.push(b'R');
+    buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    buf.extend_from_slice(bytes);
     sock.write_all(&buf)?;
     Ok(())
 }
@@ -138,6 +207,13 @@ impl Client {
         Ok(Client { sock })
     }
 
+    /// Declare the stream's QoS class.  Must precede the first audio
+    /// chunk (the class rides the admission request).
+    pub fn set_priority(&mut self, p: Priority) -> Result<()> {
+        self.sock.write_all(&[b'P', p.to_wire()])?;
+        Ok(())
+    }
+
     pub fn send_audio(&mut self, pcm: &[f32]) -> Result<()> {
         let mut buf = Vec::with_capacity(5 + pcm.len() * 4);
         buf.push(b'A');
@@ -149,11 +225,21 @@ impl Client {
         Ok(())
     }
 
-    /// End the stream and read the final result.
+    /// End the stream and read the final result.  An admission rejection
+    /// ('R' frame) surfaces as an error carrying the server's reason.
     pub fn finish(mut self) -> Result<ClientResult> {
         self.sock.write_all(b"E")?;
         let mut tag = [0u8; 1];
         self.sock.read_exact(&mut tag)?;
+        if tag[0] == b'R' {
+            let n = read_u32(&mut self.sock)? as usize;
+            if n > 65536 {
+                bail!("oversized reject reason ({n})");
+            }
+            let mut raw = vec![0u8; n];
+            self.sock.read_exact(&mut raw)?;
+            bail!("admission rejected: {}", String::from_utf8_lossy(&raw));
+        }
         if tag[0] != b'F' {
             bail!("expected final frame, got {:#x}", tag[0]);
         }

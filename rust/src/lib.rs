@@ -36,6 +36,20 @@
 //! makes a lane's numerics bit-identical to running its stream alone, so
 //! batching and lane placement are invisible to results.
 //!
+//! ## Scheduling: preemptive multi-model lane placement
+//!
+//! Lane-placement *policy* lives in [`sched`], separate from the engine's
+//! mechanism: time-sliced preemption (every admitted stream gets a tick
+//! quantum; exhausted holders are preempted through the exact
+//! `save_lane`/`load_lane` parking path, so newcomers' wait is bounded
+//! even under full saturation), QoS classes ([`sched::Priority`]) feeding
+//! victim selection and batch-formation order, bounded admission with
+//! reject-with-reason backpressure ([`sched::admission`]), and a
+//! multi-model registry ([`sched::ModelRegistry`]) that serves N loaded
+//! models through one scheduler, AM worker and decode pool with per-model
+//! lane accounting.  Preemption never changes numerics — it only decides
+//! *when* a stream's frames are computed.
+//!
 //! ## Integer GEMM: packed panels + kernel ladder
 //!
 //! The paper's "optimized hardware instructions for integer arithmetic"
@@ -71,5 +85,6 @@ pub mod io;
 pub mod nn;
 pub mod quant;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod util;

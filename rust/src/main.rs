@@ -6,6 +6,8 @@
 //! quantasr eval     --model artifacts/models/p24.qat.qam --mode quant
 //!                   [--set eval_clean] [--artifacts artifacts]
 //! quantasr serve    --model … --mode quant [--addr 127.0.0.1:7700]
+//!                   [--max-batch 32] [--deadline-ms 5] [--quantum 25]
+//!                   [--max-streams 1024]
 //! quantasr bench-serve --model … [--streams 16] [--utts 64]
 //! quantasr ablate-rounding
 //! quantasr ablate-granularity [--model …]
@@ -136,9 +138,7 @@ fn load_engine(args: &Args) -> Result<Arc<Engine>> {
     let world = World::new();
     let decoder = Arc::new(build_decoder(&world, DecoderConfig::default()));
     let mut cfg = EngineConfig::default();
-    cfg.policy.max_batch = args.get_usize("max-batch", cfg.policy.max_batch);
-    cfg.policy.deadline =
-        std::time::Duration::from_micros((args.get_f64("deadline-ms", 5.0) * 1e3) as u64);
+    cfg.apply_cli_flags(args);
     Ok(Arc::new(Engine::start(model, decoder, cfg)))
 }
 

@@ -33,6 +33,16 @@ use anyhow::Result;
 use crate::nn::model::{BatchArena, ParkedLane};
 use crate::nn::AcousticModel;
 
+/// A lane address in a multi-model engine: which loaded model's arena
+/// (registration order in [`crate::sched::ModelRegistry`]) and which lane
+/// row within it.  The scheduler (`crate::sched`) places streams at
+/// `LaneTag` granularity; single-model engines always use `model == 0`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LaneTag {
+    pub model: usize,
+    pub lane: usize,
+}
+
 /// A batched, lane-resident acoustic-model execution backend.
 pub trait AmBackend: Send + Sync + 'static {
     /// Lane-resident recurrent state for `max_lanes` streams.
@@ -78,6 +88,14 @@ pub trait AmBackend: Send + Sync + 'static {
 
     /// Short human-readable backend name (metrics / logs).
     fn backend_name(&self) -> &'static str;
+
+    /// Human-readable identity of the *model* this backend executes, for
+    /// multi-model registries and per-model metrics.  Defaults to the
+    /// backend name; backends that know their loaded model should report
+    /// it (the native engine reports the `.qam` header name).
+    fn model_name(&self) -> String {
+        self.backend_name().to_string()
+    }
 }
 
 /// The native int8/f32 engine — the production hot path.  `Arena` is the
@@ -123,6 +141,10 @@ impl AmBackend for AcousticModel {
 
     fn backend_name(&self) -> &'static str {
         "native"
+    }
+
+    fn model_name(&self) -> String {
+        self.header.name.clone()
     }
 }
 
@@ -317,5 +339,64 @@ mod tests {
         let want = run(Kernel::Scalar);
         assert_eq!(run(Kernel::PackedScalar), want);
         assert_eq!(run(Kernel::Auto), want);
+    }
+
+    #[test]
+    fn preemption_roundtrip_bit_identical_at_any_tick_boundary() {
+        // The scheduler's correctness contract: a stream preempted
+        // (save_lane) and re-admitted (load_lane) at *arbitrary* tick
+        // boundaries — possibly into a different lane, with different
+        // co-riders — produces output bit-identical to an unpreempted
+        // run, on every kernel rung.
+        use crate::quant::gemm::Kernel;
+        use crate::util::prop::forall;
+        forall("preemption bit-exact", 20, 0x9EE7, |g: &mut Gen| {
+            let qam = crate::nn::model::random_qam(2, 10, Some(5), 6, 7, g);
+            let ticks = g.usize_in(3, 10);
+            let xs: Vec<Vec<f32>> = (0..ticks)
+                .map(|_| (0..3 * 6).map(|_| g.f32_in(-1.0, 1.0)).collect())
+                .collect();
+            // Preempt at a random subset of tick boundaries.
+            let preempt_at: Vec<bool> = (0..ticks).map(|_| g.bool()).collect();
+            for kernel in [Kernel::Scalar, Kernel::PackedScalar, Kernel::Auto] {
+                let mut m = AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap();
+                m.kernel = kernel;
+                // Reference: the stream runs alone in lane 0, never moved.
+                let mut ref_arena = AmBackend::alloc_arena(&m, 3);
+                let mut ref_out = vec![0f32; 3 * 7];
+                let mut want = Vec::new();
+                for x in &xs {
+                    AmBackend::step_lanes(&m, &mut ref_arena, &[0], x, &mut ref_out).unwrap();
+                    want.extend_from_slice(&ref_out[0..7]);
+                }
+                // Preempted run: the stream hops lanes 0→1→2→0…, parked
+                // between hops, sharing the arena with a decoy lane that
+                // steps alongside it.
+                let mut arena = AmBackend::alloc_arena(&m, 3);
+                let mut out = vec![0f32; 3 * 7];
+                let mut lane = 0usize;
+                let mut got = Vec::new();
+                for (t, x) in xs.iter().enumerate() {
+                    // The stream's frame must live in its lane's row.
+                    let mut xrow = vec![0f32; 3 * 6];
+                    xrow[lane * 6..(lane + 1) * 6].copy_from_slice(&x[0..6]);
+                    // Decoy stream in a different lane, random input.
+                    let decoy = (lane + 1) % 3;
+                    for v in xrow[decoy * 6..(decoy + 1) * 6].iter_mut() {
+                        *v = g.f32_in(-1.0, 1.0);
+                    }
+                    AmBackend::step_lanes(&m, &mut arena, &[lane, decoy], &xrow, &mut out)
+                        .unwrap();
+                    got.extend_from_slice(&out[lane * 7..(lane + 1) * 7]);
+                    if preempt_at[t] {
+                        let parked = AmBackend::save_lane(&m, &arena, lane);
+                        AmBackend::reset_lane(&m, &mut arena, lane);
+                        lane = (lane + 1) % 3;
+                        AmBackend::load_lane(&m, &mut arena, lane, &parked);
+                    }
+                }
+                assert_eq!(got, want, "kernel {kernel:?}: preemption changed numerics");
+            }
+        });
     }
 }

@@ -1,0 +1,124 @@
+//! Admission control: a bounded live-stream set with reject-with-reason
+//! backpressure.
+//!
+//! Without a bound, every accepted connection grows the engine's stream
+//! map (and its parked-state memory) without limit — under overload the
+//! process slows for *everyone* instead of telling *someone* to retry.
+//! The controller caps the number of live (admitted, not yet drained)
+//! streams across all models; the cap bounds the lane-less parked queue
+//! too, since parked streams are a subset of live ones.  Rejections carry
+//! a machine-readable [`RejectReason`] that the TCP server forwards to
+//! the client verbatim (`'R'` frame), so callers can distinguish
+//! "saturated, retry later" from "you asked for a model that isn't
+//! loaded".
+//!
+//! Pure policy — the engine supplies the current occupancy under its own
+//! lock and applies the verdict atomically with the insert.
+
+use std::fmt;
+
+/// Admission limits.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Maximum live (admitted, not yet drained) streams across all
+    /// models.  Bounds both memory (parked state is O(live streams)) and
+    /// the worst-case parked-queue wait.
+    pub max_live_streams: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        // Generous by default: lanes bound *compute* fairness via the
+        // quantum scheduler; this bound is the memory/latency backstop.
+        AdmissionConfig { max_live_streams: 1024 }
+    }
+}
+
+/// Why a stream was refused admission.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The live-stream cap is reached — retry after streams drain.
+    Saturated { live: usize, cap: usize },
+    /// The requested model index is not registered in this engine.
+    UnknownModel { model: usize, loaded: usize },
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::Saturated { live, cap } => {
+                write!(f, "saturated: {live} live streams at cap {cap}; retry later")
+            }
+            RejectReason::UnknownModel { model, loaded } => {
+                write!(f, "unknown model {model}: engine has {loaded} model(s) loaded")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RejectReason {}
+
+/// The admission decision procedure.
+#[derive(Clone, Debug, Default)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        AdmissionController { cfg }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Decide whether a stream targeting `model` may be admitted given
+    /// `live` currently-admitted streams and `loaded` registered models.
+    pub fn admit(&self, live: usize, model: usize, loaded: usize) -> Result<(), RejectReason> {
+        if model >= loaded {
+            return Err(RejectReason::UnknownModel { model, loaded });
+        }
+        if live >= self.cfg.max_live_streams {
+            return Err(RejectReason::Saturated { live, cap: self.cfg.max_live_streams });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_below_cap_rejects_at_cap() {
+        let c = AdmissionController::new(AdmissionConfig { max_live_streams: 2 });
+        assert!(c.admit(0, 0, 1).is_ok());
+        assert!(c.admit(1, 0, 1).is_ok());
+        assert_eq!(
+            c.admit(2, 0, 1),
+            Err(RejectReason::Saturated { live: 2, cap: 2 })
+        );
+        assert_eq!(
+            c.admit(5, 0, 1),
+            Err(RejectReason::Saturated { live: 5, cap: 2 })
+        );
+    }
+
+    #[test]
+    fn unknown_model_wins_over_saturation() {
+        let c = AdmissionController::new(AdmissionConfig { max_live_streams: 0 });
+        assert_eq!(
+            c.admit(9, 3, 2),
+            Err(RejectReason::UnknownModel { model: 3, loaded: 2 })
+        );
+    }
+
+    #[test]
+    fn reasons_render_for_the_wire() {
+        let s = RejectReason::Saturated { live: 8, cap: 8 }.to_string();
+        assert!(s.contains("saturated") && s.contains('8'), "{s}");
+        let u = RejectReason::UnknownModel { model: 2, loaded: 1 }.to_string();
+        assert!(u.contains("unknown model 2"), "{u}");
+    }
+}

@@ -1,0 +1,125 @@
+//! The lane-placement scheduler: *which stream steps in which arena lane
+//! this tick, across N loaded models* — all policy, no mechanism.
+//!
+//! Before this module existed, placement policy was ad-hoc logic inside
+//! `coordinator::engine`: ready streams that held a lane rode for free,
+//! lane-less streams waited for a free lane or evicted an *idle* holder,
+//! and a holder that never went idle could starve newcomers forever under
+//! full saturation.  The scheduler closes that hole and extends the
+//! serving spine to multiple models:
+//!
+//! - [`quantum`] — **time-sliced preemption**: every admitted stream gets
+//!   a tick quantum; once a holder has consumed it and lane-less streams
+//!   are waiting, the holder is preempted through the existing
+//!   `save_lane`/`load_lane` parking path (bit-identical round trip, see
+//!   [`crate::runtime::AmBackend`]), so a newcomer's wait is bounded by
+//!   one quantum instead of by the holder's goodwill.  The paper's int8
+//!   quantization is what makes this affordable: per-lane recurrent state
+//!   is small, so parking a lane is a few cache lines, not a tensor
+//!   migration.
+//! - [`Priority`] — QoS classes carried on stream admission.  They feed
+//!   both preemption victim selection (`Bulk` holders are preempted
+//!   before `Interactive` ones) and batch-formation order
+//!   ([`crate::coordinator::batcher::schedule_cmp`]).
+//! - [`admission`] — a bounded live-stream set with reject-with-reason
+//!   backpressure instead of unbounded parked-stream growth.
+//! - [`registry`] — N loaded models behind one engine: lanes are
+//!   addressed by [`crate::runtime::backend::LaneTag`] (model, lane), the
+//!   scheduler keeps per-model lane accounting, and one AM worker steps
+//!   every model's planned lanes each tick so no model can monopolize the
+//!   flush loop.
+//!
+//! Everything here is pure decision logic — no clocks, locks or arenas —
+//! so the policies are property-testable in isolation; the engine owns
+//! the mechanism (arenas, condvars, worker threads).
+
+pub mod admission;
+pub mod quantum;
+pub mod registry;
+
+pub use admission::{AdmissionConfig, AdmissionController, RejectReason};
+pub use quantum::{HolderView, QuantumPolicy};
+pub use registry::ModelRegistry;
+
+/// QoS class carried on stream admission.
+///
+/// `Interactive` streams sort first in batch formation and are preempted
+/// last; `Bulk` streams fill leftover lanes and are the first preemption
+/// victims.  The class never affects numerics — only *when* a stream's
+/// frames are computed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Latency-sensitive (live dictation): served first, preempted last.
+    #[default]
+    Interactive,
+    /// Throughput traffic (batch transcription): fills leftover capacity.
+    Bulk,
+}
+
+impl Priority {
+    /// Scheduling rank: lower ranks are served first and preempted last.
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Bulk => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Bulk => "bulk",
+        }
+    }
+
+    /// Parse a CLI/config spelling (`"interactive"`, `"bulk"`, or the
+    /// wire ranks `"0"`/`"1"`).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" | "0" => Some(Priority::Interactive),
+            "bulk" | "1" => Some(Priority::Bulk),
+            _ => None,
+        }
+    }
+
+    /// Wire encoding for the TCP protocol's `'P'` message.
+    pub fn to_wire(self) -> u8 {
+        self.rank()
+    }
+
+    pub fn from_wire(b: u8) -> Option<Priority> {
+        match b {
+            0 => Some(Priority::Interactive),
+            1 => Some(Priority::Bulk),
+            _ => None,
+        }
+    }
+}
+
+/// Admission-time options for a new stream (see
+/// [`crate::coordinator::Engine::try_open_stream`]).  `Default` is the
+/// single-model interactive stream every pre-scheduler caller expects.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamOptions {
+    /// Index of the loaded model ([`ModelRegistry`] registration order).
+    pub model: usize,
+    /// QoS class for preemption and batch-formation order.
+    pub priority: Priority,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_ranks_and_wire_roundtrip() {
+        assert!(Priority::Interactive.rank() < Priority::Bulk.rank());
+        for p in [Priority::Interactive, Priority::Bulk] {
+            assert_eq!(Priority::from_wire(p.to_wire()), Some(p));
+            assert_eq!(Priority::parse(p.name()), Some(p));
+        }
+        assert_eq!(Priority::from_wire(7), None);
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Interactive);
+    }
+}

@@ -1,0 +1,118 @@
+//! Multi-model registry: N loaded acoustic models behind one engine.
+//!
+//! The engine used to be welded to exactly one model per process; serving
+//! a second language or a second model size meant a second engine, a
+//! second decode pool and a second TCP port.  The registry holds N
+//! [`AmBackend`]s (registration order = model index, the id carried by
+//! [`crate::sched::StreamOptions::model`]); the engine allocates one
+//! lane-tagged arena per model and a single scheduler + AM worker + decode
+//! pool serves all of them, with per-model lane accounting in
+//! [`crate::coordinator::metrics::Metrics`] and tick-level fairness (every
+//! model's planned lanes step every flush — a saturated model cannot
+//! monopolize the worker).
+//!
+//! Models may differ in input dimension and label count — per-stream I/O
+//! is sized per model by the engine — but every model's lanes obey the
+//! same [`AmBackend`] contract, so preemption and eviction work uniformly.
+
+use std::sync::Arc;
+
+use crate::runtime::backend::AmBackend;
+
+/// An ordered set of loaded models.  Index = model id.
+pub struct ModelRegistry<B: AmBackend> {
+    entries: Vec<(String, Arc<B>)>,
+}
+
+impl<B: AmBackend> Default for ModelRegistry<B> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<B: AmBackend> ModelRegistry<B> {
+    pub fn new() -> Self {
+        ModelRegistry { entries: Vec::new() }
+    }
+
+    /// The single-model registry every pre-scheduler call site uses.
+    pub fn single(backend: Arc<B>) -> Self {
+        let mut r = Self::new();
+        r.register(backend);
+        r
+    }
+
+    /// Register a model under its self-reported name
+    /// ([`AmBackend::model_name`]); returns its model id.
+    pub fn register(&mut self, backend: Arc<B>) -> usize {
+        let name = backend.model_name();
+        self.register_named(name, backend)
+    }
+
+    /// Register a model under an explicit name; returns its model id.
+    pub fn register_named(&mut self, name: impl Into<String>, backend: Arc<B>) -> usize {
+        self.entries.push((name.into(), backend));
+        self.entries.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, model: usize) -> Option<&Arc<B>> {
+        self.entries.get(model).map(|(_, b)| b)
+    }
+
+    pub fn name(&self, model: usize) -> Option<&str> {
+        self.entries.get(model).map(|(n, _)| n.as_str())
+    }
+
+    /// Consume the registry into parallel (names, backends) vectors —
+    /// the engine's internal layout.
+    pub fn into_parts(self) -> (Vec<String>, Vec<Arc<B>>) {
+        self.entries.into_iter().unzip()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{AcousticModel, ExecMode};
+    use crate::util::prop::Gen;
+
+    fn model(seed: u64) -> Arc<AcousticModel> {
+        let mut g = Gen::new(seed);
+        let qam = crate::nn::model::random_qam(2, 8, Some(4), 6, 7, &mut g);
+        Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap())
+    }
+
+    #[test]
+    fn registration_order_is_model_id() {
+        let mut r = ModelRegistry::new();
+        assert!(r.is_empty());
+        let a = r.register_named("am-en", model(1));
+        let b = r.register_named("am-de", model(2));
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.name(0), Some("am-en"));
+        assert_eq!(r.name(1), Some("am-de"));
+        assert!(r.get(1).is_some());
+        assert!(r.get(2).is_none());
+        let (names, backends) = r.into_parts();
+        assert_eq!(names, vec!["am-en".to_string(), "am-de".to_string()]);
+        assert_eq!(backends.len(), 2);
+    }
+
+    #[test]
+    fn single_uses_the_model_name() {
+        let r = ModelRegistry::single(model(3));
+        assert_eq!(r.len(), 1);
+        // random_qam names the model by its shape.
+        assert!(r.name(0).is_some());
+        assert_eq!(r.name(0), Some(r.get(0).unwrap().model_name().as_str()));
+    }
+}

@@ -61,6 +61,20 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Like [`Args::get_usize`], but a present-and-malformed value warns
+    /// on stderr instead of being silently replaced — serving knobs must
+    /// neither panic nor vanish without a trace.  (Durations have their
+    /// own validated grammar: `coordinator::batcher::parse_deadline_ms`.)
+    pub fn get_usize_warn(&self, key: &str, default: usize) -> usize {
+        match self.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("--{key} '{v}' is not an integer; using {default}");
+                default
+            }),
+        }
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
@@ -96,6 +110,14 @@ mod tests {
         assert_eq!(a.get_or("port", "7700"), "7700");
         assert_eq!(a.get_f64("deadline-ms", 5.0), 5.0);
         assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn warn_variant_falls_back_without_panicking() {
+        let a = parse("serve --quantum 7 --streams many");
+        assert_eq!(a.get_usize_warn("quantum", 25), 7);
+        assert_eq!(a.get_usize_warn("streams", 8), 8);
+        assert_eq!(a.get_usize_warn("absent", 3), 3);
     }
 
     #[test]

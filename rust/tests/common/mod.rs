@@ -26,6 +26,17 @@ pub fn random_model(
     cells: usize,
     proj: Option<usize>,
 ) -> quantasr::io::model_fmt::QamFile {
+    random_model_seeded(layers, cells, proj, 0x7E57)
+}
+
+/// [`random_model`] with an explicit weight seed — multi-model tests need
+/// models that disagree, so lane mixups are detectable in the outputs.
+pub fn random_model_seeded(
+    layers: usize,
+    cells: usize,
+    proj: Option<usize>,
+    seed: u64,
+) -> quantasr::io::model_fmt::QamFile {
     use quantasr::io::model_fmt::{ModelHeader, QamFile, Tensor};
     use quantasr::util::rng::Xoshiro256;
     use std::collections::BTreeMap;
@@ -33,7 +44,7 @@ pub fn random_model(
     let input_dim = quantasr::frontend::spec::FEAT_DIM;
     let labels = quantasr::frontend::spec::N_LABELS;
     let rec = proj.unwrap_or(cells);
-    let mut rng = Xoshiro256::new(0x7E57);
+    let mut rng = Xoshiro256::new(seed);
     let mut tensors = BTreeMap::new();
     let mut mk = |name: String, i: usize, o: usize, rng: &mut Xoshiro256| {
         let scale = (1.0 / i as f64).sqrt() as f32 * 1.7;
@@ -63,7 +74,7 @@ pub fn random_model(
     tensors.insert("out.b".into(), Tensor::F32 { shape: vec![labels], data: vec![0.0; labels] });
     QamFile {
         header: ModelHeader {
-            name: format!("rand{layers}x{cells}"),
+            name: format!("rand{layers}x{cells}s{seed:x}"),
             num_layers: layers,
             cell_dim: cells,
             proj_dim: proj,

@@ -23,6 +23,7 @@ fn engine(max_batch: usize) -> (Arc<Engine>, Arc<AcousticModel>) {
         policy: BatchPolicy { max_batch, deadline: std::time::Duration::from_millis(2) },
         decode_workers: 2,
         max_pending_frames: 32,
+        ..EngineConfig::default()
     };
     (Arc::new(Engine::start(model.clone(), decoder, cfg)), model)
 }

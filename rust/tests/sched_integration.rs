@@ -1,0 +1,310 @@
+//! Integration tests of the preemptive scheduler (no artifacts needed —
+//! random models): starvation freedom under never-idle saturation,
+//! preemption bit-exactness across kernel rungs and tick boundaries,
+//! multi-model serving with per-model accounting, admission backpressure,
+//! and the TCP reject/priority protocol.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use quantasr::coordinator::batcher::BatchPolicy;
+use quantasr::coordinator::server::{serve, Client};
+use quantasr::coordinator::{Engine, EngineConfig};
+use quantasr::decoder::DecoderConfig;
+use quantasr::eval::build_decoder;
+use quantasr::frontend::spec;
+use quantasr::nn::{AcousticModel, ExecMode};
+use quantasr::sched::{
+    AdmissionConfig, ModelRegistry, Priority, QuantumPolicy, RejectReason, StreamOptions,
+};
+use quantasr::sim::World;
+use quantasr::util::rng::Xoshiro256;
+
+fn frames(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::new(seed);
+    let mut v = vec![0f32; n * spec::FEAT_DIM];
+    for x in v.iter_mut() {
+        *x = rng.normal() as f32;
+    }
+    v
+}
+
+fn sched_config(max_batch: usize, quantum_ticks: u32, max_pending: usize) -> EngineConfig {
+    EngineConfig {
+        policy: BatchPolicy { max_batch, deadline: Duration::from_millis(1) },
+        decode_workers: 2,
+        max_pending_frames: max_pending,
+        quantum: QuantumPolicy { quantum_ticks },
+        admission: AdmissionConfig::default(),
+    }
+}
+
+fn greedy_ref(model: &AcousticModel, f: &[f32], n: usize) -> Vec<u32> {
+    let lp = model.forward_utt(f, n);
+    quantasr::decoder::ctc::greedy(&lp, model.num_labels())
+}
+
+/// The acceptance scenario: every lane held by a never-idle bulk stream
+/// (the exact starvation hole the pre-scheduler engine documented), then
+/// interactive newcomers arrive.  They must be scheduled (via quantum
+/// preemption — no lane is ever free and no holder ever idles), and every
+/// stream's output must be bit-identical to its unpreempted solo run.
+#[test]
+fn interactive_streams_not_starved_by_never_idle_bulk() {
+    let lanes = 2usize;
+    let qam = common::random_model(2, 16, Some(8));
+    let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    // Deep pending queues (32) so bulk producers blocked on backpressure
+    // keep their streams never-idle; quantum 3 bounds the newcomer wait.
+    let eng = Arc::new(Engine::start(model.clone(), decoder, sched_config(lanes, 3, 32)));
+
+    let bulk_frames = 400usize;
+    let bulk_content: Vec<Vec<f32>> =
+        (0..lanes).map(|s| frames(bulk_frames, 900 + s as u64)).collect();
+    let bulk_want: Vec<Vec<u32>> =
+        bulk_content.iter().map(|f| greedy_ref(&model, f, bulk_frames)).collect();
+    let ia_frames = 12usize;
+    let ia_content = frames(ia_frames, 777);
+    let ia_want = greedy_ref(&model, &ia_content, ia_frames);
+
+    std::thread::scope(|scope| {
+        // One never-idle bulk stream per lane: push_frames blocks on
+        // backpressure, so the queue stays full until fully consumed.
+        let mut bulk_rx = Vec::new();
+        for (s, content) in bulk_content.iter().enumerate() {
+            let (id, rx) = eng
+                .try_open_stream(StreamOptions { model: 0, priority: Priority::Bulk })
+                .expect("bulk admission");
+            bulk_rx.push((rx, s));
+            let eng = eng.clone();
+            scope.spawn(move || {
+                eng.push_frames(id, content).unwrap();
+                eng.finish_stream(id).unwrap();
+            });
+        }
+        // Let the bulk streams occupy every lane.
+        std::thread::sleep(Duration::from_millis(100));
+        // 4× oversubscription: 2·lanes interactive newcomers on top of
+        // the lane-holding bulk streams.
+        let mut ia_rx = Vec::new();
+        for k in 0..2 * lanes {
+            let (id, rx) = eng
+                .try_open_stream(StreamOptions { model: 0, priority: Priority::Interactive })
+                .expect("interactive admission");
+            eng.push_frames(id, &ia_content).unwrap();
+            eng.finish_stream(id).unwrap();
+            ia_rx.push((rx, k));
+        }
+        // Starvation bound: without preemption these recvs never return
+        // (bulk holders never idle, lanes release only at drain).
+        for (rx, k) in ia_rx {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap_or_else(|_| {
+                panic!("interactive stream {k} starved behind never-idle bulk")
+            });
+            assert_eq!(r.num_frames, ia_frames);
+            assert_eq!(r.phones, ia_want, "preemption changed interactive numerics");
+        }
+        assert!(
+            *eng.metrics().preemptions.lock().unwrap() >= 1,
+            "interactive progress without any preemption should be impossible here"
+        );
+        // The preempted bulk streams must drain to bit-identical results.
+        for (rx, s) in bulk_rx {
+            let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(r.num_frames, bulk_frames);
+            assert_eq!(r.phones, bulk_want[s], "preemption changed bulk numerics");
+        }
+    });
+    let report = eng.metrics().report();
+    assert!(report.contains("preemptions="), "{report}");
+    assert_eq!(*eng.metrics().sched_stalls.lock().unwrap(), 0);
+}
+
+/// Preemption bit-exactness across kernel rungs: streams forced through
+/// constant quantum-boundary preemption (1 lane, several streams) must
+/// produce output bit-identical to their solo runs on every rung, at
+/// multiple quantum lengths (= preemption at different tick boundaries).
+#[test]
+fn preemption_bit_exact_across_kernel_rungs() {
+    use quantasr::quant::gemm::Kernel;
+    let qam = common::random_model(2, 16, Some(8));
+    let n_streams = 3usize;
+    let total = 20usize;
+    let content: Vec<Vec<f32>> =
+        (0..n_streams).map(|s| frames(total, 4000 + s as u64)).collect();
+    for kernel in [Kernel::Scalar, Kernel::PackedScalar, Kernel::Auto] {
+        for quantum in [1u32, 3] {
+            let mut m = AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap();
+            m.kernel = kernel;
+            let model = Arc::new(m);
+            let want: Vec<Vec<u32>> =
+                content.iter().map(|f| greedy_ref(&model, f, total)).collect();
+            let decoder = Arc::new(build_decoder(
+                &World::new(),
+                DecoderConfig { beam: 4, ..Default::default() },
+            ));
+            let eng = Engine::start(model.clone(), decoder, sched_config(1, quantum, 32));
+            let mut rxs = Vec::new();
+            for f in &content {
+                let (id, rx) = eng.open_stream();
+                eng.push_frames(id, f).unwrap();
+                eng.finish_stream(id).unwrap();
+                rxs.push(rx);
+            }
+            for (rx, want_phones) in rxs.into_iter().zip(&want) {
+                let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+                assert_eq!(r.num_frames, total);
+                assert_eq!(
+                    &r.phones, want_phones,
+                    "kernel {kernel:?} quantum {quantum}: preemption changed numerics"
+                );
+            }
+            // 3 streams share 1 lane and none ever idles mid-utterance:
+            // rotation requires preemption.
+            assert!(*eng.metrics().preemptions.lock().unwrap() >= 1);
+        }
+    }
+}
+
+/// Two models in one engine process: streams on each are served
+/// concurrently by the same scheduler/worker, results match each model's
+/// solo reference, and per-model lane accounting is reported.
+#[test]
+fn two_models_share_one_engine_with_per_model_metrics() {
+    let qam_a = common::random_model_seeded(2, 16, Some(8), 0xA11CE);
+    let qam_b = common::random_model_seeded(2, 12, Some(6), 0xB0B);
+    let model_a = Arc::new(AcousticModel::from_qam(&qam_a, ExecMode::Quant).unwrap());
+    let model_b = Arc::new(AcousticModel::from_qam(&qam_b, ExecMode::Quant).unwrap());
+    let mut registry = ModelRegistry::new();
+    assert_eq!(registry.register_named("model-a", model_a.clone()), 0);
+    assert_eq!(registry.register_named("model-b", model_b.clone()), 1);
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    let eng = Engine::start_registry(registry, decoder, sched_config(2, 4, 32));
+
+    let per_model_streams = 3usize;
+    let total = 15usize;
+    let mut rxs = Vec::new();
+    for s in 0..per_model_streams {
+        for (midx, model) in [(0usize, &model_a), (1usize, &model_b)] {
+            let f = frames(total, 7000 + (midx * 100 + s) as u64);
+            let want = greedy_ref(model, &f, total);
+            let (id, rx) = eng
+                .try_open_stream(StreamOptions { model: midx, priority: Priority::Interactive })
+                .expect("admission");
+            eng.push_frames(id, &f).unwrap();
+            eng.finish_stream(id).unwrap();
+            rxs.push((rx, midx, want));
+        }
+    }
+    for (rx, midx, want) in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(r.num_frames, total);
+        assert_eq!(r.phones, want, "model {midx}: multi-model serving changed numerics");
+    }
+    let pm = eng.metrics().per_model.lock().unwrap();
+    assert_eq!(pm.len(), 2);
+    assert_eq!(pm[0].name, "model-a");
+    assert_eq!(pm[1].name, "model-b");
+    for stats in pm.iter() {
+        assert_eq!(
+            stats.frames,
+            (per_model_streams * total) as u64,
+            "every frame steps exactly once per model"
+        );
+        assert!(stats.ticks > 0);
+        assert!(stats.occupancy() > 0.0 && stats.occupancy() <= 1.0);
+    }
+    drop(pm);
+    let report = eng.metrics().report();
+    assert!(report.contains("model[0] model-a"), "{report}");
+    assert!(report.contains("model[1] model-b"), "{report}");
+}
+
+/// Admission control: beyond the live-stream cap new streams are rejected
+/// with a reason (bounded queue, not unbounded growth), and capacity
+/// frees up when streams drain.
+#[test]
+fn admission_rejects_beyond_cap_and_recovers() {
+    let qam = common::random_model(2, 16, Some(8));
+    let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    let mut cfg = sched_config(2, 4, 32);
+    cfg.admission = AdmissionConfig { max_live_streams: 2 };
+    let eng = Engine::start(model, decoder, cfg);
+
+    let (id_a, rx_a) = eng.try_open_stream(StreamOptions::default()).unwrap();
+    let (id_b, rx_b) = eng.try_open_stream(StreamOptions::default()).unwrap();
+    match eng.try_open_stream(StreamOptions::default()) {
+        Err(RejectReason::Saturated { live, cap }) => {
+            assert_eq!((live, cap), (2, 2));
+        }
+        other => panic!("expected saturation reject, got {other:?}"),
+    }
+    match eng.try_open_stream(StreamOptions { model: 7, ..Default::default() }) {
+        Err(RejectReason::UnknownModel { model, loaded }) => {
+            assert_eq!((model, loaded), (7, 1));
+        }
+        other => panic!("expected unknown-model reject, got {other:?}"),
+    }
+    assert_eq!(*eng.metrics().admission_rejects.lock().unwrap(), 2);
+    // Drain both; the result implies the stream slot is gone, so
+    // admission capacity is back.
+    for (id, rx) in [(id_a, rx_a), (id_b, rx_b)] {
+        eng.push_frames(id, &frames(4, id)).unwrap();
+        eng.finish_stream(id).unwrap();
+        rx.recv_timeout(Duration::from_secs(20)).unwrap();
+    }
+    assert!(eng.try_open_stream(StreamOptions::default()).is_ok());
+}
+
+/// The TCP protocol carries the QoS class ('P') and surfaces admission
+/// rejects as 'R' frames with the reason, instead of hanging the client.
+#[test]
+fn server_rejects_over_tcp_with_reason() {
+    let qam = common::random_model(2, 16, Some(8));
+    let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    let mut cfg = sched_config(2, 4, 32);
+    cfg.admission = AdmissionConfig { max_live_streams: 1 };
+    let engine = Arc::new(Engine::start(model, decoder, cfg));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv_engine = engine.clone();
+    let srv_stop = stop.clone();
+    let server = std::thread::spawn(move || {
+        serve(srv_engine, "127.0.0.1:0", srv_stop, move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .expect("server failed");
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap().to_string();
+
+    // First client takes the only admission slot and holds it open.
+    let mut c1 = Client::connect(&addr).unwrap();
+    c1.set_priority(Priority::Interactive).unwrap();
+    c1.send_audio(&[0.01f32; 800]).unwrap();
+    std::thread::sleep(Duration::from_millis(200)); // let the open commit
+    // Second client must be rejected with the saturation reason.
+    let c2 = Client::connect(&addr).unwrap();
+    let err = c2.finish().expect_err("second stream should be rejected");
+    assert!(
+        format!("{err:#}").contains("saturated"),
+        "want saturation reject, got: {err:#}"
+    );
+    // The first client is unaffected.
+    let r1 = c1.finish().expect("first stream serves normally");
+    assert!(r1.server_latency_ms >= 0.0);
+    assert!(*engine.metrics().admission_rejects.lock().unwrap() >= 1);
+
+    stop.store(true, Ordering::SeqCst);
+    server.join().unwrap();
+}
