@@ -13,6 +13,7 @@
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use quantasr::coordinator::batcher::BatchPolicy;
@@ -22,7 +23,7 @@ use quantasr::eval::build_decoder;
 use quantasr::frontend::spec;
 use quantasr::io::model_fmt::{ModelHeader, QamFile, Tensor};
 use quantasr::nn::{AcousticModel, ExecMode};
-use quantasr::sched::{Priority, QuantumPolicy, StreamOptions};
+use quantasr::sched::{ModelParams, ModelRegistry, Priority, QuantumPolicy, StreamOptions};
 use quantasr::sim::World;
 use quantasr::util::bench::{fmt_ns, Bench, Measurement};
 use quantasr::util::rng::Xoshiro256;
@@ -284,6 +285,159 @@ fn main() {
         saturation_rows.push((factor, ff.p50, ff.p99, tick.p50, tick.p99, preemptions));
     }
 
+    // (e) fleet churn: model A saturated by never-idle bulk producers
+    // while a second model is hot-loaded, serves one interactive
+    // utterance, and is drained out — repeatedly.  Records load→ready
+    // latency (admin ack: arena built on the worker), first-result
+    // latency on the fresh model, drain latency, and whether the base
+    // model's tail latency survives the churn.
+    println!("\n== fleet churn: hot model load/unload under load ==");
+    let churn_cycles = 8usize;
+    let (churn_load_p50, churn_drain_p50, churn_first_p50, churn_tick_p99);
+    {
+        let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+        let cfg = EngineConfig {
+            policy: BatchPolicy { max_batch: 4, deadline: std::time::Duration::from_millis(1) },
+            decode_workers: 2,
+            max_pending_frames: 64,
+            quantum: QuantumPolicy { quantum_ticks: 8 },
+            ..EngineConfig::default()
+        };
+        let engine = Arc::new(Engine::start(model, decoder.clone(), cfg));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut load_ms: Vec<f64> = Vec::new();
+        let mut first_ms: Vec<f64> = Vec::new();
+        let mut drain_ms: Vec<f64> = Vec::new();
+        let mut base_chunk = vec![0f32; spec::FEAT_DIM * 16];
+        rng.fill_normal(&mut base_chunk);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let engine = engine.clone();
+                let stop = stop.clone();
+                let chunk = base_chunk.clone();
+                scope.spawn(move || {
+                    let (id, rx) = engine
+                        .try_open_stream(StreamOptions { model: 0, priority: Priority::Bulk })
+                        .expect("admission");
+                    while !stop.load(Ordering::SeqCst) {
+                        engine.push_frames(id, &chunk).unwrap();
+                    }
+                    engine.finish_stream(id).unwrap();
+                    let _ = rx.recv().unwrap();
+                });
+            }
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            let mut utt = vec![0f32; spec::FEAT_DIM * 20];
+            rng.fill_normal(&mut utt);
+            for round in 0..churn_cycles {
+                let qam_b = random_qam(2, 24, Some(12));
+                let mb = Arc::new(AcousticModel::from_qam(&qam_b, ExecMode::Quant).unwrap());
+                let t0 = std::time::Instant::now();
+                let id = engine
+                    .load_model_named(
+                        format!("churn{round}"),
+                        mb,
+                        ModelParams { weight: 1, lanes: Some(2) },
+                    )
+                    .expect("hot load");
+                load_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                let t1 = std::time::Instant::now();
+                let (sid, rx) = engine
+                    .try_open_stream(StreamOptions { model: id, priority: Priority::Interactive })
+                    .expect("churn admission");
+                engine.push_frames(sid, &utt).unwrap();
+                engine.finish_stream(sid).unwrap();
+                let _ = rx.recv().unwrap();
+                first_ms.push(t1.elapsed().as_secs_f64() * 1e3);
+                let t2 = std::time::Instant::now();
+                engine.unload_model(id).expect("unload");
+                drain_ms.push(t2.elapsed().as_secs_f64() * 1e3);
+            }
+            stop.store(true, Ordering::SeqCst);
+        });
+        let p50 = |v: &mut Vec<f64>| {
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[v.len() / 2]
+        };
+        churn_load_p50 = p50(&mut load_ms);
+        churn_first_p50 = p50(&mut first_ms);
+        churn_drain_p50 = p50(&mut drain_ms);
+        // Engine-wide per-frame (enqueue→step) latency p99 across the
+        // whole churn run — base + churned models' frames, the same
+        // frame_latency histogram the saturation section reports as
+        // tick_p99_ms; the serving-tail view, not base-model-isolated.
+        churn_tick_p99 = engine.metrics().frame_latency.summary().p99;
+        println!(
+            "{churn_cycles} load/serve/unload cycles under saturation: load p50 \
+             {churn_load_p50:.2}ms  utterance p50 {churn_first_p50:.2}ms  drain p50 \
+             {churn_drain_p50:.2}ms  engine-wide per-tick p99 {churn_tick_p99:.2}ms  \
+             (loads {} unloads {})",
+            *engine.metrics().model_loads.lock().unwrap(),
+            *engine.metrics().model_unloads.lock().unwrap(),
+        );
+    }
+
+    // (f) weighted shares: two saturated models, weight ratios 1:1 and
+    // 4:1 — the measured per-model frame split must track the configured
+    // ratio (sched::weights DRR over the tick budget).
+    println!("\n== weighted per-model shares under saturation ==");
+    let mut share_rows: Vec<(u32, u32, f64)> = Vec::new();
+    for weights in [[1u32, 1u32], [4, 1]] {
+        let model_a = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+        let model_b = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+        let mut registry = ModelRegistry::new();
+        registry.register_named("heavy", model_a);
+        registry.register_named("light", model_b);
+        let mut cfg = EngineConfig {
+            policy: BatchPolicy { max_batch: 4, deadline: std::time::Duration::from_millis(1) },
+            decode_workers: 2,
+            max_pending_frames: 64,
+            quantum: QuantumPolicy { quantum_ticks: 8 },
+            ..EngineConfig::default()
+        };
+        cfg.model_weights = weights.to_vec();
+        let engine = Arc::new(Engine::start_registry(registry, decoder.clone(), cfg));
+        let stop = Arc::new(AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            for m in 0..2usize {
+                for _ in 0..4 {
+                    let engine = engine.clone();
+                    let stop = stop.clone();
+                    let mut chunk = vec![0f32; spec::FEAT_DIM * 16];
+                    let mut r2 = Xoshiro256::new(77 + m as u64);
+                    r2.fill_normal(&mut chunk);
+                    scope.spawn(move || {
+                        let (id, rx) = engine
+                            .try_open_stream(StreamOptions { model: m, priority: Priority::Bulk })
+                            .expect("admission");
+                        while !stop.load(Ordering::SeqCst) {
+                            engine.push_frames(id, &chunk).unwrap();
+                        }
+                        engine.finish_stream(id).unwrap();
+                        let _ = rx.recv().unwrap();
+                    });
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            let f0 = {
+                let pm = engine.metrics().per_model.lock().unwrap();
+                (pm[0].frames, pm[1].frames)
+            };
+            std::thread::sleep(std::time::Duration::from_millis(800));
+            let f1 = {
+                let pm = engine.metrics().per_model.lock().unwrap();
+                (pm[0].frames, pm[1].frames)
+            };
+            stop.store(true, Ordering::SeqCst);
+            let ratio = (f1.0 - f0.0) as f64 / ((f1.1 - f0.1).max(1)) as f64;
+            println!(
+                "weights {}:{}  measured frame share {:.2}:1",
+                weights[0], weights[1], ratio
+            );
+            share_rows.push((weights[0], weights[1], ratio));
+        });
+    }
+
     // Emit BENCH_engine.json so the perf trajectory is recorded across PRs.
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"engine\",\n  \"results\": [\n");
@@ -313,6 +467,21 @@ fn main() {
             "    {{\"oversubscription\": {factor}, \"first_frame_p50_ms\": {ffp50:.2}, \
              \"first_frame_p99_ms\": {ffp99:.2}, \"tick_p50_ms\": {tp50:.2}, \
              \"tick_p99_ms\": {tp99:.2}, \"preemptions\": {preempts}}}{comma}"
+        );
+    }
+    json.push_str("  ],\n");
+    let _ = writeln!(
+        json,
+        "  \"churn\": {{\"cycles\": {churn_cycles}, \"load_p50_ms\": {churn_load_p50:.2}, \
+         \"utterance_p50_ms\": {churn_first_p50:.2}, \"drain_p50_ms\": {churn_drain_p50:.2}, \
+         \"tick_p99_ms\": {churn_tick_p99:.2}}},"
+    );
+    json.push_str("  \"weighted_shares\": [\n");
+    for (i, (wa, wb, ratio)) in share_rows.iter().enumerate() {
+        let comma = if i + 1 < share_rows.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"weights\": \"{wa}:{wb}\", \"measured_frame_ratio\": {ratio:.2}}}{comma}"
         );
     }
     json.push_str("  ]\n}\n");

@@ -153,6 +153,52 @@ impl LaneAllocator {
     }
 }
 
+/// A FIFO per QoS class: `pop` serves the lowest [`Priority::rank`] with
+/// work first, FIFO within a class.
+///
+/// Used for the decode queue: finalization (CTC beam + LM rescore) is the
+/// heavy per-utterance tail, and a plain FIFO let an `Interactive`
+/// finalize queue behind an arbitrary `Bulk` backlog — the one stage of
+/// the pipeline where QoS didn't apply.  Starvation is not a concern the
+/// way it is for lanes: decode jobs are finite (one per utterance) and
+/// the pool drains them to completion, so bulk jobs are delayed, never
+/// dropped.
+#[derive(Debug)]
+pub struct ClassQueue<T> {
+    lanes: Vec<std::collections::VecDeque<T>>,
+}
+
+impl<T> Default for ClassQueue<T> {
+    fn default() -> Self {
+        ClassQueue {
+            lanes: (0..Priority::NUM_CLASSES).map(|_| std::collections::VecDeque::new()).collect(),
+        }
+    }
+}
+
+impl<T> ClassQueue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, priority: Priority, item: T) {
+        self.lanes[priority.rank() as usize].push_back(item);
+    }
+
+    /// Highest class first, FIFO within a class.
+    pub fn pop(&mut self) -> Option<T> {
+        self.lanes.iter_mut().find_map(|q| q.pop_front())
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(|q| q.is_empty())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -304,6 +350,58 @@ mod tests {
                     assert!(w[0].1 >= w[1].1);
                 }
             }
+        });
+    }
+
+    #[test]
+    fn interactive_finalize_jumps_a_bulk_backlog() {
+        // The decode-queue regression test (ROADMAP "priority-aware
+        // decode queue"): an interactive job pushed behind a bulk backlog
+        // pops first; within a class order stays FIFO.
+        use crate::sched::Priority::{Bulk, Interactive};
+        let mut q = ClassQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+        q.push(Bulk, 10);
+        q.push(Bulk, 11);
+        q.push(Interactive, 1);
+        q.push(Bulk, 12);
+        q.push(Interactive, 2);
+        assert_eq!(q.len(), 5);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(11));
+        assert_eq!(q.pop(), Some(12));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn class_queue_conserves_items() {
+        forall("class queue conservation", 200, 0xC1A5, |g: &mut Gen| {
+            use crate::sched::Priority::{Bulk, Interactive};
+            let mut q = ClassQueue::new();
+            let n = g.usize_in(0, 24);
+            let mut pushed_ia = Vec::new();
+            let mut pushed_bulk = Vec::new();
+            for i in 0..n {
+                if g.bool() {
+                    q.push(Interactive, i);
+                    pushed_ia.push(i);
+                } else {
+                    q.push(Bulk, i);
+                    pushed_bulk.push(i);
+                }
+            }
+            assert_eq!(q.len(), n);
+            let mut popped = Vec::new();
+            while let Some(v) = q.pop() {
+                popped.push(v);
+            }
+            // All interactive items first (their FIFO order), then bulk.
+            let want: Vec<usize> =
+                pushed_ia.iter().chain(pushed_bulk.iter()).copied().collect();
+            assert_eq!(popped, want);
         });
     }
 

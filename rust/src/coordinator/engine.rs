@@ -2,23 +2,25 @@
 //! lexicon+LM decodes out.  Generic over the execution backend
 //! ([`AmBackend`]): the native int8 engine is the production path, the
 //! PJRT/AOT graph (feature `pjrt`) is a one-line swap at
-//! [`Engine::start`].
+//! [`Engine::start`].  The system-level map (layers, locks, the life of
+//! one tick) lives in `docs/ARCHITECTURE.md`.
 //!
 //! Thread topology (std threads; the image has no tokio):
 //!
 //! ```text
 //! callers ──push_audio──▶ per-stream Frontend ──▶ pending frame queues
 //!                                                (bounded; backpressure)
-//! AM worker ── BatchPolicy + sched ──▶ step each model's active lanes
+//! AM worker ── BatchPolicy + sched ──▶ step each model's granted lanes
+//!   ├── admin queue: hot model load/unload at tick boundaries
 //!   └── large packed GEMMs fan panels out to the persistent worker pool
 //!       (util::pool; parked threads, QUANTASR_GEMM_THREADS caps them)
-//! decode workers ◀── finished streams' posteriors ──▶ FinalResult channel
+//! decode workers ◀── priority decode queue ◀── finished streams
 //! ```
 //!
 //! **Lane-resident batching.**  Each live stream owns a stable *lane* in
-//! its model's pre-allocated arena (`[max_batch, state]` buffers); the AM
+//! its model's pre-allocated arena (`[lanes, state]` buffers); the AM
 //! worker writes each scheduled stream's frame into its lane's row of a
-//! lane-resident input buffer and steps the active lanes **in place** —
+//! lane-resident input buffer and steps the granted lanes **in place** —
 //! recurrent state never moves per tick.  Lane numerics are bit-identical
 //! to running the stream alone (per-row quantization, `quant::gemm`), so
 //! lane assignment is invisible to results.
@@ -33,20 +35,34 @@
 //! ([`QuantumPolicy::select_victim`]).  Preemption happens at tick
 //! boundaries only, so a preempted stream's outputs are bit-identical to
 //! an unpreempted run; a newcomer's wait is bounded by one quantum even
-//! when every holder streams continuously (the starvation hole the
-//! pre-scheduler engine documented).  Admission is bounded
+//! when every holder streams continuously.  Admission is bounded
 //! ([`crate::sched::admission`]): beyond the live-stream cap,
 //! [`Engine::try_open_stream`] rejects with a reason instead of growing
 //! without limit.
 //!
-//! **Multi-model serving.**  [`Engine::start_registry`] loads N models
-//! ([`ModelRegistry`]); each gets its own lane-tagged arena and allocator,
-//! one scheduler places streams per model, and every flush steps each
-//! model's planned lanes, so models share the AM worker and decode pool
-//! fairly (per-model lane accounting in [`Metrics::per_model`]).
+//! **Dynamic multi-model serving.**  [`Engine::start_registry`] seeds an
+//! index-stable model table ([`ModelRegistry`]); each model gets its own
+//! lane-tagged arena and allocator, one scheduler places streams per
+//! model, and one AM worker steps every model's granted lanes.  The table
+//! is *dynamic*: [`Engine::load_model`] registers a new model at runtime
+//! (its arena and allocator are created **on the AM worker thread**, at a
+//! tick boundary, so no tick ever observes a half-built model) and
+//! [`Engine::unload_model`] drains one out (newcomers are rejected with
+//! [`RejectReason::ModelDraining`], survivors finish bit-exactly, and the
+//! arena is torn down at a tick boundary once the last lane empties — no
+//! tick ever mixes a dying model's lanes with its teardown).
+//!
+//! **Weighted fairness.**  Each tick has a lane-step budget
+//! ([`EngineConfig::tick_budget`], default `max_batch`) divided across
+//! models by deficit-weighted round-robin ([`crate::sched::weights`]):
+//! per-model weights shape tick bandwidth proportionally, with work
+//! conservation (an idle model's share redistributes) and bounded
+//! per-model wait.  Trimming only defers whole frames, so it composes
+//! with the bit-exactness contract.
 //!
 //! Decoding (CTC beam + LM rescore) is heavier and utterance-final, so it
-//! runs on its own worker pool.
+//! runs on its own worker pool, ordered by a priority decode queue
+//! ([`ClassQueue`]): an `Interactive` finalize jumps a `Bulk` backlog.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -56,15 +72,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::batcher::{schedule_cmp, BatchPolicy, Decision, LaneAllocator};
+use crate::coordinator::batcher::{schedule_cmp, BatchPolicy, ClassQueue, Decision, LaneAllocator};
 use crate::coordinator::metrics::Metrics;
 use crate::decoder::Decoder;
 use crate::frontend::{spec, Frontend};
 use crate::nn::AcousticModel;
 use crate::runtime::backend::{AmBackend, LaneTag};
+use crate::sched::weights::{env_model_weights, parse_share_list};
 use crate::sched::{
-    AdmissionConfig, AdmissionController, HolderView, ModelRegistry, Priority, QuantumPolicy,
-    RejectReason, StreamOptions,
+    AdmissionConfig, AdmissionController, DrrState, HolderView, ModelParams, ModelRegistry,
+    ModelStatus, Priority, QuantumPolicy, RejectReason, StreamOptions,
 };
 
 /// Engine configuration.
@@ -78,6 +95,19 @@ pub struct EngineConfig {
     pub quantum: QuantumPolicy,
     /// Live-stream admission bound.
     pub admission: AdmissionConfig,
+    /// Per-tick lane-step budget shared by all models and divided by the
+    /// deficit-weighted round-robin (`0` ⇒ `policy.max_batch`).
+    /// Overridable via `QUANTASR_TICK_BUDGET` / `--tick-budget`.
+    pub tick_budget: usize,
+    /// Positional per-model DRR weights for the boot registry (missing
+    /// entries default to 1).  `QUANTASR_MODEL_WEIGHTS` /
+    /// `--model-weights 4,1`.  Hot loads carry their own weight in
+    /// [`ModelParams`].
+    pub model_weights: Vec<u32>,
+    /// Positional per-model arena lane counts for the boot registry
+    /// (missing entries default to `policy.max_batch`).
+    /// `--model-lanes 32,8`.
+    pub model_lanes: Vec<usize>,
 }
 
 impl Default for EngineConfig {
@@ -88,21 +118,48 @@ impl Default for EngineConfig {
             max_pending_frames: 256,
             quantum: QuantumPolicy::default(),
             admission: AdmissionConfig::default(),
+            tick_budget: env_tick_budget().unwrap_or(0),
+            model_weights: env_model_weights().unwrap_or_default(),
+            model_lanes: Vec::new(),
         }
     }
 }
 
+/// `QUANTASR_TICK_BUDGET` override, parsed once per process.  A malformed
+/// value warns and falls back — tuning knobs must never panic a serving
+/// process.
+fn env_tick_budget() -> Option<usize> {
+    static ONCE: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    *ONCE.get_or_init(|| {
+        let v = std::env::var("QUANTASR_TICK_BUDGET").ok()?;
+        match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            _ => {
+                eprintln!(
+                    "QUANTASR_TICK_BUDGET='{v}' is not a positive integer; \
+                     using the batch size"
+                );
+                None
+            }
+        }
+    })
+}
+
 impl EngineConfig {
     /// Apply the shared serving CLI flags (`--max-batch`, `--deadline-ms`,
-    /// `--quantum`, `--max-streams`), warn-don't-panic: the deadline goes
-    /// through the validated [`parse_deadline_ms`] grammar (finite,
-    /// non-negative — `Duration::from_secs_f64` would panic on `inf`) and
-    /// the quantum parses directly as `u32` so out-of-range values warn
-    /// instead of silently truncating.  Absent flags fall through to the
-    /// env-overridable defaults (`QUANTASR_BATCH_DEADLINE_MS`,
-    /// `QUANTASR_QUANTUM_TICKS`).
+    /// `--quantum`, `--max-streams`, `--tick-budget`, `--model-weights`,
+    /// `--model-lanes`), warn-don't-panic: the deadline goes through the
+    /// validated [`parse_deadline_ms`] grammar (finite, non-negative —
+    /// `Duration::from_secs_f64` would panic on `inf`), the quantum
+    /// parses directly as `u32`, and the share lists go through the
+    /// validated [`parse_share_list`] grammar.  Absent flags fall through
+    /// to the env-overridable defaults (`QUANTASR_BATCH_DEADLINE_MS`,
+    /// `QUANTASR_QUANTUM_TICKS`, `QUANTASR_TICK_BUDGET`,
+    /// `QUANTASR_MODEL_WEIGHTS`).
+    ///
+    /// [`parse_deadline_ms`]: crate::coordinator::batcher::parse_deadline_ms
     pub fn apply_cli_flags(&mut self, args: &crate::util::cli::Args) {
-        self.policy.max_batch = args.get_usize("max-batch", self.policy.max_batch);
+        self.policy.max_batch = args.get_usize_warn("max-batch", self.policy.max_batch);
         if let Some(v) = args.get("deadline-ms") {
             match crate::coordinator::batcher::parse_deadline_ms(v) {
                 Some(d) => self.policy.deadline = d,
@@ -124,6 +181,25 @@ impl EngineConfig {
         }
         self.admission.max_live_streams =
             args.get_usize_warn("max-streams", self.admission.max_live_streams);
+        self.tick_budget = args.get_usize_warn("tick-budget", self.tick_budget);
+        if let Some(v) = args.get("model-weights") {
+            match parse_share_list(v) {
+                Some(w) => self.model_weights = w,
+                None => eprintln!(
+                    "--model-weights '{v}' is not a comma-separated list of positive \
+                     integers; keeping the defaults"
+                ),
+            }
+        }
+        if let Some(v) = args.get("model-lanes") {
+            match parse_share_list(v) {
+                Some(l) => self.model_lanes = l.into_iter().map(|x| x as usize).collect(),
+                None => eprintln!(
+                    "--model-lanes '{v}' is not a comma-separated list of positive \
+                     integers; keeping the defaults"
+                ),
+            }
+        }
     }
 }
 
@@ -139,9 +215,26 @@ pub struct FinalResult {
     pub finalize_latency: Duration,
 }
 
+/// One row of the live registry snapshot ([`Engine::registry`], also
+/// serialized over the TCP `'Q'` admin frame — see `docs/PROTOCOL.md`).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    /// Slot index = model id (stable for the model's whole residency).
+    pub id: usize,
+    pub name: String,
+    /// DRR tick-bandwidth weight.
+    pub weight: u32,
+    /// Arena lanes allocated to this model.
+    pub lanes: usize,
+    /// Live (admitted, not yet drained) streams on this model.
+    pub live_streams: usize,
+    /// Unload in progress: survivors finishing, newcomers rejected.
+    pub draining: bool,
+}
+
 struct StreamSlot<B: AmBackend> {
     frontend: Frontend,
-    /// Which loaded model serves this stream (index into `Engine::models`).
+    /// Which loaded model serves this stream (index into the model table).
     model: usize,
     /// QoS class: preemption victim selection + batch-formation order.
     priority: Priority,
@@ -173,17 +266,65 @@ struct DecodeJob {
     result_tx: Sender<FinalResult>,
 }
 
+/// One loaded model's shared bookkeeping (index in `Inner::models` =
+/// model id).  The worker-side execution state (arena, I/O buffers) lives
+/// on the AM worker thread in a parallel `LaneIo` table.
+struct ModelSlot<B: AmBackend> {
+    backend: Arc<B>,
+    name: String,
+    /// DRR tick-bandwidth weight.
+    weight: u32,
+    /// Lane occupancy for this model's arena.
+    lanes: LaneAllocator,
+    /// Unload requested: no new admissions; slot torn down when the last
+    /// live stream drains.
+    draining: bool,
+    /// Fired (one per concurrent `unload_model` caller) at teardown.
+    unload_acks: Vec<Sender<()>>,
+}
+
+impl<B: AmBackend> ModelSlot<B> {
+    /// A freshly-registered (boot or hot-loaded) serving slot — one
+    /// constructor so both registration paths share defaults.
+    fn new(backend: Arc<B>, name: String, weight: u32, lanes: usize) -> Self {
+        ModelSlot {
+            backend,
+            name,
+            weight,
+            lanes: LaneAllocator::new(lanes),
+            draining: false,
+            unload_acks: Vec::new(),
+        }
+    }
+}
+
+/// Admin commands processed by the AM worker at tick boundaries, so model
+/// arrival/departure is serialized with lane planning.
+enum AdminCmd<B: AmBackend> {
+    Load {
+        name: String,
+        backend: Arc<B>,
+        params: ModelParams,
+        ack: Sender<Result<usize, String>>,
+    },
+}
+
 struct Inner<B: AmBackend> {
+    /// Index-stable model table; `None` = free slot (reused by later
+    /// loads, never while a model still occupies it).
+    models: Vec<Option<ModelSlot<B>>>,
     streams: HashMap<u64, StreamSlot<B>>,
-    /// One allocator per model (lane-tagged arenas).
-    lanes: Vec<LaneAllocator>,
     next_id: u64,
-    decode_queue: VecDeque<DecodeJob>,
+    /// Finished utterances awaiting decode, highest QoS class first.
+    decode_queue: ClassQueue<DecodeJob>,
+    /// Pending hot loads (worker-owned arenas must be built on the
+    /// worker thread).
+    admin: VecDeque<AdminCmd<B>>,
 }
 
 struct Shared<B: AmBackend> {
     inner: Mutex<Inner<B>>,
-    /// Wakes the AM worker (new frames / finished streams).
+    /// Wakes the AM worker (new frames / finished streams / admin).
     work_cv: Condvar,
     /// Wakes decode workers.
     decode_cv: Condvar,
@@ -198,9 +339,25 @@ struct Shared<B: AmBackend> {
 /// The streaming serving engine, generic over the execution backend
 /// (defaults to the native [`AcousticModel`]).
 pub struct Engine<B: AmBackend = AcousticModel> {
-    models: Vec<Arc<B>>,
     shared: Arc<Shared<B>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Effective lane count for a model: the explicit request (or the
+/// engine-wide `max_batch`), clamped to the backend's capacity where one
+/// exists (e.g. an AOT graph lowered at a fixed batch), floored at 1.
+fn effective_lanes<B: AmBackend>(backend: &B, requested: Option<usize>, max_batch: usize) -> usize {
+    let mut lanes = requested.filter(|&l| l > 0).unwrap_or(max_batch).max(1);
+    if let Some(cap) = backend.lane_capacity() {
+        if lanes > cap {
+            eprintln!(
+                "engine: backend '{}' supports {cap} lanes; clamping {lanes} -> {cap}",
+                backend.backend_name()
+            );
+            lanes = cap.max(1);
+        }
+    }
+    lanes
 }
 
 impl<B: AmBackend> Engine<B> {
@@ -211,39 +368,39 @@ impl<B: AmBackend> Engine<B> {
     }
 
     /// Start an engine serving every model in `registry` through one
-    /// scheduler, AM worker and decode pool.
+    /// scheduler, AM worker and decode pool.  Per-model weights and lane
+    /// counts come positionally from
+    /// [`EngineConfig::model_weights`]/[`EngineConfig::model_lanes`];
+    /// models hot-loaded later carry their own [`ModelParams`].
     pub fn start_registry(
         registry: ModelRegistry<B>,
         decoder: Arc<Decoder>,
         mut config: EngineConfig,
     ) -> Self {
-        let (names, models) = registry.into_parts();
-        assert!(!models.is_empty(), "ModelRegistry has no models");
-        // Lane-capped backends (e.g. an AOT graph lowered at a fixed
-        // batch) bound the arena: clamp rather than panic so the raised
-        // default `max_batch` (32) still works against a smaller
-        // fixed-batch graph.  The tightest model wins — lanes-per-model
-        // is uniform so the scheduler's fairness math stays simple.
-        for b in &models {
-            if let Some(cap) = b.lane_capacity() {
-                if config.policy.max_batch > cap {
-                    eprintln!(
-                        "engine: backend '{}' supports {cap} lanes; clamping max_batch {} -> {cap}",
-                        b.backend_name(),
-                        config.policy.max_batch
-                    );
-                    config.policy.max_batch = cap;
-                }
-            }
+        let (names, backends) = registry.into_parts();
+        assert!(!backends.is_empty(), "ModelRegistry has no models");
+        let max_batch = config.policy.max_batch.max(1);
+        if config.tick_budget == 0 {
+            config.tick_budget = max_batch;
         }
-        let max_lanes = config.policy.max_batch;
+        let mut slots: Vec<Option<ModelSlot<B>>> = Vec::with_capacity(backends.len());
+        for (m, (name, backend)) in names.into_iter().zip(backends).enumerate() {
+            let weight = config.model_weights.get(m).copied().unwrap_or(1).max(1);
+            let lanes = effective_lanes(
+                backend.as_ref(),
+                config.model_lanes.get(m).copied(),
+                max_batch,
+            );
+            slots.push(Some(ModelSlot::new(backend, name, weight, lanes)));
+        }
         let admission = AdmissionController::new(config.admission);
         let shared = Arc::new(Shared {
             inner: Mutex::new(Inner {
+                models: slots,
                 streams: HashMap::new(),
-                lanes: (0..models.len()).map(|_| LaneAllocator::new(max_lanes)).collect(),
                 next_id: 0,
-                decode_queue: VecDeque::new(),
+                decode_queue: ClassQueue::new(),
+                admin: VecDeque::new(),
             }),
             work_cv: Condvar::new(),
             decode_cv: Condvar::new(),
@@ -253,15 +410,20 @@ impl<B: AmBackend> Engine<B> {
             config,
             shutdown: AtomicBool::new(false),
         });
-        shared.metrics.init_models(&names, max_lanes);
+        {
+            let inner = shared.inner.lock().unwrap();
+            for (m, slot) in inner.models.iter().enumerate() {
+                let slot = slot.as_ref().unwrap();
+                shared.metrics.set_model(m, &slot.name, slot.lanes.capacity(), slot.weight);
+            }
+        }
         let mut workers = Vec::new();
         {
             let s = shared.clone();
-            let ms = models.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name("am-worker".into())
-                    .spawn(move || am_worker(s, ms))
+                    .spawn(move || am_worker(s))
                     .expect("spawn am worker"),
             );
         }
@@ -275,21 +437,95 @@ impl<B: AmBackend> Engine<B> {
                     .expect("spawn decode worker"),
             );
         }
-        Engine { models, shared, workers }
+        Engine { shared, workers }
     }
 
     pub fn metrics(&self) -> &Metrics {
         &self.shared.metrics
     }
 
-    /// The first (or only) execution backend this engine drives.
-    pub fn backend(&self) -> &Arc<B> {
-        &self.models[0]
+    /// Snapshot of the live model table (loaded + draining slots).  One
+    /// pass over the stream map (it is reachable by any client via the
+    /// TCP `'Q'` frame, and it holds the engine lock — keep it cheap).
+    pub fn registry(&self) -> Vec<ModelInfo> {
+        let inner = self.shared.inner.lock().unwrap();
+        let mut live = vec![0usize; inner.models.len()];
+        for slot in inner.streams.values() {
+            if let Some(n) = live.get_mut(slot.model) {
+                *n += 1;
+            }
+        }
+        inner
+            .models
+            .iter()
+            .enumerate()
+            .filter_map(|(id, m)| {
+                m.as_ref().map(|slot| ModelInfo {
+                    id,
+                    name: slot.name.clone(),
+                    weight: slot.weight,
+                    lanes: slot.lanes.capacity(),
+                    live_streams: live[id],
+                    draining: slot.draining,
+                })
+            })
+            .collect()
     }
 
-    /// All loaded models, in registration order (index = model id).
-    pub fn models(&self) -> &[Arc<B>] {
-        &self.models
+    /// Hot-load a model under its self-reported name
+    /// ([`AmBackend::model_name`]); returns its model id once the AM
+    /// worker has built the arena (blocks for at most ~one tick).
+    pub fn load_model(&self, backend: Arc<B>, params: ModelParams) -> Result<usize, String> {
+        let name = backend.model_name();
+        self.load_model_named(name, backend, params)
+    }
+
+    /// Hot-load a model under an explicit name.  The arena and lane
+    /// allocator are created **on the AM worker thread** at a tick
+    /// boundary — no tick ever observes a half-registered model.  The
+    /// returned id is a slot index: stable while the model stays loaded,
+    /// reusable after an unload completes.
+    pub fn load_model_named(
+        &self,
+        name: impl Into<String>,
+        backend: Arc<B>,
+        params: ModelParams,
+    ) -> Result<usize, String> {
+        let (ack, rx) = channel();
+        {
+            let mut inner = self.shared.inner.lock().unwrap();
+            inner.admin.push_back(AdminCmd::Load { name: name.into(), backend, params, ack });
+        }
+        self.shared.work_cv.notify_all();
+        match rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err("engine shut down before the load was processed".into()),
+        }
+    }
+
+    /// Hot-unload a model: new streams targeting it are rejected with
+    /// [`RejectReason::ModelDraining`], live streams finish normally
+    /// (their outputs stay bit-identical — drain changes *when* nothing
+    /// computes, never *what*), and once the last one drains the AM
+    /// worker tears the arena down at a tick boundary.  Blocks until the
+    /// teardown; a model with an endless stream drains only when that
+    /// stream finishes.
+    pub fn unload_model(&self, model: usize) -> Result<(), String> {
+        let rx = {
+            let mut inner = self.shared.inner.lock().unwrap();
+            match inner.models.get_mut(model) {
+                Some(Some(slot)) => {
+                    let (ack, rx) = channel();
+                    slot.draining = true;
+                    slot.unload_acks.push(ack);
+                    rx
+                }
+                _ => return Err(format!("model {model} is not loaded")),
+            }
+        };
+        self.shared.work_cv.notify_all();
+        rx.recv()
+            .map_err(|_| "engine shut down before the drain completed".to_string())
     }
 
     /// Open a new default stream (model 0, `Priority::Interactive`);
@@ -303,16 +539,23 @@ impl<B: AmBackend> Engine<B> {
     }
 
     /// Open a stream with explicit model/priority, subject to admission
-    /// control: beyond the live-stream cap (or for an unknown model) the
-    /// stream is rejected with a reason instead of queued unboundedly.
+    /// control: beyond the live-stream cap — or for a model that is
+    /// unknown or draining — the stream is rejected with a reason instead
+    /// of queued unboundedly.
     pub fn try_open_stream(
         &self,
         opts: StreamOptions,
     ) -> Result<(u64, Receiver<FinalResult>), RejectReason> {
         let (tx, rx) = channel();
         let mut inner = self.shared.inner.lock().unwrap();
+        let status = match inner.models.get(opts.model) {
+            Some(Some(slot)) if slot.draining => ModelStatus::Draining,
+            Some(Some(_)) => ModelStatus::Loaded,
+            _ => ModelStatus::Unknown,
+        };
+        let loaded = inner.models.iter().filter(|m| m.is_some()).count();
         if let Err(reason) =
-            self.shared.admission.admit(inner.streams.len(), opts.model, self.models.len())
+            self.shared.admission.admit(inner.streams.len(), opts.model, status, loaded)
         {
             self.shared.metrics.add_admission_reject();
             return Err(reason);
@@ -365,7 +608,11 @@ impl<B: AmBackend> Engine<B> {
         let d = {
             let inner = self.shared.inner.lock().unwrap();
             match inner.streams.get(&id) {
-                Some(slot) => self.models[slot.model].input_dim(),
+                Some(slot) => inner.models[slot.model]
+                    .as_ref()
+                    .expect("live stream on a torn-down model")
+                    .backend
+                    .input_dim(),
                 None => bail!("unknown stream {id}"),
             }
         };
@@ -444,31 +691,125 @@ impl<B: AmBackend> Drop for Engine<B> {
     }
 }
 
-fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, models: Vec<Arc<B>>) {
-    let nm = models.len();
-    let max_lanes = s.config.policy.max_batch;
-    let dims: Vec<usize> = models.iter().map(|m| m.input_dim()).collect();
-    let labels: Vec<usize> = models.iter().map(|m| m.num_labels()).collect();
-    // One persistent arena per model: every live stream's recurrent state
-    // lives in its lane for the engine's lifetime.  Allocated once,
-    // stepped in place — state moves only on eviction/preemption.
-    let mut arenas: Vec<B::Arena> =
-        models.iter().map(|m| m.alloc_arena(max_lanes)).collect();
-    // Lane-resident I/O buffers per model (row `lane` belongs to that
-    // lane's stream).
-    let mut xbufs: Vec<Vec<f32>> = dims.iter().map(|&d| vec![0f32; max_lanes * d]).collect();
-    let mut ybufs: Vec<Vec<f32>> =
-        labels.iter().map(|&l| vec![0f32; max_lanes * l]).collect();
+/// AM-worker-local execution state for one loaded model: the arena the
+/// lanes live in and the lane-resident I/O buffers.  Owned by the worker
+/// thread (stepped outside the engine lock); created on load, dropped on
+/// unload teardown.
+struct LaneIo<B: AmBackend> {
+    backend: Arc<B>,
+    arena: B::Arena,
+    /// Lane-resident input `[lanes, dim]`.
+    xbuf: Vec<f32>,
+    /// Lane-resident output `[lanes, labels]`.
+    ybuf: Vec<f32>,
+    dim: usize,
+    labels: usize,
+}
+
+fn lane_io<B: AmBackend>(backend: Arc<B>, lanes: usize) -> LaneIo<B> {
+    let dim = backend.input_dim();
+    let labels = backend.num_labels();
+    LaneIo {
+        arena: backend.alloc_arena(lanes),
+        xbuf: vec![0f32; lanes * dim],
+        ybuf: vec![0f32; lanes * labels],
+        dim,
+        labels,
+        backend,
+    }
+}
+
+/// Process pending hot loads (worker thread, between ticks): build the
+/// arena + I/O buffers **outside** the engine lock — they can be tens of
+/// MB for a large model, and holding the lock through the allocation
+/// would stall every stream on every already-serving model — then take
+/// the lock only to install the finished slot atomically.  The worker is
+/// the sole consumer of the admin queue and the sole writer of the slot
+/// table, so the unlock window cannot race another load.
+fn process_admin<B: AmBackend>(s: &Shared<B>, wm: &mut Vec<Option<LaneIo<B>>>) {
+    loop {
+        let cmd = s.inner.lock().unwrap().admin.pop_front();
+        let Some(AdminCmd::Load { name, backend, params, ack }) = cmd else {
+            return;
+        };
+        let weight = params.weight();
+        let lanes = effective_lanes(backend.as_ref(), params.lanes, s.config.policy.max_batch);
+        let io = lane_io(backend.clone(), lanes); // lock-free allocation
+        let slot_id = {
+            let mut inner = s.inner.lock().unwrap();
+            let slot_id = inner
+                .models
+                .iter()
+                .position(|m| m.is_none())
+                .unwrap_or(inner.models.len());
+            if slot_id == inner.models.len() {
+                inner.models.push(None);
+                wm.push(None);
+            }
+            debug_assert!(wm[slot_id].is_none(), "slot reuse before teardown");
+            wm[slot_id] = Some(io);
+            inner.models[slot_id] = Some(ModelSlot::new(backend, name.clone(), weight, lanes));
+            slot_id
+        };
+        s.metrics.set_model(slot_id, &name, lanes, weight);
+        let _ = ack.send(Ok(slot_id));
+    }
+}
+
+/// Tear down draining models whose last live stream has drained (worker
+/// thread, engine lock held, tick boundary): the arena drops here, after
+/// the tick that stepped its last lane and never during one.
+fn teardown_drained<B: AmBackend>(
+    inner: &mut Inner<B>,
+    wm: &mut [Option<LaneIo<B>>],
+    s: &Shared<B>,
+) {
+    for m in 0..inner.models.len() {
+        let dying = matches!(&inner.models[m], Some(slot) if slot.draining);
+        if !dying || inner.streams.values().any(|sl| sl.model == m) {
+            continue;
+        }
+        let slot = inner.models[m].take().unwrap();
+        assert_eq!(slot.lanes.in_use(), 0, "teardown with lanes in use");
+        wm[m] = None; // drops the arena and I/O buffers
+        s.metrics.retire_model(m);
+        for ack in slot.unload_acks {
+            let _ = ack.send(());
+        }
+    }
+}
+
+fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
+    let budget = s.config.tick_budget.max(1);
+    let mut drr = DrrState::new();
+    // Worker-local per-slot execution state.  Boot models' arenas are
+    // allocated here — on the worker thread, like every later hot load.
+    let mut wm: Vec<Option<LaneIo<B>>> = {
+        let inner = s.inner.lock().unwrap();
+        inner
+            .models
+            .iter()
+            .map(|slot| slot.as_ref().map(|m| lane_io(m.backend.clone(), m.lanes.capacity())))
+            .collect()
+    };
 
     loop {
         if s.shutdown.load(Ordering::SeqCst) {
             return;
         }
+        // Admin first: models arrive only between ticks (arena built
+        // lock-free, slot installed atomically).
+        process_admin(&s, &mut wm);
         let mut inner = s.inner.lock().unwrap();
         // Streams can finish *after* their last frame was computed (the
         // finish() raced the final batch) or with no audio at all — drain
-        // them to the decode queue every tick, before the policy decision.
+        // them to the decode queue every tick, before the policy decision;
+        // then tear down any draining model that just lost its last
+        // stream.
         drain_finished(&mut inner, &s);
+        teardown_drained(&mut inner, &mut wm, &s);
+        let nm = inner.models.len();
+        debug_assert_eq!(nm, wm.len());
         // Evaluate policy over every ready stream, all models.
         let now = Instant::now();
         let mut ready: Vec<(u64, usize, Priority, Duration)> = inner
@@ -520,7 +861,11 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, models: Vec<Arc<B>>) {
                 continue;
             }
             // (a) a free lane in this model's allocator.
-            let mut lane = inner.lanes[m].acquire();
+            let mut lane = inner.models[m]
+                .as_mut()
+                .expect("ready stream on a torn-down model")
+                .lanes
+                .acquire();
             // (b) evict an idle holder (no pending frame ⇒ not in `ready`
             // ⇒ not planned this tick).  The lane changes hands without
             // passing through the allocator.
@@ -533,7 +878,8 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, models: Vec<Arc<B>>) {
                 if let Some(vid) = victim {
                     let vslot = inner.streams.get_mut(&vid).unwrap();
                     let l = vslot.lane.take().unwrap();
-                    vslot.parked = Some(models[m].save_lane(&arenas[m], l));
+                    let io = wm[m].as_ref().expect("arena for a live model");
+                    vslot.parked = Some(io.backend.save_lane(&io.arena, l));
                     s.metrics.add_eviction(m);
                     lane = Some(l);
                 }
@@ -567,7 +913,8 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, models: Vec<Arc<B>>) {
                     let vslot = inner.streams.get_mut(&vid).unwrap();
                     vslot.lane = None;
                     vslot.quantum_used = 0;
-                    vslot.parked = Some(models[m].save_lane(&arenas[m], l));
+                    let io = wm[m].as_ref().expect("arena for a live model");
+                    vslot.parked = Some(io.backend.save_lane(&io.arena, l));
                     displaced.push(vid);
                     s.metrics.add_preemption(m);
                     lane = Some(l);
@@ -578,14 +925,18 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, models: Vec<Arc<B>>) {
             // never-idle holder exhausts its quantum within quantum ticks.
             let Some(lane) = lane else { continue };
             let slot = inner.streams.get_mut(&id).unwrap();
-            match slot.parked.take() {
-                Some(p) => models[m].load_lane(&mut arenas[m], lane, &p),
-                None => models[m].reset_lane(&mut arenas[m], lane),
+            let parked = slot.parked.take();
+            {
+                let io = wm[m].as_mut().expect("arena for a live model");
+                match parked {
+                    Some(p) => io.backend.load_lane(&mut io.arena, lane, &p),
+                    None => io.backend.reset_lane(&mut io.arena, lane),
+                }
             }
+            let slot = inner.streams.get_mut(&id).unwrap();
             slot.lane = Some(lane);
             slot.quantum_used = 0;
             planned[m].push((id, lane));
-            debug_assert!(planned[m].len() <= max_lanes);
         }
         // Unreachable with max_batch > 0: the highest-priority ready
         // stream either holds a lane (⇒ planned), or a lane is free, or
@@ -606,39 +957,88 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, models: Vec<Arc<B>>) {
             drop(guard);
             continue;
         }
-        // Pop one frame per planned stream into its lane's input row, and
+        // Weighted fairness: divide the tick's lane-step budget across
+        // models by deficit-weighted round-robin and defer the rest.
+        // Deferral only postpones whole frames (the trimmed holders keep
+        // their lanes and step on a later grant), so it composes with the
+        // bit-exactness contract.  Trim keeps the highest scheduling
+        // claim: QoS class, then longest wait.  Known cost: pass 2 above
+        // runs before the grant is known, so on a zero-grant tick a
+        // preemption's save/load round trip can be wholly deferred —
+        // wasted copies, never wrong results (grant-aware placement is a
+        // ROADMAP follow-on; demand isn't known until placement ran).
+        let demand: Vec<usize> = planned.iter().map(|p| p.len()).collect();
+        let drr_weights: Vec<u32> = inner
+            .models
+            .iter()
+            .map(|m| m.as_ref().map_or(0, |slot| slot.weight))
+            .collect();
+        let grants = drr.tick(&demand, &drr_weights, budget);
+        for m in 0..nm {
+            if grants[m] >= planned[m].len() {
+                continue;
+            }
+            s.metrics.add_deferrals(m, planned[m].len() - grants[m]);
+            let mut keyed: Vec<(Priority, Duration, u64, usize)> = planned[m]
+                .iter()
+                .map(|&(id, lane)| {
+                    let sl = &inner.streams[&id];
+                    let wait = sl.oldest_enqueue.map(|t| now - t).unwrap_or_default();
+                    (sl.priority, wait, id, lane)
+                })
+                .collect();
+            keyed.sort_by(|a, b| schedule_cmp(&(a.0, a.1), &(b.0, b.1)).then(a.2.cmp(&b.2)));
+            planned[m] = keyed
+                .into_iter()
+                .take(grants[m])
+                .map(|(_, _, id, lane)| (id, lane))
+                .collect();
+        }
+        // Pop one frame per granted stream into its lane's input row, and
         // charge the tick against the holder's quantum.
         let mut enqueue_times: Vec<Vec<Option<Instant>>> = vec![Vec::new(); nm];
         let mut total_b = 0usize;
         let mut lanes_in_use_total = 0usize;
+        let mut total_lanes = 0usize;
         for m in 0..nm {
-            let d = dims[m];
+            let Some(io) = wm[m].as_mut() else {
+                debug_assert!(planned[m].is_empty());
+                continue;
+            };
+            let d = io.dim;
             for &(id, lane) in &planned[m] {
                 let slot = inner.streams.get_mut(&id).unwrap();
                 let frame = slot.pending.pop_front().unwrap();
-                xbufs[m][lane * d..(lane + 1) * d].copy_from_slice(&frame);
+                io.xbuf[lane * d..(lane + 1) * d].copy_from_slice(&frame);
                 enqueue_times[m].push(slot.oldest_enqueue);
                 slot.oldest_enqueue =
                     if slot.pending.is_empty() { None } else { Some(now) };
                 slot.quantum_used = slot.quantum_used.saturating_add(1);
             }
             total_b += planned[m].len();
-            let in_use = inner.lanes[m].in_use();
-            lanes_in_use_total += in_use;
+            let slot = inner.models[m].as_ref().expect("arena without a model slot");
+            let in_use = slot.lanes.in_use();
+            // Occupancy counts only models with holders — a hot-loaded
+            // model that serves no traffic yet must not dilute the
+            // saturation signal (mirrors record_model_tick's convention
+            // of skipping idle models).
+            if in_use > 0 {
+                lanes_in_use_total += in_use;
+                total_lanes += slot.lanes.capacity();
+            }
             if !planned[m].is_empty() {
                 s.metrics.record_model_tick(m, in_use, planned[m].len());
             }
         }
         s.metrics
             .lane_occupancy
-            .record(lanes_in_use_total as f64 / (nm * max_lanes).max(1) as f64);
+            .record(lanes_in_use_total as f64 / total_lanes.max(1) as f64);
         drop(inner);
         s.space_cv.notify_all();
 
-        // Batched AM step per model over its active lanes, in place
+        // Batched AM step per model over its granted lanes, in place
         // (lock-free; arenas are worker-local and lane rows belong to
-        // planned streams).  Every model with planned lanes steps every
-        // flush — a saturated model cannot monopolize the worker.
+        // planned streams).
         let t0 = Instant::now();
         let mut any_failed = false;
         // Per-model step time: a model's frames are ready once *its* step
@@ -650,10 +1050,11 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, models: Vec<Arc<B>>) {
             if planned[m].is_empty() {
                 continue;
             }
+            let io = wm[m].as_mut().expect("granted lanes on an unloaded model");
             let tm = Instant::now();
             let lanes_list: Vec<usize> = planned[m].iter().map(|&(_, l)| l).collect();
             if let Err(e) =
-                models[m].step_lanes(&mut arenas[m], &lanes_list, &xbufs[m], &mut ybufs[m])
+                io.backend.step_lanes(&mut io.arena, &lanes_list, &io.xbuf, &mut io.ybuf)
             {
                 // Backend failure (only fallible for the PJRT path):
                 // surface loudly, put the popped frames back at the head
@@ -662,14 +1063,14 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, models: Vec<Arc<B>>) {
                 // applies backpressure instead of busy-looping.
                 eprintln!(
                     "am backend '{}' step failed: {e:#}",
-                    models[m].backend_name()
+                    io.backend.backend_name()
                 );
-                let d = dims[m];
+                let d = io.dim;
                 let mut inner = s.inner.lock().unwrap();
                 let now_err = Instant::now();
                 for &(id, lane) in &planned[m] {
                     if let Some(slot) = inner.streams.get_mut(&id) {
-                        slot.pending.push_front(xbufs[m][lane * d..(lane + 1) * d].to_vec());
+                        slot.pending.push_front(io.xbuf[lane * d..(lane + 1) * d].to_vec());
                         slot.oldest_enqueue.get_or_insert(now_err);
                         slot.quantum_used = slot.quantum_used.saturating_sub(1);
                     }
@@ -699,7 +1100,8 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, models: Vec<Arc<B>>) {
         // movement — recurrent state stayed in the arena.)
         let mut inner = s.inner.lock().unwrap();
         for m in 0..nm {
-            let l = labels[m];
+            let Some(io) = wm[m].as_ref() else { continue };
+            let l = io.labels;
             for (k, &(id, lane)) in planned[m].iter().enumerate() {
                 if let Some(slot) = inner.streams.get_mut(&id) {
                     if slot.frames_done == 0 {
@@ -708,7 +1110,7 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, models: Vec<Arc<B>>) {
                             .record_duration(slot.opened_at.elapsed());
                     }
                     slot.posteriors
-                        .extend_from_slice(&ybufs[m][lane * l..(lane + 1) * l]);
+                        .extend_from_slice(&io.ybuf[lane * l..(lane + 1) * l]);
                     slot.frames_done += 1;
                 }
                 if let Some(t0q) = enqueue_times[m][k] {
@@ -721,7 +1123,9 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>, models: Vec<Arc<B>>) {
 }
 
 /// Move every (finished && drained) stream to the decode queue, releasing
-/// its arena lane to its model's allocator.
+/// its arena lane to its model's allocator.  Queueing is QoS-ordered
+/// ([`ClassQueue`]): an interactive finalize never waits behind a bulk
+/// backlog.
 fn drain_finished<B: AmBackend>(inner: &mut Inner<B>, s: &Shared<B>) {
     let done: Vec<u64> = inner
         .streams
@@ -732,15 +1136,22 @@ fn drain_finished<B: AmBackend>(inner: &mut Inner<B>, s: &Shared<B>) {
     for id in done {
         let slot = inner.streams.remove(&id).unwrap();
         if let Some(lane) = slot.lane {
-            inner.lanes[slot.model].release(lane);
+            inner.models[slot.model]
+                .as_mut()
+                .expect("live stream on a torn-down model")
+                .lanes
+                .release(lane);
         }
-        inner.decode_queue.push_back(DecodeJob {
-            stream_id: id,
-            posteriors: slot.posteriors,
-            num_frames: slot.frames_done,
-            finish_time: slot.finish_time.unwrap_or_else(Instant::now),
-            result_tx: slot.result_tx,
-        });
+        inner.decode_queue.push(
+            slot.priority,
+            DecodeJob {
+                stream_id: id,
+                posteriors: slot.posteriors,
+                num_frames: slot.frames_done,
+                finish_time: slot.finish_time.unwrap_or_else(Instant::now),
+                result_tx: slot.result_tx,
+            },
+        );
         s.decode_cv.notify_one();
     }
 }
@@ -753,7 +1164,7 @@ fn decode_worker<B: AmBackend>(s: Arc<Shared<B>>, decoder: Arc<Decoder>) {
                 if s.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                if let Some(job) = inner.decode_queue.pop_front() {
+                if let Some(job) = inner.decode_queue.pop() {
                     break job;
                 }
                 let (guard, _t) = s

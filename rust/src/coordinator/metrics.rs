@@ -57,13 +57,20 @@ impl HistSummary {
     }
 }
 
-/// Per-model serving counters (multi-model engine: one entry per
-/// registered model, index = model id).
+/// Per-model serving counters (one entry per model *slot*, index = model
+/// id).  Slots are dynamic: a hot load resets its slot's row, a hot
+/// unload retires it (`loaded = false`, live accounting back at zero) —
+/// a reused slot never inherits a dead model's numbers.
 #[derive(Clone, Debug, Default)]
 pub struct ModelStats {
     pub name: String,
     /// Lanes in this model's arena.
     pub max_lanes: usize,
+    /// DRR tick-bandwidth weight ([`crate::sched::weights`]).
+    pub weight: u32,
+    /// False once the model has been unloaded (row kept for postmortem
+    /// until the slot is reused).
+    pub loaded: bool,
     /// AM frames computed for this model.
     pub frames: u64,
     /// Flush ticks in which this model stepped at least one lane.
@@ -74,6 +81,9 @@ pub struct ModelStats {
     pub evictions: u64,
     /// Active holders preempted at a quantum boundary.
     pub preemptions: u64,
+    /// Planned lane-steps deferred to a later tick by the weighted
+    /// budget (demand the DRR grant didn't cover this tick).
+    pub deferrals: u64,
 }
 
 impl ModelStats {
@@ -111,6 +121,10 @@ pub struct Metrics {
     pub preemptions: Mutex<u64>,
     /// streams refused admission (sched::admission backpressure)
     pub admission_rejects: Mutex<u64>,
+    /// models hot-loaded into the registry (boot models included)
+    pub model_loads: Mutex<u64>,
+    /// models drained out and torn down
+    pub model_unloads: Mutex<u64>,
     /// flush ticks where ready streams existed but none could be placed —
     /// a scheduler invariant violation (debug builds also assert)
     pub sched_stalls: Mutex<u64>,
@@ -119,13 +133,32 @@ pub struct Metrics {
 }
 
 impl Metrics {
-    /// Install the per-model stat rows (engine start).
-    pub fn init_models(&self, names: &[String], max_lanes: usize) {
+    /// Install (or reset) the stat row for model slot `id` — called at
+    /// engine start for boot models and on every hot load.  Resetting on
+    /// load is what makes "metrics return to zero after unload"
+    /// observable: a reused slot starts a fresh row.
+    pub fn set_model(&self, id: usize, name: &str, max_lanes: usize, weight: u32) {
         let mut pm = self.per_model.lock().unwrap();
-        *pm = names
-            .iter()
-            .map(|n| ModelStats { name: n.clone(), max_lanes, ..Default::default() })
-            .collect();
+        if pm.len() <= id {
+            pm.resize_with(id + 1, ModelStats::default);
+        }
+        pm[id] = ModelStats {
+            name: name.to_string(),
+            max_lanes,
+            weight,
+            loaded: true,
+            ..Default::default()
+        };
+        *self.model_loads.lock().unwrap() += 1;
+    }
+
+    /// Retire model slot `id` after its unload drain completes: the row
+    /// stays visible for postmortem but reads as not loaded.
+    pub fn retire_model(&self, id: usize) {
+        if let Some(m) = self.per_model.lock().unwrap().get_mut(id) {
+            m.loaded = false;
+        }
+        *self.model_unloads.lock().unwrap() += 1;
     }
 
     pub fn add_audio(&self, secs: f64) {
@@ -161,6 +194,17 @@ impl Metrics {
 
     pub fn add_sched_stall(&self) {
         *self.sched_stalls.lock().unwrap() += 1;
+    }
+
+    /// Record lane-steps model `model` had planned but the weighted
+    /// per-tick budget deferred (sched::weights DRR trim).
+    pub fn add_deferrals(&self, model: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        if let Some(m) = self.per_model.lock().unwrap().get_mut(model) {
+            m.deferrals += n as u64;
+        }
     }
 
     /// Record one flush tick for `model`: `lanes_in_use` holders (idle
@@ -212,22 +256,33 @@ impl Metrics {
         let preemptions = *self.preemptions.lock().unwrap();
         let rejects = *self.admission_rejects.lock().unwrap();
         let stalls = *self.sched_stalls.lock().unwrap();
+        let loads = *self.model_loads.lock().unwrap();
+        let unloads = *self.model_unloads.lock().unwrap();
         let rtf = if audio > 0.0 { compute / audio } else { 0.0 };
         out.push_str(&format!(
             "utterances={utts}  frames={frames}  audio={audio:.1}s  \
              am_compute={compute:.2}s  RTF={rtf:.4}  evictions={evictions}\n",
         ));
         out.push_str(&format!(
-            "preemptions={preemptions}  admission_rejects={rejects}  sched_stalls={stalls}\n",
+            "preemptions={preemptions}  admission_rejects={rejects}  sched_stalls={stalls}  \
+             model_loads={loads}  model_unloads={unloads}\n",
         ));
         let pm = self.per_model.lock().unwrap();
         if pm.len() > 1 || pm.iter().any(|m| m.preemptions + m.evictions > 0) {
             for (id, m) in pm.iter().enumerate() {
                 out.push_str(&format!(
-                    "model[{id}] {:<14} lanes={} frames={} ticks={} occupancy={:.2} \
-                     evictions={} preemptions={}\n",
-                    m.name, m.max_lanes, m.frames, m.ticks, m.occupancy(), m.evictions,
+                    "model[{id}] {:<14} {} w={} lanes={} frames={} ticks={} occupancy={:.2} \
+                     evictions={} preemptions={} deferrals={}\n",
+                    m.name,
+                    if m.loaded { "loaded" } else { "retired" },
+                    m.weight,
+                    m.max_lanes,
+                    m.frames,
+                    m.ticks,
+                    m.occupancy(),
+                    m.evictions,
                     m.preemptions,
+                    m.deferrals,
                 ));
             }
         }
@@ -263,26 +318,61 @@ mod tests {
     #[test]
     fn per_model_accounting() {
         let m = Metrics::default();
-        m.init_models(&["en".to_string(), "de".to_string()], 4);
+        m.set_model(0, "en", 4, 1);
+        m.set_model(1, "de", 4, 3);
         m.record_model_tick(0, 2, 2);
         m.record_model_tick(0, 4, 3);
         m.record_model_tick(1, 1, 1);
         m.add_eviction(0);
         m.add_preemption(1);
         m.add_preemption(7); // out of range: global counter only, no panic
+        m.add_deferrals(1, 2);
+        m.add_deferrals(0, 0); // no-op
         let pm = m.per_model.lock().unwrap();
         assert_eq!(pm[0].frames, 5);
         assert_eq!(pm[0].ticks, 2);
         assert!((pm[0].occupancy() - 6.0 / 8.0).abs() < 1e-12);
         assert_eq!(pm[0].evictions, 1);
+        assert_eq!((pm[0].weight, pm[0].loaded, pm[0].deferrals), (1, true, 0));
         assert_eq!(pm[1].preemptions, 1);
         assert_eq!(pm[1].frames, 1);
+        assert_eq!((pm[1].weight, pm[1].deferrals), (3, 2));
         drop(pm);
         assert_eq!(*m.preemptions.lock().unwrap(), 2);
+        assert_eq!(*m.model_loads.lock().unwrap(), 2);
         let report = m.report();
         assert!(report.contains("model[0] en"), "{report}");
         assert!(report.contains("model[1] de"), "{report}");
         assert!(report.contains("preemptions=2"), "{report}");
+    }
+
+    #[test]
+    fn slot_reuse_resets_and_retire_keeps_history() {
+        // Hot-unload retires the row; a hot load into the same slot (or
+        // a later one) starts from zero — churn metrics never bleed
+        // across model generations.
+        let m = Metrics::default();
+        m.set_model(0, "base", 4, 1);
+        m.set_model(2, "sparse-slot", 2, 1); // grows the table past a gap
+        m.record_model_tick(2, 2, 2);
+        m.retire_model(2);
+        {
+            let pm = m.per_model.lock().unwrap();
+            assert_eq!(pm.len(), 3);
+            assert!(!pm[2].loaded);
+            assert_eq!(pm[2].frames, 2, "postmortem row keeps its history");
+            assert!(pm[0].loaded);
+        }
+        m.set_model(2, "replacement", 8, 5);
+        let pm = m.per_model.lock().unwrap();
+        assert_eq!(pm[2].name, "replacement");
+        assert_eq!(pm[2].frames, 0, "reused slot must start clean");
+        assert_eq!((pm[2].max_lanes, pm[2].weight, pm[2].loaded), (8, 5, true));
+        drop(pm);
+        assert_eq!(*m.model_loads.lock().unwrap(), 3);
+        assert_eq!(*m.model_unloads.lock().unwrap(), 1);
+        m.retire_model(9); // out of range: counter only, no panic
+        assert_eq!(*m.model_unloads.lock().unwrap(), 2);
     }
 
     #[test]

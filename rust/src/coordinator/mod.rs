@@ -15,19 +15,24 @@
 //! Lane-placement *policy* lives in [`crate::sched`]: time-sliced quantum
 //! preemption (no stream can starve newcomers under saturation), QoS
 //! priority classes, bounded admission with reject-with-reason
-//! backpressure, and a multi-model registry so one engine process serves
-//! N loaded models with per-model lane accounting.
+//! backpressure, a *dynamic* multi-model registry (models hot-load and
+//! drain out at runtime without a restart), and weighted per-model tick
+//! bandwidth for heterogeneous fleets.  The system-level map is drawn in
+//! `docs/ARCHITECTURE.md`; the wire protocol is specified in
+//! `docs/PROTOCOL.md`.
 //!
 //! - [`batcher`] — flush policy, priority-aware batch-formation order,
-//!   lane allocator (pure, property-tested).
-//! - [`engine`]  — streams, lane scheduling mechanism, workers, lifecycle.
-//! - [`metrics`] — latency/throughput/occupancy + per-model accounting.
-//! - [`server`]  — length-prefixed TCP protocol (QoS class, admission
-//!   rejects) + client helper.
+//!   lane allocator, QoS-class queue (pure, property-tested).
+//! - [`engine`]  — streams, lane scheduling mechanism, hot model
+//!   load/unload, workers, lifecycle.
+//! - [`metrics`] — latency/throughput/occupancy + per-model accounting
+//!   across load/unload churn.
+//! - [`server`]  — length-prefixed TCP protocol (QoS class, model
+//!   selection, admission rejects, admin frames) + client helper.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod server;
 
-pub use engine::{Engine, EngineConfig, FinalResult};
+pub use engine::{Engine, EngineConfig, FinalResult, ModelInfo};

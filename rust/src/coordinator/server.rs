@@ -1,27 +1,57 @@
-//! TCP streaming protocol: one recognition stream per connection.
+//! TCP streaming + fleet-admin protocol.
 //!
-//! Little-endian framing, client → server:
+//! **The normative wire specification lives in `docs/PROTOCOL.md`** —
+//! frame layouts, reject-reason codes, the lazy-stream-open handshake and
+//! the admin-frame lifecycle are defined there; this header is only a
+//! summary.  Little-endian framing, client → server:
+//!
 //! ```text
 //! 'P' u8               QoS class (0 = interactive, 1 = bulk); optional,
 //!                      must precede the first audio chunk
+//! 'M' u32              target model id; optional, must precede the
+//!                      first audio chunk (default model 0)
 //! 'A' u32 n  f32×n     audio chunk (PCM at 8 kHz)
 //! 'E'                  end of audio
+//! 'L' u32 w  u32 l  u32 n  bytes×n
+//!                      admin: hot-load the model at path (weight w,
+//!                      lanes l, 0 = engine default)
+//! 'U' u32 id           admin: drain + unload model id
+//! 'Q'                  admin: query the live registry
 //! ```
 //! server → client:
 //! ```text
 //! 'F' u32 n  u32×n  u32 m  u32×m  f32 latency_ms
 //!     final words, greedy phones, finalize latency
 //! 'R' u32 n  bytes×n
-//!     admission rejected (reason text); the connection then closes
+//!     rejection/failure reason text.  After a stream-admission reject
+//!     (delivered at 'E') the connection closes; after an admin failure
+//!     the connection stays usable.
+//! 'O' u32 v
+//!     admin success (the loaded/unloaded model id)
+//! 'Q' u32 count  { u32 id  u8 draining  u32 weight  u32 lanes
+//!                  u32 live  u32 n  bytes×n }×count
+//!     registry snapshot
 //! ```
 //!
 //! A thread per connection feeds the shared [`Engine`] — batching happens
 //! across connections inside the engine, not per socket.  The stream is
-//! opened lazily at the first `'A'`/`'E'` so the `'P'` class can ride the
-//! admission request; when the engine's admission controller rejects
-//! (live-stream cap, see [`crate::sched::admission`]), the client gets an
-//! `'R'` frame with the [`crate::sched::RejectReason`] text instead of a
-//! hung connection.
+//! opened lazily at the first `'A'`/`'E'` so the `'P'`/`'M'` options can
+//! ride the admission request; when the engine's admission controller
+//! rejects (live-stream cap, unknown or draining model — see
+//! [`crate::sched::admission`]), the client gets an `'R'` frame with the
+//! [`crate::sched::RejectReason`] text instead of a hung connection.
+//! The mutating admin frames (`'L'`/`'U'`) are only valid before a
+//! stream opens on the connection; the read-only `'Q'` is valid at any
+//! time.  `'L'` requires the server to have been started with a
+//! [`ModelLoader`] ([`serve_with_loader`]), `'U'` blocks its connection
+//! thread until the model's drain completes (a never-finishing stream
+//! holds it indefinitely — close that stream's connection to unstick).
+//!
+//! **Trust model.**  Admin frames share the serving socket and are
+//! unauthenticated: anyone who can open a stream can also load/unload
+//! models.  Keep the listener on a trusted interface (the default bind
+//! is loopback) or front it with network policy; a separate
+//! authenticated admin socket is a ROADMAP follow-on.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -31,18 +61,37 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::engine::{Engine, FinalResult};
+use crate::coordinator::engine::{Engine, FinalResult, ModelInfo};
 use crate::runtime::backend::AmBackend;
-use crate::sched::{Priority, StreamOptions};
+use crate::sched::{ModelParams, Priority, StreamOptions};
 
-/// Serve until `stop` is set.  Returns the bound local address via the
-/// callback (useful with port 0 in tests).  Generic over the engine's
-/// execution backend — batching happens across connections inside the
-/// engine regardless of what executes the model.
+/// Backend factory for the `'L'` admin frame: maps the client-supplied
+/// model path/spec to a loaded backend.  Servers that don't install one
+/// reject `'L'` with a reason (the rest of the protocol is unaffected).
+pub type ModelLoader<B> = Arc<dyn Fn(&str) -> Result<Arc<B>> + Send + Sync>;
+
+/// Serve until `stop` is set, with hot model loading disabled (`'L'`
+/// frames are rejected with a reason; `'U'`/`'Q'` still work).  Returns
+/// the bound local address via the callback (useful with port 0 in
+/// tests).  Generic over the engine's execution backend — batching
+/// happens across connections inside the engine regardless of what
+/// executes the model.
 pub fn serve<B: AmBackend>(
     engine: Arc<Engine<B>>,
     addr: &str,
     stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    serve_with_loader(engine, addr, stop, None, on_bound)
+}
+
+/// [`serve`], plus a [`ModelLoader`] that backs the `'L'` hot-load admin
+/// frame.
+pub fn serve_with_loader<B: AmBackend>(
+    engine: Arc<Engine<B>>,
+    addr: &str,
+    stop: Arc<AtomicBool>,
+    loader: Option<ModelLoader<B>>,
     on_bound: impl FnOnce(std::net::SocketAddr),
 ) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
@@ -53,8 +102,9 @@ pub fn serve<B: AmBackend>(
         match listener.accept() {
             Ok((stream, _peer)) => {
                 let eng = engine.clone();
+                let ldr = loader.clone();
                 handles.push(std::thread::spawn(move || {
-                    if let Err(e) = handle_conn(eng, stream) {
+                    if let Err(e) = handle_conn(eng, ldr, stream) {
                         eprintln!("connection error: {e:#}");
                     }
                 }));
@@ -71,10 +121,14 @@ pub fn serve<B: AmBackend>(
     Ok(())
 }
 
-fn handle_conn<B: AmBackend>(engine: Arc<Engine<B>>, mut sock: TcpStream) -> Result<()> {
+fn handle_conn<B: AmBackend>(
+    engine: Arc<Engine<B>>,
+    loader: Option<ModelLoader<B>>,
+    mut sock: TcpStream,
+) -> Result<()> {
     sock.set_nodelay(true).ok();
     let mut opened: Option<(u64, Receiver<FinalResult>)> = None;
-    let r = conn_loop(&engine, &mut sock, &mut opened);
+    let r = conn_loop(&engine, &loader, &mut sock, &mut opened);
     // Whatever ended the loop (peer vanished, protocol error, engine
     // error), never leak a live stream: one left open here would hold an
     // admission slot forever, and enough broken connections would wedge
@@ -88,6 +142,7 @@ fn handle_conn<B: AmBackend>(engine: Arc<Engine<B>>, mut sock: TcpStream) -> Res
 
 fn conn_loop<B: AmBackend>(
     engine: &Arc<Engine<B>>,
+    loader: &Option<ModelLoader<B>>,
     sock: &mut TcpStream,
     opened: &mut Option<(u64, Receiver<FinalResult>)>,
 ) -> Result<()> {
@@ -103,7 +158,7 @@ fn conn_loop<B: AmBackend>(
             // peer vanished: the caller finishes what we have
             return Ok(());
         }
-        // Open lazily so a preceding 'P' can set the admission class.
+        // Open lazily so preceding 'P'/'M' can set the admission options.
         if matches!(tag[0], b'A' | b'E') && opened.is_none() && rejected.is_none() {
             match engine.try_open_stream(opts) {
                 Ok(o) => *opened = Some(o),
@@ -121,6 +176,15 @@ fn conn_loop<B: AmBackend>(
                     Some(p) => opts.priority = p,
                     None => bail!("unknown priority class {}", class[0]),
                 }
+            }
+            b'M' => {
+                let model = read_u32(sock)? as usize;
+                if opened.is_some() {
+                    bail!("'M' after the stream was opened");
+                }
+                // Validity is the admission controller's call (unknown /
+                // draining models reject at open with a reason).
+                opts.model = model;
             }
             b'A' => {
                 let n = read_u32(sock)? as usize;
@@ -149,6 +213,52 @@ fn conn_loop<B: AmBackend>(
                 let result = rx.recv()?;
                 write_final(sock, &result)?;
                 return Ok(());
+            }
+            b'L' => {
+                let weight = read_u32(sock)?;
+                let lanes = read_u32(sock)? as usize;
+                let n = read_u32(sock)? as usize;
+                if n > 4096 {
+                    bail!("oversized model path ({n})");
+                }
+                let mut raw = vec![0u8; n];
+                sock.read_exact(&mut raw)?;
+                if opened.is_some() {
+                    bail!("'L' after the stream was opened");
+                }
+                let path = String::from_utf8_lossy(&raw).to_string();
+                let outcome = match loader {
+                    None => Err("no model loader configured on this server".to_string()),
+                    Some(load) => match load.as_ref()(&path) {
+                        Ok(backend) => {
+                            let params = ModelParams {
+                                weight,
+                                lanes: if lanes == 0 { None } else { Some(lanes) },
+                            };
+                            engine.load_model(backend, params)
+                        }
+                        Err(e) => Err(format!("load '{path}': {e:#}")),
+                    },
+                };
+                match outcome {
+                    Ok(id) => write_ok(sock, id as u32)?,
+                    Err(reason) => write_reject(sock, &reason)?,
+                }
+            }
+            b'U' => {
+                let id = read_u32(sock)? as usize;
+                if opened.is_some() {
+                    bail!("'U' after the stream was opened");
+                }
+                // Blocks this connection thread until the drain completes
+                // (the engine keeps serving everyone else meanwhile).
+                match engine.unload_model(id) {
+                    Ok(()) => write_ok(sock, id as u32)?,
+                    Err(reason) => write_reject(sock, &reason)?,
+                }
+            }
+            b'Q' => {
+                write_registry(sock, &engine.registry())?;
             }
             other => bail!("unknown message tag {other:#x}"),
         }
@@ -181,13 +291,50 @@ fn write_reject(sock: &mut TcpStream, reason: &str) -> Result<()> {
     Ok(())
 }
 
+fn write_ok(sock: &mut TcpStream, v: u32) -> Result<()> {
+    let mut buf = Vec::with_capacity(5);
+    buf.push(b'O');
+    buf.extend_from_slice(&v.to_le_bytes());
+    sock.write_all(&buf)?;
+    Ok(())
+}
+
+fn write_registry(sock: &mut TcpStream, entries: &[ModelInfo]) -> Result<()> {
+    let mut buf = vec![b'Q'];
+    buf.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for e in entries {
+        buf.extend_from_slice(&(e.id as u32).to_le_bytes());
+        buf.push(e.draining as u8);
+        buf.extend_from_slice(&e.weight.to_le_bytes());
+        buf.extend_from_slice(&(e.lanes as u32).to_le_bytes());
+        buf.extend_from_slice(&(e.live_streams as u32).to_le_bytes());
+        let nb = e.name.as_bytes();
+        buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        buf.extend_from_slice(nb);
+    }
+    sock.write_all(&buf)?;
+    Ok(())
+}
+
 fn read_u32(sock: &mut TcpStream) -> Result<u32> {
     let mut b = [0u8; 4];
     sock.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
 }
 
-/// Blocking client for the protocol above (used by examples/benches).
+/// Read an 'R' frame's reason text (the tag byte already consumed).
+fn read_reject_text(sock: &mut TcpStream) -> Result<String> {
+    let n = read_u32(sock)? as usize;
+    if n > 65536 {
+        bail!("oversized reject reason ({n})");
+    }
+    let mut raw = vec![0u8; n];
+    sock.read_exact(&mut raw)?;
+    Ok(String::from_utf8_lossy(&raw).to_string())
+}
+
+/// Blocking client for the protocol above (used by examples/benches and
+/// the admin CLI).
 pub struct Client {
     sock: TcpStream,
 }
@@ -198,6 +345,17 @@ pub struct ClientResult {
     pub words: Vec<u32>,
     pub phones: Vec<u32>,
     pub server_latency_ms: f32,
+}
+
+/// Client-side view of one `'Q'` registry row.
+#[derive(Clone, Debug)]
+pub struct RegistryEntry {
+    pub id: u32,
+    pub draining: bool,
+    pub weight: u32,
+    pub lanes: u32,
+    pub live_streams: u32,
+    pub name: String,
 }
 
 impl Client {
@@ -214,6 +372,16 @@ impl Client {
         Ok(())
     }
 
+    /// Pick the model this stream targets.  Must precede the first audio
+    /// chunk; an unknown or draining model rejects at stream open.
+    pub fn set_model(&mut self, model: u32) -> Result<()> {
+        let mut buf = Vec::with_capacity(5);
+        buf.push(b'M');
+        buf.extend_from_slice(&model.to_le_bytes());
+        self.sock.write_all(&buf)?;
+        Ok(())
+    }
+
     pub fn send_audio(&mut self, pcm: &[f32]) -> Result<()> {
         let mut buf = Vec::with_capacity(5 + pcm.len() * 4);
         buf.push(b'A');
@@ -225,6 +393,86 @@ impl Client {
         Ok(())
     }
 
+    /// Admin: hot-load the model at `path` with DRR weight `weight` and
+    /// `lanes` arena lanes (`0` = engine default).  Returns the new model
+    /// id; an `'R'` response surfaces as an error and leaves the
+    /// connection usable.
+    pub fn load_model(&mut self, path: &str, weight: u32, lanes: u32) -> Result<u32> {
+        let pb = path.as_bytes();
+        let mut buf = Vec::with_capacity(13 + pb.len());
+        buf.push(b'L');
+        buf.extend_from_slice(&weight.to_le_bytes());
+        buf.extend_from_slice(&lanes.to_le_bytes());
+        buf.extend_from_slice(&(pb.len() as u32).to_le_bytes());
+        buf.extend_from_slice(pb);
+        self.sock.write_all(&buf)?;
+        self.read_admin_ok()
+    }
+
+    /// Admin: drain and unload model `id`.  Blocks until the server-side
+    /// teardown completes.
+    pub fn unload_model(&mut self, id: u32) -> Result<()> {
+        let mut buf = Vec::with_capacity(5);
+        buf.push(b'U');
+        buf.extend_from_slice(&id.to_le_bytes());
+        self.sock.write_all(&buf)?;
+        self.read_admin_ok()?;
+        Ok(())
+    }
+
+    /// Admin: snapshot the server's live model registry.
+    pub fn query_registry(&mut self) -> Result<Vec<RegistryEntry>> {
+        self.sock.write_all(b"Q")?;
+        let mut tag = [0u8; 1];
+        self.sock.read_exact(&mut tag)?;
+        if tag[0] != b'Q' {
+            bail!("expected registry frame, got {:#x}", tag[0]);
+        }
+        let count = read_u32(&mut self.sock)? as usize;
+        if count > 65536 {
+            bail!("oversized registry ({count})");
+        }
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            let id = read_u32(&mut self.sock)?;
+            let mut flag = [0u8; 1];
+            self.sock.read_exact(&mut flag)?;
+            let weight = read_u32(&mut self.sock)?;
+            let lanes = read_u32(&mut self.sock)?;
+            let live_streams = read_u32(&mut self.sock)?;
+            let n = read_u32(&mut self.sock)? as usize;
+            if n > 4096 {
+                bail!("oversized model name ({n})");
+            }
+            let mut raw = vec![0u8; n];
+            self.sock.read_exact(&mut raw)?;
+            out.push(RegistryEntry {
+                id,
+                draining: flag[0] != 0,
+                weight,
+                lanes,
+                live_streams,
+                name: String::from_utf8_lossy(&raw).to_string(),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Read an admin response: `'O' u32` on success, `'R'` reason as an
+    /// error.
+    fn read_admin_ok(&mut self) -> Result<u32> {
+        let mut tag = [0u8; 1];
+        self.sock.read_exact(&mut tag)?;
+        match tag[0] {
+            b'O' => read_u32(&mut self.sock),
+            b'R' => {
+                let reason = read_reject_text(&mut self.sock)?;
+                bail!("admin rejected: {reason}");
+            }
+            other => bail!("expected admin response, got {other:#x}"),
+        }
+    }
+
     /// End the stream and read the final result.  An admission rejection
     /// ('R' frame) surfaces as an error carrying the server's reason.
     pub fn finish(mut self) -> Result<ClientResult> {
@@ -232,13 +480,8 @@ impl Client {
         let mut tag = [0u8; 1];
         self.sock.read_exact(&mut tag)?;
         if tag[0] == b'R' {
-            let n = read_u32(&mut self.sock)? as usize;
-            if n > 65536 {
-                bail!("oversized reject reason ({n})");
-            }
-            let mut raw = vec![0u8; n];
-            self.sock.read_exact(&mut raw)?;
-            bail!("admission rejected: {}", String::from_utf8_lossy(&raw));
+            let reason = read_reject_text(&mut self.sock)?;
+            bail!("admission rejected: {reason}");
         }
         if tag[0] != b'F' {
             bail!("expected final frame, got {:#x}", tag[0]);

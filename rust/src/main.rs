@@ -7,7 +7,11 @@
 //!                   [--set eval_clean] [--artifacts artifacts]
 //! quantasr serve    --model … --mode quant [--addr 127.0.0.1:7700]
 //!                   [--max-batch 32] [--deadline-ms 5] [--quantum 25]
-//!                   [--max-streams 1024]
+//!                   [--max-streams 1024] [--tick-budget 32]
+//!                   [--model-weights 4,1] [--model-lanes 32,8]
+//!                   (hot admin over TCP: 'L' load / 'U' unload /
+//!                    'Q' query — see docs/PROTOCOL.md; 'L' loads .qam
+//!                    paths with the same --mode)
 //! quantasr bench-serve --model … [--streams 16] [--utts 64]
 //! quantasr ablate-rounding
 //! quantasr ablate-granularity [--model …]
@@ -146,8 +150,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine = load_engine(args)?;
     let addr = args.get_or("addr", "127.0.0.1:7700").to_string();
     let stop = Arc::new(AtomicBool::new(false));
-    println!("serving on {addr} (ctrl-c to stop)");
-    server::serve(engine, &addr, stop, |a| println!("bound {a}"))
+    // Hot-load admin ('L' frames): load .qam paths with the same exec
+    // mode the boot model uses.
+    let mode = ExecMode::parse(args.get_or("mode", "quant"))?;
+    let loader: server::ModelLoader<AcousticModel> =
+        Arc::new(move |path: &str| Ok(Arc::new(AcousticModel::load(path, mode)?)));
+    println!("serving on {addr} (ctrl-c to stop; admin frames: L/U/Q)");
+    server::serve_with_loader(engine, &addr, stop, Some(loader), |a| println!("bound {a}"))
 }
 
 /// In-process serving benchmark: N concurrent synthetic clients.

@@ -346,7 +346,7 @@ pub fn quantize_input_lanes(
 /// lazily: producers call [`QActRows::invalidate_row`] (or
 /// `invalidate_prefix`) after rewriting a row, consumers call
 /// [`QActRows::ensure_batch`]/[`QActRows::ensure_lanes`] before the GEMM.
-/// Cached rows go through the same [`quantize_row`] as the uncached path,
+/// Cached rows go through the same `quantize_row` as the uncached path,
 /// so `qgemm_cached` is **bit-identical** to `qgemm` on the same floats.
 #[derive(Default, Clone)]
 pub struct QActRows {

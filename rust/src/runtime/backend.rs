@@ -19,7 +19,13 @@
 //!    independent of which other lanes are active (the native engine makes
 //!    this *bit-exact* via per-row input quantization; see `quant::gemm`).
 //! 3. **Parkability** — `save_lane`/`load_lane` round-trip a lane's state
-//!    exactly, so the engine can evict idle streams and re-admit them.
+//!    exactly, so the engine can evict idle streams, preempt active ones,
+//!    and drain a model out for hot unload, all through one path.
+//!
+//! Arenas have a dynamic lifecycle since the registry went hot: the AM
+//! worker builds one per model at load ([`AmBackend::alloc_arena`], on
+//! the worker thread at a tick boundary) and drops it at unload teardown
+//! — see `docs/ARCHITECTURE.md` for the full tick walk-through.
 //!
 //! The native backend's step executes on the packed-panel kernel ladder
 //! (`quant::gemm`): weights are panel-packed once at load, the microkernel

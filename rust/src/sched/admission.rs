@@ -8,12 +8,39 @@
 //! streams across all models; the cap bounds the lane-less parked queue
 //! too, since parked streams are a subset of live ones.  Rejections carry
 //! a machine-readable [`RejectReason`] that the TCP server forwards to
-//! the client verbatim (`'R'` frame), so callers can distinguish
-//! "saturated, retry later" from "you asked for a model that isn't
-//! loaded".
+//! the client verbatim (`'R'` frame, see `docs/PROTOCOL.md`), so callers
+//! can distinguish "saturated, retry later" from "you asked for a model
+//! that isn't loaded" from "that model is draining out".
 //!
-//! Pure policy — the engine supplies the current occupancy under its own
-//! lock and applies the verdict atomically with the insert.
+//! **Invariants.**  (1) The live-stream set never exceeds
+//! `max_live_streams` — the engine applies the verdict atomically with
+//! the insert under its own lock.  (2) A stream is only ever admitted to
+//! a model in the [`ModelStatus::Loaded`] state, which is what lets hot
+//! unload drain safely: marking a model `Draining` closes the front door
+//! while the streams already inside finish.  (3) Rejection is total — for
+//! every input the controller returns either an admit or a reason, never
+//! a hang.
+//!
+//! Pure policy — the engine supplies the current occupancy and the
+//! target model's lifecycle state under its own lock and applies the
+//! verdict atomically with the insert:
+//!
+//! ```
+//! use quantasr::sched::{AdmissionConfig, AdmissionController, ModelStatus, RejectReason};
+//!
+//! let c = AdmissionController::new(AdmissionConfig { max_live_streams: 2 });
+//! assert!(c.admit(1, 0, ModelStatus::Loaded, 1).is_ok());
+//! // At the cap: reject with a retryable reason.
+//! assert!(matches!(
+//!     c.admit(2, 0, ModelStatus::Loaded, 1),
+//!     Err(RejectReason::Saturated { live: 2, cap: 2 })
+//! ));
+//! // A draining model refuses new streams even with capacity to spare.
+//! assert!(matches!(
+//!     c.admit(0, 0, ModelStatus::Draining, 1),
+//!     Err(RejectReason::ModelDraining { model: 0 })
+//! ));
+//! ```
 
 use std::fmt;
 
@@ -34,6 +61,18 @@ impl Default for AdmissionConfig {
     }
 }
 
+/// Lifecycle state of the model a stream asks for, as seen by the
+/// engine's dynamic model table at admission time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelStatus {
+    /// Registered and serving: streams may be admitted.
+    Loaded,
+    /// Unload requested: survivors finish, newcomers are rejected.
+    Draining,
+    /// No model at that index (never loaded, or already torn down).
+    Unknown,
+}
+
 /// Why a stream was refused admission.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum RejectReason {
@@ -41,6 +80,8 @@ pub enum RejectReason {
     Saturated { live: usize, cap: usize },
     /// The requested model index is not registered in this engine.
     UnknownModel { model: usize, loaded: usize },
+    /// The requested model is draining out (hot unload in progress).
+    ModelDraining { model: usize },
 }
 
 impl fmt::Display for RejectReason {
@@ -51,6 +92,9 @@ impl fmt::Display for RejectReason {
             }
             RejectReason::UnknownModel { model, loaded } => {
                 write!(f, "unknown model {model}: engine has {loaded} model(s) loaded")
+            }
+            RejectReason::ModelDraining { model } => {
+                write!(f, "model {model} is draining; pick another model")
             }
         }
     }
@@ -74,10 +118,22 @@ impl AdmissionController {
     }
 
     /// Decide whether a stream targeting `model` may be admitted given
-    /// `live` currently-admitted streams and `loaded` registered models.
-    pub fn admit(&self, live: usize, model: usize, loaded: usize) -> Result<(), RejectReason> {
-        if model >= loaded {
-            return Err(RejectReason::UnknownModel { model, loaded });
+    /// `live` currently-admitted streams, the target model's lifecycle
+    /// `status`, and `loaded` registered models (reported in the
+    /// unknown-model reason).  Model identity outranks capacity: asking
+    /// for a missing or draining model is a caller error and is reported
+    /// as such even when the engine is also saturated.
+    pub fn admit(
+        &self,
+        live: usize,
+        model: usize,
+        status: ModelStatus,
+        loaded: usize,
+    ) -> Result<(), RejectReason> {
+        match status {
+            ModelStatus::Unknown => return Err(RejectReason::UnknownModel { model, loaded }),
+            ModelStatus::Draining => return Err(RejectReason::ModelDraining { model }),
+            ModelStatus::Loaded => {}
         }
         if live >= self.cfg.max_live_streams {
             return Err(RejectReason::Saturated { live, cap: self.cfg.max_live_streams });
@@ -93,24 +149,28 @@ mod tests {
     #[test]
     fn admits_below_cap_rejects_at_cap() {
         let c = AdmissionController::new(AdmissionConfig { max_live_streams: 2 });
-        assert!(c.admit(0, 0, 1).is_ok());
-        assert!(c.admit(1, 0, 1).is_ok());
+        assert!(c.admit(0, 0, ModelStatus::Loaded, 1).is_ok());
+        assert!(c.admit(1, 0, ModelStatus::Loaded, 1).is_ok());
         assert_eq!(
-            c.admit(2, 0, 1),
+            c.admit(2, 0, ModelStatus::Loaded, 1),
             Err(RejectReason::Saturated { live: 2, cap: 2 })
         );
         assert_eq!(
-            c.admit(5, 0, 1),
+            c.admit(5, 0, ModelStatus::Loaded, 1),
             Err(RejectReason::Saturated { live: 5, cap: 2 })
         );
     }
 
     #[test]
-    fn unknown_model_wins_over_saturation() {
+    fn model_state_wins_over_saturation() {
         let c = AdmissionController::new(AdmissionConfig { max_live_streams: 0 });
         assert_eq!(
-            c.admit(9, 3, 2),
+            c.admit(9, 3, ModelStatus::Unknown, 2),
             Err(RejectReason::UnknownModel { model: 3, loaded: 2 })
+        );
+        assert_eq!(
+            c.admit(9, 1, ModelStatus::Draining, 2),
+            Err(RejectReason::ModelDraining { model: 1 })
         );
     }
 
@@ -120,5 +180,7 @@ mod tests {
         assert!(s.contains("saturated") && s.contains('8'), "{s}");
         let u = RejectReason::UnknownModel { model: 2, loaded: 1 }.to_string();
         assert!(u.contains("unknown model 2"), "{u}");
+        let d = RejectReason::ModelDraining { model: 3 }.to_string();
+        assert!(d.contains("model 3") && d.contains("draining"), "{d}");
     }
 }

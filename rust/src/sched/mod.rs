@@ -22,24 +22,37 @@
 //!   before `Interactive` ones) and batch-formation order
 //!   ([`crate::coordinator::batcher::schedule_cmp`]).
 //! - [`admission`] — a bounded live-stream set with reject-with-reason
-//!   backpressure instead of unbounded parked-stream growth.
+//!   backpressure instead of unbounded parked-stream growth.  Admission
+//!   validates the target model's lifecycle state ([`ModelStatus`]), so a
+//!   draining model refuses new streams while its survivors finish.
 //! - [`registry`] — N loaded models behind one engine: lanes are
 //!   addressed by [`crate::runtime::backend::LaneTag`] (model, lane), the
 //!   scheduler keeps per-model lane accounting, and one AM worker steps
-//!   every model's planned lanes each tick so no model can monopolize the
-//!   flush loop.
+//!   every model's planned lanes each tick.  The boot-time registry is
+//!   the seed of a *dynamic* model table: models can be hot-loaded and
+//!   drained out at runtime
+//!   ([`crate::coordinator::Engine::load_model`] /
+//!   [`crate::coordinator::Engine::unload_model`]).
+//! - [`weights`] — deficit-weighted round-robin over a per-tick lane-step
+//!   budget: heterogeneous fleets (one hot Interactive model, several
+//!   Bulk ones) get tick bandwidth in proportion to configured per-model
+//!   weights, with work conservation and bounded per-model wait.
 //!
 //! Everything here is pure decision logic — no clocks, locks or arenas —
 //! so the policies are property-testable in isolation; the engine owns
-//! the mechanism (arenas, condvars, worker threads).
+//! the mechanism (arenas, condvars, worker threads).  The system-level
+//! picture (who calls what, in which order, under which lock) is drawn in
+//! `docs/ARCHITECTURE.md`.
 
 pub mod admission;
 pub mod quantum;
 pub mod registry;
+pub mod weights;
 
-pub use admission::{AdmissionConfig, AdmissionController, RejectReason};
+pub use admission::{AdmissionConfig, AdmissionController, ModelStatus, RejectReason};
 pub use quantum::{HolderView, QuantumPolicy};
 pub use registry::ModelRegistry;
+pub use weights::{DrrState, ModelParams};
 
 /// QoS class carried on stream admission.
 ///
@@ -57,6 +70,11 @@ pub enum Priority {
 }
 
 impl Priority {
+    /// Number of distinct QoS classes (sizes rank-indexed tables such as
+    /// the priority-aware decode queue,
+    /// [`crate::coordinator::batcher::ClassQueue`]).
+    pub const NUM_CLASSES: usize = 2;
+
     /// Scheduling rank: lower ranks are served first and preempted last.
     pub fn rank(self) -> u8 {
         match self {

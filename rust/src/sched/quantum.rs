@@ -24,9 +24,39 @@
 //! a waiter arriving; the waiter therefore acquires a lane within at most
 //! `quantum_ticks` ticks (property `waiter_admitted_within_one_quantum`
 //! below simulates exactly the saturation scenario that used to starve:
-//! every lane held by a never-idle stream).
+//! every lane held by a never-idle stream).  In a weighted multi-model
+//! fleet ([`crate::sched::weights`]) a holder consumes quantum only on
+//! the lane-steps the budget grants it, so the bound is counted in *that
+//! holder's granted steps*: weights (and lane counts) dilate the
+//! wall-clock bound by the model's share, they never void it — the DRR's
+//! own progress property guarantees granted steps keep coming.
 //!
-//! Pure decision logic — no clocks, no locks, no arenas.
+//! Pure decision logic — no clocks, no locks, no arenas:
+//!
+//! ```
+//! use quantasr::runtime::backend::LaneTag;
+//! use quantasr::sched::{HolderView, Priority, QuantumPolicy};
+//!
+//! let policy = QuantumPolicy { quantum_ticks: 4 };
+//! let holders = [
+//!     // Mid-quantum interactive holder: protected from same-class waiters.
+//!     HolderView {
+//!         stream: 1,
+//!         priority: Priority::Interactive,
+//!         quantum_used: 2,
+//!         tag: LaneTag { model: 0, lane: 0 },
+//!     },
+//!     // Bulk holder: preemptible by an interactive waiter immediately.
+//!     HolderView {
+//!         stream: 2,
+//!         priority: Priority::Bulk,
+//!         quantum_used: 0,
+//!         tag: LaneTag { model: 0, lane: 1 },
+//!     },
+//! ];
+//! assert_eq!(policy.select_victim(&holders, Priority::Interactive), Some(1));
+//! assert_eq!(policy.select_victim(&holders, Priority::Bulk), None);
+//! ```
 
 use crate::runtime::backend::LaneTag;
 use crate::sched::Priority;

@@ -14,6 +14,34 @@
 //! Models may differ in input dimension and label count — per-stream I/O
 //! is sized per model by the engine — but every model's lanes obey the
 //! same [`AmBackend`] contract, so preemption and eviction work uniformly.
+//!
+//! **Lifecycle.**  The registry is the *boot-time seed* of the engine's
+//! dynamic model table: `Engine::start_registry` consumes it into
+//! index-stable slots, and from then on models are hot-loaded
+//! (`Engine::load_model` — arena + lane allocator created on the AM
+//! worker thread) and hot-unloaded (`Engine::unload_model` — the slot
+//! drains: survivors finish, newcomers are rejected with
+//! [`crate::sched::RejectReason::ModelDraining`], and the arena is torn
+//! down at a tick boundary once the last lane empties).  Invariants the
+//! table preserves across churn:
+//!
+//! 1. a model id (slot index) never changes while the model is loaded —
+//!    streams carry the id for their whole life;
+//! 2. an unloaded slot is only reused after its teardown completes, so a
+//!    new model never inherits live lanes, allocator state or scheduler
+//!    credit ([`crate::sched::DrrState`] resets idle slots);
+//! 3. no tick ever steps a lane of a torn-down model — teardown happens
+//!    under the engine lock between ticks.
+//!
+//! ```
+//! use quantasr::nn::AcousticModel;
+//! use quantasr::sched::ModelRegistry;
+//!
+//! let r = ModelRegistry::<AcousticModel>::new();
+//! assert!(r.is_empty());
+//! assert_eq!(r.len(), 0);
+//! assert!(r.get(0).is_none());
+//! ```
 
 use std::sync::Arc;
 

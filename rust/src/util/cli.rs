@@ -63,8 +63,11 @@ impl Args {
 
     /// Like [`Args::get_usize`], but a present-and-malformed value warns
     /// on stderr instead of being silently replaced — serving knobs must
-    /// neither panic nor vanish without a trace.  (Durations have their
-    /// own validated grammar: `coordinator::batcher::parse_deadline_ms`.)
+    /// neither panic nor vanish without a trace.  (Richer flag values
+    /// have their own validated warn-don't-panic grammars: durations via
+    /// `coordinator::batcher::parse_deadline_ms`, comma-separated share
+    /// lists like `--model-weights 4,1` via
+    /// `sched::weights::parse_share_list`.)
     pub fn get_usize_warn(&self, key: &str, default: usize) -> usize {
         match self.get(key) {
             None => default,

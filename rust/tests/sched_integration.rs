@@ -2,7 +2,8 @@
 //! random models): starvation freedom under never-idle saturation,
 //! preemption bit-exactness across kernel rungs and tick boundaries,
 //! multi-model serving with per-model accounting, admission backpressure,
-//! and the TCP reject/priority protocol.
+//! hot model load/unload churn, weighted per-model fairness, and the TCP
+//! reject/priority/admin protocol.
 
 mod common;
 
@@ -11,14 +12,15 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use quantasr::coordinator::batcher::BatchPolicy;
-use quantasr::coordinator::server::{serve, Client};
+use quantasr::coordinator::server::{serve, serve_with_loader, Client, ModelLoader};
 use quantasr::coordinator::{Engine, EngineConfig};
 use quantasr::decoder::DecoderConfig;
 use quantasr::eval::build_decoder;
 use quantasr::frontend::spec;
 use quantasr::nn::{AcousticModel, ExecMode};
 use quantasr::sched::{
-    AdmissionConfig, ModelRegistry, Priority, QuantumPolicy, RejectReason, StreamOptions,
+    AdmissionConfig, ModelParams, ModelRegistry, Priority, QuantumPolicy, RejectReason,
+    StreamOptions,
 };
 use quantasr::sim::World;
 use quantasr::util::rng::Xoshiro256;
@@ -39,6 +41,7 @@ fn sched_config(max_batch: usize, quantum_ticks: u32, max_pending: usize) -> Eng
         max_pending_frames: max_pending,
         quantum: QuantumPolicy { quantum_ticks },
         admission: AdmissionConfig::default(),
+        ..EngineConfig::default()
     }
 }
 
@@ -307,4 +310,316 @@ fn server_rejects_over_tcp_with_reason() {
 
     stop.store(true, Ordering::SeqCst);
     server.join().unwrap();
+}
+
+/// The hot-churn acceptance scenario: model A is saturated at 2×
+/// oversubscription by never-idle bulk streams (its lanes rotate through
+/// quantum preemption the whole time) while a second model is hot-loaded,
+/// serves an interactive utterance, and is drained out — repeatedly, into
+/// the same reused slot.  Asserts no stall, no cross-model lane leakage
+/// (every output bit-identical to its solo reference), the registry and
+/// per-model metrics returning to the base state after each unload, and
+/// load/unload counters.
+#[test]
+fn registry_churn_under_saturation() {
+    let lanes = 2usize;
+    let qam_a = common::random_model_seeded(2, 16, Some(8), 0xA0A0);
+    let model_a = Arc::new(AcousticModel::from_qam(&qam_a, ExecMode::Quant).unwrap());
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    let eng = Arc::new(Engine::start(model_a.clone(), decoder, sched_config(lanes, 3, 32)));
+
+    let bulk_frames = 300usize;
+    let bulk_content: Vec<Vec<f32>> =
+        (0..2 * lanes).map(|s| frames(bulk_frames, 2200 + s as u64)).collect();
+    let bulk_want: Vec<Vec<u32>> =
+        bulk_content.iter().map(|f| greedy_ref(&model_a, f, bulk_frames)).collect();
+
+    let churn_rounds = 5u64;
+    std::thread::scope(|scope| {
+        // 2× oversubscription on model A: producers block on backpressure
+        // so every stream stays never-idle until fully consumed.
+        let mut bulk_rx = Vec::new();
+        for (s, content) in bulk_content.iter().enumerate() {
+            let (id, rx) = eng
+                .try_open_stream(StreamOptions { model: 0, priority: Priority::Bulk })
+                .expect("bulk admission");
+            bulk_rx.push((rx, s));
+            let eng = eng.clone();
+            scope.spawn(move || {
+                eng.push_frames(id, content).unwrap();
+                eng.finish_stream(id).unwrap();
+            });
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        // Churn: load model B, serve one interactive utterance on it,
+        // drain it out; the freed slot must be reused every round.
+        let churn_frames = 8usize;
+        for round in 0..churn_rounds {
+            let qam_b = common::random_model_seeded(2, 12, Some(6), 0xB000 + round);
+            let model_b = Arc::new(AcousticModel::from_qam(&qam_b, ExecMode::Quant).unwrap());
+            let f = frames(churn_frames, 3000 + round);
+            let want = greedy_ref(&model_b, &f, churn_frames);
+            let id_b = eng
+                .load_model_named(
+                    format!("b{round}"),
+                    model_b,
+                    ModelParams { weight: 2, lanes: Some(1) },
+                )
+                .expect("hot load");
+            assert_eq!(id_b, 1, "freed slot must be reused");
+            {
+                let reg = eng.registry();
+                assert_eq!(reg.len(), 2, "{reg:?}");
+                let b = reg.iter().find(|m| m.id == 1).unwrap();
+                assert_eq!((b.weight, b.lanes, b.draining), (2, 1, false));
+            }
+            let (sid, rx) = eng
+                .try_open_stream(StreamOptions { model: id_b, priority: Priority::Interactive })
+                .expect("churn admission");
+            eng.push_frames(sid, &f).unwrap();
+            eng.finish_stream(sid).unwrap();
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap_or_else(|_| {
+                panic!("round {round}: churn stream stalled under saturation")
+            });
+            assert_eq!(r.num_frames, churn_frames);
+            assert_eq!(r.phones, want, "round {round}: churn changed numerics");
+            eng.unload_model(id_b).expect("unload");
+            let reg = eng.registry();
+            assert_eq!(reg.len(), 1, "only the base model should remain: {reg:?}");
+            assert_eq!(reg[0].id, 0);
+        }
+        // The saturated base-model streams must drain bit-exactly: any
+        // cross-model lane leakage during churn shows up here.
+        for (rx, s) in bulk_rx {
+            let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(r.num_frames, bulk_frames);
+            assert_eq!(r.phones, bulk_want[s], "churn leaked into model-A lanes");
+        }
+    });
+    assert_eq!(*eng.metrics().sched_stalls.lock().unwrap(), 0);
+    assert_eq!(*eng.metrics().model_loads.lock().unwrap(), 1 + churn_rounds);
+    assert_eq!(*eng.metrics().model_unloads.lock().unwrap(), churn_rounds);
+    let pm = eng.metrics().per_model.lock().unwrap();
+    assert!(pm[0].loaded);
+    assert!(!pm[1].loaded, "churn slot still loaded after unload");
+    drop(pm);
+    // The drained slot holds no lanes or streams: a fresh load reuses it.
+    let reg = eng.registry();
+    assert_eq!(reg.len(), 1);
+    assert_eq!(reg[0].live_streams, 0);
+}
+
+/// Unload semantics: a draining model rejects newcomers with a reason
+/// while its survivor finishes bit-exactly; after the drain the slot is
+/// unknown; unloading a missing model errors.
+#[test]
+fn draining_model_rejects_newcomers_then_unloads() {
+    let qam = common::random_model(2, 16, Some(8));
+    let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    let eng = Arc::new(Engine::start(model, decoder, sched_config(2, 4, 32)));
+
+    let qam_b = common::random_model_seeded(2, 12, Some(6), 0xDAB);
+    let model_b = Arc::new(AcousticModel::from_qam(&qam_b, ExecMode::Quant).unwrap());
+    let n = 4usize;
+    let f = frames(n, 42);
+    let want = greedy_ref(&model_b, &f, n);
+    let id_b = eng.load_model(model_b, ModelParams::default()).unwrap();
+    assert_eq!(id_b, 1);
+    // A live, unfinished stream keeps the model draining (not torn down).
+    let (sid, rx) = eng
+        .try_open_stream(StreamOptions { model: id_b, priority: Priority::Interactive })
+        .unwrap();
+    eng.push_frames(sid, &f).unwrap();
+    let eng2 = eng.clone();
+    let unloader = std::thread::spawn(move || eng2.unload_model(id_b));
+    // The draining flag is set synchronously by unload_model; wait for
+    // the spawned thread to have taken the lock.
+    let mut draining_seen = false;
+    for _ in 0..400 {
+        if eng.registry().iter().any(|m| m.id == id_b && m.draining) {
+            draining_seen = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(draining_seen, "unload never marked the model draining");
+    match eng.try_open_stream(StreamOptions { model: id_b, ..Default::default() }) {
+        Err(RejectReason::ModelDraining { model }) => assert_eq!(model, id_b),
+        other => panic!("expected draining reject, got {other:?}"),
+    }
+    // The survivor finishes normally and bit-exactly; then the unload
+    // completes and the slot reads as unknown.
+    eng.finish_stream(sid).unwrap();
+    let r = rx.recv_timeout(Duration::from_secs(20)).unwrap();
+    assert_eq!(r.num_frames, n);
+    assert_eq!(r.phones, want, "drain changed survivor numerics");
+    let unload_result = unloader.join().unwrap();
+    unload_result.expect("unload completes after the drain");
+    match eng.try_open_stream(StreamOptions { model: id_b, ..Default::default() }) {
+        Err(RejectReason::UnknownModel { model, loaded }) => {
+            assert_eq!((model, loaded), (id_b, 1));
+        }
+        other => panic!("expected unknown-model reject, got {other:?}"),
+    }
+    assert!(eng.unload_model(9).is_err());
+    assert!(eng.unload_model(id_b).is_err(), "double unload must error");
+}
+
+/// Weighted fairness end to end: two saturated models with weights 3:1
+/// split the tick budget ≈3:1 (measured over a sampling window; the
+/// exact convergence property is unit-tested in sched::weights — this
+/// checks the engine actually applies the grant).
+#[test]
+fn weighted_shares_track_configured_ratios_under_saturation() {
+    let qam_a = common::random_model_seeded(2, 16, Some(8), 0x3AAA);
+    let qam_b = common::random_model_seeded(2, 16, Some(8), 0x3BBB);
+    let model_a = Arc::new(AcousticModel::from_qam(&qam_a, ExecMode::Quant).unwrap());
+    let model_b = Arc::new(AcousticModel::from_qam(&qam_b, ExecMode::Quant).unwrap());
+    let mut registry = ModelRegistry::new();
+    registry.register_named("heavy", model_a);
+    registry.register_named("light", model_b);
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    let mut cfg = sched_config(4, 8, 64);
+    cfg.model_weights = vec![3, 1];
+    let eng = Arc::new(Engine::start_registry(registry, decoder, cfg));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        // 4 never-idle bulk streams per model: each model's demand fills
+        // its lanes every tick, so the 4-step budget is contended 2×.
+        for m in 0..2usize {
+            for s in 0..4usize {
+                let eng = eng.clone();
+                let stop = stop.clone();
+                scope.spawn(move || {
+                    let chunk = frames(16, (9000 + m * 100 + s) as u64);
+                    let (id, rx) = eng
+                        .try_open_stream(StreamOptions { model: m, priority: Priority::Bulk })
+                        .expect("admission");
+                    while !stop.load(Ordering::SeqCst) {
+                        eng.push_frames(id, &chunk).unwrap();
+                    }
+                    eng.finish_stream(id).unwrap();
+                    let _ = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+                });
+            }
+        }
+        // Warm up, then measure a window.
+        std::thread::sleep(Duration::from_millis(300));
+        let (a0, b0) = {
+            let pm = eng.metrics().per_model.lock().unwrap();
+            (pm[0].frames, pm[1].frames)
+        };
+        std::thread::sleep(Duration::from_millis(1200));
+        let (a1, b1) = {
+            let pm = eng.metrics().per_model.lock().unwrap();
+            (pm[0].frames, pm[1].frames)
+        };
+        stop.store(true, Ordering::SeqCst);
+        let (da, db) = ((a1 - a0) as f64, (b1 - b0).max(1) as f64);
+        let ratio = da / db;
+        assert!(
+            ratio > 1.8 && ratio < 5.0,
+            "weighted share off: {da}/{db} = {ratio:.2} (want ≈3)"
+        );
+    });
+    // The budget actually bound: the light model deferred planned steps.
+    let pm = eng.metrics().per_model.lock().unwrap();
+    assert!(pm[1].deferrals > 0, "the tick budget never bound");
+    drop(pm);
+    assert_eq!(*eng.metrics().sched_stalls.lock().unwrap(), 0);
+}
+
+/// The TCP admin protocol: 'Q' registry snapshots, 'L' hot load through
+/// the server's loader, 'M' model selection for streams, 'U' drain +
+/// unload, and admin failures as 'R' frames that keep the connection
+/// usable.  A loader-less server rejects 'L' with a reason.
+#[test]
+fn tcp_admin_load_query_unload() {
+    let qam = common::random_model(2, 16, Some(8));
+    let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    let engine = Arc::new(Engine::start(model, decoder.clone(), sched_config(2, 4, 32)));
+    // Loader: synthesizes a model per "path" (tests run without artifact
+    // files; the production loader maps paths to .qam loads).
+    let loader: ModelLoader<AcousticModel> = Arc::new(|spec: &str| {
+        anyhow::ensure!(spec != "missing.qam", "no such model: {spec}");
+        let qam = common::random_model_seeded(2, 12, Some(6), 0xC0FFEE);
+        Ok(Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant)?))
+    });
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv_engine = engine.clone();
+    let srv_stop = stop.clone();
+    let server = std::thread::spawn(move || {
+        serve_with_loader(srv_engine, "127.0.0.1:0", srv_stop, Some(loader), move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .expect("server failed");
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap().to_string();
+
+    let mut admin = Client::connect(&addr).unwrap();
+    let reg = admin.query_registry().unwrap();
+    assert_eq!(reg.len(), 1);
+    assert_eq!(reg[0].id, 0);
+    assert!(!reg[0].draining);
+    // Hot load with weight 2, 1 lane; the loader can also fail -> 'R'.
+    assert!(admin.load_model("missing.qam", 1, 0).is_err());
+    let id = admin.load_model("synthetic-b.qam", 2, 1).unwrap();
+    assert_eq!(id, 1);
+    let reg = admin.query_registry().unwrap();
+    assert_eq!(reg.len(), 2);
+    let b = reg.iter().find(|e| e.id == 1).expect("hot-loaded row");
+    assert_eq!((b.weight, b.lanes, b.live_streams), (2, 1, 0));
+    // Serve one utterance on the hot-loaded model over TCP ('M' frame).
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_model(1).unwrap();
+    c.set_priority(Priority::Interactive).unwrap();
+    c.send_audio(&[0.01f32; 1600]).unwrap();
+    let r = c.finish().expect("stream on the hot-loaded model");
+    assert!(r.server_latency_ms >= 0.0);
+    // Drain + unload over TCP; new streams to the slot reject with the
+    // unknown-model reason.
+    admin.unload_model(1).unwrap();
+    let reg = admin.query_registry().unwrap();
+    assert_eq!(reg.len(), 1);
+    let mut c2 = Client::connect(&addr).unwrap();
+    c2.set_model(1).unwrap();
+    c2.send_audio(&[0.01f32; 800]).unwrap();
+    let err = c2.finish().expect_err("stream on the unloaded model must reject");
+    assert!(format!("{err:#}").contains("unknown model"), "{err:#}");
+    // Admin failures keep the connection usable.
+    assert!(admin.unload_model(7).is_err());
+    assert_eq!(admin.query_registry().unwrap().len(), 1);
+    stop.store(true, Ordering::SeqCst);
+    drop(admin); // the conn thread exits when the socket closes
+    server.join().unwrap();
+
+    // A loader-less server ('serve') rejects 'L' with a reason but keeps
+    // 'U'/'Q' admin and normal streaming intact.
+    let stop2 = Arc::new(AtomicBool::new(false));
+    let (addr_tx2, addr_rx2) = std::sync::mpsc::channel();
+    let srv_engine2 = engine.clone();
+    let srv_stop2 = stop2.clone();
+    let server2 = std::thread::spawn(move || {
+        serve(srv_engine2, "127.0.0.1:0", srv_stop2, move |a| {
+            let _ = addr_tx2.send(a);
+        })
+        .expect("server failed");
+    });
+    let addr2 = addr_rx2.recv_timeout(Duration::from_secs(10)).unwrap().to_string();
+    let mut admin2 = Client::connect(&addr2).unwrap();
+    let err = admin2.load_model("x.qam", 1, 0).expect_err("no loader configured");
+    assert!(format!("{err:#}").contains("loader"), "{err:#}");
+    assert_eq!(admin2.query_registry().unwrap().len(), 1);
+    stop2.store(true, Ordering::SeqCst);
+    drop(admin2);
+    server2.join().unwrap();
 }
