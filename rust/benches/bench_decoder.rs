@@ -1,13 +1,20 @@
-//! Decoder benches: word beam search cost vs beam width, phone prefix beam,
-//! n-gram LM scoring throughput, WER scoring.  (§4 decoding setup; the
-//! decoder shares the embedded real-time budget with the AM.)
+//! Decoder benches: the decode kernel ladder (seed per-hypothesis HashMap
+//! reference vs SoA beam lanes) at batch 1/8/32, word beam search cost vs
+//! beam width, phone prefix beam, n-gram LM scoring throughput, WER
+//! scoring.  (§4 decoding setup; the decoder shares the embedded
+//! real-time budget with the AM.)
+//!
+//! Results are also written to `BENCH_decoder.json` so the perf
+//! trajectory is recorded across PRs.
+
+use std::fmt::Write as _;
 
 use quantasr::decoder::lm::NGramLm;
 use quantasr::decoder::trie::LexTrie;
-use quantasr::decoder::{ctc, wer, Decoder, DecoderConfig};
+use quantasr::decoder::{ctc, wer, DecodeKernel, Decoder, DecoderConfig};
 use quantasr::sim::dataset::text_corpus;
 use quantasr::sim::World;
-use quantasr::util::bench::Bench;
+use quantasr::util::bench::{Bench, Measurement};
 use quantasr::util::rng::Xoshiro256;
 
 /// Synthetic peaked posteriors for a random in-lexicon word sequence.
@@ -36,6 +43,10 @@ fn posteriors(world: &World, n_words: usize, rng: &mut Xoshiro256) -> (Vec<f32>,
     (rows, t)
 }
 
+fn kernel_name(k: DecodeKernel) -> String {
+    format!("{:?}", k).to_ascii_lowercase()
+}
+
 fn main() {
     let b = Bench::default();
     let world = World::new();
@@ -47,6 +58,54 @@ fn main() {
     let (lp, t) = posteriors(&world, 3, &mut rng);
     println!("utterance: {t} frames (~{:.1}s audio)\n", t as f64 * 0.02);
 
+    // Kernel ladder × batch: seed reference search vs the SoA beam-lane
+    // rewrite (scalar and the best available SIMD rung), each over 1/8/32
+    // utterances per call — batch>1 goes through `decode_batch_with_kernel`
+    // so the shared-LmCache amortization is measured too.
+    println!("== decode kernel ladder × batch ==");
+    let dec = Decoder::new(
+        LexTrie::from_world(&world),
+        NGramLm::small(&corpus, 200),
+        NGramLm::large(&corpus, 200),
+        DecoderConfig { beam: 8, ..Default::default() },
+    );
+    let soa = DecodeKernel::Auto.resolve();
+    let ladder: Vec<DecodeKernel> = if soa == DecodeKernel::Scalar {
+        vec![DecodeKernel::Reference, DecodeKernel::Scalar]
+    } else {
+        vec![DecodeKernel::Reference, DecodeKernel::Scalar, soa]
+    };
+    // (kernel, batch, measurement) rows for the JSON ladder section.
+    let mut ladder_rows: Vec<(String, usize, Measurement)> = Vec::new();
+    for batch in [1usize, 8, 32] {
+        let utts: Vec<(Vec<f32>, usize)> =
+            (0..batch).map(|_| posteriors(&world, 3, &mut rng)).collect();
+        let jobs: Vec<(&[f32], usize)> =
+            utts.iter().map(|(rows, _)| (rows.as_slice(), labels)).collect();
+        let total_frames: usize = utts.iter().map(|(_, t)| *t).sum();
+        for &k in &ladder {
+            let name = kernel_name(k);
+            let m = b.run_with_items(
+                &format!("decode {name} b{batch}"),
+                total_frames as f64,
+                || dec.decode_batch_with_kernel(&jobs, k),
+            );
+            ladder_rows.push((name, batch, m));
+        }
+        let reference = ladder_rows
+            .iter()
+            .find(|(n, bb, _)| n == "reference" && *bb == batch)
+            .map(|(_, _, m)| m.mean_ns)
+            .unwrap_or(0.0);
+        let best = ladder_rows
+            .iter()
+            .filter(|(n, bb, _)| n != "reference" && *bb == batch)
+            .map(|(_, _, m)| m.mean_ns)
+            .fold(f64::INFINITY, f64::min);
+        println!("  → b{batch}: SoA speedup {:.2}× vs reference\n", reference / best);
+    }
+
+    let mut recorded: Vec<Measurement> = Vec::new();
     for beam in [4usize, 8, 16, 24, 48] {
         let dec = Decoder::new(
             LexTrie::from_world(&world),
@@ -61,17 +120,18 @@ fn main() {
             "  → {:.1}× realtime\n",
             (t as f64 * 0.02) / (m.mean_ns * 1e-9)
         );
+        recorded.push(m);
     }
 
-    b.run_with_items("phone prefix beam (8)", t as f64, || {
+    recorded.push(b.run_with_items("phone prefix beam (8)", t as f64, || {
         ctc::prefix_beam(&lp, labels, 8)
-    });
-    b.run_with_items("greedy decode", t as f64, || ctc::greedy(&lp, labels));
+    }));
+    recorded.push(b.run_with_items("greedy decode", t as f64, || ctc::greedy(&lp, labels)));
 
     // LM scoring throughput.
     let lm = NGramLm::large(&corpus, 200);
     let hist = [3u32, 17];
-    b.run_with_items("trigram LM log_prob", 1.0, || lm.log_prob(&hist, 42));
+    recorded.push(b.run_with_items("trigram LM log_prob", 1.0, || lm.log_prob(&hist, 42)));
 
     // WER scoring.
     let mut a = vec![0u32; 30];
@@ -82,7 +142,7 @@ fn main() {
     for v in c.iter_mut() {
         *v = rng.below(200) as u32;
     }
-    b.run_with_items("wer align 30×30", 900.0, || wer::align(&a, &c));
+    recorded.push(b.run_with_items("wer align 30×30", 900.0, || wer::align(&a, &c)));
 
     println!("\nLM stats: small {} n-grams, large {} n-grams, ppl(held-out) small {:.1} large {:.1}",
         NGramLm::small(&corpus, 200).num_ngrams(),
@@ -90,4 +150,54 @@ fn main() {
         NGramLm::small(&corpus, 200).perplexity(&text_corpus(500, 1, &world)),
         lm.perplexity(&text_corpus(500, 1, &world)),
     );
+
+    // Emit BENCH_decoder.json so the perf trajectory is recorded across PRs.
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"decoder\",\n  \"ladder\": [\n");
+    for (i, (kernel, batch, m)) in ladder_rows.iter().enumerate() {
+        let comma = if i + 1 < ladder_rows.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"kernel\": \"{kernel}\", \"batch\": {batch}, \"mean_ns\": {:.1}, \
+             \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"frames_per_s\": {:.1}}}{comma}",
+            m.mean_ns,
+            m.p50_ns,
+            m.p99_ns,
+            m.throughput().unwrap_or(0.0),
+        );
+    }
+    json.push_str("  ],\n  \"speedup\": [\n");
+    let batches = [1usize, 8, 32];
+    for (i, &batch) in batches.iter().enumerate() {
+        let reference = ladder_rows
+            .iter()
+            .find(|(n, bb, _)| n == "reference" && *bb == batch)
+            .map(|(_, _, m)| m.mean_ns)
+            .unwrap_or(0.0);
+        let best = ladder_rows
+            .iter()
+            .filter(|(n, bb, _)| n != "reference" && *bb == batch)
+            .map(|(_, _, m)| m.mean_ns)
+            .fold(f64::INFINITY, f64::min);
+        let comma = if i + 1 < batches.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"batch\": {batch}, \"soa_vs_reference\": {:.2}}}{comma}",
+            reference / best.max(1e-9)
+        );
+    }
+    json.push_str("  ],\n  \"results\": [\n");
+    for (i, m) in recorded.iter().enumerate() {
+        let comma = if i + 1 < recorded.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"iters\": {}}}{comma}",
+            m.name, m.mean_ns, m.p50_ns, m.p99_ns, m.iters
+        );
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_decoder.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_decoder.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_decoder.json: {e}"),
+    }
 }

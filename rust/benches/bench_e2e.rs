@@ -438,6 +438,68 @@ fn main() {
         });
     }
 
+    // (g) tick breakdown: the whole-tick cost split — AM step vs decode
+    // vs frontend — measured on the PCM path (`push_audio`) at 32
+    // streams, so the "make the whole tick fast" claim is recorded, not
+    // just the GEMMs.  Shares are of summed per-stage compute time (the
+    // stages run on different threads, so they don't sum to wall clock).
+    println!("\n== tick breakdown: AM vs decode vs frontend (32 PCM streams) ==");
+    let (tick_am_s, tick_decode_s, tick_frontend_s);
+    {
+        let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+        let cfg = EngineConfig {
+            policy: BatchPolicy {
+                max_batch: 32,
+                deadline: std::time::Duration::from_millis(2),
+            },
+            decode_workers: 2,
+            max_pending_frames: 128,
+            ..EngineConfig::default()
+        };
+        let engine = Arc::new(Engine::start(model, decoder.clone(), cfg));
+        let n_streams = 32usize;
+        let secs = 4.0f64;
+        let n = (secs * spec::SAMPLE_RATE as f64) as usize;
+        let mut wave = vec![0f32; n];
+        let mut r2 = Xoshiro256::new(0x71CC);
+        r2.fill_normal(&mut wave);
+        for (i, v) in wave.iter_mut().enumerate() {
+            let t = i as f64 / spec::SAMPLE_RATE as f64;
+            *v = *v * 0.02 + (2.0 * std::f64::consts::PI * 700.0 * t).sin() as f32 * 0.3;
+        }
+        std::thread::scope(|scope| {
+            for _ in 0..n_streams {
+                let engine = engine.clone();
+                let wave = wave.clone();
+                scope.spawn(move || {
+                    let (id, rx) = engine.open_stream();
+                    // 80 ms PCM chunks, the live-dictation cadence.
+                    for chunk in wave.chunks(640) {
+                        engine.push_audio(id, chunk).unwrap();
+                    }
+                    engine.finish_stream(id).unwrap();
+                    let _ = rx.recv().unwrap();
+                });
+            }
+        });
+        let (am_s, decode_s, frontend_s) = engine.metrics().tick_breakdown();
+        let total = (am_s + decode_s + frontend_s).max(1e-12);
+        println!(
+            "  am {:.3}s ({:.1}%)  decode {:.3}s ({:.1}%)  frontend {:.3}s ({:.1}%)  \
+             over {:.0}s of audio × {n_streams} streams",
+            am_s,
+            100.0 * am_s / total,
+            decode_s,
+            100.0 * decode_s / total,
+            frontend_s,
+            100.0 * frontend_s / total,
+            secs,
+        );
+        tick_am_s = am_s;
+        tick_decode_s = decode_s;
+        tick_frontend_s = frontend_s;
+    }
+
     // Emit BENCH_engine.json so the perf trajectory is recorded across PRs.
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"engine\",\n  \"results\": [\n");
@@ -484,7 +546,16 @@ fn main() {
             "    {{\"weights\": \"{wa}:{wb}\", \"measured_frame_ratio\": {ratio:.2}}}{comma}"
         );
     }
-    json.push_str("  ]\n}\n");
+    let tick_total = (tick_am_s + tick_decode_s + tick_frontend_s).max(1e-12);
+    let _ = writeln!(
+        json,
+        "  ],\n  \"tick_breakdown\": {{\"am_s\": {tick_am_s:.4}, \"decode_s\": \
+         {tick_decode_s:.4}, \"frontend_s\": {tick_frontend_s:.4}, \"am_share\": {:.3}, \
+         \"decode_share\": {:.3}, \"frontend_share\": {:.3}}}\n}}",
+        tick_am_s / tick_total,
+        tick_decode_s / tick_total,
+        tick_frontend_s / tick_total,
+    );
     match std::fs::write("BENCH_engine.json", &json) {
         Ok(()) => println!("\nwrote BENCH_engine.json"),
         Err(e) => eprintln!("\ncould not write BENCH_engine.json: {e}"),

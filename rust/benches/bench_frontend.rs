@@ -1,18 +1,26 @@
-//! Frontend throughput: PCM → features, batch and streaming, plus the FFT
-//! kernel in isolation.  (The paper's embedded budget: the frontend must be
-//! a negligible slice of the real-time budget.)
+//! Frontend throughput: the frontend kernel ladder (seed complex-FFT +
+//! dense mel reference vs real-input FFT + fused sparse mel+log) streaming
+//! at 1/8/32 parallel streams, plus the FFT kernels in isolation.  (The
+//! paper's embedded budget: the frontend must be a negligible slice of
+//! the real-time budget.)
+//!
+//! Results are also written to `BENCH_frontend.json` so the perf
+//! trajectory is recorded across PRs.
 
-use quantasr::frontend::fft::{Complex, FftPlan};
-use quantasr::frontend::{features, spec, Frontend};
-use quantasr::util::bench::Bench;
+use std::fmt::Write as _;
+
+use quantasr::frontend::fft::{Complex, FftPlan, RealFftPlan};
+use quantasr::frontend::{
+    features, push_batch, spec, BatchStream, Frontend, FrontendKernel,
+};
+use quantasr::util::bench::{Bench, Measurement};
 use quantasr::util::rng::Xoshiro256;
 
-fn main() {
-    let b = Bench::default();
-    let mut rng = Xoshiro256::new(0xFE);
+fn kernel_name(k: FrontendKernel) -> String {
+    format!("{:?}", k).to_ascii_lowercase()
+}
 
-    println!("== bench_frontend ==");
-    let secs = 4.0;
+fn tone_wave(secs: f64, rng: &mut Xoshiro256) -> Vec<f32> {
     let n = (secs * spec::SAMPLE_RATE as f64) as usize;
     let mut wave = vec![0f32; n];
     for (i, v) in wave.iter_mut().enumerate() {
@@ -20,31 +28,156 @@ fn main() {
         *v = (2.0 * std::f64::consts::PI * 700.0 * t).sin() as f32 * 0.3
             + rng.normal() as f32 * 0.02;
     }
+    wave
+}
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Xoshiro256::new(0xFE);
+
+    println!("== bench_frontend ==");
+    let secs = 4.0;
+    let wave = tone_wave(secs, &mut rng);
+    let n = wave.len();
 
     let m = b.run_with_items(&format!("batch features {secs}s audio"), n as f64, || {
         features(&wave)
     });
-    println!(
-        "  → {:.0}× realtime\n",
-        secs / (m.mean_ns * 1e-9)
-    );
+    println!("  → {:.0}× realtime\n", secs / (m.mean_ns * 1e-9));
+    let mut recorded: Vec<Measurement> = vec![m];
 
-    let mut fe = Frontend::new();
-    let mut out = Vec::new();
-    b.run_with_items("streaming push 80ms chunks", n as f64, || {
-        fe.reset();
-        out.clear();
-        for chunk in wave.chunks(640) {
-            fe.push(chunk, &mut out);
+    // Kernel ladder × streams: the seed complex-FFT + dense mel path vs
+    // the fused real-FFT rungs, streaming 80 ms chunks.  streams>1 goes
+    // through `push_batch` so the worker-pool fan-out is measured too.
+    println!("== frontend kernel ladder × streams ==");
+    let fused = FrontendKernel::Auto.resolve();
+    let ladder: Vec<FrontendKernel> = if fused == FrontendKernel::Scalar {
+        vec![FrontendKernel::Reference, FrontendKernel::Scalar]
+    } else {
+        vec![FrontendKernel::Reference, FrontendKernel::Scalar, fused]
+    };
+    let mut ladder_rows: Vec<(String, usize, Measurement)> = Vec::new();
+    for streams in [1usize, 8, 32] {
+        let waves: Vec<Vec<f32>> = (0..streams).map(|_| tone_wave(secs, &mut rng)).collect();
+        for &k in &ladder {
+            let name = kernel_name(k);
+            let mut fes: Vec<Frontend> =
+                (0..streams).map(|_| Frontend::with_kernel(k)).collect();
+            let mut outs: Vec<Vec<f32>> = vec![Vec::new(); streams];
+            let m = b.run_with_items(
+                &format!("streaming {name} s{streams}"),
+                (n * streams) as f64,
+                || {
+                    let mut emitted = 0usize;
+                    for (fe, out) in fes.iter_mut().zip(outs.iter_mut()) {
+                        fe.reset();
+                        out.clear();
+                    }
+                    // 640-sample (80 ms) chunks, matching the seed
+                    // streaming bench so rows stay comparable across PRs.
+                    for chunk_start in (0..n).step_by(640) {
+                        let end = (chunk_start + 640).min(n);
+                        let mut batch: Vec<BatchStream> = fes
+                            .iter_mut()
+                            .zip(outs.iter_mut())
+                            .zip(&waves)
+                            .map(|((fe, out), wave)| BatchStream {
+                                fe,
+                                pcm: &wave[chunk_start..end],
+                                out,
+                                emitted: 0,
+                            })
+                            .collect();
+                        push_batch(&mut batch);
+                        emitted += batch.iter().map(|s| s.emitted).sum::<usize>();
+                    }
+                    emitted
+                },
+            );
+            ladder_rows.push((name, streams, m));
         }
-        out.len()
-    });
+        let reference = ladder_rows
+            .iter()
+            .find(|(nm, s, _)| nm == "reference" && *s == streams)
+            .map(|(_, _, m)| m.mean_ns)
+            .unwrap_or(0.0);
+        let best = ladder_rows
+            .iter()
+            .filter(|(nm, s, _)| nm != "reference" && *s == streams)
+            .map(|(_, _, m)| m.mean_ns)
+            .fold(f64::INFINITY, f64::min);
+        println!("  → s{streams}: fused speedup {:.2}× vs reference\n", reference / best);
+    }
 
+    // FFT kernels in isolation: complex 256-point plan vs the real-input
+    // plan that does half the butterfly work.
     let plan = FftPlan::new(spec::FFT_SIZE);
+    let rplan = RealFftPlan::new(spec::FFT_SIZE);
     let mut scratch = vec![Complex::default(); spec::FFT_SIZE];
+    let mut rscratch = vec![Complex::default(); spec::FFT_SIZE / 2];
     let mut power = vec![0f32; spec::FFT_SIZE / 2 + 1];
     let frame: Vec<f32> = wave[..spec::FRAME_LEN].to_vec();
-    b.run_with_items("fft256 power spectrum", spec::FFT_SIZE as f64, || {
+    let m_c = b.run_with_items("fft256 power spectrum (complex)", spec::FFT_SIZE as f64, || {
         plan.power_spectrum(&frame, &mut scratch, &mut power)
     });
+    let m_r = b.run_with_items("fft256 power spectrum (real)", spec::FFT_SIZE as f64, || {
+        rplan.power_spectrum(&frame, &mut rscratch, &mut power)
+    });
+    println!("  → real-input FFT speedup {:.2}×\n", m_c.mean_ns / m_r.mean_ns.max(1e-9));
+    recorded.push(m_c);
+    recorded.push(m_r);
+
+    // Emit BENCH_frontend.json so the perf trajectory is recorded across PRs.
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"frontend\",\n  \"ladder\": [\n");
+    for (i, (kernel, streams, m)) in ladder_rows.iter().enumerate() {
+        let comma = if i + 1 < ladder_rows.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"kernel\": \"{kernel}\", \"streams\": {streams}, \"mean_ns\": {:.1}, \
+             \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"samples_per_s\": {:.1}}}{comma}",
+            m.mean_ns,
+            m.p50_ns,
+            m.p99_ns,
+            m.throughput().unwrap_or(0.0),
+        );
+    }
+    json.push_str("  ],\n  \"speedup\": [\n");
+    let stream_counts = [1usize, 8, 32];
+    for (i, &streams) in stream_counts.iter().enumerate() {
+        let reference = ladder_rows
+            .iter()
+            .find(|(nm, s, _)| nm == "reference" && *s == streams)
+            .map(|(_, _, m)| m.mean_ns)
+            .unwrap_or(0.0);
+        let best = ladder_rows
+            .iter()
+            .filter(|(nm, s, _)| nm != "reference" && *s == streams)
+            .map(|(_, _, m)| m.mean_ns)
+            .fold(f64::INFINITY, f64::min);
+        let comma = if i + 1 < stream_counts.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"streams\": {streams}, \"fused_vs_reference\": {:.2}}}{comma}",
+            reference / best.max(1e-9)
+        );
+    }
+    let _ = writeln!(
+        json,
+        "  ],\n  \"real_fft_speedup\": {:.2},\n  \"results\": [",
+        m_c.mean_ns / m_r.mean_ns.max(1e-9)
+    );
+    for (i, m) in recorded.iter().enumerate() {
+        let comma = if i + 1 < recorded.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"iters\": {}}}{comma}",
+            m.name, m.mean_ns, m.p50_ns, m.p99_ns, m.iters
+        );
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_frontend.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_frontend.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_frontend.json: {e}"),
+    }
 }

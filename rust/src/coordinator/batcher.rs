@@ -190,6 +190,20 @@ impl<T> ClassQueue<T> {
         self.lanes.iter_mut().find_map(|q| q.pop_front())
     }
 
+    /// Pop up to `max` items in [`pop`](Self::pop) order — the shape the
+    /// batched decode pool consumes (one flush's worth of finished
+    /// utterances decoded together, sharing trie/LM lookup state).
+    pub fn pop_up_to(&mut self, max: usize) -> Vec<T> {
+        let mut out = Vec::new();
+        while out.len() < max {
+            match self.pop() {
+                Some(item) => out.push(item),
+                None => break,
+            }
+        }
+        out
+    }
+
     pub fn len(&self) -> usize {
         self.lanes.iter().map(|q| q.len()).sum()
     }
@@ -373,6 +387,21 @@ mod tests {
         assert_eq!(q.pop(), Some(10));
         assert_eq!(q.pop(), Some(11));
         assert_eq!(q.pop(), Some(12));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_up_to_preserves_class_then_fifo_order() {
+        use crate::sched::Priority::{Bulk, Interactive};
+        let mut q = ClassQueue::new();
+        q.push(Bulk, 10);
+        q.push(Interactive, 1);
+        q.push(Bulk, 11);
+        q.push(Interactive, 2);
+        q.push(Bulk, 12);
+        assert_eq!(q.pop_up_to(3), vec![1, 2, 10]);
+        assert_eq!(q.pop_up_to(0), Vec::<usize>::new());
+        assert_eq!(q.pop_up_to(9), vec![11, 12]);
         assert!(q.is_empty());
     }
 

@@ -91,7 +91,12 @@ pub struct EngineConfig {
     pub decode_workers: usize,
     /// Per-stream pending-frame cap (backpressure bound).
     pub max_pending_frames: usize,
-    /// Time-slice preemption policy (lane quanta).
+    /// Time-slice preemption policy (lane quanta).  Defaults to the
+    /// [`crate::sched::AUTO_QUANTUM`] sentinel: the AM worker measures
+    /// its flush-tick interval at startup and sets the quantum to
+    /// ~[`QuantumPolicy::AUTO_SLO_SECS`] of wall clock.  `--quantum N` /
+    /// `QUANTASR_QUANTUM_TICKS` pin a fixed tick count (0 = explicit
+    /// auto).
     pub quantum: QuantumPolicy,
     /// Live-stream admission bound.
     pub admission: AdmissionConfig,
@@ -597,7 +602,9 @@ impl<B: AmBackend> Engine<B> {
             if slot.finished {
                 bail!("stream {id} already finished");
             }
+            let t0 = Instant::now();
             slot.frontend.push(pcm, &mut frames);
+            self.shared.metrics.add_frontend_compute(t0.elapsed().as_secs_f64());
         }
         self.push_frames(id, &frames)
     }
@@ -779,9 +786,29 @@ fn teardown_drained<B: AmBackend>(
     }
 }
 
+/// Flush ticks sampled before the auto quantum is fixed.
+const QUANTUM_TUNE_SAMPLES: usize = 10;
+/// Flush gaps longer than this are idle periods, not tick cost — they
+/// are excluded from the auto-quantum measurement.
+const QUANTUM_TUNE_MAX_GAP: Duration = Duration::from_millis(250);
+
 fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
     let budget = s.config.tick_budget.max(1);
     let mut drr = DrrState::new();
+    // Worker-local effective quantum policy.  A config of AUTO_QUANTUM
+    // (the default) starts from a provisional 25 ticks and is replaced
+    // once enough flush-to-flush intervals are measured: the quantum
+    // becomes ~AUTO_SLO_SECS of wall clock, so lane rotation under
+    // saturation tracks a latency SLO instead of a hardcoded tick count
+    // that means wildly different wall time on different machines.
+    let mut qpolicy = s.config.quantum;
+    let auto_quantum = qpolicy.is_auto();
+    if auto_quantum {
+        qpolicy.quantum_ticks = 25;
+    }
+    s.metrics.set_effective_quantum(qpolicy.quantum());
+    let mut last_flush: Option<Instant> = None;
+    let mut tick_samples: Vec<f64> = Vec::new();
     // Worker-local per-slot execution state.  Boot models' arenas are
     // allocated here — on the worker thread, like every later hot load.
     let mut wm: Vec<Option<LaneIo<B>>> = {
@@ -839,6 +866,25 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
                 continue;
             }
             Decision::Flush => {}
+        }
+        // Auto-quantum: sample flush-to-flush intervals (skipping idle
+        // gaps) until enough are seen, then fix the quantum at
+        // ~AUTO_SLO_SECS worth of measured ticks.
+        if auto_quantum && tick_samples.len() < QUANTUM_TUNE_SAMPLES {
+            if let Some(t) = last_flush {
+                let dt = now - t;
+                if dt <= QUANTUM_TUNE_MAX_GAP {
+                    tick_samples.push(dt.as_secs_f64());
+                    if tick_samples.len() == QUANTUM_TUNE_SAMPLES {
+                        let mean =
+                            tick_samples.iter().sum::<f64>() / tick_samples.len() as f64;
+                        let q = (QuantumPolicy::AUTO_SLO_SECS / mean.max(1e-6)).round();
+                        qpolicy.quantum_ticks = (q as u32).clamp(5, 500);
+                        s.metrics.set_effective_quantum(qpolicy.quantum());
+                    }
+                }
+            }
+            last_flush = Some(now);
         }
         // Plan this tick's batch, per model.  Pass 1: ready streams that
         // already hold a lane ride for free (unless preempted below).
@@ -902,7 +948,7 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
                         }
                     })
                     .collect();
-                if let Some(vi) = s.config.quantum.select_victim(&holders, prio) {
+                if let Some(vi) = qpolicy.select_victim(&holders, prio) {
                     let vid = holders[vi].stream;
                     let l = holders[vi].tag.lane;
                     let pos = planned[m]
@@ -1156,16 +1202,23 @@ fn drain_finished<B: AmBackend>(inner: &mut Inner<B>, s: &Shared<B>) {
     }
 }
 
+/// Finished utterances one decode worker pops per wakeup.  Jobs sharing a
+/// flush decode together through [`Decoder::decode_batch`], so trie/LM
+/// lookup state (the memoized word-boundary scores) is shared across the
+/// batch instead of rebuilt per utterance.
+const DECODE_POP_BATCH: usize = 8;
+
 fn decode_worker<B: AmBackend>(s: Arc<Shared<B>>, decoder: Arc<Decoder>) {
     loop {
-        let job = {
+        let jobs = {
             let mut inner = s.inner.lock().unwrap();
             loop {
                 if s.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                if let Some(job) = inner.decode_queue.pop() {
-                    break job;
+                let jobs = inner.decode_queue.pop_up_to(DECODE_POP_BATCH);
+                if !jobs.is_empty() {
+                    break jobs;
                 }
                 let (guard, _t) = s
                     .decode_cv
@@ -1174,18 +1227,26 @@ fn decode_worker<B: AmBackend>(s: Arc<Shared<B>>, decoder: Arc<Decoder>) {
                 inner = guard;
             }
         };
-        let labels = job.posteriors.len() / job.num_frames.max(1);
-        let hyp = decoder.decode(&job.posteriors, labels.max(1));
-        let phones = crate::decoder::ctc::greedy(&job.posteriors, labels.max(1));
-        s.metrics.add_utterance();
-        let latency = job.finish_time.elapsed();
-        s.metrics.finalize_latency.record_duration(latency);
-        let _ = job.result_tx.send(FinalResult {
-            stream_id: job.stream_id,
-            words: hyp.words,
-            phones,
-            num_frames: job.num_frames,
-            finalize_latency: latency,
-        });
+        let t0 = Instant::now();
+        let batch: Vec<(&[f32], usize)> = jobs
+            .iter()
+            .map(|j| (j.posteriors.as_slice(), (j.posteriors.len() / j.num_frames.max(1)).max(1)))
+            .collect();
+        let hyps = decoder.decode_batch(&batch);
+        s.metrics.add_decode_compute(t0.elapsed().as_secs_f64());
+        for (job, hyp) in jobs.into_iter().zip(hyps) {
+            let labels = (job.posteriors.len() / job.num_frames.max(1)).max(1);
+            let phones = crate::decoder::ctc::greedy(&job.posteriors, labels);
+            s.metrics.add_utterance();
+            let latency = job.finish_time.elapsed();
+            s.metrics.finalize_latency.record_duration(latency);
+            let _ = job.result_tx.send(FinalResult {
+                stream_id: job.stream_id,
+                words: hyp.words,
+                phones,
+                num_frames: job.num_frames,
+                finalize_latency: latency,
+            });
+        }
     }
 }

@@ -113,6 +113,13 @@ pub struct Metrics {
     pub audio_seconds: Mutex<f64>,
     /// wall seconds of AM compute
     pub am_compute_seconds: Mutex<f64>,
+    /// wall seconds spent in final decodes (CTC beam + LM rescore)
+    pub decode_seconds: Mutex<f64>,
+    /// wall seconds spent in the frontend (PCM → feature frames)
+    pub frontend_seconds: Mutex<f64>,
+    /// effective tick quantum (fixed config, or the auto-tuned value the
+    /// AM worker derived from its measured tick rate; 0 = not yet set)
+    pub effective_quantum: Mutex<u32>,
     pub frames_processed: Mutex<u64>,
     pub utterances: Mutex<u64>,
     /// idle streams parked out of the arena to admit waiting streams
@@ -168,6 +175,31 @@ impl Metrics {
     pub fn add_am_compute(&self, secs: f64, frames: u64) {
         *self.am_compute_seconds.lock().unwrap() += secs;
         *self.frames_processed.lock().unwrap() += frames;
+    }
+
+    pub fn add_decode_compute(&self, secs: f64) {
+        *self.decode_seconds.lock().unwrap() += secs;
+    }
+
+    pub fn add_frontend_compute(&self, secs: f64) {
+        *self.frontend_seconds.lock().unwrap() += secs;
+    }
+
+    /// Record the quantum the AM worker actually runs (config value, or
+    /// the auto-tuned one once measurement completes).
+    pub fn set_effective_quantum(&self, q: u32) {
+        *self.effective_quantum.lock().unwrap() = q;
+    }
+
+    /// Wall seconds per tick stage: (AM step, decode, frontend).  The
+    /// stages run on different threads, so shares are of summed stage
+    /// time, not of wall clock.
+    pub fn tick_breakdown(&self) -> (f64, f64, f64) {
+        (
+            *self.am_compute_seconds.lock().unwrap(),
+            *self.decode_seconds.lock().unwrap(),
+            *self.frontend_seconds.lock().unwrap(),
+        )
     }
 
     pub fn add_utterance(&self) {
@@ -258,14 +290,27 @@ impl Metrics {
         let stalls = *self.sched_stalls.lock().unwrap();
         let loads = *self.model_loads.lock().unwrap();
         let unloads = *self.model_unloads.lock().unwrap();
+        let decode = *self.decode_seconds.lock().unwrap();
+        let frontend = *self.frontend_seconds.lock().unwrap();
+        let equantum = *self.effective_quantum.lock().unwrap();
         let rtf = if audio > 0.0 { compute / audio } else { 0.0 };
         out.push_str(&format!(
             "utterances={utts}  frames={frames}  audio={audio:.1}s  \
              am_compute={compute:.2}s  RTF={rtf:.4}  evictions={evictions}\n",
         ));
+        let stages = compute + decode + frontend;
+        if stages > 0.0 {
+            out.push_str(&format!(
+                "tick_breakdown: am={compute:.3}s ({:.0}%)  decode={decode:.3}s ({:.0}%)  \
+                 frontend={frontend:.3}s ({:.0}%)\n",
+                100.0 * compute / stages,
+                100.0 * decode / stages,
+                100.0 * frontend / stages,
+            ));
+        }
         out.push_str(&format!(
             "preemptions={preemptions}  admission_rejects={rejects}  sched_stalls={stalls}  \
-             model_loads={loads}  model_unloads={unloads}\n",
+             model_loads={loads}  model_unloads={unloads}  effective_quantum={equantum}\n",
         ));
         let pm = self.per_model.lock().unwrap();
         if pm.len() > 1 || pm.iter().any(|m| m.preemptions + m.evictions > 0) {
@@ -379,6 +424,20 @@ mod tests {
     fn empty_model_stats_safe() {
         let s = ModelStats::default();
         assert_eq!(s.occupancy(), 0.0);
+    }
+
+    #[test]
+    fn tick_breakdown_accumulates_and_reports() {
+        let m = Metrics::default();
+        m.add_am_compute(2.0, 10);
+        m.add_decode_compute(1.0);
+        m.add_decode_compute(0.5);
+        m.add_frontend_compute(0.5);
+        m.set_effective_quantum(40);
+        assert_eq!(m.tick_breakdown(), (2.0, 1.5, 0.5));
+        let r = m.report();
+        assert!(r.contains("tick_breakdown:"), "{r}");
+        assert!(r.contains("effective_quantum=40"), "{r}");
     }
 
     #[test]

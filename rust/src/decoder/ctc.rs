@@ -8,12 +8,14 @@ const NEG_INF: f64 = -1e30;
 
 #[inline]
 fn logsumexp2(a: f64, b: f64) -> f64 {
+    // ln_1p keeps precision when the smaller term is ~e^-40 of the larger
+    // (1.0 + tiny would round the contribution away entirely).
     if a < b {
-        b + (1.0 + (a - b).exp()).ln()
+        b + (a - b).exp().ln_1p()
     } else if a == NEG_INF {
         NEG_INF
     } else {
-        a + (1.0 + (b - a).exp()).ln()
+        a + (b - a).exp().ln_1p()
     }
 }
 

@@ -1,0 +1,238 @@
+//! Decode kernel ladder: rung selection + the posterior-row prep kernel.
+//!
+//! The beam search has the same shape as the quantized GEMM and
+//! elementwise paths: a reference implementation that defines the
+//! semantics, and faster rungs that must reproduce it.  The ladder here
+//! has one extra step at the bottom because the *data layout* changed,
+//! not just the instruction mix:
+//!
+//! - `Reference` — the seed per-hypothesis `HashMap` prefix beam search
+//!   ([`crate::decoder::search`] keeps it verbatim).  Defines the scores.
+//! - `Scalar` — struct-of-arrays beam lanes, CSR trie walk, partial-select
+//!   pruning; plain scalar arithmetic.
+//! - `Avx2` / `Neon` — the SoA engine with the posterior-row prep
+//!   (f32→f64 widening + phone-floor mask) vectorized.
+//!
+//! **Bit-exactness contract.**  All SoA rungs (`Scalar`/`Avx2`/`Neon`)
+//! produce bit-identical hypotheses: the vector rungs only use exact
+//! operations (f32→f64 convert, compare), never a polynomial.  The SoA
+//! rungs match `Reference` to ≤1e-9 in final scores with an identical
+//! 1-best word sequence — exact equality is impossible because the seed
+//! search iterates a `HashMap`, so its log-sum-exp accumulation order is
+//! arbitrary; the SoA engine accumulates in deterministic lane order.
+//!
+//! `QUANTASR_DECODE_KERNEL` forces a rung
+//! (`reference|scalar|avx2|neon|auto`), mirroring `QUANTASR_KERNEL` /
+//! `QUANTASR_EW_KERNEL`.  Unknown or unavailable values warn and fall
+//! back to auto — tuning knobs never panic a serving process.
+
+/// Which decode implementation to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeKernel {
+    /// Seed per-hypothesis HashMap beam search — the semantic reference.
+    Reference,
+    /// Struct-of-arrays beam lanes, scalar arithmetic.
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    /// SoA lanes + AVX2 posterior-row prep.
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    /// SoA lanes + NEON posterior-row prep.
+    Neon,
+    /// Resolve at runtime: forced rung if set, else best available.
+    Auto,
+}
+
+impl DecodeKernel {
+    /// Concrete rung this resolves to at runtime.  Clamps a forced SIMD
+    /// rung back to `Scalar` when the CPU lacks the feature — the
+    /// soundness gate for the `#[target_feature]` dispatch below.
+    pub fn resolve(self) -> DecodeKernel {
+        let k = match self {
+            DecodeKernel::Auto => forced_decode_kernel().unwrap_or_else(Self::best_available),
+            other => other,
+        };
+        #[cfg(target_arch = "x86_64")]
+        if k == DecodeKernel::Avx2 && !crate::quant::gemm::avx2_available() {
+            return DecodeKernel::Scalar;
+        }
+        k
+    }
+
+    fn best_available() -> DecodeKernel {
+        #[cfg(target_arch = "x86_64")]
+        if crate::quant::gemm::avx2_available() {
+            return DecodeKernel::Avx2;
+        }
+        #[cfg(target_arch = "aarch64")]
+        return DecodeKernel::Neon;
+        #[allow(unreachable_code)]
+        DecodeKernel::Scalar
+    }
+}
+
+/// `QUANTASR_DECODE_KERNEL` forcing, parsed once per process.
+pub fn forced_decode_kernel() -> Option<DecodeKernel> {
+    static ONCE: std::sync::OnceLock<Option<DecodeKernel>> = std::sync::OnceLock::new();
+    *ONCE.get_or_init(|| {
+        let v = std::env::var("QUANTASR_DECODE_KERNEL").ok()?;
+        match v.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => None,
+            "reference" => Some(DecodeKernel::Reference),
+            "scalar" => Some(DecodeKernel::Scalar),
+            #[cfg(target_arch = "x86_64")]
+            "avx2" if crate::quant::gemm::avx2_available() => Some(DecodeKernel::Avx2),
+            #[cfg(target_arch = "aarch64")]
+            "neon" => Some(DecodeKernel::Neon),
+            other => {
+                eprintln!(
+                    "QUANTASR_DECODE_KERNEL='{other}' unknown or unavailable \
+                     on this CPU; using auto"
+                );
+                None
+            }
+        }
+    })
+}
+
+/// Prep one posterior frame for the SoA search: widen the f32 log-prob
+/// row to f64 (scores accumulate in f64, matching the reference) and
+/// mark which phones clear the pruning floor.  `active[p]` is the
+/// phone-floor mask the beam expansion consults instead of re-comparing
+/// per hypothesis.
+///
+/// Every rung performs the identical exact operations (convert, compare),
+/// so outputs are bit-identical across the ladder.
+pub fn prep_row(
+    kernel: DecodeKernel,
+    row: &[f32],
+    floor: f64,
+    row64: &mut Vec<f64>,
+    active: &mut Vec<bool>,
+) {
+    row64.clear();
+    row64.resize(row.len(), 0.0);
+    active.clear();
+    active.resize(row.len(), false);
+    match kernel.resolve() {
+        #[cfg(target_arch = "x86_64")]
+        DecodeKernel::Avx2 => unsafe { prep_row_avx2(row, floor, row64, active) },
+        #[cfg(target_arch = "aarch64")]
+        DecodeKernel::Neon => unsafe { prep_row_neon(row, floor, row64, active) },
+        _ => prep_row_scalar(row, floor, row64, active),
+    }
+}
+
+fn prep_row_scalar(row: &[f32], floor: f64, row64: &mut [f64], active: &mut [bool]) {
+    for (i, &x) in row.iter().enumerate() {
+        let v = x as f64;
+        row64[i] = v;
+        active[i] = v >= floor;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn prep_row_avx2(row: &[f32], floor: f64, row64: &mut [f64], active: &mut [bool]) {
+    use std::arch::x86_64::*;
+    let n = row.len();
+    let vfloor = _mm256_set1_pd(floor);
+    let mut i = 0;
+    while i + 4 <= n {
+        // 4 f32 → 4 f64 (exact widening), then >= floor per lane.
+        let x = _mm_loadu_ps(row.as_ptr().add(i));
+        let wide = _mm256_cvtps_pd(x);
+        _mm256_storeu_pd(row64.as_mut_ptr().add(i), wide);
+        let ge = _mm256_cmp_pd::<_CMP_GE_OQ>(wide, vfloor);
+        let mask = _mm256_movemask_pd(ge);
+        for lane in 0..4 {
+            active[i + lane] = mask & (1 << lane) != 0;
+        }
+        i += 4;
+    }
+    while i < n {
+        let v = row[i] as f64;
+        row64[i] = v;
+        active[i] = v >= floor;
+        i += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn prep_row_neon(row: &[f32], floor: f64, row64: &mut [f64], active: &mut [bool]) {
+    use std::arch::aarch64::*;
+    let n = row.len();
+    let vfloor = vdupq_n_f64(floor);
+    let mut i = 0;
+    while i + 2 <= n {
+        // 2 f32 → 2 f64 (exact widening), then >= floor per lane.
+        let x = vld1_f32(row.as_ptr().add(i));
+        let wide = vcvt_f64_f32(x);
+        vst1q_f64(row64.as_mut_ptr().add(i), wide);
+        let ge = vcgeq_f64(wide, vfloor);
+        active[i] = vgetq_lane_u64::<0>(ge) != 0;
+        active[i + 1] = vgetq_lane_u64::<1>(ge) != 0;
+        i += 2;
+    }
+    while i < n {
+        let v = row[i] as f64;
+        row64[i] = v;
+        active[i] = v >= floor;
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    fn rungs() -> Vec<DecodeKernel> {
+        let mut r = vec![DecodeKernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        if crate::quant::gemm::avx2_available() {
+            r.push(DecodeKernel::Avx2);
+        }
+        #[cfg(target_arch = "aarch64")]
+        r.push(DecodeKernel::Neon);
+        r
+    }
+
+    #[test]
+    fn prep_row_rungs_are_bit_identical() {
+        forall("prep_row ladder", 200, 0xDEC0DE, |g: &mut Gen| {
+            let n = g.usize_in(1, 67); // odd sizes exercise the tails
+            let floor = g.f64_in(-14.0, -2.0);
+            let row = g.vec_normal(n, 4.0);
+            let mut base64 = Vec::new();
+            let mut base_active = Vec::new();
+            prep_row(DecodeKernel::Scalar, &row, floor, &mut base64, &mut base_active);
+            for k in rungs() {
+                let mut r64 = Vec::new();
+                let mut act = Vec::new();
+                prep_row(k, &row, floor, &mut r64, &mut act);
+                for i in 0..n {
+                    assert_eq!(r64[i].to_bits(), base64[i].to_bits(), "{k:?} lane {i}");
+                }
+                assert_eq!(act, base_active, "{k:?} mask");
+            }
+        });
+    }
+
+    #[test]
+    fn prep_row_mask_matches_floor() {
+        let row = [-1.0f32, -12.0, -11.9999, -30.0, 0.0];
+        let mut r64 = Vec::new();
+        let mut act = Vec::new();
+        prep_row(DecodeKernel::Scalar, &row, -12.0, &mut r64, &mut act);
+        assert_eq!(act, vec![true, true, true, false, true]);
+        assert_eq!(r64[3], -30.0);
+    }
+
+    #[test]
+    fn resolve_never_yields_auto() {
+        assert_ne!(DecodeKernel::Auto.resolve(), DecodeKernel::Auto);
+        assert_eq!(DecodeKernel::Scalar.resolve(), DecodeKernel::Scalar);
+        assert_eq!(DecodeKernel::Reference.resolve(), DecodeKernel::Reference);
+    }
+}

@@ -15,6 +15,11 @@ use std::collections::HashMap;
 
 pub const BOS: u32 = u32::MAX; // sentence-start pseudo-word
 
+/// Longest supported n-gram order.  Scoring keys live in stack buffers of
+/// this size so the beam-search hot path never allocates; 8 is far beyond
+/// any LM this simulator trains (first-pass bigram, trigram rescorer).
+pub const MAX_ORDER: usize = 8;
+
 /// Interpolated n-gram LM.
 pub struct NGramLm {
     pub order: usize,
@@ -37,6 +42,7 @@ impl NGramLm {
         prune_min: u32,
     ) -> Self {
         assert!(order >= 1);
+        assert!(order <= MAX_ORDER, "n-gram order {order} exceeds MAX_ORDER {MAX_ORDER}");
         let mut counts = vec![HashMap::new(); order];
         let mut totals = vec![HashMap::new(); order];
         for s in sentences {
@@ -81,31 +87,35 @@ impl NGramLm {
     }
 
     /// log p(word | history).  `history` = previously emitted words
-    /// (most recent last); BOS padding is implicit.
+    /// (most recent last); BOS padding is implicit.  Only the last
+    /// `order - 1` history words matter, so beam-search callers may pass a
+    /// truncated tail and score identically.  Alloc-free: context and key
+    /// live in stack buffers (see [`MAX_ORDER`]).
     pub fn log_prob(&self, history: &[u32], word: u32) -> f64 {
-        let mut ctx: Vec<u32> = std::iter::repeat(BOS)
-            .take(self.order.saturating_sub(1 + history.len()))
-            .chain(history.iter().copied())
-            .collect();
-        if ctx.len() > self.order - 1 {
-            ctx = ctx[ctx.len() - (self.order - 1)..].to_vec();
-        }
-        self.interp(&ctx, word).ln()
+        let n = self.order - 1;
+        let mut ctx = [BOS; MAX_ORDER];
+        let take = history.len().min(n);
+        ctx[n - take..n].copy_from_slice(&history[history.len() - take..]);
+        self.interp(&ctx[..n], word).ln()
     }
 
     fn interp(&self, ctx: &[u32], word: u32) -> f64 {
         // level k uses the last k context words
         let uniform = 1.0 / self.vocab as f64;
         let mut p = uniform;
+        let mut key = [0u32; MAX_ORDER];
         for k in 0..self.order {
             if k > ctx.len() {
                 break;
             }
             let c_start = ctx.len() - k;
-            let mut key: Vec<u32> = ctx[c_start..].to_vec();
-            key.push(word);
-            let num = *self.counts[k].get(&key).unwrap_or(&0) as f64;
-            let den = *self.totals[k].get(&ctx[c_start..].to_vec()).unwrap_or(&0) as f64;
+            let tail = &ctx[c_start..];
+            key[..k].copy_from_slice(tail);
+            key[k] = word;
+            // `HashMap<Vec<u32>, _>` lookups go through `Borrow<[u32]>`, so
+            // the stack slices need no Vec allocation.
+            let num = *self.counts[k].get(&key[..=k]).unwrap_or(&0) as f64;
+            let den = *self.totals[k].get(tail).unwrap_or(&0) as f64;
             if den > 0.0 {
                 let ml = num / den;
                 p = self.lambda * ml + (1.0 - self.lambda) * p;
@@ -184,6 +194,19 @@ mod tests {
         let full = NGramLm::train(&train, 2, 200, 0.7, 1);
         let pruned = NGramLm::train(&train, 2, 200, 0.7, 5);
         assert!(pruned.num_ngrams() < full.num_ngrams());
+    }
+
+    #[test]
+    fn tail_history_scores_identically() {
+        // the SoA beam search passes only the last order-1 words
+        let train = corpus(1000, 9);
+        for lm in [NGramLm::small(&train, 200), NGramLm::large(&train, 200)] {
+            let hist = [5u32, 9, 13, 2, 7];
+            let tail = &hist[hist.len() - (lm.order - 1)..];
+            for w in [0u32, 3, 42, 199] {
+                assert_eq!(lm.log_prob(&hist, w), lm.log_prob(tail, w));
+            }
+        }
     }
 
     #[test]

@@ -7,14 +7,18 @@
 //! - [`wer`]    — Levenshtein alignment, WER/LER scoring.
 //! - [`lm`]     — interpolated n-gram language model (trained on the
 //!   synthetic text corpus).
-//! - [`trie`]   — lexicon prefix trie over phones.
+//! - [`trie`]   — lexicon prefix trie over phones (+ CSR view).
 //! - [`ctc`]    — greedy + phone-level CTC prefix beam search.
-//! - [`search`] — word-level lexicon+LM CTC beam search with rescoring.
+//! - [`search`] — word-level lexicon+LM CTC beam search with rescoring,
+//!   on the struct-of-arrays / reference kernel ladder.
+//! - [`kernel`] — decode kernel rung selection (`QUANTASR_DECODE_KERNEL`).
 
 pub mod ctc;
+pub mod kernel;
 pub mod lm;
 pub mod search;
 pub mod trie;
 pub mod wer;
 
-pub use search::{Decoder, DecoderConfig};
+pub use kernel::DecodeKernel;
+pub use search::{Decoder, DecoderConfig, Hypothesis};

@@ -7,11 +7,33 @@
 //! with the word emitted, the small (first-pass) LM score added to the
 //! pruning score, and the large-LM score accumulated on the side.  Final
 //! ranking uses the large LM — the on-the-fly rescoring pass.
+//!
+//! # Two engines, one semantics
+//!
+//! The search runs on the kernel ladder of [`crate::decoder::kernel`]:
+//!
+//! - **Reference** — the original per-hypothesis `HashMap` search, kept
+//!   verbatim as the semantic definition ([`Decoder::decode_with_kernel`]
+//!   with [`DecodeKernel::Reference`]).
+//! - **SoA** (`Scalar`/`Avx2`/`Neon`) — beam lanes as parallel arrays
+//!   (trie node / last phone / prefix handle / blank & non-blank mass),
+//!   word prefixes interned in a parent-pointer arena so hypothesis
+//!   identity is a `u32` handle instead of a `Vec<u32>` clone+hash per
+//!   expansion, the trie walked through its CSR view, LM lookups
+//!   memoized per flush, and pruning done with a partial select instead
+//!   of a full sort.  The SIMD rungs vectorize the posterior-row prep
+//!   (f64 widening + phone-floor mask) with exact operations only, so
+//!   all SoA rungs are bit-identical; they match the reference to ≤1e-9
+//!   (`HashMap` iteration order makes the reference's log-sum-exp
+//!   accumulation order arbitrary — see `decoder/kernel.rs`).
 
+use std::cell::RefCell;
 use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
 
-use crate::decoder::lm::NGramLm;
-use crate::decoder::trie::LexTrie;
+use crate::decoder::kernel::{self, DecodeKernel};
+use crate::decoder::lm::{self, NGramLm, BOS};
+use crate::decoder::trie::{LexTrie, TrieCsr};
 
 const NEG_INF: f64 = -1e30;
 const BLANK: usize = 0;
@@ -19,13 +41,54 @@ const BLANK: usize = 0;
 #[inline]
 fn lse(a: f64, b: f64) -> f64 {
     if a < b {
-        b + (1.0 + (a - b).exp()).ln()
+        b + (a - b).exp().ln_1p()
     } else if a == NEG_INF {
         NEG_INF
     } else {
-        a + (1.0 + (b - a).exp()).ln()
+        a + (b - a).exp().ln_1p()
     }
 }
+
+/// FxHash-style multiply-rotate hasher for the small fixed-width keys the
+/// SoA search uses (lane keys, prefix-arena edges, LM memo entries).
+/// SipHash's DoS resistance buys nothing on internal u32 tuples and costs
+/// a measurable slice of the decode tick.
+#[derive(Default)]
+struct FxHasher(u64);
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.mix(b as u64);
+        }
+    }
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.mix(v as u64);
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.mix(v);
+    }
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.mix(v as u64);
+    }
+}
+
+impl FxHasher {
+    #[inline]
+    fn mix(&mut self, v: u64) {
+        self.0 = (self.0.rotate_left(5) ^ v).wrapping_mul(0x517c_c1b7_2722_0a95);
+    }
+}
+
+type FxMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
 
 /// Search hyper-parameters.
 #[derive(Clone, Copy, Debug)]
@@ -79,12 +142,34 @@ impl Entry {
     }
 }
 
+/// A surviving beam at the end of an utterance, engine-agnostic: both the
+/// reference and SoA searches produce these for final ranking.
+struct RawBeam {
+    node: u32,
+    words: Vec<u32>,
+    lb: f64,
+    lnb: f64,
+    lm_small: f64,
+    lm_large: f64,
+}
+
+impl RawBeam {
+    fn acoustic(&self) -> f64 {
+        lse(self.lb, self.lnb)
+    }
+}
+
 /// The assembled decoder.
 pub struct Decoder {
     pub trie: LexTrie,
     pub lm_small: NGramLm,
     pub lm_large: NGramLm,
     pub config: DecoderConfig,
+    /// CSR view of `trie` for the SoA search (kept in lockstep by `new`).
+    csr: TrieCsr,
+    /// Rung used by `decode`/`decode_batch`; `Auto` honors
+    /// `QUANTASR_DECODE_KERNEL`.
+    kernel: DecodeKernel,
 }
 
 /// A decode result with score breakdown.
@@ -96,44 +181,291 @@ pub struct Hypothesis {
     pub lm_large: f64,
 }
 
+// ---------------------------------------------------------------------------
+// SoA search internals
+// ---------------------------------------------------------------------------
+
+/// Interned word prefixes: a parent-pointer arena where handle equality is
+/// sequence equality (each (parent, word) edge is created exactly once via
+/// `edges`).  Hypothesis keys carry the `u32` handle, so beam expansion
+/// never clones or hashes a `Vec<u32>`.
+#[derive(Default)]
+struct PrefixArena {
+    parent: Vec<u32>,
+    word: Vec<u32>,
+    depth: Vec<u32>,
+    edges: FxMap<(u32, u32), u32>,
+}
+
+const ROOT: u32 = 0;
+
+impl PrefixArena {
+    fn reset(&mut self) {
+        self.parent.clear();
+        self.word.clear();
+        self.depth.clear();
+        self.edges.clear();
+        self.parent.push(ROOT);
+        self.word.push(u32::MAX);
+        self.depth.push(0);
+    }
+
+    /// Handle of `prefix + [w]`, interning it on first use.
+    #[inline]
+    fn child(&mut self, prefix: u32, w: u32) -> u32 {
+        if let Some(&h) = self.edges.get(&(prefix, w)) {
+            return h;
+        }
+        let h = self.parent.len() as u32;
+        self.parent.push(prefix);
+        self.word.push(w);
+        self.depth.push(self.depth[prefix as usize] + 1);
+        self.edges.insert((prefix, w), h);
+        h
+    }
+
+    /// Last `h` words of `prefix` (most recent last) into `buf`; returns
+    /// how many were written.  This is all the n-gram LMs ever look at.
+    #[inline]
+    fn tail(&self, mut prefix: u32, buf: &mut [u32], h: usize) -> usize {
+        let mut tmp = [0u32; lm::MAX_ORDER];
+        let mut n = 0;
+        while prefix != ROOT && n < h {
+            tmp[n] = self.word[prefix as usize];
+            prefix = self.parent[prefix as usize];
+            n += 1;
+        }
+        for i in 0..n {
+            buf[i] = tmp[n - 1 - i];
+        }
+        n
+    }
+
+    /// Full word sequence of `prefix` (utterance end only).
+    fn words_of(&self, mut prefix: u32) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.depth[prefix as usize] as usize);
+        while prefix != ROOT {
+            out.push(self.word[prefix as usize]);
+            prefix = self.parent[prefix as usize];
+        }
+        out.reverse();
+        out
+    }
+}
+
+/// Beam lanes as parallel arrays — the structure the tentpole is named
+/// after.  A lane is one hypothesis: (trie node, last phone, prefix
+/// handle) identity plus blank/non-blank log mass and LM side scores.
+#[derive(Default)]
+struct Lanes {
+    node: Vec<u32>,
+    last: Vec<u32>,
+    pref: Vec<u32>,
+    lb: Vec<f64>,
+    lnb: Vec<f64>,
+    lms: Vec<f64>,
+    lml: Vec<f64>,
+}
+
+impl Lanes {
+    fn clear(&mut self) {
+        self.node.clear();
+        self.last.clear();
+        self.pref.clear();
+        self.lb.clear();
+        self.lnb.clear();
+        self.lms.clear();
+        self.lml.clear();
+    }
+
+    fn len(&self) -> usize {
+        self.node.len()
+    }
+
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn push(&mut self, node: u32, last: u32, pref: u32, lb: f64, lnb: f64, lms: f64, lml: f64) -> u32 {
+        self.node.push(node);
+        self.last.push(last);
+        self.pref.push(pref);
+        self.lb.push(lb);
+        self.lnb.push(lnb);
+        self.lms.push(lms);
+        self.lml.push(lml);
+        (self.node.len() - 1) as u32
+    }
+
+    fn gather_from(&mut self, src: &Lanes, idx: &[u32]) {
+        self.clear();
+        for &i in idx {
+            let i = i as usize;
+            self.push(
+                src.node[i],
+                src.last[i],
+                src.pref[i],
+                src.lb[i],
+                src.lnb[i],
+                src.lms[i],
+                src.lml[i],
+            );
+        }
+    }
+}
+
+/// Lane index for `(node, last, prefix)` in `nxt`, appending an empty lane
+/// on first sight.  Free function so the caller can keep disjoint borrows
+/// on the rest of the scratch.
+#[inline]
+fn upsert(slot: &mut FxMap<(u32, u32, u32), u32>, lanes: &mut Lanes, node: u32, last: u32, pref: u32) -> usize {
+    *slot
+        .entry((node, last, pref))
+        .or_insert_with(|| lanes.push(node, last, pref, NEG_INF, NEG_INF, 0.0, 0.0)) as usize
+}
+
+/// Reusable per-thread allocations for the SoA search.
+#[derive(Default)]
+struct SoaScratch {
+    row64: Vec<f64>,
+    active: Vec<bool>,
+    cur: Lanes,
+    nxt: Lanes,
+    slot: FxMap<(u32, u32, u32), u32>,
+    arena: PrefixArena,
+    score: Vec<f64>,
+    order: Vec<u32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<SoaScratch> = RefCell::new(SoaScratch::default());
+}
+
+/// Per-flush memo of `(history tail, word) → (small, large)` LM scores.
+/// Streams decoded in the same flush overwhelmingly share recent word
+/// contexts, so one lookup pays for every stream that reaches the same
+/// boundary.  Keys are BOS-padded right-aligned tails, unambiguous across
+/// depths because BOS is not a real word.
+#[derive(Default)]
+struct LmCache {
+    map: FxMap<([u32; 3], u32), (f64, f64)>,
+}
+
+impl LmCache {
+    /// Caches up to trigram contexts; longer tails would need wider keys.
+    const MAX_TAIL: usize = 3;
+
+    #[inline]
+    fn score(&mut self, small: &NGramLm, large: &NGramLm, tail: &[u32], w: u32) -> (f64, f64) {
+        if tail.len() > Self::MAX_TAIL {
+            return (small.log_prob(tail, w), large.log_prob(tail, w));
+        }
+        let mut key = [BOS; Self::MAX_TAIL];
+        key[Self::MAX_TAIL - tail.len()..].copy_from_slice(tail);
+        *self
+            .map
+            .entry((key, w))
+            .or_insert_with(|| (small.log_prob(tail, w), large.log_prob(tail, w)))
+    }
+}
+
 impl Decoder {
     pub fn new(trie: LexTrie, lm_small: NGramLm, lm_large: NGramLm, config: DecoderConfig) -> Self {
-        Decoder { trie, lm_small, lm_large, config }
+        let csr = trie.to_csr();
+        Decoder { trie, lm_small, lm_large, config, csr, kernel: DecodeKernel::Auto }
+    }
+
+    /// Rung used by [`decode`](Self::decode) / [`decode_batch`](Self::decode_batch).
+    pub fn kernel(&self) -> DecodeKernel {
+        self.kernel
+    }
+
+    /// Override the default `Auto` rung (benches and tests pin rungs per
+    /// instance because `QUANTASR_DECODE_KERNEL` is parsed once per
+    /// process).
+    pub fn with_kernel(mut self, kernel: DecodeKernel) -> Self {
+        self.kernel = kernel;
+        self
     }
 
     /// Decode `[t, num_labels]` log-posteriors into the best word sequence.
     pub fn decode(&self, log_probs: &[f32], num_labels: usize) -> Hypothesis {
-        let beams = self.run_beams_impl(log_probs, num_labels);
+        self.decode_with_kernel(log_probs, num_labels, self.kernel)
+    }
+
+    /// [`decode`](Self::decode) on an explicit kernel rung.
+    pub fn decode_with_kernel(
+        &self,
+        log_probs: &[f32],
+        num_labels: usize,
+        kernel: DecodeKernel,
+    ) -> Hypothesis {
+        let beams = self.run_beams(log_probs, num_labels, kernel, &mut LmCache::default());
+        self.pick_best(&beams)
+    }
+
+    /// Decode a flush of utterances, sharing the LM memo (and per-thread
+    /// scratch) across them — the batched form the decode pool calls.
+    /// Each job is `(log_probs, num_labels)`.
+    pub fn decode_batch(&self, jobs: &[(&[f32], usize)]) -> Vec<Hypothesis> {
+        self.decode_batch_with_kernel(jobs, self.kernel)
+    }
+
+    /// [`decode_batch`](Self::decode_batch) on an explicit kernel rung.
+    pub fn decode_batch_with_kernel(
+        &self,
+        jobs: &[(&[f32], usize)],
+        kernel: DecodeKernel,
+    ) -> Vec<Hypothesis> {
+        let mut cache = LmCache::default();
+        jobs.iter()
+            .map(|&(lp, labels)| {
+                let beams = self.run_beams(lp, labels, kernel, &mut cache);
+                self.pick_best(&beams)
+            })
+            .collect()
+    }
+
+    fn pick_best(&self, beams: &[RawBeam]) -> Hypothesis {
         let cfg = &self.config;
         // Final: prefer complete hypotheses (trie at root); rescore with
         // the large LM.
-        let score = |k: &Key, e: &Entry| {
-            e.acoustic()
-                + cfg.lm_weight_large * e.lm_large
-                + cfg.word_insertion_bonus * k.words.len() as f64
+        let score = |b: &RawBeam| {
+            b.acoustic()
+                + cfg.lm_weight_large * b.lm_large
+                + cfg.word_insertion_bonus * b.words.len() as f64
         };
         let best = beams
             .iter()
-            .filter(|(k, _)| k.node == 0)
-            .max_by(|a, b| score(a.0, a.1).partial_cmp(&score(b.0, b.1)).unwrap())
-            .or_else(|| {
-                beams
-                    .iter()
-                    .max_by(|a, b| score(a.0, a.1).partial_cmp(&score(b.0, b.1)).unwrap())
-            });
+            .filter(|b| b.node == 0)
+            .max_by(|a, b| score(a).partial_cmp(&score(b)).unwrap())
+            .or_else(|| beams.iter().max_by(|a, b| score(a).partial_cmp(&score(b)).unwrap()));
         match best {
-            Some((k, e)) => Hypothesis {
-                words: k.words.clone(),
-                acoustic: e.acoustic(),
-                lm_small: e.lm_small,
-                lm_large: e.lm_large,
+            Some(b) => Hypothesis {
+                words: b.words.clone(),
+                acoustic: b.acoustic(),
+                lm_small: b.lm_small,
+                lm_large: b.lm_large,
             },
             None => Hypothesis::default(),
         }
     }
 
-    /// Time-synchronous beam propagation (the core of decode/decode_nbest).
-    fn run_beams_impl(&self, log_probs: &[f32], num_labels: usize) -> HashMap<Key, Entry> {
+    fn run_beams(
+        &self,
+        log_probs: &[f32],
+        num_labels: usize,
+        kernel: DecodeKernel,
+        cache: &mut LmCache,
+    ) -> Vec<RawBeam> {
+        match kernel.resolve() {
+            DecodeKernel::Reference => self.run_beams_reference(log_probs, num_labels),
+            k => SCRATCH.with(|s| {
+                self.run_beams_soa(log_probs, num_labels, k, &mut s.borrow_mut(), cache)
+            }),
+        }
+    }
+
+    /// The seed per-hypothesis HashMap search — the reference rung.
+    fn run_beams_reference(&self, log_probs: &[f32], num_labels: usize) -> Vec<RawBeam> {
         let cfg = &self.config;
         let t = log_probs.len() / num_labels.max(1);
         let mut beams: HashMap<Key, Entry> = HashMap::new();
@@ -179,8 +511,7 @@ impl Decoder {
                     }
                     let v = base + p_s;
                     // 3a) continue inside the word.
-                    let k_cont =
-                        Key { node: child, last: phone, words: key.words.clone() };
+                    let k_cont = Key { node: child, last: phone, words: key.words.clone() };
                     {
                         let n = next.entry(k_cont).or_insert_with(Entry::new);
                         if v > n.lnb {
@@ -220,6 +551,159 @@ impl Decoder {
             beams = items.into_iter().collect();
         }
         beams
+            .into_iter()
+            .map(|(k, e)| RawBeam {
+                node: k.node,
+                words: k.words,
+                lb: e.lb,
+                lnb: e.lnb,
+                lm_small: e.lm_small,
+                lm_large: e.lm_large,
+            })
+            .collect()
+    }
+
+    /// The SoA engine: same recurrence as the reference, expressed over
+    /// beam lanes.  Deterministic by construction — lanes are visited in
+    /// insertion order, so log-sum-exp accumulation order is fixed and
+    /// every SoA rung produces bit-identical results.
+    fn run_beams_soa(
+        &self,
+        log_probs: &[f32],
+        num_labels: usize,
+        kernel: DecodeKernel,
+        s: &mut SoaScratch,
+        cache: &mut LmCache,
+    ) -> Vec<RawBeam> {
+        let cfg = &self.config;
+        let t = log_probs.len() / num_labels.max(1);
+        let hmax = (self.lm_small.order.max(self.lm_large.order) - 1).min(lm::MAX_ORDER - 1);
+
+        s.arena.reset();
+        s.cur.clear();
+        s.cur.push(0, BLANK as u32, ROOT, 0.0, NEG_INF, 0.0, 0.0);
+
+        for i in 0..t {
+            let row = &log_probs[i * num_labels..(i + 1) * num_labels];
+            kernel::prep_row(kernel, row, cfg.phone_floor, &mut s.row64, &mut s.active);
+            s.nxt.clear();
+            s.slot.clear();
+
+            for li in 0..s.cur.len() {
+                let node = s.cur.node[li];
+                let last = s.cur.last[li];
+                let pref = s.cur.pref[li];
+                let lb = s.cur.lb[li];
+                let lnb = s.cur.lnb[li];
+                let lms = s.cur.lms[li];
+                let lml = s.cur.lml[li];
+                let total = lse(lb, lnb);
+                // 1) blank: state unchanged.
+                {
+                    let j = upsert(&mut s.slot, &mut s.nxt, node, last, pref);
+                    let v = total + s.row64[BLANK];
+                    if v > s.nxt.lb[j] {
+                        s.nxt.lms[j] = lms;
+                        s.nxt.lml[j] = lml;
+                    }
+                    s.nxt.lb[j] = lse(s.nxt.lb[j], v);
+                }
+                // 2) repeat last emitted phone (stays in the same prefix).
+                if last != BLANK as u32 && lnb > NEG_INF {
+                    let j = upsert(&mut s.slot, &mut s.nxt, node, last, pref);
+                    let v = lnb + s.row64[last as usize];
+                    if v > s.nxt.lnb[j] {
+                        s.nxt.lms[j] = lms;
+                        s.nxt.lml[j] = lml;
+                    }
+                    s.nxt.lnb[j] = lse(s.nxt.lnb[j], v);
+                }
+                // 3) extend along trie arcs (CSR walk, floor mask from
+                //    prep_row instead of a per-hypothesis compare).
+                let xlo = self.csr.exit_off[node as usize] as usize;
+                let xhi = self.csr.exit_off[node as usize + 1] as usize;
+                let mut tail_buf = [0u32; lm::MAX_ORDER];
+                let mut tail_len = usize::MAX; // filled lazily at first boundary
+                for x in xlo..xhi {
+                    let phone = self.csr.exit_phone[x];
+                    if !s.active[phone as usize] {
+                        continue;
+                    }
+                    let base = if phone == last { lb } else { total };
+                    if base <= NEG_INF {
+                        continue;
+                    }
+                    let child = self.csr.exit_child[x];
+                    let v = base + s.row64[phone as usize];
+                    // 3a) continue inside the word.
+                    {
+                        let j = upsert(&mut s.slot, &mut s.nxt, child, phone, pref);
+                        if v > s.nxt.lnb[j] {
+                            s.nxt.lms[j] = lms;
+                            s.nxt.lml[j] = lml;
+                        }
+                        s.nxt.lnb[j] = lse(s.nxt.lnb[j], v);
+                    }
+                    // 3b) word boundary: emit every word ending here.
+                    let wlo = self.csr.word_off[child as usize] as usize;
+                    let whi = self.csr.word_off[child as usize + 1] as usize;
+                    for wi in wlo..whi {
+                        let w = self.csr.word_id[wi];
+                        if tail_len == usize::MAX {
+                            tail_len = s.arena.tail(pref, &mut tail_buf, hmax);
+                        }
+                        let (ls, ll) =
+                            cache.score(&self.lm_small, &self.lm_large, &tail_buf[..tail_len], w);
+                        let npref = s.arena.child(pref, w);
+                        let j = upsert(&mut s.slot, &mut s.nxt, 0, phone, npref);
+                        if v > s.nxt.lnb[j] {
+                            s.nxt.lms[j] = lms + ls;
+                            s.nxt.lml[j] = lml + ll;
+                        }
+                        s.nxt.lnb[j] = lse(s.nxt.lnb[j], v);
+                    }
+                }
+            }
+
+            // Prune by acoustic + small-LM + insertion bonus: partial
+            // select of the top `beam` lanes, then restore insertion order
+            // so accumulation order stays deterministic next frame.
+            let n = s.nxt.len();
+            let k = cfg.beam.max(1).min(n);
+            if n > k {
+                s.score.clear();
+                for j in 0..n {
+                    s.score.push(
+                        lse(s.nxt.lb[j], s.nxt.lnb[j])
+                            + cfg.lm_weight_small * s.nxt.lms[j]
+                            + cfg.word_insertion_bonus
+                                * s.arena.depth[s.nxt.pref[j] as usize] as f64,
+                    );
+                }
+                s.order.clear();
+                s.order.extend(0..n as u32);
+                let SoaScratch { ref mut order, ref score, .. } = *s;
+                order.select_nth_unstable_by(k - 1, |&a, &b| {
+                    score[b as usize].partial_cmp(&score[a as usize]).unwrap()
+                });
+                order.truncate(k);
+                order.sort_unstable();
+                s.cur.gather_from(&s.nxt, &s.order);
+            } else {
+                std::mem::swap(&mut s.cur, &mut s.nxt);
+            }
+        }
+
+        (0..s.cur.len())
+            .map(|li| RawBeam {
+                node: s.cur.node[li],
+                words: s.arena.words_of(s.cur.pref[li]),
+                lb: s.cur.lb[li],
+                lnb: s.cur.lnb[li],
+                lm_small: s.cur.lms[li],
+                lm_large: s.cur.lml[li],
+            })
+            .collect()
     }
 
     /// N-best list (rescored, deduplicated by word sequence, best first).
@@ -231,16 +715,17 @@ impl Decoder {
         num_labels: usize,
         n: usize,
     ) -> Vec<Hypothesis> {
-        let beams = self.run_beams_impl(log_probs, num_labels);
+        let beams =
+            self.run_beams(log_probs, num_labels, self.kernel, &mut LmCache::default());
         let cfg = &self.config;
         let mut items: Vec<Hypothesis> = beams
             .into_iter()
-            .filter(|(k, _)| k.node == 0)
-            .map(|(k, e)| Hypothesis {
-                words: k.words,
-                acoustic: e.acoustic(),
-                lm_small: e.lm_small,
-                lm_large: e.lm_large,
+            .filter(|b| b.node == 0)
+            .map(|b| Hypothesis {
+                acoustic: b.acoustic(),
+                words: b.words,
+                lm_small: b.lm_small,
+                lm_large: b.lm_large,
             })
             .collect();
         items.sort_by(|a, b| {
@@ -256,7 +741,6 @@ impl Decoder {
         items.truncate(n);
         items
     }
-
 }
 
 #[cfg(test)]
@@ -265,6 +749,7 @@ mod tests {
     use crate::decoder::trie::LexTrie;
     use crate::sim::dataset::text_corpus;
     use crate::sim::World;
+    use crate::util::prop::{forall, Gen};
 
     fn decoder(beam: usize) -> (Decoder, World) {
         let world = World::new();
@@ -296,6 +781,18 @@ mod tests {
         rows
     }
 
+    /// The SoA rungs available on this CPU (scalar always; SIMD if present).
+    fn soa_rungs() -> Vec<DecodeKernel> {
+        let mut r = vec![DecodeKernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        if crate::quant::gemm::avx2_available() {
+            r.push(DecodeKernel::Avx2);
+        }
+        #[cfg(target_arch = "aarch64")]
+        r.push(DecodeKernel::Neon);
+        r
+    }
+
     #[test]
     fn decodes_clean_word_sequence() {
         let (dec, world) = decoder(24);
@@ -303,15 +800,19 @@ mod tests {
         let phones: Vec<u32> =
             words.iter().flat_map(|&w| world.word_phones(w).to_vec()).collect();
         let lp = ideal_posteriors(&phones, 41);
-        let hyp = dec.decode(&lp, 41);
-        assert_eq!(hyp.words, words, "phones {phones:?}");
+        for k in [DecodeKernel::Reference, DecodeKernel::Auto] {
+            let hyp = dec.decode_with_kernel(&lp, 41, k);
+            assert_eq!(hyp.words, words, "kernel {k:?}, phones {phones:?}");
+        }
     }
 
     #[test]
     fn empty_input_gives_empty_hyp() {
         let (dec, _) = decoder(8);
-        let hyp = dec.decode(&[], 41);
-        assert!(hyp.words.is_empty());
+        for k in [DecodeKernel::Reference, DecodeKernel::Auto] {
+            let hyp = dec.decode_with_kernel(&[], 41, k);
+            assert!(hyp.words.is_empty(), "kernel {k:?}");
+        }
     }
 
     #[test]
@@ -331,8 +832,10 @@ mod tests {
                 *v = -3.7; // ~uniform
             }
         }
-        let hyp = dec.decode(&lp, 41);
-        assert_eq!(hyp.words, words);
+        for k in [DecodeKernel::Reference, DecodeKernel::Auto] {
+            let hyp = dec.decode_with_kernel(&lp, 41, k);
+            assert_eq!(hyp.words, words, "kernel {k:?}");
+        }
     }
 
     #[test]
@@ -367,5 +870,99 @@ mod tests {
         };
         assert!(score(&h_big) >= score(&h_small) - 1e-9);
         assert_eq!(h_big.words, words);
+    }
+
+    /// Random continuous posteriors for parity tests: normal noise around
+    /// a mildly peaked phone path, so beams stay populated but scores are
+    /// continuous (exact ties have ~zero probability — exact ties are the
+    /// only case where reference HashMap order could pick differently).
+    fn random_posteriors(g: &mut Gen, t: usize, num_labels: usize) -> Vec<f32> {
+        let mut lp = Vec::with_capacity(t * num_labels);
+        for _ in 0..t {
+            let peak = g.usize_in(0, num_labels - 1);
+            for l in 0..num_labels {
+                let base = if l == peak { -0.5 } else { -6.0 };
+                lp.push(base + g.rng.normal() as f32 * 1.5);
+            }
+        }
+        lp
+    }
+
+    #[test]
+    fn soa_matches_reference_on_random_posteriors() {
+        // The tentpole property: identical 1-best word sequence and final
+        // scores to ≤1e-9 (bit-equality is impossible — the reference's
+        // HashMap iteration makes its own accumulation order arbitrary).
+        let (dec, _world) = decoder(8);
+        forall("soa vs reference", 25, 0xBEA7, |g: &mut Gen| {
+            let t = g.usize_in(2, 30);
+            let lp = random_posteriors(g, t, 41);
+            let href = dec.decode_with_kernel(&lp, 41, DecodeKernel::Reference);
+            let hsoa = dec.decode_with_kernel(&lp, 41, DecodeKernel::Scalar);
+            assert_eq!(href.words, hsoa.words, "1-best diverged");
+            assert!((href.acoustic - hsoa.acoustic).abs() <= 1e-9, "acoustic");
+            assert!((href.lm_small - hsoa.lm_small).abs() <= 1e-9, "lm_small");
+            assert!((href.lm_large - hsoa.lm_large).abs() <= 1e-9, "lm_large");
+        });
+    }
+
+    #[test]
+    fn soa_rungs_are_bit_identical() {
+        // Scalar vs SIMD rungs share the deterministic lane order and use
+        // exact vector ops only → bit-identical, not just close.
+        let (dec, _world) = decoder(12);
+        forall("soa ladder", 15, 0x51AD, |g: &mut Gen| {
+            let t = g.usize_in(2, 40);
+            let lp = random_posteriors(g, t, 41);
+            let base = dec.decode_with_kernel(&lp, 41, DecodeKernel::Scalar);
+            for k in soa_rungs() {
+                let h = dec.decode_with_kernel(&lp, 41, k);
+                assert_eq!(h.words, base.words, "{k:?}");
+                assert_eq!(h.acoustic.to_bits(), base.acoustic.to_bits(), "{k:?}");
+                assert_eq!(h.lm_small.to_bits(), base.lm_small.to_bits(), "{k:?}");
+                assert_eq!(h.lm_large.to_bits(), base.lm_large.to_bits(), "{k:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn decode_batch_equals_sequential_decode() {
+        // Sharing scratch + LM memo across a flush must not change values.
+        let (dec, _world) = decoder(8);
+        let mut g = Gen::new(0xBA7C);
+        let jobs_data: Vec<Vec<f32>> = (0..6)
+            .map(|_| {
+                let t = 3 + g.usize_in(0, 20);
+                random_posteriors(&mut g, t, 41)
+            })
+            .collect();
+        let jobs: Vec<(&[f32], usize)> = jobs_data.iter().map(|j| (j.as_slice(), 41)).collect();
+        let batch = dec.decode_batch(&jobs);
+        assert_eq!(batch.len(), jobs.len());
+        for (i, &(lp, labels)) in jobs.iter().enumerate() {
+            let single = dec.decode(lp, labels);
+            assert_eq!(batch[i].words, single.words, "job {i}");
+            assert_eq!(batch[i].acoustic.to_bits(), single.acoustic.to_bits(), "job {i}");
+            assert_eq!(batch[i].lm_small.to_bits(), single.lm_small.to_bits(), "job {i}");
+            assert_eq!(batch[i].lm_large.to_bits(), single.lm_large.to_bits(), "job {i}");
+        }
+    }
+
+    #[test]
+    fn prefix_arena_interns_uniquely() {
+        let mut a = PrefixArena::default();
+        a.reset();
+        let p1 = a.child(ROOT, 7);
+        let p2 = a.child(p1, 9);
+        assert_eq!(a.child(ROOT, 7), p1);
+        assert_eq!(a.child(p1, 9), p2);
+        assert_ne!(a.child(ROOT, 9), p1);
+        assert_eq!(a.words_of(p2), vec![7, 9]);
+        assert_eq!(a.depth[p2 as usize], 2);
+        let mut buf = [0u32; lm::MAX_ORDER];
+        assert_eq!(a.tail(p2, &mut buf, 1), 1);
+        assert_eq!(buf[0], 9);
+        assert_eq!(a.tail(p2, &mut buf, 4), 2);
+        assert_eq!(&buf[..2], &[7, 9]);
     }
 }

@@ -68,6 +68,67 @@ impl LexTrie {
     pub fn num_words(&self) -> usize {
         self.num_words
     }
+
+    /// Flatten into the CSR view the struct-of-arrays beam search walks.
+    pub fn to_csr(&self) -> TrieCsr {
+        let n = self.children.len();
+        let mut csr = TrieCsr {
+            exit_off: Vec::with_capacity(n + 1),
+            exit_phone: Vec::new(),
+            exit_child: Vec::new(),
+            word_off: Vec::with_capacity(n + 1),
+            word_id: Vec::new(),
+        };
+        csr.exit_off.push(0);
+        csr.word_off.push(0);
+        for node in 0..n {
+            for &(p, c) in &self.children[node] {
+                csr.exit_phone.push(p);
+                csr.exit_child.push(c);
+            }
+            csr.exit_off.push(csr.exit_phone.len() as u32);
+            csr.word_id.extend_from_slice(&self.terminal[node]);
+            csr.word_off.push(csr.word_id.len() as u32);
+        }
+        csr
+    }
+}
+
+/// CSR (flat offset-array) view of [`LexTrie`].
+///
+/// The per-node `Vec<Vec<...>>` layout of the build-time trie costs one
+/// pointer chase per beam expansion; the CSR view packs all exits and all
+/// terminal words into four contiguous arrays so the SoA beam search
+/// streams them with plain index arithmetic.  Phones within a node keep
+/// the trie's sorted order, so walk order — and therefore log-sum-exp
+/// accumulation order — is identical to iterating `LexTrie::exits`.
+#[derive(Clone, Debug, Default)]
+pub struct TrieCsr {
+    /// exits of `node` live at `exit_off[node]..exit_off[node+1]`.
+    pub exit_off: Vec<u32>,
+    pub exit_phone: Vec<u32>,
+    pub exit_child: Vec<u32>,
+    /// words terminating at `node` live at `word_off[node]..word_off[node+1]`.
+    pub word_off: Vec<u32>,
+    pub word_id: Vec<u32>,
+}
+
+impl TrieCsr {
+    /// (phone, child) exit pairs of `node`, in sorted phone order.
+    #[inline]
+    pub fn exits(&self, node: u32) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let lo = self.exit_off[node as usize] as usize;
+        let hi = self.exit_off[node as usize + 1] as usize;
+        (lo..hi).map(move |i| (self.exit_phone[i], self.exit_child[i]))
+    }
+
+    /// Words ending exactly at `node`.
+    #[inline]
+    pub fn words_at(&self, node: u32) -> &[u32] {
+        let lo = self.word_off[node as usize] as usize;
+        let hi = self.word_off[node as usize + 1] as usize;
+        &self.word_id[lo..hi]
+    }
 }
 
 #[cfg(test)]
@@ -104,6 +165,20 @@ mod tests {
         let t = LexTrie::from_world(&w);
         assert!(t.child(0, 0).is_none()); // blank never enters the lexicon
         assert!(t.child(0, 999).is_none());
+    }
+
+    #[test]
+    fn csr_mirrors_trie_exactly() {
+        let w = World::new();
+        let t = LexTrie::from_world(&w);
+        let csr = t.to_csr();
+        assert_eq!(csr.exit_off.len(), t.num_nodes() + 1);
+        assert_eq!(csr.word_off.len(), t.num_nodes() + 1);
+        for n in 0..t.num_nodes() as u32 {
+            let flat: Vec<(u32, u32)> = csr.exits(n).collect();
+            assert_eq!(flat.as_slice(), t.exits(n), "exit mismatch at node {n}");
+            assert_eq!(csr.words_at(n), t.words_at(n), "word mismatch at node {n}");
+        }
     }
 
     #[test]

@@ -3,6 +3,13 @@
 //! Iterative in-place Cooley–Tukey over `Complex` pairs; sizes are powers
 //! of two (the frontend uses 256).  A precomputed twiddle table makes the
 //! per-frame cost ~O(N log N) with no allocation.
+//!
+//! [`RealFftPlan`] exploits that frontend frames are real-valued: a
+//! length-N real FFT is computed as one length-N/2 *complex* FFT (even
+//! samples packed into the real lane, odd into the imaginary lane) plus
+//! an O(N) untangle pass — half the butterfly work of the complex plan.
+//! [`FftPlan`] remains the reference implementation the frontend's
+//! `reference` kernel rung runs.
 
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Complex {
@@ -104,6 +111,74 @@ impl FftPlan {
     }
 }
 
+/// Real-input FFT plan: the length-`n` real transform via one length-`n/2`
+/// complex FFT plus an O(n) untangle, for the power spectrum only.
+///
+/// Packing: `z[m] = x[2m] + i·x[2m+1]`.  With `Z = FFT_{n/2}(z)`,
+///
+/// ```text
+/// Xe[k] = (Z[k] + conj(Z[n/2−k])) / 2          (spectrum of even samples)
+/// Xo[k] = (Z[k] − conj(Z[n/2−k])) / 2i         (spectrum of odd samples)
+/// X[k]  = Xe[k] + e^{−2πik/n}·Xo[k]
+/// ```
+///
+/// DC and Nyquist are real: `X[0] = Re(Z[0]) + Im(Z[0])`,
+/// `X[n/2] = Re(Z[0]) − Im(Z[0])`.
+///
+/// Not bit-identical to [`FftPlan::power_spectrum`] — the butterflies are
+/// reassociated — but within the frontend's documented ≤1e-3 relative
+/// bound (same contract as the Python-parity golden tests).
+pub struct RealFftPlan {
+    half: FftPlan,
+    n: usize,
+    /// untangle twiddles e^{-2πik/n}, k in 0..n/2.
+    twiddles: Vec<Complex>,
+}
+
+impl RealFftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two() && n >= 4, "real FFT size must be a power of two ≥ 4");
+        let mut twiddles = Vec::with_capacity(n / 2);
+        for k in 0..n / 2 {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            twiddles.push(Complex::new(ang.cos() as f32, ang.sin() as f32));
+        }
+        RealFftPlan { half: FftPlan::new(n / 2), n, twiddles }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Power spectrum of a real signal: `n/2 + 1` values `|FFT(x)|²`
+    /// (zero-padding `x` to n).  `scratch` must be length `n/2`.
+    pub fn power_spectrum(&self, x: &[f32], scratch: &mut [Complex], out: &mut [f32]) {
+        let n = self.n;
+        let h = n / 2;
+        debug_assert!(x.len() <= n);
+        debug_assert_eq!(scratch.len(), h);
+        debug_assert_eq!(out.len(), h + 1);
+        for (m, s) in scratch.iter_mut().enumerate() {
+            let re = if 2 * m < x.len() { x[2 * m] } else { 0.0 };
+            let im = if 2 * m + 1 < x.len() { x[2 * m + 1] } else { 0.0 };
+            *s = Complex::new(re, im);
+        }
+        self.half.forward(scratch);
+        let z0 = scratch[0];
+        let dc = z0.re + z0.im;
+        let nyq = z0.re - z0.im;
+        out[0] = dc * dc;
+        out[h] = nyq * nyq;
+        for k in 1..h {
+            let zk = scratch[k];
+            let zc = scratch[h - k];
+            let xe = Complex::new((zk.re + zc.re) * 0.5, (zk.im - zc.im) * 0.5);
+            let xo = Complex::new((zk.im + zc.im) * 0.5, (zc.re - zk.re) * 0.5);
+            out[k] = xe.add(self.twiddles[k].mul(xo)).norm_sq();
+        }
+    }
+}
+
 /// Naive O(N²) DFT — correctness oracle for tests.
 pub fn dft_power(x: &[f32], n: usize) -> Vec<f32> {
     let mut out = vec![0f32; n / 2 + 1];
@@ -140,6 +215,58 @@ mod tests {
                 assert!((a - b).abs() < tol, "{a} vs {b} (n={n})");
             }
         });
+    }
+
+    #[test]
+    fn real_fft_matches_complex_fft() {
+        // The fused frontend rungs swap FftPlan for RealFftPlan; this is
+        // the documented ≤1e-3 relative bound of that swap.
+        forall("real vs complex fft", 30, 0x2EA1, |g: &mut Gen| {
+            let n = 1 << g.usize_in(3, 8); // 8..256
+            let len = g.usize_in(1, n);
+            let x = g.vec_normal(len, 1.0);
+            let plan = FftPlan::new(n);
+            let rplan = RealFftPlan::new(n);
+            let mut scratch = vec![Complex::default(); n];
+            let mut want = vec![0f32; n / 2 + 1];
+            plan.power_spectrum(&x, &mut scratch, &mut want);
+            let mut rscratch = vec![Complex::default(); n / 2];
+            let mut got = vec![0f32; n / 2 + 1];
+            rplan.power_spectrum(&x, &mut rscratch, &mut got);
+            for (k, (a, b)) in got.iter().zip(&want).enumerate() {
+                let tol = 1e-3 * (1.0 + b.abs());
+                assert!((a - b).abs() < tol, "bin {k}: {a} vs {b} (n={n})");
+            }
+        });
+    }
+
+    #[test]
+    fn real_fft_matches_dft_power() {
+        forall("real fft vs dft", 20, 0x2EA2, |g: &mut Gen| {
+            let n = 1 << g.usize_in(3, 8);
+            let len = g.usize_in(1, n);
+            let x = g.vec_normal(len, 1.0);
+            let rplan = RealFftPlan::new(n);
+            let mut scratch = vec![Complex::default(); n / 2];
+            let mut got = vec![0f32; n / 2 + 1];
+            rplan.power_spectrum(&x, &mut scratch, &mut got);
+            let want = dft_power(&x, n);
+            for (a, b) in got.iter().zip(&want) {
+                let tol = 1e-3 * (1.0 + b.abs());
+                assert!((a - b).abs() < tol, "{a} vs {b} (n={n})");
+            }
+        });
+    }
+
+    #[test]
+    fn real_fft_impulse_is_flat() {
+        let plan = RealFftPlan::new(64);
+        let mut scratch = vec![Complex::default(); 32];
+        let mut out = vec![0f32; 33];
+        plan.power_spectrum(&[1.0], &mut scratch, &mut out);
+        for &v in &out {
+            assert!((v - 1.0).abs() < 1e-5);
+        }
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Frontend kernel ladder: rung selection + the fused mel-dot kernel.
+//!
+//! Same shape as the decode ladder (`decoder/kernel.rs`):
+//!
+//! - `Reference` — the seed frontend path: complex [`FftPlan`]
+//!   power spectrum + dense `MelBank::apply_log` matmul-then-log.
+//!   Bit-identical to the seed frontend; defines the semantics.
+//! - `Scalar` — fused path, scalar arithmetic: real-input FFT
+//!   ([`crate::frontend::fft::RealFftPlan`], half the butterfly work) +
+//!   one fused pass over the *sparse* triangular mel rows (each filter
+//!   only touches its nonzero band) with the log applied in the same
+//!   sweep.
+//! - `Avx2` / `Neon` — the fused path with the band dot product
+//!   vectorized.
+//!
+//! **Bit-exactness contract.**  All *fused* rungs are bit-identical to
+//! each other: the scalar fused dot keeps eight partial accumulators and
+//! reduces them in exactly the horizontal-sum order of the vector rungs
+//! (no FMA — multiplies and adds stay separate ops everywhere).  The
+//! fused path as a whole matches `Reference` to the frontend's documented
+//! ≤1e-3 relative bound (the same tolerance the Python-parity golden
+//! tests use): the real FFT reassociates butterflies and the sparse dot
+//! reassociates the filter sum.
+//!
+//! `QUANTASR_FRONTEND_KERNEL` forces a rung
+//! (`reference|scalar|avx2|neon|auto`), mirroring the other kernel knobs.
+//! Unknown or unavailable values warn and fall back to auto.
+//!
+//! [`FftPlan`]: crate::frontend::fft::FftPlan
+
+/// Which frontend implementation to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrontendKernel {
+    /// Seed complex-FFT + dense mel path — the semantic reference.
+    Reference,
+    /// Real-input FFT + fused sparse mel+log, scalar arithmetic.
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    /// Fused path with the AVX2 band dot.
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    /// Fused path with the NEON band dot.
+    Neon,
+    /// Resolve at runtime: forced rung if set, else best available.
+    Auto,
+}
+
+impl FrontendKernel {
+    /// Concrete rung this resolves to at runtime.  Clamps a forced SIMD
+    /// rung back to `Scalar` when the CPU lacks the feature.
+    pub fn resolve(self) -> FrontendKernel {
+        let k = match self {
+            FrontendKernel::Auto => {
+                forced_frontend_kernel().unwrap_or_else(Self::best_available)
+            }
+            other => other,
+        };
+        #[cfg(target_arch = "x86_64")]
+        if k == FrontendKernel::Avx2 && !crate::quant::gemm::avx2_available() {
+            return FrontendKernel::Scalar;
+        }
+        k
+    }
+
+    fn best_available() -> FrontendKernel {
+        #[cfg(target_arch = "x86_64")]
+        if crate::quant::gemm::avx2_available() {
+            return FrontendKernel::Avx2;
+        }
+        #[cfg(target_arch = "aarch64")]
+        return FrontendKernel::Neon;
+        #[allow(unreachable_code)]
+        FrontendKernel::Scalar
+    }
+}
+
+/// `QUANTASR_FRONTEND_KERNEL` forcing, parsed once per process.
+pub fn forced_frontend_kernel() -> Option<FrontendKernel> {
+    static ONCE: std::sync::OnceLock<Option<FrontendKernel>> = std::sync::OnceLock::new();
+    *ONCE.get_or_init(|| {
+        let v = std::env::var("QUANTASR_FRONTEND_KERNEL").ok()?;
+        match v.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => None,
+            "reference" => Some(FrontendKernel::Reference),
+            "scalar" => Some(FrontendKernel::Scalar),
+            #[cfg(target_arch = "x86_64")]
+            "avx2" if crate::quant::gemm::avx2_available() => Some(FrontendKernel::Avx2),
+            #[cfg(target_arch = "aarch64")]
+            "neon" => Some(FrontendKernel::Neon),
+            other => {
+                eprintln!(
+                    "QUANTASR_FRONTEND_KERNEL='{other}' unknown or unavailable \
+                     on this CPU; using auto"
+                );
+                None
+            }
+        }
+    })
+}
+
+/// Dot product with eight partial accumulators and a fixed reduction
+/// order `((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7))` — the order the AVX2 /
+/// NEON horizontal sums produce, mirrored exactly by the scalar rung so
+/// every fused rung is bit-identical.  Tail elements (len % 8) are added
+/// sequentially after the reduction on every rung.
+pub fn dot8(kernel: FrontendKernel, w: &[f32], p: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), p.len());
+    match kernel.resolve() {
+        #[cfg(target_arch = "x86_64")]
+        FrontendKernel::Avx2 => unsafe { dot8_avx2(w, p) },
+        #[cfg(target_arch = "aarch64")]
+        FrontendKernel::Neon => unsafe { dot8_neon(w, p) },
+        _ => dot8_scalar(w, p),
+    }
+}
+
+fn dot8_scalar(w: &[f32], p: &[f32]) -> f32 {
+    let n = w.len();
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for c in 0..chunks {
+        let base = c * 8;
+        for j in 0..8 {
+            acc[j] += w[base + j] * p[base + j];
+        }
+    }
+    let s0 = acc[0] + acc[4];
+    let s1 = acc[1] + acc[5];
+    let s2 = acc[2] + acc[6];
+    let s3 = acc[3] + acc[7];
+    let mut sum = (s0 + s2) + (s1 + s3);
+    for i in chunks * 8..n {
+        sum += w[i] * p[i];
+    }
+    sum
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot8_avx2(w: &[f32], p: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = w.len();
+    let chunks = n / 8;
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let a = _mm256_loadu_ps(w.as_ptr().add(c * 8));
+        let b = _mm256_loadu_ps(p.as_ptr().add(c * 8));
+        // mul + add kept separate (no FMA) so rungs stay bit-identical.
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(a, b));
+    }
+    let lo = _mm256_castps256_ps128(acc);
+    let hi = _mm256_extractf128_ps::<1>(acc);
+    let s = _mm_add_ps(lo, hi); // (a0+a4, a1+a5, a2+a6, a3+a7)
+    let t = _mm_add_ps(s, _mm_movehl_ps(s, s)); // (s0+s2, s1+s3, ..)
+    let r = _mm_add_ss(t, _mm_shuffle_ps::<1>(t, t));
+    let mut sum = _mm_cvtss_f32(r);
+    for i in chunks * 8..n {
+        sum += w[i] * p[i];
+    }
+    sum
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn dot8_neon(w: &[f32], p: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    let n = w.len();
+    let chunks = n / 8;
+    let mut acc_lo = vdupq_n_f32(0.0);
+    let mut acc_hi = vdupq_n_f32(0.0);
+    for c in 0..chunks {
+        let base = c * 8;
+        let a0 = vld1q_f32(w.as_ptr().add(base));
+        let b0 = vld1q_f32(p.as_ptr().add(base));
+        // vaddq(vmulq) rather than vmlaq: FMLA would fuse the rounding.
+        acc_lo = vaddq_f32(acc_lo, vmulq_f32(a0, b0));
+        let a1 = vld1q_f32(w.as_ptr().add(base + 4));
+        let b1 = vld1q_f32(p.as_ptr().add(base + 4));
+        acc_hi = vaddq_f32(acc_hi, vmulq_f32(a1, b1));
+    }
+    let s = vaddq_f32(acc_lo, acc_hi); // (a0+a4, a1+a5, a2+a6, a3+a7)
+    let t0 = vgetq_lane_f32::<0>(s) + vgetq_lane_f32::<2>(s);
+    let t1 = vgetq_lane_f32::<1>(s) + vgetq_lane_f32::<3>(s);
+    let mut sum = t0 + t1;
+    for i in chunks * 8..n {
+        sum += w[i] * p[i];
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    fn fused_rungs() -> Vec<FrontendKernel> {
+        let mut r = vec![FrontendKernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        if crate::quant::gemm::avx2_available() {
+            r.push(FrontendKernel::Avx2);
+        }
+        #[cfg(target_arch = "aarch64")]
+        r.push(FrontendKernel::Neon);
+        r
+    }
+
+    #[test]
+    fn dot8_rungs_are_bit_identical() {
+        forall("dot8 ladder", 300, 0xD078, |g: &mut Gen| {
+            let n = g.usize_in(0, 70); // hits empty, sub-chunk, and tails
+            let w = g.vec_normal(n, 1.0);
+            let p = g.vec_normal(n, 2.0);
+            let base = dot8_scalar(&w, &p);
+            for k in fused_rungs() {
+                let got = dot8(k, &w, &p);
+                assert_eq!(got.to_bits(), base.to_bits(), "{k:?} n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn dot8_matches_plain_dot_within_tolerance() {
+        forall("dot8 vs naive", 100, 0xD079, |g: &mut Gen| {
+            let n = g.usize_in(1, 129);
+            let w = g.vec_f32(n, 0.0, 1.0);
+            let p = g.vec_f32(n, 0.0, 10.0);
+            let naive: f32 = w.iter().zip(&p).map(|(a, b)| a * b).sum();
+            let got = dot8_scalar(&w, &p);
+            assert!((got - naive).abs() <= 1e-3 * (1.0 + naive.abs()), "{got} vs {naive}");
+        });
+    }
+
+    #[test]
+    fn resolve_never_yields_auto() {
+        assert_ne!(FrontendKernel::Auto.resolve(), FrontendKernel::Auto);
+        assert_eq!(FrontendKernel::Reference.resolve(), FrontendKernel::Reference);
+    }
+}

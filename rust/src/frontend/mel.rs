@@ -1,5 +1,12 @@
 //! Triangular mel filterbank (HTK-style), mirroring `data.py::mel_filterbank`.
+//!
+//! Besides the dense reference matmul ([`MelBank::apply_log`]) the bank
+//! precomputes each filter's nonzero band so the fused path
+//! ([`MelBank::apply_log_fused`]) dots only the triangular support —
+//! ~16 bins instead of 129 per filter — and takes the log in the same
+//! sweep, on the kernel ladder of [`crate::frontend::kernel`].
 
+use crate::frontend::kernel::{dot8, FrontendKernel};
 use crate::frontend::spec;
 
 pub fn mel_scale(f: f64) -> f64 {
@@ -15,6 +22,9 @@ pub struct MelBank {
     pub n_mel: usize,
     pub n_bins: usize,
     pub weights: Vec<f32>,
+    /// Nonzero support of each filter row: (first bin, length).
+    /// Triangular filters are contiguous, so this is exact sparsity.
+    bands: Vec<(u32, u32)>,
 }
 
 impl Default for MelBank {
@@ -42,10 +52,20 @@ impl MelBank {
                 weights[m * n_bins + b] = up.min(down).max(0.0) as f32;
             }
         }
-        MelBank { n_mel, n_bins, weights }
+        let bands = (0..n_mel)
+            .map(|m| {
+                let row = &weights[m * n_bins..(m + 1) * n_bins];
+                let first = row.iter().position(|&w| w != 0.0).unwrap_or(0);
+                let last = row.iter().rposition(|&w| w != 0.0).map_or(first, |l| l + 1);
+                (first as u32, (last - first) as u32)
+            })
+            .collect();
+        MelBank { n_mel, n_bins, weights, bands }
     }
 
-    /// Apply: log(max(power·Wᵀ, floor)) into `out [n_mel]`.
+    /// Apply: log(max(power·Wᵀ, floor)) into `out [n_mel]`.  Dense
+    /// reference — accumulates over every bin in index order; the
+    /// `reference` frontend rung (and the seed pipeline) run this.
     pub fn apply_log(&self, power: &[f32], out: &mut [f32]) {
         debug_assert_eq!(power.len(), self.n_bins);
         debug_assert_eq!(out.len(), self.n_mel);
@@ -55,6 +75,24 @@ impl MelBank {
             for (w, p) in row.iter().zip(power) {
                 acc += w * p;
             }
+            out[m] = acc.max(spec::LOG_FLOOR).ln();
+        }
+    }
+
+    /// Fused sparse mel+log: one pass per filter over its nonzero band
+    /// only, dot on the [`dot8`] ladder, log applied in the same sweep.
+    /// Bit-identical across fused rungs; differs from [`apply_log`] by
+    /// reassociation of the filter sum (≤1e-3 relative, see
+    /// `frontend/kernel.rs`).
+    pub fn apply_log_fused(&self, power: &[f32], out: &mut [f32], kernel: FrontendKernel) {
+        debug_assert_eq!(power.len(), self.n_bins);
+        debug_assert_eq!(out.len(), self.n_mel);
+        let kernel = kernel.resolve();
+        for m in 0..self.n_mel {
+            let (start, len) = self.bands[m];
+            let (start, len) = (start as usize, len as usize);
+            let row = &self.weights[m * self.n_bins + start..m * self.n_bins + start + len];
+            let acc = dot8(kernel, row, &power[start..start + len]);
             out[m] = acc.max(spec::LOG_FLOOR).ln();
         }
     }
@@ -116,5 +154,70 @@ mod tests {
         for &v in &out {
             assert!((v - spec::LOG_FLOOR.ln()).abs() < 1e-6);
         }
+        // fused path honors the floor identically
+        let mut fused = vec![0f32; fb.n_mel];
+        fb.apply_log_fused(&power, &mut fused, FrontendKernel::Scalar);
+        assert_eq!(out, fused);
+    }
+
+    #[test]
+    fn bands_cover_exactly_the_nonzero_support() {
+        let fb = MelBank::new();
+        for m in 0..fb.n_mel {
+            let row = &fb.weights[m * fb.n_bins..(m + 1) * fb.n_bins];
+            let (start, len) = fb.bands[m];
+            let (start, len) = (start as usize, len as usize);
+            for (b, &w) in row.iter().enumerate() {
+                let inside = b >= start && b < start + len;
+                assert!(inside || w == 0.0, "filter {m} bin {b} outside band but nonzero");
+            }
+            assert!(len == 0 || (row[start] != 0.0 && row[start + len - 1] != 0.0));
+        }
+    }
+
+    #[test]
+    fn fused_matches_dense_within_tolerance() {
+        use crate::util::prop::{forall, Gen};
+        let fb = MelBank::new();
+        forall("fused mel vs dense", 100, 0x3E1, |g: &mut Gen| {
+            let power = g.vec_f32(fb.n_bins, 0.0, 50.0);
+            let mut dense = vec![0f32; fb.n_mel];
+            let mut fused = vec![0f32; fb.n_mel];
+            fb.apply_log(&power, &mut dense);
+            fb.apply_log_fused(&power, &mut fused, FrontendKernel::Scalar);
+            for m in 0..fb.n_mel {
+                assert!(
+                    (dense[m] - fused[m]).abs() <= 1e-3,
+                    "filter {m}: {} vs {}",
+                    dense[m],
+                    fused[m]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn fused_rungs_are_bit_identical() {
+        use crate::util::prop::{forall, Gen};
+        let fb = MelBank::new();
+        let mut rungs = vec![FrontendKernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        if crate::quant::gemm::avx2_available() {
+            rungs.push(FrontendKernel::Avx2);
+        }
+        #[cfg(target_arch = "aarch64")]
+        rungs.push(FrontendKernel::Neon);
+        forall("fused mel ladder", 50, 0x3E2, |g: &mut Gen| {
+            let power = g.vec_f32(fb.n_bins, 0.0, 50.0);
+            let mut base = vec![0f32; fb.n_mel];
+            fb.apply_log_fused(&power, &mut base, FrontendKernel::Scalar);
+            for &k in &rungs {
+                let mut got = vec![0f32; fb.n_mel];
+                fb.apply_log_fused(&power, &mut got, k);
+                for m in 0..fb.n_mel {
+                    assert_eq!(got[m].to_bits(), base[m].to_bits(), "{k:?} filter {m}");
+                }
+            }
+        });
     }
 }

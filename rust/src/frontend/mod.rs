@@ -15,9 +15,11 @@
 //! incrementally with the same output as the batch path.
 
 pub mod fft;
+pub mod kernel;
 pub mod mel;
 pub mod pipeline;
 pub mod spec;
 pub mod stacker;
 
-pub use pipeline::{features, Frontend};
+pub use kernel::FrontendKernel;
+pub use pipeline::{features, push_batch, BatchStream, Frontend};

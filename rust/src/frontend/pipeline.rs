@@ -1,10 +1,21 @@
 //! The assembled frontend: batch ([`features`]) and streaming
 //! ([`Frontend`]) versions with identical output.
+//!
+//! The streaming frontend runs on the kernel ladder of
+//! [`crate::frontend::kernel`]: the `reference` rung reproduces the seed
+//! pipeline bit-for-bit (complex FFT + dense mel matmul); the fused rungs
+//! swap in the real-input FFT and the sparse fused mel+log pass, within
+//! the documented ≤1e-3 bound.  [`push_batch`] fans independent streams
+//! out over the shared [`WorkerPool`](crate::util::pool::WorkerPool).
 
-use crate::frontend::fft::{Complex, FftPlan};
+use crate::frontend::fft::{Complex, FftPlan, RealFftPlan};
+use crate::frontend::kernel::FrontendKernel;
 use crate::frontend::mel::MelBank;
 use crate::frontend::spec;
 use crate::frontend::stacker::{stack_all, Stacker};
+
+/// Consumed-sample prefix beyond which the streaming buffer is compacted.
+const COMPACT_AT: usize = 8192;
 
 /// Hann window (symmetric, N−1 denominator — matches numpy/data.py).
 fn hann() -> Vec<f32> {
@@ -29,6 +40,8 @@ pub fn features(wave: &[f32]) -> Vec<f32> {
 }
 
 /// Raw (unstacked) log-mel of a whole waveform — `[t_raw, N_MEL]`.
+/// Always the reference path (complex FFT + dense mel); the golden tests
+/// pin Python parity through this function.
 pub fn log_mel(wave: &[f32]) -> Vec<f32> {
     let win = hann();
     let plan = FftPlan::new(spec::FFT_SIZE);
@@ -65,16 +78,22 @@ pub fn log_mel(wave: &[f32]) -> Vec<f32> {
 pub struct Frontend {
     win: Vec<f32>,
     plan: FftPlan,
+    rplan: RealFftPlan,
     bank: MelBank,
     stacker: Stacker,
+    /// Resolved at construction so every frame of a stream runs one rung.
+    kernel: FrontendKernel,
     /// Pre-emphasized samples not yet consumed by framing.
     buf: Vec<f32>,
+    /// Read cursor into `buf` (compacted periodically, not per frame).
+    pos: usize,
     /// Last raw sample seen (for preemphasis across chunk boundaries).
     prev_sample: f32,
     started: bool,
     // reusable scratch
     frame: Vec<f32>,
     fft_scratch: Vec<Complex>,
+    rfft_scratch: Vec<Complex>,
     power: Vec<f32>,
     mel: Vec<f32>,
 }
@@ -87,19 +106,34 @@ impl Default for Frontend {
 
 impl Frontend {
     pub fn new() -> Self {
+        Self::with_kernel(FrontendKernel::Auto)
+    }
+
+    /// Frontend pinned to a specific kernel rung (resolved immediately;
+    /// `Auto` honors `QUANTASR_FRONTEND_KERNEL`).
+    pub fn with_kernel(kernel: FrontendKernel) -> Self {
         Frontend {
             win: hann(),
             plan: FftPlan::new(spec::FFT_SIZE),
+            rplan: RealFftPlan::new(spec::FFT_SIZE),
             bank: MelBank::new(),
             stacker: Stacker::new(),
+            kernel: kernel.resolve(),
             buf: Vec::new(),
+            pos: 0,
             prev_sample: 0.0,
             started: false,
             frame: vec![0f32; spec::FRAME_LEN],
             fft_scratch: vec![Complex::default(); spec::FFT_SIZE],
+            rfft_scratch: vec![Complex::default(); spec::FFT_SIZE / 2],
             power: vec![0f32; spec::FFT_SIZE / 2 + 1],
             mel: vec![0f32; spec::N_MEL],
         }
+    }
+
+    /// The resolved kernel rung this stream runs.
+    pub fn kernel(&self) -> FrontendKernel {
+        self.kernel
     }
 
     /// Push PCM samples; completed feature frames (FEAT_DIM each) are
@@ -113,14 +147,29 @@ impl Frontend {
             self.prev_sample = s;
         }
         let mut emitted = 0;
-        while self.buf.len() >= spec::FRAME_LEN {
+        while self.buf.len() - self.pos >= spec::FRAME_LEN {
+            let src = &self.buf[self.pos..self.pos + spec::FRAME_LEN];
             for i in 0..spec::FRAME_LEN {
-                self.frame[i] = self.buf[i] * self.win[i];
+                self.frame[i] = src[i] * self.win[i];
             }
-            self.plan.power_spectrum(&self.frame, &mut self.fft_scratch, &mut self.power);
-            self.bank.apply_log(&self.power, &mut self.mel);
+            if self.kernel == FrontendKernel::Reference {
+                self.plan.power_spectrum(&self.frame, &mut self.fft_scratch, &mut self.power);
+                self.bank.apply_log(&self.power, &mut self.mel);
+            } else {
+                self.rplan.power_spectrum(&self.frame, &mut self.rfft_scratch, &mut self.power);
+                self.bank.apply_log_fused(&self.power, &mut self.mel, self.kernel);
+            }
             emitted += self.stacker.push(&self.mel, out);
-            self.buf.drain(0..spec::FRAME_HOP);
+            self.pos += spec::FRAME_HOP;
+        }
+        // Compact the consumed prefix occasionally — O(1) amortized per
+        // sample instead of a memmove per frame (the seed drained per
+        // frame, which at 10ms hop is 100 memmoves/second/stream).
+        if self.pos >= COMPACT_AT {
+            self.buf.copy_within(self.pos.., 0);
+            let live = self.buf.len() - self.pos;
+            self.buf.truncate(live);
+            self.pos = 0;
         }
         emitted
     }
@@ -128,10 +177,30 @@ impl Frontend {
     /// Reset all streaming state (utterance boundary).
     pub fn reset(&mut self) {
         self.buf.clear();
+        self.pos = 0;
         self.prev_sample = 0.0;
         self.started = false;
         self.stacker.reset();
     }
+}
+
+/// One stream's slice of a multi-stream frontend batch.
+pub struct BatchStream<'a> {
+    pub fe: &'a mut Frontend,
+    pub pcm: &'a [f32],
+    pub out: &'a mut Vec<f32>,
+    /// Frames emitted for this stream (filled in by [`push_batch`]).
+    pub emitted: usize,
+}
+
+/// Push PCM into many independent streams at once, fanned out over the
+/// shared worker pool.  Exactly equivalent to calling
+/// [`Frontend::push`] per stream in a loop — streams share no state.
+pub fn push_batch(streams: &mut [BatchStream]) {
+    let n = streams.len();
+    crate::util::pool::WorkerPool::global().run_mut(n, streams, &|_i, s| {
+        s.emitted = s.fe.push(s.pcm, s.out);
+    });
 }
 
 /// Batch oracle built from parts (used in tests against the streaming path).
@@ -157,11 +226,13 @@ mod tests {
 
     #[test]
     fn streaming_equals_batch_any_chunking() {
+        // Reference rung: bit-compatible with the seed pipeline, so the
+        // tight seed tolerance holds against the batch oracle.
         forall("frontend stream==batch", 12, 0xFE, |g: &mut Gen| {
             let n = g.usize_in(0, 6000);
             let wave = tone(n, 440.0 + g.f64_in(0.0, 1000.0), g.seed);
             let want = features_batch_oracle(&wave);
-            let mut fe = Frontend::new();
+            let mut fe = Frontend::with_kernel(FrontendKernel::Reference);
             let mut got = Vec::new();
             let mut i = 0;
             while i < wave.len() {
@@ -174,6 +245,104 @@ mod tests {
                 assert!((a - b).abs() < 1e-4, "{a} vs {b}");
             }
         });
+    }
+
+    #[test]
+    fn fused_streaming_matches_reference_batch() {
+        // Fused rungs (real FFT + sparse mel) hold the documented ≤1e-3
+        // bound against the reference oracle on log-mel features; the
+        // FEAT_SCALE multiply tracks through linearly.
+        forall("fused frontend vs reference", 10, 0xFEF, |g: &mut Gen| {
+            let n = g.usize_in(0, 6000);
+            let wave = tone(n, 300.0 + g.f64_in(0.0, 1500.0), g.seed);
+            let want = features_batch_oracle(&wave);
+            let mut fe = Frontend::with_kernel(FrontendKernel::Scalar);
+            let mut got = Vec::new();
+            fe.push(&wave, &mut got);
+            assert_eq!(got.len(), want.len(), "n={n}");
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn fused_is_chunking_invariant() {
+        // Within one rung the stream is exactly deterministic: frame
+        // contents never depend on how the PCM was chunked.
+        forall("fused chunking invariance", 8, 0xFEC, |g: &mut Gen| {
+            let n = g.usize_in(0, 5000);
+            let wave = tone(n, 800.0, g.seed);
+            let mut whole = Frontend::new();
+            let mut want = Vec::new();
+            whole.push(&wave, &mut want);
+            let mut fe = Frontend::new();
+            let mut got = Vec::new();
+            let mut i = 0;
+            while i < wave.len() {
+                let chunk = g.usize_in(1, 900).min(wave.len() - i);
+                fe.push(&wave[i..i + chunk], &mut got);
+                i += chunk;
+            }
+            assert_eq!(got.len(), want.len(), "n={n}");
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn push_batch_matches_sequential_push() {
+        let waves: Vec<Vec<f32>> =
+            (0..7).map(|i| tone(1500 + 700 * i, 350.0 + 90.0 * i as f64, 7 + i as u64)).collect();
+        // sequential
+        let mut seq: Vec<Vec<f32>> = Vec::new();
+        for w in &waves {
+            let mut fe = Frontend::new();
+            let mut out = Vec::new();
+            fe.push(w, &mut out);
+            seq.push(out);
+        }
+        // batched over the pool
+        let mut fes: Vec<Frontend> = (0..waves.len()).map(|_| Frontend::new()).collect();
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); waves.len()];
+        {
+            let mut streams: Vec<BatchStream> = fes
+                .iter_mut()
+                .zip(waves.iter())
+                .zip(outs.iter_mut())
+                .map(|((fe, w), out)| BatchStream { fe, pcm: w, out, emitted: 0 })
+                .collect();
+            push_batch(&mut streams);
+            for s in &streams {
+                assert_eq!(s.emitted * spec::FEAT_DIM, s.out.len());
+            }
+        }
+        for (a, b) in outs.iter().zip(&seq) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn long_stream_compaction_is_transparent() {
+        // Push far past COMPACT_AT and interleave odd chunk sizes; the
+        // cursor+compaction bookkeeping must never skew framing.
+        let wave = tone(40_000, 600.0, 11); // 2.5s @16k → well past 8192
+        let mut whole = Frontend::with_kernel(FrontendKernel::Reference);
+        let mut want = Vec::new();
+        whole.push(&wave, &mut want);
+        let mut fe = Frontend::with_kernel(FrontendKernel::Reference);
+        let mut got = Vec::new();
+        for chunk in wave.chunks(611) {
+            fe.push(chunk, &mut got);
+        }
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -50,7 +50,7 @@ pub mod registry;
 pub mod weights;
 
 pub use admission::{AdmissionConfig, AdmissionController, ModelStatus, RejectReason};
-pub use quantum::{HolderView, QuantumPolicy};
+pub use quantum::{HolderView, QuantumPolicy, AUTO_QUANTUM};
 pub use registry::ModelRegistry;
 pub use weights::{DrrState, ModelParams};
 

@@ -61,38 +61,51 @@
 use crate::runtime::backend::LaneTag;
 use crate::sched::Priority;
 
+/// `quantum_ticks` sentinel requesting runtime auto-tuning: the engine's
+/// AM worker replaces it with ~[`QuantumPolicy::AUTO_SLO_SECS`] worth of
+/// *measured* flush ticks at startup, so the preemption rotation tracks a
+/// wall-clock SLO regardless of machine speed or batch shape.  A policy
+/// used standalone treats the sentinel as 1 (see
+/// [`QuantumPolicy::quantum`]).
+pub const AUTO_QUANTUM: u32 = 0;
+
 /// The time-slice configuration for lane preemption.
 #[derive(Clone, Copy, Debug)]
 pub struct QuantumPolicy {
     /// Ticks an admitted stream is guaranteed to step before it becomes
-    /// preemptible by an equal-or-lower-priority waiter.  Treated as at
-    /// least 1 (a zero quantum would let a stream be preempted before it
-    /// ever stepped).  Overridable via `QUANTASR_QUANTUM_TICKS`.
+    /// preemptible by an equal-or-lower-priority waiter.  Floored at 1
+    /// when used directly (a zero quantum would let a stream be preempted
+    /// before it ever stepped); [`AUTO_QUANTUM`] (0) asks the engine to
+    /// derive the value from the measured tick rate.  Overridable via
+    /// `QUANTASR_QUANTUM_TICKS` (0 = explicit auto).
     pub quantum_ticks: u32,
 }
 
 impl Default for QuantumPolicy {
+    /// Auto by default: the engine measures its flush-tick interval at
+    /// startup and sets the quantum to ~[`QuantumPolicy::AUTO_SLO_SECS`]
+    /// of wall clock (the old fixed default of 25 ticks assumed the
+    /// 20 ms frame rate; a fast simulator tick made that rotate lanes
+    /// thousands of times a second).  `QUANTASR_QUANTUM_TICKS` pins a
+    /// fixed tick count instead.
     fn default() -> Self {
-        // 25 ticks ≈ 0.5 s of audio at the 20 ms frame rate: long enough
-        // that a healthy stream finishes short utterances unpreempted,
-        // short enough that saturation rotates lanes twice a second.
-        QuantumPolicy { quantum_ticks: env_quantum().unwrap_or(25) }
+        QuantumPolicy { quantum_ticks: env_quantum().unwrap_or(AUTO_QUANTUM) }
     }
 }
 
-/// `QUANTASR_QUANTUM_TICKS` override, parsed once per process.  A
-/// malformed value warns and falls back to the built-in default — tuning
-/// knobs must never panic a serving process.
+/// `QUANTASR_QUANTUM_TICKS` override, parsed once per process (`0` =
+/// explicit auto-tune).  A malformed value warns and falls back to the
+/// built-in default — tuning knobs must never panic a serving process.
 fn env_quantum() -> Option<u32> {
     static ONCE: std::sync::OnceLock<Option<u32>> = std::sync::OnceLock::new();
     *ONCE.get_or_init(|| {
         let v = std::env::var("QUANTASR_QUANTUM_TICKS").ok()?;
         match v.trim().parse::<u32>() {
-            Ok(n) if n >= 1 => Some(n),
+            Ok(n) => Some(n),
             _ => {
                 eprintln!(
-                    "QUANTASR_QUANTUM_TICKS='{v}' is not a positive integer; \
-                     using the built-in default"
+                    "QUANTASR_QUANTUM_TICKS='{v}' is not a tick count \
+                     (u32; 0 = auto); using the built-in default"
                 );
                 None
             }
@@ -113,6 +126,17 @@ pub struct HolderView {
 }
 
 impl QuantumPolicy {
+    /// Wall-clock target between preemption rotations when the quantum is
+    /// auto-derived ([`AUTO_QUANTUM`]): the engine sets `quantum_ticks`
+    /// to roughly this many seconds of measured flush ticks.
+    pub const AUTO_SLO_SECS: f64 = 0.5;
+
+    /// True when the engine should derive the quantum from the measured
+    /// tick rate at startup ([`AUTO_QUANTUM`] sentinel).
+    pub fn is_auto(&self) -> bool {
+        self.quantum_ticks == AUTO_QUANTUM
+    }
+
     /// Effective quantum (the configured value, floored at 1 tick).
     pub fn quantum(&self) -> u32 {
         self.quantum_ticks.max(1)
@@ -179,6 +203,14 @@ mod tests {
         // a more-exhausted interactive one.
         let holders = [h(1, Priority::Interactive, 30), h(2, Priority::Bulk, 4)];
         assert_eq!(p.select_victim(&holders, Priority::Interactive), Some(1));
+    }
+
+    #[test]
+    fn auto_sentinel_is_detected_and_floored() {
+        let p = QuantumPolicy { quantum_ticks: AUTO_QUANTUM };
+        assert!(p.is_auto());
+        assert_eq!(p.quantum(), 1, "standalone use of the sentinel still progresses");
+        assert!(!QuantumPolicy { quantum_ticks: 8 }.is_auto());
     }
 
     #[test]

@@ -170,6 +170,32 @@ impl WorkerPool {
         // chunk writes are ordered before its re-acquisition of the
         // mutex).
     }
+
+    /// Like [`run`](Self::run), but chunk `c` gets exclusive `&mut`
+    /// access to `items[c]` — the fan-out shape multi-stream frontend
+    /// batches use (one independently mutated `Frontend` per stream).
+    ///
+    /// SAFETY argument: `run` dispatches every chunk index exactly once
+    /// (`runs_every_chunk_exactly_once` below), indices are in bounds by
+    /// construction, and `run` does not return while any executor is
+    /// still inside the task — so no two executors ever alias an
+    /// element and no borrow outlives this call.
+    pub fn run_mut<T: Send>(
+        &self,
+        nthreads: usize,
+        items: &mut [T],
+        task: &(dyn Fn(usize, &mut T) + Sync),
+    ) {
+        struct SendPtr<U>(*mut U);
+        unsafe impl<U> Send for SendPtr<U> {}
+        unsafe impl<U> Sync for SendPtr<U> {}
+        let base = SendPtr(items.as_mut_ptr());
+        let n = items.len();
+        self.run(nthreads, n, &move |c| {
+            let item = unsafe { &mut *base.0.add(c) };
+            task(c, item);
+        });
+    }
 }
 
 /// Closes the current job on drop — including when the submitting
@@ -311,6 +337,30 @@ mod tests {
             for (i, h) in hits.iter().enumerate() {
                 assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i} of {chunks}");
             }
+        }
+    }
+
+    #[test]
+    fn run_mut_gives_each_item_exclusive_access() {
+        let pool = WorkerPool::new(3);
+        for &n in &[0usize, 1, 7, 97] {
+            let mut items: Vec<u64> = (0..n as u64).collect();
+            pool.run_mut(4, &mut items, &|i, v| {
+                *v = v.wrapping_mul(3).wrapping_add(i as u64);
+            });
+            for (i, v) in items.iter().enumerate() {
+                assert_eq!(*v, (i as u64).wrapping_mul(3).wrapping_add(i as u64), "item {i}/{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_mut_serial_path_matches() {
+        let pool = WorkerPool::new(0);
+        let mut items = vec![1u32; 12];
+        pool.run_mut(1, &mut items, &|i, v| *v += i as u32);
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(*v, 1 + i as u32);
         }
     }
 
