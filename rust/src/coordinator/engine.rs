@@ -65,14 +65,16 @@
 //! ([`ClassQueue`]): an `Interactive` finalize jumps a `Bulk` backlog.
 
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::batcher::{schedule_cmp, BatchPolicy, ClassQueue, Decision, LaneAllocator};
+use crate::util::fault::{self, FaultPlan, FaultPoint};
 use crate::coordinator::metrics::Metrics;
 use crate::decoder::Decoder;
 use crate::frontend::{spec, Frontend};
@@ -113,6 +115,23 @@ pub struct EngineConfig {
     /// (missing entries default to `policy.max_batch`).
     /// `--model-lanes 32,8`.
     pub model_lanes: Vec<usize>,
+    /// Reap a stream whose client has gone quiet: no frames arrived (and
+    /// none are pending) for this long ⇒ cancelled with a `C` reason at
+    /// the next tick boundary, freeing its admission slot and lane.
+    /// `None` = no idle reaping.  `--stream-idle-ms` /
+    /// `QUANTASR_STREAM_IDLE_MS` (0 = disabled).
+    pub stream_idle: Option<Duration>,
+    /// Hard cap on one utterance's wall-clock lifetime, open → finish.
+    /// Streams past it are cancelled at the next tick boundary (streams
+    /// already finalizing are left to finish normally).  `None` = no
+    /// deadline.  `--stream-deadline-ms` / `QUANTASR_STREAM_DEADLINE_MS`
+    /// (0 = disabled).
+    pub stream_deadline: Option<Duration>,
+    /// Deterministic fault-injection plan (chaos testing).  Defaults to
+    /// the process-wide `QUANTASR_FAULTS` plan; tests install their own
+    /// per-engine plan for isolation.  `None` ⇒ every injection point is
+    /// a single branch.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for EngineConfig {
@@ -126,8 +145,38 @@ impl Default for EngineConfig {
             tick_budget: env_tick_budget().unwrap_or(0),
             model_weights: env_model_weights().unwrap_or_default(),
             model_lanes: Vec::new(),
+            stream_idle: env_stream_ms("QUANTASR_STREAM_IDLE_MS", &ENV_IDLE),
+            stream_deadline: env_stream_ms("QUANTASR_STREAM_DEADLINE_MS", &ENV_DEADLINE),
+            faults: fault::env_fault_plan(),
         }
     }
+}
+
+static ENV_IDLE: std::sync::OnceLock<Option<Duration>> = std::sync::OnceLock::new();
+static ENV_DEADLINE: std::sync::OnceLock<Option<Duration>> = std::sync::OnceLock::new();
+
+/// Shared parser for the stream-lifetime env knobs, once per process:
+/// the value goes through the validated [`parse_deadline_ms`] grammar
+/// (finite, non-negative milliseconds — `Duration::from_secs_f64` would
+/// panic on `inf`), `0` disables the limit, and a malformed value warns
+/// and disables — lifetime knobs must never panic a serving process.
+///
+/// [`parse_deadline_ms`]: crate::coordinator::batcher::parse_deadline_ms
+fn env_stream_ms(
+    var: &'static str,
+    once: &'static std::sync::OnceLock<Option<Duration>>,
+) -> Option<Duration> {
+    *once.get_or_init(|| {
+        let v = std::env::var(var).ok()?;
+        match crate::coordinator::batcher::parse_deadline_ms(&v) {
+            Some(d) if !d.is_zero() => Some(d),
+            Some(_) => None, // explicit 0 = disabled
+            None => {
+                eprintln!("{var}='{v}' is not a non-negative number of milliseconds; disabled");
+                None
+            }
+        }
+    })
 }
 
 /// `QUANTASR_TICK_BUDGET` override, parsed once per process.  A malformed
@@ -153,14 +202,16 @@ fn env_tick_budget() -> Option<usize> {
 impl EngineConfig {
     /// Apply the shared serving CLI flags (`--max-batch`, `--deadline-ms`,
     /// `--quantum`, `--max-streams`, `--tick-budget`, `--model-weights`,
-    /// `--model-lanes`), warn-don't-panic: the deadline goes through the
-    /// validated [`parse_deadline_ms`] grammar (finite, non-negative —
-    /// `Duration::from_secs_f64` would panic on `inf`), the quantum
-    /// parses directly as `u32`, and the share lists go through the
-    /// validated [`parse_share_list`] grammar.  Absent flags fall through
-    /// to the env-overridable defaults (`QUANTASR_BATCH_DEADLINE_MS`,
-    /// `QUANTASR_QUANTUM_TICKS`, `QUANTASR_TICK_BUDGET`,
-    /// `QUANTASR_MODEL_WEIGHTS`).
+    /// `--model-lanes`, `--stream-idle-ms`, `--stream-deadline-ms`),
+    /// warn-don't-panic: the deadline and stream-lifetime flags go
+    /// through the validated [`parse_deadline_ms`] grammar (finite,
+    /// non-negative — `Duration::from_secs_f64` would panic on `inf`),
+    /// the quantum parses directly as `u32`, and the share lists go
+    /// through the validated [`parse_share_list`] grammar.  Absent flags
+    /// fall through to the env-overridable defaults
+    /// (`QUANTASR_BATCH_DEADLINE_MS`, `QUANTASR_QUANTUM_TICKS`,
+    /// `QUANTASR_TICK_BUDGET`, `QUANTASR_MODEL_WEIGHTS`,
+    /// `QUANTASR_STREAM_IDLE_MS`, `QUANTASR_STREAM_DEADLINE_MS`).
     ///
     /// [`parse_deadline_ms`]: crate::coordinator::batcher::parse_deadline_ms
     pub fn apply_cli_flags(&mut self, args: &crate::util::cli::Args) {
@@ -205,7 +256,38 @@ impl EngineConfig {
                 ),
             }
         }
+        for (flag, field) in [
+            ("stream-idle-ms", &mut self.stream_idle),
+            ("stream-deadline-ms", &mut self.stream_deadline),
+        ] {
+            if let Some(v) = args.get(flag) {
+                match crate::coordinator::batcher::parse_deadline_ms(v) {
+                    Some(d) if !d.is_zero() => *field = Some(d),
+                    Some(_) => *field = None, // explicit 0 = disabled
+                    None => eprintln!(
+                        "--{flag} '{v}' is not a non-negative number of milliseconds; \
+                         keeping the current setting"
+                    ),
+                }
+            }
+        }
     }
+}
+
+/// How a stream's lifetime ended.  Anything but [`StreamEnd::Complete`]
+/// means `words`/`phones` are empty; the server maps the three arms to
+/// the wire's `F` / `C` / `E` result frames (see `docs/PROTOCOL.md`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamEnd {
+    /// Finalized normally: the result carries the decode.
+    Complete,
+    /// Cancelled by the engine (reaper, forced unload, quarantine sweep)
+    /// with a human-readable reason.  The stream's slot and lane were
+    /// released; survivors are unaffected.
+    Cancelled(String),
+    /// The utterance's own processing failed (e.g. a decode panic was
+    /// quarantined).  The engine and every other stream keep serving.
+    Failed(String),
 }
 
 /// Final recognition result for one stream.
@@ -218,6 +300,8 @@ pub struct FinalResult {
     pub num_frames: usize,
     /// finish() called → result ready.
     pub finalize_latency: Duration,
+    /// Completed, cancelled, or failed (see [`StreamEnd`]).
+    pub end: StreamEnd,
 }
 
 /// One row of the live registry snapshot ([`Engine::registry`], also
@@ -235,6 +319,8 @@ pub struct ModelInfo {
     pub live_streams: usize,
     /// Unload in progress: survivors finishing, newcomers rejected.
     pub draining: bool,
+    /// Poisoned by a backend panic: quarantined until unloaded.
+    pub quarantined: bool,
 }
 
 struct StreamSlot<B: AmBackend> {
@@ -246,6 +332,9 @@ struct StreamSlot<B: AmBackend> {
     /// Ticks stepped since the stream last (re)acquired a lane.
     quantum_used: u32,
     opened_at: Instant,
+    /// Last client activity (frames or finish signal) — the idle-reaper
+    /// clock.
+    last_activity: Instant,
     /// Feature frames awaiting the AM, flattened input_dim each.
     pending: VecDeque<Vec<f32>>,
     oldest_enqueue: Option<Instant>,
@@ -284,6 +373,13 @@ struct ModelSlot<B: AmBackend> {
     /// Unload requested: no new admissions; slot torn down when the last
     /// live stream drains.
     draining: bool,
+    /// Poisoned by a backend panic: no admissions, no steps; unload tears
+    /// it down as usual (its streams were cancelled when it tripped).
+    quarantined: bool,
+    /// A bounded-deadline unload expired: the reaper cancels every
+    /// surviving stream at the next tick boundary (one-shot; cleared
+    /// after the sweep).
+    force_cancel: bool,
     /// Fired (one per concurrent `unload_model` caller) at teardown.
     unload_acks: Vec<Sender<()>>,
 }
@@ -298,6 +394,8 @@ impl<B: AmBackend> ModelSlot<B> {
             weight,
             lanes: LaneAllocator::new(lanes),
             draining: false,
+            quarantined: false,
+            force_cancel: false,
             unload_acks: Vec::new(),
         }
     }
@@ -472,6 +570,7 @@ impl<B: AmBackend> Engine<B> {
                     lanes: slot.lanes.capacity(),
                     live_streams: live[id],
                     draining: slot.draining,
+                    quarantined: slot.quarantined,
                 })
             })
             .collect()
@@ -533,6 +632,67 @@ impl<B: AmBackend> Engine<B> {
             .map_err(|_| "engine shut down before the drain completed".to_string())
     }
 
+    /// [`Engine::unload_model`] with a bounded wait: if the drain has not
+    /// completed within `deadline`, either give up with an error
+    /// (`force = false` — the model keeps draining in the background) or
+    /// cancel every surviving stream through the reaper's parking path
+    /// (`force = true` — each survivor's client gets a `C` cancel with a
+    /// reason, the per-model `forced_cancels` metric counts them) and
+    /// block only for the now-unpinned teardown.  This is what keeps a
+    /// stalled client from pinning an operator's unload forever.
+    pub fn unload_model_deadline(
+        &self,
+        model: usize,
+        deadline: Duration,
+        force: bool,
+    ) -> Result<(), String> {
+        let rx = {
+            let mut inner = self.shared.inner.lock().unwrap();
+            match inner.models.get_mut(model) {
+                Some(Some(slot)) => {
+                    let (ack, rx) = channel();
+                    slot.draining = true;
+                    slot.unload_acks.push(ack);
+                    rx
+                }
+                _ => return Err(format!("model {model} is not loaded")),
+            }
+        };
+        self.shared.work_cv.notify_all();
+        match rx.recv_timeout(deadline) {
+            Ok(()) => Ok(()),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err("engine shut down before the drain completed".into())
+            }
+            Err(RecvTimeoutError::Timeout) if !force => {
+                let inner = self.shared.inner.lock().unwrap();
+                let live = inner.streams.values().filter(|sl| sl.model == model).count();
+                Err(format!(
+                    "model {model} still has {live} live stream(s) after \
+                     {} ms; still draining (retry with force to cancel them)",
+                    deadline.as_millis()
+                ))
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                {
+                    let mut inner = self.shared.inner.lock().unwrap();
+                    if let Some(Some(slot)) = inner.models.get_mut(model) {
+                        slot.force_cancel = true;
+                    }
+                }
+                self.shared.work_cv.notify_all();
+                rx.recv()
+                    .map_err(|_| "engine shut down before the forced drain completed".to_string())
+            }
+        }
+    }
+
+    /// The engine's fault-injection plan (for the serving layer's own
+    /// injection points, e.g. the TCP server's corrupt-frame fault).
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.shared.config.faults.clone()
+    }
+
     /// Open a new default stream (model 0, `Priority::Interactive`);
     /// returns its id and the final-result receiver.  The stream is
     /// admitted to an arena lane lazily, when it is first scheduled into
@@ -554,6 +714,7 @@ impl<B: AmBackend> Engine<B> {
         let (tx, rx) = channel();
         let mut inner = self.shared.inner.lock().unwrap();
         let status = match inner.models.get(opts.model) {
+            Some(Some(slot)) if slot.quarantined => ModelStatus::Quarantined,
             Some(Some(slot)) if slot.draining => ModelStatus::Draining,
             Some(Some(_)) => ModelStatus::Loaded,
             _ => ModelStatus::Unknown,
@@ -575,6 +736,7 @@ impl<B: AmBackend> Engine<B> {
                 priority: opts.priority,
                 quantum_used: 0,
                 opened_at: Instant::now(),
+                last_activity: Instant::now(),
                 pending: VecDeque::new(),
                 oldest_enqueue: None,
                 posteriors: Vec::new(),
@@ -603,6 +765,7 @@ impl<B: AmBackend> Engine<B> {
                 bail!("stream {id} already finished");
             }
             let t0 = Instant::now();
+            slot.last_activity = t0;
             slot.frontend.push(pcm, &mut frames);
             self.shared.metrics.add_frontend_compute(t0.elapsed().as_secs_f64());
         }
@@ -646,6 +809,7 @@ impl<B: AmBackend> Engine<B> {
                 offset += d;
             }
             slot.oldest_enqueue.get_or_insert(now);
+            slot.last_activity = now;
             drop(inner);
             self.shared.work_cv.notify_all();
         }
@@ -662,6 +826,7 @@ impl<B: AmBackend> Engine<B> {
         };
         slot.finished = true;
         slot.finish_time = Some(Instant::now());
+        slot.last_activity = Instant::now();
         drop(inner);
         self.shared.work_cv.notify_all();
         Ok(())
@@ -672,7 +837,12 @@ impl<B: AmBackend> Engine<B> {
         let (id, rx) = self.open_stream();
         self.push_audio(id, pcm)?;
         self.finish_stream(id)?;
-        Ok(rx.recv()?)
+        let r = rx.recv()?;
+        match &r.end {
+            StreamEnd::Complete => Ok(r),
+            StreamEnd::Cancelled(why) => bail!("stream {id} cancelled: {why}"),
+            StreamEnd::Failed(why) => bail!("stream {id} failed: {why}"),
+        }
     }
 
     pub fn shutdown(mut self) {
@@ -809,6 +979,8 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
     s.metrics.set_effective_quantum(qpolicy.quantum());
     let mut last_flush: Option<Instant> = None;
     let mut tick_samples: Vec<f64> = Vec::new();
+    // Flush-tick ordinal, the slow-tick fault's deterministic key.
+    let mut tick_no: u64 = 0;
     // Worker-local per-slot execution state.  Boot models' arenas are
     // allocated here — on the worker thread, like every later hot load.
     let mut wm: Vec<Option<LaneIo<B>>> = {
@@ -830,10 +1002,12 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
         let mut inner = s.inner.lock().unwrap();
         // Streams can finish *after* their last frame was computed (the
         // finish() raced the final batch) or with no audio at all — drain
-        // them to the decode queue every tick, before the policy decision;
-        // then tear down any draining model that just lost its last
-        // stream.
+        // them to the decode queue every tick, before the policy decision.
+        // The reaper runs next (expired lifetimes and forced unloads free
+        // their slots at this same boundary), then any draining model
+        // that just lost its last stream is torn down.
         drain_finished(&mut inner, &s);
+        reap_expired(&mut inner, &wm, &s);
         teardown_drained(&mut inner, &mut wm, &s);
         let nm = inner.models.len();
         debug_assert_eq!(nm, wm.len());
@@ -1081,6 +1255,10 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
             .record(lanes_in_use_total as f64 / total_lanes.max(1) as f64);
         drop(inner);
         s.space_cv.notify_all();
+        tick_no += 1;
+        if fault::fire(&s.config.faults, FaultPoint::SlowTick, tick_no) {
+            std::thread::sleep(Duration::from_millis(fault::SLOW_TICK_MS));
+        }
 
         // Batched AM step per model over its granted lanes, in place
         // (lock-free; arenas are worker-local and lane rows belong to
@@ -1099,31 +1277,73 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
             let io = wm[m].as_mut().expect("granted lanes on an unloaded model");
             let tm = Instant::now();
             let lanes_list: Vec<usize> = planned[m].iter().map(|&(_, l)| l).collect();
-            if let Err(e) =
-                io.backend.step_lanes(&mut io.arena, &lanes_list, &io.xbuf, &mut io.ybuf)
-            {
-                // Backend failure (only fallible for the PJRT path):
-                // surface loudly, put the popped frames back at the head
-                // of their queues (no silent truncation of posteriors),
-                // and back off below so a persistently-dead backend
-                // applies backpressure instead of busy-looping.
-                eprintln!(
-                    "am backend '{}' step failed: {e:#}",
-                    io.backend.backend_name()
-                );
-                let d = io.dim;
-                let mut inner = s.inner.lock().unwrap();
-                let now_err = Instant::now();
-                for &(id, lane) in &planned[m] {
-                    if let Some(slot) = inner.streams.get_mut(&id) {
-                        slot.pending.push_front(io.xbuf[lane * d..(lane + 1) * d].to_vec());
-                        slot.oldest_enqueue.get_or_insert(now_err);
-                        slot.quantum_used = slot.quantum_used.saturating_sub(1);
-                    }
+            let faults = &s.config.faults;
+            let step = catch_unwind(AssertUnwindSafe(|| {
+                if fault::fire(faults, FaultPoint::BackendPanic, m as u64) {
+                    panic!("injected backend panic (model {m})");
                 }
-                drop(inner);
-                planned[m].clear();
-                any_failed = true;
+                io.backend.step_lanes(&mut io.arena, &lanes_list, &io.xbuf, &mut io.ybuf)
+            }));
+            match step {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    // Backend failure (only fallible for the PJRT path):
+                    // surface loudly, put the popped frames back at the
+                    // head of their queues (no silent truncation of
+                    // posteriors), and back off below so a
+                    // persistently-dead backend applies backpressure
+                    // instead of busy-looping.
+                    eprintln!(
+                        "am backend '{}' step failed: {e:#}",
+                        io.backend.backend_name()
+                    );
+                    let d = io.dim;
+                    let mut inner = s.inner.lock().unwrap();
+                    let now_err = Instant::now();
+                    for &(id, lane) in &planned[m] {
+                        if let Some(slot) = inner.streams.get_mut(&id) {
+                            slot.pending.push_front(io.xbuf[lane * d..(lane + 1) * d].to_vec());
+                            slot.oldest_enqueue.get_or_insert(now_err);
+                            slot.quantum_used = slot.quantum_used.saturating_sub(1);
+                        }
+                    }
+                    drop(inner);
+                    planned[m].clear();
+                    any_failed = true;
+                }
+                Err(_) => {
+                    // Panic quarantine: the model's arena may be
+                    // half-written, so it can never step again — but the
+                    // process and every other model keep serving.  The
+                    // slot goes `Quarantined` (newcomers rejected with a
+                    // reason), its streams are cancelled through the
+                    // parking path, and an unload tears it down for slot
+                    // reuse as usual.
+                    eprintln!(
+                        "am backend '{}' panicked while stepping model {m}; \
+                         quarantining the model",
+                        io.backend.backend_name()
+                    );
+                    let mut inner = s.inner.lock().unwrap();
+                    if let Some(slot) = inner.models[m].as_mut() {
+                        slot.quarantined = true;
+                    }
+                    let ids: Vec<u64> = inner
+                        .streams
+                        .iter()
+                        .filter(|(_, sl)| sl.model == m)
+                        .map(|(&id, _)| id)
+                        .collect();
+                    for id in ids {
+                        cancel_stream(&mut inner, &wm, id, "model quarantined after a backend panic");
+                    }
+                    s.metrics.add_quarantined_job();
+                    s.metrics.set_quarantined(m);
+                    drop(inner);
+                    s.space_cv.notify_all();
+                    planned[m].clear();
+                    any_failed = true;
+                }
             }
             step_times[m] = tm.elapsed();
         }
@@ -1165,6 +1385,108 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
             }
         }
         drain_finished(&mut inner, &s);
+    }
+}
+
+/// Cancel one live stream (worker thread, engine lock held, tick
+/// boundary): park its lane state through the exact
+/// [`AmBackend::save_lane`] path survivors' eviction/preemption uses —
+/// so the cancellation is invisible to every co-rider's numerics — then
+/// release the lane, free the admission slot, and deliver a
+/// [`StreamEnd::Cancelled`] result with `reason`.  Producers blocked on
+/// this stream's backpressure see "unknown stream" on their next
+/// `space_cv` wakeup (the caller notifies after its sweep).
+fn cancel_stream<B: AmBackend>(
+    inner: &mut Inner<B>,
+    wm: &[Option<LaneIo<B>>],
+    id: u64,
+    reason: &str,
+) {
+    let Some(mut slot) = inner.streams.remove(&id) else {
+        return;
+    };
+    if let Some(lane) = slot.lane.take() {
+        if let Some(io) = wm.get(slot.model).and_then(|w| w.as_ref()) {
+            slot.parked = Some(io.backend.save_lane(&io.arena, lane));
+        }
+        if let Some(m) = inner.models.get_mut(slot.model).and_then(|m| m.as_mut()) {
+            m.lanes.release(lane);
+        }
+    }
+    let _ = slot.result_tx.send(FinalResult {
+        stream_id: id,
+        words: Vec::new(),
+        phones: Vec::new(),
+        num_frames: slot.frames_done,
+        finalize_latency: Duration::ZERO,
+        end: StreamEnd::Cancelled(reason.to_string()),
+    });
+}
+
+/// The reaper (worker thread, engine lock held, tick boundary): enforce
+/// stream lifetimes and expired force-unloads.
+///
+/// - **Forced unload** — a model whose bounded-deadline unload expired
+///   with `force` has every surviving stream cancelled (per-model
+///   `forced_cancels`), which unpins its teardown this same pass.
+/// - **Utterance deadline** — a stream older than
+///   [`EngineConfig::stream_deadline`] that has not signalled finish is
+///   cancelled; streams already finalizing are left to finish normally.
+/// - **Idle timeout** — a stream with no pending frames and no client
+///   activity for [`EngineConfig::stream_idle`] is cancelled (a stream
+///   with frames still queued is the engine's debt, not the client's).
+fn reap_expired<B: AmBackend>(inner: &mut Inner<B>, wm: &[Option<LaneIo<B>>], s: &Shared<B>) {
+    let mut cancelled = false;
+    for m in 0..inner.models.len() {
+        if !matches!(&inner.models[m], Some(slot) if slot.force_cancel) {
+            continue;
+        }
+        let ids: Vec<u64> =
+            inner.streams.iter().filter(|(_, sl)| sl.model == m).map(|(&id, _)| id).collect();
+        for id in ids {
+            cancel_stream(inner, wm, id, "model unloading (forced)");
+            s.metrics.add_forced_cancel(m);
+            cancelled = true;
+        }
+        if let Some(Some(slot)) = inner.models.get_mut(m) {
+            slot.force_cancel = false;
+        }
+    }
+    let (idle, deadline) = (s.config.stream_idle, s.config.stream_deadline);
+    if idle.is_some() || deadline.is_some() {
+        let now = Instant::now();
+        let expired: Vec<(u64, String)> = inner
+            .streams
+            .iter()
+            .filter(|(_, sl)| !sl.finished)
+            .filter_map(|(&id, sl)| {
+                if let Some(d) = deadline {
+                    if now.duration_since(sl.opened_at) > d {
+                        return Some((
+                            id,
+                            format!("utterance exceeded its deadline ({} ms)", d.as_millis()),
+                        ));
+                    }
+                }
+                if let Some(t) = idle {
+                    if sl.pending.is_empty() && now.duration_since(sl.last_activity) > t {
+                        return Some((
+                            id,
+                            format!("stream idle past the timeout ({} ms)", t.as_millis()),
+                        ));
+                    }
+                }
+                None
+            })
+            .collect();
+        for (id, reason) in expired {
+            cancel_stream(inner, wm, id, &reason);
+            s.metrics.add_reaped();
+            cancelled = true;
+        }
+    }
+    if cancelled {
+        s.space_cv.notify_all();
     }
 }
 
@@ -1232,20 +1554,57 @@ fn decode_worker<B: AmBackend>(s: Arc<Shared<B>>, decoder: Arc<Decoder>) {
             .iter()
             .map(|j| (j.posteriors.as_slice(), (j.posteriors.len() / j.num_frames.max(1)).max(1)))
             .collect();
-        let hyps = decoder.decode_batch(&batch);
+        // Panic quarantine, batch level: if the shared-LmCache batch path
+        // unwinds, retry each job alone so one poisoned utterance fails
+        // by itself instead of dragging its flush-mates down with it.
+        let hyps: Vec<Option<_>> =
+            match catch_unwind(AssertUnwindSafe(|| decoder.decode_batch(&batch))) {
+                Ok(h) => h.into_iter().map(Some).collect(),
+                Err(_) => batch
+                    .iter()
+                    .map(|&(p, l)| {
+                        catch_unwind(AssertUnwindSafe(|| decoder.decode_batch(&[(p, l)]).pop()))
+                            .ok()
+                            .flatten()
+                    })
+                    .collect(),
+            };
         s.metrics.add_decode_compute(t0.elapsed().as_secs_f64());
         for (job, hyp) in jobs.into_iter().zip(hyps) {
-            let labels = (job.posteriors.len() / job.num_frames.max(1)).max(1);
-            let phones = crate::decoder::ctc::greedy(&job.posteriors, labels);
+            let injected = fault::fire(&s.config.faults, FaultPoint::DecodePanic, job.stream_id);
+            // Panic quarantine, job level: the greedy phone pass (and the
+            // injected panic) ride inside the guard — posteriors are
+            // per-utterance data, so a panic here is this job's fault and
+            // only this job fails.
+            let finalized = catch_unwind(AssertUnwindSafe(|| {
+                if injected {
+                    panic!("injected decode panic (stream {})", job.stream_id);
+                }
+                let hyp = hyp.expect("batch decode panicked for this job");
+                let labels = (job.posteriors.len() / job.num_frames.max(1)).max(1);
+                let phones = crate::decoder::ctc::greedy(&job.posteriors, labels);
+                (hyp.words, phones)
+            }))
+            .ok();
             s.metrics.add_utterance();
             let latency = job.finish_time.elapsed();
             s.metrics.finalize_latency.record_duration(latency);
+            let (words, phones, end) = match finalized {
+                Some((words, phones)) => (words, phones, StreamEnd::Complete),
+                None => {
+                    s.metrics.add_quarantined_job();
+                    let why =
+                        format!("decode panicked for stream {}; utterance quarantined", job.stream_id);
+                    (Vec::new(), Vec::new(), StreamEnd::Failed(why))
+                }
+            };
             let _ = job.result_tx.send(FinalResult {
                 stream_id: job.stream_id,
-                words: hyp.words,
+                words,
                 phones,
                 num_frames: job.num_frames,
                 finalize_latency: latency,
+                end,
             });
         }
     }

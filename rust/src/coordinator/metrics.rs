@@ -84,6 +84,10 @@ pub struct ModelStats {
     /// Planned lane-steps deferred to a later tick by the weighted
     /// budget (demand the DRR grant didn't cover this tick).
     pub deferrals: u64,
+    /// Surviving streams cancelled by an expired force-unload deadline.
+    pub forced_cancels: u64,
+    /// Poisoned by a backend panic (cleared when the slot is reused).
+    pub quarantined: bool,
 }
 
 impl ModelStats {
@@ -135,6 +139,15 @@ pub struct Metrics {
     /// flush ticks where ready streams existed but none could be placed —
     /// a scheduler invariant violation (debug builds also assert)
     pub sched_stalls: Mutex<u64>,
+    /// streams cancelled by the lifetime reaper (idle timeout or
+    /// utterance deadline)
+    pub reaped_streams: Mutex<u64>,
+    /// streams cancelled by an expired force-unload deadline (sum of the
+    /// per-model rows)
+    pub forced_cancels: Mutex<u64>,
+    /// panics quarantined instead of taking the engine down (decode jobs
+    /// + backend steps)
+    pub quarantined_jobs: Mutex<u64>,
     /// per-model lane accounting (index = model id)
     pub per_model: Mutex<Vec<ModelStats>>,
 }
@@ -228,6 +241,35 @@ impl Metrics {
         *self.sched_stalls.lock().unwrap() += 1;
     }
 
+    /// One stream cancelled by the lifetime reaper.
+    pub fn add_reaped(&self) {
+        *self.reaped_streams.lock().unwrap() += 1;
+    }
+
+    /// One surviving stream of `model` cancelled by an expired
+    /// force-unload deadline.
+    pub fn add_forced_cancel(&self, model: usize) {
+        *self.forced_cancels.lock().unwrap() += 1;
+        if let Some(m) = self.per_model.lock().unwrap().get_mut(model) {
+            m.forced_cancels += 1;
+        }
+    }
+
+    /// One panic caught and quarantined (a decode job failed alone, or a
+    /// backend step poisoned its model slot) instead of killing the
+    /// engine.
+    pub fn add_quarantined_job(&self) {
+        *self.quarantined_jobs.lock().unwrap() += 1;
+    }
+
+    /// Mark `model`'s row quarantined after a backend panic.  Cleared by
+    /// the next [`Metrics::set_model`] into the slot.
+    pub fn set_quarantined(&self, model: usize) {
+        if let Some(m) = self.per_model.lock().unwrap().get_mut(model) {
+            m.quarantined = true;
+        }
+    }
+
     /// Record lane-steps model `model` had planned but the weighted
     /// per-tick budget deferred (sched::weights DRR trim).
     pub fn add_deferrals(&self, model: usize, n: usize) {
@@ -288,6 +330,9 @@ impl Metrics {
         let preemptions = *self.preemptions.lock().unwrap();
         let rejects = *self.admission_rejects.lock().unwrap();
         let stalls = *self.sched_stalls.lock().unwrap();
+        let reaped = *self.reaped_streams.lock().unwrap();
+        let forced = *self.forced_cancels.lock().unwrap();
+        let quarantined = *self.quarantined_jobs.lock().unwrap();
         let loads = *self.model_loads.lock().unwrap();
         let unloads = *self.model_unloads.lock().unwrap();
         let decode = *self.decode_seconds.lock().unwrap();
@@ -312,14 +357,23 @@ impl Metrics {
             "preemptions={preemptions}  admission_rejects={rejects}  sched_stalls={stalls}  \
              model_loads={loads}  model_unloads={unloads}  effective_quantum={equantum}\n",
         ));
+        out.push_str(&format!(
+            "reaped_streams={reaped}  forced_cancels={forced}  quarantined_jobs={quarantined}\n",
+        ));
         let pm = self.per_model.lock().unwrap();
         if pm.len() > 1 || pm.iter().any(|m| m.preemptions + m.evictions > 0) {
             for (id, m) in pm.iter().enumerate() {
                 out.push_str(&format!(
                     "model[{id}] {:<14} {} w={} lanes={} frames={} ticks={} occupancy={:.2} \
-                     evictions={} preemptions={} deferrals={}\n",
+                     evictions={} preemptions={} deferrals={} forced_cancels={}\n",
                     m.name,
-                    if m.loaded { "loaded" } else { "retired" },
+                    if m.quarantined && m.loaded {
+                        "quarantined"
+                    } else if m.loaded {
+                        "loaded"
+                    } else {
+                        "retired"
+                    },
                     m.weight,
                     m.max_lanes,
                     m.frames,
@@ -328,6 +382,7 @@ impl Metrics {
                     m.evictions,
                     m.preemptions,
                     m.deferrals,
+                    m.forced_cancels,
                 ));
             }
         }
@@ -418,6 +473,36 @@ mod tests {
         assert_eq!(*m.model_unloads.lock().unwrap(), 1);
         m.retire_model(9); // out of range: counter only, no panic
         assert_eq!(*m.model_unloads.lock().unwrap(), 2);
+    }
+
+    #[test]
+    fn robustness_counters_report() {
+        let m = Metrics::default();
+        m.set_model(0, "en", 4, 1);
+        m.set_model(1, "de", 4, 1);
+        m.add_reaped();
+        m.add_reaped();
+        m.add_forced_cancel(1);
+        m.add_forced_cancel(9); // out of range: global counter only, no panic
+        m.add_quarantined_job();
+        m.set_quarantined(0);
+        m.set_quarantined(9); // out of range: no panic
+        {
+            let pm = m.per_model.lock().unwrap();
+            assert!(pm[0].quarantined && !pm[1].quarantined);
+            assert_eq!((pm[0].forced_cancels, pm[1].forced_cancels), (0, 1));
+        }
+        let r = m.report();
+        assert!(r.contains("reaped_streams=2"), "{r}");
+        assert!(r.contains("forced_cancels=2"), "{r}");
+        assert!(r.contains("quarantined_jobs=1"), "{r}");
+        assert!(
+            r.lines().any(|l| l.starts_with("model[0] en") && l.contains("quarantined w=")),
+            "{r}"
+        );
+        // A reused slot starts clean, quarantine flag included.
+        m.set_model(0, "fresh", 4, 1);
+        assert!(!m.per_model.lock().unwrap()[0].quarantined);
     }
 
     #[test]

@@ -35,4 +35,4 @@ pub mod engine;
 pub mod metrics;
 pub mod server;
 
-pub use engine::{Engine, EngineConfig, FinalResult, ModelInfo};
+pub use engine::{Engine, EngineConfig, FinalResult, ModelInfo, StreamEnd};

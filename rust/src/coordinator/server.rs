@@ -16,36 +16,62 @@
 //!                      admin: hot-load the model at path (weight w,
 //!                      lanes l, 0 = engine default)
 //! 'U' u32 id           admin: drain + unload model id
+//! 'D' u32 id  u32 deadline_ms  u8 force
+//!                      admin: bounded-wait unload — wait at most
+//!                      deadline_ms for the drain; on expiry either give
+//!                      up with a reason (force = 0) or cancel the
+//!                      survivors and tear down (force != 0)
 //! 'Q'                  admin: query the live registry
 //! ```
 //! server → client:
 //! ```text
 //! 'F' u32 n  u32×n  u32 m  u32×m  f32 latency_ms
 //!     final words, greedy phones, finalize latency
+//! 'C' u32 n  bytes×n
+//!     stream cancelled by the engine (idle/deadline reap, forced
+//!     unload, model quarantine) with the reason text; terminal
+//! 'E' u32 n  bytes×n
+//!     the utterance's own processing failed (e.g. a quarantined decode
+//!     panic) with the reason text; terminal, engine keeps serving
 //! 'R' u32 n  bytes×n
 //!     rejection/failure reason text.  After a stream-admission reject
 //!     (delivered at 'E') the connection closes; after an admin failure
 //!     the connection stays usable.
 //! 'O' u32 v
 //!     admin success (the loaded/unloaded model id)
-//! 'Q' u32 count  { u32 id  u8 draining  u32 weight  u32 lanes
+//! 'Q' u32 count  { u32 id  u8 status  u32 weight  u32 lanes
 //!                  u32 live  u32 n  bytes×n }×count
-//!     registry snapshot
+//!     registry snapshot; status: 0 = loaded, 1 = draining,
+//!     2 = quarantined
 //! ```
 //!
 //! A thread per connection feeds the shared [`Engine`] — batching happens
 //! across connections inside the engine, not per socket.  The stream is
 //! opened lazily at the first `'A'`/`'E'` so the `'P'`/`'M'` options can
 //! ride the admission request; when the engine's admission controller
-//! rejects (live-stream cap, unknown or draining model — see
+//! rejects (live-stream cap, unknown / draining / quarantined model — see
 //! [`crate::sched::admission`]), the client gets an `'R'` frame with the
 //! [`crate::sched::RejectReason`] text instead of a hung connection.
-//! The mutating admin frames (`'L'`/`'U'`) are only valid before a
+//! The mutating admin frames (`'L'`/`'U'`/`'D'`) are only valid before a
 //! stream opens on the connection; the read-only `'Q'` is valid at any
 //! time.  `'L'` requires the server to have been started with a
-//! [`ModelLoader`] ([`serve_with_loader`]), `'U'` blocks its connection
-//! thread until the model's drain completes (a never-finishing stream
-//! holds it indefinitely — close that stream's connection to unstick).
+//! [`ModelLoader`] ([`serve_with_loader`]); `'U'` blocks its connection
+//! thread until the model's drain completes — use `'D'` with a deadline
+//! (and `force` if the survivors must not pin the unload) to bound that
+//! wait.
+//!
+//! **Hardening.**  Every byte off the socket flows through the typed
+//! frame parsers ([`read_client_frame`], [`read_server_frame`]): length
+//! prefixes are bounded *before* allocation, unknown tags and malformed
+//! bodies surface as [`ServeError`] values (never a panic), and audio
+//! payloads are read in [`AUDIO_READ_CHUNK`]-sized pieces so a hostile
+//! length prefix cannot trigger a huge up-front allocation.  Connections
+//! carry socket read/write timeouts (`QUANTASR_SOCK_TIMEOUT_MS`, 0 =
+//! disabled); between client frames the server polls the open stream's
+//! result channel so engine-initiated endings — the stream reaper, forced
+//! unload, model quarantine — reach a silent client as a terminal `'C'`
+//! frame instead of leaving both sides hung.  The accept loop backs off
+//! exponentially (bounded) when idle instead of spinning.
 //!
 //! **Trust model.**  Admin frames share the serving socket and are
 //! unauthenticated: anyone who can open a stream can also load/unload
@@ -53,17 +79,341 @@
 //! is loopback) or front it with network policy; a separate
 //! authenticated admin socket is a ROADMAP follow-on.
 
-use std::io::{Read, Write};
+use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Receiver;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::engine::{Engine, FinalResult, ModelInfo};
+use crate::coordinator::batcher::parse_deadline_ms;
+use crate::coordinator::engine::{Engine, FinalResult, ModelInfo, StreamEnd};
 use crate::runtime::backend::AmBackend;
 use crate::sched::{ModelParams, Priority, StreamOptions};
+use crate::util::fault::{self, FaultPlan, FaultPoint};
+
+/// Hard cap on one `'A'` frame's sample count (~21 minutes at 8 kHz —
+/// far beyond any real utterance chunk; a bigger prefix is an attack or
+/// corruption, not audio).
+pub const MAX_AUDIO_SAMPLES: usize = 10_000_000;
+/// Hard cap on a model path / model name / reason text length.
+pub const MAX_TEXT_BYTES: usize = 65_536;
+/// Hard cap on `'Q'` registry rows a client will accept.
+pub const MAX_REGISTRY_ROWS: usize = 65_536;
+/// Hard cap on words/phones per `'F'` frame a client will accept.
+pub const MAX_RESULT_TOKENS: usize = 1 << 20;
+/// Audio payloads are read (and bounds-checked) in pieces of this many
+/// bytes, so the declared length never sizes a single allocation.
+pub const AUDIO_READ_CHUNK: usize = 64 * 1024;
+
+/// How often a connection with an open stream checks the engine for an
+/// engine-initiated ending while waiting for the next client frame.
+const POLL: Duration = Duration::from_millis(50);
+/// Default socket read/write timeout (`QUANTASR_SOCK_TIMEOUT_MS`
+/// overrides; 0 disables).  A peer silent for this long is dead.
+const DEFAULT_SOCK_TIMEOUT: Duration = Duration::from_secs(30);
+/// Client-side default I/O timeout — generous because `'U'` legitimately
+/// blocks for a whole model drain.
+const CLIENT_SOCK_TIMEOUT: Duration = Duration::from_secs(120);
+/// Accept-loop backoff bounds: start fast, never spin slower than this.
+const ACCEPT_BACKOFF_MIN: Duration = Duration::from_millis(1);
+const ACCEPT_BACKOFF_MAX: Duration = Duration::from_millis(50);
+
+/// Structured error for everything that can go wrong on the untrusted
+/// serving path.  Wire-frame parsing and the connection loop return
+/// these instead of panicking (or stringly-typed `anyhow` chains), so
+/// the server can tell protocol abuse from I/O loss from engine-side
+/// failures — and so the property/chaos tests can assert "errors, never
+/// panics" over arbitrary byte streams.
+#[derive(Debug)]
+pub enum ServeError {
+    /// The peer violated the frame grammar (unknown tag, bad enum value,
+    /// frame out of sequence).
+    Protocol { detail: String },
+    /// A length prefix exceeded its hard bound — refused before any
+    /// allocation or read of the body.
+    Oversized { what: &'static str, size: usize, limit: usize },
+    /// The socket failed or timed out mid-frame.
+    Io(io::Error),
+    /// The engine refused or lost the stream.
+    Engine(String),
+}
+
+impl ServeError {
+    fn protocol(detail: impl Into<String>) -> Self {
+        ServeError::Protocol { detail: detail.into() }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Protocol { detail } => write!(f, "protocol violation: {detail}"),
+            ServeError::Oversized { what, size, limit } => {
+                write!(f, "oversized {what}: {size} exceeds the {limit} limit")
+            }
+            ServeError::Io(e) => write!(f, "socket error: {e}"),
+            ServeError::Engine(detail) => write!(f, "engine error: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for ServeError {
+    fn from(e: io::Error) -> Self {
+        ServeError::Io(e)
+    }
+}
+
+/// One parsed client → server frame (see the module header / PROTOCOL.md
+/// for the byte layout each variant corresponds to).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientFrame {
+    /// `'P'`: QoS class for the admission request.
+    Priority(Priority),
+    /// `'M'`: target model id.
+    Model(u32),
+    /// `'A'`: one PCM chunk.
+    Audio(Vec<f32>),
+    /// `'E'`: end of audio.
+    End,
+    /// `'L'`: hot-load admin request.
+    Load { weight: u32, lanes: u32, path: String },
+    /// `'U'`: unbounded drain + unload.
+    Unload(u32),
+    /// `'D'`: bounded-wait unload, optionally forcing survivor
+    /// cancellation at the deadline.
+    UnloadDeadline { id: u32, deadline_ms: u32, force: bool },
+    /// `'Q'`: registry snapshot request.
+    Query,
+}
+
+/// One parsed server → client frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServerFrame {
+    /// `'F'`: the stream finalized normally.
+    Final(ClientResult),
+    /// `'R'`: admission reject / admin failure reason.
+    Reject(String),
+    /// `'O'`: admin success value.
+    AdminOk(u32),
+    /// `'C'`: the engine cancelled the stream (reason text).
+    Cancelled(String),
+    /// `'E'`: the utterance's processing failed (reason text).
+    Failed(String),
+    /// `'Q'`: registry snapshot.
+    Registry(Vec<RegistryEntry>),
+}
+
+impl ServerFrame {
+    /// Human tag for "expected X, got Y" errors.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServerFrame::Final(_) => "final ('F')",
+            ServerFrame::Reject(_) => "reject ('R')",
+            ServerFrame::AdminOk(_) => "admin-ok ('O')",
+            ServerFrame::Cancelled(_) => "cancelled ('C')",
+            ServerFrame::Failed(_) => "failed ('E')",
+            ServerFrame::Registry(_) => "registry ('Q')",
+        }
+    }
+}
+
+/// Read one client → server frame (tag + body).  Returns `Ok(None)` on a
+/// clean end-of-stream at the tag boundary; every malformed input maps
+/// to `Err`, never a panic — the wire property test drives this with
+/// arbitrary byte streams.
+pub fn read_client_frame(r: &mut impl Read) -> Result<Option<ClientFrame>, ServeError> {
+    let mut tag = [0u8; 1];
+    match r.read_exact(&mut tag) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    read_client_frame_body(tag[0], r).map(Some)
+}
+
+/// Parse a client frame's body given its already-consumed tag byte.
+/// Length prefixes are checked against their hard bounds *before* any
+/// allocation; audio is read in [`AUDIO_READ_CHUNK`] pieces.
+pub fn read_client_frame_body(tag: u8, r: &mut impl Read) -> Result<ClientFrame, ServeError> {
+    match tag {
+        b'P' => {
+            let mut class = [0u8; 1];
+            r.read_exact(&mut class)?;
+            match Priority::from_wire(class[0]) {
+                Some(p) => Ok(ClientFrame::Priority(p)),
+                None => Err(ServeError::protocol(format!("unknown priority class {}", class[0]))),
+            }
+        }
+        b'M' => Ok(ClientFrame::Model(read_u32(r)?)),
+        b'A' => {
+            let n = read_u32(r)? as usize;
+            if n > MAX_AUDIO_SAMPLES {
+                return Err(ServeError::Oversized {
+                    what: "audio chunk",
+                    size: n,
+                    limit: MAX_AUDIO_SAMPLES,
+                });
+            }
+            let mut remaining = n * 4;
+            let mut raw = vec![0u8; AUDIO_READ_CHUNK.min(remaining)];
+            let mut pcm = Vec::with_capacity(n.min(AUDIO_READ_CHUNK));
+            while remaining > 0 {
+                let take = AUDIO_READ_CHUNK.min(remaining);
+                r.read_exact(&mut raw[..take])?;
+                pcm.extend(
+                    raw[..take]
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+                );
+                remaining -= take;
+            }
+            Ok(ClientFrame::Audio(pcm))
+        }
+        b'E' => Ok(ClientFrame::End),
+        b'L' => {
+            let weight = read_u32(r)?;
+            let lanes = read_u32(r)?;
+            let path = read_text(r, "model path")?;
+            Ok(ClientFrame::Load { weight, lanes, path })
+        }
+        b'U' => Ok(ClientFrame::Unload(read_u32(r)?)),
+        b'D' => {
+            let id = read_u32(r)?;
+            let deadline_ms = read_u32(r)?;
+            let mut force = [0u8; 1];
+            r.read_exact(&mut force)?;
+            Ok(ClientFrame::UnloadDeadline { id, deadline_ms, force: force[0] != 0 })
+        }
+        b'Q' => Ok(ClientFrame::Query),
+        other => Err(ServeError::protocol(format!("unknown client tag {other:#x}"))),
+    }
+}
+
+/// Read one server → client frame (tag + body).  Same contract as
+/// [`read_client_frame_body`]: bounded, total, panic-free.
+pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, ServeError> {
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    match tag[0] {
+        b'F' => {
+            let words = read_u32_vec(r, "final words")?;
+            let phones = read_u32_vec(r, "final phones")?;
+            let mut lat = [0u8; 4];
+            r.read_exact(&mut lat)?;
+            Ok(ServerFrame::Final(ClientResult {
+                words,
+                phones,
+                server_latency_ms: f32::from_le_bytes(lat),
+            }))
+        }
+        b'R' => Ok(ServerFrame::Reject(read_text(r, "reject reason")?)),
+        b'O' => Ok(ServerFrame::AdminOk(read_u32(r)?)),
+        b'C' => Ok(ServerFrame::Cancelled(read_text(r, "cancel reason")?)),
+        b'E' => Ok(ServerFrame::Failed(read_text(r, "failure reason")?)),
+        b'Q' => {
+            let count = read_u32(r)? as usize;
+            if count > MAX_REGISTRY_ROWS {
+                return Err(ServeError::Oversized {
+                    what: "registry",
+                    size: count,
+                    limit: MAX_REGISTRY_ROWS,
+                });
+            }
+            let mut out = Vec::with_capacity(count.min(1024));
+            for _ in 0..count {
+                let id = read_u32(r)?;
+                let mut status = [0u8; 1];
+                r.read_exact(&mut status)?;
+                if status[0] > 2 {
+                    return Err(ServeError::protocol(format!(
+                        "unknown model status byte {}",
+                        status[0]
+                    )));
+                }
+                let weight = read_u32(r)?;
+                let lanes = read_u32(r)?;
+                let live_streams = read_u32(r)?;
+                let name = read_text(r, "model name")?;
+                out.push(RegistryEntry {
+                    id,
+                    draining: status[0] == 1,
+                    quarantined: status[0] == 2,
+                    weight,
+                    lanes,
+                    live_streams,
+                    name,
+                });
+            }
+            Ok(ServerFrame::Registry(out))
+        }
+        other => Err(ServeError::protocol(format!("unknown server tag {other:#x}"))),
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32, ServeError> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Length-prefixed text, bounded by [`MAX_TEXT_BYTES`] before the read.
+fn read_text(r: &mut impl Read, what: &'static str) -> Result<String, ServeError> {
+    let n = read_u32(r)? as usize;
+    if n > MAX_TEXT_BYTES {
+        return Err(ServeError::Oversized { what, size: n, limit: MAX_TEXT_BYTES });
+    }
+    let mut raw = vec![0u8; n];
+    r.read_exact(&mut raw)?;
+    Ok(String::from_utf8_lossy(&raw).to_string())
+}
+
+/// Length-prefixed u32 sequence, bounded by [`MAX_RESULT_TOKENS`].
+fn read_u32_vec(r: &mut impl Read, what: &'static str) -> Result<Vec<u32>, ServeError> {
+    let n = read_u32(r)? as usize;
+    if n > MAX_RESULT_TOKENS {
+        return Err(ServeError::Oversized { what, size: n, limit: MAX_RESULT_TOKENS });
+    }
+    let mut out = Vec::with_capacity(n.min(AUDIO_READ_CHUNK));
+    for _ in 0..n {
+        out.push(read_u32(r)?);
+    }
+    Ok(out)
+}
+
+/// Server-side socket read/write timeout: `QUANTASR_SOCK_TIMEOUT_MS`
+/// (fractions allowed, 0 disables), defaulting to 30 s.  Malformed
+/// values warn and fall back — tuning knobs must never panic a serving
+/// process.
+fn sock_timeout() -> Option<Duration> {
+    static ONCE: OnceLock<Option<Duration>> = OnceLock::new();
+    *ONCE.get_or_init(|| match std::env::var("QUANTASR_SOCK_TIMEOUT_MS") {
+        Ok(v) => match parse_deadline_ms(&v) {
+            Some(d) if d.is_zero() => None,
+            Some(d) => Some(d),
+            None => {
+                eprintln!(
+                    "QUANTASR_SOCK_TIMEOUT_MS='{v}' is not a non-negative number of \
+                     milliseconds; using the built-in {} ms",
+                    DEFAULT_SOCK_TIMEOUT.as_millis()
+                );
+                Some(DEFAULT_SOCK_TIMEOUT)
+            }
+        },
+        Err(_) => Some(DEFAULT_SOCK_TIMEOUT),
+    })
+}
 
 /// Backend factory for the `'L'` admin frame: maps the client-supplied
 /// model path/spec to a loaded backend.  Servers that don't install one
@@ -71,9 +421,9 @@ use crate::sched::{ModelParams, Priority, StreamOptions};
 pub type ModelLoader<B> = Arc<dyn Fn(&str) -> Result<Arc<B>> + Send + Sync>;
 
 /// Serve until `stop` is set, with hot model loading disabled (`'L'`
-/// frames are rejected with a reason; `'U'`/`'Q'` still work).  Returns
-/// the bound local address via the callback (useful with port 0 in
-/// tests).  Generic over the engine's execution backend — batching
+/// frames are rejected with a reason; `'U'`/`'D'`/`'Q'` still work).
+/// Returns the bound local address via the callback (useful with port 0
+/// in tests).  Generic over the engine's execution backend — batching
 /// happens across connections inside the engine regardless of what
 /// executes the model.
 pub fn serve<B: AmBackend>(
@@ -98,19 +448,24 @@ pub fn serve_with_loader<B: AmBackend>(
     listener.set_nonblocking(true)?;
     on_bound(listener.local_addr()?);
     let mut handles = Vec::new();
+    // Bounded exponential backoff while idle: quick to notice a new
+    // connection after a burst, never a busy-spin while quiet.
+    let mut backoff = ACCEPT_BACKOFF_MIN;
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
+                backoff = ACCEPT_BACKOFF_MIN;
                 let eng = engine.clone();
                 let ldr = loader.clone();
                 handles.push(std::thread::spawn(move || {
                     if let Err(e) = handle_conn(eng, ldr, stream) {
-                        eprintln!("connection error: {e:#}");
+                        eprintln!("connection error: {e}");
                     }
                 }));
             }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(ACCEPT_BACKOFF_MAX);
             }
             Err(e) => return Err(e.into()),
         }
@@ -125,14 +480,16 @@ fn handle_conn<B: AmBackend>(
     engine: Arc<Engine<B>>,
     loader: Option<ModelLoader<B>>,
     mut sock: TcpStream,
-) -> Result<()> {
+) -> Result<(), ServeError> {
     sock.set_nodelay(true).ok();
     let mut opened: Option<(u64, Receiver<FinalResult>)> = None;
     let r = conn_loop(&engine, &loader, &mut sock, &mut opened);
     // Whatever ended the loop (peer vanished, protocol error, engine
     // error), never leak a live stream: one left open here would hold an
     // admission slot forever, and enough broken connections would wedge
-    // the engine at its live-stream cap.  Finishing drains it.
+    // the engine at its live-stream cap.  Finishing drains it; if the
+    // engine already ended it (reaper, quarantine) the finish fails
+    // harmlessly and the receiver is already resolved or disconnected.
     if let Some((id, rx)) = opened {
         let _ = engine.finish_stream(id);
         let _ = rx.recv();
@@ -145,95 +502,129 @@ fn conn_loop<B: AmBackend>(
     loader: &Option<ModelLoader<B>>,
     sock: &mut TcpStream,
     opened: &mut Option<(u64, Receiver<FinalResult>)>,
-) -> Result<()> {
+) -> Result<(), ServeError> {
+    let faults = engine.fault_plan();
+    let timeout = sock_timeout();
+    sock.set_write_timeout(timeout).ok();
     let mut opts = StreamOptions::default();
     // A rejected connection keeps draining the client's audio (discarded)
     // and delivers the 'R' frame at 'E' — writing it mid-stream and
     // closing would race the client's in-flight sends into a broken pipe
     // and the reason would be lost with the connection reset.
     let mut rejected: Option<String> = None;
+    let mut last_frame = Instant::now();
     loop {
+        // Poll for the tag so engine-initiated stream endings (reaper
+        // cancel, forced unload, quarantine) reach a silent client as a
+        // terminal frame instead of waiting for it to speak — a stalled
+        // client must never pin an unload past its deadline.
+        sock.set_read_timeout(Some(POLL)).ok();
         let mut tag = [0u8; 1];
-        if sock.read_exact(&mut tag).is_err() {
-            // peer vanished: the caller finishes what we have
-            return Ok(());
+        match sock.read_exact(&mut tag) {
+            Ok(()) => {}
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                let ended = match opened.as_ref() {
+                    Some((_, rx)) => rx.try_recv().ok(),
+                    None => None,
+                };
+                if let Some(result) = ended {
+                    opened.take();
+                    write_terminal(sock, &result, &faults)?;
+                    drain_until_close(sock);
+                    return Ok(());
+                }
+                if let Some(t) = timeout {
+                    if last_frame.elapsed() > t {
+                        return Err(ServeError::Io(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            format!("no frame for {} ms; peer presumed dead", t.as_millis()),
+                        )));
+                    }
+                }
+                continue;
+            }
+            Err(_) => return Ok(()), // peer vanished: the caller finishes what we have
         }
+        // The body of a frame is one logical unit: a peer stalling
+        // mid-frame for the full socket timeout is treated as dead.
+        sock.set_read_timeout(timeout).ok();
+        let frame = read_client_frame_body(tag[0], sock)?;
+        last_frame = Instant::now();
         // Open lazily so preceding 'P'/'M' can set the admission options.
-        if matches!(tag[0], b'A' | b'E') && opened.is_none() && rejected.is_none() {
+        if matches!(frame, ClientFrame::Audio(_) | ClientFrame::End)
+            && opened.is_none()
+            && rejected.is_none()
+        {
             match engine.try_open_stream(opts) {
                 Ok(o) => *opened = Some(o),
                 Err(reason) => rejected = Some(reason.to_string()),
             }
         }
-        match tag[0] {
-            b'P' => {
-                let mut class = [0u8; 1];
-                sock.read_exact(&mut class)?;
+        match frame {
+            ClientFrame::Priority(p) => {
                 if opened.is_some() {
-                    bail!("'P' after the stream was opened");
+                    return Err(ServeError::protocol("'P' after the stream was opened"));
                 }
-                match Priority::from_wire(class[0]) {
-                    Some(p) => opts.priority = p,
-                    None => bail!("unknown priority class {}", class[0]),
-                }
+                opts.priority = p;
             }
-            b'M' => {
-                let model = read_u32(sock)? as usize;
+            ClientFrame::Model(model) => {
                 if opened.is_some() {
-                    bail!("'M' after the stream was opened");
+                    return Err(ServeError::protocol("'M' after the stream was opened"));
                 }
                 // Validity is the admission controller's call (unknown /
-                // draining models reject at open with a reason).
-                opts.model = model;
+                // draining / quarantined models reject at open).
+                opts.model = model as usize;
             }
-            b'A' => {
-                let n = read_u32(sock)? as usize;
-                if n > 10_000_000 {
-                    bail!("oversized audio chunk ({n})");
-                }
-                let mut raw = vec![0u8; n * 4];
-                sock.read_exact(&mut raw)?;
+            ClientFrame::Audio(pcm) => {
                 if rejected.is_some() {
                     continue; // drained, not served
                 }
-                let pcm: Vec<f32> = raw
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect();
-                let (id, _) = opened.as_ref().unwrap();
-                engine.push_audio(*id, &pcm)?;
+                let id = opened.as_ref().expect("stream opened above").0;
+                if let Err(e) = engine.push_audio(id, &pcm) {
+                    // The engine may have ended the stream between frames
+                    // (reap, quarantine): deliver its terminal result if
+                    // one is waiting, else surface the engine error.
+                    let ended = opened.take().and_then(|(_, rx)| rx.try_recv().ok());
+                    return match ended {
+                        Some(result) => {
+                            write_terminal(sock, &result, &faults)?;
+                            drain_until_close(sock);
+                            Ok(())
+                        }
+                        None => Err(ServeError::Engine(format!("{e:#}"))),
+                    };
+                }
             }
-            b'E' => {
-                if let Some(reason) = rejected {
+            ClientFrame::End => {
+                if let Some(reason) = rejected.take() {
                     write_reject(sock, &reason)?;
                     return Ok(());
                 }
-                let (id, rx) = opened.take().unwrap();
-                engine.finish_stream(id)?;
-                let result = rx.recv()?;
-                write_final(sock, &result)?;
+                let (id, rx) = opened.take().expect("stream opened above");
+                let result = match engine.finish_stream(id) {
+                    Ok(()) => rx.recv().map_err(|_| {
+                        ServeError::Engine("engine dropped the stream result".into())
+                    })?,
+                    // The engine already ended the stream (a cancel raced
+                    // the 'E'): its terminal result is in the channel.
+                    Err(_) => rx.try_recv().map_err(|_| {
+                        ServeError::Engine("stream ended without a result".into())
+                    })?,
+                };
+                write_terminal(sock, &result, &faults)?;
                 return Ok(());
             }
-            b'L' => {
-                let weight = read_u32(sock)?;
-                let lanes = read_u32(sock)? as usize;
-                let n = read_u32(sock)? as usize;
-                if n > 4096 {
-                    bail!("oversized model path ({n})");
-                }
-                let mut raw = vec![0u8; n];
-                sock.read_exact(&mut raw)?;
+            ClientFrame::Load { weight, lanes, path } => {
                 if opened.is_some() {
-                    bail!("'L' after the stream was opened");
+                    return Err(ServeError::protocol("'L' after the stream was opened"));
                 }
-                let path = String::from_utf8_lossy(&raw).to_string();
                 let outcome = match loader {
                     None => Err("no model loader configured on this server".to_string()),
                     Some(load) => match load.as_ref()(&path) {
                         Ok(backend) => {
                             let params = ModelParams {
                                 weight,
-                                lanes: if lanes == 0 { None } else { Some(lanes) },
+                                lanes: if lanes == 0 { None } else { Some(lanes as usize) },
                             };
                             engine.load_model(backend, params)
                         }
@@ -245,53 +636,103 @@ fn conn_loop<B: AmBackend>(
                     Err(reason) => write_reject(sock, &reason)?,
                 }
             }
-            b'U' => {
-                let id = read_u32(sock)? as usize;
+            ClientFrame::Unload(id) => {
                 if opened.is_some() {
-                    bail!("'U' after the stream was opened");
+                    return Err(ServeError::protocol("'U' after the stream was opened"));
                 }
                 // Blocks this connection thread until the drain completes
                 // (the engine keeps serving everyone else meanwhile).
-                match engine.unload_model(id) {
-                    Ok(()) => write_ok(sock, id as u32)?,
+                match engine.unload_model(id as usize) {
+                    Ok(()) => write_ok(sock, id)?,
                     Err(reason) => write_reject(sock, &reason)?,
                 }
             }
-            b'Q' => {
+            ClientFrame::UnloadDeadline { id, deadline_ms, force } => {
+                if opened.is_some() {
+                    return Err(ServeError::protocol("'D' after the stream was opened"));
+                }
+                let deadline = Duration::from_millis(u64::from(deadline_ms));
+                match engine.unload_model_deadline(id as usize, deadline, force) {
+                    Ok(()) => write_ok(sock, id)?,
+                    Err(reason) => write_reject(sock, &reason)?,
+                }
+            }
+            ClientFrame::Query => {
                 write_registry(sock, &engine.registry())?;
             }
-            other => bail!("unknown message tag {other:#x}"),
         }
     }
 }
 
-fn write_final(sock: &mut TcpStream, r: &FinalResult) -> Result<()> {
-    let mut buf = Vec::with_capacity(16 + 4 * (r.words.len() + r.phones.len()));
-    buf.push(b'F');
-    buf.extend_from_slice(&(r.words.len() as u32).to_le_bytes());
-    for w in &r.words {
-        buf.extend_from_slice(&w.to_le_bytes());
+/// After an engine-initiated terminal frame, half-close the write side
+/// and drain (briefly) whatever the client was still sending — closing
+/// outright would RST the connection and could discard the terminal
+/// frame from the peer's receive buffer before it reads it.
+fn drain_until_close(sock: &mut TcpStream) {
+    let _ = sock.shutdown(std::net::Shutdown::Write);
+    sock.set_read_timeout(Some(POLL)).ok();
+    let budget = Instant::now();
+    let mut scratch = [0u8; 4096];
+    while budget.elapsed() < Duration::from_secs(2) {
+        match sock.read(&mut scratch) {
+            Ok(0) => return, // peer closed cleanly
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {}
+            Err(_) => return,
+        }
     }
-    buf.extend_from_slice(&(r.phones.len() as u32).to_le_bytes());
-    for p in &r.phones {
-        buf.extend_from_slice(&p.to_le_bytes());
+}
+
+/// Serialize a stream's terminal frame: `'F'` for a normal finalize,
+/// `'C'` for an engine cancel, `'E'` for a quarantined failure.  The
+/// corrupt-frame fault point (keyed by stream id) flips the tag byte so
+/// chaos tests can prove the client surfaces a structured error instead
+/// of hanging or panicking.
+fn write_terminal(
+    sock: &mut TcpStream,
+    r: &FinalResult,
+    faults: &Option<Arc<FaultPlan>>,
+) -> Result<(), ServeError> {
+    let mut buf = match &r.end {
+        StreamEnd::Complete => {
+            let mut buf = Vec::with_capacity(16 + 4 * (r.words.len() + r.phones.len()));
+            buf.push(b'F');
+            buf.extend_from_slice(&(r.words.len() as u32).to_le_bytes());
+            for w in &r.words {
+                buf.extend_from_slice(&w.to_le_bytes());
+            }
+            buf.extend_from_slice(&(r.phones.len() as u32).to_le_bytes());
+            for p in &r.phones {
+                buf.extend_from_slice(&p.to_le_bytes());
+            }
+            buf.extend_from_slice(&((r.finalize_latency.as_secs_f64() * 1e3) as f32).to_le_bytes());
+            buf
+        }
+        StreamEnd::Cancelled(why) => text_frame(b'C', why),
+        StreamEnd::Failed(why) => text_frame(b'E', why),
+    };
+    if fault::fire(faults, FaultPoint::CorruptFrame, r.stream_id) {
+        buf[0] ^= 0xFF;
     }
-    buf.extend_from_slice(&((r.finalize_latency.as_secs_f64() * 1e3) as f32).to_le_bytes());
     sock.write_all(&buf)?;
     Ok(())
 }
 
-fn write_reject(sock: &mut TcpStream, reason: &str) -> Result<()> {
-    let bytes = reason.as_bytes();
+fn text_frame(tag: u8, text: &str) -> Vec<u8> {
+    let bytes = text.as_bytes();
     let mut buf = Vec::with_capacity(5 + bytes.len());
-    buf.push(b'R');
+    buf.push(tag);
     buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
     buf.extend_from_slice(bytes);
-    sock.write_all(&buf)?;
+    buf
+}
+
+fn write_reject(sock: &mut TcpStream, reason: &str) -> Result<(), ServeError> {
+    sock.write_all(&text_frame(b'R', reason))?;
     Ok(())
 }
 
-fn write_ok(sock: &mut TcpStream, v: u32) -> Result<()> {
+fn write_ok(sock: &mut TcpStream, v: u32) -> Result<(), ServeError> {
     let mut buf = Vec::with_capacity(5);
     buf.push(b'O');
     buf.extend_from_slice(&v.to_le_bytes());
@@ -299,12 +740,19 @@ fn write_ok(sock: &mut TcpStream, v: u32) -> Result<()> {
     Ok(())
 }
 
-fn write_registry(sock: &mut TcpStream, entries: &[ModelInfo]) -> Result<()> {
+fn write_registry(sock: &mut TcpStream, entries: &[ModelInfo]) -> Result<(), ServeError> {
     let mut buf = vec![b'Q'];
     buf.extend_from_slice(&(entries.len() as u32).to_le_bytes());
     for e in entries {
         buf.extend_from_slice(&(e.id as u32).to_le_bytes());
-        buf.push(e.draining as u8);
+        let status: u8 = if e.quarantined {
+            2
+        } else if e.draining {
+            1
+        } else {
+            0
+        };
+        buf.push(status);
         buf.extend_from_slice(&e.weight.to_le_bytes());
         buf.extend_from_slice(&(e.lanes as u32).to_le_bytes());
         buf.extend_from_slice(&(e.live_streams as u32).to_le_bytes());
@@ -316,31 +764,18 @@ fn write_registry(sock: &mut TcpStream, entries: &[ModelInfo]) -> Result<()> {
     Ok(())
 }
 
-fn read_u32(sock: &mut TcpStream) -> Result<u32> {
-    let mut b = [0u8; 4];
-    sock.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-/// Read an 'R' frame's reason text (the tag byte already consumed).
-fn read_reject_text(sock: &mut TcpStream) -> Result<String> {
-    let n = read_u32(sock)? as usize;
-    if n > 65536 {
-        bail!("oversized reject reason ({n})");
-    }
-    let mut raw = vec![0u8; n];
-    sock.read_exact(&mut raw)?;
-    Ok(String::from_utf8_lossy(&raw).to_string())
-}
-
 /// Blocking client for the protocol above (used by examples/benches and
 /// the admin CLI).
 pub struct Client {
     sock: TcpStream,
+    /// Fault plan for the client-side injection points (chaos tests).
+    faults: Option<Arc<FaultPlan>>,
+    /// Audio chunks sent so far — the `client_stall` fault key.
+    audio_chunks: u64,
 }
 
 /// Client-side view of a final result.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ClientResult {
     pub words: Vec<u32>,
     pub phones: Vec<u32>,
@@ -348,10 +783,11 @@ pub struct ClientResult {
 }
 
 /// Client-side view of one `'Q'` registry row.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RegistryEntry {
     pub id: u32,
     pub draining: bool,
+    pub quarantined: bool,
     pub weight: u32,
     pub lanes: u32,
     pub live_streams: u32,
@@ -362,7 +798,24 @@ impl Client {
     pub fn connect(addr: &str) -> Result<Self> {
         let sock = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
         sock.set_nodelay(true).ok();
-        Ok(Client { sock })
+        // Generous defaults — 'U' legitimately blocks for a whole drain —
+        // but never unbounded: a dead server must surface as an error.
+        sock.set_read_timeout(Some(CLIENT_SOCK_TIMEOUT)).ok();
+        sock.set_write_timeout(Some(CLIENT_SOCK_TIMEOUT)).ok();
+        Ok(Client { sock, faults: None, audio_chunks: 0 })
+    }
+
+    /// Override the default I/O timeout (`None` waits forever).
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.sock.set_read_timeout(timeout)?;
+        self.sock.set_write_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Install a fault plan for the client-side injection points
+    /// (`client_stall`, keyed by the 1-based audio-chunk ordinal).
+    pub fn set_fault_plan(&mut self, plan: Option<Arc<FaultPlan>>) {
+        self.faults = plan;
     }
 
     /// Declare the stream's QoS class.  Must precede the first audio
@@ -373,7 +826,8 @@ impl Client {
     }
 
     /// Pick the model this stream targets.  Must precede the first audio
-    /// chunk; an unknown or draining model rejects at stream open.
+    /// chunk; an unknown, draining, or quarantined model rejects at
+    /// stream open.
     pub fn set_model(&mut self, model: u32) -> Result<()> {
         let mut buf = Vec::with_capacity(5);
         buf.push(b'M');
@@ -383,6 +837,10 @@ impl Client {
     }
 
     pub fn send_audio(&mut self, pcm: &[f32]) -> Result<()> {
+        self.audio_chunks += 1;
+        if fault::fire(&self.faults, FaultPoint::ClientStall, self.audio_chunks) {
+            std::thread::sleep(Duration::from_millis(fault::CLIENT_STALL_MS));
+        }
         let mut buf = Vec::with_capacity(5 + pcm.len() * 4);
         buf.push(b'A');
         buf.extend_from_slice(&(pcm.len() as u32).to_le_bytes());
@@ -410,7 +868,8 @@ impl Client {
     }
 
     /// Admin: drain and unload model `id`.  Blocks until the server-side
-    /// teardown completes.
+    /// teardown completes (see [`Client::unload_model_deadline`] for the
+    /// bounded variant).
     pub fn unload_model(&mut self, id: u32) -> Result<()> {
         let mut buf = Vec::with_capacity(5);
         buf.push(b'U');
@@ -420,88 +879,177 @@ impl Client {
         Ok(())
     }
 
+    /// Admin: drain and unload model `id`, waiting at most `deadline`.
+    /// On expiry the server either reports the surviving stream count as
+    /// an error (`force = false`) or cancels the survivors and completes
+    /// the teardown (`force = true`).
+    pub fn unload_model_deadline(
+        &mut self,
+        id: u32,
+        deadline: Duration,
+        force: bool,
+    ) -> Result<()> {
+        let ms = u32::try_from(deadline.as_millis()).unwrap_or(u32::MAX);
+        let mut buf = Vec::with_capacity(10);
+        buf.push(b'D');
+        buf.extend_from_slice(&id.to_le_bytes());
+        buf.extend_from_slice(&ms.to_le_bytes());
+        buf.push(u8::from(force));
+        self.sock.write_all(&buf)?;
+        self.read_admin_ok()?;
+        Ok(())
+    }
+
     /// Admin: snapshot the server's live model registry.
     pub fn query_registry(&mut self) -> Result<Vec<RegistryEntry>> {
         self.sock.write_all(b"Q")?;
-        let mut tag = [0u8; 1];
-        self.sock.read_exact(&mut tag)?;
-        if tag[0] != b'Q' {
-            bail!("expected registry frame, got {:#x}", tag[0]);
+        match read_server_frame(&mut self.sock)? {
+            ServerFrame::Registry(rows) => Ok(rows),
+            ServerFrame::Reject(reason) => bail!("registry query rejected: {reason}"),
+            other => bail!("expected registry frame, got {}", other.kind()),
         }
-        let count = read_u32(&mut self.sock)? as usize;
-        if count > 65536 {
-            bail!("oversized registry ({count})");
-        }
-        let mut out = Vec::with_capacity(count);
-        for _ in 0..count {
-            let id = read_u32(&mut self.sock)?;
-            let mut flag = [0u8; 1];
-            self.sock.read_exact(&mut flag)?;
-            let weight = read_u32(&mut self.sock)?;
-            let lanes = read_u32(&mut self.sock)?;
-            let live_streams = read_u32(&mut self.sock)?;
-            let n = read_u32(&mut self.sock)? as usize;
-            if n > 4096 {
-                bail!("oversized model name ({n})");
-            }
-            let mut raw = vec![0u8; n];
-            self.sock.read_exact(&mut raw)?;
-            out.push(RegistryEntry {
-                id,
-                draining: flag[0] != 0,
-                weight,
-                lanes,
-                live_streams,
-                name: String::from_utf8_lossy(&raw).to_string(),
-            });
-        }
-        Ok(out)
     }
 
     /// Read an admin response: `'O' u32` on success, `'R'` reason as an
     /// error.
     fn read_admin_ok(&mut self) -> Result<u32> {
-        let mut tag = [0u8; 1];
-        self.sock.read_exact(&mut tag)?;
-        match tag[0] {
-            b'O' => read_u32(&mut self.sock),
-            b'R' => {
-                let reason = read_reject_text(&mut self.sock)?;
-                bail!("admin rejected: {reason}");
-            }
-            other => bail!("expected admin response, got {other:#x}"),
+        match read_server_frame(&mut self.sock)? {
+            ServerFrame::AdminOk(v) => Ok(v),
+            ServerFrame::Reject(reason) => bail!("admin rejected: {reason}"),
+            other => bail!("expected admin response, got {}", other.kind()),
         }
     }
 
     /// End the stream and read the final result.  An admission rejection
-    /// ('R' frame) surfaces as an error carrying the server's reason.
+    /// (`'R'`), an engine-initiated cancel (`'C'`), or a quarantined
+    /// failure (`'E'`) each surface as an error carrying the server's
+    /// reason.
     pub fn finish(mut self) -> Result<ClientResult> {
         self.sock.write_all(b"E")?;
-        let mut tag = [0u8; 1];
-        self.sock.read_exact(&mut tag)?;
-        if tag[0] == b'R' {
-            let reason = read_reject_text(&mut self.sock)?;
-            bail!("admission rejected: {reason}");
+        match read_server_frame(&mut self.sock)? {
+            ServerFrame::Final(r) => Ok(r),
+            ServerFrame::Reject(reason) => bail!("admission rejected: {reason}"),
+            ServerFrame::Cancelled(why) => bail!("stream cancelled by the server: {why}"),
+            ServerFrame::Failed(why) => bail!("stream failed on the server: {why}"),
+            other => bail!("expected final frame, got {}", other.kind()),
         }
-        if tag[0] != b'F' {
-            bail!("expected final frame, got {:#x}", tag[0]);
+    }
+
+    /// Wait for the server's terminal frame *without* sending `'E'` —
+    /// for observing engine-initiated endings (the reaper's `'C'`) on a
+    /// stream the client intentionally abandoned mid-utterance.
+    pub fn read_terminal(mut self) -> Result<ServerFrame> {
+        Ok(read_server_frame(&mut self.sock)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn le(v: u32) -> [u8; 4] {
+        v.to_le_bytes()
+    }
+
+    #[test]
+    fn client_frames_round_trip() {
+        let mut c = Cursor::new(vec![b'P', 0u8]);
+        assert!(matches!(read_client_frame(&mut c).unwrap(), Some(ClientFrame::Priority(_))));
+        let mut b = vec![b'M'];
+        b.extend_from_slice(&le(7));
+        assert_eq!(read_client_frame(&mut Cursor::new(b)).unwrap(), Some(ClientFrame::Model(7)));
+        let mut b = vec![b'A'];
+        b.extend_from_slice(&le(2));
+        b.extend_from_slice(&1.5f32.to_le_bytes());
+        b.extend_from_slice(&(-0.25f32).to_le_bytes());
+        match read_client_frame(&mut Cursor::new(b)).unwrap() {
+            Some(ClientFrame::Audio(pcm)) => assert_eq!(pcm, vec![1.5, -0.25]),
+            other => panic!("want audio, got {other:?}"),
         }
-        let n = read_u32(&mut self.sock)? as usize;
-        let mut words = Vec::with_capacity(n);
-        for _ in 0..n {
-            words.push(read_u32(&mut self.sock)?);
+        let mut b = vec![b'D'];
+        b.extend_from_slice(&le(3));
+        b.extend_from_slice(&le(250));
+        b.push(1);
+        assert_eq!(
+            read_client_frame(&mut Cursor::new(b)).unwrap(),
+            Some(ClientFrame::UnloadDeadline { id: 3, deadline_ms: 250, force: true })
+        );
+        // Clean EOF at the tag boundary is None, not an error.
+        assert!(read_client_frame(&mut Cursor::new(Vec::new())).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_prefixes_error_before_reading() {
+        // Audio length past the cap: refused from the prefix alone.
+        let mut b = vec![b'A'];
+        b.extend_from_slice(&le((MAX_AUDIO_SAMPLES + 1) as u32));
+        match read_client_frame(&mut Cursor::new(b)) {
+            Err(ServeError::Oversized { what: "audio chunk", .. }) => {}
+            other => panic!("want oversized, got {other:?}"),
         }
-        let m = read_u32(&mut self.sock)? as usize;
-        let mut phones = Vec::with_capacity(m);
-        for _ in 0..m {
-            phones.push(read_u32(&mut self.sock)?);
+        // Path length past the cap.
+        let mut b = vec![b'L'];
+        b.extend_from_slice(&le(1));
+        b.extend_from_slice(&le(0));
+        b.extend_from_slice(&le((MAX_TEXT_BYTES + 1) as u32));
+        assert!(matches!(
+            read_client_frame(&mut Cursor::new(b)),
+            Err(ServeError::Oversized { .. })
+        ));
+    }
+
+    #[test]
+    fn truncated_and_unknown_frames_error_not_panic() {
+        assert!(matches!(
+            read_client_frame(&mut Cursor::new(vec![0x7fu8])),
+            Err(ServeError::Protocol { .. })
+        ));
+        let mut b = vec![b'A'];
+        b.extend_from_slice(&le(4));
+        b.extend_from_slice(&[0u8; 7]); // 9 bytes short
+        assert!(matches!(read_client_frame(&mut Cursor::new(b)), Err(ServeError::Io(_))));
+        assert!(matches!(
+            read_client_frame(&mut Cursor::new(vec![b'P', 9u8])),
+            Err(ServeError::Protocol { .. })
+        ));
+    }
+
+    #[test]
+    fn server_frames_round_trip() {
+        let b = text_frame(b'C', "idle past the timeout");
+        match read_server_frame(&mut Cursor::new(b)).unwrap() {
+            ServerFrame::Cancelled(why) => assert!(why.contains("idle")),
+            other => panic!("want cancelled, got {other:?}"),
         }
-        let mut lat = [0u8; 4];
-        self.sock.read_exact(&mut lat)?;
-        Ok(ClientResult {
-            words,
-            phones,
-            server_latency_ms: f32::from_le_bytes(lat),
-        })
+        let b = text_frame(b'E', "decode panicked");
+        assert!(matches!(read_server_frame(&mut Cursor::new(b)).unwrap(), ServerFrame::Failed(_)));
+        // 'Q' with one quarantined row.
+        let mut b = vec![b'Q'];
+        b.extend_from_slice(&le(1));
+        b.extend_from_slice(&le(4)); // id
+        b.push(2); // status: quarantined
+        b.extend_from_slice(&le(3)); // weight
+        b.extend_from_slice(&le(2)); // lanes
+        b.extend_from_slice(&le(1)); // live
+        b.extend_from_slice(&le(2));
+        b.extend_from_slice(b"en");
+        match read_server_frame(&mut Cursor::new(b)).unwrap() {
+            ServerFrame::Registry(rows) => {
+                assert_eq!(rows.len(), 1);
+                assert!(rows[0].quarantined && !rows[0].draining);
+                assert_eq!(rows[0].name, "en");
+            }
+            other => panic!("want registry, got {other:?}"),
+        }
+        // Unknown status byte is a protocol error, not a guess.
+        let mut b = vec![b'Q'];
+        b.extend_from_slice(&le(1));
+        b.extend_from_slice(&le(0));
+        b.push(3);
+        assert!(matches!(
+            read_server_frame(&mut Cursor::new(b)),
+            Err(ServeError::Protocol { .. })
+        ));
     }
 }

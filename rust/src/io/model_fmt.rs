@@ -17,6 +17,11 @@ use crate::quant::scheme::QuantParams;
 
 pub const MAGIC: &[u8; 4] = b"QAM1";
 
+/// Hard cap on a stored tensor's rank — nothing the exporter writes
+/// exceeds 2-D today; a bigger value in the file is corruption, and
+/// bounding it keeps a hostile `ndim` from sizing an allocation.
+pub const MAX_NDIM: usize = 8;
+
 /// One stored tensor: f32 or u8-quantized (eq. 2 values).
 #[derive(Clone, Debug)]
 pub enum Tensor {
@@ -157,6 +162,11 @@ impl QamFile {
         Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
     }
 
+    /// Parse an in-memory `.qam` image.  Total on untrusted input: a
+    /// truncated, bit-flipped, or hostile byte stream yields `Err`,
+    /// never a panic or an attacker-sized allocation — every length
+    /// field is bounds-checked against the remaining bytes (and checked
+    /// for arithmetic overflow) *before* any buffer is sized from it.
     pub fn from_bytes(b: &[u8]) -> Result<Self> {
         let mut r = Cursor { b, i: 0 };
         if r.take(4)? != MAGIC.as_slice() {
@@ -178,14 +188,28 @@ impl QamFile {
             let name = String::from_utf8(r.take(name_len)?.to_vec())?;
             let dtype = r.u8()?;
             let ndim = r.u32()? as usize;
+            if ndim > MAX_NDIM {
+                bail!("tensor {name}: {ndim} dimensions exceeds the {MAX_NDIM} limit");
+            }
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
                 shape.push(r.u32()? as usize);
             }
-            let count: usize = shape.iter().product();
+            // A corrupt shape can overflow the element product (or its
+            // byte size): refuse it instead of wrapping into a bogus —
+            // possibly huge — allocation request.
+            let count: usize = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .with_context(|| format!("tensor {name}: shape {shape:?} overflows"))?;
             let t = match dtype {
                 0 => {
-                    let raw = r.take(count * 4)?;
+                    let nbytes = count
+                        .checked_mul(4)
+                        .with_context(|| format!("tensor {name}: byte size overflows"))?;
+                    // Bounds-check against the remaining input *before*
+                    // allocating `count` floats from a corrupt prefix.
+                    let raw = r.take(nbytes)?;
                     let mut data = vec![0f32; count];
                     for (i, c) in raw.chunks_exact(4).enumerate() {
                         data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
@@ -261,7 +285,9 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.i + n > self.b.len() {
+        // `i + n` could overflow for a hostile n — compare against the
+        // remaining length instead (i ≤ len is an invariant).
+        if n > self.b.len() - self.i {
             bail!("truncated file at byte {} (want {n})", self.i);
         }
         let s = &self.b[self.i..self.i + n];
@@ -386,5 +412,86 @@ mod tests {
     fn missing_tensor_is_error() {
         let q = sample();
         assert!(q.tensor("does.not.exist").is_err());
+    }
+
+    fn sample_bytes() -> Vec<u8> {
+        let q = sample();
+        let dir = std::env::temp_dir().join("quantasr_test_qam");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sweep.qam");
+        q.save(&p).unwrap();
+        std::fs::read(&p).unwrap()
+    }
+
+    /// Every byte-truncation of a valid file is a clean error — the
+    /// parser consumes the whole image, so a strict prefix is always
+    /// missing something, and it must say so rather than panic.
+    #[test]
+    fn every_truncation_errors_cleanly() {
+        let bytes = sample_bytes();
+        for cut in 0..bytes.len() {
+            let prefix = &bytes[..cut];
+            let parsed = std::panic::catch_unwind(|| QamFile::from_bytes(prefix))
+                .unwrap_or_else(|_| panic!("parser panicked on a {cut}-byte truncation"));
+            assert!(parsed.is_err(), "a {cut}-byte prefix of a {}-byte file parsed", bytes.len());
+        }
+    }
+
+    /// Single-bit corruption anywhere in the file either still parses
+    /// (the flip landed in payload data) or errors cleanly — never a
+    /// panic, never a wild allocation.
+    #[test]
+    fn every_bit_flip_parses_or_errors_cleanly() {
+        let bytes = sample_bytes();
+        for byte in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut mutated = bytes.clone();
+                mutated[byte] ^= 1 << bit;
+                std::panic::catch_unwind(|| {
+                    let _ = QamFile::from_bytes(&mutated);
+                })
+                .unwrap_or_else(|_| panic!("parser panicked with bit {bit} of byte {byte} flipped"));
+            }
+        }
+    }
+
+    /// Hostile length fields (rank, shape product, element byte size)
+    /// are refused before they can size an allocation.
+    #[test]
+    fn hostile_lengths_are_refused() {
+        // Minimal valid prelude: magic, version, tiny header, 1 tensor.
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        let hdr = br#"{"name": "x", "num_layers": 1, "cell_dim": 1, "proj_dim": -1, "input_dim": 1, "num_labels": 1}"#;
+        b.extend_from_slice(&(hdr.len() as u32).to_le_bytes());
+        b.extend_from_slice(hdr);
+        b.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        b.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        b.push(b't');
+        b.push(0u8); // dtype f32
+
+        // Rank past MAX_NDIM.
+        let mut huge_rank = b.clone();
+        huge_rank.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let e = QamFile::from_bytes(&huge_rank).unwrap_err();
+        assert!(format!("{e:#}").contains("dimensions"), "{e:#}");
+
+        // Shape whose element product overflows usize.
+        let mut overflow = b.clone();
+        overflow.extend_from_slice(&4u32.to_le_bytes()); // ndim = 4
+        for _ in 0..4 {
+            overflow.extend_from_slice(&(u32::MAX).to_le_bytes());
+        }
+        let e = QamFile::from_bytes(&overflow).unwrap_err();
+        assert!(format!("{e:#}").contains("overflow"), "{e:#}");
+
+        // A plausible-looking huge tensor must fail the bounds check
+        // against the remaining bytes, not allocate gigabytes.
+        let mut huge = b.clone();
+        huge.extend_from_slice(&2u32.to_le_bytes()); // ndim = 2
+        huge.extend_from_slice(&65_535u32.to_le_bytes());
+        huge.extend_from_slice(&65_535u32.to_le_bytes());
+        assert!(QamFile::from_bytes(&huge).is_err());
     }
 }

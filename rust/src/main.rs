@@ -9,9 +9,12 @@
 //!                   [--max-batch 32] [--deadline-ms 5] [--quantum 25]
 //!                   [--max-streams 1024] [--tick-budget 32]
 //!                   [--model-weights 4,1] [--model-lanes 32,8]
-//!                   (hot admin over TCP: 'L' load / 'U' unload /
-//!                    'Q' query — see docs/PROTOCOL.md; 'L' loads .qam
-//!                    paths with the same --mode)
+//!                   [--stream-idle-ms 0] [--stream-deadline-ms 0]
+//!                   (stream lifetimes: idle/deadline reaper, 0 =
+//!                    disabled; hot admin over TCP: 'L' load / 'U'
+//!                    unload / 'D' bounded unload / 'Q' query — see
+//!                    docs/PROTOCOL.md; 'L' loads .qam paths with the
+//!                    same --mode)
 //! quantasr bench-serve --model … [--streams 16] [--utts 64]
 //! quantasr ablate-rounding
 //! quantasr ablate-granularity [--model …]

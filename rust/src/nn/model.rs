@@ -195,6 +195,14 @@ impl AcousticModel {
 
     pub fn from_qam(qam: &QamFile, mode: ExecMode) -> Result<Self> {
         let h = &qam.header;
+        // A zero-layer header is corruption, not a model — and the step
+        // path indexes the top layer's cache unconditionally, so admit
+        // it here with a reason instead of panicking there.
+        anyhow::ensure!(
+            h.num_layers >= 1,
+            "qam header declares {} layers; a model needs at least one",
+            h.num_layers
+        );
         let adapt = |t: &Tensor, want_quant: bool| -> Result<Linear> {
             let l = Linear::from_tensor(t)?;
             Ok(match (want_quant, l.is_quant()) {

@@ -69,6 +69,8 @@ pub enum ModelStatus {
     Loaded,
     /// Unload requested: survivors finish, newcomers are rejected.
     Draining,
+    /// Poisoned by a backend panic: quarantined until unloaded.
+    Quarantined,
     /// No model at that index (never loaded, or already torn down).
     Unknown,
 }
@@ -82,6 +84,8 @@ pub enum RejectReason {
     UnknownModel { model: usize, loaded: usize },
     /// The requested model is draining out (hot unload in progress).
     ModelDraining { model: usize },
+    /// The requested model was quarantined after a backend fault.
+    ModelQuarantined { model: usize },
 }
 
 impl fmt::Display for RejectReason {
@@ -95,6 +99,12 @@ impl fmt::Display for RejectReason {
             }
             RejectReason::ModelDraining { model } => {
                 write!(f, "model {model} is draining; pick another model")
+            }
+            RejectReason::ModelQuarantined { model } => {
+                write!(
+                    f,
+                    "model {model} is quarantined after a fault; unload it or pick another model"
+                )
             }
         }
     }
@@ -133,6 +143,7 @@ impl AdmissionController {
         match status {
             ModelStatus::Unknown => return Err(RejectReason::UnknownModel { model, loaded }),
             ModelStatus::Draining => return Err(RejectReason::ModelDraining { model }),
+            ModelStatus::Quarantined => return Err(RejectReason::ModelQuarantined { model }),
             ModelStatus::Loaded => {}
         }
         if live >= self.cfg.max_live_streams {
@@ -172,6 +183,10 @@ mod tests {
             c.admit(9, 1, ModelStatus::Draining, 2),
             Err(RejectReason::ModelDraining { model: 1 })
         );
+        assert_eq!(
+            c.admit(9, 1, ModelStatus::Quarantined, 2),
+            Err(RejectReason::ModelQuarantined { model: 1 })
+        );
     }
 
     #[test]
@@ -182,5 +197,7 @@ mod tests {
         assert!(u.contains("unknown model 2"), "{u}");
         let d = RejectReason::ModelDraining { model: 3 }.to_string();
         assert!(d.contains("model 3") && d.contains("draining"), "{d}");
+        let q = RejectReason::ModelQuarantined { model: 4 }.to_string();
+        assert!(q.contains("model 4") && q.contains("quarantined"), "{q}");
     }
 }

@@ -1,0 +1,377 @@
+//! Deterministic fault injection for the serving plane.
+//!
+//! A [`FaultPlan`] is a seeded schedule of faults parsed from a compact
+//! spec (`QUANTASR_FAULTS=seed:spec`, or built directly in tests).  The
+//! serving code calls [`FaultPlan::fire`] at named injection points
+//! ([`FaultPoint`]); the plan decides — purely from its seed, its rules,
+//! and the call's key/arrival index — whether the fault triggers.  The
+//! same plan therefore produces the same schedule on every run, which is
+//! what lets `tests/chaos_integration.rs` assert engine invariants under
+//! faults *and* replay a failing schedule from its seed.
+//!
+//! **Zero cost when disabled.**  Every injection point goes through an
+//! `Option<Arc<FaultPlan>>`; the disabled path is a `None` check and
+//! nothing else — no atomics, no hashing, no logging.  Production builds
+//! carry the hooks but never pay for them unless `QUANTASR_FAULTS` is
+//! set.
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! QUANTASR_FAULTS = seed ':' rule (',' rule)*
+//! rule            = point ['@' nth] ['#' key] ['~' rate]
+//! point           = decode_panic | backend_panic | slow_tick
+//!                 | client_stall | corrupt_frame
+//! ```
+//!
+//! - `point@N` — fire exactly once, on the Nth matching arrival at that
+//!   point (1-based).
+//! - `point#K` — the rule only matches arrivals whose key is `K` (e.g.
+//!   a stream id for `decode_panic`, a model id for `backend_panic`).
+//! - `point~R` — fire with probability `R`, decided by hashing
+//!   `(seed, point, key)` — key-stable, so a batch retry that re-asks
+//!   about the same stream gets the same answer.
+//! - A rule with neither `@` nor `~` fires on every matching arrival.
+//!
+//! Examples: `7:decode_panic@1` (panic the first decode job),
+//! `42:backend_panic@1#1,slow_tick~0.25` (panic model 1's first step,
+//! stretch a quarter of ticks).
+//!
+//! A malformed `QUANTASR_FAULTS` warns and disables injection — the
+//! knob grammar must never panic a serving process (the same contract as
+//! every other `QUANTASR_*` knob).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Named injection points wired into the serving plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// Panic inside a decode-pool job (keyed by stream id).
+    DecodePanic,
+    /// Panic inside a model's batched AM step (keyed by model id).
+    BackendPanic,
+    /// Stretch one AM tick by [`SLOW_TICK_MS`] (keyed by tick parity).
+    SlowTick,
+    /// Client-side send stall of [`CLIENT_STALL_MS`] (keyed by chunk
+    /// index).
+    ClientStall,
+    /// Corrupt the tag byte of an outbound server frame (keyed by stream
+    /// id).
+    CorruptFrame,
+}
+
+/// Injected tick stretch (ms) when [`FaultPoint::SlowTick`] fires.
+pub const SLOW_TICK_MS: u64 = 25;
+/// Injected send stall (ms) when [`FaultPoint::ClientStall`] fires.
+pub const CLIENT_STALL_MS: u64 = 250;
+
+const NUM_POINTS: usize = 5;
+
+impl FaultPoint {
+    fn index(self) -> usize {
+        match self {
+            FaultPoint::DecodePanic => 0,
+            FaultPoint::BackendPanic => 1,
+            FaultPoint::SlowTick => 2,
+            FaultPoint::ClientStall => 3,
+            FaultPoint::CorruptFrame => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPoint::DecodePanic => "decode_panic",
+            FaultPoint::BackendPanic => "backend_panic",
+            FaultPoint::SlowTick => "slow_tick",
+            FaultPoint::ClientStall => "client_stall",
+            FaultPoint::CorruptFrame => "corrupt_frame",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultPoint> {
+        match s {
+            "decode_panic" => Some(FaultPoint::DecodePanic),
+            "backend_panic" => Some(FaultPoint::BackendPanic),
+            "slow_tick" => Some(FaultPoint::SlowTick),
+            "client_stall" => Some(FaultPoint::ClientStall),
+            "corrupt_frame" => Some(FaultPoint::CorruptFrame),
+            _ => None,
+        }
+    }
+}
+
+/// One parsed rule: when an arrival at `point` fires.
+#[derive(Clone, Debug, PartialEq)]
+struct Rule {
+    point: FaultPoint,
+    /// Fire only on the Nth matching arrival (1-based), then never again.
+    nth: Option<u64>,
+    /// Match only arrivals with this key.
+    key: Option<u64>,
+    /// Fire with this probability, hashed from `(seed, point, key)`.
+    rate: Option<f64>,
+}
+
+/// A seeded, deterministic fault schedule.  Cheap to share
+/// (`Arc<FaultPlan>`); every decision is logged so tests can dump the
+/// realized schedule as an artifact.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<Rule>,
+    /// Per-point arrival counters (shared across threads; arrival order
+    /// at a single-threaded point — e.g. the AM worker — is
+    /// deterministic, which is what `@N` rules rely on).
+    arrivals: [AtomicU64; NUM_POINTS],
+    log: Mutex<Vec<String>>,
+}
+
+impl FaultPlan {
+    /// Parse `seed:spec` (see the module docs for the grammar).
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let (seed_s, spec) = s
+            .split_once(':')
+            .ok_or_else(|| format!("'{s}': expected 'seed:rule,rule,…'"))?;
+        let seed = seed_s
+            .trim()
+            .parse::<u64>()
+            .map_err(|_| format!("'{seed_s}' is not a u64 seed"))?;
+        let mut rules = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            rules.push(Self::parse_rule(part)?);
+        }
+        if rules.is_empty() {
+            return Err(format!("'{s}': no rules"));
+        }
+        Ok(FaultPlan::new(seed, rules))
+    }
+
+    fn parse_rule(part: &str) -> Result<Rule, String> {
+        // point [@nth] [#key] [~rate], markers in any order after point.
+        let end = part
+            .find(|c| c == '@' || c == '#' || c == '~')
+            .unwrap_or(part.len());
+        let point = FaultPoint::parse(&part[..end])
+            .ok_or_else(|| format!("unknown fault point '{}'", &part[..end]))?;
+        let mut rule = Rule { point, nth: None, key: None, rate: None };
+        let mut rest = &part[end..];
+        while !rest.is_empty() {
+            let marker = rest.as_bytes()[0];
+            let body = &rest[1..];
+            let stop = body
+                .find(|c| c == '@' || c == '#' || c == '~')
+                .unwrap_or(body.len());
+            let (val, tail) = body.split_at(stop);
+            match marker {
+                b'@' => {
+                    rule.nth = Some(
+                        val.parse::<u64>()
+                            .ok()
+                            .filter(|&n| n >= 1)
+                            .ok_or_else(|| format!("'@{val}' is not a 1-based count"))?,
+                    )
+                }
+                b'#' => {
+                    rule.key = Some(
+                        val.parse::<u64>()
+                            .map_err(|_| format!("'#{val}' is not a u64 key"))?,
+                    )
+                }
+                b'~' => {
+                    rule.rate = Some(
+                        val.parse::<f64>()
+                            .ok()
+                            .filter(|r| (0.0..=1.0).contains(r))
+                            .ok_or_else(|| format!("'~{val}' is not a rate in [0,1]"))?,
+                    )
+                }
+                _ => unreachable!("find matched a marker"),
+            }
+            rest = tail;
+        }
+        Ok(rule)
+    }
+
+    fn new(seed: u64, rules: Vec<Rule>) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rules,
+            arrivals: Default::default(),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Should the fault at `point` trigger for this arrival?  `key`
+    /// identifies the subject (stream id, model id, …).  Deterministic:
+    /// `@N` rules count arrivals at the point, `~R` rules hash
+    /// `(seed, point, key)` — both independent of wall clock.
+    pub fn fire(&self, point: FaultPoint, key: u64) -> bool {
+        let n = self.arrivals[point.index()].fetch_add(1, Ordering::Relaxed) + 1;
+        let mut fired = false;
+        for rule in &self.rules {
+            if rule.point != point {
+                continue;
+            }
+            if let Some(k) = rule.key {
+                if k != key {
+                    continue;
+                }
+            }
+            if let Some(nth) = rule.nth {
+                if n != nth {
+                    continue;
+                }
+            }
+            if let Some(rate) = rule.rate {
+                if self.unit_hash(point, key) >= rate {
+                    continue;
+                }
+            }
+            fired = true;
+            break;
+        }
+        if fired {
+            self.log
+                .lock()
+                .unwrap()
+                .push(format!("{} arrival={} key={}", point.name(), n, key));
+        }
+        fired
+    }
+
+    /// Key-stable unit-interval hash of `(seed, point, key)` (splitmix64
+    /// finalizer).
+    fn unit_hash(&self, point: FaultPoint, key: u64) -> f64 {
+        let mut z = self
+            .seed
+            .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(point.index() as u64 + 1))
+            .wrapping_add(key.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// The realized schedule so far: one line per fired fault, in firing
+    /// order.  Chaos CI uploads this as the run artifact.
+    pub fn schedule_log(&self) -> Vec<String> {
+        self.log.lock().unwrap().clone()
+    }
+}
+
+/// Convenience for injection points holding an `Option<Arc<FaultPlan>>`:
+/// `None` is a branch and nothing else.
+#[inline]
+pub fn fire(plan: &Option<Arc<FaultPlan>>, point: FaultPoint, key: u64) -> bool {
+    match plan {
+        None => false,
+        Some(p) => p.fire(point, key),
+    }
+}
+
+/// The process-wide plan from `QUANTASR_FAULTS`, parsed once.  Malformed
+/// specs warn and disable injection (knobs never panic a server).
+pub fn env_fault_plan() -> Option<Arc<FaultPlan>> {
+    static ONCE: OnceLock<Option<Arc<FaultPlan>>> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        let v = std::env::var("QUANTASR_FAULTS").ok()?;
+        match FaultPlan::parse(&v) {
+            Ok(p) => Some(Arc::new(p)),
+            Err(e) => {
+                eprintln!("QUANTASR_FAULTS={v}: {e}; fault injection disabled");
+                None
+            }
+        }
+    })
+    .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let p = FaultPlan::parse("42:decode_panic@1,backend_panic@2#1,slow_tick~0.5").unwrap();
+        assert_eq!(p.seed(), 42);
+        assert_eq!(p.rules.len(), 3);
+        assert_eq!(p.rules[0], Rule {
+            point: FaultPoint::DecodePanic,
+            nth: Some(1),
+            key: None,
+            rate: None
+        });
+        assert_eq!(p.rules[1], Rule {
+            point: FaultPoint::BackendPanic,
+            nth: Some(2),
+            key: Some(1),
+            rate: None
+        });
+        assert_eq!(p.rules[2].rate, Some(0.5));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "no-colon",
+            "x:decode_panic",
+            "1:unknown_point",
+            "1:decode_panic@0",
+            "1:decode_panic@x",
+            "1:slow_tick~1.5",
+            "1:",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn nth_rule_fires_exactly_once() {
+        let p = FaultPlan::parse("7:decode_panic@3").unwrap();
+        let fired: Vec<bool> = (0..6).map(|i| p.fire(FaultPoint::DecodePanic, i)).collect();
+        assert_eq!(fired, vec![false, false, true, false, false, false]);
+        assert_eq!(p.schedule_log().len(), 1);
+        assert!(p.schedule_log()[0].contains("decode_panic arrival=3"));
+    }
+
+    #[test]
+    fn key_filter_matches_only_its_key() {
+        let p = FaultPlan::parse("7:backend_panic#2").unwrap();
+        assert!(!p.fire(FaultPoint::BackendPanic, 0));
+        assert!(p.fire(FaultPoint::BackendPanic, 2));
+        assert!(!p.fire(FaultPoint::BackendPanic, 1));
+        assert!(p.fire(FaultPoint::BackendPanic, 2), "no-@ rules keep firing");
+        // Other points are untouched.
+        assert!(!p.fire(FaultPoint::DecodePanic, 2));
+    }
+
+    #[test]
+    fn rate_rules_are_key_stable_and_seed_sensitive() {
+        let a = FaultPlan::parse("1:slow_tick~0.5").unwrap();
+        let b = FaultPlan::parse("1:slow_tick~0.5").unwrap();
+        let seq_a: Vec<bool> = (0..64).map(|k| a.fire(FaultPoint::SlowTick, k)).collect();
+        let seq_b: Vec<bool> = (0..64).map(|k| b.fire(FaultPoint::SlowTick, k)).collect();
+        assert_eq!(seq_a, seq_b, "same seed, same schedule");
+        assert!(seq_a.iter().any(|&f| f) && seq_a.iter().any(|&f| !f));
+        let c = FaultPlan::parse("2:slow_tick~0.5").unwrap();
+        let seq_c: Vec<bool> = (0..64).map(|k| c.fire(FaultPoint::SlowTick, k)).collect();
+        assert_ne!(seq_a, seq_c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn disabled_plan_is_inert() {
+        let none: Option<Arc<FaultPlan>> = None;
+        assert!(!fire(&none, FaultPoint::DecodePanic, 0));
+        let some = Some(Arc::new(FaultPlan::parse("1:decode_panic@1").unwrap()));
+        assert!(fire(&some, FaultPoint::DecodePanic, 9));
+    }
+}

@@ -1,9 +1,10 @@
 //! Infrastructure the offline image forces us to own: RNG, bench harness,
-//! property-testing helpers, CLI parsing, and the persistent GEMM worker
-//! pool.
+//! property-testing helpers, CLI parsing, the persistent GEMM worker
+//! pool, and the deterministic fault-injection plan.
 
 pub mod bench;
 pub mod cli;
+pub mod fault;
 pub mod pool;
 pub mod prop;
 pub mod rng;

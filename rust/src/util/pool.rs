@@ -57,6 +57,12 @@ struct Slot {
     running: usize,
     /// Pool is being dropped: parked workers exit instead of waiting.
     shutdown: bool,
+    /// First panic payload captured on a pool thread during the current
+    /// job; `run` re-raises it on the submitting thread after the job is
+    /// fully drained.  This is what lets a serving layer above quarantine
+    /// a poisoned model with `catch_unwind` instead of losing the whole
+    /// process.
+    panic: Option<Box<dyn std::any::Any + Send>>,
 }
 
 struct Shared {
@@ -91,6 +97,7 @@ impl WorkerPool {
                 max_workers: 0,
                 running: 0,
                 shutdown: false,
+                panic: None,
             }),
             work: Condvar::new(),
             done: Condvar::new(),
@@ -123,10 +130,12 @@ impl WorkerPool {
     /// Execute `task(0..chunks)` across up to `nthreads` executors (the
     /// calling thread plus at most `nthreads − 1` pool workers; clamped
     /// to the spawned worker count).  Blocks until every chunk has run
-    /// and every worker has left the job.  Panics in `task` on a worker
-    /// thread abort the process (kernels must never unwind mid-GEMM); a
-    /// panic on the calling thread drains the job before unwinding, so
-    /// the task borrow never escapes this call either way.
+    /// and every worker has left the job.  A panic in `task` — on any
+    /// executor — drains the job (remaining chunks are abandoned, every
+    /// worker deregisters) and then resumes on the **submitting** thread,
+    /// so callers can `catch_unwind` a poisoned kernel and quarantine the
+    /// model instead of losing the process.  The task borrow never
+    /// escapes this call either way.
     pub fn run(&self, nthreads: usize, chunks: usize, task: &(dyn Fn(usize) + Sync)) {
         if chunks == 0 {
             return;
@@ -154,21 +163,32 @@ impl WorkerPool {
             self.shared.next.store(0, Ordering::Relaxed);
             s.chunks = chunks;
             s.max_workers = (nthreads - 1).min(self.workers);
+            s.panic = None;
             s.task = Some(TaskPtr(task_static));
             self.shared.work.notify_all();
         }
-        let _drain = JobGuard { shared: &self.shared, chunks };
-        // The submitter is always an executor.
-        loop {
-            let c = self.shared.next.fetch_add(1, Ordering::Relaxed);
-            if c >= chunks {
-                break;
+        {
+            let _drain = JobGuard { shared: &self.shared, chunks };
+            // The submitter is always an executor.
+            loop {
+                let c = self.shared.next.fetch_add(1, Ordering::Relaxed);
+                if c >= chunks {
+                    break;
+                }
+                task(c);
             }
-            task(c);
+            // JobGuard's drop closes the job and waits for stragglers
+            // (their chunk writes are ordered before its re-acquisition
+            // of the mutex).
         }
-        // JobGuard's drop closes the job and waits for stragglers (their
-        // chunk writes are ordered before its re-acquisition of the
-        // mutex).
+        // With the job fully drained, re-raise a pool-thread panic here on
+        // the submitting thread.  (If the submitter's own chunk panicked,
+        // we never get here — it unwinds through the guard directly, and
+        // the next `run` clears any concurrently captured payload.)
+        let payload = self.shared.m.lock().unwrap().panic.take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
     }
 
     /// Like [`run`](Self::run), but chunk `c` gets exclusive `&mut`
@@ -256,6 +276,7 @@ fn worker_loop(shared: &Shared) {
         let chunks = s.chunks;
         s.running += 1;
         drop(s);
+        let mut captured: Option<Box<dyn std::any::Any + Send>> = None;
         loop {
             let c = shared.next.fetch_add(1, Ordering::Relaxed);
             if c >= chunks {
@@ -263,16 +284,25 @@ fn worker_loop(shared: &Shared) {
             }
             // SAFETY: registered on the job (running > 0), so the
             // submitter cannot return and invalidate the pointer.  A
-            // panicking kernel would leave the submitter waiting forever
-            // (and the GEMM output half-written): abort instead.
+            // panicking chunk is caught, the chunk counter exhausted (no
+            // executor claims more work for this job), and the payload
+            // handed to the submitter, which resumes the unwind once the
+            // job is drained — the pool thread itself stays alive.
             let f: &(dyn Fn(usize) + Sync) = unsafe { &*task.0 };
-            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(c)));
-            if ok.is_err() {
-                eprintln!("gemm worker pool: task panicked on a pool thread; aborting");
-                std::process::abort();
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(c))) {
+                Ok(()) => {}
+                Err(p) => {
+                    shared.next.fetch_max(chunks, Ordering::Relaxed);
+                    captured = Some(p);
+                    break;
+                }
             }
         }
         s = shared.m.lock().unwrap();
+        if let Some(p) = captured {
+            // Keep the first payload if several workers panicked.
+            s.panic.get_or_insert(p);
+        }
         s.running -= 1;
         if s.running == 0 {
             shared.done.notify_all();
@@ -432,6 +462,30 @@ mod tests {
         });
         assert_eq!(sum.load(Ordering::Relaxed), 36);
         drop(pool); // joins; a hang here fails the test via timeout
+    }
+
+    #[test]
+    fn pool_thread_panic_resumes_on_submitter_and_pool_survives() {
+        let pool = WorkerPool::new(3);
+        // Chunk 5 panics no matter which executor claims it; the panic
+        // must surface on the submitting thread (catchable), and the pool
+        // must keep working afterwards.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, 64, &|c| {
+                if c == 5 {
+                    panic!("poisoned chunk");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "panic must propagate out of run()");
+        for round in 0..5u64 {
+            let sum = AtomicU64::new(0);
+            pool.run(4, 33, &|c| {
+                sum.fetch_add(round + c as u64, Ordering::Relaxed);
+            });
+            let want: u64 = (0..33u64).map(|c| round + c).sum();
+            assert_eq!(sum.load(Ordering::Relaxed), want, "pool reusable after panic");
+        }
     }
 
     #[test]

@@ -1,0 +1,514 @@
+//! Chaos suite: the hardened serving plane under scripted, deterministic
+//! fault schedules ([`quantasr::util::fault`]).
+//!
+//! Every scenario drives the real engine (and, for the wire-level ones,
+//! the real TCP server) through a seeded [`FaultPlan`] and asserts the
+//! robustness contract:
+//!
+//! - **no deadlock** — every wait in this file is bounded; a hang is a
+//!   test failure, not a CI timeout;
+//! - **bit-exact survivors** — streams the fault did not touch produce
+//!   output identical to their solo reference run (on whatever kernel
+//!   rung `QUANTASR_KERNEL` forces — the chaos CI job runs the matrix);
+//! - **resources come back** — admission slots freed by the reaper,
+//!   model slots freed by forced unloads and quarantines, are reusable;
+//! - **metrics reconcile** — every injected fault is visible in exactly
+//!   one counter (`reaped_streams` / `forced_cancels` /
+//!   `quarantined_jobs`).
+//!
+//! The determinism test replays the same plan twice and requires the two
+//! realized schedules to match line for line, then writes the schedule to
+//! `CHAOS_schedule.log` (uploaded as the chaos CI artifact).  Engine
+//! configs here always set [`EngineConfig::faults`] explicitly, so a
+//! process-wide `QUANTASR_FAULTS` (the CI job pins one) never leaks into
+//! a scenario that scripts its own plan.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use quantasr::coordinator::batcher::BatchPolicy;
+use quantasr::coordinator::server::{serve_with_loader, Client, ModelLoader, ServerFrame};
+use quantasr::coordinator::{Engine, EngineConfig, StreamEnd};
+use quantasr::decoder::DecoderConfig;
+use quantasr::eval::build_decoder;
+use quantasr::frontend::spec;
+use quantasr::nn::{AcousticModel, ExecMode};
+use quantasr::sched::{
+    AdmissionConfig, ModelParams, Priority, QuantumPolicy, RejectReason, StreamOptions,
+};
+use quantasr::sim::World;
+use quantasr::util::fault::FaultPlan;
+use quantasr::util::rng::Xoshiro256;
+
+fn frames(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::new(seed);
+    let mut v = vec![0f32; n * spec::FEAT_DIM];
+    for x in v.iter_mut() {
+        *x = rng.normal() as f32;
+    }
+    v
+}
+
+fn greedy_ref(model: &AcousticModel, f: &[f32], n: usize) -> Vec<u32> {
+    let lp = model.forward_utt(f, n);
+    quantasr::decoder::ctc::greedy(&lp, model.num_labels())
+}
+
+/// Engine config for chaos scenarios.  `faults` is a required argument —
+/// never inherited from the process environment — so each scenario's
+/// schedule is exactly the one it scripts.
+fn chaos_config(
+    max_batch: usize,
+    faults: Option<Arc<FaultPlan>>,
+    idle_ms: Option<u64>,
+    deadline_ms: Option<u64>,
+) -> EngineConfig {
+    EngineConfig {
+        policy: BatchPolicy { max_batch, deadline: Duration::from_millis(1) },
+        decode_workers: 2,
+        max_pending_frames: 64,
+        quantum: QuantumPolicy { quantum_ticks: 4 },
+        stream_idle: idle_ms.map(Duration::from_millis),
+        stream_deadline: deadline_ms.map(Duration::from_millis),
+        faults,
+        ..EngineConfig::default()
+    }
+}
+
+fn plan(spec: &str) -> Arc<FaultPlan> {
+    Arc::new(FaultPlan::parse(spec).expect("test fault spec parses"))
+}
+
+fn small_engine(
+    faults: Option<Arc<FaultPlan>>,
+    idle_ms: Option<u64>,
+    deadline_ms: Option<u64>,
+) -> (Arc<AcousticModel>, Arc<Engine>) {
+    let qam = common::random_model(2, 16, Some(8));
+    let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    let eng =
+        Arc::new(Engine::start(model.clone(), decoder, chaos_config(2, faults, idle_ms, deadline_ms)));
+    (model, eng)
+}
+
+/// Run one utterance synchronously on `model_id` and return its result
+/// (whatever its [`StreamEnd`]).  Bounded: a missing result is a panic,
+/// not a hang.
+fn run_utt(
+    eng: &Engine,
+    model_id: usize,
+    content: &[f32],
+) -> quantasr::coordinator::FinalResult {
+    let (id, rx) = eng
+        .try_open_stream(StreamOptions { model: model_id, priority: Priority::Interactive })
+        .expect("admission");
+    eng.push_frames(id, content).unwrap();
+    eng.finish_stream(id).unwrap();
+    rx.recv_timeout(Duration::from_secs(30)).expect("utterance result within 30 s")
+}
+
+/// A silent client's stream is reaped at the idle timeout, its admission
+/// slot comes back, and a full utterance then runs bit-exact on the
+/// reclaimed capacity.
+#[test]
+fn idle_reaper_frees_silent_streams_and_their_slots() {
+    let qam = common::random_model(2, 16, Some(8));
+    let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    let mut cfg = chaos_config(2, None, Some(150), None);
+    // One admission slot total: the silent stream provably pins it.
+    cfg.admission = AdmissionConfig { max_live_streams: 1 };
+    let eng = Engine::start(model.clone(), decoder, cfg);
+
+    // A stream that never sends a frame and never finishes.
+    let (_silent, silent_rx) = eng.try_open_stream(StreamOptions::default()).expect("admission");
+    match eng.try_open_stream(StreamOptions::default()) {
+        Err(RejectReason::Saturated { live: 1, cap: 1 }) => {}
+        other => panic!("the silent stream should pin the only slot, got {other:?}"),
+    }
+    // The reaper cancels it with an idle reason, freeing the slot.
+    let r = silent_rx.recv_timeout(Duration::from_secs(10)).expect("reaped within 10 s");
+    match &r.end {
+        StreamEnd::Cancelled(why) => assert!(why.contains("idle"), "{why}"),
+        other => panic!("want an idle cancel, got {other:?}"),
+    }
+    assert_eq!(*eng.metrics().reaped_streams.lock().unwrap(), 1);
+
+    // The reclaimed slot serves a normal utterance, bit-exact.
+    let n = 25usize;
+    let content = frames(n, 0xA11CE);
+    let want = greedy_ref(&model, &content, n);
+    let r = run_utt(&eng, 0, &content);
+    assert_eq!(r.end, StreamEnd::Complete);
+    assert_eq!(r.phones, want, "survivor numerics changed after a reap");
+    assert_eq!(*eng.metrics().reaped_streams.lock().unwrap(), 1, "no spurious reaps");
+}
+
+/// A stream that overstays the utterance deadline is cancelled even
+/// while its client keeps the connection open; a stream that finishes in
+/// time is untouched.
+#[test]
+fn utterance_deadline_reaps_overlong_streams() {
+    let (model, eng) = small_engine(None, None, Some(250));
+
+    // Finishes well inside the deadline: completes normally.
+    let n = 10usize;
+    let content = frames(n, 0xFA57);
+    let want = greedy_ref(&model, &content, n);
+    let r = run_utt(&eng, 0, &content);
+    assert_eq!(r.end, StreamEnd::Complete);
+    assert_eq!(r.phones, want);
+
+    // Pushes a little audio, then never signals finish.
+    let (id, rx) = eng.try_open_stream(StreamOptions::default()).expect("admission");
+    eng.push_frames(id, &frames(5, 0x510)).unwrap();
+    let r = rx.recv_timeout(Duration::from_secs(10)).expect("deadline reap within 10 s");
+    match &r.end {
+        StreamEnd::Cancelled(why) => assert!(why.contains("deadline"), "{why}"),
+        other => panic!("want a deadline cancel, got {other:?}"),
+    }
+    assert_eq!(*eng.metrics().reaped_streams.lock().unwrap(), 1);
+}
+
+/// A never-finishing stream cannot pin an unload forever: the bounded
+/// wait reports it, the forced retry cancels it within the deadline, and
+/// the freed slot hot-loads a fresh model that serves bit-exact.
+#[test]
+fn forced_unload_is_bounded_and_the_slot_is_reusable() {
+    let (_model_a, eng) = small_engine(None, None, None);
+    let qam_b = common::random_model_seeded(2, 12, Some(6), 0xB0B);
+    let model_b = Arc::new(AcousticModel::from_qam(&qam_b, ExecMode::Quant).unwrap());
+    let id_b = eng
+        .load_model(model_b, ModelParams { weight: 1, lanes: Some(2) })
+        .expect("hot load");
+    assert_eq!(id_b, 1);
+
+    // A stream on model 1 that never finishes (a stalled client).
+    let (sid, srx) = eng
+        .try_open_stream(StreamOptions { model: id_b, priority: Priority::Interactive })
+        .expect("admission");
+    eng.push_frames(sid, &frames(8, 0x57A11)).unwrap();
+
+    // Bounded, non-forced: expires with an actionable error.
+    let err = eng
+        .unload_model_deadline(id_b, Duration::from_millis(200), false)
+        .expect_err("a live stream must hold the drain past the deadline");
+    assert!(err.contains("1 live stream"), "{err}");
+    assert!(err.contains("force"), "{err}");
+
+    // Forced: completes within deadline + teardown, never hangs.
+    let t0 = Instant::now();
+    eng.unload_model_deadline(id_b, Duration::from_millis(200), true)
+        .expect("forced unload completes");
+    assert!(t0.elapsed() < Duration::from_secs(10), "forced unload took {:?}", t0.elapsed());
+    let r = srx.recv_timeout(Duration::from_secs(5)).expect("survivor got its cancel");
+    match &r.end {
+        StreamEnd::Cancelled(why) => assert!(why.contains("forced"), "{why}"),
+        other => panic!("want a forced-unload cancel, got {other:?}"),
+    }
+    assert_eq!(*eng.metrics().forced_cancels.lock().unwrap(), 1);
+    assert_eq!(*eng.metrics().reaped_streams.lock().unwrap(), 0, "metrics reconcile");
+
+    // The slot is reusable: reload and serve bit-exact.
+    let qam_c = common::random_model_seeded(2, 12, Some(6), 0xCAFE);
+    let model_c = Arc::new(AcousticModel::from_qam(&qam_c, ExecMode::Quant).unwrap());
+    let id_c = eng
+        .load_model(model_c.clone(), ModelParams { weight: 1, lanes: Some(2) })
+        .expect("slot reuse after forced unload");
+    assert_eq!(id_c, 1, "the forced-out slot is reused");
+    let n = 20usize;
+    let content = frames(n, 0xC0DE);
+    let want = greedy_ref(&model_c, &content, n);
+    let r = run_utt(&eng, id_c, &content);
+    assert_eq!(r.end, StreamEnd::Complete);
+    assert_eq!(r.phones, want, "reused slot numerics");
+}
+
+/// An injected decode panic fails exactly one utterance; its neighbors
+/// before and after are bit-exact and the engine keeps serving.
+#[test]
+fn decode_panic_quarantines_one_utterance_only() {
+    let p = plan("77:decode_panic@1");
+    let (model, eng) = small_engine(Some(p.clone()), None, None);
+
+    let n = 15usize;
+    for i in 0..3u64 {
+        let content = frames(n, 0xD0_0D + i);
+        let want = greedy_ref(&model, &content, n);
+        let r = run_utt(&eng, 0, &content);
+        if i == 0 {
+            match &r.end {
+                StreamEnd::Failed(why) => assert!(why.contains("decode panicked"), "{why}"),
+                other => panic!("the first decode must fail by injection, got {other:?}"),
+            }
+            assert!(r.words.is_empty() && r.phones.is_empty());
+        } else {
+            assert_eq!(r.end, StreamEnd::Complete, "utterance {i}");
+            assert_eq!(r.phones, want, "survivor {i} not bit-exact after a panic");
+        }
+    }
+    assert_eq!(*eng.metrics().quarantined_jobs.lock().unwrap(), 1);
+    assert_eq!(p.schedule_log().len(), 1);
+    assert!(p.schedule_log()[0].contains("decode_panic"), "{:?}", p.schedule_log());
+}
+
+/// A backend panic quarantines its model — newcomers are rejected with a
+/// reason, its streams are cancelled — while the other model and the
+/// engine keep serving; an unload then frees the slot for a clean reload.
+#[test]
+fn backend_panic_quarantines_the_model_not_the_engine() {
+    // `@1#1`: fire on the first batched-step arrival, and only if it is
+    // model 1 stepping.  The test keeps model 0 idle until after the
+    // quarantine, so that first arrival is deterministically model 1's —
+    // and the reloaded slot (arrivals 2+) can never re-trip it.
+    let p = plan("9:backend_panic@1#1");
+    let (model_a, eng) = small_engine(Some(p.clone()), None, None);
+    let qam_b = common::random_model_seeded(2, 12, Some(6), 0xBAD);
+    let model_b = Arc::new(AcousticModel::from_qam(&qam_b, ExecMode::Quant).unwrap());
+    let id_b = eng
+        .load_model(model_b, ModelParams { weight: 1, lanes: Some(2) })
+        .expect("hot load");
+    assert_eq!(id_b, 1);
+
+    // First step of model 1 panics: its stream is cancelled, the slot is
+    // quarantined.
+    let (sid, srx) = eng
+        .try_open_stream(StreamOptions { model: id_b, priority: Priority::Interactive })
+        .expect("admission");
+    eng.push_frames(sid, &frames(10, 0xEE)).unwrap();
+    let r = srx.recv_timeout(Duration::from_secs(10)).expect("quarantine cancel within 10 s");
+    match &r.end {
+        StreamEnd::Cancelled(why) => assert!(why.contains("quarantined"), "{why}"),
+        other => panic!("want a quarantine cancel, got {other:?}"),
+    }
+    match eng.try_open_stream(StreamOptions { model: id_b, priority: Priority::Interactive }) {
+        Err(RejectReason::ModelQuarantined { model: 1 }) => {}
+        other => panic!("newcomers must reject on the quarantined model, got {other:?}"),
+    }
+    let row = eng.registry().into_iter().find(|m| m.id == 1).expect("slot 1 registered");
+    assert!(row.quarantined);
+    assert!(*eng.metrics().quarantined_jobs.lock().unwrap() >= 1);
+    assert!(eng.metrics().per_model.lock().unwrap()[1].quarantined);
+
+    // Blast radius check: model 0 is untouched and bit-exact.
+    let n = 20usize;
+    let content = frames(n, 0xAB1E);
+    let want = greedy_ref(&model_a, &content, n);
+    let r = run_utt(&eng, 0, &content);
+    assert_eq!(r.end, StreamEnd::Complete);
+    assert_eq!(r.phones, want, "model 0 numerics after model 1's panic");
+
+    // Unload tears the poisoned slot down; a reload reuses it cleanly.
+    eng.unload_model(id_b).expect("unloading a quarantined model");
+    let qam_c = common::random_model_seeded(2, 12, Some(6), 0xFEED);
+    let model_c = Arc::new(AcousticModel::from_qam(&qam_c, ExecMode::Quant).unwrap());
+    let id_c = eng
+        .load_model(model_c.clone(), ModelParams { weight: 1, lanes: Some(2) })
+        .expect("slot reuse after quarantine");
+    assert_eq!(id_c, 1);
+    assert!(!eng.metrics().per_model.lock().unwrap()[1].quarantined, "reused row is clean");
+    let content = frames(n, 0x1DEA);
+    let want = greedy_ref(&model_c, &content, n);
+    let r = run_utt(&eng, id_c, &content);
+    assert_eq!(r.end, StreamEnd::Complete);
+    assert_eq!(r.phones, want, "reloaded slot numerics");
+}
+
+/// Stretched ticks change *when* work happens, never *what* it computes:
+/// concurrent streams under a probabilistic slow-tick fault stay
+/// bit-exact against their solo references.
+#[test]
+fn slow_ticks_never_change_results() {
+    let (model, eng) = small_engine(Some(plan("11:slow_tick~0.4")), None, None);
+    let n = 60usize;
+    let contents: Vec<Vec<f32>> = (0..3).map(|i| frames(n, 0x700 + i as u64)).collect();
+    let wants: Vec<Vec<u32>> = contents.iter().map(|c| greedy_ref(&model, c, n)).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = contents
+            .iter()
+            .map(|content| {
+                let eng = eng.clone();
+                scope.spawn(move || {
+                    let (id, rx) = eng.try_open_stream(StreamOptions::default()).unwrap();
+                    eng.push_frames(id, content).unwrap();
+                    eng.finish_stream(id).unwrap();
+                    rx.recv_timeout(Duration::from_secs(30)).expect("result under slow ticks")
+                })
+            })
+            .collect();
+        for (h, want) in handles.into_iter().zip(&wants) {
+            let r = h.join().unwrap();
+            assert_eq!(r.end, StreamEnd::Complete);
+            assert_eq!(&r.phones, want, "slow ticks changed numerics");
+        }
+    });
+}
+
+/// The same seeded plan realizes the same schedule on two independent
+/// engine runs — which is what makes a failing chaos run replayable from
+/// its seed.  The realized schedule is written to `CHAOS_schedule.log`
+/// (the chaos CI job uploads it as the run artifact), and the fault
+/// counters reconcile exactly with the schedule.
+#[test]
+fn fault_schedules_are_deterministic_and_logged() {
+    let spec =
+        std::env::var("QUANTASR_FAULTS").unwrap_or_else(|_| "77:decode_panic@1,decode_panic@3".into());
+    let n = 12usize;
+    let run = |seed_base: u64| -> (Vec<String>, u64, u64) {
+        let p = plan(&spec);
+        let (model, eng) = small_engine(Some(p.clone()), None, None);
+        let mut completed = 0u64;
+        for i in 0..4u64 {
+            let content = frames(n, seed_base + i);
+            let want = greedy_ref(&model, &content, n);
+            let r = run_utt(&eng, 0, &content);
+            if r.end == StreamEnd::Complete {
+                completed += 1;
+                assert_eq!(r.phones, want, "surviving utterance {i}");
+            }
+        }
+        let quarantined = *eng.metrics().quarantined_jobs.lock().unwrap();
+        (p.schedule_log(), completed, quarantined)
+    };
+    // Same plan, same per-utterance arrival order ⇒ same realized
+    // schedule.  (Input *content* differs across the two runs on purpose:
+    // the schedule depends on the plan, not the audio.)
+    let (log_a, completed_a, quarantined_a) = run(0x1000);
+    let (log_b, _, _) = run(0x2000);
+    assert_eq!(log_a, log_b, "same seed must realize the same schedule");
+    // Metrics reconcile: every fired decode_panic is one quarantined job
+    // and one non-completed utterance; nothing else fired.
+    let fired = log_a.iter().filter(|l| l.contains("decode_panic")).count() as u64;
+    assert_eq!(fired, log_a.len() as u64, "only scripted points fired: {log_a:?}");
+    assert_eq!(quarantined_a, fired);
+    assert_eq!(completed_a, 4 - fired);
+
+    let mut artifact = format!("# QUANTASR_FAULTS={spec}\n");
+    for line in &log_a {
+        artifact.push_str(line);
+        artifact.push('\n');
+    }
+    std::fs::write("CHAOS_schedule.log", artifact).expect("write schedule artifact");
+}
+
+fn spawn_server(
+    eng: Arc<Engine>,
+    stop: Arc<AtomicBool>,
+) -> (String, std::thread::JoinHandle<()>) {
+    let loader: ModelLoader<AcousticModel> = Arc::new(|spec: &str| {
+        anyhow::ensure!(spec != "missing.qam", "no such model: {spec}");
+        let qam = common::random_model_seeded(2, 12, Some(6), 0x7CB);
+        Ok(Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant)?))
+    });
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve_with_loader(eng, "127.0.0.1:0", stop, Some(loader), move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .expect("server failed");
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap().to_string();
+    (addr, server)
+}
+
+/// Wire-level acceptance: a stalled client holding a live stream cannot
+/// pin an operator's unload.  The bounded 'D' admin frame reports the
+/// survivor, the forced retry cancels it, the abandoned client reads its
+/// `'C'` frame, and the freed slot hot-loads again over the same wire.
+#[test]
+fn tcp_stalled_client_cannot_pin_an_unload() {
+    let (_model, eng) = small_engine(None, None, None);
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr, server) = spawn_server(eng.clone(), stop.clone());
+
+    let mut admin = Client::connect(&addr).unwrap();
+    let id_b = admin.load_model("b.qam", 1, 2).expect("hot load over TCP");
+    assert_eq!(id_b, 1);
+
+    // The stall: one audio chunk (delayed by the client_stall fault to
+    // exercise that point too), then silence — never an 'E'.
+    let mut stalled = Client::connect(&addr).unwrap();
+    stalled.set_fault_plan(Some(plan("5:client_stall@1")));
+    stalled.set_model(id_b).unwrap();
+    stalled.send_audio(&[0.01f32; 1600]).unwrap();
+    // Wait until the server has opened the stream (registry shows it).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let reg = admin.query_registry().unwrap();
+        if reg.iter().any(|e| e.id == 1 && e.live_streams == 1) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "stream never reached the engine");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Bounded non-forced unload: expires with the survivor count.
+    let err = admin
+        .unload_model_deadline(id_b, Duration::from_millis(300), false)
+        .expect_err("the stalled stream must hold the drain");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("1 live stream") && msg.contains("force"), "{msg}");
+
+    // Forced: bounded completion, slot freed, stalled client told why.
+    let t0 = Instant::now();
+    admin
+        .unload_model_deadline(id_b, Duration::from_millis(300), true)
+        .expect("forced unload over TCP");
+    assert!(t0.elapsed() < Duration::from_secs(10), "forced unload took {:?}", t0.elapsed());
+    match stalled.read_terminal().expect("the abandoned stream's terminal frame") {
+        ServerFrame::Cancelled(why) => assert!(why.contains("forced"), "{why}"),
+        other => panic!("want a 'C' cancel, got {}", other.kind()),
+    }
+    assert_eq!(admin.query_registry().unwrap().len(), 1);
+    assert_eq!(*eng.metrics().forced_cancels.lock().unwrap(), 1);
+
+    // The slot serves again end to end.
+    let id2 = admin.load_model("b2.qam", 1, 2).expect("reload after forced unload");
+    assert_eq!(id2, 1);
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_model(id2).unwrap();
+    c.send_audio(&[0.01f32; 1600]).unwrap();
+    let r = c.finish().expect("stream on the reloaded slot");
+    assert!(r.server_latency_ms >= 0.0);
+
+    stop.store(true, Ordering::SeqCst);
+    drop(admin);
+    server.join().unwrap();
+}
+
+/// A corrupted outbound terminal frame surfaces as a clean protocol
+/// error on the one client it hit; the server connection loop and every
+/// later stream are unaffected.
+#[test]
+fn tcp_corrupt_frame_hits_one_client_and_the_server_survives() {
+    let p = plan("3:corrupt_frame@1");
+    let (_model, eng) = small_engine(Some(p.clone()), None, None);
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr, server) = spawn_server(eng, stop.clone());
+
+    // First terminal frame is corrupted: the client sees a structured
+    // parse error, not a hang and not a panic.
+    let mut c1 = Client::connect(&addr).unwrap();
+    c1.set_io_timeout(Some(Duration::from_secs(10))).unwrap();
+    c1.send_audio(&[0.01f32; 1600]).unwrap();
+    let err = c1.finish().expect_err("the corrupted frame must not parse");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown server tag"), "{msg}");
+    assert_eq!(p.schedule_log().len(), 1, "{:?}", p.schedule_log());
+    assert!(p.schedule_log()[0].contains("corrupt_frame"));
+
+    // The next stream on a fresh connection completes normally.
+    let mut c2 = Client::connect(&addr).unwrap();
+    c2.send_audio(&[0.01f32; 1600]).unwrap();
+    let r = c2.finish().expect("the server must survive a corrupt-frame fault");
+    assert!(r.server_latency_ms >= 0.0);
+
+    stop.store(true, Ordering::SeqCst);
+    server.join().unwrap();
+}
