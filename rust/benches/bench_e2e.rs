@@ -6,7 +6,12 @@
 //!     batching ablation);
 //! (c) per-tick state movement: the legacy gather/scatter batch assembly
 //!     vs in-place `BatchArena` lane stepping — the copies the
-//!     lane-resident engine eliminated.
+//!     lane-resident engine eliminated;
+//! (h) the overload-control plane under deliberate abuse: a Bulk flood
+//!     plus a scripted `overload_tick` fault window drive the brownout
+//!     controller through shed → reject → recover while interactive
+//!     finalize latency is sampled before/during/after, and a canaried
+//!     zero-downtime swap is timed against a constant admission knocker.
 //!
 //! Results are also written to `BENCH_engine.json` so the perf trajectory
 //! is recorded across PRs.
@@ -14,7 +19,8 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use quantasr::coordinator::batcher::BatchPolicy;
 use quantasr::coordinator::{Engine, EngineConfig};
@@ -23,9 +29,12 @@ use quantasr::eval::build_decoder;
 use quantasr::frontend::spec;
 use quantasr::io::model_fmt::{ModelHeader, QamFile, Tensor};
 use quantasr::nn::{AcousticModel, ExecMode};
-use quantasr::sched::{ModelParams, ModelRegistry, Priority, QuantumPolicy, StreamOptions};
+use quantasr::sched::{
+    ModelParams, ModelRegistry, Priority, QuantumPolicy, RejectReason, StreamOptions,
+};
 use quantasr::sim::World;
 use quantasr::util::bench::{fmt_ns, Bench, Measurement};
+use quantasr::util::fault::FaultPlan;
 use quantasr::util::rng::Xoshiro256;
 
 fn random_qam(layers: usize, cells: usize, proj: Option<usize>) -> QamFile {
@@ -500,6 +509,301 @@ fn main() {
         tick_frontend_s = frontend_s;
     }
 
+    // (h) the overload-control plane under deliberate abuse.  Engine A
+    // (no faults) records the clean interactive baseline and the cost of
+    // a canaried zero-downtime swap; engine B runs the same config with
+    // a scripted plan forcing `overload_tick` on its first flushes, so
+    // the brownout controller walks shed (stage 1) → admission rejection
+    // (stage 2) → recovery while a Bulk flood and paced interactive
+    // utterances fight over 4 lanes.  Knockers probe admission every few
+    // ms throughout: the longest success-to-success gap is the outage
+    // the brownout (or the swap) actually cost newcomers.
+    println!("\n== overload: brownout shed/reject/recover + swap admission gap ==");
+    let overload_json: String;
+    {
+        // Forced flush arrivals: enough to pin stage 2 for a measurable
+        // window, few enough that the heavy phase itself consumes most
+        // of them (leftovers drain at the 300 ms recovery trickle).
+        const OV_FORCED: usize = 60;
+        fn pct(v: &mut [f64], q: f64) -> f64 {
+            if v.is_empty() {
+                return 0.0;
+            }
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[((v.len() - 1) as f64 * q) as usize]
+        }
+        // Pace one 40-frame utterance on an already-open stream (2
+        // frames every 8 ms, the live-dictation cadence) and record its
+        // finalize latency.  Push/finish errors mean the stream was shed
+        // mid-flight — the sample is simply dropped.
+        fn pump(
+            engine: &Engine,
+            id: u64,
+            rx: &std::sync::mpsc::Receiver<quantasr::coordinator::FinalResult>,
+            seed: u64,
+            out: &Mutex<Vec<f64>>,
+        ) {
+            let mut frames = vec![0f32; 40 * spec::FEAT_DIM];
+            Xoshiro256::new(seed).fill_normal(&mut frames);
+            for chunk in frames.chunks(2 * spec::FEAT_DIM) {
+                if engine.push_frames(id, chunk).is_err() {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(8));
+            }
+            if engine.finish_stream(id).is_err() {
+                return;
+            }
+            if let Ok(fin) = rx.recv() {
+                out.lock().unwrap().push(fin.finalize_latency.as_secs_f64() * 1e3);
+            }
+        }
+        // A rejected open (brownout window) drops the sample — the
+        // knocker is what counts rejections.
+        fn utter(engine: &Engine, seed: u64, out: &Mutex<Vec<f64>>) {
+            if let Ok((id, rx)) = engine
+                .try_open_stream(StreamOptions { model: 0, priority: Priority::Interactive })
+            {
+                pump(engine, id, &rx, seed, out);
+            }
+        }
+        let mk_cfg = |faults: Option<Arc<FaultPlan>>| EngineConfig {
+            policy: BatchPolicy { max_batch: 4, deadline: Duration::from_millis(25) },
+            decode_workers: 2,
+            max_pending_frames: 64,
+            quantum: QuantumPolicy { quantum_ticks: 8 },
+            // Hermetic against ambient env (the CI overload job pins
+            // QUANTASR_FAULTS for the chaos step; nothing may leak here).
+            stream_idle: None,
+            stream_deadline: None,
+            faults,
+            mem_budget: None,
+            ..EngineConfig::default()
+        };
+
+        // --- engine A: clean baseline, then a swap under a knocker ---
+        let (mut before, swap_ms, swap_fails, swap_gap_ms);
+        {
+            let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+            let engine = Arc::new(Engine::start(model, decoder.clone(), mk_cfg(None)));
+            let lat = Mutex::new(Vec::new());
+            std::thread::scope(|scope| {
+                for t in 0..4u64 {
+                    let engine = engine.clone();
+                    let lat = &lat;
+                    scope.spawn(move || {
+                        for u in 0..2u64 {
+                            utter(&engine, 0xA000 + t * 8 + u, lat);
+                        }
+                    });
+                }
+            });
+            before = lat.into_inner().unwrap();
+            let stop = AtomicBool::new(false);
+            let (fails, gap_ms, t_swap) = std::thread::scope(|scope| {
+                let knock = {
+                    let engine = engine.clone();
+                    let stop = &stop;
+                    scope.spawn(move || {
+                        let (mut fails, mut gap_ms) = (0u64, 0f64);
+                        let mut last_ok: Option<Instant> = None;
+                        while !stop.load(Ordering::SeqCst) {
+                            match engine.try_open_stream(StreamOptions {
+                                model: 0,
+                                priority: Priority::Interactive,
+                            }) {
+                                Ok((id, rx)) => {
+                                    let now = Instant::now();
+                                    if let Some(prev) = last_ok {
+                                        gap_ms =
+                                            gap_ms.max((now - prev).as_secs_f64() * 1e3);
+                                    }
+                                    last_ok = Some(now);
+                                    let _ = engine.finish_stream(id);
+                                    let _ = rx.recv();
+                                }
+                                Err(_) => fails += 1,
+                            }
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        (fails, gap_ms)
+                    })
+                };
+                std::thread::sleep(Duration::from_millis(30));
+                let replacement =
+                    Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+                let t0 = Instant::now();
+                engine
+                    .swap_model(0, replacement, ModelParams::default())
+                    .expect("clean swap must succeed");
+                let t_swap = t0.elapsed().as_secs_f64() * 1e3;
+                std::thread::sleep(Duration::from_millis(30));
+                stop.store(true, Ordering::SeqCst);
+                let (fails, gap_ms) = knock.join().unwrap();
+                (fails, gap_ms, t_swap)
+            });
+            swap_ms = t_swap;
+            swap_fails = fails;
+            swap_gap_ms = gap_ms;
+        }
+
+        // --- engine B: forced brownout window ---
+        let rules = (1..=OV_FORCED)
+            .map(|i| format!("overload_tick@{i}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let plan = Arc::new(FaultPlan::parse(&format!("1009:{rules}")).unwrap());
+        let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+        let engine = Arc::new(Engine::start(model, decoder.clone(), mk_cfg(Some(plan))));
+        // Open everything while the engine is quiescent: no pending
+        // frames ⇒ no flushes ⇒ the forced window hasn't started, so
+        // every admission below lands on brownout stage 0.
+        let open = |priority: Priority| {
+            engine
+                .try_open_stream(StreamOptions { model: 0, priority })
+                .expect("quiescent admission")
+        };
+        let (anchor_id, anchor_rx) = open(Priority::Interactive);
+        let inter: Vec<_> = (0..8).map(|_| open(Priority::Interactive)).collect();
+        let bulk: Vec<_> = (0..6).map(|_| open(Priority::Bulk)).collect();
+        let stop_flood = AtomicBool::new(false);
+        let stop_knock = AtomicBool::new(false);
+        let during = Mutex::new(Vec::new());
+        let mut recovery_ms = 0f64;
+        let (rejects_seen, outage_ms) = std::thread::scope(|scope| {
+            for (i, (id, rx)) in bulk.into_iter().enumerate() {
+                let engine = engine.clone();
+                let stop_flood = &stop_flood;
+                let mut chunk = vec![0f32; spec::FEAT_DIM * 16];
+                Xoshiro256::new(0xB000 + i as u64).fill_normal(&mut chunk);
+                scope.spawn(move || {
+                    // Runs until shed ("unknown stream" after the cancel)
+                    // or told to stop; backpressure paces the loop.
+                    while !stop_flood.load(Ordering::SeqCst)
+                        && engine.push_frames(id, &chunk).is_ok()
+                    {}
+                    let _ = engine.finish_stream(id);
+                    let _ = rx.recv();
+                });
+            }
+            let pumps: Vec<_> = inter
+                .into_iter()
+                .enumerate()
+                .map(|(i, (id, rx))| {
+                    let engine = engine.clone();
+                    let during = &during;
+                    scope.spawn(move || {
+                        pump(&engine, id, &rx, 0xD000 + i as u64, during)
+                    })
+                })
+                .collect();
+            let knock = {
+                let engine = engine.clone();
+                let stop_knock = &stop_knock;
+                scope.spawn(move || {
+                    let (mut rejects, mut outage_ms) = (0u64, 0f64);
+                    let mut last_ok: Option<Instant> = None;
+                    while !stop_knock.load(Ordering::SeqCst) {
+                        match engine.try_open_stream(StreamOptions {
+                            model: 0,
+                            priority: Priority::Interactive,
+                        }) {
+                            Ok((id, rx)) => {
+                                let now = Instant::now();
+                                if let Some(prev) = last_ok {
+                                    outage_ms =
+                                        outage_ms.max((now - prev).as_secs_f64() * 1e3);
+                                }
+                                last_ok = Some(now);
+                                let _ = engine.finish_stream(id);
+                                let _ = rx.recv();
+                            }
+                            Err(RejectReason::Brownout) => rejects += 1,
+                            Err(_) => {}
+                        }
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    (rejects, outage_ms)
+                })
+            };
+            for p in pumps {
+                let _ = p.join();
+            }
+            // Recovery: trickle one frame every 300 ms on the anchor
+            // (gap > the brownout controller's 250 ms calm threshold ⇒
+            // ratio 0) until the stage returns to 0.  Each trickle also
+            // drains one leftover forced arrival, so this terminates.
+            let t0 = Instant::now();
+            let mut frame = vec![0f32; spec::FEAT_DIM];
+            Xoshiro256::new(0xF00D).fill_normal(&mut frame);
+            for _ in 0..80 {
+                if engine.overload_info().brownout_stage == 0 {
+                    break;
+                }
+                let _ = engine.push_frames(anchor_id, &frame);
+                std::thread::sleep(Duration::from_millis(300));
+            }
+            recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+            stop_flood.store(true, Ordering::SeqCst);
+            stop_knock.store(true, Ordering::SeqCst);
+            knock.join().unwrap()
+        });
+        engine.finish_stream(anchor_id).expect("anchor outlives the brownout");
+        let _ = anchor_rx.recv();
+        // Post-recovery interactive traffic on the same engine.
+        let after = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let engine = engine.clone();
+                let after = &after;
+                scope.spawn(move || {
+                    for u in 0..2u64 {
+                        utter(&engine, 0xE000 + t * 8 + u, after);
+                    }
+                });
+            }
+        });
+        let m = engine.metrics();
+        let shed = *m.shed_streams.lock().unwrap();
+        let entries = *m.brownout_entries.lock().unwrap();
+        let exits = *m.brownout_exits.lock().unwrap();
+        let brownout_rejects = *m.brownout_rejects.lock().unwrap();
+        let mut during = during.into_inner().unwrap();
+        let mut after = after.into_inner().unwrap();
+        let (before_p50, before_p99) = (pct(&mut before, 0.50), pct(&mut before, 0.99));
+        let (during_p50, during_p99) = (pct(&mut during, 0.50), pct(&mut during, 0.99));
+        let (after_p50, after_p99) = (pct(&mut after, 0.50), pct(&mut after, 0.99));
+        println!(
+            "  finalize p99 ms  before {before_p99:.2}  during {during_p99:.2}  \
+             after {after_p99:.2}   ({} / {} / {} samples)",
+            before.len(),
+            during.len(),
+            after.len(),
+        );
+        println!(
+            "  shed {shed}  entries {entries}  exits {exits}  rejects {brownout_rejects} \
+             (knocker saw {rejects_seen})  admission outage {outage_ms:.1} ms  \
+             recovery {recovery_ms:.1} ms"
+        );
+        println!(
+            "  swap {swap_ms:.1} ms  admission fails during swap {swap_fails}  \
+             max admission gap {swap_gap_ms:.1} ms"
+        );
+        let mut ov = String::new();
+        let _ = write!(
+            ov,
+            "{{\"before_p50_ms\": {before_p50:.2}, \"before_p99_ms\": {before_p99:.2}, \
+             \"during_p50_ms\": {during_p50:.2}, \"during_p99_ms\": {during_p99:.2}, \
+             \"after_p50_ms\": {after_p50:.2}, \"after_p99_ms\": {after_p99:.2}, \
+             \"shed_streams\": {shed}, \"brownout_entries\": {entries}, \
+             \"brownout_exits\": {exits}, \"brownout_rejects\": {brownout_rejects}, \
+             \"max_admission_outage_ms\": {outage_ms:.1}, \"recovery_ms\": {recovery_ms:.1}, \
+             \"swap_ms\": {swap_ms:.1}, \"swap_admission_fails\": {swap_fails}, \
+             \"swap_max_admission_gap_ms\": {swap_gap_ms:.1}}}"
+        );
+        overload_json = ov;
+    }
+
     // Emit BENCH_engine.json so the perf trajectory is recorded across PRs.
     let mut json = String::new();
     json.push_str("{\n  \"bench\": \"engine\",\n  \"results\": [\n");
@@ -551,11 +855,12 @@ fn main() {
         json,
         "  ],\n  \"tick_breakdown\": {{\"am_s\": {tick_am_s:.4}, \"decode_s\": \
          {tick_decode_s:.4}, \"frontend_s\": {tick_frontend_s:.4}, \"am_share\": {:.3}, \
-         \"decode_share\": {:.3}, \"frontend_share\": {:.3}}}\n}}",
+         \"decode_share\": {:.3}, \"frontend_share\": {:.3}}},",
         tick_am_s / tick_total,
         tick_decode_s / tick_total,
         tick_frontend_s / tick_total,
     );
+    let _ = writeln!(json, "  \"overload\": {overload_json}\n}}");
     match std::fs::write("BENCH_engine.json", &json) {
         Ok(()) => println!("\nwrote BENCH_engine.json"),
         Err(e) => eprintln!("\ncould not write BENCH_engine.json: {e}"),

@@ -82,8 +82,8 @@ use crate::nn::AcousticModel;
 use crate::runtime::backend::{AmBackend, LaneTag};
 use crate::sched::weights::{env_model_weights, parse_share_list};
 use crate::sched::{
-    AdmissionConfig, AdmissionController, DrrState, HolderView, ModelParams, ModelRegistry,
-    ModelStatus, Priority, QuantumPolicy, RejectReason, StreamOptions,
+    AdmissionConfig, AdmissionController, BudgetLedger, DrrState, HolderView, ModelParams,
+    ModelRegistry, ModelStatus, Priority, QuantumPolicy, RejectReason, StreamOptions,
 };
 
 /// Engine configuration.
@@ -132,6 +132,13 @@ pub struct EngineConfig {
     /// per-engine plan for isolation.  `None` ⇒ every injection point is
     /// a single branch.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Byte budget for resident model state: arenas plus one parked-blob
+    /// reservation per live stream (the [`crate::sched::BudgetLedger`]
+    /// accounting).  Model loads that don't fit are rejected, and stream
+    /// admission backpressures with [`RejectReason::MemoryPressure`].
+    /// `None` = unlimited (tracked for observability only).
+    /// `--mem-budget-bytes` / `QUANTASR_MEM_BUDGET` (0 = unlimited).
+    pub mem_budget: Option<usize>,
 }
 
 impl Default for EngineConfig {
@@ -148,8 +155,27 @@ impl Default for EngineConfig {
             stream_idle: env_stream_ms("QUANTASR_STREAM_IDLE_MS", &ENV_IDLE),
             stream_deadline: env_stream_ms("QUANTASR_STREAM_DEADLINE_MS", &ENV_DEADLINE),
             faults: fault::env_fault_plan(),
+            mem_budget: env_mem_budget(),
         }
     }
+}
+
+/// `QUANTASR_MEM_BUDGET` override (bytes), parsed once per process.
+/// `0` = unlimited; a malformed value warns and disables the budget —
+/// capacity knobs must never panic a serving process.
+fn env_mem_budget() -> Option<usize> {
+    static ONCE: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    *ONCE.get_or_init(|| {
+        let v = std::env::var("QUANTASR_MEM_BUDGET").ok()?;
+        match v.trim().parse::<usize>() {
+            Ok(0) => None,
+            Ok(n) => Some(n),
+            Err(_) => {
+                eprintln!("QUANTASR_MEM_BUDGET='{v}' is not a byte count; budget disabled");
+                None
+            }
+        }
+    })
 }
 
 static ENV_IDLE: std::sync::OnceLock<Option<Duration>> = std::sync::OnceLock::new();
@@ -256,6 +282,9 @@ impl EngineConfig {
                 ),
             }
         }
+        let cur_budget = self.mem_budget.unwrap_or(0);
+        let budget = args.get_usize_warn("mem-budget-bytes", cur_budget);
+        self.mem_budget = (budget > 0).then_some(budget);
         for (flag, field) in [
             ("stream-idle-ms", &mut self.stream_idle),
             ("stream-deadline-ms", &mut self.stream_deadline),
@@ -321,6 +350,26 @@ pub struct ModelInfo {
     pub draining: bool,
     /// Poisoned by a backend panic: quarantined until unloaded.
     pub quarantined: bool,
+    /// Bytes held by this model's arena (budget-ledger accounting).
+    pub arena_bytes: usize,
+    /// Parked-blob bytes reserved by this model's live streams.
+    pub reserved_bytes: usize,
+    /// Bytes actually sitting in parked blobs right now (⊆ reserved).
+    pub parked_bytes: usize,
+}
+
+/// Engine-wide overload-control snapshot ([`Engine::overload_info`],
+/// also serialized in the TCP `'Q'` frame header — see
+/// `docs/PROTOCOL.md`).
+#[derive(Clone, Copy, Debug)]
+pub struct OverloadInfo {
+    /// 0 = normal, 1 = brownout shedding Bulk streams, 2 = brownout
+    /// rejecting all new admissions.
+    pub brownout_stage: u8,
+    /// Resident bytes (arenas + per-stream parked reservations).
+    pub resident_bytes: usize,
+    /// Configured byte budget (0 = unlimited).
+    pub budget_bytes: usize,
 }
 
 struct StreamSlot<B: AmBackend> {
@@ -347,6 +396,10 @@ struct StreamSlot<B: AmBackend> {
     /// State parked outside the arena (evicted / preempted / not yet
     /// admitted).  `None` with `lane: None` ⇒ fresh zero state.
     parked: Option<B::Parked>,
+    /// Parked-blob size reserved for this stream in the budget ledger at
+    /// admission ([`AmBackend::parked_bytes`]); released when the stream
+    /// leaves the map.
+    state_bytes: usize,
     finished: bool,
     finish_time: Option<Instant>,
     result_tx: Sender<FinalResult>,
@@ -423,6 +476,33 @@ struct Inner<B: AmBackend> {
     /// Pending hot loads (worker-owned arenas must be built on the
     /// worker thread).
     admin: VecDeque<AdminCmd<B>>,
+    /// Byte ledger for arenas + per-stream parked reservations, checked
+    /// at the admission and load edges (never mid-schedule — parking is
+    /// pre-reserved, so the scheduler can always park without asking).
+    budget: BudgetLedger,
+    /// Published brownout stage (0 normal / 1 shedding / 2 rejecting) —
+    /// written by the AM worker's overload controller, read by admission
+    /// and the `'Q'` snapshot.
+    brownout_stage: u8,
+    /// Swap redirect table: streams opened against a replaced model id
+    /// land on its replacement ([`Engine::swap_model`]).  An entry
+    /// outlives the old slot's teardown (clients keep using the old id)
+    /// and is cleared only when the old slot id is reused by a fresh
+    /// load.
+    redirects: HashMap<usize, usize>,
+}
+
+/// Follow swap redirects from a client-supplied model id to the slot
+/// currently serving it (hop-bounded: a redirect cycle — swap a→b then
+/// b→a — must not hang admission).
+fn resolve_model<B: AmBackend>(inner: &Inner<B>, mut model: usize) -> usize {
+    for _ in 0..8 {
+        match inner.redirects.get(&model) {
+            Some(&next) => model = next,
+            None => break,
+        }
+    }
+    model
 }
 
 struct Shared<B: AmBackend> {
@@ -445,6 +525,13 @@ pub struct Engine<B: AmBackend = AcousticModel> {
     shared: Arc<Shared<B>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
+
+/// Frames a swap canary pushes through the replacement before it may
+/// take traffic (short: the gate is "serves at all", not WER).
+const CANARY_FRAMES: usize = 8;
+/// How long a swap canary waits for its end-to-end decode before the
+/// swap is rolled back.
+const CANARY_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Effective lane count for a model: the explicit request (or the
 /// engine-wide `max_batch`), clamped to the backend's capacity where one
@@ -497,6 +584,25 @@ impl<B: AmBackend> Engine<B> {
             slots.push(Some(ModelSlot::new(backend, name, weight, lanes)));
         }
         let admission = AdmissionController::new(config.admission);
+        // Charge boot arenas against the ledger.  Boot models are the
+        // operator's explicit choice, so an over-budget boot set warns
+        // loudly instead of refusing to start — the budget gates
+        // *runtime* growth (hot loads, stream admission).
+        let mut budget = BudgetLedger::new(config.mem_budget);
+        for (m, slot) in slots.iter().enumerate() {
+            let slot = slot.as_ref().unwrap();
+            let need = slot.backend.arena_bytes(slot.lanes.capacity());
+            if !budget.fits(need) {
+                eprintln!(
+                    "engine: boot model {m} ('{}') pushes resident bytes past \
+                     --mem-budget-bytes ({} + {need} > {}); serving anyway",
+                    slot.name,
+                    budget.resident(),
+                    budget.budget().unwrap_or(0),
+                );
+            }
+            budget.charge_arena(m, need);
+        }
         let shared = Arc::new(Shared {
             inner: Mutex::new(Inner {
                 models: slots,
@@ -504,6 +610,9 @@ impl<B: AmBackend> Engine<B> {
                 next_id: 0,
                 decode_queue: ClassQueue::new(),
                 admin: VecDeque::new(),
+                budget,
+                brownout_stage: 0,
+                redirects: HashMap::new(),
             }),
             work_cv: Condvar::new(),
             decode_cv: Condvar::new(),
@@ -515,9 +624,11 @@ impl<B: AmBackend> Engine<B> {
         });
         {
             let inner = shared.inner.lock().unwrap();
+            shared.metrics.set_budget_bytes(inner.budget.budget().unwrap_or(0));
             for (m, slot) in inner.models.iter().enumerate() {
                 let slot = slot.as_ref().unwrap();
                 shared.metrics.set_model(m, &slot.name, slot.lanes.capacity(), slot.weight);
+                publish_bytes(&shared, &inner, m);
             }
         }
         let mut workers = Vec::new();
@@ -563,17 +674,34 @@ impl<B: AmBackend> Engine<B> {
             .iter()
             .enumerate()
             .filter_map(|(id, m)| {
-                m.as_ref().map(|slot| ModelInfo {
-                    id,
-                    name: slot.name.clone(),
-                    weight: slot.weight,
-                    lanes: slot.lanes.capacity(),
-                    live_streams: live[id],
-                    draining: slot.draining,
-                    quarantined: slot.quarantined,
+                m.as_ref().map(|slot| {
+                    let row = inner.budget.model(id);
+                    ModelInfo {
+                        id,
+                        name: slot.name.clone(),
+                        weight: slot.weight,
+                        lanes: slot.lanes.capacity(),
+                        live_streams: live[id],
+                        draining: slot.draining,
+                        quarantined: slot.quarantined,
+                        arena_bytes: row.arena,
+                        reserved_bytes: row.reserved,
+                        parked_bytes: row.parked,
+                    }
                 })
             })
             .collect()
+    }
+
+    /// Engine-wide overload snapshot: brownout stage plus the budget
+    /// ledger's resident total (serialized in the `'Q'` frame header).
+    pub fn overload_info(&self) -> OverloadInfo {
+        let inner = self.shared.inner.lock().unwrap();
+        OverloadInfo {
+            brownout_stage: inner.brownout_stage,
+            resident_bytes: inner.budget.resident(),
+            budget_bytes: inner.budget.budget().unwrap_or(0),
+        }
     }
 
     /// Hot-load a model under its self-reported name
@@ -693,6 +821,120 @@ impl<B: AmBackend> Engine<B> {
         self.shared.config.faults.clone()
     }
 
+    /// Zero-downtime model swap: load `backend` as the replacement for
+    /// model `old`, health-check it with a canary utterance, and only
+    /// then redirect traffic.
+    ///
+    /// 1. The replacement is hot-loaded through the normal (budget-
+    ///    checked) path — a swap transiently needs both arenas resident.
+    /// 2. A canary runs **before the redirect**: a scratch-arena step
+    ///    pass asserts finite posteriors, then one real utterance goes
+    ///    through the full serving path on the new slot and must decode
+    ///    to completion.  The `canary_fail` fault point (keyed by the
+    ///    replacement's slot id) injects failures deterministically.
+    /// 3. On canary failure the swap **rolls back**: the new slot is
+    ///    unloaded, `old` keeps serving untouched, and the error is
+    ///    returned (counted in `swap_rollbacks`).
+    /// 4. On success the redirect table sends newcomers targeting `old`
+    ///    to the new slot atomically, and `old` starts a normal bounded
+    ///    drain: survivors finish bit-exactly on the old weights, and
+    ///    the old arena is torn down once the last one drains.
+    ///
+    /// Returns the replacement's model id.  The redirect entry outlives
+    /// the old slot (clients keep dialing the old id) and is recycled
+    /// only when the old slot id is reused by a fresh load.
+    pub fn swap_model(
+        &self,
+        old: usize,
+        backend: Arc<B>,
+        params: ModelParams,
+    ) -> Result<usize, String> {
+        {
+            let inner = self.shared.inner.lock().unwrap();
+            if !matches!(inner.models.get(old), Some(Some(_))) {
+                return Err(format!("model {old} is not loaded"));
+            }
+        }
+        let name = backend.model_name();
+        let new_id = self.load_model_named(name, backend, params)?;
+        if let Err(why) = self.run_canary(new_id) {
+            // Roll back: the canary stream (if any) has drained, so the
+            // new slot unpins immediately; `old` was never touched.
+            let _ = self.unload_model(new_id);
+            self.shared.metrics.add_swap(true);
+            return Err(format!("swap of model {old} rolled back: {why}"));
+        }
+        {
+            let mut inner = self.shared.inner.lock().unwrap();
+            inner.redirects.insert(old, new_id);
+            if let Some(Some(slot)) = inner.models.get_mut(old) {
+                slot.draining = true;
+            }
+        }
+        self.shared.work_cv.notify_all();
+        self.shared.metrics.add_swap(false);
+        Ok(new_id)
+    }
+
+    /// The swap health check: prove the freshly-loaded slot `new_id` can
+    /// serve before any traffic is redirected to it.  Two gates — a
+    /// scratch-arena step pass that must produce finite posteriors (a
+    /// model with corrupted weights fails here without involving the
+    /// serving plane), then one end-to-end utterance through the real
+    /// admission → AM worker → decode pipeline that must complete.
+    fn run_canary(&self, new_id: usize) -> Result<(), String> {
+        if fault::fire(&self.shared.config.faults, FaultPoint::CanaryFail, new_id as u64) {
+            return Err("injected canary failure".into());
+        }
+        let backend = {
+            let inner = self.shared.inner.lock().unwrap();
+            match inner.models.get(new_id) {
+                Some(Some(slot)) => slot.backend.clone(),
+                _ => return Err(format!("replacement slot {new_id} vanished before canary")),
+            }
+        };
+        let dim = backend.input_dim();
+        let labels = backend.num_labels();
+        let frames: Vec<f32> = (0..CANARY_FRAMES * dim)
+            .map(|i| (i as f32 * 0.37).sin() * 0.1)
+            .collect();
+        // Gate 1: finite posteriors on a throwaway single-lane arena
+        // (transient scratch, freed before any ledger-visible state).
+        // A panicking replacement must roll back, not kill the caller.
+        let finite = catch_unwind(AssertUnwindSafe(|| -> Result<(), String> {
+            let mut arena = backend.alloc_arena(1);
+            let mut ybuf = vec![0f32; labels];
+            for t in 0..CANARY_FRAMES {
+                backend
+                    .step_lanes(&mut arena, &[0], &frames[t * dim..(t + 1) * dim], &mut ybuf)
+                    .map_err(|e| format!("canary step failed at frame {t}: {e:#}"))?;
+                if ybuf.iter().any(|v| !v.is_finite()) {
+                    return Err(format!("canary produced non-finite posteriors at frame {t}"));
+                }
+            }
+            Ok(())
+        }));
+        match finite {
+            Ok(Ok(())) => {}
+            Ok(Err(why)) => return Err(why),
+            Err(_) => return Err("canary step panicked".into()),
+        }
+        // Gate 2: one utterance through the full serving path.
+        let (id, rx) = self
+            .try_open_stream(StreamOptions { model: new_id, priority: Priority::Interactive })
+            .map_err(|r| format!("canary admission failed: {r}"))?;
+        self.push_frames(id, &frames).map_err(|e| format!("canary push failed: {e:#}"))?;
+        self.finish_stream(id).map_err(|e| format!("canary finish failed: {e:#}"))?;
+        match rx.recv_timeout(CANARY_TIMEOUT) {
+            Ok(r) if r.end == StreamEnd::Complete => Ok(()),
+            Ok(r) => Err(format!("canary stream ended abnormally: {:?}", r.end)),
+            Err(_) => Err(format!(
+                "canary decode did not complete within {} ms",
+                CANARY_TIMEOUT.as_millis()
+            )),
+        }
+    }
+
     /// Open a new default stream (model 0, `Priority::Interactive`);
     /// returns its id and the final-result receiver.  The stream is
     /// admitted to an arena lane lazily, when it is first scheduled into
@@ -713,7 +955,10 @@ impl<B: AmBackend> Engine<B> {
     ) -> Result<(u64, Receiver<FinalResult>), RejectReason> {
         let (tx, rx) = channel();
         let mut inner = self.shared.inner.lock().unwrap();
-        let status = match inner.models.get(opts.model) {
+        // Swap indirection: a stream dialing a replaced model id lands on
+        // its replacement.
+        let model = resolve_model(&inner, opts.model);
+        let status = match inner.models.get(model) {
             Some(Some(slot)) if slot.quarantined => ModelStatus::Quarantined,
             Some(Some(slot)) if slot.draining => ModelStatus::Draining,
             Some(Some(_)) => ModelStatus::Loaded,
@@ -721,18 +966,44 @@ impl<B: AmBackend> Engine<B> {
         };
         let loaded = inner.models.iter().filter(|m| m.is_some()).count();
         if let Err(reason) =
-            self.shared.admission.admit(inner.streams.len(), opts.model, status, loaded)
+            self.shared.admission.admit(inner.streams.len(), model, status, loaded)
         {
             self.shared.metrics.add_admission_reject();
             return Err(reason);
         }
+        // Brownout gate: in the rejecting stage every newcomer is turned
+        // away with a retryable reason (model identity errors above still
+        // outrank it — they are caller bugs, not load).
+        if inner.brownout_stage >= 2 {
+            self.shared.metrics.add_brownout_reject();
+            return Err(RejectReason::Brownout);
+        }
+        // Byte budget: reserve one parked blob up front so every later
+        // park (eviction/preemption/cancel) is pre-paid and scheduling
+        // never has to ask.  The `mem_pressure` fault point (keyed by
+        // model id) pretends the ledger is full.
+        let state_bytes = inner.models[model]
+            .as_ref()
+            .expect("admitted to a missing model")
+            .backend
+            .parked_bytes();
+        let forced =
+            fault::fire(&self.shared.config.faults, FaultPoint::MemPressure, model as u64);
+        if forced || !inner.budget.fits(state_bytes) {
+            let resident = inner.budget.resident();
+            let budget = inner.budget.budget().unwrap_or(0);
+            self.shared.metrics.add_mem_pressure_reject();
+            return Err(RejectReason::MemoryPressure { resident, budget });
+        }
+        inner.budget.charge_stream(model, state_bytes);
+        publish_bytes(&self.shared, &inner, model);
         let id = inner.next_id;
         inner.next_id += 1;
         inner.streams.insert(
             id,
             StreamSlot {
                 frontend: Frontend::new(),
-                model: opts.model,
+                model,
                 priority: opts.priority,
                 quantum_used: 0,
                 opened_at: Instant::now(),
@@ -743,6 +1014,7 @@ impl<B: AmBackend> Engine<B> {
                 frames_done: 0,
                 lane: None,
                 parked: None,
+                state_bytes,
                 finished: false,
                 finish_time: None,
                 result_tx: tx,
@@ -911,24 +1183,60 @@ fn process_admin<B: AmBackend>(s: &Shared<B>, wm: &mut Vec<Option<LaneIo<B>>>) {
         };
         let weight = params.weight();
         let lanes = effective_lanes(backend.as_ref(), params.lanes, s.config.policy.max_batch);
-        let io = lane_io(backend.clone(), lanes); // lock-free allocation
-        let slot_id = {
+        // Budget gate: price the arena analytically and reserve the slot
+        // *and* the bytes atomically before the lock-free allocation, so
+        // concurrent stream admissions cannot race the ledger past its
+        // cap between check and charge.  The `mem_pressure` fault point
+        // (keyed by the prospective slot id) pretends the ledger is full.
+        let need = backend.arena_bytes(lanes);
+        let reserved = {
             let mut inner = s.inner.lock().unwrap();
             let slot_id = inner
                 .models
                 .iter()
                 .position(|m| m.is_none())
                 .unwrap_or(inner.models.len());
-            if slot_id == inner.models.len() {
-                inner.models.push(None);
-                wm.push(None);
+            let forced = fault::fire(&s.config.faults, FaultPoint::MemPressure, slot_id as u64);
+            if forced || !inner.budget.fits(need) {
+                let resident = inner.budget.resident();
+                let budget = inner.budget.budget().unwrap_or(0);
+                Err(format!(
+                    "memory pressure: model '{name}' needs {need} arena bytes, \
+                     {resident} resident at budget {budget}; unload something first"
+                ))
+            } else {
+                if slot_id == inner.models.len() {
+                    inner.models.push(None);
+                    wm.push(None);
+                }
+                inner.budget.charge_arena(slot_id, need);
+                // A recycled slot id must not inherit a swap redirect
+                // that used to send it elsewhere: the id is reborn as a
+                // brand-new model.
+                inner.redirects.remove(&slot_id);
+                Ok(slot_id)
             }
+        };
+        let slot_id = match reserved {
+            Ok(id) => id,
+            Err(why) => {
+                s.metrics.add_mem_pressure_reject();
+                let _ = ack.send(Err(why));
+                continue;
+            }
+        };
+        let io = lane_io(backend.clone(), lanes); // lock-free allocation
+        {
+            let mut inner = s.inner.lock().unwrap();
             debug_assert!(wm[slot_id].is_none(), "slot reuse before teardown");
             wm[slot_id] = Some(io);
             inner.models[slot_id] = Some(ModelSlot::new(backend, name.clone(), weight, lanes));
-            slot_id
-        };
+        }
         s.metrics.set_model(slot_id, &name, lanes, weight);
+        {
+            let inner = s.inner.lock().unwrap();
+            publish_bytes(s, &inner, slot_id);
+        }
         let _ = ack.send(Ok(slot_id));
     }
 }
@@ -949,6 +1257,13 @@ fn teardown_drained<B: AmBackend>(
         let slot = inner.models[m].take().unwrap();
         assert_eq!(slot.lanes.in_use(), 0, "teardown with lanes in use");
         wm[m] = None; // drops the arena and I/O buffers
+        inner.budget.release_arena(m);
+        debug_assert_eq!(
+            inner.budget.model(m).reserved,
+            0,
+            "model {m} torn down with stream reservations outstanding"
+        );
+        publish_bytes(s, inner, m);
         s.metrics.retire_model(m);
         for ack in slot.unload_acks {
             let _ = ack.send(());
@@ -961,6 +1276,98 @@ const QUANTUM_TUNE_SAMPLES: usize = 10;
 /// Flush gaps longer than this are idle periods, not tick cost — they
 /// are excluded from the auto-quantum measurement.
 const QUANTUM_TUNE_MAX_GAP: Duration = Duration::from_millis(250);
+
+/// EWMA smoothing factor for the brownout controller's flush-to-flush
+/// overrun signal.
+const BROWNOUT_ALPHA: f64 = 0.4;
+/// Enter brownout when the overrun EWMA (flush gap ÷ batch deadline)
+/// holds above this.
+const BROWNOUT_ENTER: f64 = 3.0;
+/// Leave brownout when the EWMA falls back below this (hysteresis: the
+/// exit bar is lower than the entry bar, so the controller cannot
+/// flap on a load level that sits exactly at one threshold).
+const BROWNOUT_EXIT: f64 = 1.5;
+/// Consecutive over-threshold flushes before entering brownout.
+const BROWNOUT_ENTER_TICKS: u32 = 3;
+/// Consecutive under-threshold flushes before recovering.
+const BROWNOUT_EXIT_TICKS: u32 = 3;
+/// Bulk streams shed per flush while in the shedding stage.
+const BROWNOUT_SHED_PER_TICK: usize = 2;
+/// Shedding flushes endured before escalating to rejecting admissions.
+const BROWNOUT_ESCALATE_TICKS: u32 = 3;
+/// Cancel reason delivered (verbatim over the `'C'` frame) to streams
+/// shed by the brownout controller — the `shed:` prefix is the
+/// wire-stable marker clients dispatch on (see `docs/PROTOCOL.md`).
+const SHED_REASON: &str = "shed: brownout overload control; retry later";
+
+/// Worker-local brownout state machine.  Stage 0 = normal; stage 1 =
+/// shedding (cancel Bulk streams through the reaper's parking path,
+/// Interactive survivors and newcomers untouched); stage 2 = rejecting
+/// (admission turns everyone away until the overrun clears).  Stages
+/// only escalate Bulk-first — Interactive work is never shed, only
+/// deferred behind the admission gate.
+struct BrownoutCtl {
+    /// EWMA of flush-gap ÷ deadline (None until the first gap).
+    ewma: Option<f64>,
+    /// Wall time of the previous flush (the controller's own clock —
+    /// `last_flush` belongs to auto-quantum and stops updating once its
+    /// samples are collected).
+    last: Option<Instant>,
+    over_ticks: u32,
+    under_ticks: u32,
+    shed_ticks: u32,
+    stage: u8,
+}
+
+impl BrownoutCtl {
+    fn new() -> Self {
+        BrownoutCtl { ewma: None, last: None, over_ticks: 0, under_ticks: 0, shed_ticks: 0, stage: 0 }
+    }
+
+    /// Feed one flush boundary into the controller; returns the updated
+    /// stage.  `forced` (the `overload_tick` fault point) injects a
+    /// deterministic overrun regardless of wall clock.
+    fn observe(&mut self, now: Instant, deadline: Duration, forced: bool) -> u8 {
+        let deadline_s = deadline.as_secs_f64().max(1e-6);
+        let gap = self.last.map(|t| (now - t).as_secs_f64());
+        self.last = Some(now);
+        // Idle gaps (no flush pending for a long while) mean *no* load,
+        // not slow ticks: count them as calm evidence.
+        let ratio = if forced {
+            BROWNOUT_ENTER * 3.0
+        } else {
+            match gap {
+                Some(g) if g <= QUANTUM_TUNE_MAX_GAP.as_secs_f64() => g / deadline_s,
+                _ => 0.0,
+            }
+        };
+        let ewma = match self.ewma {
+            None => ratio,
+            Some(e) => BROWNOUT_ALPHA * ratio + (1.0 - BROWNOUT_ALPHA) * e,
+        };
+        self.ewma = Some(ewma);
+        if ewma >= BROWNOUT_ENTER && self.stage == 0 {
+            self.over_ticks += 1;
+            if self.over_ticks >= BROWNOUT_ENTER_TICKS {
+                self.stage = 1;
+                self.shed_ticks = 0;
+                self.under_ticks = 0;
+            }
+        } else if self.stage == 0 {
+            self.over_ticks = 0;
+        } else if ewma <= BROWNOUT_EXIT {
+            self.under_ticks += 1;
+            if self.under_ticks >= BROWNOUT_EXIT_TICKS {
+                self.stage = 0;
+                self.over_ticks = 0;
+                self.under_ticks = 0;
+            }
+        } else {
+            self.under_ticks = 0;
+        }
+        self.stage
+    }
+}
 
 fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
     let budget = s.config.tick_budget.max(1);
@@ -979,6 +1386,7 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
     s.metrics.set_effective_quantum(qpolicy.quantum());
     let mut last_flush: Option<Instant> = None;
     let mut tick_samples: Vec<f64> = Vec::new();
+    let mut brownout = BrownoutCtl::new();
     // Flush-tick ordinal, the slow-tick fault's deterministic key.
     let mut tick_no: u64 = 0;
     // Worker-local per-slot execution state.  Boot models' arenas are
@@ -1060,6 +1468,54 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
             }
             last_flush = Some(now);
         }
+        // Brownout overload control: compare flush cadence to the batch
+        // deadline; a sustained overrun first sheds Bulk streams through
+        // the reaper's parking path, then (if still drowning, or with no
+        // Bulk left to shed) gates new admissions until the EWMA clears.
+        // The `overload_tick` fault point injects deterministic overruns.
+        {
+            let forced = fault::fire(&s.config.faults, FaultPoint::OverloadTick, tick_no + 1);
+            let prev_stage = brownout.stage;
+            brownout.observe(now, s.config.policy.deadline, forced);
+            if brownout.stage == 1 && brownout.under_ticks == 0 {
+                let mut victims: Vec<(u64, usize, usize)> = inner
+                    .streams
+                    .iter()
+                    .filter(|(_, sl)| sl.priority == Priority::Bulk && !sl.finished)
+                    .map(|(&id, sl)| (id, sl.model, sl.frames_done))
+                    .collect();
+                // Deterministic victim order: least progress lost first,
+                // then the newest stream.
+                victims.sort_by(|a, b| a.2.cmp(&b.2).then(b.0.cmp(&a.0)));
+                victims.truncate(BROWNOUT_SHED_PER_TICK);
+                for &(id, m, _) in &victims {
+                    cancel_stream(&mut inner, &wm, s.as_ref(), id, SHED_REASON);
+                    s.metrics.add_shed(m);
+                }
+                if !victims.is_empty() {
+                    s.space_cv.notify_all();
+                    ready.retain(|r| inner.streams.contains_key(&r.0));
+                }
+                brownout.shed_ticks += 1;
+                if victims.is_empty() || brownout.shed_ticks >= BROWNOUT_ESCALATE_TICKS {
+                    brownout.stage = 2;
+                }
+            }
+            match (prev_stage, brownout.stage) {
+                (0, new) if new > 0 => s.metrics.brownout_transition(true),
+                (prev, 0) if prev > 0 => s.metrics.brownout_transition(false),
+                _ => {}
+            }
+            inner.brownout_stage = brownout.stage;
+        }
+        // Shedding may have cancelled every ready stream — nothing left
+        // to plan this flush (falling through would trip the
+        // scheduler-stall assertion below).
+        if ready.is_empty() {
+            drop(inner);
+            s.space_cv.notify_all();
+            continue;
+        }
         // Plan this tick's batch, per model.  Pass 1: ready streams that
         // already hold a lane ride for free (unless preempted below).
         let mut planned: Vec<Vec<(u64, usize)>> = vec![Vec::new(); nm];
@@ -1100,6 +1556,8 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
                     let l = vslot.lane.take().unwrap();
                     let io = wm[m].as_ref().expect("arena for a live model");
                     vslot.parked = Some(io.backend.save_lane(&io.arena, l));
+                    let vb = vslot.state_bytes;
+                    inner.budget.note_parked(m, vb);
                     s.metrics.add_eviction(m);
                     lane = Some(l);
                 }
@@ -1135,6 +1593,8 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
                     vslot.quantum_used = 0;
                     let io = wm[m].as_ref().expect("arena for a live model");
                     vslot.parked = Some(io.backend.save_lane(&io.arena, l));
+                    let vb = vslot.state_bytes;
+                    inner.budget.note_parked(m, vb);
                     displaced.push(vid);
                     s.metrics.add_preemption(m);
                     lane = Some(l);
@@ -1146,6 +1606,10 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
             let Some(lane) = lane else { continue };
             let slot = inner.streams.get_mut(&id).unwrap();
             let parked = slot.parked.take();
+            let sb = slot.state_bytes;
+            if parked.is_some() {
+                inner.budget.note_unparked(m, sb);
+            }
             {
                 let io = wm[m].as_mut().expect("arena for a live model");
                 match parked {
@@ -1335,7 +1799,13 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
                         .map(|(&id, _)| id)
                         .collect();
                     for id in ids {
-                        cancel_stream(&mut inner, &wm, id, "model quarantined after a backend panic");
+                        cancel_stream(
+                            &mut inner,
+                            &wm,
+                            s.as_ref(),
+                            id,
+                            "model quarantined after a backend panic",
+                        );
                     }
                     s.metrics.add_quarantined_job();
                     s.metrics.set_quarantined(m);
@@ -1399,12 +1869,19 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
 fn cancel_stream<B: AmBackend>(
     inner: &mut Inner<B>,
     wm: &[Option<LaneIo<B>>],
+    s: &Shared<B>,
     id: u64,
     reason: &str,
 ) {
     let Some(mut slot) = inner.streams.remove(&id) else {
         return;
     };
+    // Ledger: the reservation (and any blob already counted as parked)
+    // leaves with the slot.  The transient park below is dropped with
+    // `slot` at the end of this function and is never ledger-visible.
+    let had_parked = slot.parked.is_some();
+    inner.budget.release_stream(slot.model, slot.state_bytes, had_parked);
+    publish_bytes(s, inner, slot.model);
     if let Some(lane) = slot.lane.take() {
         if let Some(io) = wm.get(slot.model).and_then(|w| w.as_ref()) {
             slot.parked = Some(io.backend.save_lane(&io.arena, lane));
@@ -1421,6 +1898,16 @@ fn cancel_stream<B: AmBackend>(
         finalize_latency: Duration::ZERO,
         end: StreamEnd::Cancelled(reason.to_string()),
     });
+}
+
+/// Mirror one model's budget-ledger row into [`Metrics`] (per-model
+/// `arena_bytes`/`reserved_bytes`/`parked_bytes`), so `report()`, the
+/// `'Q'` snapshot and the Prometheus exposition agree with the ledger.
+/// Called at every ledger-moving event — admission, cancel, drain,
+/// load, teardown, park, unpark.
+fn publish_bytes<B: AmBackend>(s: &Shared<B>, inner: &Inner<B>, m: usize) {
+    let row = inner.budget.model(m);
+    s.metrics.set_model_bytes(m, row.arena, row.reserved, row.parked);
 }
 
 /// The reaper (worker thread, engine lock held, tick boundary): enforce
@@ -1444,7 +1931,7 @@ fn reap_expired<B: AmBackend>(inner: &mut Inner<B>, wm: &[Option<LaneIo<B>>], s:
         let ids: Vec<u64> =
             inner.streams.iter().filter(|(_, sl)| sl.model == m).map(|(&id, _)| id).collect();
         for id in ids {
-            cancel_stream(inner, wm, id, "model unloading (forced)");
+            cancel_stream(inner, wm, s, id, "model unloading (forced)");
             s.metrics.add_forced_cancel(m);
             cancelled = true;
         }
@@ -1480,7 +1967,7 @@ fn reap_expired<B: AmBackend>(inner: &mut Inner<B>, wm: &[Option<LaneIo<B>>], s:
             })
             .collect();
         for (id, reason) in expired {
-            cancel_stream(inner, wm, id, &reason);
+            cancel_stream(inner, wm, s, id, &reason);
             s.metrics.add_reaped();
             cancelled = true;
         }
@@ -1503,6 +1990,10 @@ fn drain_finished<B: AmBackend>(inner: &mut Inner<B>, s: &Shared<B>) {
         .collect();
     for id in done {
         let slot = inner.streams.remove(&id).unwrap();
+        // Ledger: the reservation (and any parked blob the stream still
+        // held — it finished while evicted) leaves with the slot.
+        inner.budget.release_stream(slot.model, slot.state_bytes, slot.parked.is_some());
+        publish_bytes(s, inner, slot.model);
         if let Some(lane) = slot.lane {
             inner.models[slot.model]
                 .as_mut()

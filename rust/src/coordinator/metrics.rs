@@ -86,6 +86,15 @@ pub struct ModelStats {
     pub deferrals: u64,
     /// Surviving streams cancelled by an expired force-unload deadline.
     pub forced_cancels: u64,
+    /// Bulk streams cancelled by brownout load shedding.
+    pub shed_streams: u64,
+    /// Resident arena bytes (what the budget ledger charged for the
+    /// arena; 0 after unload teardown).
+    pub arena_bytes: u64,
+    /// Reserved stream bytes (live streams × one parked blob each).
+    pub reserved_bytes: u64,
+    /// Bytes actually sitting in parked blobs right now.
+    pub parked_bytes: u64,
     /// Poisoned by a backend panic (cleared when the slot is reused).
     pub quarantined: bool,
 }
@@ -148,6 +157,23 @@ pub struct Metrics {
     /// panics quarantined instead of taking the engine down (decode jobs
     /// + backend steps)
     pub quarantined_jobs: Mutex<u64>,
+    /// admissions refused for memory pressure (budget ledger full)
+    pub mem_pressure_rejects: Mutex<u64>,
+    /// admissions refused while the engine was in brownout
+    pub brownout_rejects: Mutex<u64>,
+    /// times the AM worker entered brownout (sustained deadline overrun)
+    pub brownout_entries: Mutex<u64>,
+    /// times the AM worker recovered from brownout
+    pub brownout_exits: Mutex<u64>,
+    /// Bulk streams cancelled by brownout load shedding (sum of the
+    /// per-model rows)
+    pub shed_streams: Mutex<u64>,
+    /// completed zero-downtime model swaps (canary passed, table flipped)
+    pub model_swaps: Mutex<u64>,
+    /// swaps rolled back because the replacement's canary failed
+    pub swap_rollbacks: Mutex<u64>,
+    /// configured byte budget (0 = unlimited) — gauge for the exposition
+    pub budget_bytes: Mutex<u64>,
     /// per-model lane accounting (index = model id)
     pub per_model: Mutex<Vec<ModelStats>>,
 }
@@ -270,6 +296,61 @@ impl Metrics {
         }
     }
 
+    /// One admission refused for memory pressure.
+    pub fn add_mem_pressure_reject(&self) {
+        *self.mem_pressure_rejects.lock().unwrap() += 1;
+        *self.admission_rejects.lock().unwrap() += 1;
+    }
+
+    /// One admission refused while the engine was in brownout.
+    pub fn add_brownout_reject(&self) {
+        *self.brownout_rejects.lock().unwrap() += 1;
+        *self.admission_rejects.lock().unwrap() += 1;
+    }
+
+    /// The AM worker entered (`true`) or recovered from (`false`)
+    /// brownout.
+    pub fn brownout_transition(&self, entering: bool) {
+        if entering {
+            *self.brownout_entries.lock().unwrap() += 1;
+        } else {
+            *self.brownout_exits.lock().unwrap() += 1;
+        }
+    }
+
+    /// One Bulk stream of `model` cancelled by brownout load shedding.
+    pub fn add_shed(&self, model: usize) {
+        *self.shed_streams.lock().unwrap() += 1;
+        if let Some(m) = self.per_model.lock().unwrap().get_mut(model) {
+            m.shed_streams += 1;
+        }
+    }
+
+    /// One zero-downtime swap completed (`rolled_back = false`) or
+    /// rolled back on canary failure (`rolled_back = true`).
+    pub fn add_swap(&self, rolled_back: bool) {
+        if rolled_back {
+            *self.swap_rollbacks.lock().unwrap() += 1;
+        } else {
+            *self.model_swaps.lock().unwrap() += 1;
+        }
+    }
+
+    /// Publish the byte-ledger view of model `model` (what the budget
+    /// sees: arena residency, stream reservations, actual parked blobs).
+    pub fn set_model_bytes(&self, model: usize, arena: usize, reserved: usize, parked: usize) {
+        if let Some(m) = self.per_model.lock().unwrap().get_mut(model) {
+            m.arena_bytes = arena as u64;
+            m.reserved_bytes = reserved as u64;
+            m.parked_bytes = parked as u64;
+        }
+    }
+
+    /// Publish the configured byte budget (0 = unlimited).
+    pub fn set_budget_bytes(&self, budget: usize) {
+        *self.budget_bytes.lock().unwrap() = budget as u64;
+    }
+
     /// Record lane-steps model `model` had planned but the weighted
     /// per-tick budget deferred (sched::weights DRR trim).
     pub fn add_deferrals(&self, model: usize, n: usize) {
@@ -360,12 +441,30 @@ impl Metrics {
         out.push_str(&format!(
             "reaped_streams={reaped}  forced_cancels={forced}  quarantined_jobs={quarantined}\n",
         ));
+        let shed = *self.shed_streams.lock().unwrap();
+        let b_in = *self.brownout_entries.lock().unwrap();
+        let b_out = *self.brownout_exits.lock().unwrap();
+        let b_rej = *self.brownout_rejects.lock().unwrap();
+        let mp = *self.mem_pressure_rejects.lock().unwrap();
+        let swaps = *self.model_swaps.lock().unwrap();
+        let rollbacks = *self.swap_rollbacks.lock().unwrap();
+        let budget = *self.budget_bytes.lock().unwrap();
         let pm = self.per_model.lock().unwrap();
+        let resident: u64 = pm.iter().map(|m| m.arena_bytes + m.reserved_bytes).sum();
+        out.push_str(&format!(
+            "shed_streams={shed}  brownout_entries={b_in}  brownout_exits={b_out}  \
+             brownout_rejects={b_rej}  mem_pressure_rejects={mp}\n",
+        ));
+        out.push_str(&format!(
+            "model_swaps={swaps}  swap_rollbacks={rollbacks}  \
+             resident_bytes={resident}  budget_bytes={budget}\n",
+        ));
         if pm.len() > 1 || pm.iter().any(|m| m.preemptions + m.evictions > 0) {
             for (id, m) in pm.iter().enumerate() {
                 out.push_str(&format!(
                     "model[{id}] {:<14} {} w={} lanes={} frames={} ticks={} occupancy={:.2} \
-                     evictions={} preemptions={} deferrals={} forced_cancels={}\n",
+                     evictions={} preemptions={} deferrals={} forced_cancels={} sheds={} \
+                     arena_bytes={} parked_bytes={}\n",
                     m.name,
                     if m.quarantined && m.loaded {
                         "quarantined"
@@ -383,9 +482,184 @@ impl Metrics {
                     m.preemptions,
                     m.deferrals,
                     m.forced_cancels,
+                    m.shed_streams,
+                    m.arena_bytes,
+                    m.parked_bytes,
                 ));
             }
         }
+        out
+    }
+
+    /// Prometheus text-exposition dump (`text/plain; version=0.0.4`):
+    /// every engine-wide counter/gauge plus the per-model rows with
+    /// `model`/`name` labels.  Served verbatim by the TCP `'T'` admin
+    /// frame (see `docs/PROTOCOL.md`) so a sidecar can scrape-and-relay
+    /// without parsing the human report.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut counter = |name: &str, help: &str, v: u64| {
+            out.push_str(&format!(
+                "# HELP quantasr_{name} {help}\n# TYPE quantasr_{name} counter\nquantasr_{name} {v}\n"
+            ));
+        };
+        counter(
+            "frames_processed_total",
+            "AM frames computed",
+            *self.frames_processed.lock().unwrap(),
+        );
+        counter("utterances_total", "utterances finalized", *self.utterances.lock().unwrap());
+        counter("evictions_total", "idle holders parked", *self.evictions.lock().unwrap());
+        counter(
+            "preemptions_total",
+            "holders preempted at a quantum boundary",
+            *self.preemptions.lock().unwrap(),
+        );
+        counter(
+            "admission_rejects_total",
+            "streams refused admission",
+            *self.admission_rejects.lock().unwrap(),
+        );
+        counter(
+            "mem_pressure_rejects_total",
+            "admissions refused for memory pressure",
+            *self.mem_pressure_rejects.lock().unwrap(),
+        );
+        counter(
+            "brownout_rejects_total",
+            "admissions refused during brownout",
+            *self.brownout_rejects.lock().unwrap(),
+        );
+        counter(
+            "brownout_entries_total",
+            "brownout entries (sustained tick-deadline overrun)",
+            *self.brownout_entries.lock().unwrap(),
+        );
+        counter(
+            "brownout_exits_total",
+            "brownout recoveries",
+            *self.brownout_exits.lock().unwrap(),
+        );
+        counter(
+            "shed_streams_total",
+            "Bulk streams cancelled by brownout shedding",
+            *self.shed_streams.lock().unwrap(),
+        );
+        counter(
+            "model_loads_total",
+            "models hot-loaded (boot included)",
+            *self.model_loads.lock().unwrap(),
+        );
+        counter(
+            "model_unloads_total",
+            "models drained out and torn down",
+            *self.model_unloads.lock().unwrap(),
+        );
+        counter(
+            "model_swaps_total",
+            "zero-downtime swaps completed",
+            *self.model_swaps.lock().unwrap(),
+        );
+        counter(
+            "swap_rollbacks_total",
+            "swaps rolled back on canary failure",
+            *self.swap_rollbacks.lock().unwrap(),
+        );
+        counter(
+            "reaped_streams_total",
+            "streams cancelled by the lifetime reaper",
+            *self.reaped_streams.lock().unwrap(),
+        );
+        counter(
+            "forced_cancels_total",
+            "streams cancelled by force-unload deadlines",
+            *self.forced_cancels.lock().unwrap(),
+        );
+        counter(
+            "quarantined_jobs_total",
+            "panics quarantined instead of fatal",
+            *self.quarantined_jobs.lock().unwrap(),
+        );
+        counter(
+            "sched_stalls_total",
+            "flush ticks with ready streams but no placement",
+            *self.sched_stalls.lock().unwrap(),
+        );
+        let mut gauge = |name: &str, help: &str, v: f64| {
+            out.push_str(&format!(
+                "# HELP quantasr_{name} {help}\n# TYPE quantasr_{name} gauge\nquantasr_{name} {v}\n"
+            ));
+        };
+        let pm_snapshot = self.per_model.lock().unwrap().clone();
+        let resident: u64 =
+            pm_snapshot.iter().map(|m| m.arena_bytes + m.reserved_bytes).sum();
+        gauge("resident_bytes", "bytes the budget ledger counts resident", resident as f64);
+        gauge(
+            "budget_bytes",
+            "configured byte budget (0 = unlimited)",
+            *self.budget_bytes.lock().unwrap() as f64,
+        );
+        gauge(
+            "effective_quantum_ticks",
+            "tick quantum in effect (config or auto-tuned)",
+            *self.effective_quantum.lock().unwrap() as f64,
+        );
+        gauge("audio_seconds", "audio seconds processed", *self.audio_seconds.lock().unwrap());
+        gauge(
+            "am_compute_seconds",
+            "wall seconds of AM compute",
+            *self.am_compute_seconds.lock().unwrap(),
+        );
+        gauge(
+            "decode_seconds",
+            "wall seconds of final decode",
+            *self.decode_seconds.lock().unwrap(),
+        );
+        gauge(
+            "frontend_seconds",
+            "wall seconds of frontend",
+            *self.frontend_seconds.lock().unwrap(),
+        );
+        // Latency histograms as Prometheus summaries (exact quantiles —
+        // the Histogram keeps every sample).
+        for (name, h) in [
+            ("finalize_latency_ms", &self.finalize_latency),
+            ("frame_latency_ms", &self.frame_latency),
+            ("first_frame_latency_ms", &self.first_frame_latency),
+        ] {
+            let s = h.summary();
+            out.push_str(&format!(
+                "# HELP quantasr_{name} latency summary\n# TYPE quantasr_{name} summary\n"
+            ));
+            for (q, v) in [(0.5, s.p50), (0.9, s.p90), (0.99, s.p99)] {
+                out.push_str(&format!("quantasr_{name}{{quantile=\"{q}\"}} {v}\n"));
+            }
+            out.push_str(&format!("quantasr_{name}_sum {}\n", s.mean * s.count as f64));
+            out.push_str(&format!("quantasr_{name}_count {}\n", s.count));
+        }
+        // Per-model rows, labelled by slot id + model name.
+        let mut per_model = |name: &str, help: &str, f: &dyn Fn(&ModelStats) -> f64| {
+            out.push_str(&format!(
+                "# HELP quantasr_model_{name} {help}\n# TYPE quantasr_model_{name} gauge\n"
+            ));
+            for (id, m) in pm_snapshot.iter().enumerate() {
+                out.push_str(&format!(
+                    "quantasr_model_{name}{{model=\"{id}\",name=\"{}\"}} {}\n",
+                    m.name.replace('"', "_"),
+                    f(m)
+                ));
+            }
+        };
+        per_model("loaded", "1 if the slot is serving", &|m| u64::from(m.loaded) as f64);
+        per_model("frames_total", "AM frames computed", &|m| m.frames as f64);
+        per_model("lanes", "arena lanes", &|m| m.max_lanes as f64);
+        per_model("occupancy", "mean lane occupancy", &|m| m.occupancy());
+        per_model("evictions_total", "idle holders parked", &|m| m.evictions as f64);
+        per_model("preemptions_total", "quantum preemptions", &|m| m.preemptions as f64);
+        per_model("shed_streams_total", "brownout sheds", &|m| m.shed_streams as f64);
+        per_model("arena_bytes", "resident arena bytes", &|m| m.arena_bytes as f64);
+        per_model("reserved_bytes", "reserved stream bytes", &|m| m.reserved_bytes as f64);
+        per_model("parked_bytes", "bytes in parked blobs", &|m| m.parked_bytes as f64);
         out
     }
 }
@@ -503,6 +777,83 @@ mod tests {
         // A reused slot starts clean, quarantine flag included.
         m.set_model(0, "fresh", 4, 1);
         assert!(!m.per_model.lock().unwrap()[0].quarantined);
+    }
+
+    #[test]
+    fn overload_counters_and_bytes_report() {
+        let m = Metrics::default();
+        m.set_model(0, "en", 4, 1);
+        m.set_model(1, "de", 4, 1);
+        m.brownout_transition(true);
+        m.brownout_transition(false);
+        m.add_shed(1);
+        m.add_shed(9); // out of range: global counter only, no panic
+        m.add_brownout_reject();
+        m.add_mem_pressure_reject();
+        m.add_swap(false);
+        m.add_swap(true);
+        m.set_budget_bytes(4096);
+        m.set_model_bytes(0, 1024, 256, 128);
+        m.set_model_bytes(9, 1, 1, 1); // out of range: no panic
+        {
+            let pm = m.per_model.lock().unwrap();
+            assert_eq!(pm[1].shed_streams, 1);
+            assert_eq!(
+                (pm[0].arena_bytes, pm[0].reserved_bytes, pm[0].parked_bytes),
+                (1024, 256, 128)
+            );
+        }
+        assert_eq!(*m.admission_rejects.lock().unwrap(), 2, "rejects roll up");
+        let r = m.report();
+        assert!(r.contains("shed_streams=2"), "{r}");
+        assert!(r.contains("brownout_entries=1") && r.contains("brownout_exits=1"), "{r}");
+        assert!(r.contains("mem_pressure_rejects=1"), "{r}");
+        assert!(r.contains("model_swaps=1") && r.contains("swap_rollbacks=1"), "{r}");
+        assert!(r.contains("resident_bytes=1280") && r.contains("budget_bytes=4096"), "{r}");
+        assert!(
+            r.lines().any(|l| {
+                l.starts_with("model[0] en") && l.contains("arena_bytes=1024")
+                    && l.contains("parked_bytes=128")
+            }),
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn prometheus_exposition_wellformed() {
+        let m = Metrics::default();
+        m.set_model(0, "en", 4, 1);
+        m.add_am_compute(2.0, 10);
+        m.finalize_latency.record(5.0);
+        m.set_budget_bytes(1000);
+        m.set_model_bytes(0, 100, 50, 25);
+        m.add_shed(0);
+        let p = m.prometheus();
+        // Every sample line's metric must have HELP + TYPE preambles.
+        for line in p.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let metric = line
+                .split(|c| c == '{' || c == ' ')
+                .next()
+                .unwrap();
+            assert!(
+                p.contains(&format!("# TYPE {metric} ")) || metric.ends_with("_sum")
+                    || metric.ends_with("_count"),
+                "no TYPE for {metric}"
+            );
+            assert!(line.starts_with("quantasr_"), "{line}");
+        }
+        assert!(p.contains("quantasr_frames_processed_total 10"), "{p}");
+        assert!(p.contains("quantasr_resident_bytes 150"), "{p}");
+        assert!(p.contains("quantasr_budget_bytes 1000"), "{p}");
+        assert!(
+            p.contains("quantasr_model_shed_streams_total{model=\"0\",name=\"en\"} 1"),
+            "{p}"
+        );
+        assert!(p.contains("quantasr_finalize_latency_ms{quantile=\"0.5\"} 5"), "{p}");
+        assert!(p.contains("quantasr_finalize_latency_ms_count 1"), "{p}");
     }
 
     #[test]

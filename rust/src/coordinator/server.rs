@@ -21,7 +21,12 @@
 //!                      deadline_ms for the drain; on expiry either give
 //!                      up with a reason (force = 0) or cancel the
 //!                      survivors and tear down (force != 0)
+//! 'S' u32 old  u32 w  u32 l  u32 n  bytes×n
+//!                      admin: zero-downtime swap — load the model at
+//!                      path as the replacement for model old, canary it,
+//!                      then redirect newcomers while old drains
 //! 'Q'                  admin: query the live registry
+//! 'T'                  admin: Prometheus text metrics snapshot
 //! ```
 //! server → client:
 //! ```text
@@ -39,10 +44,13 @@
 //!     the connection stays usable.
 //! 'O' u32 v
 //!     admin success (the loaded/unloaded model id)
-//! 'Q' u32 count  { u32 id  u8 status  u32 weight  u32 lanes
-//!                  u32 live  u32 n  bytes×n }×count
-//!     registry snapshot; status: 0 = loaded, 1 = draining,
-//!     2 = quarantined
+//! 'Q' u8 brownout  u64 resident  u64 budget  u32 count
+//!     { u32 id  u8 status  u32 weight  u32 lanes  u32 live
+//!       u64 arena  u64 reserved  u64 parked  u32 n  bytes×n }×count
+//!     registry snapshot; brownout: 0 = normal, 1 = shedding,
+//!     2 = rejecting; status: 0 = loaded, 1 = draining, 2 = quarantined
+//! 'T' u32 n  bytes×n
+//!     Prometheus text-exposition metrics snapshot
 //! ```
 //!
 //! A thread per connection feeds the shared [`Engine`] — batching happens
@@ -52,10 +60,11 @@
 //! rejects (live-stream cap, unknown / draining / quarantined model — see
 //! [`crate::sched::admission`]), the client gets an `'R'` frame with the
 //! [`crate::sched::RejectReason`] text instead of a hung connection.
-//! The mutating admin frames (`'L'`/`'U'`/`'D'`) are only valid before a
-//! stream opens on the connection; the read-only `'Q'` is valid at any
-//! time.  `'L'` requires the server to have been started with a
-//! [`ModelLoader`] ([`serve_with_loader`]); `'U'` blocks its connection
+//! The mutating admin frames (`'L'`/`'U'`/`'D'`/`'S'`) are only valid
+//! before a stream opens on the connection; the read-only `'Q'`/`'T'`
+//! are valid at any time.  `'L'`/`'S'` require the server to have been
+//! started with a [`ModelLoader`] ([`serve_with_loader`]); `'U'` blocks
+//! its connection
 //! thread until the model's drain completes — use `'D'` with a deadline
 //! (and `force` if the survivors must not pin the unload) to bound that
 //! wait.
@@ -89,7 +98,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::batcher::parse_deadline_ms;
-use crate::coordinator::engine::{Engine, FinalResult, ModelInfo, StreamEnd};
+use crate::coordinator::engine::{Engine, FinalResult, ModelInfo, OverloadInfo, StreamEnd};
 use crate::runtime::backend::AmBackend;
 use crate::sched::{ModelParams, Priority, StreamOptions};
 use crate::util::fault::{self, FaultPlan, FaultPoint};
@@ -100,6 +109,10 @@ use crate::util::fault::{self, FaultPlan, FaultPoint};
 pub const MAX_AUDIO_SAMPLES: usize = 10_000_000;
 /// Hard cap on a model path / model name / reason text length.
 pub const MAX_TEXT_BYTES: usize = 65_536;
+/// Hard cap on a `'T'` metrics exposition a client will accept (larger
+/// than [`MAX_TEXT_BYTES`]: the per-model sample families grow with the
+/// registry).
+pub const MAX_METRICS_BYTES: usize = 1 << 20;
 /// Hard cap on `'Q'` registry rows a client will accept.
 pub const MAX_REGISTRY_ROWS: usize = 65_536;
 /// Hard cap on words/phones per `'F'` frame a client will accept.
@@ -194,8 +207,13 @@ pub enum ClientFrame {
     /// `'D'`: bounded-wait unload, optionally forcing survivor
     /// cancellation at the deadline.
     UnloadDeadline { id: u32, deadline_ms: u32, force: bool },
+    /// `'S'`: zero-downtime swap — load the model at `path` as the
+    /// replacement for model `old`, canary it, redirect on success.
+    Swap { old: u32, weight: u32, lanes: u32, path: String },
     /// `'Q'`: registry snapshot request.
     Query,
+    /// `'T'`: Prometheus text metrics request.
+    Metrics,
 }
 
 /// One parsed server → client frame.
@@ -212,7 +230,9 @@ pub enum ServerFrame {
     /// `'E'`: the utterance's processing failed (reason text).
     Failed(String),
     /// `'Q'`: registry snapshot.
-    Registry(Vec<RegistryEntry>),
+    Registry(RegistrySnapshot),
+    /// `'T'`: Prometheus text metrics snapshot.
+    MetricsText(String),
 }
 
 impl ServerFrame {
@@ -225,6 +245,7 @@ impl ServerFrame {
             ServerFrame::Cancelled(_) => "cancelled ('C')",
             ServerFrame::Failed(_) => "failed ('E')",
             ServerFrame::Registry(_) => "registry ('Q')",
+            ServerFrame::MetricsText(_) => "metrics ('T')",
         }
     }
 }
@@ -296,7 +317,15 @@ pub fn read_client_frame_body(tag: u8, r: &mut impl Read) -> Result<ClientFrame,
             r.read_exact(&mut force)?;
             Ok(ClientFrame::UnloadDeadline { id, deadline_ms, force: force[0] != 0 })
         }
+        b'S' => {
+            let old = read_u32(r)?;
+            let weight = read_u32(r)?;
+            let lanes = read_u32(r)?;
+            let path = read_text(r, "model path")?;
+            Ok(ClientFrame::Swap { old, weight, lanes, path })
+        }
         b'Q' => Ok(ClientFrame::Query),
+        b'T' => Ok(ClientFrame::Metrics),
         other => Err(ServeError::protocol(format!("unknown client tag {other:#x}"))),
     }
 }
@@ -323,6 +352,16 @@ pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, ServeError> {
         b'C' => Ok(ServerFrame::Cancelled(read_text(r, "cancel reason")?)),
         b'E' => Ok(ServerFrame::Failed(read_text(r, "failure reason")?)),
         b'Q' => {
+            let mut brownout = [0u8; 1];
+            r.read_exact(&mut brownout)?;
+            if brownout[0] > 2 {
+                return Err(ServeError::protocol(format!(
+                    "unknown brownout stage byte {}",
+                    brownout[0]
+                )));
+            }
+            let resident_bytes = read_u64(r)?;
+            let budget_bytes = read_u64(r)?;
             let count = read_u32(r)? as usize;
             if count > MAX_REGISTRY_ROWS {
                 return Err(ServeError::Oversized {
@@ -331,7 +370,7 @@ pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, ServeError> {
                     limit: MAX_REGISTRY_ROWS,
                 });
             }
-            let mut out = Vec::with_capacity(count.min(1024));
+            let mut models = Vec::with_capacity(count.min(1024));
             for _ in 0..count {
                 let id = read_u32(r)?;
                 let mut status = [0u8; 1];
@@ -345,18 +384,42 @@ pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, ServeError> {
                 let weight = read_u32(r)?;
                 let lanes = read_u32(r)?;
                 let live_streams = read_u32(r)?;
+                let arena_bytes = read_u64(r)?;
+                let reserved_bytes = read_u64(r)?;
+                let parked_bytes = read_u64(r)?;
                 let name = read_text(r, "model name")?;
-                out.push(RegistryEntry {
+                models.push(RegistryEntry {
                     id,
                     draining: status[0] == 1,
                     quarantined: status[0] == 2,
                     weight,
                     lanes,
                     live_streams,
+                    arena_bytes,
+                    reserved_bytes,
+                    parked_bytes,
                     name,
                 });
             }
-            Ok(ServerFrame::Registry(out))
+            Ok(ServerFrame::Registry(RegistrySnapshot {
+                brownout_stage: brownout[0],
+                resident_bytes,
+                budget_bytes,
+                models,
+            }))
+        }
+        b'T' => {
+            let n = read_u32(r)? as usize;
+            if n > MAX_METRICS_BYTES {
+                return Err(ServeError::Oversized {
+                    what: "metrics exposition",
+                    size: n,
+                    limit: MAX_METRICS_BYTES,
+                });
+            }
+            let mut raw = vec![0u8; n];
+            r.read_exact(&mut raw)?;
+            Ok(ServerFrame::MetricsText(String::from_utf8_lossy(&raw).to_string()))
         }
         other => Err(ServeError::protocol(format!("unknown server tag {other:#x}"))),
     }
@@ -366,6 +429,12 @@ fn read_u32(r: &mut impl Read) -> Result<u32, ServeError> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64, ServeError> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
 }
 
 /// Length-prefixed text, bounded by [`MAX_TEXT_BYTES`] before the read.
@@ -657,8 +726,37 @@ fn conn_loop<B: AmBackend>(
                     Err(reason) => write_reject(sock, &reason)?,
                 }
             }
+            ClientFrame::Swap { old, weight, lanes, path } => {
+                if opened.is_some() {
+                    return Err(ServeError::protocol("'S' after the stream was opened"));
+                }
+                let outcome = match loader {
+                    None => Err("no model loader configured on this server".to_string()),
+                    Some(load) => match load.as_ref()(&path) {
+                        Ok(backend) => {
+                            let params = ModelParams {
+                                weight,
+                                lanes: if lanes == 0 { None } else { Some(lanes as usize) },
+                            };
+                            // Blocks this connection thread through the
+                            // canary utterance; on failure the engine has
+                            // already rolled back (new slot unloaded, old
+                            // still serving) and the reason says so.
+                            engine.swap_model(old as usize, backend, params)
+                        }
+                        Err(e) => Err(format!("load '{path}': {e:#}")),
+                    },
+                };
+                match outcome {
+                    Ok(id) => write_ok(sock, id as u32)?,
+                    Err(reason) => write_reject(sock, &reason)?,
+                }
+            }
             ClientFrame::Query => {
-                write_registry(sock, &engine.registry())?;
+                write_registry(sock, &engine.overload_info(), &engine.registry())?;
+            }
+            ClientFrame::Metrics => {
+                sock.write_all(&text_frame(b'T', &engine.metrics().prometheus()))?;
             }
         }
     }
@@ -740,8 +838,15 @@ fn write_ok(sock: &mut TcpStream, v: u32) -> Result<(), ServeError> {
     Ok(())
 }
 
-fn write_registry(sock: &mut TcpStream, entries: &[ModelInfo]) -> Result<(), ServeError> {
+fn write_registry(
+    sock: &mut TcpStream,
+    overload: &OverloadInfo,
+    entries: &[ModelInfo],
+) -> Result<(), ServeError> {
     let mut buf = vec![b'Q'];
+    buf.push(overload.brownout_stage);
+    buf.extend_from_slice(&(overload.resident_bytes as u64).to_le_bytes());
+    buf.extend_from_slice(&(overload.budget_bytes as u64).to_le_bytes());
     buf.extend_from_slice(&(entries.len() as u32).to_le_bytes());
     for e in entries {
         buf.extend_from_slice(&(e.id as u32).to_le_bytes());
@@ -756,6 +861,9 @@ fn write_registry(sock: &mut TcpStream, entries: &[ModelInfo]) -> Result<(), Ser
         buf.extend_from_slice(&e.weight.to_le_bytes());
         buf.extend_from_slice(&(e.lanes as u32).to_le_bytes());
         buf.extend_from_slice(&(e.live_streams as u32).to_le_bytes());
+        buf.extend_from_slice(&(e.arena_bytes as u64).to_le_bytes());
+        buf.extend_from_slice(&(e.reserved_bytes as u64).to_le_bytes());
+        buf.extend_from_slice(&(e.parked_bytes as u64).to_le_bytes());
         let nb = e.name.as_bytes();
         buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
         buf.extend_from_slice(nb);
@@ -791,7 +899,26 @@ pub struct RegistryEntry {
     pub weight: u32,
     pub lanes: u32,
     pub live_streams: u32,
+    /// Resident lane-arena bytes charged to this model.
+    pub arena_bytes: u64,
+    /// Parked-blob bytes reserved by the model's admitted streams.
+    pub reserved_bytes: u64,
+    /// Reserved bytes currently materialized as parked state (≤ reserved).
+    pub parked_bytes: u64,
     pub name: String,
+}
+
+/// Client-side view of the full `'Q'` response: the overload-control
+/// header plus the per-model rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegistrySnapshot {
+    /// Brownout stage: 0 = normal, 1 = shedding Bulk, 2 = rejecting all.
+    pub brownout_stage: u8,
+    /// Ledger-resident bytes (arenas + stream reservations) engine-wide.
+    pub resident_bytes: u64,
+    /// Configured `--mem-budget-bytes` (0 = unlimited).
+    pub budget_bytes: u64,
+    pub models: Vec<RegistryEntry>,
 }
 
 impl Client {
@@ -900,13 +1027,48 @@ impl Client {
         Ok(())
     }
 
-    /// Admin: snapshot the server's live model registry.
+    /// Admin: snapshot the server's live model registry (rows only — see
+    /// [`Client::query_snapshot`] for the overload-control header too).
     pub fn query_registry(&mut self) -> Result<Vec<RegistryEntry>> {
+        Ok(self.query_snapshot()?.models)
+    }
+
+    /// Admin: snapshot the registry plus the overload-control header
+    /// (brownout stage, resident bytes, budget).
+    pub fn query_snapshot(&mut self) -> Result<RegistrySnapshot> {
         self.sock.write_all(b"Q")?;
         match read_server_frame(&mut self.sock)? {
-            ServerFrame::Registry(rows) => Ok(rows),
+            ServerFrame::Registry(snap) => Ok(snap),
             ServerFrame::Reject(reason) => bail!("registry query rejected: {reason}"),
             other => bail!("expected registry frame, got {}", other.kind()),
+        }
+    }
+
+    /// Admin: zero-downtime swap — load the model at `path` as the
+    /// replacement for model `old`, let the server canary it, and on
+    /// success redirect newcomers to the returned new id while `old`
+    /// drains.  On canary failure the server rolls back (unloads the
+    /// replacement, keeps `old` serving) and the error says why.
+    pub fn swap_model(&mut self, old: u32, path: &str, weight: u32, lanes: u32) -> Result<u32> {
+        let pb = path.as_bytes();
+        let mut buf = Vec::with_capacity(17 + pb.len());
+        buf.push(b'S');
+        buf.extend_from_slice(&old.to_le_bytes());
+        buf.extend_from_slice(&weight.to_le_bytes());
+        buf.extend_from_slice(&lanes.to_le_bytes());
+        buf.extend_from_slice(&(pb.len() as u32).to_le_bytes());
+        buf.extend_from_slice(pb);
+        self.sock.write_all(&buf)?;
+        self.read_admin_ok()
+    }
+
+    /// Admin: fetch the server's Prometheus text-exposition metrics.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        self.sock.write_all(b"T")?;
+        match read_server_frame(&mut self.sock)? {
+            ServerFrame::MetricsText(text) => Ok(text),
+            ServerFrame::Reject(reason) => bail!("metrics query rejected: {reason}"),
+            other => bail!("expected metrics frame, got {}", other.kind()),
         }
     }
 
@@ -952,6 +1114,10 @@ mod tests {
         v.to_le_bytes()
     }
 
+    fn le64(v: u64) -> [u8; 8] {
+        v.to_le_bytes()
+    }
+
     #[test]
     fn client_frames_round_trip() {
         let mut c = Cursor::new(vec![b'P', 0u8]);
@@ -974,6 +1140,22 @@ mod tests {
         assert_eq!(
             read_client_frame(&mut Cursor::new(b)).unwrap(),
             Some(ClientFrame::UnloadDeadline { id: 3, deadline_ms: 250, force: true })
+        );
+        // 'S': swap request carries the old id plus the load triple.
+        let mut b = vec![b'S'];
+        b.extend_from_slice(&le(1)); // old
+        b.extend_from_slice(&le(4)); // weight
+        b.extend_from_slice(&le(0)); // lanes (engine default)
+        b.extend_from_slice(&le(7));
+        b.extend_from_slice(b"en-v2.q");
+        assert_eq!(
+            read_client_frame(&mut Cursor::new(b)).unwrap(),
+            Some(ClientFrame::Swap { old: 1, weight: 4, lanes: 0, path: "en-v2.q".into() })
+        );
+        // 'T': bare metrics request.
+        assert_eq!(
+            read_client_frame(&mut Cursor::new(vec![b'T'])).unwrap(),
+            Some(ClientFrame::Metrics)
         );
         // Clean EOF at the tag boundary is None, not an error.
         assert!(read_client_frame(&mut Cursor::new(Vec::new())).unwrap().is_none());
@@ -1024,32 +1206,68 @@ mod tests {
         }
         let b = text_frame(b'E', "decode panicked");
         assert!(matches!(read_server_frame(&mut Cursor::new(b)).unwrap(), ServerFrame::Failed(_)));
-        // 'Q' with one quarantined row.
+        // 'Q' with the overload header and one quarantined row.
         let mut b = vec![b'Q'];
-        b.extend_from_slice(&le(1));
+        b.push(1); // brownout: shedding
+        b.extend_from_slice(&le64(4096)); // resident
+        b.extend_from_slice(&le64(8192)); // budget
+        b.extend_from_slice(&le(1)); // row count
         b.extend_from_slice(&le(4)); // id
         b.push(2); // status: quarantined
         b.extend_from_slice(&le(3)); // weight
         b.extend_from_slice(&le(2)); // lanes
         b.extend_from_slice(&le(1)); // live
+        b.extend_from_slice(&le64(3000)); // arena bytes
+        b.extend_from_slice(&le64(1024)); // reserved bytes
+        b.extend_from_slice(&le64(512)); // parked bytes
         b.extend_from_slice(&le(2));
         b.extend_from_slice(b"en");
         match read_server_frame(&mut Cursor::new(b)).unwrap() {
-            ServerFrame::Registry(rows) => {
-                assert_eq!(rows.len(), 1);
-                assert!(rows[0].quarantined && !rows[0].draining);
-                assert_eq!(rows[0].name, "en");
+            ServerFrame::Registry(snap) => {
+                assert_eq!(snap.brownout_stage, 1);
+                assert_eq!(snap.resident_bytes, 4096);
+                assert_eq!(snap.budget_bytes, 8192);
+                assert_eq!(snap.models.len(), 1);
+                let row = &snap.models[0];
+                assert!(row.quarantined && !row.draining);
+                assert_eq!(
+                    (row.arena_bytes, row.reserved_bytes, row.parked_bytes),
+                    (3000, 1024, 512)
+                );
+                assert_eq!(row.name, "en");
             }
             other => panic!("want registry, got {other:?}"),
         }
         // Unknown status byte is a protocol error, not a guess.
         let mut b = vec![b'Q'];
+        b.push(0);
+        b.extend_from_slice(&le64(0));
+        b.extend_from_slice(&le64(0));
         b.extend_from_slice(&le(1));
         b.extend_from_slice(&le(0));
         b.push(3);
         assert!(matches!(
             read_server_frame(&mut Cursor::new(b)),
             Err(ServeError::Protocol { .. })
+        ));
+        // Unknown brownout stage byte is a protocol error too.
+        let b = vec![b'Q', 9];
+        assert!(matches!(
+            read_server_frame(&mut Cursor::new(b)),
+            Err(ServeError::Protocol { .. })
+        ));
+        // 'T' metrics text round-trips; an oversized prefix is refused
+        // before allocation.
+        let b = text_frame(b'T', "# HELP quantasr_streams_admitted_total x\n");
+        match read_server_frame(&mut Cursor::new(b)).unwrap() {
+            ServerFrame::MetricsText(text) => assert!(text.starts_with("# HELP")),
+            other => panic!("want metrics, got {other:?}"),
+        }
+        let mut b = vec![b'T'];
+        b.extend_from_slice(&le((MAX_METRICS_BYTES + 1) as u32));
+        assert!(matches!(
+            read_server_frame(&mut Cursor::new(b)),
+            Err(ServeError::Oversized { what: "metrics exposition", .. })
         ));
     }
 }

@@ -10,11 +10,14 @@
 //!                   [--max-streams 1024] [--tick-budget 32]
 //!                   [--model-weights 4,1] [--model-lanes 32,8]
 //!                   [--stream-idle-ms 0] [--stream-deadline-ms 0]
+//!                   [--mem-budget-bytes 0]
 //!                   (stream lifetimes: idle/deadline reaper, 0 =
-//!                    disabled; hot admin over TCP: 'L' load / 'U'
-//!                    unload / 'D' bounded unload / 'Q' query — see
-//!                    docs/PROTOCOL.md; 'L' loads .qam paths with the
-//!                    same --mode)
+//!                    disabled; byte budget for arenas + stream
+//!                    reservations, 0 = unlimited; hot admin over TCP:
+//!                    'L' load / 'U' unload / 'D' bounded unload /
+//!                    'S' canaried swap / 'Q' query / 'T' metrics — see
+//!                    docs/PROTOCOL.md; 'L'/'S' load .qam paths with
+//!                    the same --mode)
 //! quantasr bench-serve --model … [--streams 16] [--utts 64]
 //! quantasr ablate-rounding
 //! quantasr ablate-granularity [--model …]
@@ -158,7 +161,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mode = ExecMode::parse(args.get_or("mode", "quant"))?;
     let loader: server::ModelLoader<AcousticModel> =
         Arc::new(move |path: &str| Ok(Arc::new(AcousticModel::load(path, mode)?)));
-    println!("serving on {addr} (ctrl-c to stop; admin frames: L/U/Q)");
+    println!("serving on {addr} (ctrl-c to stop; admin frames: L/U/D/S/Q/T)");
     server::serve_with_loader(engine, &addr, stop, Some(loader), |a| println!("bound {a}"))
 }
 

@@ -125,6 +125,13 @@ pub struct ParkedLane {
     layers: Vec<(Vec<f32>, Vec<f32>)>,
 }
 
+impl ParkedLane {
+    /// Heap bytes held by this parked state (budget-ledger accounting).
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|(c, h)| (c.len() + h.len()) * 4).sum()
+    }
+}
+
 impl BatchArena {
     /// Zero one lane's recurrent state (fresh stream / utterance boundary).
     pub fn reset_lane(&mut self, lane: usize) {
@@ -280,6 +287,26 @@ impl AcousticModel {
             })
             .sum::<usize>()
             + self.out.packed_bytes()
+    }
+
+    /// Bytes of recurrent state one stream carries: per layer a cell row
+    /// (`cell_dim` f32) plus an output row (`rec_dim` f32).  This is both
+    /// the per-lane arena share and the size of a [`ParkedLane`], so the
+    /// budget ledger charges parked and resident lanes identically.
+    pub fn lane_state_bytes(&self) -> usize {
+        self.layers.iter().map(|l| (l.cell_dim + l.rec_dim()) * 4).sum()
+    }
+
+    /// Resident bytes of a [`BatchArena`] sized for `max_lanes` lanes:
+    /// lane-resident recurrent state plus the per-lane activation caches
+    /// (`QActRows`: one u8 row of `rec_dim` per layer plus a 4-byte
+    /// scale).  Step scratch is excluded — it is shared per worker, not
+    /// per model, and bounded by the widest layer.  Deterministic and
+    /// derivable from the header alone, so admission can price a model
+    /// before allocating anything.
+    pub fn arena_bytes(&self, max_lanes: usize) -> usize {
+        let caches: usize = self.layers.iter().map(|l| l.rec_dim() + 4).sum();
+        max_lanes * (self.lane_state_bytes() + caches)
     }
 
     /// Scratch + caches sized for stepping `rows` rows — everything the

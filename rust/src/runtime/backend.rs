@@ -71,6 +71,25 @@ pub trait AmBackend: Send + Sync + 'static {
     /// Allocate an arena with all lanes zeroed.
     fn alloc_arena(&self, max_lanes: usize) -> Self::Arena;
 
+    /// Resident bytes an arena of `max_lanes` lanes occupies (recurrent
+    /// state + per-lane caches/staging).  Must be deterministic and
+    /// computable **without** allocating, so admission can price a model
+    /// load against the byte budget before committing to it.  Backends
+    /// that cannot size themselves may return 0 (unaccounted: the budget
+    /// ledger then tracks only what it can see).
+    fn arena_bytes(&self, max_lanes: usize) -> usize {
+        let _ = max_lanes;
+        0
+    }
+
+    /// Heap bytes of one [`Self::Parked`] blob produced by
+    /// [`Self::save_lane`].  Same determinism contract as
+    /// [`Self::arena_bytes`]; every parked lane of one backend is the
+    /// same size (recurrent state has fixed per-stream shape).
+    fn parked_bytes(&self) -> usize {
+        0
+    }
+
     /// One timestep for the listed active lanes, in place.  `x` and `out`
     /// are lane-resident `[max_lanes, input_dim]` / `[max_lanes,
     /// num_labels]`; only rows in `lanes` are read/written.  `out` rows
@@ -120,6 +139,14 @@ impl AmBackend for AcousticModel {
 
     fn alloc_arena(&self, max_lanes: usize) -> BatchArena {
         self.new_arena(max_lanes)
+    }
+
+    fn arena_bytes(&self, max_lanes: usize) -> usize {
+        AcousticModel::arena_bytes(self, max_lanes)
+    }
+
+    fn parked_bytes(&self) -> usize {
+        self.lane_state_bytes()
     }
 
     fn step_lanes(
@@ -197,6 +224,19 @@ mod pjrt_backend {
 
         fn lane_capacity(&self) -> Option<usize> {
             Some(self.manifest.batch)
+        }
+
+        fn arena_bytes(&self, _max_lanes: usize) -> usize {
+            // The host mirror is always sized at the lowered batch
+            // (alloc_arena asserts max_lanes <= manifest.batch), so the
+            // resident cost is batch-shaped regardless of max_lanes.
+            let m = &self.manifest;
+            m.batch * (m.num_layers * (m.cell_dim + m.rec_dim) + m.input_dim) * 4
+        }
+
+        fn parked_bytes(&self) -> usize {
+            let m = &self.manifest;
+            m.num_layers * (m.cell_dim + m.rec_dim) * 4
         }
 
         fn alloc_arena(&self, max_lanes: usize) -> PjrtLanes {
@@ -318,6 +358,23 @@ mod tests {
         assert_eq!(AmBackend::num_labels(&m), 7);
         assert!(AmBackend::lane_capacity(&m).is_none());
         assert_eq!(m.backend_name(), "native");
+    }
+
+    #[test]
+    fn byte_sizing_matches_what_save_lane_produces() {
+        // The ledger charges parked_bytes() per parked blob; it must be
+        // exactly what save_lane actually allocates, and the arena price
+        // must cover every lane's state share.
+        let mut g = Gen::new(46);
+        let qam = crate::nn::model::random_qam(2, 8, Some(4), 6, 7, &mut g);
+        let m = AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap();
+        let arena = AmBackend::alloc_arena(&m, 4);
+        let parked = AmBackend::save_lane(&m, &arena, 0);
+        assert_eq!(parked.bytes(), AmBackend::parked_bytes(&m));
+        // Per layer one cell row (8 f32) + one output row (4 f32).
+        assert_eq!(AmBackend::parked_bytes(&m), 2 * (8 + 4) * 4);
+        assert!(AmBackend::arena_bytes(&m, 4) >= 4 * AmBackend::parked_bytes(&m));
+        assert_eq!(AmBackend::arena_bytes(&m, 0), 0);
     }
 
     #[test]

@@ -86,6 +86,13 @@ pub enum RejectReason {
     ModelDraining { model: usize },
     /// The requested model was quarantined after a backend fault.
     ModelQuarantined { model: usize },
+    /// Admitting the stream would push resident bytes (arenas + parked
+    /// reservations, see [`crate::sched::BudgetLedger`]) past the
+    /// configured `--mem-budget-bytes` — retry after streams drain.
+    MemoryPressure { resident: usize, budget: usize },
+    /// The engine is in brownout (sustained tick-deadline overrun) and is
+    /// shedding load — retry once it recovers.
+    Brownout,
 }
 
 impl fmt::Display for RejectReason {
@@ -105,6 +112,15 @@ impl fmt::Display for RejectReason {
                     f,
                     "model {model} is quarantined after a fault; unload it or pick another model"
                 )
+            }
+            RejectReason::MemoryPressure { resident, budget } => {
+                write!(
+                    f,
+                    "memory pressure: {resident} resident bytes at budget {budget}; retry later"
+                )
+            }
+            RejectReason::Brownout => {
+                write!(f, "brownout: engine is shedding load; retry later")
             }
         }
     }
@@ -199,5 +215,9 @@ mod tests {
         assert!(d.contains("model 3") && d.contains("draining"), "{d}");
         let q = RejectReason::ModelQuarantined { model: 4 }.to_string();
         assert!(q.contains("model 4") && q.contains("quarantined"), "{q}");
+        let m = RejectReason::MemoryPressure { resident: 900, budget: 1000 }.to_string();
+        assert!(m.starts_with("memory pressure:") && m.contains("900"), "{m}");
+        let b = RejectReason::Brownout.to_string();
+        assert!(b.starts_with("brownout:"), "{b}");
     }
 }

@@ -1,0 +1,224 @@
+//! Byte-accounted resource budget for the serving plane.
+//!
+//! The paper's 8-bit representation exists so acoustic models fit tight
+//! memory budgets; this module makes the serving engine honor one.  The
+//! only admission bound before it was a *stream count*
+//! ([`crate::sched::AdmissionConfig::max_live_streams`]) — nothing
+//! stopped `load_model` from allocating an arena that blows the host's
+//! memory envelope, and nothing bounded the parked-lane blobs that
+//! eviction/preemption/drain create under churn.
+//!
+//! [`BudgetLedger`] is pure accounting — no clocks, locks or arenas, per
+//! the `sched` charter — driven by the engine at every byte-moving event:
+//!
+//! - **Arena residency**: charged when a model's arena is built
+//!   ([`crate::runtime::AmBackend::arena_bytes`]), released at unload
+//!   teardown.  `load_model` asks [`BudgetLedger::fits`] *before*
+//!   allocating, so an oversized model is rejected, not OOM-killed.
+//! - **Stream reservation**: every admitted stream charges one parked
+//!   blob's worth of bytes ([`crate::runtime::AmBackend::parked_bytes`])
+//!   up front, released when the stream is removed.  A stream's recurrent
+//!   state lives either in its arena lane (already priced into the arena)
+//!   or in a [`crate::nn::model::ParkedLane`] copy; reserving the copy at
+//!   admission means eviction/preemption can always park without asking —
+//!   the budget can never be exceeded by a scheduling decision, only
+//!   refused at an admission edge.  Since every parked blob belongs to a
+//!   live stream slot, `parked ≤ reserved` is an invariant.
+//! - **Parked observability**: actual parked-blob bytes are counted
+//!   separately per model (they do not affect the budget check — the
+//!   reservation already covers them) so `Metrics`/`'Q'` can show
+//!   operators what is parked *right now* versus what is reserved.
+//!
+//! Conservation invariants (property-tested in
+//! `tests/sched_integration.rs`): counters never go negative, resident
+//! bytes never exceed the budget when every charge is guarded by
+//! [`BudgetLedger::fits`], and everything returns to zero once all models
+//! and streams are gone.
+
+/// Per-model byte totals, as the ledger sees them.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ModelBytes {
+    /// Resident arena bytes (0 until the arena is built, 0 after unload).
+    pub arena: usize,
+    /// Reserved stream bytes: live streams × one parked blob each.
+    pub reserved: usize,
+    /// Bytes actually sitting in parked blobs right now (≤ `reserved`).
+    pub parked: usize,
+}
+
+impl ModelBytes {
+    /// What this model counts against the budget.
+    pub fn resident(&self) -> usize {
+        self.arena + self.reserved
+    }
+}
+
+/// The engine-wide byte ledger.  `budget: None` means unlimited (the
+/// default): everything is still tracked for observability, but
+/// [`BudgetLedger::fits`] always says yes.
+#[derive(Debug)]
+pub struct BudgetLedger {
+    budget: Option<usize>,
+    rows: Vec<ModelBytes>,
+}
+
+impl BudgetLedger {
+    pub fn new(budget: Option<usize>) -> Self {
+        BudgetLedger { budget, rows: Vec::new() }
+    }
+
+    /// The configured budget, if any.
+    pub fn budget(&self) -> Option<usize> {
+        self.budget
+    }
+
+    /// Total bytes counted against the budget (arenas + reservations).
+    pub fn resident(&self) -> usize {
+        self.rows.iter().map(ModelBytes::resident).sum()
+    }
+
+    /// Total bytes in actual parked blobs (observability only).
+    pub fn parked(&self) -> usize {
+        self.rows.iter().map(|r| r.parked).sum()
+    }
+
+    /// Would charging `extra` more bytes stay within budget?
+    pub fn fits(&self, extra: usize) -> bool {
+        match self.budget {
+            None => true,
+            Some(b) => self.resident().saturating_add(extra) <= b,
+        }
+    }
+
+    /// Per-model snapshot (zeroes for never-seen slots).
+    pub fn model(&self, m: usize) -> ModelBytes {
+        self.rows.get(m).copied().unwrap_or_default()
+    }
+
+    /// True once nothing is charged anywhere (the conservation check).
+    pub fn is_empty(&self) -> bool {
+        self.rows.iter().all(|r| *r == ModelBytes::default())
+    }
+
+    fn row(&mut self, m: usize) -> &mut ModelBytes {
+        if m >= self.rows.len() {
+            self.rows.resize(m + 1, ModelBytes::default());
+        }
+        &mut self.rows[m]
+    }
+
+    /// Model `m`'s arena was built at `bytes` resident.
+    pub fn charge_arena(&mut self, m: usize, bytes: usize) {
+        let r = self.row(m);
+        debug_assert_eq!(r.arena, 0, "model {m} arena double-charged");
+        r.arena = bytes;
+    }
+
+    /// Model `m`'s arena was dropped (unload teardown).
+    pub fn release_arena(&mut self, m: usize) {
+        self.row(m).arena = 0;
+    }
+
+    /// A stream was admitted on model `m`, reserving one parked blob.
+    pub fn charge_stream(&mut self, m: usize, bytes: usize) {
+        self.row(m).reserved += bytes;
+    }
+
+    /// A stream on model `m` ended (its reservation — and any parked blob
+    /// it still held — is gone with its slot).
+    pub fn release_stream(&mut self, m: usize, bytes: usize, was_parked: bool) {
+        let r = self.row(m);
+        debug_assert!(r.reserved >= bytes, "model {m} reservation underflow");
+        r.reserved = r.reserved.saturating_sub(bytes);
+        if was_parked {
+            debug_assert!(r.parked >= bytes, "model {m} parked underflow");
+            r.parked = r.parked.saturating_sub(bytes);
+        }
+        debug_assert!(r.parked <= r.reserved, "model {m}: parked exceeds reserved");
+    }
+
+    /// A lane was parked (eviction/preemption/cancel/drain) on model `m`.
+    pub fn note_parked(&mut self, m: usize, bytes: usize) {
+        let r = self.row(m);
+        r.parked += bytes;
+        debug_assert!(r.parked <= r.reserved, "model {m}: parked exceeds reserved");
+    }
+
+    /// A parked blob was restored into a lane (re-admission) on model `m`.
+    pub fn note_unparked(&mut self, m: usize, bytes: usize) {
+        let r = self.row(m);
+        debug_assert!(r.parked >= bytes, "model {m} parked underflow");
+        r.parked = r.parked.saturating_sub(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_ledger_always_fits_but_still_tracks() {
+        let mut l = BudgetLedger::new(None);
+        assert!(l.fits(usize::MAX));
+        l.charge_arena(0, 1000);
+        l.charge_stream(0, 64);
+        assert_eq!(l.resident(), 1064);
+        assert!(l.fits(usize::MAX));
+        l.release_stream(0, 64, false);
+        l.release_arena(0);
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn fits_is_exact_at_the_boundary() {
+        let mut l = BudgetLedger::new(Some(100));
+        assert!(l.fits(100));
+        assert!(!l.fits(101));
+        l.charge_arena(0, 60);
+        assert!(l.fits(40));
+        assert!(!l.fits(41));
+        l.charge_stream(0, 40);
+        assert!(l.fits(0));
+        assert!(!l.fits(1));
+    }
+
+    #[test]
+    fn park_unpark_does_not_move_the_budget_needle() {
+        let mut l = BudgetLedger::new(Some(100));
+        l.charge_arena(0, 50);
+        l.charge_stream(0, 20);
+        let before = l.resident();
+        l.note_parked(0, 20);
+        assert_eq!(l.resident(), before, "parking converts a reservation");
+        assert_eq!(l.parked(), 20);
+        l.note_unparked(0, 20);
+        assert_eq!(l.parked(), 0);
+        assert_eq!(l.resident(), before);
+    }
+
+    #[test]
+    fn stream_release_drops_parked_blob_with_the_slot() {
+        let mut l = BudgetLedger::new(Some(100));
+        l.charge_stream(1, 30);
+        l.note_parked(1, 30);
+        l.release_stream(1, 30, true);
+        assert!(l.is_empty());
+        assert_eq!(l.model(1), ModelBytes::default());
+    }
+
+    #[test]
+    fn per_model_rows_are_independent() {
+        let mut l = BudgetLedger::new(Some(1000));
+        l.charge_arena(0, 100);
+        l.charge_arena(2, 200);
+        l.charge_stream(2, 10);
+        assert_eq!(l.model(0).arena, 100);
+        assert_eq!(l.model(1), ModelBytes::default());
+        assert_eq!(l.model(2).resident(), 210);
+        assert_eq!(l.resident(), 310);
+        l.release_arena(2);
+        l.release_stream(2, 10, false);
+        assert_eq!(l.model(2), ModelBytes::default());
+        assert_eq!(l.resident(), 100);
+    }
+}

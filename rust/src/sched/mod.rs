@@ -25,6 +25,11 @@
 //!   backpressure instead of unbounded parked-stream growth.  Admission
 //!   validates the target model's lifecycle state ([`ModelStatus`]), so a
 //!   draining model refuses new streams while its survivors finish.
+//! - [`budget`] — byte-accounted admission: a pure ledger prices every
+//!   arena and parked-lane blob against `--mem-budget-bytes`, so model
+//!   loads that don't fit are refused with a reason and stream admission
+//!   backpressures (`RejectReason::MemoryPressure`) instead of letting
+//!   churn grow parked state without bound.
 //! - [`registry`] — N loaded models behind one engine: lanes are
 //!   addressed by [`crate::runtime::backend::LaneTag`] (model, lane), the
 //!   scheduler keeps per-model lane accounting, and one AM worker steps
@@ -45,11 +50,13 @@
 //! `docs/ARCHITECTURE.md`.
 
 pub mod admission;
+pub mod budget;
 pub mod quantum;
 pub mod registry;
 pub mod weights;
 
 pub use admission::{AdmissionConfig, AdmissionController, ModelStatus, RejectReason};
+pub use budget::{BudgetLedger, ModelBytes};
 pub use quantum::{HolderView, QuantumPolicy, AUTO_QUANTUM};
 pub use registry::ModelRegistry;
 pub use weights::{DrrState, ModelParams};

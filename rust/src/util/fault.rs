@@ -21,7 +21,8 @@
 //! QUANTASR_FAULTS = seed ':' rule (',' rule)*
 //! rule            = point ['@' nth] ['#' key] ['~' rate]
 //! point           = decode_panic | backend_panic | slow_tick
-//!                 | client_stall | corrupt_frame
+//!                 | client_stall | corrupt_frame | mem_pressure
+//!                 | canary_fail | overload_tick
 //! ```
 //!
 //! - `point@N` — fire exactly once, on the Nth matching arrival at that
@@ -59,6 +60,16 @@ pub enum FaultPoint {
     /// Corrupt the tag byte of an outbound server frame (keyed by stream
     /// id).
     CorruptFrame,
+    /// Pretend the budget ledger is full: admission/load sees memory
+    /// pressure regardless of actual residency (keyed by model id).
+    MemPressure,
+    /// Fail the canary health check during `swap_model` so the swap rolls
+    /// back (keyed by the replacement model's slot id).
+    CanaryFail,
+    /// Force the AM worker to treat a flush as a deadline overrun — the
+    /// deterministic way to drive the brownout EWMA past its threshold
+    /// without real load (keyed by tick number).
+    OverloadTick,
 }
 
 /// Injected tick stretch (ms) when [`FaultPoint::SlowTick`] fires.
@@ -66,7 +77,7 @@ pub const SLOW_TICK_MS: u64 = 25;
 /// Injected send stall (ms) when [`FaultPoint::ClientStall`] fires.
 pub const CLIENT_STALL_MS: u64 = 250;
 
-const NUM_POINTS: usize = 5;
+const NUM_POINTS: usize = 8;
 
 impl FaultPoint {
     fn index(self) -> usize {
@@ -76,6 +87,9 @@ impl FaultPoint {
             FaultPoint::SlowTick => 2,
             FaultPoint::ClientStall => 3,
             FaultPoint::CorruptFrame => 4,
+            FaultPoint::MemPressure => 5,
+            FaultPoint::CanaryFail => 6,
+            FaultPoint::OverloadTick => 7,
         }
     }
 
@@ -86,6 +100,9 @@ impl FaultPoint {
             FaultPoint::SlowTick => "slow_tick",
             FaultPoint::ClientStall => "client_stall",
             FaultPoint::CorruptFrame => "corrupt_frame",
+            FaultPoint::MemPressure => "mem_pressure",
+            FaultPoint::CanaryFail => "canary_fail",
+            FaultPoint::OverloadTick => "overload_tick",
         }
     }
 
@@ -96,6 +113,9 @@ impl FaultPoint {
             "slow_tick" => Some(FaultPoint::SlowTick),
             "client_stall" => Some(FaultPoint::ClientStall),
             "corrupt_frame" => Some(FaultPoint::CorruptFrame),
+            "mem_pressure" => Some(FaultPoint::MemPressure),
+            "canary_fail" => Some(FaultPoint::CanaryFail),
+            "overload_tick" => Some(FaultPoint::OverloadTick),
             _ => None,
         }
     }
@@ -317,6 +337,18 @@ mod tests {
             rate: None
         });
         assert_eq!(p.rules[2].rate, Some(0.5));
+    }
+
+    #[test]
+    fn overload_points_parse_and_fire_independently() {
+        let p =
+            FaultPlan::parse("9:mem_pressure@1,canary_fail#3,overload_tick~1.0").unwrap();
+        assert!(p.fire(FaultPoint::MemPressure, 0));
+        assert!(!p.fire(FaultPoint::MemPressure, 0), "@1 fires once");
+        assert!(!p.fire(FaultPoint::CanaryFail, 1));
+        assert!(p.fire(FaultPoint::CanaryFail, 3));
+        assert!(p.fire(FaultPoint::OverloadTick, 17), "~1.0 always fires");
+        assert_eq!(p.schedule_log().len(), 3);
     }
 
     #[test]

@@ -353,8 +353,12 @@ fn slow_ticks_never_change_results() {
 /// The same seeded plan realizes the same schedule on two independent
 /// engine runs — which is what makes a failing chaos run replayable from
 /// its seed.  The realized schedule is written to `CHAOS_schedule.log`
-/// (the chaos CI job uploads it as the run artifact), and the fault
-/// counters reconcile exactly with the schedule.
+/// (the chaos and overload CI jobs upload it as the run artifact), and —
+/// for the default all-`decode_panic` schedule — the fault counters
+/// reconcile exactly with it.  An env-pinned schedule (the CI jobs pin
+/// seeds covering other points, e.g. `mem_pressure`) still must realize
+/// identically on both runs; its admission-level faults surface as
+/// rejects, which are a legitimate realization here, not a failure.
 #[test]
 fn fault_schedules_are_deterministic_and_logged() {
     let spec =
@@ -367,7 +371,16 @@ fn fault_schedules_are_deterministic_and_logged() {
         for i in 0..4u64 {
             let content = frames(n, seed_base + i);
             let want = greedy_ref(&model, &content, n);
-            let r = run_utt(&eng, 0, &content);
+            // Admission itself may be the scripted fault (`mem_pressure`).
+            let (id, rx) = match eng
+                .try_open_stream(StreamOptions { model: 0, priority: Priority::Interactive })
+            {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            eng.push_frames(id, &content).unwrap();
+            eng.finish_stream(id).unwrap();
+            let r = rx.recv_timeout(Duration::from_secs(30)).expect("utterance result in 30 s");
             if r.end == StreamEnd::Complete {
                 completed += 1;
                 assert_eq!(r.phones, want, "surviving utterance {i}");
@@ -382,12 +395,18 @@ fn fault_schedules_are_deterministic_and_logged() {
     let (log_a, completed_a, quarantined_a) = run(0x1000);
     let (log_b, _, _) = run(0x2000);
     assert_eq!(log_a, log_b, "same seed must realize the same schedule");
-    // Metrics reconcile: every fired decode_panic is one quarantined job
-    // and one non-completed utterance; nothing else fired.
-    let fired = log_a.iter().filter(|l| l.contains("decode_panic")).count() as u64;
-    assert_eq!(fired, log_a.len() as u64, "only scripted points fired: {log_a:?}");
-    assert_eq!(quarantined_a, fired);
-    assert_eq!(completed_a, 4 - fired);
+    // Strict reconciliation for the default schedule: every fired
+    // decode_panic is one quarantined job and one non-completed
+    // utterance; nothing else fired.
+    let decode_only = spec
+        .split_once(':')
+        .is_some_and(|(_, rules)| rules.split(',').all(|r| r.starts_with("decode_panic")));
+    if decode_only {
+        let fired = log_a.iter().filter(|l| l.contains("decode_panic")).count() as u64;
+        assert_eq!(fired, log_a.len() as u64, "only scripted points fired: {log_a:?}");
+        assert_eq!(quarantined_a, fired);
+        assert_eq!(completed_a, 4 - fired);
+    }
 
     let mut artifact = format!("# QUANTASR_FAULTS={spec}\n");
     for line in &log_a {
@@ -511,4 +530,281 @@ fn tcp_corrupt_frame_hits_one_client_and_the_server_survives() {
 
     stop.store(true, Ordering::SeqCst);
     server.join().unwrap();
+}
+
+/// Brownout overload control, end to end on a scripted schedule: forced
+/// overruns (`overload_tick`) arm the controller, stage 1 sheds both
+/// Bulk streams (the `shed:` cancel reason on their `'C'` path), stage 2
+/// rejects every new admission, and a calm flush cadence recovers to
+/// normal admission.  The Interactive survivor is never touched and
+/// drains bit-exact; the realized fault schedule is exactly the
+/// scripted one.
+#[test]
+fn brownout_sheds_bulk_first_then_recovers() {
+    const FORCED: usize = 30;
+    let rules =
+        (1..=FORCED).map(|i| format!("overload_tick@{i}")).collect::<Vec<_>>().join(",");
+    let p = plan(&format!("21:{rules}"));
+    let qam = common::random_model(2, 16, Some(8));
+    let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    // 50 ms batch deadline: calm single-stream flushes sit near ratio
+    // 1.0, far under the 1.5 exit bar, so recovery cannot flap on a slow
+    // machine.  The forced ticks ignore wall clock entirely.
+    let mut cfg = chaos_config(2, Some(p.clone()), None, None);
+    cfg.policy.deadline = Duration::from_millis(50);
+    let eng = Arc::new(Engine::start(model.clone(), decoder, cfg));
+
+    let total = 60usize;
+    let fdim = spec::FEAT_DIM;
+    let content = frames(total, 0xB0B0);
+    let want = greedy_ref(&model, &content, total);
+
+    // Two Bulk victims-to-be (open before any flush so the shed pass
+    // sees them) and the Interactive survivor that feeds the flush clock.
+    let bulk: Vec<_> = (0..2)
+        .map(|_| {
+            eng.try_open_stream(StreamOptions { model: 0, priority: Priority::Bulk })
+                .expect("bulk admission")
+        })
+        .collect();
+    let (sid, s_rx) = eng
+        .try_open_stream(StreamOptions { model: 0, priority: Priority::Interactive })
+        .expect("interactive admission");
+
+    std::thread::scope(|scope| {
+        // Bulk producers push until the stream is shed out from under
+        // them — pushes to a cancelled stream error by design.
+        let mut bulk_rx = Vec::new();
+        for (i, (id, rx)) in bulk.into_iter().enumerate() {
+            bulk_rx.push(rx);
+            let eng = eng.clone();
+            let chunk = frames(600, 0x600 + i as u64);
+            scope.spawn(move || {
+                let _ = eng.push_frames(id, &chunk);
+                let _ = eng.finish_stream(id);
+            });
+        }
+        // Forced ticks 1-2 arm the controller, tick 3 enters stage 1 and
+        // sheds both Bulk streams, tick 4 finds no Bulk left and
+        // escalates to rejecting admissions.
+        eng.push_frames(sid, &content[..10 * fdim]).unwrap();
+        for (i, rx) in bulk_rx.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(30)).expect("shed verdict within 30 s");
+            match r.end {
+                StreamEnd::Cancelled(why) => {
+                    assert!(why.starts_with("shed:"), "bulk {i}: wrong cancel reason: {why}")
+                }
+                other => panic!("bulk {i} must be shed, got {other:?}"),
+            }
+        }
+    });
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while eng.overload_info().brownout_stage != 2 {
+        assert!(Instant::now() < deadline, "brownout never escalated to rejecting");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    match eng.try_open_stream(StreamOptions { model: 0, priority: Priority::Interactive }) {
+        Err(RejectReason::Brownout) => {}
+        other => panic!("stage-2 brownout must reject admissions, got {other:?}"),
+    }
+
+    // Recovery: trickle one frame per >250 ms gap.  Each trickle flush
+    // first drains the remaining forced ticks (ratio pinned high), then
+    // counts as calm evidence (idle gap => ratio 0) until the EWMA
+    // clears the exit bar with hysteresis.
+    let mut next = 10usize;
+    while next < 50 {
+        eng.push_frames(sid, &content[next * fdim..(next + 1) * fdim]).unwrap();
+        next += 1;
+        std::thread::sleep(Duration::from_millis(300));
+        if eng.overload_info().brownout_stage == 0 {
+            break;
+        }
+    }
+    assert_eq!(eng.overload_info().brownout_stage, 0, "brownout never recovered");
+    // Normal admission is back.
+    let (probe, _probe_rx) = eng
+        .try_open_stream(StreamOptions { model: 0, priority: Priority::Interactive })
+        .expect("admission after recovery");
+    eng.finish_stream(probe).unwrap();
+    // The survivor drains bit-exact: shedding never touches Interactive.
+    eng.push_frames(sid, &content[next * fdim..]).unwrap();
+    eng.finish_stream(sid).unwrap();
+    let r = s_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(r.end, StreamEnd::Complete);
+    assert_eq!(r.phones, want, "brownout changed survivor numerics");
+
+    // Exactly one entry, one recovery, two Bulk victims, one reject.
+    let m = eng.metrics();
+    assert_eq!(*m.brownout_entries.lock().unwrap(), 1);
+    assert_eq!(*m.brownout_exits.lock().unwrap(), 1);
+    assert_eq!(*m.shed_streams.lock().unwrap(), 2);
+    assert_eq!(m.per_model.lock().unwrap()[0].shed_streams, 2);
+    assert_eq!(*m.brownout_rejects.lock().unwrap(), 1);
+    // The realized schedule is exactly the scripted one, twice over:
+    // every forced tick fired once, nothing else fired at all.
+    let log = p.schedule_log();
+    assert_eq!(log.len(), FORCED, "forced ticks fired exactly once each: {log:?}");
+    assert!(log.iter().all(|l| l.contains("overload_tick")), "{log:?}");
+}
+
+/// Zero-downtime swap with a health-checked rollback: an injected canary
+/// failure rolls the swap back (old model keeps serving, zero streams
+/// cancelled, replacement slot torn down), a retry with a clean canary
+/// completes, newcomers dialing the old id are redirected to the
+/// replacement, and the mid-utterance survivor drains bit-exact on the
+/// old model throughout both swaps.
+#[test]
+fn swap_rollback_on_canary_failure_keeps_old_serving() {
+    let p = plan("7:canary_fail@1");
+    let (model_a, eng) = small_engine(Some(p.clone()), None, None);
+    let qam_b = common::random_model_seeded(2, 12, Some(6), 0x51AB);
+    let model_b = Arc::new(AcousticModel::from_qam(&qam_b, ExecMode::Quant).unwrap());
+
+    let total = 24usize;
+    let half = 12 * spec::FEAT_DIM;
+    let content = frames(total, 0xAB1);
+    let want_a = greedy_ref(&model_a, &content, total);
+
+    // The survivor holds a live, half-pushed stream on the old model.
+    let (sid, s_rx) = eng
+        .try_open_stream(StreamOptions { model: 0, priority: Priority::Interactive })
+        .expect("survivor admission");
+    eng.push_frames(sid, &content[..half]).unwrap();
+
+    // Swap 1: the canary fails (injected) before taking any traffic.
+    let err = eng
+        .swap_model(0, model_b.clone(), ModelParams { weight: 1, lanes: Some(2) })
+        .expect_err("injected canary failure must roll the swap back");
+    assert!(err.contains("rolled back"), "{err}");
+    assert!(err.contains("injected canary failure"), "{err}");
+    assert_eq!(p.schedule_log().len(), 1, "{:?}", p.schedule_log());
+    assert!(p.schedule_log()[0].contains("canary_fail"));
+    assert_eq!(*eng.metrics().swap_rollbacks.lock().unwrap(), 1);
+    assert_eq!(*eng.metrics().model_swaps.lock().unwrap(), 0);
+    // The old model was never touched: zero cancelled streams.
+    assert_eq!(*eng.metrics().forced_cancels.lock().unwrap(), 0);
+    assert_eq!(*eng.metrics().shed_streams.lock().unwrap(), 0);
+    assert_eq!(*eng.metrics().reaped_streams.lock().unwrap(), 0);
+    // The failed replacement's slot tears down; only the old row stays.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let reg = eng.registry();
+        if reg.len() == 1 && reg[0].id == 0 && !reg[0].draining {
+            break;
+        }
+        assert!(Instant::now() < deadline, "rolled-back slot never tore down: {reg:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Swap 2 (canary arrival 2 — no scripted fault): completes while the
+    // survivor is still live on the old model.
+    let new_id = eng
+        .swap_model(0, model_b.clone(), ModelParams { weight: 1, lanes: Some(2) })
+        .expect("clean canary: swap completes");
+    assert_eq!(*eng.metrics().model_swaps.lock().unwrap(), 1);
+    let reg = eng.registry();
+    let old = reg.iter().find(|e| e.id == 0).expect("old row drains with a survivor");
+    assert!(old.draining, "the swapped-out model must drain, not die");
+
+    // Newcomers dialing the old id land on the replacement.
+    let n = 8usize;
+    let nb = frames(n, 0xAB2);
+    let r = run_utt(&eng, 0, &nb);
+    assert_eq!(r.end, StreamEnd::Complete);
+    assert_eq!(r.phones, greedy_ref(&model_b, &nb, n), "newcomer must run on the replacement");
+
+    // The survivor drains on the old model, bit-exact across both swaps.
+    eng.push_frames(sid, &content[half..]).unwrap();
+    eng.finish_stream(sid).unwrap();
+    let r = s_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(r.end, StreamEnd::Complete);
+    assert_eq!(r.phones, want_a, "swap changed survivor numerics");
+    assert_eq!(*eng.metrics().forced_cancels.lock().unwrap(), 0, "zero cancels on old model");
+
+    // The old slot tears down once drained; the replacement remains.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let reg = eng.registry();
+        if reg.len() == 1 && reg[0].id == new_id {
+            break;
+        }
+        assert!(Instant::now() < deadline, "swapped-out slot never tore down: {reg:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Memory-pressure admission control under churn: a byte budget sized
+/// for exactly two stream reservations rejects the third admission every
+/// round with the machine-readable reason, resident bytes never exceed
+/// the budget, reservations return in full when streams drain, an
+/// over-budget hot load is refused up front, and the scripted
+/// `mem_pressure` fault point forces the same reject path once.
+#[test]
+fn memory_pressure_rejects_under_churn() {
+    let qam = common::random_model(2, 16, Some(8));
+    let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+    let blob = model.lane_state_bytes();
+    let arena = model.arena_bytes(2);
+    assert!(blob > 0 && arena > 0);
+    let budget = arena + 2 * blob;
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    let mut cfg = chaos_config(2, None, None, None);
+    cfg.mem_budget = Some(budget);
+    let eng = Arc::new(Engine::start(model.clone(), decoder, cfg));
+
+    let n = 4usize;
+    for round in 0..4u64 {
+        let (a, rx_a) = eng.try_open_stream(StreamOptions::default()).expect("round admit a");
+        let (b, rx_b) = eng.try_open_stream(StreamOptions::default()).expect("round admit b");
+        match eng.try_open_stream(StreamOptions::default()) {
+            Err(RejectReason::MemoryPressure { resident, budget: bb }) => {
+                assert_eq!((resident, bb), (budget, budget), "round {round}");
+            }
+            other => panic!("round {round}: expected memory-pressure reject, got {other:?}"),
+        }
+        assert!(eng.overload_info().resident_bytes <= budget, "round {round}: over budget");
+        for (i, (id, rx)) in [(a, rx_a), (b, rx_b)].into_iter().enumerate() {
+            let f = frames(n, 0xC0DE + round * 10 + i as u64);
+            let want = greedy_ref(&model, &f, n);
+            eng.push_frames(id, &f).unwrap();
+            eng.finish_stream(id).unwrap();
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(r.end, StreamEnd::Complete);
+            assert_eq!(r.phones, want, "round {round} stream {i}: numerics under pressure");
+        }
+        // Reservations come back in full before the next round.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while eng.overload_info().resident_bytes != arena {
+            assert!(Instant::now() < deadline, "round {round}: reservations leaked");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    assert_eq!(*eng.metrics().mem_pressure_rejects.lock().unwrap(), 4);
+    // An over-budget hot load is refused before touching the ledger.
+    let qam_b = common::random_model_seeded(2, 16, Some(8), 0x0DDB);
+    let model_b = Arc::new(AcousticModel::from_qam(&qam_b, ExecMode::Quant).unwrap());
+    let err = eng
+        .load_model(model_b, ModelParams { weight: 1, lanes: Some(4) })
+        .expect_err("over-budget load must be refused");
+    assert!(err.contains("memory pressure"), "{err}");
+    assert_eq!(eng.overload_info().resident_bytes, arena, "refused load must not leak");
+
+    // The scripted fault point forces the same reject once, budget-free.
+    let p = plan("5:mem_pressure@1");
+    let (m2, eng2) = small_engine(Some(p.clone()), None, None);
+    match eng2.try_open_stream(StreamOptions::default()) {
+        Err(RejectReason::MemoryPressure { resident, budget: 0 }) => {
+            assert_eq!(resident, m2.arena_bytes(2), "forced reject reports the live ledger");
+        }
+        other => panic!("forced mem_pressure must reject, got {other:?}"),
+    }
+    assert_eq!(p.schedule_log().len(), 1, "{:?}", p.schedule_log());
+    assert!(p.schedule_log()[0].contains("mem_pressure"));
+    assert_eq!(*eng2.metrics().mem_pressure_rejects.lock().unwrap(), 1);
+    let (id, _rx) = eng2.try_open_stream(StreamOptions::default()).expect("fault cleared");
+    eng2.finish_stream(id).unwrap();
 }

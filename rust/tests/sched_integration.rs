@@ -9,7 +9,7 @@ mod common;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use quantasr::coordinator::batcher::BatchPolicy;
 use quantasr::coordinator::server::{serve, serve_with_loader, Client, ModelLoader};
@@ -19,8 +19,8 @@ use quantasr::eval::build_decoder;
 use quantasr::frontend::spec;
 use quantasr::nn::{AcousticModel, ExecMode};
 use quantasr::sched::{
-    AdmissionConfig, ModelParams, ModelRegistry, Priority, QuantumPolicy, RejectReason,
-    StreamOptions,
+    AdmissionConfig, BudgetLedger, ModelParams, ModelRegistry, Priority, QuantumPolicy,
+    RejectReason, StreamOptions,
 };
 use quantasr::sim::World;
 use quantasr::util::rng::Xoshiro256;
@@ -41,6 +41,10 @@ fn sched_config(max_batch: usize, quantum_ticks: u32, max_pending: usize) -> Eng
         max_pending_frames: max_pending,
         quantum: QuantumPolicy { quantum_ticks },
         admission: AdmissionConfig::default(),
+        // Never inherit a process-wide fault plan: this suite's engines
+        // script no faults (a pinned QUANTASR_FAULTS belongs to the
+        // chaos suite).
+        faults: None,
         ..EngineConfig::default()
     }
 }
@@ -619,6 +623,276 @@ fn tcp_admin_load_query_unload() {
     let err = admin2.load_model("x.qam", 1, 0).expect_err("no loader configured");
     assert!(format!("{err:#}").contains("loader"), "{err:#}");
     assert_eq!(admin2.query_registry().unwrap().len(), 1);
+    stop2.store(true, Ordering::SeqCst);
+    drop(admin2);
+    server2.join().unwrap();
+}
+
+/// Byte-budget conservation property: a 5000-op randomized churn of
+/// loads, unloads, admissions, parks, unparks, and drains keeps the
+/// ledger's resident count equal to a shadow model's at every step,
+/// never past the budget, with per-model `parked ≤ reserved`; a full
+/// drain at the end returns every byte.
+#[test]
+fn budget_ledger_conserves_bytes_under_randomized_churn() {
+    let budget = 10_000usize;
+    let mut ledger = BudgetLedger::new(Some(budget));
+    let mut rng = Xoshiro256::new(0xB1D6E7);
+    // Shadow per model: (arena bytes if loaded, per-stream blob size,
+    // one parked flag per live stream).
+    let mut shadow: Vec<(Option<usize>, usize, Vec<bool>)> =
+        (0..4usize).map(|m| (None, 64 * (m + 1), Vec::new())).collect();
+    for step in 0..5000 {
+        let m = (rng.next_u64() % 4) as usize;
+        let blob = shadow[m].1;
+        match rng.next_u64() % 6 {
+            0 => {
+                if shadow[m].0.is_none() {
+                    let bytes = 256 * (m + 1);
+                    if ledger.fits(bytes) {
+                        ledger.charge_arena(m, bytes);
+                        shadow[m].0 = Some(bytes);
+                    }
+                }
+            }
+            1 => {
+                // Teardown only happens with no reservations outstanding
+                // (the engine drains streams before releasing the arena).
+                if shadow[m].0.is_some() && shadow[m].2.is_empty() {
+                    ledger.release_arena(m);
+                    shadow[m].0 = None;
+                }
+            }
+            2 => {
+                if shadow[m].0.is_some() && ledger.fits(blob) {
+                    ledger.charge_stream(m, blob);
+                    shadow[m].2.push(false);
+                }
+            }
+            3 => {
+                if let Some(i) = shadow[m].2.iter().position(|p| !*p) {
+                    ledger.note_parked(m, blob);
+                    shadow[m].2[i] = true;
+                }
+            }
+            4 => {
+                if let Some(i) = shadow[m].2.iter().position(|p| *p) {
+                    ledger.note_unparked(m, blob);
+                    shadow[m].2[i] = false;
+                }
+            }
+            _ => {
+                if let Some(was_parked) = shadow[m].2.pop() {
+                    ledger.release_stream(m, blob, was_parked);
+                }
+            }
+        }
+        let want: usize =
+            shadow.iter().map(|(a, b, ss)| a.unwrap_or(0) + b * ss.len()).sum();
+        assert_eq!(ledger.resident(), want, "step {step}: bytes leaked or double-counted");
+        assert!(ledger.resident() <= budget, "step {step}: ledger past its budget");
+        for (mm, (_, b, ss)) in shadow.iter().enumerate() {
+            let row = ledger.model(mm);
+            assert_eq!(row.reserved, b * ss.len(), "step {step} model {mm}: reserved");
+            assert_eq!(
+                row.parked,
+                b * ss.iter().filter(|p| **p).count(),
+                "step {step} model {mm}: parked"
+            );
+            assert!(row.parked <= row.reserved, "step {step}: parked past reserved");
+        }
+    }
+    // Full drain: every byte comes back and the ledger reads empty.
+    for m in 0..4usize {
+        let blob = shadow[m].1;
+        while let Some(was_parked) = shadow[m].2.pop() {
+            ledger.release_stream(m, blob, was_parked);
+        }
+        if shadow[m].0.take().is_some() {
+            ledger.release_arena(m);
+        }
+    }
+    assert_eq!(ledger.resident(), 0, "drained ledger still holds bytes");
+    assert_eq!(ledger.parked(), 0);
+    assert!(ledger.is_empty());
+}
+
+/// The byte budget backpressures end to end: admission charges one
+/// parked blob per stream against `--mem-budget-bytes`, rejects with the
+/// machine-readable memory-pressure reason at the cap, surfaces the
+/// ledger in the registry rows and the metrics report, refuses a model
+/// load whose arena cannot fit, and returns the full reservation when
+/// the streams drain.
+#[test]
+fn engine_budget_backpressures_and_recovers() {
+    let qam = common::random_model(2, 16, Some(8));
+    let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+    let blob = model.lane_state_bytes();
+    let arena = model.arena_bytes(2);
+    assert!(blob > 0 && arena > 0);
+    let budget = arena + 2 * blob;
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    let mut cfg = sched_config(2, 4, 32);
+    cfg.mem_budget = Some(budget);
+    let eng = Engine::start(model.clone(), decoder, cfg);
+
+    let info = eng.overload_info();
+    assert_eq!(info.budget_bytes, budget);
+    assert_eq!(info.resident_bytes, arena, "boot charges the arena only");
+
+    // Two admissions fill the budget; the third backpressures.
+    let (id_a, rx_a) = eng.try_open_stream(StreamOptions::default()).unwrap();
+    let (id_b, rx_b) = eng.try_open_stream(StreamOptions::default()).unwrap();
+    match eng.try_open_stream(StreamOptions::default()) {
+        Err(RejectReason::MemoryPressure { resident, budget: b }) => {
+            assert_eq!((resident, b), (arena + 2 * blob, budget));
+        }
+        other => panic!("expected memory-pressure reject, got {other:?}"),
+    }
+    assert_eq!(*eng.metrics().mem_pressure_rejects.lock().unwrap(), 1);
+    // The ledger is visible: registry row and report agree with it.
+    let reg = eng.registry();
+    assert_eq!(reg[0].arena_bytes, arena);
+    assert_eq!(reg[0].reserved_bytes, 2 * blob);
+    let report = eng.metrics().report();
+    assert!(report.contains(&format!("resident_bytes={}", arena + 2 * blob)), "{report}");
+    assert!(report.contains(&format!("budget_bytes={budget}")), "{report}");
+    // A model whose arena cannot fit the remaining budget is refused.
+    let qam_b = common::random_model_seeded(2, 16, Some(8), 0xFEE1);
+    let model_b = Arc::new(AcousticModel::from_qam(&qam_b, ExecMode::Quant).unwrap());
+    assert!(model_b.arena_bytes(4) + arena + 2 * blob > budget, "test sizing precondition");
+    let err = eng
+        .load_model(model_b, ModelParams { weight: 1, lanes: Some(4) })
+        .expect_err("an over-budget load must be refused");
+    assert!(err.contains("memory pressure"), "{err}");
+
+    // Drain both streams bit-exactly; the reservations come back.
+    let n = 6usize;
+    for (i, (id, rx)) in [(id_a, rx_a), (id_b, rx_b)].into_iter().enumerate() {
+        let f = frames(n, 0xEB0 + i as u64);
+        let want = greedy_ref(&model, &f, n);
+        eng.push_frames(id, &f).unwrap();
+        eng.finish_stream(id).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(20)).unwrap();
+        assert_eq!(r.phones, want, "budgeted stream {i} numerics");
+    }
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while eng.overload_info().resident_bytes != arena {
+        assert!(Instant::now() < deadline, "stream reservations never released");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // Capacity is back: a fresh admission succeeds.
+    let (id_c, _rx_c) = eng.try_open_stream(StreamOptions::default()).expect("recovered");
+    let _ = eng.finish_stream(id_c);
+}
+
+/// The TCP overload-admin surface: 'T' serves the Prometheus exposition,
+/// 'Q' carries the overload header and per-model byte columns, and 'S'
+/// swaps a model with zero downtime — the survivor on the old model
+/// finishes normally while a newcomer still dialing the old id is
+/// redirected to the replacement.  A loader-less server rejects 'S' with
+/// a reason.
+#[test]
+fn tcp_swap_metrics_and_snapshot() {
+    let qam = common::random_model(2, 16, Some(8));
+    let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    let engine = Arc::new(Engine::start(model.clone(), decoder, sched_config(2, 4, 32)));
+    let loader: ModelLoader<AcousticModel> = Arc::new(|spec: &str| {
+        anyhow::ensure!(spec != "missing.qam", "no such model: {spec}");
+        let qam = common::random_model_seeded(2, 12, Some(6), 0x5A4B);
+        Ok(Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant)?))
+    });
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv_engine = engine.clone();
+    let srv_stop = stop.clone();
+    let server = std::thread::spawn(move || {
+        serve_with_loader(srv_engine, "127.0.0.1:0", srv_stop, Some(loader), move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .expect("server failed");
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap().to_string();
+
+    let mut admin = Client::connect(&addr).unwrap();
+    // 'T': well-formed Prometheus exposition over the wire.
+    let text = admin.metrics_text().unwrap();
+    assert!(text.contains("# HELP quantasr_model_swaps_total"), "{text}");
+    assert!(text.contains("quantasr_resident_bytes"), "{text}");
+    // 'Q': overload header plus byte columns.
+    let snap = admin.query_snapshot().unwrap();
+    assert_eq!(snap.brownout_stage, 0);
+    assert_eq!(snap.budget_bytes, 0, "no budget configured");
+    assert!(snap.resident_bytes > 0, "the boot arena is resident");
+    assert_eq!(snap.models.len(), 1);
+    assert!(snap.models[0].arena_bytes > 0);
+    assert_eq!(snap.models[0].reserved_bytes, 0);
+
+    // A survivor holds a live stream on model 0 across the swap.
+    let mut survivor = Client::connect(&addr).unwrap();
+    survivor.set_model(0).unwrap();
+    survivor.send_audio(&[0.01f32; 1600]).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let reg = admin.query_registry().unwrap();
+        if reg.iter().any(|e| e.id == 0 && e.live_streams == 1) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "survivor never reached the engine");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // 'S': canaried swap; the replacement takes slot 1.
+    let new_id = admin.swap_model(0, "replacement.qam", 1, 2).expect("swap over TCP");
+    assert_eq!(new_id, 1);
+    let reg = admin.query_registry().unwrap();
+    let old = reg.iter().find(|e| e.id == 0).expect("old row while draining");
+    assert!(old.draining, "the swapped-out model drains");
+    // A newcomer still dialing the old id is served by the replacement.
+    let mut redirected = Client::connect(&addr).unwrap();
+    redirected.set_model(0).unwrap();
+    redirected.send_audio(&[0.01f32; 1600]).unwrap();
+    let r = redirected.finish().expect("newcomer redirected to the replacement");
+    assert!(r.server_latency_ms >= 0.0);
+    // The survivor finishes normally on the old model.
+    let r = survivor.finish().expect("survivor drains on the old model");
+    assert!(r.server_latency_ms >= 0.0);
+    // The old slot tears down once drained; the swap counter ticks.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let reg = admin.query_registry().unwrap();
+        if reg.len() == 1 && reg[0].id == 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "old slot never tore down: {reg:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let text = admin.metrics_text().unwrap();
+    assert!(text.contains("quantasr_model_swaps_total 1"), "{text}");
+    assert!(text.contains("quantasr_swap_rollbacks_total 0"), "{text}");
+    stop.store(true, Ordering::SeqCst);
+    drop(admin);
+    server.join().unwrap();
+
+    // A loader-less server rejects 'S' with a reason and stays usable.
+    let stop2 = Arc::new(AtomicBool::new(false));
+    let (addr_tx2, addr_rx2) = std::sync::mpsc::channel();
+    let srv_engine2 = engine.clone();
+    let srv_stop2 = stop2.clone();
+    let server2 = std::thread::spawn(move || {
+        serve(srv_engine2, "127.0.0.1:0", srv_stop2, move |a| {
+            let _ = addr_tx2.send(a);
+        })
+        .expect("server failed");
+    });
+    let addr2 = addr_rx2.recv_timeout(Duration::from_secs(10)).unwrap().to_string();
+    let mut admin2 = Client::connect(&addr2).unwrap();
+    let err = admin2.swap_model(1, "x.qam", 1, 0).expect_err("no loader configured");
+    assert!(format!("{err:#}").contains("loader"), "{err:#}");
+    assert!(!admin2.metrics_text().unwrap().is_empty());
     stop2.store(true, Ordering::SeqCst);
     drop(admin2);
     server2.join().unwrap();
