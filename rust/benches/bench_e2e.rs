@@ -11,10 +11,15 @@
 //!     plus a scripted `overload_tick` fault window drive the brownout
 //!     controller through shed → reject → recover while interactive
 //!     finalize latency is sampled before/during/after, and a canaried
-//!     zero-downtime swap is timed against a constant admission knocker.
+//!     zero-downtime swap is timed against a constant admission knocker;
+//! (i) the flight recorder's cost: the 32-stream saturated workload run
+//!     with tracing disabled then enabled (`obs::set_enabled`), per-tick
+//!     latency and throughput side by side — the always-on contract is
+//!     tracing-on tick p99 within a few percent of off.
 //!
-//! Results are also written to `BENCH_engine.json` so the perf trajectory
-//! is recorded across PRs.
+//! Results are also written to `BENCH_engine.json` (and the tracing
+//! comparison to `BENCH_trace.json`) so the perf trajectory is recorded
+//! across PRs.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -802,6 +807,78 @@ fn main() {
              \"swap_max_admission_gap_ms\": {swap_gap_ms:.1}}}"
         );
         overload_json = ov;
+    }
+
+    // (i) flight-recorder overhead: the same saturated 32-stream workload
+    // with the recorder off, then on.  Per-tick latency comes from the
+    // engine's own frame_latency histogram; events/s from the recorder's
+    // ring heads.  The two runs share a process, so `set_enabled` is the
+    // only variable (QUANTASR_TRACE only sets the boot default).
+    println!("\n== flight recorder: tracing off vs on (32 streams, saturated) ==");
+    {
+        use quantasr::obs;
+        let run = |traced: bool| -> (f64, f64, f64, usize) {
+            obs::set_enabled(traced);
+            let model = Arc::new(AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap());
+            let cfg = EngineConfig {
+                policy: BatchPolicy {
+                    max_batch: 32,
+                    deadline: std::time::Duration::from_millis(2),
+                },
+                decode_workers: 2,
+                max_pending_frames: 128,
+                ..EngineConfig::default()
+            };
+            let engine = Arc::new(Engine::start(model, decoder.clone(), cfg));
+            let n_streams = 32usize;
+            let frames_per_stream = 100usize;
+            let mut frame = vec![0f32; spec::FEAT_DIM * frames_per_stream];
+            Xoshiro256::new(0x7AACE).fill_normal(&mut frame);
+            let t0 = Instant::now();
+            std::thread::scope(|scope| {
+                for _ in 0..n_streams {
+                    let engine = engine.clone();
+                    let frame = frame.clone();
+                    scope.spawn(move || {
+                        let (id, rx) = engine.open_stream();
+                        engine.push_frames(id, &frame).unwrap();
+                        engine.finish_stream(id).unwrap();
+                        let _ = rx.recv().unwrap();
+                    });
+                }
+            });
+            let dt = t0.elapsed().as_secs_f64();
+            let tick = engine.metrics().frame_latency.summary();
+            let events = obs::snapshot_engine(engine.obs_id()).len();
+            ((n_streams * frames_per_stream) as f64 / dt, tick.p50, tick.p99, events)
+        };
+        let (fps_off, p50_off, p99_off, ev_off) = run(false);
+        let (fps_on, p50_on, p99_on, ev_on) = run(true);
+        obs::set_enabled(true); // leave the recorder in its always-on default
+        let p99_overhead = 100.0 * (p99_on - p99_off) / p99_off.max(1e-9);
+        println!(
+            "  off: {fps_off:>9.0} frames/s  tick p50 {p50_off:.3}ms p99 {p99_off:.3}ms  \
+             ({ev_off} events)"
+        );
+        println!(
+            "  on:  {fps_on:>9.0} frames/s  tick p50 {p50_on:.3}ms p99 {p99_on:.3}ms  \
+             ({ev_on} events)"
+        );
+        println!("  → tracing-on tick p99 overhead {p99_overhead:+.2}%");
+        let mut tj = String::new();
+        let _ = write!(
+            tj,
+            "{{\n  \"bench\": \"trace_overhead\",\n  \
+             \"off\": {{\"frames_per_s\": {fps_off:.1}, \"tick_p50_ms\": {p50_off:.3}, \
+             \"tick_p99_ms\": {p99_off:.3}}},\n  \
+             \"on\": {{\"frames_per_s\": {fps_on:.1}, \"tick_p50_ms\": {p50_on:.3}, \
+             \"tick_p99_ms\": {p99_on:.3}, \"events_recorded\": {ev_on}}},\n  \
+             \"tick_p99_overhead_pct\": {p99_overhead:.2}\n}}"
+        );
+        match std::fs::write("BENCH_trace.json", &tj) {
+            Ok(()) => println!("  wrote BENCH_trace.json"),
+            Err(e) => eprintln!("  could not write BENCH_trace.json: {e}"),
+        }
     }
 
     // Emit BENCH_engine.json so the perf trajectory is recorded across PRs.

@@ -74,6 +74,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::coordinator::batcher::{schedule_cmp, BatchPolicy, ClassQueue, Decision, LaneAllocator};
+use crate::obs::{self, EventKind, Meta};
 use crate::util::fault::{self, FaultPlan, FaultPoint};
 use crate::coordinator::metrics::Metrics;
 use crate::decoder::Decoder;
@@ -331,6 +332,10 @@ pub struct FinalResult {
     pub finalize_latency: Duration,
     /// Completed, cancelled, or failed (see [`StreamEnd`]).
     pub end: StreamEnd,
+    /// The stream's trace id ([`crate::obs::next_trace_id`]), stamped on
+    /// its flight-recorder events and echoed in the terminal wire frames
+    /// so client logs join server traces.
+    pub trace: u64,
 }
 
 /// One row of the live registry snapshot ([`Engine::registry`], also
@@ -403,14 +408,18 @@ struct StreamSlot<B: AmBackend> {
     finished: bool,
     finish_time: Option<Instant>,
     result_tx: Sender<FinalResult>,
+    /// Flight-recorder trace id (see [`FinalResult::trace`]).
+    trace: u64,
 }
 
 struct DecodeJob {
     stream_id: u64,
+    model: usize,
     posteriors: Vec<f32>,
     num_frames: usize,
     finish_time: Instant,
     result_tx: Sender<FinalResult>,
+    trace: u64,
 }
 
 /// One loaded model's shared bookkeeping (index in `Inner::models` =
@@ -517,6 +526,21 @@ struct Shared<B: AmBackend> {
     admission: AdmissionController,
     config: EngineConfig,
     shutdown: AtomicBool,
+    /// Flight-recorder engine id (`Event.engine` / Chrome `pid`): scopes
+    /// this engine's events apart from other engines in the process.
+    obs: u16,
+}
+
+/// Clamp a model slot index into the trace event's `u16` model field
+/// (hostile client model ids can exceed it; the trace is diagnostic).
+fn obs_model(m: usize) -> u16 {
+    m.min(u16::MAX as usize) as u16
+}
+
+/// Clamp a lane index into the trace event's `u16` lane field (lane
+/// counts are bounded by `max_batch`, far below `u16::MAX` in practice).
+fn obs_lane(l: usize) -> u16 {
+    l.min(u16::MAX as usize) as u16
 }
 
 /// The streaming serving engine, generic over the execution backend
@@ -621,6 +645,7 @@ impl<B: AmBackend> Engine<B> {
             admission,
             config,
             shutdown: AtomicBool::new(false),
+            obs: obs::next_engine_id(),
         });
         {
             let inner = shared.inner.lock().unwrap();
@@ -656,6 +681,19 @@ impl<B: AmBackend> Engine<B> {
 
     pub fn metrics(&self) -> &Metrics {
         &self.shared.metrics
+    }
+
+    /// This engine's flight-recorder id ([`crate::obs::Event::engine`],
+    /// the Chrome `pid`): filter [`crate::obs::snapshot`] by it to scope
+    /// a trace to this engine when several share a process.
+    pub fn obs_id(&self) -> u16 {
+        self.shared.obs
+    }
+
+    /// This engine's events as a Chrome-trace / Perfetto JSON array —
+    /// what the `'X'` admin frame serves and `--trace-out` writes.
+    pub fn trace_json(&self) -> String {
+        obs::chrome_trace_json(&obs::snapshot_engine(self.shared.obs))
     }
 
     /// Snapshot of the live model table (loaded + draining slots).  One
@@ -953,6 +991,19 @@ impl<B: AmBackend> Engine<B> {
         &self,
         opts: StreamOptions,
     ) -> Result<(u64, Receiver<FinalResult>), RejectReason> {
+        self.try_open_stream_traced(opts, obs::next_trace_id())
+    }
+
+    /// [`Engine::try_open_stream`] with a caller-supplied trace id (the
+    /// TCP server mints one per open attempt and echoes it back in the
+    /// stream's terminal frames — see `docs/PROTOCOL.md`).  The id lands
+    /// on the admit/reject flight-recorder event and in
+    /// [`FinalResult::trace`], so server traces join client logs.
+    pub fn try_open_stream_traced(
+        &self,
+        opts: StreamOptions,
+        trace: u64,
+    ) -> Result<(u64, Receiver<FinalResult>), RejectReason> {
         let (tx, rx) = channel();
         let mut inner = self.shared.inner.lock().unwrap();
         // Swap indirection: a stream dialing a replaced model id lands on
@@ -969,6 +1020,7 @@ impl<B: AmBackend> Engine<B> {
             self.shared.admission.admit(inner.streams.len(), model, status, loaded)
         {
             self.shared.metrics.add_admission_reject();
+            self.obs_reject(model, trace, &reason);
             return Err(reason);
         }
         // Brownout gate: in the rejecting stage every newcomer is turned
@@ -976,6 +1028,7 @@ impl<B: AmBackend> Engine<B> {
         // outrank it — they are caller bugs, not load).
         if inner.brownout_stage >= 2 {
             self.shared.metrics.add_brownout_reject();
+            self.obs_reject(model, trace, &RejectReason::Brownout);
             return Err(RejectReason::Brownout);
         }
         // Byte budget: reserve one parked blob up front so every later
@@ -993,12 +1046,24 @@ impl<B: AmBackend> Engine<B> {
             let resident = inner.budget.resident();
             let budget = inner.budget.budget().unwrap_or(0);
             self.shared.metrics.add_mem_pressure_reject();
-            return Err(RejectReason::MemoryPressure { resident, budget });
+            let reason = RejectReason::MemoryPressure { resident, budget };
+            self.obs_reject(model, trace, &reason);
+            return Err(reason);
         }
         inner.budget.charge_stream(model, state_bytes);
         publish_bytes(&self.shared, &inner, model);
         let id = inner.next_id;
         inner.next_id += 1;
+        obs::instant(
+            EventKind::Admit,
+            Meta {
+                engine: self.shared.obs,
+                model: obs_model(model),
+                stream: id,
+                arg: trace,
+                ..Meta::default()
+            },
+        );
         inner.streams.insert(
             id,
             StreamSlot {
@@ -1018,9 +1083,26 @@ impl<B: AmBackend> Engine<B> {
                 finished: false,
                 finish_time: None,
                 result_tx: tx,
+                trace,
             },
         );
         Ok((id, rx))
+    }
+
+    /// Record one admission-reject trace event: `stream` carries the
+    /// trace id (the stream never got an engine id) and `arg` the stable
+    /// [`RejectReason::code`].
+    fn obs_reject(&self, model: usize, trace: u64, reason: &RejectReason) {
+        obs::instant(
+            EventKind::Reject,
+            Meta {
+                engine: self.shared.obs,
+                model: obs_model(model),
+                stream: trace,
+                arg: reason.code(),
+                ..Meta::default()
+            },
+        );
     }
 
     /// Push PCM samples (blocks under backpressure).
@@ -1038,7 +1120,11 @@ impl<B: AmBackend> Engine<B> {
             }
             let t0 = Instant::now();
             slot.last_activity = t0;
+            // The frontend is a context-free layer: hand it this stream's
+            // identity so its FrontendPush spans carry engine/stream/model.
+            let prev = obs::set_ctx(self.shared.obs, id, obs_model(slot.model));
             slot.frontend.push(pcm, &mut frames);
+            obs::restore_ctx(prev);
             self.shared.metrics.add_frontend_compute(t0.elapsed().as_secs_f64());
         }
         self.push_frames(id, &frames)
@@ -1370,6 +1456,11 @@ impl BrownoutCtl {
 }
 
 fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
+    // Ambient trace context for this worker thread: backend-level spans
+    // (LaneSave/LaneLoad) pick up the engine id without the backend
+    // trait knowing about engines.  Never restored — the thread is the
+    // engine's for life.
+    obs::set_ctx(s.obs, 0, obs::NO_MODEL);
     let budget = s.config.tick_budget.max(1);
     let mut drr = DrrState::new();
     // Worker-local effective quantum policy.  A config of AUTO_QUANTUM
@@ -1489,6 +1580,16 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
                 victims.sort_by(|a, b| a.2.cmp(&b.2).then(b.0.cmp(&a.0)));
                 victims.truncate(BROWNOUT_SHED_PER_TICK);
                 for &(id, m, _) in &victims {
+                    obs::instant(
+                        EventKind::Shed,
+                        Meta {
+                            engine: s.obs,
+                            model: obs_model(m),
+                            stream: id,
+                            tick: tick_no + 1,
+                            ..Meta::default()
+                        },
+                    );
                     cancel_stream(&mut inner, &wm, s.as_ref(), id, SHED_REASON);
                     s.metrics.add_shed(m);
                 }
@@ -1502,7 +1603,21 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
                 }
             }
             match (prev_stage, brownout.stage) {
-                (0, new) if new > 0 => s.metrics.brownout_transition(true),
+                (0, new) if new > 0 => {
+                    s.metrics.brownout_transition(true);
+                    // Freeze the run-up: the ticks that *led into* the
+                    // brownout are exactly what the postmortem is for.
+                    obs::instant(
+                        EventKind::Brownout,
+                        Meta {
+                            engine: s.obs,
+                            tick: tick_no + 1,
+                            arg: new as u64,
+                            ..Meta::default()
+                        },
+                    );
+                    obs::postmortem(s.obs, "brownout_entry");
+                }
                 (prev, 0) if prev > 0 => s.metrics.brownout_transition(false),
                 _ => {}
             }
@@ -1559,6 +1674,17 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
                     let vb = vslot.state_bytes;
                     inner.budget.note_parked(m, vb);
                     s.metrics.add_eviction(m);
+                    obs::instant(
+                        EventKind::LaneEvict,
+                        Meta {
+                            engine: s.obs,
+                            model: obs_model(m),
+                            lane: obs_lane(l),
+                            stream: vid,
+                            tick: tick_no + 1,
+                            ..Meta::default()
+                        },
+                    );
                     lane = Some(l);
                 }
             }
@@ -1597,6 +1723,18 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
                     inner.budget.note_parked(m, vb);
                     displaced.push(vid);
                     s.metrics.add_preemption(m);
+                    obs::instant(
+                        EventKind::LanePreempt,
+                        Meta {
+                            engine: s.obs,
+                            model: obs_model(m),
+                            lane: obs_lane(l),
+                            stream: vid,
+                            tick: tick_no + 1,
+                            arg: holders[vi].quantum_used as u64,
+                            ..Meta::default()
+                        },
+                    );
                     lane = Some(l);
                 }
             }
@@ -1606,8 +1744,9 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
             let Some(lane) = lane else { continue };
             let slot = inner.streams.get_mut(&id).unwrap();
             let parked = slot.parked.take();
+            let restored = parked.is_some();
             let sb = slot.state_bytes;
-            if parked.is_some() {
+            if restored {
                 inner.budget.note_unparked(m, sb);
             }
             {
@@ -1620,6 +1759,20 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
             let slot = inner.streams.get_mut(&id).unwrap();
             slot.lane = Some(lane);
             slot.quantum_used = 0;
+            // arg distinguishes a cold place (reset lane) from a restore
+            // of parked state.
+            obs::instant(
+                EventKind::LanePlace,
+                Meta {
+                    engine: s.obs,
+                    model: obs_model(m),
+                    lane: obs_lane(lane),
+                    stream: id,
+                    tick: tick_no + 1,
+                    arg: u64::from(restored),
+                    ..Meta::default()
+                },
+            );
             planned[m].push((id, lane));
         }
         // Unreachable with max_batch > 0: the highest-priority ready
@@ -1740,6 +1893,7 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
             }
             let io = wm[m].as_mut().expect("granted lanes on an unloaded model");
             let tm = Instant::now();
+            let t_obs = obs::span_begin();
             let lanes_list: Vec<usize> = planned[m].iter().map(|&(_, l)| l).collect();
             let faults = &s.config.faults;
             let step = catch_unwind(AssertUnwindSafe(|| {
@@ -1811,11 +1965,35 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
                     s.metrics.set_quarantined(m);
                     drop(inner);
                     s.space_cv.notify_all();
+                    obs::instant(
+                        EventKind::Quarantine,
+                        Meta {
+                            engine: s.obs,
+                            model: obs_model(m),
+                            tick: tick_no,
+                            ..Meta::default()
+                        },
+                    );
+                    obs::postmortem(s.obs, "backend_panic_quarantine");
                     planned[m].clear();
                     any_failed = true;
                 }
             }
             step_times[m] = tm.elapsed();
+            // One span per stepped model: dur is the batched AM step,
+            // arg the lane count it covered (a zero-lane model is
+            // skipped above, so every AmTick span is real compute).
+            obs::span_end(
+                EventKind::AmTick,
+                t_obs,
+                Meta {
+                    engine: s.obs,
+                    model: obs_model(m),
+                    tick: tick_no,
+                    arg: lanes_list.len() as u64,
+                    ..Meta::default()
+                },
+            );
         }
         let dt = t0.elapsed();
         let stepped: usize = planned.iter().map(|p| p.len()).sum();
@@ -1890,6 +2068,16 @@ fn cancel_stream<B: AmBackend>(
             m.lanes.release(lane);
         }
     }
+    obs::instant(
+        EventKind::Cancel,
+        Meta {
+            engine: s.obs,
+            model: obs_model(slot.model),
+            stream: id,
+            arg: slot.frames_done as u64,
+            ..Meta::default()
+        },
+    );
     let _ = slot.result_tx.send(FinalResult {
         stream_id: id,
         words: Vec::new(),
@@ -1897,6 +2085,7 @@ fn cancel_stream<B: AmBackend>(
         num_frames: slot.frames_done,
         finalize_latency: Duration::ZERO,
         end: StreamEnd::Cancelled(reason.to_string()),
+        trace: slot.trace,
     });
 }
 
@@ -1924,6 +2113,7 @@ fn publish_bytes<B: AmBackend>(s: &Shared<B>, inner: &Inner<B>, m: usize) {
 ///   with frames still queued is the engine's debt, not the client's).
 fn reap_expired<B: AmBackend>(inner: &mut Inner<B>, wm: &[Option<LaneIo<B>>], s: &Shared<B>) {
     let mut cancelled = false;
+    let mut forced = false;
     for m in 0..inner.models.len() {
         if !matches!(&inner.models[m], Some(slot) if slot.force_cancel) {
             continue;
@@ -1934,10 +2124,16 @@ fn reap_expired<B: AmBackend>(inner: &mut Inner<B>, wm: &[Option<LaneIo<B>>], s:
             cancel_stream(inner, wm, s, id, "model unloading (forced)");
             s.metrics.add_forced_cancel(m);
             cancelled = true;
+            forced = true;
         }
         if let Some(Some(slot)) = inner.models.get_mut(m) {
             slot.force_cancel = false;
         }
+    }
+    if forced {
+        // A forced unload cancelled live streams out from under clients —
+        // freeze the surrounding activity for the postmortem record.
+        obs::postmortem(s.obs, "forced_cancels");
     }
     let (idle, deadline) = (s.config.stream_idle, s.config.stream_deadline);
     if idle.is_some() || deadline.is_some() {
@@ -2001,14 +2197,26 @@ fn drain_finished<B: AmBackend>(inner: &mut Inner<B>, s: &Shared<B>) {
                 .lanes
                 .release(lane);
         }
+        obs::instant(
+            EventKind::DecodeEnqueue,
+            Meta {
+                engine: s.obs,
+                model: obs_model(slot.model),
+                stream: id,
+                arg: slot.frames_done as u64,
+                ..Meta::default()
+            },
+        );
         inner.decode_queue.push(
             slot.priority,
             DecodeJob {
                 stream_id: id,
+                model: slot.model,
                 posteriors: slot.posteriors,
                 num_frames: slot.frames_done,
                 finish_time: slot.finish_time.unwrap_or_else(Instant::now),
                 result_tx: slot.result_tx,
+                trace: slot.trace,
             },
         );
         s.decode_cv.notify_one();
@@ -2041,10 +2249,14 @@ fn decode_worker<B: AmBackend>(s: Arc<Shared<B>>, decoder: Arc<Decoder>) {
             }
         };
         let t0 = Instant::now();
+        let t_obs = obs::span_begin();
         let batch: Vec<(&[f32], usize)> = jobs
             .iter()
             .map(|j| (j.posteriors.as_slice(), (j.posteriors.len() / j.num_frames.max(1)).max(1)))
             .collect();
+        // The decoder is a context-free layer: hand it this worker's
+        // engine identity so its search spans are attributable.
+        let prev_ctx = obs::set_ctx(s.obs, 0, obs::NO_MODEL);
         // Panic quarantine, batch level: if the shared-LmCache batch path
         // unwinds, retry each job alone so one poisoned utterance fails
         // by itself instead of dragging its flush-mates down with it.
@@ -2060,6 +2272,7 @@ fn decode_worker<B: AmBackend>(s: Arc<Shared<B>>, decoder: Arc<Decoder>) {
                     })
                     .collect(),
             };
+        obs::restore_ctx(prev_ctx);
         s.metrics.add_decode_compute(t0.elapsed().as_secs_f64());
         for (job, hyp) in jobs.into_iter().zip(hyps) {
             let injected = fault::fire(&s.config.faults, FaultPoint::DecodePanic, job.stream_id);
@@ -2080,10 +2293,45 @@ fn decode_worker<B: AmBackend>(s: Arc<Shared<B>>, decoder: Arc<Decoder>) {
             s.metrics.add_utterance();
             let latency = job.finish_time.elapsed();
             s.metrics.finalize_latency.record_duration(latency);
+            // Jobs in one flush share the batch-decode start: their
+            // DecodeJob spans overlap on this worker's track by design.
+            obs::span_end(
+                EventKind::DecodeJob,
+                t_obs,
+                Meta {
+                    engine: s.obs,
+                    model: obs_model(job.model),
+                    stream: job.stream_id,
+                    arg: job.num_frames as u64,
+                    ..Meta::default()
+                },
+            );
             let (words, phones, end) = match finalized {
-                Some((words, phones)) => (words, phones, StreamEnd::Complete),
+                Some((words, phones)) => {
+                    obs::instant(
+                        EventKind::Finalize,
+                        Meta {
+                            engine: s.obs,
+                            model: obs_model(job.model),
+                            stream: job.stream_id,
+                            arg: words.len() as u64,
+                            ..Meta::default()
+                        },
+                    );
+                    (words, phones, StreamEnd::Complete)
+                }
                 None => {
                     s.metrics.add_quarantined_job();
+                    obs::instant(
+                        EventKind::Quarantine,
+                        Meta {
+                            engine: s.obs,
+                            model: obs_model(job.model),
+                            stream: job.stream_id,
+                            ..Meta::default()
+                        },
+                    );
+                    obs::postmortem(s.obs, "decode_panic_quarantine");
                     let why =
                         format!("decode panicked for stream {}; utterance quarantined", job.stream_id);
                     (Vec::new(), Vec::new(), StreamEnd::Failed(why))
@@ -2096,6 +2344,7 @@ fn decode_worker<B: AmBackend>(s: Arc<Shared<B>>, decoder: Arc<Decoder>) {
                 num_frames: job.num_frames,
                 finalize_latency: latency,
                 end,
+                trace: job.trace,
             });
         }
     }

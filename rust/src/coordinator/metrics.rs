@@ -1,39 +1,127 @@
 //! Serving metrics: latency percentiles, throughput, real-time factor.
 
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::time::Duration;
 
-/// Reservoir-free exact histogram (serving runs are small enough to keep
-/// every sample; sorts on read).
+/// Log-bucket growth factor: 2^(1/4), four buckets per octave.  A
+/// percentile read off the buckets is at most one bucket width above the
+/// exact sample — ≤ 19% relative error for O(1) memory.
+pub const GROWTH: f64 = 1.189_207_115_002_721;
+/// Smallest finite bucket upper bound (everything at or below lands in
+/// the first bucket).  In ms this spans sub-µs ticks…
+const LO: f64 = 1e-3;
+/// …up to 100-second outliers; beyond that is the +Inf overflow bucket.
+const HI: f64 = 1e5;
+
+/// Shared bucket upper bounds: LO·GROWTH^i until ≥ HI (~108 bounds).
+/// One static table serves every histogram in the process.
+fn bucket_bounds() -> &'static [f64] {
+    static B: OnceLock<Vec<f64>> = OnceLock::new();
+    B.get_or_init(|| {
+        let mut v = vec![LO];
+        while *v.last().unwrap() < HI {
+            let next = v.last().unwrap() * GROWTH;
+            v.push(next);
+        }
+        v
+    })
+}
+
+#[derive(Default)]
+struct HistInner {
+    /// `bucket_bounds().len() + 1` slots; the last is the +Inf overflow
+    /// bucket.  Allocated on first record, fixed-size after.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+/// Bounded log-bucketed histogram: memory is O(1) in the number of
+/// observations (a fixed ~109-slot count table), count/sum/min/max are
+/// exact, and percentiles are read from bucket upper bounds with at most
+/// one bucket width (factor [`GROWTH`]) of error.  Replaces the seed's
+/// exact-sample histogram, which kept every observation in a `Vec` and
+/// grew without bound over long serving runs.
 #[derive(Default)]
 pub struct Histogram {
-    samples: Mutex<Vec<f64>>,
+    inner: Mutex<HistInner>,
 }
 
 impl Histogram {
     pub fn record(&self, v: f64) {
-        self.samples.lock().unwrap().push(v);
+        let b = bucket_bounds();
+        // First bound ≥ v; b.len() means the +Inf overflow slot.
+        let idx = b.partition_point(|&ub| ub < v);
+        let mut h = self.inner.lock().unwrap();
+        if h.counts.is_empty() {
+            h.counts = vec![0; b.len() + 1];
+        }
+        h.counts[idx] += 1;
+        if h.count == 0 {
+            h.min = v;
+            h.max = v;
+        } else {
+            h.min = h.min.min(v);
+            h.max = h.max.max(v);
+        }
+        h.count += 1;
+        h.sum += v;
     }
 
     pub fn record_duration(&self, d: Duration) {
         self.record(d.as_secs_f64() * 1e3); // ms
     }
 
+    /// Cumulative `(upper_bound, count ≤ upper_bound)` pairs for the
+    /// non-empty finite buckets, plus the exact total count and sum —
+    /// what the Prometheus histogram exposition emits.
+    pub fn cumulative(&self) -> (Vec<(f64, u64)>, u64, f64) {
+        let b = bucket_bounds();
+        let h = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in h.counts.iter().enumerate() {
+            if i == b.len() {
+                break; // overflow is the +Inf line, emitted from `count`
+            }
+            if c > 0 {
+                cum += c;
+                out.push((b[i], cum));
+            }
+        }
+        (out, h.count, h.sum)
+    }
+
     pub fn summary(&self) -> HistSummary {
-        let mut s = self.samples.lock().unwrap().clone();
-        if s.is_empty() {
+        let b = bucket_bounds();
+        let h = self.inner.lock().unwrap();
+        if h.count == 0 {
             return HistSummary::default();
         }
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let n = s.len();
-        let pct = |p: f64| s[((n as f64 * p) as usize).min(n - 1)];
+        // Same rank the seed's exact histogram took from its sorted
+        // samples; the value is the containing bucket's upper bound,
+        // clamped to the observed [min, max] (which also keeps the
+        // underflow bucket honest for ≤ 0 samples).
+        let pct = |p: f64| {
+            let rank = ((h.count as f64 * p) as u64).min(h.count - 1);
+            let mut cum = 0u64;
+            for (i, &c) in h.counts.iter().enumerate() {
+                cum += c;
+                if cum > rank {
+                    return if i == b.len() { h.max } else { b[i].clamp(h.min, h.max) };
+                }
+            }
+            h.max
+        };
         HistSummary {
-            count: n,
-            mean: s.iter().sum::<f64>() / n as f64,
+            count: h.count as usize,
+            mean: h.sum / h.count as f64,
             p50: pct(0.50),
             p90: pct(0.90),
             p99: pct(0.99),
-            max: s[n - 1],
+            max: h.max,
         }
     }
 }
@@ -620,22 +708,24 @@ impl Metrics {
             "wall seconds of frontend",
             *self.frontend_seconds.lock().unwrap(),
         );
-        // Latency histograms as Prometheus summaries (exact quantiles —
-        // the Histogram keeps every sample).
+        // Latency histograms as Prometheus histograms: cumulative
+        // `_bucket{le=}` lines for the non-empty log buckets, then the
+        // +Inf bucket, exact sum, and exact count.
         for (name, h) in [
             ("finalize_latency_ms", &self.finalize_latency),
             ("frame_latency_ms", &self.frame_latency),
             ("first_frame_latency_ms", &self.first_frame_latency),
         ] {
-            let s = h.summary();
+            let (cum, count, sum) = h.cumulative();
             out.push_str(&format!(
-                "# HELP quantasr_{name} latency summary\n# TYPE quantasr_{name} summary\n"
+                "# HELP quantasr_{name} latency histogram\n# TYPE quantasr_{name} histogram\n"
             ));
-            for (q, v) in [(0.5, s.p50), (0.9, s.p90), (0.99, s.p99)] {
-                out.push_str(&format!("quantasr_{name}{{quantile=\"{q}\"}} {v}\n"));
+            for (le, c) in cum {
+                out.push_str(&format!("quantasr_{name}_bucket{{le=\"{le}\"}} {c}\n"));
             }
-            out.push_str(&format!("quantasr_{name}_sum {}\n", s.mean * s.count as f64));
-            out.push_str(&format!("quantasr_{name}_count {}\n", s.count));
+            out.push_str(&format!("quantasr_{name}_bucket{{le=\"+Inf\"}} {count}\n"));
+            out.push_str(&format!("quantasr_{name}_sum {sum}\n"));
+            out.push_str(&format!("quantasr_{name}_count {count}\n"));
         }
         // Per-model rows, labelled by slot id + model name.
         let mut per_model = |name: &str, help: &str, f: &dyn Fn(&ModelStats) -> f64| {
@@ -679,6 +769,10 @@ mod tests {
         assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
         assert_eq!(s.max, 99.0);
         assert!((s.mean - 49.5).abs() < 1e-9);
+        // Log buckets: each percentile within one bucket width (factor
+        // GROWTH) above the exact order statistic.
+        assert!(s.p50 >= 50.0 && s.p50 <= 50.0 * GROWTH, "p50={}", s.p50);
+        assert!(s.p99 >= 99.0 && s.p99 <= 99.0 * GROWTH, "p99={}", s.p99);
     }
 
     #[test]
@@ -687,6 +781,67 @@ mod tests {
         let s = h.summary();
         assert_eq!(s.count, 0);
         assert_eq!(s.max, 0.0);
+        assert_eq!(h.cumulative(), (vec![], 0, 0.0));
+    }
+
+    #[test]
+    fn histogram_memory_is_bounded_and_extremes_exact() {
+        // The O(1)-memory contract: count/sum/min/max stay exact while
+        // the bucket table never grows, whatever lands in it — zeros,
+        // negatives, and +Inf-bucket outliers included.
+        let h = Histogram::default();
+        for i in 0..10_000 {
+            h.record(i as f64 * 0.013 - 2.0);
+        }
+        h.record(1e9); // overflow bucket
+        let s = h.summary();
+        assert_eq!(s.count, 10_001);
+        assert_eq!(s.max, 1e9);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+        let inner = h.inner.lock().unwrap();
+        assert_eq!(inner.counts.len(), bucket_bounds().len() + 1);
+        assert_eq!(inner.counts.iter().sum::<u64>(), 10_001);
+        assert_eq!(inner.min, -2.0);
+    }
+
+    #[test]
+    fn bucketed_percentiles_track_exact_reference() {
+        // Property: against the seed's exact sorted-sample percentile,
+        // every bucketed percentile is within one bucket width —
+        // exact ≤ bucketed ≤ exact × GROWTH — and count/mean/max are
+        // exact.  Samples span the finite bucket range.
+        crate::util::prop::forall("histogram vs exact reference", 60, 0xB0C4E7, |g| {
+            let n = g.usize_in(1, 400);
+            let h = Histogram::default();
+            let mut samples = Vec::with_capacity(n);
+            for _ in 0..n {
+                let v = 10f64.powf(g.f64_in(-2.5, 4.5));
+                samples.push(v);
+                h.record(v);
+            }
+            let mut sorted = samples.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let exact = |p: f64| sorted[((n as f64 * p) as usize).min(n - 1)];
+            let s = h.summary();
+            for (got, p) in [(s.p50, 0.50), (s.p90, 0.90), (s.p99, 0.99)] {
+                let want = exact(p);
+                assert!(got >= want * (1.0 - 1e-12), "p{p}: bucketed {got} < exact {want}");
+                assert!(
+                    got <= want * GROWTH * (1.0 + 1e-12),
+                    "p{p}: bucketed {got} > exact {want} + one bucket"
+                );
+            }
+            assert_eq!(s.count, n);
+            assert_eq!(s.max, sorted[n - 1]);
+            let mean = samples.iter().sum::<f64>() / n as f64;
+            assert!((s.mean - mean).abs() <= 1e-9 * mean.abs().max(1.0));
+            // Cumulative exposition view: monotone, ends at the total.
+            let (cum, count, sum) = h.cumulative();
+            assert_eq!(count, n as u64);
+            assert!((sum - samples.iter().sum::<f64>()).abs() <= 1e-9 * sum.abs().max(1.0));
+            assert!(cum.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 < w[1].1));
+            assert_eq!(cum.last().map(|&(_, c)| c), Some(n as u64));
+        });
     }
 
     #[test]
@@ -840,7 +995,8 @@ mod tests {
                 .unwrap();
             assert!(
                 p.contains(&format!("# TYPE {metric} ")) || metric.ends_with("_sum")
-                    || metric.ends_with("_count"),
+                    || metric.ends_with("_count")
+                    || metric.ends_with("_bucket"),
                 "no TYPE for {metric}"
             );
             assert!(line.starts_with("quantasr_"), "{line}");
@@ -852,7 +1008,19 @@ mod tests {
             p.contains("quantasr_model_shed_streams_total{model=\"0\",name=\"en\"} 1"),
             "{p}"
         );
-        assert!(p.contains("quantasr_finalize_latency_ms{quantile=\"0.5\"} 5"), "{p}");
+        // Histogram exposition: a finite bucket covering the 5ms sample,
+        // the +Inf bucket, and exact sum/count.
+        assert!(p.contains("# TYPE quantasr_finalize_latency_ms histogram"), "{p}");
+        let has_finite_bucket = p
+            .lines()
+            .any(|l| {
+                l.starts_with("quantasr_finalize_latency_ms_bucket{le=\"")
+                    && !l.contains("+Inf")
+                    && l.ends_with(" 1")
+            });
+        assert!(has_finite_bucket, "{p}");
+        assert!(p.contains("quantasr_finalize_latency_ms_bucket{le=\"+Inf\"} 1"), "{p}");
+        assert!(p.contains("quantasr_finalize_latency_ms_sum 5"), "{p}");
         assert!(p.contains("quantasr_finalize_latency_ms_count 1"), "{p}");
     }
 

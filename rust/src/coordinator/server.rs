@@ -27,21 +27,22 @@
 //!                      then redirect newcomers while old drains
 //! 'Q'                  admin: query the live registry
 //! 'T'                  admin: Prometheus text metrics snapshot
+//! 'X'                  admin: Chrome-trace JSON flight-recorder export
 //! ```
 //! server → client:
 //! ```text
-//! 'F' u32 n  u32×n  u32 m  u32×m  f32 latency_ms
-//!     final words, greedy phones, finalize latency
-//! 'C' u32 n  bytes×n
+//! 'F' u32 n  u32×n  u32 m  u32×m  f32 latency_ms  u64 trace
+//!     final words, greedy phones, finalize latency, trace id
+//! 'C' u32 n  bytes×n  u64 trace
 //!     stream cancelled by the engine (idle/deadline reap, forced
 //!     unload, model quarantine) with the reason text; terminal
-//! 'E' u32 n  bytes×n
+//! 'E' u32 n  bytes×n  u64 trace
 //!     the utterance's own processing failed (e.g. a quarantined decode
 //!     panic) with the reason text; terminal, engine keeps serving
-//! 'R' u32 n  bytes×n
+//! 'R' u32 n  bytes×n  u64 trace
 //!     rejection/failure reason text.  After a stream-admission reject
 //!     (delivered at 'E') the connection closes; after an admin failure
-//!     the connection stays usable.
+//!     the connection stays usable (trace = 0: no admission attempt)
 //! 'O' u32 v
 //!     admin success (the loaded/unloaded model id)
 //! 'Q' u8 brownout  u64 resident  u64 budget  u32 count
@@ -51,7 +52,13 @@
 //!     2 = rejecting; status: 0 = loaded, 1 = draining, 2 = quarantined
 //! 'T' u32 n  bytes×n
 //!     Prometheus text-exposition metrics snapshot
+//! 'X' u32 n  bytes×n
+//!     Chrome-trace JSON array (this engine's flight-recorder snapshot)
 //! ```
+//!
+//! Every terminal frame carries the stream's flight-recorder trace id
+//! (`crate::obs`, minted at admission attempt) as a trailing `u64`, so
+//! client logs can be joined to server traces; `0` means "untraced".
 //!
 //! A thread per connection feeds the shared [`Engine`] — batching happens
 //! across connections inside the engine, not per socket.  The stream is
@@ -99,6 +106,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::batcher::parse_deadline_ms;
 use crate::coordinator::engine::{Engine, FinalResult, ModelInfo, OverloadInfo, StreamEnd};
+use crate::obs;
 use crate::runtime::backend::AmBackend;
 use crate::sched::{ModelParams, Priority, StreamOptions};
 use crate::util::fault::{self, FaultPlan, FaultPoint};
@@ -115,6 +123,9 @@ pub const MAX_TEXT_BYTES: usize = 65_536;
 pub const MAX_METRICS_BYTES: usize = 1 << 20;
 /// Hard cap on `'Q'` registry rows a client will accept.
 pub const MAX_REGISTRY_ROWS: usize = 65_536;
+/// Hard cap on an `'X'` Chrome-trace export (rings are bounded, but a
+/// large `QUANTASR_TRACE` capacity across many threads adds up).
+pub const MAX_TRACE_BYTES: usize = 16 << 20;
 /// Hard cap on words/phones per `'F'` frame a client will accept.
 pub const MAX_RESULT_TOKENS: usize = 1 << 20;
 /// Audio payloads are read (and bounds-checked) in pieces of this many
@@ -214,6 +225,8 @@ pub enum ClientFrame {
     Query,
     /// `'T'`: Prometheus text metrics request.
     Metrics,
+    /// `'X'`: Chrome-trace flight-recorder export request.
+    Trace,
 }
 
 /// One parsed server → client frame.
@@ -221,18 +234,21 @@ pub enum ClientFrame {
 pub enum ServerFrame {
     /// `'F'`: the stream finalized normally.
     Final(ClientResult),
-    /// `'R'`: admission reject / admin failure reason.
-    Reject(String),
+    /// `'R'`: admission reject / admin failure reason, plus the trace id
+    /// (0 for admin failures — no admission attempt happened).
+    Reject(String, u64),
     /// `'O'`: admin success value.
     AdminOk(u32),
-    /// `'C'`: the engine cancelled the stream (reason text).
-    Cancelled(String),
-    /// `'E'`: the utterance's processing failed (reason text).
-    Failed(String),
+    /// `'C'`: the engine cancelled the stream (reason text, trace id).
+    Cancelled(String, u64),
+    /// `'E'`: the utterance's processing failed (reason text, trace id).
+    Failed(String, u64),
     /// `'Q'`: registry snapshot.
     Registry(RegistrySnapshot),
     /// `'T'`: Prometheus text metrics snapshot.
     MetricsText(String),
+    /// `'X'`: Chrome-trace JSON flight-recorder export.
+    TraceJson(String),
 }
 
 impl ServerFrame {
@@ -240,12 +256,13 @@ impl ServerFrame {
     pub fn kind(&self) -> &'static str {
         match self {
             ServerFrame::Final(_) => "final ('F')",
-            ServerFrame::Reject(_) => "reject ('R')",
+            ServerFrame::Reject(..) => "reject ('R')",
             ServerFrame::AdminOk(_) => "admin-ok ('O')",
-            ServerFrame::Cancelled(_) => "cancelled ('C')",
-            ServerFrame::Failed(_) => "failed ('E')",
+            ServerFrame::Cancelled(..) => "cancelled ('C')",
+            ServerFrame::Failed(..) => "failed ('E')",
             ServerFrame::Registry(_) => "registry ('Q')",
             ServerFrame::MetricsText(_) => "metrics ('T')",
+            ServerFrame::TraceJson(_) => "trace ('X')",
         }
     }
 }
@@ -326,6 +343,7 @@ pub fn read_client_frame_body(tag: u8, r: &mut impl Read) -> Result<ClientFrame,
         }
         b'Q' => Ok(ClientFrame::Query),
         b'T' => Ok(ClientFrame::Metrics),
+        b'X' => Ok(ClientFrame::Trace),
         other => Err(ServeError::protocol(format!("unknown client tag {other:#x}"))),
     }
 }
@@ -341,16 +359,27 @@ pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, ServeError> {
             let phones = read_u32_vec(r, "final phones")?;
             let mut lat = [0u8; 4];
             r.read_exact(&mut lat)?;
+            let trace = read_u64(r)?;
             Ok(ServerFrame::Final(ClientResult {
                 words,
                 phones,
                 server_latency_ms: f32::from_le_bytes(lat),
+                trace,
             }))
         }
-        b'R' => Ok(ServerFrame::Reject(read_text(r, "reject reason")?)),
+        b'R' => {
+            let reason = read_text(r, "reject reason")?;
+            Ok(ServerFrame::Reject(reason, read_u64(r)?))
+        }
         b'O' => Ok(ServerFrame::AdminOk(read_u32(r)?)),
-        b'C' => Ok(ServerFrame::Cancelled(read_text(r, "cancel reason")?)),
-        b'E' => Ok(ServerFrame::Failed(read_text(r, "failure reason")?)),
+        b'C' => {
+            let why = read_text(r, "cancel reason")?;
+            Ok(ServerFrame::Cancelled(why, read_u64(r)?))
+        }
+        b'E' => {
+            let why = read_text(r, "failure reason")?;
+            Ok(ServerFrame::Failed(why, read_u64(r)?))
+        }
         b'Q' => {
             let mut brownout = [0u8; 1];
             r.read_exact(&mut brownout)?;
@@ -420,6 +449,28 @@ pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, ServeError> {
             let mut raw = vec![0u8; n];
             r.read_exact(&mut raw)?;
             Ok(ServerFrame::MetricsText(String::from_utf8_lossy(&raw).to_string()))
+        }
+        b'X' => {
+            let n = read_u32(r)? as usize;
+            if n > MAX_TRACE_BYTES {
+                return Err(ServeError::Oversized {
+                    what: "trace export",
+                    size: n,
+                    limit: MAX_TRACE_BYTES,
+                });
+            }
+            // Read in bounded pieces like audio: the declared length
+            // never sizes a single up-front allocation.
+            let mut raw = Vec::with_capacity(n.min(AUDIO_READ_CHUNK));
+            let mut chunk = [0u8; 4096];
+            let mut remaining = n;
+            while remaining > 0 {
+                let take = chunk.len().min(remaining);
+                r.read_exact(&mut chunk[..take])?;
+                raw.extend_from_slice(&chunk[..take]);
+                remaining -= take;
+            }
+            Ok(ServerFrame::TraceJson(String::from_utf8_lossy(&raw).to_string()))
         }
         other => Err(ServeError::protocol(format!("unknown server tag {other:#x}"))),
     }
@@ -579,8 +630,10 @@ fn conn_loop<B: AmBackend>(
     // A rejected connection keeps draining the client's audio (discarded)
     // and delivers the 'R' frame at 'E' — writing it mid-stream and
     // closing would race the client's in-flight sends into a broken pipe
-    // and the reason would be lost with the connection reset.
-    let mut rejected: Option<String> = None;
+    // and the reason would be lost with the connection reset.  The trace
+    // id minted for the admission attempt rides along so the reject can
+    // be joined to its flight-recorder event.
+    let mut rejected: Option<(String, u64)> = None;
     let mut last_frame = Instant::now();
     loop {
         // Poll for the tag so engine-initiated stream endings (reaper
@@ -624,9 +677,13 @@ fn conn_loop<B: AmBackend>(
             && opened.is_none()
             && rejected.is_none()
         {
-            match engine.try_open_stream(opts) {
+            // Mint the flight-recorder trace id here, not in the engine:
+            // a reject never gets an engine stream id, but its 'R' frame
+            // (and Reject trace event) still needs a joinable identity.
+            let trace = obs::next_trace_id();
+            match engine.try_open_stream_traced(opts, trace) {
                 Ok(o) => *opened = Some(o),
-                Err(reason) => rejected = Some(reason.to_string()),
+                Err(reason) => rejected = Some((reason.to_string(), trace)),
             }
         }
         match frame {
@@ -665,8 +722,8 @@ fn conn_loop<B: AmBackend>(
                 }
             }
             ClientFrame::End => {
-                if let Some(reason) = rejected.take() {
-                    write_reject(sock, &reason)?;
+                if let Some((reason, trace)) = rejected.take() {
+                    write_reject_traced(sock, &reason, trace)?;
                     return Ok(());
                 }
                 let (id, rx) = opened.take().expect("stream opened above");
@@ -758,6 +815,21 @@ fn conn_loop<B: AmBackend>(
             ClientFrame::Metrics => {
                 sock.write_all(&text_frame(b'T', &engine.metrics().prometheus()))?;
             }
+            ClientFrame::Trace => {
+                let mut json = engine.trace_json();
+                if json.len() > MAX_TRACE_BYTES {
+                    // Never ship a frame the client is contractually
+                    // required to refuse; an empty array is still valid
+                    // Chrome trace.
+                    eprintln!(
+                        "trace export of {} bytes exceeds the {} wire cap; sending empty",
+                        json.len(),
+                        MAX_TRACE_BYTES
+                    );
+                    json = "[]".to_string();
+                }
+                sock.write_all(&text_frame(b'X', &json))?;
+            }
         }
     }
 }
@@ -793,7 +865,7 @@ fn write_terminal(
 ) -> Result<(), ServeError> {
     let mut buf = match &r.end {
         StreamEnd::Complete => {
-            let mut buf = Vec::with_capacity(16 + 4 * (r.words.len() + r.phones.len()));
+            let mut buf = Vec::with_capacity(24 + 4 * (r.words.len() + r.phones.len()));
             buf.push(b'F');
             buf.extend_from_slice(&(r.words.len() as u32).to_le_bytes());
             for w in &r.words {
@@ -809,6 +881,9 @@ fn write_terminal(
         StreamEnd::Cancelled(why) => text_frame(b'C', why),
         StreamEnd::Failed(why) => text_frame(b'E', why),
     };
+    // Every terminal frame ends with the stream's trace id (additive
+    // field, see PROTOCOL.md's versioning rule).
+    buf.extend_from_slice(&r.trace.to_le_bytes());
     if fault::fire(faults, FaultPoint::CorruptFrame, r.stream_id) {
         buf[0] ^= 0xFF;
     }
@@ -825,8 +900,16 @@ fn text_frame(tag: u8, text: &str) -> Vec<u8> {
     buf
 }
 
+/// Admin-failure reject: trace id 0 (no admission attempt happened).
 fn write_reject(sock: &mut TcpStream, reason: &str) -> Result<(), ServeError> {
-    sock.write_all(&text_frame(b'R', reason))?;
+    write_reject_traced(sock, reason, 0)
+}
+
+/// Admission reject carrying the trace id minted for the attempt.
+fn write_reject_traced(sock: &mut TcpStream, reason: &str, trace: u64) -> Result<(), ServeError> {
+    let mut buf = text_frame(b'R', reason);
+    buf.extend_from_slice(&trace.to_le_bytes());
+    sock.write_all(&buf)?;
     Ok(())
 }
 
@@ -888,6 +971,9 @@ pub struct ClientResult {
     pub words: Vec<u32>,
     pub phones: Vec<u32>,
     pub server_latency_ms: f32,
+    /// Server-side flight-recorder trace id (0 = untraced) — quote it
+    /// when filing a "what happened to my stream" report.
+    pub trace: u64,
 }
 
 /// Client-side view of one `'Q'` registry row.
@@ -1039,7 +1125,7 @@ impl Client {
         self.sock.write_all(b"Q")?;
         match read_server_frame(&mut self.sock)? {
             ServerFrame::Registry(snap) => Ok(snap),
-            ServerFrame::Reject(reason) => bail!("registry query rejected: {reason}"),
+            ServerFrame::Reject(reason, _) => bail!("registry query rejected: {reason}"),
             other => bail!("expected registry frame, got {}", other.kind()),
         }
     }
@@ -1067,8 +1153,20 @@ impl Client {
         self.sock.write_all(b"T")?;
         match read_server_frame(&mut self.sock)? {
             ServerFrame::MetricsText(text) => Ok(text),
-            ServerFrame::Reject(reason) => bail!("metrics query rejected: {reason}"),
+            ServerFrame::Reject(reason, _) => bail!("metrics query rejected: {reason}"),
             other => bail!("expected metrics frame, got {}", other.kind()),
+        }
+    }
+
+    /// Admin: fetch the server's flight-recorder snapshot as a
+    /// Chrome-trace / Perfetto JSON array (load it in `chrome://tracing`
+    /// or <https://ui.perfetto.dev>).
+    pub fn trace_json(&mut self) -> Result<String> {
+        self.sock.write_all(b"X")?;
+        match read_server_frame(&mut self.sock)? {
+            ServerFrame::TraceJson(json) => Ok(json),
+            ServerFrame::Reject(reason, _) => bail!("trace query rejected: {reason}"),
+            other => bail!("expected trace frame, got {}", other.kind()),
         }
     }
 
@@ -1077,7 +1175,7 @@ impl Client {
     fn read_admin_ok(&mut self) -> Result<u32> {
         match read_server_frame(&mut self.sock)? {
             ServerFrame::AdminOk(v) => Ok(v),
-            ServerFrame::Reject(reason) => bail!("admin rejected: {reason}"),
+            ServerFrame::Reject(reason, _) => bail!("admin rejected: {reason}"),
             other => bail!("expected admin response, got {}", other.kind()),
         }
     }
@@ -1090,9 +1188,15 @@ impl Client {
         self.sock.write_all(b"E")?;
         match read_server_frame(&mut self.sock)? {
             ServerFrame::Final(r) => Ok(r),
-            ServerFrame::Reject(reason) => bail!("admission rejected: {reason}"),
-            ServerFrame::Cancelled(why) => bail!("stream cancelled by the server: {why}"),
-            ServerFrame::Failed(why) => bail!("stream failed on the server: {why}"),
+            ServerFrame::Reject(reason, trace) => {
+                bail!("admission rejected: {reason} (trace {trace})")
+            }
+            ServerFrame::Cancelled(why, trace) => {
+                bail!("stream cancelled by the server: {why} (trace {trace})")
+            }
+            ServerFrame::Failed(why, trace) => {
+                bail!("stream failed on the server: {why} (trace {trace})")
+            }
             other => bail!("expected final frame, got {}", other.kind()),
         }
     }
@@ -1199,13 +1303,63 @@ mod tests {
 
     #[test]
     fn server_frames_round_trip() {
-        let b = text_frame(b'C', "idle past the timeout");
+        let mut b = text_frame(b'C', "idle past the timeout");
+        b.extend_from_slice(&le64(77)); // trailing trace id
         match read_server_frame(&mut Cursor::new(b)).unwrap() {
-            ServerFrame::Cancelled(why) => assert!(why.contains("idle")),
+            ServerFrame::Cancelled(why, trace) => {
+                assert!(why.contains("idle"));
+                assert_eq!(trace, 77);
+            }
             other => panic!("want cancelled, got {other:?}"),
         }
-        let b = text_frame(b'E', "decode panicked");
-        assert!(matches!(read_server_frame(&mut Cursor::new(b)).unwrap(), ServerFrame::Failed(_)));
+        let mut b = text_frame(b'E', "decode panicked");
+        b.extend_from_slice(&le64(5));
+        assert!(matches!(
+            read_server_frame(&mut Cursor::new(b)).unwrap(),
+            ServerFrame::Failed(_, 5)
+        ));
+        // 'R' carries the trace id too (0 = admin failure, untraced).
+        let mut b = text_frame(b'R', "saturated");
+        b.extend_from_slice(&le64(0));
+        assert!(matches!(
+            read_server_frame(&mut Cursor::new(b)).unwrap(),
+            ServerFrame::Reject(_, 0)
+        ));
+        // A truncated terminal frame (no trailing trace id) is an I/O
+        // error, not a parse.
+        let b = text_frame(b'C', "cut short");
+        assert!(matches!(read_server_frame(&mut Cursor::new(b)), Err(ServeError::Io(_))));
+        // 'F' ends with the trace id after the latency float.
+        let mut b = vec![b'F'];
+        b.extend_from_slice(&le(1)); // one word
+        b.extend_from_slice(&le(42));
+        b.extend_from_slice(&le(0)); // no phones
+        b.extend_from_slice(&2.5f32.to_le_bytes());
+        b.extend_from_slice(&le64(99));
+        match read_server_frame(&mut Cursor::new(b)).unwrap() {
+            ServerFrame::Final(r) => {
+                assert_eq!(r.words, vec![42]);
+                assert_eq!(r.trace, 99);
+            }
+            other => panic!("want final, got {other:?}"),
+        }
+        // 'X' trace export round-trips; an oversized prefix is refused.
+        let b = text_frame(b'X', "[]");
+        match read_server_frame(&mut Cursor::new(b)).unwrap() {
+            ServerFrame::TraceJson(json) => assert_eq!(json, "[]"),
+            other => panic!("want trace, got {other:?}"),
+        }
+        let mut b = vec![b'X'];
+        b.extend_from_slice(&le((MAX_TRACE_BYTES + 1) as u32));
+        assert!(matches!(
+            read_server_frame(&mut Cursor::new(b)),
+            Err(ServeError::Oversized { what: "trace export", .. })
+        ));
+        // 'X' as a client frame is a bare tag, like 'Q'/'T'.
+        assert_eq!(
+            read_client_frame(&mut Cursor::new(vec![b'X'])).unwrap(),
+            Some(ClientFrame::Trace)
+        );
         // 'Q' with the overload header and one quarantined row.
         let mut b = vec![b'Q'];
         b.push(1); // brownout: shedding

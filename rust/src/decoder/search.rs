@@ -415,13 +415,20 @@ impl Decoder {
         jobs: &[(&[f32], usize)],
         kernel: DecodeKernel,
     ) -> Vec<Hypothesis> {
+        // Pure search time as a trace span (the decode pool brackets the
+        // call with its engine context; standalone callers trace under
+        // engine 0).
+        let t_obs = crate::obs::span_begin();
         let mut cache = LmCache::default();
-        jobs.iter()
+        let hyps: Vec<Hypothesis> = jobs
+            .iter()
             .map(|&(lp, labels)| {
                 let beams = self.run_beams(lp, labels, kernel, &mut cache);
                 self.pick_best(&beams)
             })
-            .collect()
+            .collect();
+        crate::obs::span_end_ctx(crate::obs::EventKind::BeamSearch, t_obs, jobs.len() as u64);
+        hyps
     }
 
     fn pick_best(&self, beams: &[RawBeam]) -> Hypothesis {

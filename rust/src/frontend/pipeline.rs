@@ -139,6 +139,7 @@ impl Frontend {
     /// Push PCM samples; completed feature frames (FEAT_DIM each) are
     /// appended to `out`.  Returns the number of frames emitted.
     pub fn push(&mut self, pcm: &[f32], out: &mut Vec<f32>) -> usize {
+        let t_obs = crate::obs::span_begin();
         // Preemphasis with cross-chunk memory; x'[0] = x[0] like python.
         for &s in pcm {
             let p = if self.started { s - spec::PREEMPHASIS * self.prev_sample } else { s };
@@ -171,6 +172,9 @@ impl Frontend {
             self.buf.truncate(live);
             self.pos = 0;
         }
+        // The engine brackets this call with the stream's trace context
+        // (`obs::set_ctx`); standalone callers record under engine 0.
+        crate::obs::span_end_ctx(crate::obs::EventKind::FrontendPush, t_obs, emitted as u64);
         emitted
     }
 

@@ -76,6 +76,19 @@
 //! libm), and per-row activation quantization uses a SIMD min/max +
 //! quantize scan with a per-layer cache ([`quant::gemm::QActRows`]) so a
 //! layer output consumed by two quantized GEMMs is quantized once.
+//!
+//! ## Observability: the flight-recorder trace plane
+//!
+//! Aggregate metrics ([`coordinator::metrics`], bounded log-bucketed
+//! histograms exposed over the `'T'` admin frame) say *how much*; the
+//! always-on flight recorder ([`obs`]) says *which streams, ticks and
+//! decode jobs* — lock-free per-thread seqlock rings of structured
+//! events covering the whole stream lifecycle, exported as
+//! Chrome-trace/Perfetto JSON (`--trace-out`, the `'X'` admin frame)
+//! and frozen into bounded postmortem dumps on panic quarantine,
+//! brownout entry and forced cancels.  Every admission carries a trace
+//! id that is echoed in the stream's terminal wire frames so client
+//! logs join server traces (`docs/PROTOCOL.md`).
 
 pub mod coordinator;
 pub mod decoder;
@@ -83,6 +96,7 @@ pub mod eval;
 pub mod frontend;
 pub mod io;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod sched;

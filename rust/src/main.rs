@@ -10,15 +10,18 @@
 //!                   [--max-streams 1024] [--tick-budget 32]
 //!                   [--model-weights 4,1] [--model-lanes 32,8]
 //!                   [--stream-idle-ms 0] [--stream-deadline-ms 0]
-//!                   [--mem-budget-bytes 0]
+//!                   [--mem-budget-bytes 0] [--trace-out trace.json]
 //!                   (stream lifetimes: idle/deadline reaper, 0 =
 //!                    disabled; byte budget for arenas + stream
 //!                    reservations, 0 = unlimited; hot admin over TCP:
 //!                    'L' load / 'U' unload / 'D' bounded unload /
-//!                    'S' canaried swap / 'Q' query / 'T' metrics — see
-//!                    docs/PROTOCOL.md; 'L'/'S' load .qam paths with
-//!                    the same --mode)
+//!                    'S' canaried swap / 'Q' query / 'T' metrics /
+//!                    'X' trace export — see docs/PROTOCOL.md; 'L'/'S'
+//!                    load .qam paths with the same --mode; --trace-out
+//!                    writes the flight-recorder ring as Chrome-trace
+//!                    JSON on shutdown — open in Perfetto)
 //! quantasr bench-serve --model … [--streams 16] [--utts 64]
+//!                   [--trace-out trace.json]
 //! quantasr ablate-rounding
 //! quantasr ablate-granularity [--model …]
 //! quantasr inspect  --model …
@@ -152,6 +155,17 @@ fn load_engine(args: &Args) -> Result<Arc<Engine>> {
     Ok(Arc::new(Engine::start(model, decoder, cfg)))
 }
 
+/// Write the engine's flight-recorder ring to `--trace-out` as
+/// Chrome-trace JSON (best-effort: a full disk should not fail the run).
+fn write_trace_out(args: &Args, engine: &Engine) {
+    if let Some(path) = args.get("trace-out") {
+        match std::fs::write(path, engine.trace_json()) {
+            Ok(()) => println!("wrote trace to {path} (open in Perfetto / chrome://tracing)"),
+            Err(e) => eprintln!("warning: could not write trace to {path}: {e}"),
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let engine = load_engine(args)?;
     let addr = args.get_or("addr", "127.0.0.1:7700").to_string();
@@ -161,8 +175,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mode = ExecMode::parse(args.get_or("mode", "quant"))?;
     let loader: server::ModelLoader<AcousticModel> =
         Arc::new(move |path: &str| Ok(Arc::new(AcousticModel::load(path, mode)?)));
-    println!("serving on {addr} (ctrl-c to stop; admin frames: L/U/D/S/Q/T)");
-    server::serve_with_loader(engine, &addr, stop, Some(loader), |a| println!("bound {a}"))
+    println!("serving on {addr} (ctrl-c to stop; admin frames: L/U/D/S/Q/T/X)");
+    let r = server::serve_with_loader(engine.clone(), &addr, stop, Some(loader), |a| {
+        println!("bound {a}")
+    });
+    write_trace_out(args, &engine);
+    r
 }
 
 /// In-process serving benchmark: N concurrent synthetic clients.
@@ -194,6 +212,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     println!("bench-serve: {n_streams} streams, ~{n_utts} utts in {wall:.2}s");
     println!("{}", engine.metrics().report());
+    write_trace_out(args, &engine);
     Ok(())
 }
 

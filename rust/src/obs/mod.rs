@@ -1,0 +1,644 @@
+//! The flight-recorder trace plane: lock-free per-thread event rings,
+//! Chrome-trace export, and bounded postmortem dumps.
+//!
+//! Aggregate counters ([`crate::coordinator::metrics`]) answer "how much";
+//! this module answers "*which* streams, ticks and decode jobs led up to
+//! the incident".  Every thread that serves traffic writes fixed-size
+//! [`Event`]s into its own bounded ring ([`ring::Ring`]) — an always-on
+//! flight recorder whose cost contract is:
+//!
+//! - **Disabled** (`QUANTASR_TRACE=0`): one relaxed atomic load per
+//!   emission site, nothing else.
+//! - **Enabled** (the default): one monotonic clock read plus one seqlock
+//!   slot write per event — no allocation, no locks, no syscalls on the
+//!   hot path.  The ring is allocated once, the first time a thread
+//!   emits.
+//!
+//! Readers ([`snapshot`]) race the writers deliberately: each slot is a
+//! seqlock (odd sequence while the writer is mid-copy, even generation
+//! when stable), so a torn read is *detected and discarded* rather than
+//! prevented — the writer never waits on anyone.
+//!
+//! Three consumers sit on top:
+//!
+//! 1. [`chrome_trace_json`] renders a snapshot as a Chrome-trace /
+//!    Perfetto JSON array (`chrome://tracing`, <https://ui.perfetto.dev>).
+//!    Served over the wire by the `'X'` admin frame and written by
+//!    `--trace-out` (see `docs/PROTOCOL.md`, `src/main.rs`).
+//! 2. [`postmortem`] freezes the last-N-events window when something
+//!    goes wrong (panic quarantine, brownout entry, forced cancels) into
+//!    a bounded in-memory deque — and, if `QUANTASR_POSTMORTEM_DIR` is
+//!    set, a JSON file per incident.
+//! 3. The trace-id plumbing ([`next_trace_id`]): every admission attempt
+//!    gets a process-unique id that is stamped on its events *and* echoed
+//!    in the stream's terminal wire frames, so client logs can be joined
+//!    to server traces.
+//!
+//! Event taxonomy, ring sizing and the overhead contract are documented
+//! in `docs/ARCHITECTURE.md` ("Observability").
+
+pub mod ring;
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU16, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use ring::Ring;
+
+/// Default per-thread ring capacity (events) when `QUANTASR_TRACE` is
+/// unset.  At ~48 bytes/event this is ~200 KB per serving thread — a few
+/// seconds of saturated history, which is what a postmortem needs.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Events kept per postmortem dump (the "last-N window").
+pub const POSTMORTEM_EVENTS: usize = 512;
+
+/// Postmortem dumps retained in memory (oldest dropped first).  Sized so
+/// a burst of incidents across many engines (a test process runs dozens)
+/// cannot evict a dump before anyone reads it, while staying O(1): at
+/// most `KEEP × EVENTS` events live here.
+pub const POSTMORTEM_KEEP: usize = 32;
+
+/// What happened.  The discriminants are the wire/JSON encoding — append
+/// new kinds, never renumber (same additive rule as `docs/PROTOCOL.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// A stream was admitted (`arg` = trace id).
+    Admit = 0,
+    /// Admission refused (`arg` = [`crate::sched::RejectReason::code`];
+    /// `stream` holds the *trace id* — the stream never got an engine id).
+    Reject = 1,
+    /// A lane-less ready stream was placed into a lane (`arg` = 1 if
+    /// parked state was restored, 0 for a fresh zero state).
+    LanePlace = 2,
+    /// An idle holder's state was parked and its lane handed over.
+    LaneEvict = 3,
+    /// An active holder past its quantum was preempted (`arg` = quantum
+    /// ticks it had consumed).
+    LanePreempt = 4,
+    /// One batched AM step for one model (span; `arg` = lanes stepped).
+    AmTick = 5,
+    /// Frontend PCM push (span; `arg` = feature frames emitted).
+    FrontendPush = 6,
+    /// One utterance's decode-pool job (span; `arg` = frames decoded).
+    DecodeJob = 7,
+    /// A finished stream was queued for decode (`arg` = frames awaiting
+    /// decode).
+    DecodeEnqueue = 8,
+    /// A stream finalized normally (`arg` = words emitted).
+    Finalize = 9,
+    /// The engine cancelled a stream (`arg` = frames processed).
+    Cancel = 10,
+    /// The brownout controller shed a Bulk stream.
+    Shed = 11,
+    /// A model slot was quarantined after a backend panic.
+    Quarantine = 12,
+    /// Brownout stage change (`arg` = new stage).
+    Brownout = 13,
+    /// One lane's state saved out of the arena (span; park/evict path).
+    LaneSave = 14,
+    /// One parked state restored into a lane (span).
+    LaneLoad = 15,
+    /// One batched beam search inside the decoder (span; `arg` =
+    /// utterances in the batch) — the search itself, as opposed to the
+    /// whole [`EventKind::DecodeJob`] which includes per-job finalize.
+    BeamSearch = 16,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::Reject => "reject",
+            EventKind::LanePlace => "lane_place",
+            EventKind::LaneEvict => "lane_evict",
+            EventKind::LanePreempt => "lane_preempt",
+            EventKind::AmTick => "am_tick",
+            EventKind::FrontendPush => "frontend_push",
+            EventKind::DecodeJob => "decode_job",
+            EventKind::DecodeEnqueue => "decode_enqueue",
+            EventKind::Finalize => "finalize",
+            EventKind::Cancel => "cancel",
+            EventKind::Shed => "shed",
+            EventKind::Quarantine => "quarantine",
+            EventKind::Brownout => "brownout",
+            EventKind::LaneSave => "lane_save",
+            EventKind::LaneLoad => "lane_load",
+            EventKind::BeamSearch => "beam_search",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        Some(match v {
+            0 => EventKind::Admit,
+            1 => EventKind::Reject,
+            2 => EventKind::LanePlace,
+            3 => EventKind::LaneEvict,
+            4 => EventKind::LanePreempt,
+            5 => EventKind::AmTick,
+            6 => EventKind::FrontendPush,
+            7 => EventKind::DecodeJob,
+            8 => EventKind::DecodeEnqueue,
+            9 => EventKind::Finalize,
+            10 => EventKind::Cancel,
+            11 => EventKind::Shed,
+            12 => EventKind::Quarantine,
+            13 => EventKind::Brownout,
+            14 => EventKind::LaneSave,
+            15 => EventKind::LaneLoad,
+            16 => EventKind::BeamSearch,
+            _ => return None,
+        })
+    }
+}
+
+/// One structured trace event.  Fixed-size and `Copy` — the ring stores
+/// these inline, so recording never allocates.  `dur_us == 0` means an
+/// instant; spans carry their start in `ts_us` and their length in
+/// `dur_us` (Chrome `"X"` complete-event semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Microseconds since the process trace epoch (monotonic).
+    pub ts_us: u64,
+    /// Span duration in µs; 0 for instants.
+    pub dur_us: u32,
+    pub kind: EventKind,
+    /// Which engine emitted this (test processes run several at once).
+    pub engine: u16,
+    /// Writer-thread ordinal (Chrome `tid`).
+    pub tid: u16,
+    /// Model slot, or [`NO_MODEL`].
+    pub model: u16,
+    /// Arena lane, or [`NO_LANE`].
+    pub lane: u16,
+    /// Engine stream id, 0 if not stream-scoped.
+    pub stream: u64,
+    /// AM-worker flush ordinal, 0 if not tick-scoped.
+    pub tick: u64,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub arg: u64,
+}
+
+/// Sentinel: the event has no model / lane coordinate.
+pub const NO_MODEL: u16 = u16::MAX;
+pub const NO_LANE: u16 = u16::MAX;
+
+impl Event {
+    /// Render as one Chrome-trace JSON object (no trailing comma).
+    pub fn to_json(&self) -> String {
+        let ph = if self.dur_us == 0 { "i" } else { "X" };
+        let mut s = format!(
+            "{{\"name\":\"{}\",\"ph\":\"{ph}\",\"ts\":{},\"pid\":{},\"tid\":{}",
+            self.kind.name(),
+            self.ts_us,
+            self.engine,
+            self.tid
+        );
+        if self.dur_us > 0 {
+            s.push_str(&format!(",\"dur\":{}", self.dur_us));
+        } else {
+            s.push_str(",\"s\":\"t\"");
+        }
+        s.push_str(&format!(
+            ",\"args\":{{\"kind\":{},\"model\":{},\"lane\":{},\"stream\":{},\"tick\":{},\"arg\":{}}}}}",
+            self.kind as u8, self.model, self.lane, self.stream, self.tick, self.arg
+        ));
+        s
+    }
+
+    /// Parse one Chrome-trace object produced by [`Event::to_json`] back
+    /// into an `Event` — the round-trip the serialization proptest pins.
+    pub fn from_json(j: &crate::io::json::Json) -> Option<Event> {
+        let args = j.get("args")?;
+        let kind = EventKind::from_u8(u8::try_from(args.int("kind")?).ok()?)?;
+        Some(Event {
+            ts_us: j.int("ts")? as u64,
+            dur_us: j.int("dur").unwrap_or(0) as u32,
+            kind,
+            engine: u16::try_from(j.int("pid")?).ok()?,
+            tid: u16::try_from(j.int("tid")?).ok()?,
+            model: u16::try_from(args.int("model")?).ok()?,
+            lane: u16::try_from(args.int("lane")?).ok()?,
+            stream: args.int("stream")? as u64,
+            tick: args.int("tick")? as u64,
+            arg: args.int("arg")? as u64,
+        })
+    }
+}
+
+/// The coordinates an emission site supplies.  Everything defaults to
+/// "absent" so call sites name only what they know.
+#[derive(Clone, Copy, Debug)]
+pub struct Meta {
+    pub engine: u16,
+    pub model: u16,
+    pub lane: u16,
+    pub stream: u64,
+    pub tick: u64,
+    pub arg: u64,
+}
+
+impl Default for Meta {
+    fn default() -> Self {
+        Meta { engine: 0, model: NO_MODEL, lane: NO_LANE, stream: 0, tick: 0, arg: 0 }
+    }
+}
+
+/// The process-wide recorder: the ring registry plus the enabled switch.
+struct Recorder {
+    enabled: AtomicBool,
+    capacity: usize,
+    rings: Mutex<Vec<Arc<Ring>>>,
+    next_tid: AtomicU16,
+    epoch: Instant,
+}
+
+fn recorder() -> &'static Recorder {
+    static R: OnceLock<Recorder> = OnceLock::new();
+    R.get_or_init(|| {
+        // QUANTASR_TRACE: 0 disables, N sets the per-thread ring capacity
+        // (events), unset = DEFAULT_RING_CAPACITY.  Malformed values warn
+        // and keep the default — knobs never panic a serving process.
+        let (enabled, capacity) = match std::env::var("QUANTASR_TRACE") {
+            Err(_) => (true, DEFAULT_RING_CAPACITY),
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(0) => (false, DEFAULT_RING_CAPACITY),
+                Ok(n) => (true, n),
+                Err(_) => {
+                    eprintln!(
+                        "QUANTASR_TRACE='{v}' is not a ring capacity (0 disables); \
+                         using {DEFAULT_RING_CAPACITY}"
+                    );
+                    (true, DEFAULT_RING_CAPACITY)
+                }
+            },
+        };
+        Recorder {
+            enabled: AtomicBool::new(enabled),
+            capacity,
+            rings: Mutex::new(Vec::new()),
+            next_tid: AtomicU16::new(1),
+            epoch: Instant::now(),
+        }
+    })
+}
+
+/// Is the recorder on?  One relaxed load — every emission site checks
+/// this first, so a disabled recorder costs a branch and nothing else.
+#[inline]
+pub fn enabled() -> bool {
+    recorder().enabled.load(Ordering::Relaxed)
+}
+
+/// Flip the recorder at runtime (the overhead bench measures off vs on
+/// in one process).  Rings already registered keep their history.
+pub fn set_enabled(on: bool) {
+    recorder().enabled.store(on, Ordering::Relaxed);
+}
+
+/// Microseconds since the trace epoch (first recorder touch).
+#[inline]
+pub fn now_us() -> u64 {
+    recorder().epoch.elapsed().as_micros() as u64
+}
+
+thread_local! {
+    /// This thread's ring, created and registered on first emission.
+    static RING: Cell<Option<&'static Arc<Ring>>> = const { Cell::new(None) };
+    /// Ambient coordinates for layers that don't carry engine/stream ids
+    /// (frontend, decoder): (engine, stream, model).
+    static CTX: Cell<(u16, u64, u16)> = const { Cell::new((0, 0, NO_MODEL)) };
+}
+
+/// Set this thread's ambient (engine, stream, model) context, returning
+/// the previous value.  The engine brackets calls into context-free
+/// layers (frontend push, decode jobs) with this so their spans carry
+/// stream coordinates without the layers knowing about the engine.
+pub fn set_ctx(engine: u16, stream: u64, model: u16) -> (u16, u64, u16) {
+    CTX.with(|c| c.replace((engine, stream, model)))
+}
+
+/// Restore a context previously returned by [`set_ctx`].
+pub fn restore_ctx(prev: (u16, u64, u16)) {
+    CTX.with(|c| c.set(prev));
+}
+
+fn this_ring() -> &'static Arc<Ring> {
+    RING.with(|r| match r.get() {
+        Some(ring) => ring,
+        None => {
+            let rec = recorder();
+            let tid = rec.next_tid.fetch_add(1, Ordering::Relaxed);
+            let ring = Arc::new(Ring::new(rec.capacity.max(2), tid));
+            rec.rings.lock().unwrap().push(ring.clone());
+            // The thread needs a 'static handle to dodge a refcount bump
+            // per event; the registry's Arc keeps the ring alive after
+            // the thread exits (its history stays snapshotable).
+            let leaked: &'static Arc<Ring> = Box::leak(Box::new(ring));
+            r.set(Some(leaked));
+            leaked
+        }
+    })
+}
+
+/// Record an instant event.
+#[inline]
+pub fn instant(kind: EventKind, m: Meta) {
+    if !enabled() {
+        return;
+    }
+    let ring = this_ring();
+    ring.push(Event {
+        ts_us: now_us(),
+        dur_us: 0,
+        kind,
+        engine: m.engine,
+        tid: ring.tid(),
+        model: m.model,
+        lane: m.lane,
+        stream: m.stream,
+        tick: m.tick,
+        arg: m.arg,
+    });
+}
+
+/// Start a span: returns the start timestamp to hand to [`span_end`].
+/// Cheap enough to call unconditionally; pairs with a possibly-disabled
+/// `span_end` (the recorder may be flipped mid-span — the span is
+/// simply dropped, never torn).
+#[inline]
+pub fn span_begin() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    now_us()
+}
+
+/// Close a span opened by [`span_begin`] and record it.
+#[inline]
+pub fn span_end(kind: EventKind, t0_us: u64, m: Meta) {
+    if !enabled() {
+        return;
+    }
+    let now = now_us();
+    let ring = this_ring();
+    ring.push(Event {
+        ts_us: t0_us,
+        // A span shorter than the clock tick still happened: floor at
+        // 1 µs so Chrome renders it and `dur_us == 0` stays "instant".
+        dur_us: (now.saturating_sub(t0_us)).clamp(1, u32::MAX as u64) as u32,
+        kind,
+        engine: m.engine,
+        tid: ring.tid(),
+        model: m.model,
+        lane: m.lane,
+        stream: m.stream,
+        tick: m.tick,
+        arg: m.arg,
+    });
+}
+
+/// [`span_end`] taking the ambient thread context for engine/stream/
+/// model (frontend + decoder emission sites).
+#[inline]
+pub fn span_end_ctx(kind: EventKind, t0_us: u64, arg: u64) {
+    if !enabled() {
+        return;
+    }
+    let (engine, stream, model) = CTX.with(|c| c.get());
+    span_end(kind, t0_us, Meta { engine, stream, model, arg, ..Meta::default() });
+}
+
+/// Snapshot every ring's currently-valid events, oldest first.  Torn
+/// slots (a writer mid-copy) are discarded, not waited for.
+pub fn snapshot() -> Vec<Event> {
+    let rings: Vec<Arc<Ring>> = recorder().rings.lock().unwrap().clone();
+    let mut out = Vec::new();
+    for ring in rings {
+        ring.drain_valid(&mut out);
+    }
+    out.sort_by_key(|e| (e.ts_us, e.tid));
+    out
+}
+
+/// [`snapshot`] filtered to one engine's events (test processes run many
+/// engines; the export/postmortem surfaces scope to one).
+pub fn snapshot_engine(engine: u16) -> Vec<Event> {
+    let mut v = snapshot();
+    v.retain(|e| e.engine == engine);
+    v
+}
+
+/// Render events as a Chrome-trace / Perfetto JSON array.  The output is
+/// the "JSON array format": `[ {event}, {event}, … ]`, loadable by
+/// `chrome://tracing` and Perfetto as-is.
+pub fn chrome_trace_json(events: &[Event]) -> String {
+    let mut s = String::with_capacity(events.len() * 160 + 2);
+    s.push('[');
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push('\n');
+        s.push_str(&e.to_json());
+    }
+    s.push_str("\n]");
+    s
+}
+
+/// Engine ids (Chrome `pid`s): one per [`crate::coordinator::Engine`],
+/// so traces from engines sharing a process never interleave.
+pub fn next_engine_id() -> u16 {
+    static NEXT: AtomicU16 = AtomicU16::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Stream-scoped trace ids, process-unique and never 0 (0 = "untraced"
+/// on the wire).
+pub fn next_trace_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One frozen incident window.
+#[derive(Clone, Debug)]
+pub struct Postmortem {
+    /// Which engine hit the incident.
+    pub engine: u16,
+    /// Why the dump was taken (e.g. `backend_panic_quarantine`).
+    pub trigger: String,
+    /// Process-unique dump ordinal.
+    pub seq: u64,
+    /// The last [`POSTMORTEM_EVENTS`] events of that engine, oldest
+    /// first, as of the trigger.
+    pub events: Vec<Event>,
+}
+
+fn postmortem_store() -> &'static Mutex<VecDeque<Postmortem>> {
+    static S: OnceLock<Mutex<VecDeque<Postmortem>>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(VecDeque::new()))
+}
+
+/// Freeze the last-N-events window for `engine` under `trigger`.  Bounded
+/// both ways: at most [`POSTMORTEM_KEEP`] dumps retained, at most
+/// [`POSTMORTEM_EVENTS`] events each.  If `QUANTASR_POSTMORTEM_DIR` is
+/// set, the dump is also written there as
+/// `postmortem-<seq>-<trigger>.json` (Chrome-trace array); file errors
+/// warn and never propagate — a postmortem must not create a second
+/// incident.
+pub fn postmortem(engine: u16, trigger: &str) {
+    if !enabled() {
+        return;
+    }
+    static SEQ: AtomicU64 = AtomicU64::new(1);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let mut events = snapshot_engine(engine);
+    if events.len() > POSTMORTEM_EVENTS {
+        events.drain(..events.len() - POSTMORTEM_EVENTS);
+    }
+    let pm = Postmortem { engine, trigger: trigger.to_string(), seq, events };
+    if let Ok(dir) = std::env::var("QUANTASR_POSTMORTEM_DIR") {
+        if !dir.is_empty() {
+            let path = std::path::Path::new(&dir)
+                .join(format!("postmortem-{seq}-{trigger}.json"));
+            if let Err(e) = std::fs::write(&path, chrome_trace_json(&pm.events)) {
+                eprintln!("postmortem write {} failed: {e}", path.display());
+            }
+        }
+    }
+    let mut store = postmortem_store().lock().unwrap();
+    store.push_back(pm);
+    while store.len() > POSTMORTEM_KEEP {
+        store.pop_front();
+    }
+}
+
+/// The retained in-memory postmortem dumps, oldest first.
+pub fn postmortems() -> Vec<Postmortem> {
+    postmortem_store().lock().unwrap().iter().cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::json::Json;
+    use crate::util::prop::{forall, Gen};
+
+    fn ev(g: &mut Gen) -> Event {
+        Event {
+            ts_us: g.usize_in(0, 1 << 40) as u64,
+            dur_us: if g.bool() { g.usize_in(1, 1 << 30) as u32 } else { 0 },
+            kind: EventKind::from_u8(g.usize_in(0, 16) as u8).unwrap(),
+            engine: g.usize_in(0, u16::MAX as usize) as u16,
+            tid: g.usize_in(0, u16::MAX as usize) as u16,
+            model: g.usize_in(0, u16::MAX as usize) as u16,
+            lane: g.usize_in(0, u16::MAX as usize) as u16,
+            stream: g.usize_in(0, 1 << 48) as u64,
+            tick: g.usize_in(0, 1 << 48) as u64,
+            arg: g.usize_in(0, 1 << 48) as u64,
+        }
+    }
+
+    #[test]
+    fn event_json_round_trips() {
+        forall("trace event json round-trip", 300, 0x0B5E_11, |g| {
+            let e = ev(g);
+            let j = Json::parse(&e.to_json()).expect("event renders valid JSON");
+            let back = Event::from_json(&j).expect("rendered event parses back");
+            assert_eq!(back, e);
+        });
+    }
+
+    #[test]
+    fn chrome_trace_is_wellformed_array_of_events() {
+        let mut g = Gen::new(0xC402);
+        let events: Vec<Event> = (0..50).map(|_| ev(&mut g)).collect();
+        let s = chrome_trace_json(&events);
+        let j = Json::parse(&s).expect("chrome trace parses");
+        let arr = j.as_arr().expect("top level is an array");
+        assert_eq!(arr.len(), events.len());
+        for (o, e) in arr.iter().zip(&events) {
+            // Schema check: the keys chrome://tracing / Perfetto require.
+            assert!(o.str_field("name").is_some());
+            let ph = o.str_field("ph").unwrap();
+            assert!(ph == "X" || ph == "i", "ph={ph}");
+            assert!(o.int("ts").is_some() && o.int("pid").is_some() && o.int("tid").is_some());
+            if ph == "X" {
+                assert!(o.int("dur").unwrap() > 0);
+            }
+            assert_eq!(Event::from_json(o).unwrap(), *e);
+        }
+        // Empty traces are still a valid array.
+        assert_eq!(Json::parse(&chrome_trace_json(&[])).unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn instants_and_spans_land_in_the_snapshot() {
+        set_enabled(true);
+        let engine = next_engine_id();
+        instant(EventKind::Admit, Meta { engine, stream: 7, arg: 42, ..Meta::default() });
+        let t0 = span_begin();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        span_end(
+            EventKind::AmTick,
+            t0,
+            Meta { engine, model: 1, tick: 3, arg: 4, ..Meta::default() },
+        );
+        let snap = snapshot_engine(engine);
+        assert_eq!(snap.len(), 2);
+        let admit = snap.iter().find(|e| e.kind == EventKind::Admit).unwrap();
+        assert_eq!((admit.stream, admit.arg, admit.dur_us), (7, 42, 0));
+        let tick = snap.iter().find(|e| e.kind == EventKind::AmTick).unwrap();
+        assert!(tick.dur_us >= 1000, "2ms span measured {}us", tick.dur_us);
+        assert_eq!((tick.model, tick.tick, tick.arg), (1, 3, 4));
+    }
+
+    #[test]
+    fn ctx_propagates_to_context_free_layers() {
+        set_enabled(true);
+        let engine = next_engine_id();
+        let prev = set_ctx(engine, 99, 2);
+        let t0 = span_begin();
+        span_end_ctx(EventKind::FrontendPush, t0, 13);
+        restore_ctx(prev);
+        let snap = snapshot_engine(engine);
+        let e = snap.iter().find(|e| e.kind == EventKind::FrontendPush).unwrap();
+        assert_eq!((e.stream, e.model, e.arg), (99, 2, 13));
+    }
+
+    #[test]
+    fn disabled_recorder_drops_events() {
+        let engine = next_engine_id();
+        set_enabled(false);
+        instant(EventKind::Cancel, Meta { engine, stream: 1, ..Meta::default() });
+        set_enabled(true);
+        assert!(snapshot_engine(engine).is_empty());
+    }
+
+    #[test]
+    fn postmortems_are_bounded_and_scoped() {
+        set_enabled(true);
+        let engine = next_engine_id();
+        let other = next_engine_id();
+        instant(EventKind::Quarantine, Meta { engine, model: 0, ..Meta::default() });
+        instant(EventKind::Admit, Meta { engine: other, stream: 5, ..Meta::default() });
+        for i in 0..POSTMORTEM_KEEP + 3 {
+            postmortem(engine, if i == 0 { "first" } else { "later" });
+        }
+        let pms = postmortems();
+        assert!(pms.len() <= POSTMORTEM_KEEP, "{} dumps retained", pms.len());
+        // The oldest dumps were evicted; every retained one is scoped to
+        // the engine it was taken for.
+        assert!(pms.iter().all(|p| p.trigger != "first" || p.engine != engine));
+        let mine: Vec<_> = pms.iter().filter(|p| p.engine == engine).collect();
+        assert!(!mine.is_empty());
+        for p in mine {
+            assert!(p.events.iter().all(|e| e.engine == engine));
+            assert!(p.events.len() <= POSTMORTEM_EVENTS);
+            assert!(p.events.iter().any(|e| e.kind == EventKind::Quarantine));
+        }
+    }
+}

@@ -38,6 +38,7 @@ use anyhow::Result;
 
 use crate::nn::model::{BatchArena, ParkedLane};
 use crate::nn::AcousticModel;
+use crate::obs::{self, EventKind};
 
 /// A lane address in a multi-model engine: which loaded model's arena
 /// (registration order in [`crate::sched::ModelRegistry`]) and which lane
@@ -165,11 +166,19 @@ impl AmBackend for AcousticModel {
     }
 
     fn save_lane(&self, arena: &BatchArena, lane: usize) -> ParkedLane {
-        arena.save_lane(lane)
+        // The park/restore round trip is the cost of every eviction and
+        // preemption — record it as a span (ambient ctx: the AM worker
+        // sets its engine id at thread start).
+        let t0 = obs::span_begin();
+        let p = arena.save_lane(lane);
+        obs::span_end_ctx(EventKind::LaneSave, t0, lane as u64);
+        p
     }
 
     fn load_lane(&self, arena: &mut BatchArena, lane: usize, parked: &ParkedLane) {
+        let t0 = obs::span_begin();
         arena.load_lane(lane, parked);
+        obs::span_end_ctx(EventKind::LaneLoad, t0, lane as u64);
     }
 
     fn backend_name(&self) -> &'static str {

@@ -126,6 +126,23 @@ impl fmt::Display for RejectReason {
     }
 }
 
+impl RejectReason {
+    /// Stable numeric code for the trace plane: [`crate::obs`] records a
+    /// reject event whose `arg` is this code, so traces can be grouped
+    /// by reason without parsing display strings.  Codes are append-only
+    /// (same additive rule as the wire protocol) — never renumber.
+    pub fn code(&self) -> u64 {
+        match self {
+            RejectReason::Saturated { .. } => 1,
+            RejectReason::UnknownModel { .. } => 2,
+            RejectReason::ModelDraining { .. } => 3,
+            RejectReason::ModelQuarantined { .. } => 4,
+            RejectReason::MemoryPressure { .. } => 5,
+            RejectReason::Brownout => 6,
+        }
+    }
+}
+
 impl std::error::Error for RejectReason {}
 
 /// The admission decision procedure.
@@ -219,5 +236,19 @@ mod tests {
         assert!(m.starts_with("memory pressure:") && m.contains("900"), "{m}");
         let b = RejectReason::Brownout.to_string();
         assert!(b.starts_with("brownout:"), "{b}");
+    }
+
+    #[test]
+    fn trace_codes_are_distinct_and_stable() {
+        let reasons = [
+            RejectReason::Saturated { live: 1, cap: 1 },
+            RejectReason::UnknownModel { model: 0, loaded: 0 },
+            RejectReason::ModelDraining { model: 0 },
+            RejectReason::ModelQuarantined { model: 0 },
+            RejectReason::MemoryPressure { resident: 1, budget: 1 },
+            RejectReason::Brownout,
+        ];
+        let codes: Vec<u64> = reasons.iter().map(|r| r.code()).collect();
+        assert_eq!(codes, vec![1, 2, 3, 4, 5, 6], "codes are append-only; never renumber");
     }
 }

@@ -481,7 +481,10 @@ fn tcp_stalled_client_cannot_pin_an_unload() {
         .expect("forced unload over TCP");
     assert!(t0.elapsed() < Duration::from_secs(10), "forced unload took {:?}", t0.elapsed());
     match stalled.read_terminal().expect("the abandoned stream's terminal frame") {
-        ServerFrame::Cancelled(why) => assert!(why.contains("forced"), "{why}"),
+        ServerFrame::Cancelled(why, trace) => {
+            assert!(why.contains("forced"), "{why}");
+            assert!(trace != 0, "engine-opened streams always carry a trace id");
+        }
         other => panic!("want a 'C' cancel, got {}", other.kind()),
     }
     assert_eq!(admin.query_registry().unwrap().len(), 1);
@@ -807,4 +810,85 @@ fn memory_pressure_rejects_under_churn() {
     assert_eq!(*eng2.metrics().mem_pressure_rejects.lock().unwrap(), 1);
     let (id, _rx) = eng2.try_open_stream(StreamOptions::default()).expect("fault cleared");
     eng2.finish_stream(id).unwrap();
+}
+
+/// Flight-recorder acceptance: a scripted backend panic deterministically
+/// produces a postmortem dump whose events reconcile with the fault
+/// counters — one `quarantine` instant matching `quarantined_jobs`, one
+/// `cancel` instant for the stream the quarantine killed — and both the
+/// dump and the engine's `'X'`-frame export render as well-formed
+/// Chrome-trace JSON (written to `TRACE_chaos.json`, uploaded by the
+/// trace CI job).
+#[test]
+fn backend_panic_postmortem_is_deterministic_and_reconciles() {
+    use quantasr::obs;
+
+    // Same scripted point as the quarantine scenario: fire on the first
+    // batched-step arrival, only when model 1 steps.
+    let p = plan("9:backend_panic@1#1");
+    let (_model_a, eng) = small_engine(Some(p.clone()), None, None);
+    assert!(obs::enabled(), "chaos tracing scenarios need the recorder on (QUANTASR_TRACE)");
+    let qam_b = common::random_model_seeded(2, 12, Some(6), 0xBAD);
+    let model_b = Arc::new(AcousticModel::from_qam(&qam_b, ExecMode::Quant).unwrap());
+    let id_b = eng
+        .load_model(model_b, ModelParams { weight: 1, lanes: Some(2) })
+        .expect("hot load");
+
+    let (sid, srx) = eng
+        .try_open_stream(StreamOptions { model: id_b, priority: Priority::Interactive })
+        .expect("admission");
+    eng.push_frames(sid, &frames(10, 0xEE)).unwrap();
+    let r = srx.recv_timeout(Duration::from_secs(10)).expect("quarantine cancel within 10 s");
+    match &r.end {
+        StreamEnd::Cancelled(why) => assert!(why.contains("quarantined"), "{why}"),
+        other => panic!("want a quarantine cancel, got {other:?}"),
+    }
+    assert!(r.trace != 0, "engine-opened streams carry a trace id");
+
+    // Exactly one dump, with the quarantine trigger, scoped to this
+    // engine — the same plan always yields the same incident record.
+    // Bounded poll: the cancel result races the dump by a few
+    // instructions (the panic arm cancels victims, then dumps).
+    let my_dumps = || {
+        obs::postmortems()
+            .into_iter()
+            .filter(|d| d.engine == eng.obs_id() && d.trigger == "backend_panic_quarantine")
+            .collect::<Vec<_>>()
+    };
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while my_dumps().is_empty() {
+        assert!(Instant::now() < deadline, "postmortem never recorded");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let dumps = my_dumps();
+    assert_eq!(dumps.len(), 1, "one scripted panic, one postmortem");
+    let dump = &dumps[0];
+    assert!(!dump.events.is_empty(), "a postmortem must carry its incident window");
+
+    // The dump reconciles with the fault counters: the quarantine and
+    // the cancel it forced are both in the window, in that causal order
+    // (cancel first — the panic arm cancels the victims, then dumps).
+    let quarantines =
+        dump.events.iter().filter(|e| e.kind == obs::EventKind::Quarantine).count() as u64;
+    let cancels = dump.events.iter().filter(|e| e.kind == obs::EventKind::Cancel).count() as u64;
+    assert_eq!(quarantines, *eng.metrics().quarantined_jobs.lock().unwrap());
+    assert_eq!(cancels, 1, "the quarantined model had exactly one live stream");
+    let q_ev = dump.events.iter().find(|e| e.kind == obs::EventKind::Quarantine).unwrap();
+    assert_eq!(q_ev.model, id_b as u16, "quarantine event names the panicked model");
+    let c_ev = dump.events.iter().find(|e| e.kind == obs::EventKind::Cancel).unwrap();
+    assert_eq!(c_ev.stream, sid, "cancel event names the quarantined stream");
+
+    // Both export surfaces are well-formed Chrome-trace JSON arrays.
+    for (what, json) in
+        [("postmortem", obs::chrome_trace_json(&dump.events)), ("export", eng.trace_json())]
+    {
+        match quantasr::io::json::Json::parse(&json) {
+            Ok(quantasr::io::json::Json::Arr(evs)) => {
+                assert!(!evs.is_empty(), "{what}: trace must not be empty here")
+            }
+            Ok(other) => panic!("{what}: want a JSON array, got {other:?}"),
+            Err(e) => panic!("{what}: invalid Chrome-trace JSON: {e}"),
+        }
+    }
+    std::fs::write("TRACE_chaos.json", eng.trace_json()).expect("write trace artifact");
 }

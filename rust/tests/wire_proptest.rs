@@ -20,7 +20,7 @@ use quantasr::util::prop::{forall, Gen};
 /// Serialize one random-but-valid client frame, returning the bytes and
 /// the expected parse.
 fn gen_client_frame(g: &mut Gen) -> (Vec<u8>, ClientFrame) {
-    match g.usize_in(0, 7) {
+    match g.usize_in(0, 10) {
         0 => {
             let p = if g.bool() { Priority::Interactive } else { Priority::Bulk };
             (vec![b'P', p.to_wire()], ClientFrame::Priority(p))
@@ -68,6 +68,21 @@ fn gen_client_frame(g: &mut Gen) -> (Vec<u8>, ClientFrame) {
             b.push(u8::from(force));
             (b, ClientFrame::UnloadDeadline { id, deadline_ms, force })
         }
+        7 => {
+            let path: String = (0..g.usize_in(0, 40)).map(|_| 's').collect();
+            let old = g.usize_in(0, 31) as u32;
+            let weight = g.usize_in(1, 9) as u32;
+            let lanes = g.usize_in(0, 8) as u32;
+            let mut b = vec![b'S'];
+            b.extend_from_slice(&old.to_le_bytes());
+            b.extend_from_slice(&weight.to_le_bytes());
+            b.extend_from_slice(&lanes.to_le_bytes());
+            b.extend_from_slice(&(path.len() as u32).to_le_bytes());
+            b.extend_from_slice(path.as_bytes());
+            (b, ClientFrame::Swap { old, weight, lanes, path })
+        }
+        8 => (vec![b'T'], ClientFrame::Metrics),
+        9 => (vec![b'X'], ClientFrame::Trace),
         _ => (vec![b'Q'], ClientFrame::Query),
     }
 }
@@ -81,7 +96,11 @@ fn gen_server_frame(g: &mut Gen) -> Vec<u8> {
         b.extend((0..n).map(|_| b'r'));
         b
     }
-    match g.usize_in(0, 5) {
+    // Terminal frames (F/R/C/E) end with the trailing u64 trace id.
+    fn trace_id(g: &mut Gen) -> [u8; 8] {
+        (g.usize_in(0, 1 << 40) as u64).to_le_bytes()
+    }
+    match g.usize_in(0, 7) {
         0 => {
             let words = g.vec_ids(g.usize_in(0, 16), 1000);
             let phones = g.vec_ids(g.usize_in(0, 16), 50);
@@ -95,19 +114,41 @@ fn gen_server_frame(g: &mut Gen) -> Vec<u8> {
                 b.extend_from_slice(&p.to_le_bytes());
             }
             b.extend_from_slice(&g.f32_in(0.0, 100.0).to_le_bytes());
+            b.extend_from_slice(&trace_id(g));
             b
         }
-        1 => text(b'R', g),
+        1 => {
+            let mut b = text(b'R', g);
+            b.extend_from_slice(&trace_id(g));
+            b
+        }
         2 => {
             let mut b = vec![b'O'];
             b.extend_from_slice(&(g.usize_in(0, 31) as u32).to_le_bytes());
             b
         }
-        3 => text(b'C', g),
-        4 => text(b'E', g),
+        3 => {
+            let mut b = text(b'C', g);
+            b.extend_from_slice(&trace_id(g));
+            b
+        }
+        4 => {
+            let mut b = text(b'E', g);
+            b.extend_from_slice(&trace_id(g));
+            b
+        }
+        5 => text(b'T', g),
+        6 => {
+            // 'X' trace export: any bytes are accepted at the wire layer
+            // (JSON validity is the exporter's contract, not the parser's).
+            text(b'X', g)
+        }
         _ => {
             let rows = g.usize_in(0, 4);
             let mut b = vec![b'Q'];
+            b.push(g.usize_in(0, 2) as u8); // brownout stage
+            b.extend_from_slice(&(g.usize_in(0, 1 << 20) as u64).to_le_bytes()); // resident
+            b.extend_from_slice(&(g.usize_in(0, 1 << 20) as u64).to_le_bytes()); // budget
             b.extend_from_slice(&(rows as u32).to_le_bytes());
             for i in 0..rows {
                 b.extend_from_slice(&(i as u32).to_le_bytes());
@@ -115,6 +156,9 @@ fn gen_server_frame(g: &mut Gen) -> Vec<u8> {
                 b.extend_from_slice(&(g.usize_in(1, 9) as u32).to_le_bytes());
                 b.extend_from_slice(&(g.usize_in(1, 8) as u32).to_le_bytes());
                 b.extend_from_slice(&(g.usize_in(0, 8) as u32).to_le_bytes());
+                b.extend_from_slice(&(g.usize_in(0, 1 << 16) as u64).to_le_bytes()); // arena
+                b.extend_from_slice(&(g.usize_in(0, 1 << 16) as u64).to_le_bytes()); // reserved
+                b.extend_from_slice(&(g.usize_in(0, 1 << 16) as u64).to_le_bytes()); // parked
                 let name_len = g.usize_in(0, 12);
                 b.extend_from_slice(&(name_len as u32).to_le_bytes());
                 b.extend((0..name_len).map(|_| b'm'));
