@@ -1499,6 +1499,12 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
         // lock-free, slot installed atomically).
         process_admin(&s, &mut wm);
         let mut inner = s.inner.lock().unwrap();
+        // Incident dumps triggered while the engine lock is held are
+        // deferred to the next guard drop: a postmortem scans and sorts
+        // every trace ring and may write a file — doing that under the
+        // mutex would stall admissions, pushes and the reaper exactly
+        // when the engine is overloaded.
+        let mut pending_pms: Vec<&'static str> = Vec::new();
         // Streams can finish *after* their last frame was computed (the
         // finish() raced the final batch) or with no audio at all — drain
         // them to the decode queue every tick, before the policy decision.
@@ -1506,7 +1512,11 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
         // their slots at this same boundary), then any draining model
         // that just lost its last stream is torn down.
         drain_finished(&mut inner, &s);
-        reap_expired(&mut inner, &wm, &s);
+        if reap_expired(&mut inner, &wm, &s) {
+            // A forced unload cancelled live streams out from under
+            // clients — freeze the surrounding activity for the record.
+            pending_pms.push("forced_cancels");
+        }
         teardown_drained(&mut inner, &mut wm, &s);
         let nm = inner.models.len();
         debug_assert_eq!(nm, wm.len());
@@ -1531,11 +1541,13 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
                     .wait_timeout(inner, Duration::from_millis(20))
                     .unwrap();
                 drop(guard);
+                fire_postmortems(s.obs, &mut pending_pms);
                 continue;
             }
             Decision::Wait(d) => {
                 let (guard, _t) = s.work_cv.wait_timeout(inner, d).unwrap();
                 drop(guard);
+                fire_postmortems(s.obs, &mut pending_pms);
                 continue;
             }
             Decision::Flush => {}
@@ -1616,7 +1628,7 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
                             ..Meta::default()
                         },
                     );
-                    obs::postmortem(s.obs, "brownout_entry");
+                    pending_pms.push("brownout_entry");
                 }
                 (prev, 0) if prev > 0 => s.metrics.brownout_transition(false),
                 _ => {}
@@ -1629,6 +1641,7 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
         if ready.is_empty() {
             drop(inner);
             s.space_cv.notify_all();
+            fire_postmortems(s.obs, &mut pending_pms);
             continue;
         }
         // Plan this tick's batch, per model.  Pass 1: ready streams that
@@ -1792,6 +1805,7 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
                 .wait_timeout(inner, Duration::from_millis(20))
                 .unwrap();
             drop(guard);
+            fire_postmortems(s.obs, &mut pending_pms);
             continue;
         }
         // Weighted fairness: divide the tick's lane-step budget across
@@ -1872,6 +1886,7 @@ fn am_worker<B: AmBackend>(s: Arc<Shared<B>>) {
             .record(lanes_in_use_total as f64 / total_lanes.max(1) as f64);
         drop(inner);
         s.space_cv.notify_all();
+        fire_postmortems(s.obs, &mut pending_pms);
         tick_no += 1;
         if fault::fire(&s.config.faults, FaultPoint::SlowTick, tick_no) {
             std::thread::sleep(Duration::from_millis(fault::SLOW_TICK_MS));
@@ -2111,7 +2126,16 @@ fn publish_bytes<B: AmBackend>(s: &Shared<B>, inner: &Inner<B>, m: usize) {
 /// - **Idle timeout** — a stream with no pending frames and no client
 ///   activity for [`EngineConfig::stream_idle`] is cancelled (a stream
 ///   with frames still queued is the engine's debt, not the client's).
-fn reap_expired<B: AmBackend>(inner: &mut Inner<B>, wm: &[Option<LaneIo<B>>], s: &Shared<B>) {
+///
+/// Returns whether a forced unload cancelled live streams — the caller
+/// owes a `forced_cancels` postmortem *after* it drops the engine lock
+/// (a dump walks every ring and may hit the filesystem; doing that here
+/// would stall admissions and pushes exactly when the engine is busy).
+fn reap_expired<B: AmBackend>(
+    inner: &mut Inner<B>,
+    wm: &[Option<LaneIo<B>>],
+    s: &Shared<B>,
+) -> bool {
     let mut cancelled = false;
     let mut forced = false;
     for m in 0..inner.models.len() {
@@ -2129,11 +2153,6 @@ fn reap_expired<B: AmBackend>(inner: &mut Inner<B>, wm: &[Option<LaneIo<B>>], s:
         if let Some(Some(slot)) = inner.models.get_mut(m) {
             slot.force_cancel = false;
         }
-    }
-    if forced {
-        // A forced unload cancelled live streams out from under clients —
-        // freeze the surrounding activity for the postmortem record.
-        obs::postmortem(s.obs, "forced_cancels");
     }
     let (idle, deadline) = (s.config.stream_idle, s.config.stream_deadline);
     if idle.is_some() || deadline.is_some() {
@@ -2170,6 +2189,16 @@ fn reap_expired<B: AmBackend>(inner: &mut Inner<B>, wm: &[Option<LaneIo<B>>], s:
     }
     if cancelled {
         s.space_cv.notify_all();
+    }
+    forced
+}
+
+/// Flush the postmortem triggers the am_worker deferred while it held
+/// the engine lock — called only after the guard drops, so the ring
+/// scan and dump write never block admissions or pushes.
+fn fire_postmortems(engine: u16, pending: &mut Vec<&'static str>) {
+    for trigger in pending.drain(..) {
+        obs::postmortem(engine, trigger);
     }
 }
 

@@ -39,7 +39,7 @@
 
 pub mod ring;
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU16, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -60,6 +60,13 @@ pub const POSTMORTEM_EVENTS: usize = 512;
 /// cannot evict a dump before anyone reads it, while staying O(1): at
 /// most `KEEP × EVENTS` events live here.
 pub const POSTMORTEM_KEEP: usize = 32;
+
+/// Rings whose writer thread has exited, retained so their recent
+/// history stays snapshotable (an engine's trace is exported *after*
+/// its workers shut down).  Beyond this bound the oldest retired ring
+/// is dropped and its tid recycled, so a server spawning a thread per
+/// connection stays O(1) in memory under connection churn.
+pub const RETIRED_RINGS_KEEP: usize = 32;
 
 /// What happened.  The discriminants are the wire/JSON encoding — append
 /// new kinds, never renumber (same additive rule as `docs/PROTOCOL.md`).
@@ -247,12 +254,59 @@ impl Default for Meta {
     }
 }
 
+/// The ring registry: live writers, the bounded pool of dead writers'
+/// history, and the tid allocator.  One mutex, never touched on the
+/// event hot path (only at thread birth/death and by snapshot readers).
+struct Registry {
+    /// Rings whose writer thread is alive.
+    active: Vec<Arc<Ring>>,
+    /// Rings whose writer thread exited, oldest first.  Bounded at
+    /// [`RETIRED_RINGS_KEEP`]; eviction drops the history and returns
+    /// the tid to `free_tids`.
+    retired: VecDeque<Arc<Ring>>,
+    /// tids whose ring (and therefore whole event history) is gone —
+    /// reused before the counter grows, so tids stay bounded by the peak
+    /// live + retired ring count rather than total threads ever spawned.
+    free_tids: Vec<u16>,
+    /// Monotonic fallback allocator; saturates at `u16::MAX` (the shared
+    /// overflow tid) rather than wrapping onto live writers.
+    next_tid: u32,
+}
+
+impl Registry {
+    fn alloc_tid(&mut self) -> u16 {
+        self.free_tids.pop().unwrap_or_else(|| {
+            let t = self.next_tid.min(u16::MAX as u32) as u16;
+            self.next_tid = self.next_tid.saturating_add(1);
+            t
+        })
+    }
+
+    /// Move a ring from the active set to the bounded retired pool
+    /// (called from the owning thread's exit).  An empty ring has no
+    /// history worth keeping: its tid is recycled immediately.
+    fn retire(&mut self, ring: &Arc<Ring>) {
+        let Some(i) = self.active.iter().position(|r| Arc::ptr_eq(r, ring)) else {
+            return;
+        };
+        let ring = self.active.swap_remove(i);
+        if ring.pushed() == 0 {
+            self.free_tids.push(ring.tid());
+            return;
+        }
+        self.retired.push_back(ring);
+        while self.retired.len() > RETIRED_RINGS_KEEP {
+            let dead = self.retired.pop_front().expect("len > KEEP implies non-empty");
+            self.free_tids.push(dead.tid());
+        }
+    }
+}
+
 /// The process-wide recorder: the ring registry plus the enabled switch.
 struct Recorder {
     enabled: AtomicBool,
     capacity: usize,
-    rings: Mutex<Vec<Arc<Ring>>>,
-    next_tid: AtomicU16,
+    registry: Mutex<Registry>,
     epoch: Instant,
 }
 
@@ -279,8 +333,12 @@ fn recorder() -> &'static Recorder {
         Recorder {
             enabled: AtomicBool::new(enabled),
             capacity,
-            rings: Mutex::new(Vec::new()),
-            next_tid: AtomicU16::new(1),
+            registry: Mutex::new(Registry {
+                active: Vec::new(),
+                retired: VecDeque::new(),
+                free_tids: Vec::new(),
+                next_tid: 1,
+            }),
             epoch: Instant::now(),
         }
     })
@@ -305,9 +363,27 @@ pub fn now_us() -> u64 {
     recorder().epoch.elapsed().as_micros() as u64
 }
 
+/// Owns a thread's ring registration: its `Drop` (the thread-local
+/// destructor at thread exit) moves the ring from the registry's active
+/// set into the bounded retired pool, so connection-per-thread servers
+/// don't accrete a dead ring per connection.
+struct ThreadRing(Arc<Ring>);
+
+impl Drop for ThreadRing {
+    fn drop(&mut self) {
+        // A poisoned registry means some reader panicked mid-scan and
+        // the process is already dying — skip rather than double-panic
+        // inside a TLS destructor.
+        if let Ok(mut reg) = recorder().registry.lock() {
+            reg.retire(&self.0);
+        }
+    }
+}
+
 thread_local! {
-    /// This thread's ring, created and registered on first emission.
-    static RING: Cell<Option<&'static Arc<Ring>>> = const { Cell::new(None) };
+    /// This thread's ring, created and registered on first emission and
+    /// retired by the guard's destructor at thread exit.
+    static RING: RefCell<Option<ThreadRing>> = const { RefCell::new(None) };
     /// Ambient coordinates for layers that don't carry engine/stream ids
     /// (frontend, decoder): (engine, stream, model).
     static CTX: Cell<(u16, u64, u16)> = const { Cell::new((0, 0, NO_MODEL)) };
@@ -326,22 +402,24 @@ pub fn restore_ctx(prev: (u16, u64, u16)) {
     CTX.with(|c| c.set(prev));
 }
 
-fn this_ring() -> &'static Arc<Ring> {
-    RING.with(|r| match r.get() {
-        Some(ring) => ring,
-        None => {
+/// Run `f` against this thread's ring, registering it on first use.
+/// Events emitted while the thread-local is being torn down (another
+/// TLS destructor tracing after `RING` was dropped) are silently lost —
+/// re-registering there would leak the new ring.
+#[inline]
+fn with_ring(f: impl FnOnce(&Ring)) {
+    let _ = RING.try_with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let tr = slot.get_or_insert_with(|| {
             let rec = recorder();
-            let tid = rec.next_tid.fetch_add(1, Ordering::Relaxed);
+            let mut reg = rec.registry.lock().unwrap();
+            let tid = reg.alloc_tid();
             let ring = Arc::new(Ring::new(rec.capacity.max(2), tid));
-            rec.rings.lock().unwrap().push(ring.clone());
-            // The thread needs a 'static handle to dodge a refcount bump
-            // per event; the registry's Arc keeps the ring alive after
-            // the thread exits (its history stays snapshotable).
-            let leaked: &'static Arc<Ring> = Box::leak(Box::new(ring));
-            r.set(Some(leaked));
-            leaked
-        }
-    })
+            reg.active.push(ring.clone());
+            ThreadRing(ring)
+        });
+        f(&tr.0);
+    });
 }
 
 /// Record an instant event.
@@ -350,54 +428,62 @@ pub fn instant(kind: EventKind, m: Meta) {
     if !enabled() {
         return;
     }
-    let ring = this_ring();
-    ring.push(Event {
-        ts_us: now_us(),
-        dur_us: 0,
-        kind,
-        engine: m.engine,
-        tid: ring.tid(),
-        model: m.model,
-        lane: m.lane,
-        stream: m.stream,
-        tick: m.tick,
-        arg: m.arg,
+    let ts_us = now_us();
+    with_ring(|ring| {
+        ring.push(Event {
+            ts_us,
+            dur_us: 0,
+            kind,
+            engine: m.engine,
+            tid: ring.tid(),
+            model: m.model,
+            lane: m.lane,
+            stream: m.stream,
+            tick: m.tick,
+            arg: m.arg,
+        })
     });
 }
 
 /// Start a span: returns the start timestamp to hand to [`span_end`].
 /// Cheap enough to call unconditionally; pairs with a possibly-disabled
 /// `span_end` (the recorder may be flipped mid-span — the span is
-/// simply dropped, never torn).
+/// simply dropped, never torn).  `0` means "span not started" (the
+/// recorder was off); a real start is floored to 1 µs so the sentinel
+/// never collides with an event in the first microsecond of the epoch.
 #[inline]
 pub fn span_begin() -> u64 {
     if !enabled() {
         return 0;
     }
-    now_us()
+    now_us().max(1)
 }
 
-/// Close a span opened by [`span_begin`] and record it.
+/// Close a span opened by [`span_begin`] and record it.  A span that
+/// never started (`t0_us == 0`: the recorder was off at [`span_begin`]
+/// and flipped on since) is dropped — recording it would fabricate an
+/// epoch-to-now span.
 #[inline]
 pub fn span_end(kind: EventKind, t0_us: u64, m: Meta) {
-    if !enabled() {
+    if t0_us == 0 || !enabled() {
         return;
     }
     let now = now_us();
-    let ring = this_ring();
-    ring.push(Event {
-        ts_us: t0_us,
-        // A span shorter than the clock tick still happened: floor at
-        // 1 µs so Chrome renders it and `dur_us == 0` stays "instant".
-        dur_us: (now.saturating_sub(t0_us)).clamp(1, u32::MAX as u64) as u32,
-        kind,
-        engine: m.engine,
-        tid: ring.tid(),
-        model: m.model,
-        lane: m.lane,
-        stream: m.stream,
-        tick: m.tick,
-        arg: m.arg,
+    with_ring(|ring| {
+        ring.push(Event {
+            ts_us: t0_us,
+            // A span shorter than the clock tick still happened: floor at
+            // 1 µs so Chrome renders it and `dur_us == 0` stays "instant".
+            dur_us: (now.saturating_sub(t0_us)).clamp(1, u32::MAX as u64) as u32,
+            kind,
+            engine: m.engine,
+            tid: ring.tid(),
+            model: m.model,
+            lane: m.lane,
+            stream: m.stream,
+            tick: m.tick,
+            arg: m.arg,
+        })
     });
 }
 
@@ -405,23 +491,35 @@ pub fn span_end(kind: EventKind, t0_us: u64, m: Meta) {
 /// model (frontend + decoder emission sites).
 #[inline]
 pub fn span_end_ctx(kind: EventKind, t0_us: u64, arg: u64) {
-    if !enabled() {
+    if t0_us == 0 || !enabled() {
         return;
     }
     let (engine, stream, model) = CTX.with(|c| c.get());
     span_end(kind, t0_us, Meta { engine, stream, model, arg, ..Meta::default() });
 }
 
-/// Snapshot every ring's currently-valid events, oldest first.  Torn
-/// slots (a writer mid-copy) are discarded, not waited for.
+/// Snapshot every ring's currently-valid events, oldest first — live
+/// writers plus the retired pool (recently-exited threads).  Torn slots
+/// (a writer mid-copy) are discarded, not waited for.
 pub fn snapshot() -> Vec<Event> {
-    let rings: Vec<Arc<Ring>> = recorder().rings.lock().unwrap().clone();
+    let rings: Vec<Arc<Ring>> = {
+        let reg = recorder().registry.lock().unwrap();
+        reg.active.iter().chain(reg.retired.iter()).cloned().collect()
+    };
     let mut out = Vec::new();
     for ring in rings {
         ring.drain_valid(&mut out);
     }
     out.sort_by_key(|e| (e.ts_us, e.tid));
     out
+}
+
+/// `(live, retired)` ring counts — a diagnostics surface, and what the
+/// reclamation tests pin: thread exit moves a ring from live to the
+/// bounded retired pool instead of leaking it.
+pub fn ring_counts() -> (usize, usize) {
+    let reg = recorder().registry.lock().unwrap();
+    (reg.active.len(), reg.retired.len())
 }
 
 /// [`snapshot`] filtered to one engine's events (test processes run many
@@ -607,6 +705,68 @@ mod tests {
         let snap = snapshot_engine(engine);
         let e = snap.iter().find(|e| e.kind == EventKind::FrontendPush).unwrap();
         assert_eq!((e.stream, e.model, e.arg), (99, 2, 13));
+    }
+
+    #[test]
+    fn span_started_while_disabled_never_records() {
+        let engine = next_engine_id();
+        set_enabled(false);
+        let t0 = span_begin();
+        assert_eq!(t0, 0, "disabled span_begin returns the not-started sentinel");
+        set_enabled(true);
+        // The recorder flipped on between begin and end: recording now
+        // would fabricate an epoch-to-now span.
+        span_end(EventKind::AmTick, t0, Meta { engine, ..Meta::default() });
+        span_end_ctx(EventKind::FrontendPush, t0, 9);
+        assert!(snapshot_engine(engine).is_empty());
+    }
+
+    #[test]
+    fn thread_exit_retires_ring_and_registry_stays_bounded() {
+        set_enabled(true);
+
+        // One emitting thread exits: its history must survive into the
+        // retired pool.  (Checked before the churn below, which is
+        // allowed to evict it.)
+        let engine = next_engine_id();
+        std::thread::spawn(move || {
+            instant(EventKind::Admit, Meta { engine, stream: 31, ..Meta::default() });
+        })
+        .join()
+        .unwrap();
+        let snap = snapshot_engine(engine);
+        assert_eq!(snap.len(), 1, "dead thread's history must stay snapshotable");
+        assert_eq!(snap[0].stream, 31);
+
+        // Thread churn (a connection-per-thread server): the retired
+        // pool stays bounded and tids recycle instead of exhausting u16.
+        let spawned = 3 * RETIRED_RINGS_KEEP;
+        let mut tids = std::collections::HashSet::new();
+        for i in 0..spawned {
+            let tid = std::thread::spawn(move || {
+                instant(EventKind::Admit, Meta { engine, stream: i as u64, ..Meta::default() });
+                // try_with cannot fail here (the TLS is live mid-thread);
+                // report the tid this thread's ring registered under.
+                let mut tid = 0;
+                with_ring(|r| tid = r.tid());
+                tid
+            })
+            .join()
+            .unwrap();
+            tids.insert(tid);
+            assert!(
+                ring_counts().1 <= RETIRED_RINGS_KEEP,
+                "retired pool exceeded its bound at churn step {i}"
+            );
+        }
+        // Evicted rings hand their tids back: far fewer distinct tids
+        // than threads ever spawned (no u16 exhaustion under churn).
+        assert!(
+            tids.len() < spawned,
+            "{} threads used {} distinct tids — tids are not being recycled",
+            spawned,
+            tids.len()
+        );
     }
 
     #[test]

@@ -8,12 +8,17 @@
 //!
 //! - Every slot carries a sequence word.  The writer bumps it to an
 //!   **odd** value, copies the event in, then bumps it to the next
-//!   **even** value (both with `Release` so the data writes cannot float
-//!   past the second bump).
+//!   **even** value.  The fencing is the crossbeam/Boehm seqlock
+//!   pattern, chosen for weakly-ordered hardware (AArch64), not just
+//!   x86-TSO: the odd store is `Relaxed` but followed by a `Release`
+//!   fence so the payload writes cannot be hoisted above it, and the
+//!   even store is `Release` so the payload writes cannot sink below
+//!   it.
 //! - A reader loads the sequence (`Acquire`), skips the slot if it is
 //!   odd (mid-write) or zero (never written), copies the payload out
-//!   with volatile reads, then re-loads the sequence: if it changed, the
-//!   copy may be torn and is discarded.
+//!   with volatile reads, issues an `Acquire` fence (so the payload
+//!   reads cannot sink below the re-check), then re-loads the sequence:
+//!   if it changed, the copy may be torn and is discarded.
 //!
 //! The payload copy itself is a data race in the C++11 sense, which is
 //! why the slot data lives in `UnsafeCell` and is moved with
@@ -26,7 +31,7 @@
 //! 2^64 events), so readers can recover write order without timestamps.
 
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{fence, AtomicU64, Ordering};
 
 use super::Event;
 
@@ -91,10 +96,15 @@ impl Ring {
         let head = self.head.load(Ordering::Relaxed);
         let slot = &self.slots[(head % self.slots.len() as u64) as usize];
         let gen = head / self.slots.len() as u64 + 1;
-        // Odd: readers arriving now will skip or retry this slot.
-        slot.seq.store(2 * gen - 1, Ordering::Release);
+        // Odd: readers arriving now will skip or retry this slot.  The
+        // Release *fence* (not the store's own ordering — Release on a
+        // store only orders what precedes it) is what keeps the payload
+        // write below from being hoisted above the odd mark on
+        // weakly-ordered hardware.
+        slot.seq.store(2 * gen - 1, Ordering::Relaxed);
+        fence(Ordering::Release);
         unsafe { std::ptr::write_volatile(slot.data.get(), e) };
-        // Even: the copy above is complete and visible.
+        // Even: Release orders the payload copy before the publish.
         slot.seq.store(2 * gen, Ordering::Release);
         self.head.store(head + 1, Ordering::Release);
     }
@@ -113,7 +123,12 @@ impl Ring {
                 continue;
             }
             let e = unsafe { std::ptr::read_volatile(slot.data.get()) };
-            let s2 = slot.seq.load(Ordering::Acquire);
+            // The Acquire fence pins the payload copy above the
+            // re-check; an Acquire on the s2 load alone would only
+            // order what *follows* it, letting the copy sink past s2 on
+            // weakly-ordered hardware and defeating the torn-read test.
+            fence(Ordering::Acquire);
+            let s2 = slot.seq.load(Ordering::Relaxed);
             if s1 == s2 {
                 out.push(e);
             }
