@@ -15,7 +15,7 @@
 use std::fmt::Write as _;
 
 use quantasr::quant::gemm::{fgemm, qgemm, FMatrix, Kernel, QScratch};
-use quantasr::quant::{Granularity, QMatrix};
+use quantasr::quant::{Granularity, QMatrix, QuantScheme};
 use quantasr::util::bench::{Bench, Measurement};
 use quantasr::util::pool::WorkerPool;
 use quantasr::util::rng::Xoshiro256;
@@ -120,6 +120,41 @@ fn main() {
         }
     }
 
+    // Requantization-scheme axis on the acceptance shape: the per-channel
+    // finish must not tax the u8 path, and the int4 nibble kernels must
+    // convert their halved panel footprint into batch-32 throughput (the
+    // i4-vs-u8 acceptance ratio recorded in BENCH_gemm.json).
+    println!("== scheme axis (auto rung, 512×2048) ==");
+    let (k, n) = (512usize, 2048usize);
+    let wf = randv(k * n, &mut rng);
+    let bias = randv(n, &mut rng);
+    let schemes = [
+        ("isq-per-matrix-u8", QuantScheme::PerMatrixU8),
+        ("isq-per-channel-u8", QuantScheme::PerChannelU8),
+        ("isq-per-channel-i4", QuantScheme::PerChannelI4),
+    ];
+    for batch in batches {
+        let x = randv(batch * k, &mut rng);
+        let macs = (batch * k * n) as f64;
+        let mut y = vec![0f32; batch * n];
+        let mut scratch = QScratch::default();
+        for &(name, scheme) in &schemes {
+            let qm = QMatrix::from_f32_math_layout_scheme(&wf, k, n, scheme);
+            let m = b.run_with_items(
+                &format!("{name:<18} {batch}x{k}x{n}"),
+                macs,
+                || qgemm(&x, batch, &qm, Some(&bias), &mut y, &mut scratch, Kernel::Auto, false),
+            );
+            rows.push(Row { batch, k, n, kernel: name.into(), m, macs });
+        }
+        if let (Some(u8ns), Some(i4ns)) = (
+            find_ns(&rows, batch, k, n, "isq-per-channel-u8"),
+            find_ns(&rows, batch, k, n, "isq-per-channel-i4"),
+        ) {
+            println!("  → i4 vs per-channel-u8 {:.2}× (batch {batch})\n", u8ns / i4ns);
+        }
+    }
+
     // Worker-pool dispatch overhead: a no-op job through the persistent
     // pool measures the fixed cost a parallel GEMM pays over a serial one
     // (the number that justified dropping the 2M-MAC spawn threshold to
@@ -214,6 +249,24 @@ fn main() {
                 f32_ns / auto_ns
             ));
         }
+    }
+    json.push_str(&lines.join(",\n"));
+    json.push_str("\n  ],\n  \"isq\": [\n");
+    let mut lines: Vec<String> = Vec::new();
+    for batch in batches {
+        let (Some(u8ns), Some(i4ns), Some(pmns)) = (
+            find_ns(&rows, batch, 512, 2048, "isq-per-channel-u8"),
+            find_ns(&rows, batch, 512, 2048, "isq-per-channel-i4"),
+            find_ns(&rows, batch, 512, 2048, "isq-per-matrix-u8"),
+        ) else {
+            continue;
+        };
+        lines.push(format!(
+            "    {{\"batch\": {batch}, \"k\": 512, \"n\": 2048, \
+             \"i4_vs_pc_u8\": {:.3}, \"pc_u8_vs_pm_u8\": {:.3}}}",
+            u8ns / i4ns,
+            pmns / u8ns
+        ));
     }
     json.push_str(&lines.join(",\n"));
     json.push_str("\n  ]\n}\n");

@@ -345,6 +345,10 @@ pub struct ModelInfo {
     /// Slot index = model id (stable for the model's whole residency).
     pub id: usize,
     pub name: String,
+    /// Requantization scheme / numerics the backend executes under
+    /// ([`crate::runtime::AmBackend::scheme_name`]): `"per-matrix-u8"`,
+    /// `"per-channel-u8"`, `"per-channel-i4"`, or `"float"`.
+    pub scheme: String,
     /// DRR tick-bandwidth weight.
     pub weight: u32,
     /// Arena lanes allocated to this model.
@@ -717,6 +721,7 @@ impl<B: AmBackend> Engine<B> {
                     ModelInfo {
                         id,
                         name: slot.name.clone(),
+                        scheme: slot.backend.scheme_name().to_string(),
                         weight: slot.weight,
                         lanes: slot.lanes.capacity(),
                         live_streams: live[id],

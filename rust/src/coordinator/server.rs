@@ -417,6 +417,7 @@ pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, ServeError> {
                 let reserved_bytes = read_u64(r)?;
                 let parked_bytes = read_u64(r)?;
                 let name = read_text(r, "model name")?;
+                let scheme = read_text(r, "model scheme")?;
                 models.push(RegistryEntry {
                     id,
                     draining: status[0] == 1,
@@ -428,6 +429,7 @@ pub fn read_server_frame(r: &mut impl Read) -> Result<ServerFrame, ServeError> {
                     reserved_bytes,
                     parked_bytes,
                     name,
+                    scheme,
                 });
             }
             Ok(ServerFrame::Registry(RegistrySnapshot {
@@ -950,6 +952,9 @@ fn write_registry(
         let nb = e.name.as_bytes();
         buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
         buf.extend_from_slice(nb);
+        let sb = e.scheme.as_bytes();
+        buf.extend_from_slice(&(sb.len() as u32).to_le_bytes());
+        buf.extend_from_slice(sb);
     }
     sock.write_all(&buf)?;
     Ok(())
@@ -992,6 +997,9 @@ pub struct RegistryEntry {
     /// Reserved bytes currently materialized as parked state (≤ reserved).
     pub parked_bytes: u64,
     pub name: String,
+    /// Requantization scheme the model executes under (`"per-matrix-u8"`,
+    /// `"per-channel-u8"`, `"per-channel-i4"`, or `"float"`).
+    pub scheme: String,
 }
 
 /// Client-side view of the full `'Q'` response: the overload-control
@@ -1376,6 +1384,8 @@ mod tests {
         b.extend_from_slice(&le64(512)); // parked bytes
         b.extend_from_slice(&le(2));
         b.extend_from_slice(b"en");
+        b.extend_from_slice(&le(14)); // scheme text follows the name
+        b.extend_from_slice(b"per-channel-i4");
         match read_server_frame(&mut Cursor::new(b)).unwrap() {
             ServerFrame::Registry(snap) => {
                 assert_eq!(snap.brownout_stage, 1);
@@ -1389,6 +1399,7 @@ mod tests {
                     (3000, 1024, 512)
                 );
                 assert_eq!(row.name, "en");
+                assert_eq!(row.scheme, "per-channel-i4");
             }
             other => panic!("want registry, got {other:?}"),
         }

@@ -5,6 +5,11 @@
 //! on exactly the grid QAT trained — no re-quantization drift.  This module
 //! can also *write* `.qam` files (used by the `quantize_model` example and
 //! round-trip tests).
+//!
+//! In-situ requantization ([`crate::quant::QuantScheme`]) never changes
+//! this format: the per-channel schemes recover a stored `U8Q` tensor to
+//! f32 (`Tensor::to_f32`) and rebuild the serving matrices at load, so one
+//! artifact serves under any scheme and the file stays the QAT record.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};

@@ -5,7 +5,11 @@
 //! quantasr figure2  --artifacts artifacts
 //! quantasr eval     --model artifacts/models/p24.qat.qam --mode quant
 //!                   [--set eval_clean] [--artifacts artifacts]
+//!                   [--isq per-matrix-u8|per-channel-u8|per-channel-i4]
+//!                   (in-situ requantization scheme; defaults to
+//!                    `QUANTASR_ISQ`, then per-matrix-u8)
 //! quantasr serve    --model … --mode quant [--addr 127.0.0.1:7700]
+//!                   [--isq <scheme>]  (also applied by 'L'/'S' loads)
 //!                   [--max-batch 32] [--deadline-ms 5] [--quantum 25]
 //!                   [--max-streams 1024] [--tick-budget 32]
 //!                   [--model-weights 4,1] [--model-lanes 32,8]
@@ -41,6 +45,7 @@ use quantasr::io::feat_fmt::read_feats;
 use quantasr::io::model_fmt::QamFile;
 use quantasr::nn::{AcousticModel, ExecMode};
 use quantasr::quant::error as qerror;
+use quantasr::quant::QuantScheme;
 use quantasr::sim::dataset::{gen_wave, Style};
 use quantasr::sim::World;
 use quantasr::util::cli::Args;
@@ -92,6 +97,16 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
 }
 
+/// `--isq <scheme>` wins over `QUANTASR_ISQ`; both default to the seed
+/// per-matrix-u8 behavior.
+fn isq_scheme(args: &Args) -> Result<QuantScheme> {
+    match args.get("isq") {
+        Some(s) => QuantScheme::parse(s)
+            .with_context(|| format!("unknown --isq scheme '{s}' (per-matrix-u8 | per-channel-u8 | per-channel-i4)")),
+        None => Ok(QuantScheme::from_env_or_default()),
+    }
+}
+
 fn threads(args: &Args) -> usize {
     args.get_usize(
         "threads",
@@ -125,7 +140,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let mode = ExecMode::parse(args.get_or("mode", "quant"))?;
     let set = args.get_or("set", "eval_clean");
     let utts = read_feats(art.join(format!("data/{set}.feats")))?;
-    let model = AcousticModel::load(model_path, mode)?;
+    let model = AcousticModel::load_with_scheme(model_path, mode, isq_scheme(args)?)?;
     let world = World::new();
     let decoder = build_decoder(&world, DecoderConfig::default());
     let r = evaluate(&model, &decoder, &utts, threads(args));
@@ -147,7 +162,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn load_engine(args: &Args) -> Result<Arc<Engine>> {
     let model_path = args.get("model").context("--model required")?;
     let mode = ExecMode::parse(args.get_or("mode", "quant"))?;
-    let model = Arc::new(AcousticModel::load(model_path, mode)?);
+    let model = Arc::new(AcousticModel::load_with_scheme(model_path, mode, isq_scheme(args)?)?);
     let world = World::new();
     let decoder = Arc::new(build_decoder(&world, DecoderConfig::default()));
     let mut cfg = EngineConfig::default();
@@ -171,10 +186,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7700").to_string();
     let stop = Arc::new(AtomicBool::new(false));
     // Hot-load admin ('L' frames): load .qam paths with the same exec
-    // mode the boot model uses.
+    // mode and requantization scheme the boot model uses.
     let mode = ExecMode::parse(args.get_or("mode", "quant"))?;
-    let loader: server::ModelLoader<AcousticModel> =
-        Arc::new(move |path: &str| Ok(Arc::new(AcousticModel::load(path, mode)?)));
+    let scheme = isq_scheme(args)?;
+    let loader: server::ModelLoader<AcousticModel> = Arc::new(move |path: &str| {
+        Ok(Arc::new(AcousticModel::load_with_scheme(path, mode, scheme)?))
+    });
     println!("serving on {addr} (ctrl-c to stop; admin frames: L/U/D/S/Q/T/X)");
     let r = server::serve_with_loader(engine.clone(), &addr, stop, Some(loader), |a| {
         println!("bound {a}")

@@ -14,7 +14,7 @@ use crate::quant::gemm::{
     fgemm, fgemm_lanes, qgemm, qgemm_cached, qgemm_lanes, qgemm_lanes_cached, FMatrix, Kernel,
     QActRows, QScratch,
 };
-use crate::quant::{Granularity, QMatrix};
+use crate::quant::{Granularity, QMatrix, QuantScheme};
 
 /// A `y = x·W (+ b)` layer; weights `[in, out]` in math terms.
 #[derive(Clone, Debug)]
@@ -45,6 +45,26 @@ impl Linear {
     /// Post-training quantization of a float layer (the 'mismatch' path).
     pub fn quantize_now(&self) -> Linear {
         self.quantize_bits(8)
+    }
+
+    /// In-situ requantization under a [`QuantScheme`] (mistral.rs-style
+    /// ISQ): a quantized layer first recovers its f32 weights, then
+    /// requantizes under the requested scheme — the `.qam` grid is the
+    /// source of truth, never mutated.  `PerMatrixU8` on a float layer is
+    /// identical to [`Linear::quantize_now`].
+    pub fn quantize_scheme(&self, scheme: QuantScheme) -> Linear {
+        let recovered;
+        let f = match self {
+            Linear::Float(f) => f,
+            Linear::Quant(_) => {
+                let Linear::Float(f) = self.to_float() else { unreachable!() };
+                recovered = f;
+                &recovered
+            }
+        };
+        Linear::Quant(QMatrix::from_f32_transposed_scheme(
+            &f.data, f.in_dim, f.out_dim, scheme,
+        ))
     }
 
     /// Post-training quantization with `bits` ∈ 2..=8 resolution (E5
@@ -272,6 +292,37 @@ mod tests {
             q.params[0],
         ));
         assert!(stored.is_packed());
+    }
+
+    #[test]
+    fn quantize_scheme_paths() {
+        let mut g = Gen::new(0x15C);
+        let t = tensor_f32(33, 14, &mut g);
+        let lf = Linear::from_tensor(&t).unwrap();
+        // PerMatrixU8 over a float layer == the seed quantize_now grid.
+        let (Linear::Quant(a), Linear::Quant(b)) = (
+            &lf.quantize_scheme(QuantScheme::PerMatrixU8),
+            &lf.quantize_now(),
+        ) else {
+            panic!()
+        };
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.row_sums, b.row_sums);
+        // Per-channel schemes build packed per-row matrices of the right
+        // width; requantizing an already-quantized layer goes through the
+        // recovered floats (artifact untouched).
+        for (scheme, bits) in
+            [(QuantScheme::PerChannelU8, 8u32), (QuantScheme::PerChannelI4, 4u32)]
+        {
+            for src in [&lf, &lf.quantize_now()] {
+                let lq = src.quantize_scheme(scheme);
+                assert!(lq.is_packed());
+                let Linear::Quant(q) = &lq else { panic!() };
+                assert_eq!(q.granularity, Granularity::PerRow);
+                assert_eq!(q.params.len(), q.out_dim);
+                assert_eq!(q.packed.as_ref().unwrap().bits, bits);
+            }
+        }
     }
 
     #[test]

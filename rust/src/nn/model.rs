@@ -12,6 +12,13 @@
 //! Models exported by QAT already store u8 grids; `Quant`/`QuantAll` uses
 //! them untouched.  Float-trained models get post-hoc quantization
 //! (`Linear::quantize_now`) — exactly the paper's mismatch condition.
+//!
+//! **In-situ requantization** ([`crate::quant::QuantScheme`], selected via
+//! `--isq` / `QUANTASR_ISQ`): under the seed `PerMatrixU8` scheme the
+//! behavior above is unchanged, bit for bit.  The per-channel schemes
+//! (`PerChannelU8`, `PerChannelI4`) requantize every weight matrix from
+//! its recovered f32 view at load time — the `.qam` artifact is never
+//! touched, so one file serves at any width per deployment.
 
 use std::path::Path;
 
@@ -22,6 +29,7 @@ use crate::nn::activation::log_softmax_rows;
 use crate::nn::linear::Linear;
 use crate::nn::lstm::{LayerState, LstmLayer, LstmScratch};
 use crate::quant::gemm::{Kernel, QActRows, QScratch};
+use crate::quant::QuantScheme;
 
 /// Execution numerics (Table-1 column).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -191,16 +199,41 @@ pub struct AcousticModel {
     pub out_bias: Vec<f32>,
     pub mode: ExecMode,
     pub kernel: Kernel,
+    /// The in-situ requantization scheme the quantized matrices were built
+    /// under (reported by the serving registry; `PerMatrixU8` is the seed
+    /// behavior).
+    pub scheme: QuantScheme,
 }
 
 impl AcousticModel {
-    /// Load a `.qam` and prepare it under the given execution mode.
+    /// Load a `.qam` and prepare it under the given execution mode, with
+    /// the requantization scheme taken from `QUANTASR_ISQ` (default:
+    /// `PerMatrixU8`, the seed behavior).
     pub fn load(path: impl AsRef<Path>, mode: ExecMode) -> Result<Self> {
+        Self::load_with_scheme(path, mode, QuantScheme::from_env_or_default())
+    }
+
+    /// Load a `.qam` with an explicit requantization scheme (`--isq`).
+    pub fn load_with_scheme(
+        path: impl AsRef<Path>,
+        mode: ExecMode,
+        scheme: QuantScheme,
+    ) -> Result<Self> {
         let qam = QamFile::load(path)?;
-        Self::from_qam(&qam, mode)
+        Self::from_qam_scheme(&qam, mode, scheme)
     }
 
     pub fn from_qam(qam: &QamFile, mode: ExecMode) -> Result<Self> {
+        Self::from_qam_scheme(qam, mode, QuantScheme::from_env_or_default())
+    }
+
+    /// Build from an in-memory `.qam` under an explicit requantization
+    /// scheme.  `PerMatrixU8` preserves the seed behavior exactly: stored
+    /// U8Q grids serve untouched (bit-faithful to QAT) and float tensors
+    /// go through [`Linear::quantize_now`].  The per-channel schemes
+    /// requantize **every** quantized matrix from its recovered f32 view
+    /// (mistral.rs-style ISQ — the artifact is read-only).
+    pub fn from_qam_scheme(qam: &QamFile, mode: ExecMode, scheme: QuantScheme) -> Result<Self> {
         let h = &qam.header;
         // A zero-layer header is corruption, not a model — and the step
         // path indexes the top layer's cache unconditionally, so admit
@@ -213,8 +246,15 @@ impl AcousticModel {
         let adapt = |t: &Tensor, want_quant: bool| -> Result<Linear> {
             let l = Linear::from_tensor(t)?;
             Ok(match (want_quant, l.is_quant()) {
-                (true, false) => l.quantize_now(), // mismatch path
-                (false, true) => l.to_float(),     // float view of QAT model
+                (true, false) => match scheme {
+                    QuantScheme::PerMatrixU8 => l.quantize_now(), // mismatch path
+                    s => l.quantize_scheme(s),
+                },
+                (true, true) => match scheme {
+                    QuantScheme::PerMatrixU8 => l, // stored QAT grid, untouched
+                    s => l.quantize_scheme(s),     // ISQ from the recovered floats
+                },
+                (false, true) => l.to_float(), // float view of QAT model
                 _ => l,
             })
         };
@@ -239,7 +279,15 @@ impl AcousticModel {
         ensure!(out.out_dim() == h.num_labels, "output dim mismatch");
         ensure!(out_bias.len() == h.num_labels, "output bias mismatch");
         ensure!(layers[0].in_dim() == h.input_dim, "input dim mismatch");
-        Ok(AcousticModel { header: h.clone(), layers, out, out_bias, mode, kernel: Kernel::Auto })
+        Ok(AcousticModel {
+            header: h.clone(),
+            layers,
+            out,
+            out_bias,
+            mode,
+            kernel: Kernel::Auto,
+            scheme,
+        })
     }
 
     /// Re-quantize every weight matrix at the given bit width (from the
@@ -254,6 +302,38 @@ impl AcousticModel {
         }
         if include_output {
             self.out = self.out.to_float().quantize_bits(bits);
+        }
+    }
+
+    /// Re-quantize every quantized weight matrix under a different
+    /// requantization scheme, in place (hot-requant path; goes through
+    /// each layer's recovered f32 view, see [`Linear::quantize_scheme`]).
+    /// Float-mode models are left untouched.
+    pub fn requantize_scheme(&mut self, scheme: QuantScheme) {
+        if self.mode == ExecMode::Float {
+            return;
+        }
+        for l in self.layers.iter_mut() {
+            l.wx = l.wx.quantize_scheme(scheme);
+            l.wh = l.wh.quantize_scheme(scheme);
+            if let Some(wp) = &l.wp {
+                l.wp = Some(wp.quantize_scheme(scheme));
+            }
+        }
+        if self.mode == ExecMode::QuantAll {
+            self.out = self.out.quantize_scheme(scheme);
+        }
+        self.scheme = scheme;
+    }
+
+    /// The scheme tag the serving registry reports for this model:
+    /// `"float"` for float-mode models (no quantizer in the path),
+    /// otherwise the requantization scheme's name.
+    pub fn scheme_name(&self) -> &'static str {
+        if self.mode == ExecMode::Float {
+            "float"
+        } else {
+            self.scheme.name()
         }
     }
 
@@ -571,7 +651,11 @@ mod tests {
         let mut g = Gen::new(6);
         let qam = random_qam(2, 12, None, 8, 5, &mut g);
         let mf = AcousticModel::from_qam(&qam, ExecMode::Float).unwrap();
-        let mq = AcousticModel::from_qam(&qam, ExecMode::Quant).unwrap();
+        // Pinned to the seed scheme: the 0.5 ceiling is an 8-bit bound and
+        // must hold regardless of any QUANTASR_ISQ set by the CI matrix.
+        let mq =
+            AcousticModel::from_qam_scheme(&qam, ExecMode::Quant, QuantScheme::PerMatrixU8)
+                .unwrap();
         let feats = g.vec_normal(20 * 8, 1.0);
         let of = mf.forward_utt(&feats, 20);
         let oq = mq.forward_utt(&feats, 20);
@@ -580,6 +664,102 @@ mod tests {
             max_err = max_err.max((a - b).abs());
         }
         assert!(max_err < 0.5, "quantized log-probs drifted: {max_err}");
+    }
+
+    #[test]
+    fn schemes_close_to_float_on_sequence() {
+        // Scheme-aware tolerance: per-channel u8 must be at least as close
+        // to float as the seed scheme's documented bound; int4 is coarser
+        // (4-bit weight grid) and gets a wider, still-bounded ceiling.
+        let mut g = Gen::new(0x5CE);
+        let qam = random_qam(2, 12, None, 8, 5, &mut g);
+        let mf = AcousticModel::from_qam(&qam, ExecMode::Float).unwrap();
+        let feats = g.vec_normal(20 * 8, 1.0);
+        let of = mf.forward_utt(&feats, 20);
+        for (scheme, bound) in [
+            (QuantScheme::PerMatrixU8, 0.5f32),
+            (QuantScheme::PerChannelU8, 0.5),
+            (QuantScheme::PerChannelI4, 2.0),
+        ] {
+            let mq = AcousticModel::from_qam_scheme(&qam, ExecMode::Quant, scheme).unwrap();
+            let oq = mq.forward_utt(&feats, 20);
+            let mut max_err = 0.0f32;
+            for (a, b) in of.iter().zip(&oq) {
+                max_err = max_err.max((a - b).abs());
+            }
+            assert!(max_err < bound, "{scheme:?} log-probs drifted: {max_err} (bound {bound})");
+        }
+    }
+
+    #[test]
+    fn scheme_rungs_bit_identical_through_lstm_step() {
+        // The (scheme × rung) contract at full-model depth: for every
+        // requantization scheme, every kernel rung this host can run must
+        // produce bit-identical posteriors through the LSTM step path
+        // (fused x·Wx + h·Wh, projection, softmax input).
+        fn rungs() -> Vec<Kernel> {
+            let mut ks = vec![Kernel::Scalar, Kernel::Unrolled, Kernel::PackedScalar];
+            #[cfg(target_arch = "x86_64")]
+            if crate::quant::gemm::avx2_available() {
+                ks.push(Kernel::Avx2);
+                ks.push(Kernel::PackedAvx2);
+            }
+            #[cfg(all(target_arch = "x86_64", feature = "vnni"))]
+            if crate::quant::gemm::vnni_available() {
+                ks.push(Kernel::PackedVnni);
+            }
+            #[cfg(target_arch = "aarch64")]
+            if crate::quant::gemm::neon_dot_available() {
+                ks.push(Kernel::PackedNeonDot);
+            }
+            ks
+        }
+        let mut g = Gen::new(0x5B17);
+        let qam = random_qam(2, 10, Some(5), 6, 9, &mut g);
+        let feats = g.vec_normal(7 * 6, 1.0);
+        for scheme in
+            [QuantScheme::PerMatrixU8, QuantScheme::PerChannelU8, QuantScheme::PerChannelI4]
+        {
+            let mut m = AcousticModel::from_qam_scheme(&qam, ExecMode::QuantAll, scheme).unwrap();
+            m.kernel = Kernel::Scalar;
+            let want = m.forward_utt(&feats, 7);
+            for kern in rungs() {
+                m.kernel = kern;
+                let got = m.forward_utt(&feats, 7);
+                assert!(
+                    got == want,
+                    "{scheme:?} kernel {kern:?}: posteriors not bit-identical to Scalar"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn requantize_scheme_round_trips_widths() {
+        // u8 → i4 → u8 in place: the scheme tag follows, every inner
+        // matrix stays packed at the new width, and the model still steps.
+        let mut g = Gen::new(0x4E0);
+        let qam = random_qam(2, 8, Some(4), 6, 7, &mut g);
+        let mut m =
+            AcousticModel::from_qam_scheme(&qam, ExecMode::Quant, QuantScheme::PerMatrixU8)
+                .unwrap();
+        assert_eq!(m.scheme_name(), "per-matrix-u8");
+        m.requantize_scheme(QuantScheme::PerChannelI4);
+        assert_eq!(m.scheme_name(), "per-channel-i4");
+        for l in &m.layers {
+            let Linear::Quant(q) = &l.wx else { panic!() };
+            assert_eq!(q.packed.as_ref().unwrap().bits, 4);
+        }
+        let mut st = m.new_state(1);
+        let x = g.vec_normal(6, 1.0);
+        let mut out = vec![0f32; 7];
+        m.step(&x, &mut st, &mut out);
+        let s: f32 = out.iter().map(|v| v.exp()).sum();
+        assert!((s - 1.0).abs() < 1e-4);
+        m.requantize_scheme(QuantScheme::PerChannelU8);
+        assert_eq!(m.scheme_name(), "per-channel-u8");
+        let Linear::Quant(q) = &m.layers[0].wx else { panic!() };
+        assert_eq!(q.packed.as_ref().unwrap().bits, 8);
     }
 
     #[test]

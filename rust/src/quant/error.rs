@@ -6,7 +6,7 @@
 //! for the consistent and the naive scheme, plus the granularity sweep.
 
 use crate::quant::qmatrix::{Granularity, QMatrix};
-use crate::quant::scheme::{NaiveQuantParams, QuantParams};
+use crate::quant::scheme::{NaiveQuantParams, QuantParams, QuantScheme};
 
 /// First/second moments of the quantization error `recover(quantize(x)) − x`.
 #[derive(Clone, Copy, Debug)]
@@ -55,28 +55,40 @@ pub fn variance_ratio(v: &[f32]) -> (f64, f64) {
 }
 
 /// RMS weight-matrix reconstruction error per granularity (E3).
+///
+/// The per-row entry is built through the real [`QuantScheme::PerChannelU8`]
+/// serving constructor (not an ad-hoc per-row split), so the sweep measures
+/// exactly the matrix `--isq per-channel-u8` would execute; the trailing
+/// per-channel-i4 row prices the 4-bit weight grid the same way.
 pub fn granularity_sweep(w: &[f32], in_dim: usize, out_dim: usize) -> Vec<(String, f64, usize)> {
-    let grans = [
-        ("per-tensor(matrix)".to_string(), Granularity::PerMatrix),
-        ("per-row".to_string(), Granularity::PerRow),
-        ("block-64".to_string(), Granularity::SubBlock { size: 64 }),
-        ("block-16".to_string(), Granularity::SubBlock { size: 16 }),
-    ];
-    grans
-        .into_iter()
-        .map(|(name, g)| {
-            let m = QMatrix::from_f32_math_layout(w, in_dim, out_dim, g);
-            let r = m.recover_math_layout();
-            let rms = (w
-                .iter()
-                .zip(&r)
-                .map(|(a, b)| ((a - b) as f64).powi(2))
-                .sum::<f64>()
-                / w.len() as f64)
-                .sqrt();
-            (name, rms, m.storage_bytes())
-        })
-        .collect()
+    let rms_of = |m: &QMatrix| {
+        let r = m.recover_math_layout();
+        (w.iter().zip(&r).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>() / w.len() as f64)
+            .sqrt()
+    };
+    let mut rows = Vec::with_capacity(5);
+    for (name, g) in [
+        ("per-tensor(matrix)", Granularity::PerMatrix),
+        ("per-row", Granularity::PerRow),
+        ("block-64", Granularity::SubBlock { size: 64 }),
+        ("block-16", Granularity::SubBlock { size: 16 }),
+    ] {
+        let m = match g {
+            Granularity::PerRow => {
+                QMatrix::from_f32_math_layout_scheme(w, in_dim, out_dim, QuantScheme::PerChannelU8)
+            }
+            g => QMatrix::from_f32_math_layout(w, in_dim, out_dim, g),
+        };
+        rows.push((name.to_string(), rms_of(&m), m.storage_bytes()));
+    }
+    let i4 = QMatrix::from_f32_math_layout_scheme(w, in_dim, out_dim, QuantScheme::PerChannelI4);
+    // The byte-grid `data` is scaffolding for i4 — what serves (and what
+    // storage should price) is the nibble-packed panel mirror.
+    let i4_bytes = i4.packed_bytes()
+        + i4.params.len() * std::mem::size_of::<QuantParams>()
+        + i4.row_sums.len() * 4;
+    rows.push(("per-channel-i4".to_string(), rms_of(&i4), i4_bytes));
+    rows
 }
 
 /// Bias accumulation in a dot product of length `k` (why eq. 2/3 matter):
@@ -136,6 +148,12 @@ mod tests {
         assert!(per_row <= per_matrix * 1.01, "{sweep:?}");
         // storage grows with granularity
         assert!(sweep[1].2 >= sweep[0].2);
+        // the trailing i4 row: coarser grid (more error), packed nibbles
+        // (less storage than the per-row u8 grid)
+        let (ref name, i4_rms, i4_bytes) = sweep[4];
+        assert_eq!(name, "per-channel-i4");
+        assert!(i4_rms > per_row, "{sweep:?}");
+        assert!(i4_bytes < sweep[1].2, "{sweep:?}");
     }
 
     #[test]

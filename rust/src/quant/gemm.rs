@@ -36,6 +36,33 @@
 //!   intrinsics; off by default so tier-1 builds never depend on it)
 //! - `PackedNeonDot` — aarch64 `vdotq_u32` (`dotprod`-detected)
 //!
+//! Each packed rung has an **int4 twin** selected by the matrix, not the
+//! ladder: when the panel mirror is 4-bit (`PackedQMatrix::bits == 4`,
+//! built by the `PerChannelI4` requantization scheme), [`packed_micro`]
+//! routes the same `Kernel` rung to the nibble microkernels
+//! (`packed_dot4_i4_scalar` / `_avx2` / `_neon_dot`), which unpack two
+//! weights per byte with one mask and one shift — no shuffles — and dot
+//! them against the same u8 activations.
+//!
+//! ## Weight granularity (requantization schemes)
+//!
+//! `qgemm*` accepts per-matrix **and** per-row (per-output-channel)
+//! quantized weights.  Per-matrix keeps the seed finish above,
+//! bit-for-bit.  Per-row weights (the `PerChannelU8` / `PerChannelI4`
+//! schemes, see [`crate::quant::QuantScheme`]) use the per-channel finish:
+//! with `a = Σx' + K·zpx` hoisted per input row,
+//!
+//! ```text
+//! full[o] = Σ x'w' + zpx·Σw'[o] + zpw[o]·a   (exact in i64)
+//! y[o]    = (full[o]·(1/qx)) · (1/qw[o])     (two f64 mults, per-row scale)
+//! ```
+//!
+//! The integer part is the same eq. (1) algebra with the zpw terms
+//! regrouped per output row; the float finish multiplies by the
+//! precomputed [`QMatrix::inv_q`] row instead of one hoisted scale.  Both
+//! finishes are single definitions shared by every rung (row-dot and
+//! packed), so the bit-exactness contract below holds per scheme.
+//!
 //! ## Bit-exactness contract
 //!
 //! Every kernel — every packed variant included, at any thread count —
@@ -79,7 +106,7 @@
 use std::sync::OnceLock;
 
 use crate::quant::elementwise::{self, EwKernel};
-use crate::quant::qmatrix::{PackedQMatrix, QMatrix};
+use crate::quant::qmatrix::{Granularity, PackedQMatrix, QMatrix};
 use crate::quant::scheme::QuantParams;
 use crate::util::pool::{forced_gemm_threads, WorkerPool};
 
@@ -209,7 +236,8 @@ impl Kernel {
 }
 
 /// Row-dot kernel used when a packed kernel was selected but the matrix
-/// has no packed mirror (non-PerMatrix granularity never packs).
+/// has no packed mirror (the ablation constructors leave per-row and
+/// sub-block grids unpacked; scheme-built matrices always pack).
 fn demote_packed(k: Kernel) -> Kernel {
     if !k.is_packed() {
         return k;
@@ -442,8 +470,9 @@ impl QActRows {
 ///
 /// `accumulate` adds into `y` instead of overwriting — used by the LSTM
 /// step to fuse `x·Wx + h·Wh` without an intermediate buffer.
-/// Only `Granularity::PerMatrix` weight matrices are accepted here (the
-/// paper's deployment choice); finer granularities go through
+/// `Granularity::PerMatrix` (the paper's deployment choice) and
+/// `Granularity::PerRow` (the per-channel requantization schemes) weight
+/// matrices are accepted here; sub-block granularity goes through
 /// [`qgemm_any_granularity`] (ablation path).
 #[allow(clippy::too_many_arguments)]
 pub fn qgemm(
@@ -458,7 +487,10 @@ pub fn qgemm(
 ) {
     assert_eq!(x.len(), batch * w.in_dim);
     assert_eq!(y.len(), batch * w.out_dim);
-    assert_eq!(w.params.len(), 1, "qgemm requires per-matrix granularity");
+    assert!(
+        matches!(w.granularity, Granularity::PerMatrix | Granularity::PerRow),
+        "qgemm requires per-matrix or per-row granularity"
+    );
     quantize_input(x, batch, w.in_dim, scratch, EwKernel::for_gemm(kernel));
     qgemm_prequantized(batch, w, bias, y, scratch, kernel, accumulate);
 }
@@ -498,7 +530,10 @@ pub fn qgemm_cached(
     assert_eq!(cache.in_dim, w.in_dim, "cache/weight in_dim mismatch");
     assert!(cache.rows >= batch, "cache holds fewer rows than the batch");
     assert_eq!(y.len(), batch * w.out_dim);
-    assert_eq!(w.params.len(), 1, "qgemm requires per-matrix granularity");
+    assert!(
+        matches!(w.granularity, Granularity::PerMatrix | Granularity::PerRow),
+        "qgemm requires per-matrix or per-row granularity"
+    );
     debug_assert!(
         cache.dirty.iter().take(batch).all(|d| !d),
         "qgemm_cached on stale rows: call ensure_batch first"
@@ -538,7 +573,10 @@ pub fn qgemm_lanes_cached(
     assert_eq!(cache.in_dim, w.in_dim, "cache/weight in_dim mismatch");
     assert!(cache.rows >= max_lanes, "cache holds fewer rows than max_lanes");
     assert_eq!(y.len(), max_lanes * w.out_dim);
-    assert_eq!(w.params.len(), 1, "qgemm requires per-matrix granularity");
+    assert!(
+        matches!(w.granularity, Granularity::PerMatrix | Granularity::PerRow),
+        "qgemm requires per-matrix or per-row granularity"
+    );
     debug_assert!(
         lanes.iter().all(|&l| !cache.dirty[l]),
         "qgemm_lanes_cached on stale lanes: call ensure_lanes first"
@@ -627,7 +665,10 @@ pub fn qgemm_lanes(
 ) {
     assert_eq!(x.len(), max_lanes * w.in_dim);
     assert_eq!(y.len(), max_lanes * w.out_dim);
-    assert_eq!(w.params.len(), 1, "qgemm requires per-matrix granularity");
+    assert!(
+        matches!(w.granularity, Granularity::PerMatrix | Granularity::PerRow),
+        "qgemm requires per-matrix or per-row granularity"
+    );
     quantize_input_lanes(x, max_lanes, lanes, w.in_dim, scratch, EwKernel::for_gemm(kernel));
     let QScratch { xq, xrow_sums, xparams, xpad, rowctx } = scratch;
     qgemm_quantized_rows(
@@ -660,13 +701,35 @@ fn qgemm_input_row(
     kernel: Kernel,
     accumulate: bool,
 ) {
-    // Monomorphize the bias/accumulate combination once per input row so
-    // the per-output finish carries no branches (hoisted constants below).
-    match (bias, accumulate) {
-        (Some(b), false) => qgemm_input_row_mono::<true, false>(w, b, xrow, xp, xsum, yrow, kernel),
-        (Some(b), true) => qgemm_input_row_mono::<true, true>(w, b, xrow, xp, xsum, yrow, kernel),
-        (None, false) => qgemm_input_row_mono::<false, false>(w, &[], xrow, xp, xsum, yrow, kernel),
-        (None, true) => qgemm_input_row_mono::<false, true>(w, &[], xrow, xp, xsum, yrow, kernel),
+    // Monomorphize the bias/accumulate/granularity combination once per
+    // input row so the per-output finish carries no branches (hoisted
+    // constants below).
+    let pc = matches!(w.granularity, Granularity::PerRow);
+    match (bias, accumulate, pc) {
+        (Some(b), false, false) => {
+            qgemm_input_row_mono::<true, false, false>(w, b, xrow, xp, xsum, yrow, kernel)
+        }
+        (Some(b), true, false) => {
+            qgemm_input_row_mono::<true, true, false>(w, b, xrow, xp, xsum, yrow, kernel)
+        }
+        (None, false, false) => {
+            qgemm_input_row_mono::<false, false, false>(w, &[], xrow, xp, xsum, yrow, kernel)
+        }
+        (None, true, false) => {
+            qgemm_input_row_mono::<false, true, false>(w, &[], xrow, xp, xsum, yrow, kernel)
+        }
+        (Some(b), false, true) => {
+            qgemm_input_row_mono::<true, false, true>(w, b, xrow, xp, xsum, yrow, kernel)
+        }
+        (Some(b), true, true) => {
+            qgemm_input_row_mono::<true, true, true>(w, b, xrow, xp, xsum, yrow, kernel)
+        }
+        (None, false, true) => {
+            qgemm_input_row_mono::<false, false, true>(w, &[], xrow, xp, xsum, yrow, kernel)
+        }
+        (None, true, true) => {
+            qgemm_input_row_mono::<false, true, true>(w, &[], xrow, xp, xsum, yrow, kernel)
+        }
     }
 }
 
@@ -680,20 +743,50 @@ fn recover_output(raw: i64, row_sum: i32, zpx: i64, base: i64, inv: f64) -> f32 
     (full as f64 * inv) as f32
 }
 
-/// Per-output finish for the row-dot monomorphs.
+/// The per-channel twin of [`recover_output`] — THE single definition of
+/// the per-row-granularity finish, shared by the row-dot and packed-panel
+/// paths.  `a = Σx' + K·zpx` is hoisted per input row; `base` carries the
+/// packed signed-storage compensation `w_offset·Σx'` (0 on the row-dot
+/// path and for unsigned panels).  The integer part is exact in i64; the
+/// float finish is two multiplications — by the input row's `1/qx` and
+/// the output row's precomputed `1/qw[o]` ([`QMatrix::inv_q`]).
 #[inline(always)]
 #[allow(clippy::too_many_arguments)]
-fn finish_output<const HAS_BIAS: bool, const ACC: bool>(
+fn recover_output_pc(
+    raw: i64,
+    row_sum: i32,
+    zpx: i64,
+    a: i64,
+    base: i64,
+    wzp: i64,
+    inv_x: f64,
+    inv_qo: f64,
+) -> f32 {
+    let full = raw + zpx * row_sum as i64 + wzp * a + base;
+    ((full as f64 * inv_x) * inv_qo) as f32
+}
+
+/// Per-output finish for the row-dot monomorphs.  `PC` selects the
+/// per-channel (per-row-granularity) recovery; the unused scalar set for
+/// each arm is zero.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn finish_output<const HAS_BIAS: bool, const ACC: bool, const PC: bool>(
     o: usize,
     raw: i64,
     yrow: &mut [f32],
-    row_sums: &[i32],
+    w: &QMatrix,
     zpx: i64,
     base: i64,
     inv: f64,
+    a: i64,
     bias: &[f32],
 ) {
-    let mut v = recover_output(raw, row_sums[o], zpx, base, inv);
+    let mut v = if PC {
+        recover_output_pc(raw, w.row_sums[o], zpx, a, 0, w.params[o].zp, inv, w.inv_q[o])
+    } else {
+        recover_output(raw, w.row_sums[o], zpx, base, inv)
+    };
     if HAS_BIAS {
         v += bias[o];
     }
@@ -705,7 +798,7 @@ fn finish_output<const HAS_BIAS: bool, const ACC: bool>(
 }
 
 #[allow(clippy::too_many_arguments)]
-fn qgemm_input_row_mono<const HAS_BIAS: bool, const ACC: bool>(
+fn qgemm_input_row_mono<const HAS_BIAS: bool, const ACC: bool, const PC: bool>(
     w: &QMatrix,
     bias: &[f32],
     xrow: &[u8],
@@ -714,13 +807,20 @@ fn qgemm_input_row_mono<const HAS_BIAS: bool, const ACC: bool>(
     yrow: &mut [f32],
     kernel: Kernel,
 ) {
-    let wp = w.params[0];
     let k = w.in_dim;
-    // Per-input-row constants, hoisted once: the recovery scale and every
-    // term of eq. (1) that does not depend on the output row.
-    let inv = 1.0 / (xp.q as f64 * wp.q as f64);
     let zpx = xp.zp;
-    let base = wp.zp * xsum + k as i64 * xp.zp * wp.zp;
+    // Per-input-row constants, hoisted once: the recovery scale(s) and
+    // every eq. (1) term that does not depend on the output row.  The
+    // per-matrix arm hoists the full offset `base` and the fused scale
+    // `inv`; the per-channel arm hoists `a = Σx' + K·zpx` and the input
+    // scale `1/qx` (per-output terms come from `w.params[o]`/`w.inv_q[o]`
+    // inside the finish).
+    let (inv, base, a) = if PC {
+        (1.0 / (xp.q as f64), 0, xsum + k as i64 * zpx)
+    } else {
+        let wp = w.params[0];
+        (1.0 / (xp.q as f64 * wp.q as f64), wp.zp * xsum + k as i64 * zpx * wp.zp, 0)
+    };
     let mut o = 0;
     // 4-row blocked AVX2 path: x is loaded/widened once per 4 rows.
     #[cfg(target_arch = "x86_64")]
@@ -738,14 +838,15 @@ fn qgemm_input_row_mono<const HAS_BIAS: bool, const ACC: bool>(
                 )
             };
             for (d, &raw) in raws.iter().enumerate() {
-                finish_output::<HAS_BIAS, ACC>(
+                finish_output::<HAS_BIAS, ACC, PC>(
                     o + d,
                     raw as i64,
                     yrow,
-                    &w.row_sums,
+                    w,
                     zpx,
                     base,
                     inv,
+                    a,
                     bias,
                 );
             }
@@ -761,7 +862,7 @@ fn qgemm_input_row_mono<const HAS_BIAS: bool, const ACC: bool>(
             Kernel::Avx2 => unsafe { dot_u8_avx2(xrow, wrow) },
             _ => unreachable!("packed/auto kernels are handled before the row loop"),
         } as i64;
-        finish_output::<HAS_BIAS, ACC>(o, raw, yrow, &w.row_sums, zpx, base, inv, bias);
+        finish_output::<HAS_BIAS, ACC, PC>(o, raw, yrow, w, zpx, base, inv, a, bias);
         o += 1;
     }
 }
@@ -771,14 +872,21 @@ fn qgemm_input_row_mono<const HAS_BIAS: bool, const ACC: bool>(
 // ---------------------------------------------------------------------------
 
 /// Per-input-row constants for the packed path, computed once per GEMM
-/// (nothing here is re-derived per output element).  `base` folds the
-/// signed-storage compensation `w_offset·Σx` into the eq. (1) offsets.
+/// (nothing here is re-derived per output element).
+///
+/// Per-matrix rows fold the signed-storage compensation `w_offset·Σx` and
+/// every zpw term into `base`, and `inv` is the fused recovery scale
+/// `1/(qx·qw)` (`a` is unused).  Per-channel rows carry only the storage
+/// compensation in `base`, hoist `a = Σx' + K·zpx` for the per-output
+/// `zpw[o]·a` term, and `inv` is the input scale `1/qx` (the weight-row
+/// scale comes from [`QMatrix::inv_q`] in the finish).
 #[derive(Clone)]
 pub(crate) struct RowCtx {
     row: usize,
     zpx: i64,
     inv: f64,
     base: i64,
+    a: i64,
 }
 
 /// Fill `rowctx` (reused across calls — no allocation in the steady
@@ -791,8 +899,22 @@ fn build_rowctx(
     w: &QMatrix,
     pk: &PackedQMatrix,
 ) {
-    let wp = w.params[0];
     rowctx.clear();
+    if matches!(w.granularity, Granularity::PerRow) {
+        rowctx.extend(rows.map(|i| {
+            let xp = &params[i];
+            let xsum = sums[i] as i64;
+            RowCtx {
+                row: i,
+                zpx: xp.zp,
+                inv: 1.0 / (xp.q as f64),
+                base: pk.w_offset() * xsum,
+                a: xsum + w.in_dim as i64 * xp.zp,
+            }
+        }));
+        return;
+    }
+    let wp = w.params[0];
     rowctx.extend(rows.map(|i| {
         let xp = &params[i];
         let xsum = sums[i] as i64;
@@ -801,6 +923,7 @@ fn build_rowctx(
             zpx: xp.zp,
             inv: 1.0 / (xp.q as f64 * wp.q as f64),
             base: (pk.w_offset() + wp.zp) * xsum + w.in_dim as i64 * xp.zp * wp.zp,
+            a: 0,
         }
     }));
 }
@@ -848,7 +971,7 @@ struct PackedCtx<'a> {
 /// and every live output `o` of panels `p0..p1`.  Distinct panel ranges
 /// write disjoint `o` spans, so concurrent calls over a partition of the
 /// panel space are race-free.
-unsafe fn packed_panel_range<const HAS_BIAS: bool, const ACC: bool>(
+unsafe fn packed_panel_range<const HAS_BIAS: bool, const ACC: bool, const PC: bool>(
     ctx: &PackedCtx<'_>,
     y: SendPtr,
     p0: usize,
@@ -867,8 +990,20 @@ unsafe fn packed_panel_range<const HAS_BIAS: bool, const ACC: bool>(
             let ybase = y.0.add(rc.row * out_dim + o0);
             for (d, &raw) in raws.iter().take(live).enumerate() {
                 let o = o0 + d;
-                let mut v =
-                    recover_output(raw as i64, ctx.w.row_sums[o], rc.zpx, rc.base, rc.inv);
+                let mut v = if PC {
+                    recover_output_pc(
+                        raw as i64,
+                        ctx.w.row_sums[o],
+                        rc.zpx,
+                        rc.a,
+                        rc.base,
+                        ctx.w.params[o].zp,
+                        rc.inv,
+                        ctx.w.inv_q[o],
+                    )
+                } else {
+                    recover_output(raw as i64, ctx.w.row_sums[o], rc.zpx, rc.base, rc.inv)
+                };
                 if HAS_BIAS {
                     v += ctx.bias[o];
                 }
@@ -916,6 +1051,21 @@ fn available_cpus() -> usize {
 /// kernels pass through [`Kernel::checked`] at the `qgemm*` entry points —
 /// which is what makes the `unsafe` calls sound.
 fn packed_micro(kernel: Kernel, pk: &PackedQMatrix) -> fn(&[u8], &[u8]) -> [i32; 4] {
+    if pk.bits == 4 {
+        // Int4 twins of the same ladder rungs (nibble-unpacking variants).
+        // The VNNI rung maps onto the AVX2 int4 kernel: there is no
+        // unsigned-nibble vpdpbusd shape, and every AVX-512 CPU has AVX2,
+        // so the dispatch stays sound under the same detection.
+        return match kernel {
+            #[cfg(target_arch = "x86_64")]
+            Kernel::PackedAvx2 => |x, p| unsafe { packed_dot4_i4_avx2(x, p) },
+            #[cfg(all(target_arch = "x86_64", feature = "vnni"))]
+            Kernel::PackedVnni => |x, p| unsafe { packed_dot4_i4_avx2(x, p) },
+            #[cfg(target_arch = "aarch64")]
+            Kernel::PackedNeonDot => |x, p| unsafe { packed_dot4_i4_neon_dot(x, p) },
+            _ => packed_dot4_i4_scalar,
+        };
+    }
     match kernel {
         #[cfg(target_arch = "x86_64")]
         Kernel::PackedAvx2 => |x, p| unsafe { packed_dot4_avx2(x, p) },
@@ -952,7 +1102,7 @@ fn qgemm_packed(
     if rowctx.is_empty() || w.out_dim == 0 {
         return;
     }
-    debug_assert_eq!(pk.signed, cfg!(target_arch = "x86_64"));
+    debug_assert_eq!(pk.signed, pk.bits == 8 && cfg!(target_arch = "x86_64"));
     debug_assert_eq!(pk.out_dim, w.out_dim);
     debug_assert_eq!(pk.in_dim, w.in_dim);
     let ctx = PackedCtx {
@@ -964,6 +1114,7 @@ fn qgemm_packed(
         micro: packed_micro(kernel, pk),
     };
     let has_bias = bias.is_some();
+    let pc = matches!(w.granularity, Granularity::PerRow);
     let panels = pk.panels;
     let macs = rowctx.len() * w.out_dim * w.in_dim;
     let nthreads = packed_threads(macs, panels);
@@ -973,11 +1124,17 @@ fn qgemm_packed(
     // which executor runs a range cannot change its outputs (bit-identical
     // at any thread count).
     let run = |p0: usize, p1: usize| unsafe {
-        match (has_bias, accumulate) {
-            (true, true) => packed_panel_range::<true, true>(&ctx, yptr, p0, p1),
-            (true, false) => packed_panel_range::<true, false>(&ctx, yptr, p0, p1),
-            (false, true) => packed_panel_range::<false, true>(&ctx, yptr, p0, p1),
-            (false, false) => packed_panel_range::<false, false>(&ctx, yptr, p0, p1),
+        match (has_bias, accumulate, pc) {
+            (true, true, false) => packed_panel_range::<true, true, false>(&ctx, yptr, p0, p1),
+            (true, false, false) => packed_panel_range::<true, false, false>(&ctx, yptr, p0, p1),
+            (false, true, false) => packed_panel_range::<false, true, false>(&ctx, yptr, p0, p1),
+            (false, false, false) => {
+                packed_panel_range::<false, false, false>(&ctx, yptr, p0, p1)
+            }
+            (true, true, true) => packed_panel_range::<true, true, true>(&ctx, yptr, p0, p1),
+            (true, false, true) => packed_panel_range::<true, false, true>(&ctx, yptr, p0, p1),
+            (false, true, true) => packed_panel_range::<false, true, true>(&ctx, yptr, p0, p1),
+            (false, false, true) => packed_panel_range::<false, false, true>(&ctx, yptr, p0, p1),
         }
     };
     if nthreads <= 1 {
@@ -1233,6 +1390,34 @@ fn packed_dot4_scalar_impl<const SIGNED: bool>(xpad: &[u8], panel: &[u8]) -> [i3
     acc
 }
 
+/// Packed-panel scalar microkernel for **int4** panels (`bits == 4`, the
+/// nibble layout documented on [`PackedQMatrix`]) — the portable reference
+/// the int4 SIMD microkernels are property-tested against.  Each 16-byte
+/// panel-row chunk covers 32 K-values: low nibbles dot the first 16 input
+/// bytes of the value block, high nibbles the next 16.  Nibbles are
+/// unsigned on every architecture, so no compensation term is needed
+/// beyond the caller's finish.
+pub fn packed_dot4_i4_scalar(xpad: &[u8], panel: &[u8]) -> [i32; 4] {
+    const NR: usize = PackedQMatrix::NR;
+    const C: usize = PackedQMatrix::K_CHUNK;
+    const CV: usize = PackedQMatrix::K_CHUNK_I4;
+    debug_assert_eq!(panel.len() * 2, xpad.len() * NR);
+    debug_assert_eq!(xpad.len() % CV, 0);
+    let mut acc = [0i32; NR];
+    for (kb, xchunk) in xpad.chunks_exact(CV).enumerate() {
+        let block = &panel[kb * NR * C..(kb + 1) * NR * C];
+        for (r, wrow) in block.chunks_exact(C).enumerate() {
+            let mut s = 0i32;
+            for (j, &b) in wrow.iter().enumerate() {
+                s += xchunk[j] as i32 * (b & 0x0F) as i32;
+                s += xchunk[C + j] as i32 * (b >> 4) as i32;
+            }
+            acc[r] += s;
+        }
+    }
+    acc
+}
+
 /// Packed-panel AVX2 microkernel: per 64-byte block the 16 input bytes are
 /// loaded and widened **once** (`cvtepu8`) and madd'ed against the four
 /// interleaved signed weight rows (`cvtepi8` + `madd_epi16`).  Exact:
@@ -1356,6 +1541,90 @@ pub unsafe fn packed_dot4_neon_dot(xpad: &[u8], panel: &[u8]) -> [i32; 4] {
             *a = vdotq_u32(*a, xv, wv);
         }
         kb += 16;
+    }
+    let mut out = [0i32; 4];
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = vaddvq_u32(acc[r]) as i32;
+    }
+    out
+}
+
+/// Packed-panel AVX2 microkernel for **int4** panels: each 16-byte load
+/// yields 32 weights — `and 0x0F` for the low-nibble half, `srli 4 + and`
+/// for the high half (no shuffles) — madd'ed against the two matching
+/// 16-byte input chunks.  Exact: x ≤ 255 and w ≤ 15 keep every product in
+/// i16×i16→i32 madd range with large margin.  Also serves the VNNI rung
+/// (no unsigned-nibble `vpdpbusd` shape exists; AVX-512 implies AVX2).
+///
+/// # Safety
+/// Caller must ensure AVX2 is available.  Int4 packed invariants:
+/// `2·panel.len() == 4·xpad.len()` and `xpad.len() % 32 == 0`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn packed_dot4_i4_avx2(xpad: &[u8], panel: &[u8]) -> [i32; 4] {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(panel.len() * 2, xpad.len() * 4);
+    debug_assert_eq!(xpad.len() % 32, 0);
+    let kp = xpad.len();
+    let mask = _mm_set1_epi8(0x0F);
+    let mut acc = [_mm256_setzero_si256(); 4];
+    let mut kb = 0;
+    while kb < kp {
+        let xlo =
+            _mm256_cvtepu8_epi16(_mm_loadu_si128(xpad.as_ptr().add(kb) as *const __m128i));
+        let xhi = _mm256_cvtepu8_epi16(_mm_loadu_si128(
+            xpad.as_ptr().add(kb + 16) as *const __m128i
+        ));
+        let bp = panel.as_ptr().add(kb / 2 * 4);
+        for (r, a) in acc.iter_mut().enumerate() {
+            let wb = _mm_loadu_si128(bp.add(r * 16) as *const __m128i);
+            let wlo = _mm256_cvtepu8_epi16(_mm_and_si128(wb, mask));
+            let whi = _mm256_cvtepu8_epi16(_mm_and_si128(_mm_srli_epi16(wb, 4), mask));
+            *a = _mm256_add_epi32(*a, _mm256_madd_epi16(xlo, wlo));
+            *a = _mm256_add_epi32(*a, _mm256_madd_epi16(xhi, whi));
+        }
+        kb += 32;
+    }
+    let mut out = [0i32; 4];
+    for (r, &a) in acc.iter().enumerate() {
+        let hi = _mm256_extracti128_si256(a, 1);
+        let lo = _mm256_castsi256_si128(a);
+        let s = _mm_add_epi32(hi, lo);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_01_10_11));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b00_00_00_01));
+        out[r] = _mm_cvtsi128_si32(s);
+    }
+    out
+}
+
+/// Packed-panel NEON `dot` microkernel for **int4** panels: one 16-byte
+/// load per panel row per 32-value block, nibbles unpacked with
+/// `vandq_u8` / `vshrq_n_u8` and accumulated with two `vdotq_u32` (exact:
+/// all operands non-negative and well inside u32/i32 range).
+///
+/// # Safety
+/// Caller must ensure the `dotprod` feature is available.  Int4 packed
+/// invariants as in [`packed_dot4_i4_avx2`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "dotprod")]
+pub unsafe fn packed_dot4_i4_neon_dot(xpad: &[u8], panel: &[u8]) -> [i32; 4] {
+    use std::arch::aarch64::*;
+    debug_assert_eq!(panel.len() * 2, xpad.len() * 4);
+    debug_assert_eq!(xpad.len() % 32, 0);
+    let kp = xpad.len();
+    let mask = vdupq_n_u8(0x0F);
+    let mut acc = [vdupq_n_u32(0); 4];
+    let mut kb = 0;
+    while kb < kp {
+        let xlo = vld1q_u8(xpad.as_ptr().add(kb));
+        let xhi = vld1q_u8(xpad.as_ptr().add(kb + 16));
+        let bp = panel.as_ptr().add(kb / 2 * 4);
+        for (r, a) in acc.iter_mut().enumerate() {
+            let wb = vld1q_u8(bp.add(r * 16));
+            *a = vdotq_u32(*a, xlo, vandq_u8(wb, mask));
+            *a = vdotq_u32(*a, xhi, vshrq_n_u8(wb, 4));
+        }
+        kb += 32;
     }
     let mut out = [0i32; 4];
     for (r, o) in out.iter_mut().enumerate() {
@@ -1553,8 +1822,11 @@ pub unsafe fn dot_f32_fma(a: &[f32], b: &[f32]) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::Granularity;
+    use crate::quant::{Granularity, QuantScheme};
     use crate::util::prop::{forall, Gen};
+
+    const SCHEMES: [QuantScheme; 3] =
+        [QuantScheme::PerMatrixU8, QuantScheme::PerChannelU8, QuantScheme::PerChannelI4];
 
     /// Every kernel this CPU/build can actually run (the full ladder the
     /// CI kernel-matrix forces one rung at a time).
@@ -1605,6 +1877,9 @@ mod tests {
 
     #[test]
     fn qgemm_matches_reference_all_kernels() {
+        // The reference recovers the *quantized* grid in f64, so the
+        // tolerance is about integer+finish rounding, not quantization
+        // error — it holds for the int4 scheme too.
         forall("qgemm vs ref", 40, 0xD07, |g: &mut Gen| {
             let batch = g.usize_in(1, 6);
             let in_dim = g.usize_in(1, 70);
@@ -1612,23 +1887,26 @@ mod tests {
             let x = g.vec_normal(batch * in_dim, 1.0);
             let wf = g.vec_normal(in_dim * out_dim, 0.5);
             let bias = g.vec_normal(out_dim, 0.2);
-            let w = QMatrix::from_f32_math_layout(&wf, in_dim, out_dim, Granularity::PerMatrix);
-            let want = reference(&x, batch, &w, Some(&bias));
-            let mut scratch = QScratch::default();
-            for kern in available_kernels() {
-                let mut y = vec![0f32; batch * out_dim];
-                qgemm(&x, batch, &w, Some(&bias), &mut y, &mut scratch, kern, false);
-                assert_close(&y, &want, 1e-4);
+            for scheme in SCHEMES {
+                let w = QMatrix::from_f32_math_layout_scheme(&wf, in_dim, out_dim, scheme);
+                let want = reference(&x, batch, &w, Some(&bias));
+                let mut scratch = QScratch::default();
+                for kern in available_kernels() {
+                    let mut y = vec![0f32; batch * out_dim];
+                    qgemm(&x, batch, &w, Some(&bias), &mut y, &mut scratch, kern, false);
+                    assert_close(&y, &want, 1e-4);
+                }
             }
         });
     }
 
     #[test]
     fn all_kernels_bit_identical_k_sweep() {
-        // Satellite contract: every rung of the ladder — packed variants
-        // included — must be bit-identical to Scalar for every K in
-        // 0..=130 (crossing every chunk/unroll tail boundary) and for
-        // out_dims leaving 1..=3 live rows in the last packed panel.
+        // Satellite contract: every (scheme × rung) cell of the ladder —
+        // packed variants included — must be bit-identical to Scalar for
+        // every K in 0..=130 (crossing every chunk/unroll/nibble-block
+        // tail boundary) and for out_dims leaving 1..=3 live rows in the
+        // last packed panel.
         let kernels = available_kernels();
         let mut g = Gen::new(0x5EED);
         for k in 0..=130usize {
@@ -1637,18 +1915,19 @@ mod tests {
                 let x = g.vec_normal(batch * k, 1.0);
                 let wf = g.vec_normal(k * out_dim, 0.5);
                 let bias = g.vec_normal(out_dim, 0.2);
-                let w =
-                    QMatrix::from_f32_math_layout(&wf, k, out_dim, Granularity::PerMatrix);
-                let mut s = QScratch::default();
-                let mut want = vec![0f32; batch * out_dim];
-                qgemm(&x, batch, &w, Some(&bias), &mut want, &mut s, Kernel::Scalar, false);
-                for &kern in &kernels {
-                    let mut y = vec![0f32; batch * out_dim];
-                    qgemm(&x, batch, &w, Some(&bias), &mut y, &mut s, kern, false);
-                    assert!(
-                        y == want,
-                        "kernel {kern:?} k={k} out={out_dim}: not bit-identical"
-                    );
+                for scheme in SCHEMES {
+                    let w = QMatrix::from_f32_math_layout_scheme(&wf, k, out_dim, scheme);
+                    let mut s = QScratch::default();
+                    let mut want = vec![0f32; batch * out_dim];
+                    qgemm(&x, batch, &w, Some(&bias), &mut want, &mut s, Kernel::Scalar, false);
+                    for &kern in &kernels {
+                        let mut y = vec![0f32; batch * out_dim];
+                        qgemm(&x, batch, &w, Some(&bias), &mut y, &mut s, kern, false);
+                        assert!(
+                            y == want,
+                            "{scheme:?} kernel {kern:?} k={k} out={out_dim}: not bit-identical"
+                        );
+                    }
                 }
             }
         }
@@ -1705,6 +1984,48 @@ mod tests {
     }
 
     #[test]
+    fn i4_packed_microkernels_match_scalar_dot() {
+        // Int4 microkernel exactness: the nibble-unpacking scalar kernel
+        // reconstructs the one-byte-grid reference dot for every panel
+        // (K tails crossing the 32-value block boundary and remainder
+        // rows included), and every int4 SIMD kernel equals the int4
+        // scalar kernel bit-for-bit.
+        forall("i4 packed micro", 60, 0x14D0, |g: &mut Gen| {
+            let k = g.usize_in(0, 130);
+            let out_dim = g.usize_in(1, 9);
+            let wf = g.vec_normal(k * out_dim, 0.5);
+            let w = QMatrix::from_f32_math_layout_scheme(
+                &wf, k, out_dim, QuantScheme::PerChannelI4,
+            );
+            let pk = w.packed.as_deref().expect("i4 scheme packs");
+            assert_eq!(pk.bits, 4);
+            let x: Vec<u8> = (0..k).map(|_| g.usize_in(0, 255) as u8).collect();
+            let mut xpad = vec![0u8; pk.k_padded];
+            xpad[..k].copy_from_slice(&x);
+            for p in 0..pk.panels {
+                let panel = pk.panel(p);
+                let scalar = packed_dot4_i4_scalar(&xpad, panel);
+                for (r, &got) in scalar.iter().enumerate() {
+                    let o = p * PackedQMatrix::NR + r;
+                    if o >= out_dim {
+                        continue;
+                    }
+                    let want = dot_u8_scalar(&x, &w.data[o * k..(o + 1) * k]);
+                    assert_eq!(got, want, "panel {p} row {r} (k={k})");
+                }
+                #[cfg(target_arch = "x86_64")]
+                if avx2_available() {
+                    assert_eq!(unsafe { packed_dot4_i4_avx2(&xpad, panel) }, scalar);
+                }
+                #[cfg(target_arch = "aarch64")]
+                if neon_dot_available() {
+                    assert_eq!(unsafe { packed_dot4_i4_neon_dot(&xpad, panel) }, scalar);
+                }
+            }
+        });
+    }
+
+    #[test]
     fn packed_parallel_matches_serial_bitwise() {
         // 4·512·2048 = 4M MACs — 16× the pool's panel-parallel threshold,
         // with clear margin so a threshold tweak can't silently demote
@@ -1718,16 +2039,77 @@ mod tests {
         );
         let x = g.vec_normal(batch * k, 1.0);
         let wf = g.vec_normal(k * out, 0.3);
-        let w = QMatrix::from_f32_math_layout(&wf, k, out, Granularity::PerMatrix);
         let bias = g.vec_normal(out, 0.2);
-        let mut s = QScratch::default();
-        let mut y_scalar = vec![0f32; batch * out];
-        qgemm(&x, batch, &w, Some(&bias), &mut y_scalar, &mut s, Kernel::Scalar, false);
-        for kern in available_kernels() {
-            let mut y = vec![0f32; batch * out];
-            qgemm(&x, batch, &w, Some(&bias), &mut y, &mut s, kern, false);
-            assert!(y == y_scalar, "kernel {kern:?} diverged under panel parallelism");
+        for scheme in SCHEMES {
+            let w = QMatrix::from_f32_math_layout_scheme(&wf, k, out, scheme);
+            let mut s = QScratch::default();
+            let mut y_scalar = vec![0f32; batch * out];
+            qgemm(&x, batch, &w, Some(&bias), &mut y_scalar, &mut s, Kernel::Scalar, false);
+            for kern in available_kernels() {
+                let mut y = vec![0f32; batch * out];
+                qgemm(&x, batch, &w, Some(&bias), &mut y, &mut s, kern, false);
+                assert!(
+                    y == y_scalar,
+                    "{scheme:?} kernel {kern:?} diverged under panel parallelism"
+                );
+            }
         }
+    }
+
+    #[test]
+    fn schemes_bit_identical_lanes_and_cache() {
+        // Scheme × rung coverage for the serving entry points: lane-masked
+        // GEMMs equal solo batch-1 runs of the same rows, and the
+        // activation cache is numerically invisible — for every
+        // requantization scheme.
+        forall("scheme lanes+cache", 20, 0x5CA1E, |g: &mut Gen| {
+            let max_lanes = g.usize_in(1, 6);
+            let in_dim = g.usize_in(1, 60);
+            let out_dim = g.usize_in(1, 30);
+            let x = g.vec_normal(max_lanes * in_dim, 1.0);
+            let wf = g.vec_normal(in_dim * out_dim, 0.5);
+            let bias = g.vec_normal(out_dim, 0.2);
+            let lanes: Vec<usize> = (0..max_lanes).filter(|_| g.bool()).collect();
+            let lanes = if lanes.is_empty() { vec![0] } else { lanes };
+            for scheme in SCHEMES {
+                let w = QMatrix::from_f32_math_layout_scheme(&wf, in_dim, out_dim, scheme);
+                for kern in available_kernels() {
+                    let mut s = QScratch::default();
+                    let mut y = vec![0f32; max_lanes * out_dim];
+                    qgemm_lanes(
+                        &x, max_lanes, &lanes, &w, Some(&bias), &mut y, &mut s, kern, false,
+                    );
+                    // lane outputs equal solo batch-1 runs
+                    for &lane in &lanes {
+                        let mut y1 = vec![0f32; out_dim];
+                        qgemm(
+                            &x[lane * in_dim..(lane + 1) * in_dim],
+                            1,
+                            &w,
+                            Some(&bias),
+                            &mut y1,
+                            &mut QScratch::default(),
+                            kern,
+                            false,
+                        );
+                        assert!(
+                            y[lane * out_dim..(lane + 1) * out_dim] == y1[..],
+                            "{scheme:?} kernel {kern:?} lane {lane}: not bit-identical"
+                        );
+                    }
+                    // cached batch path equals uncached
+                    let mut cache = QActRows::sized(max_lanes, in_dim);
+                    cache.ensure_batch(&x, max_lanes, in_dim, EwKernel::for_gemm(kern));
+                    let mut want = vec![0f32; max_lanes * out_dim];
+                    let mut got = vec![0f32; max_lanes * out_dim];
+                    qgemm(&x, max_lanes, &w, Some(&bias), &mut want, &mut s, kern, false);
+                    qgemm_cached(
+                        &cache, max_lanes, &w, Some(&bias), &mut got, &mut s, kern, false,
+                    );
+                    assert!(got == want, "{scheme:?} kernel {kern:?} cached != uncached");
+                }
+            }
+        });
     }
 
     #[test]

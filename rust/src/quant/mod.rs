@@ -26,4 +26,4 @@ pub mod scheme;
 
 pub use elementwise::EwKernel;
 pub use qmatrix::{Granularity, PackedQMatrix, QMatrix};
-pub use scheme::{QuantParams, SCALE};
+pub use scheme::{QuantParams, QuantScheme, SCALE, SCALE_I4};

@@ -18,7 +18,7 @@
 //! also implements per-row (per output neuron) and fixed sub-blocks for the
 //! E3 ablation.
 
-use crate::quant::scheme::QuantParams;
+use crate::quant::scheme::{QuantParams, QuantScheme, SCALE};
 
 /// Quantization granularity for a weight matrix.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,13 +41,29 @@ pub struct QMatrix {
     pub data: Vec<u8>,
     /// Quant params; length depends on granularity (1, out_dim, or #blocks).
     pub params: Vec<QuantParams>,
+    /// `1.0 / params[i].q` precomputed in f64 — the per-channel GEMM
+    /// finish multiplies by this per output row instead of dividing.
+    pub inv_q: Vec<f64>,
     /// Per output row: Σ_k V'[o, k] — precomputed for the eq. (1) offset
-    /// algebra in the integer GEMM (only valid for PerMatrix).
+    /// algebra in the integer GEMM.
     pub row_sums: Vec<i32>,
-    /// Panel-packed serving mirror (PerMatrix only), built once at
-    /// construction so the hot path never repacks.  `None` for the finer
-    /// ablation granularities, which run the slow path anyway.
+    /// Panel-packed serving mirror, built once at construction so the hot
+    /// path never repacks.  Present for the serving schemes (PerMatrix,
+    /// and per-row when built through [`QMatrix::from_f32_transposed_scheme`]);
+    /// `None` for the ablation-only granularities, which run the slow
+    /// path anyway.
     pub packed: Option<Box<PackedQMatrix>>,
+}
+
+/// Which packed mirror a constructor should build.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum PackMode {
+    /// No packed mirror (ablation granularities; row-dot fallback only).
+    None,
+    /// One byte per weight (8-bit grids).
+    U8,
+    /// Two 4-bit weights per byte (int4 grids).
+    I4,
 }
 
 /// Packed-panel mirror of a [`QMatrix`] for the register-blocked GEMM
@@ -77,12 +93,25 @@ pub struct QMatrix {
 ///
 /// # Signedness
 ///
-/// On x86_64, `w' = w − 128` stored as i8 (`signed == true`): both
-/// `madd_epi16` (cvtepi8 widening) and `vpdpbusd` (u8×s8) consume a signed
-/// B operand.  The GEMM adds the exact integer compensation `128·Σx` back
-/// (see `quant::gemm`), so packed results are **bit-identical** to the u8
-/// reference kernels.  On other architectures `w' = w` is kept unsigned
-/// (`signed == false`, compensation 0) — the NEON `vdot` kernel is u8×u8.
+/// On x86_64, 8-bit grids store `w' = w − 128` as i8 (`signed == true`):
+/// both `madd_epi16` (cvtepi8 widening) and `vpdpbusd` (u8×s8) consume a
+/// signed B operand.  The GEMM adds the exact integer compensation
+/// `128·Σx` back (see `quant::gemm`), so packed results are
+/// **bit-identical** to the u8 reference kernels.  On other architectures
+/// `w' = w` is kept unsigned (`signed == false`, compensation 0) — the
+/// NEON `vdot` kernel is u8×u8.  Int4 grids are unsigned on every
+/// architecture: nibbles already fit the u8×u8 paths with headroom.
+///
+/// # Int4 nibble layout (`bits == 4`)
+///
+/// K is padded to a multiple of `2·K_CHUNK = 32`, and each panel row
+/// stores one 32-value K-block as 16 bytes: byte `j` holds
+/// `w'[kb + j]` in its **low** nibble and `w'[kb + 16 + j]` in its
+/// **high** nibble.  Unpacking is therefore shuffle-free SIMD:
+/// `b & 0x0F` yields values `kb..kb+16` and `b >> 4` yields
+/// `kb+16..kb+32`, each aligned with a contiguous 16-byte slice of the
+/// padded input row.  Block and panel successions stay contiguous, so
+/// the mirror still streams as one pass at half the bytes of u8.
 ///
 /// Zero padding (K tail and panel-remainder rows) is exact: padded input
 /// bytes are zero, so padded products contribute nothing, and panel
@@ -91,13 +120,16 @@ pub struct QMatrix {
 pub struct PackedQMatrix {
     pub out_dim: usize,
     pub in_dim: usize,
-    /// `in_dim` rounded up to a multiple of [`Self::K_CHUNK`].
+    /// `in_dim` rounded up to a multiple of [`Self::K_CHUNK`] (8-bit) or
+    /// `2·K_CHUNK` (4-bit).
     pub k_padded: usize,
     /// Number of NR-row panels (`out_dim.div_ceil(NR)`).
     pub panels: usize,
-    /// true ⇒ bytes hold `(w − 128)` as i8; false ⇒ the raw u8 grid.
+    /// true ⇒ bytes hold `(w − 128)` as i8; false ⇒ the raw unsigned grid.
     pub signed: bool,
-    /// `panels · NR · k_padded` bytes in the layout above.
+    /// Weight width: 8 (one byte per value) or 4 (two values per byte).
+    pub bits: u32,
+    /// `panels · NR · k_padded · bits / 8` bytes in the layout above.
     pub data: Vec<u8>,
 }
 
@@ -106,6 +138,8 @@ impl PackedQMatrix {
     pub const NR: usize = 4;
     /// K-interleave unit in bytes (one 128-bit lane of input).
     pub const K_CHUNK: usize = 16;
+    /// K-interleave unit in *values* for 4-bit panels (32 values = 16 bytes).
+    pub const K_CHUNK_I4: usize = 2 * Self::K_CHUNK;
 
     /// Pack a PerMatrix-quantized matrix (one-time conversion).
     pub fn pack(m: &QMatrix) -> Self {
@@ -134,7 +168,41 @@ impl PackedQMatrix {
                 }
             }
         }
-        PackedQMatrix { out_dim, in_dim, k_padded, panels, signed, data }
+        PackedQMatrix { out_dim, in_dim, k_padded, panels, signed, bits: 8, data }
+    }
+
+    /// Pack an int4 matrix (values on `[0, 15]`, one per byte in
+    /// [`QMatrix::data`]) into the nibble layout documented above.
+    pub fn pack_i4(m: &QMatrix) -> Self {
+        let (out_dim, in_dim) = (m.out_dim, m.in_dim);
+        let k_padded = in_dim.div_ceil(Self::K_CHUNK_I4) * Self::K_CHUNK_I4;
+        let panels = out_dim.div_ceil(Self::NR);
+        let mut data = vec![0u8; panels * Self::NR * k_padded / 2];
+        for p in 0..panels {
+            let base = p * Self::NR * k_padded / 2;
+            for kb in (0..k_padded).step_by(Self::K_CHUNK_I4) {
+                for r in 0..Self::NR {
+                    let o = p * Self::NR + r;
+                    if o >= out_dim {
+                        continue; // remainder rows stay zero
+                    }
+                    let dst = base + (kb / 2) * Self::NR + r * Self::K_CHUNK;
+                    for j in 0..Self::K_CHUNK {
+                        let at = |k: usize| -> u8 {
+                            if k < in_dim {
+                                let w = m.data[o * in_dim + k];
+                                debug_assert!(w <= 15, "int4 grid value {w} out of range");
+                                w
+                            } else {
+                                0 // K tail stays zero
+                            }
+                        };
+                        data[dst + j] = at(kb + j) | (at(kb + Self::K_CHUNK + j) << 4);
+                    }
+                }
+            }
+        }
+        PackedQMatrix { out_dim, in_dim, k_padded, panels, signed: false, bits: 4, data }
     }
 
     /// The integer the GEMM must add back per output as `w_offset · Σx`
@@ -148,10 +216,16 @@ impl PackedQMatrix {
         }
     }
 
-    /// One panel's bytes (`NR · k_padded`).
+    /// One panel's byte stride (`NR · k_padded` for u8, half that for i4).
+    #[inline]
+    pub fn panel_stride(&self) -> usize {
+        Self::NR * self.k_padded * self.bits as usize / 8
+    }
+
+    /// One panel's bytes.
     #[inline]
     pub fn panel(&self, p: usize) -> &[u8] {
-        let stride = Self::NR * self.k_padded;
+        let stride = self.panel_stride();
         &self.data[p * stride..(p + 1) * stride]
     }
 
@@ -159,6 +233,18 @@ impl PackedQMatrix {
     pub fn storage_bytes(&self) -> usize {
         self.data.len()
     }
+}
+
+/// Transpose a math-layout `[in, out]` matrix into `[out, in]`.
+fn transpose_math(w: &[f32], in_dim: usize, out_dim: usize) -> Vec<f32> {
+    assert_eq!(w.len(), in_dim * out_dim);
+    let mut t = vec![0f32; w.len()];
+    for i in 0..in_dim {
+        for o in 0..out_dim {
+            t[o * in_dim + i] = w[i * out_dim + o];
+        }
+    }
+    t
 }
 
 impl QMatrix {
@@ -170,14 +256,38 @@ impl QMatrix {
         out_dim: usize,
         granularity: Granularity,
     ) -> Self {
-        assert_eq!(w.len(), in_dim * out_dim);
-        let mut t = vec![0f32; w.len()];
-        for i in 0..in_dim {
-            for o in 0..out_dim {
-                t[o * in_dim + i] = w[i * out_dim + o];
-            }
-        }
+        let t = transpose_math(w, in_dim, out_dim);
         Self::from_f32_transposed(&t, in_dim, out_dim, granularity)
+    }
+
+    /// Quantize a **math layout** `[in, out]` float matrix under an
+    /// in-situ requantization scheme (see [`QuantScheme`]).
+    pub fn from_f32_math_layout_scheme(
+        w: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        scheme: QuantScheme,
+    ) -> Self {
+        let t = transpose_math(w, in_dim, out_dim);
+        Self::from_f32_transposed_scheme(&t, in_dim, out_dim, scheme)
+    }
+
+    /// Quantize an already-transposed `[out, in]` float matrix under an
+    /// in-situ requantization scheme.  All three schemes build a packed
+    /// serving mirror; `PerMatrixU8` is byte-identical to
+    /// [`QMatrix::from_f32_transposed`] at [`Granularity::PerMatrix`].
+    pub fn from_f32_transposed_scheme(
+        t: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        scheme: QuantScheme,
+    ) -> Self {
+        let (granularity, pack) = match scheme {
+            QuantScheme::PerMatrixU8 => (Granularity::PerMatrix, PackMode::U8),
+            QuantScheme::PerChannelU8 => (Granularity::PerRow, PackMode::U8),
+            QuantScheme::PerChannelI4 => (Granularity::PerRow, PackMode::I4),
+        };
+        Self::build(t, in_dim, out_dim, granularity, scheme.weight_scale(), pack)
     }
 
     /// Quantize from an already-transposed `[out, in]` float matrix.
@@ -187,7 +297,7 @@ impl QMatrix {
         out_dim: usize,
         granularity: Granularity,
     ) -> Self {
-        Self::from_f32_transposed_scaled(t, in_dim, out_dim, granularity, crate::quant::scheme::SCALE)
+        Self::from_f32_transposed_scaled(t, in_dim, out_dim, granularity, SCALE)
     }
 
     /// As [`from_f32_transposed`] with an explicit scale `S = 2^bits − 1`
@@ -198,6 +308,22 @@ impl QMatrix {
         out_dim: usize,
         granularity: Granularity,
         scale: f32,
+    ) -> Self {
+        // Historical packing policy: the seed scheme (PerMatrix) packs,
+        // the ablation granularities don't.  Scheme-built matrices pack
+        // per-row grids too — see `from_f32_transposed_scheme`.
+        let pack =
+            if granularity == Granularity::PerMatrix { PackMode::U8 } else { PackMode::None };
+        Self::build(t, in_dim, out_dim, granularity, scale, pack)
+    }
+
+    fn build(
+        t: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        granularity: Granularity,
+        scale: f32,
+        pack: PackMode,
     ) -> Self {
         assert_eq!(t.len(), in_dim * out_dim);
         let mut data = vec![0u8; t.len()];
@@ -249,11 +375,14 @@ impl QMatrix {
                     .sum()
             })
             .collect();
+        let inv_q = params.iter().map(|p| 1.0 / p.q as f64).collect();
         let mut m =
-            QMatrix { out_dim, in_dim, granularity, data, params, row_sums, packed: None };
-        if granularity == Granularity::PerMatrix {
-            m.packed = Some(Box::new(PackedQMatrix::pack(&m)));
-        }
+            QMatrix { out_dim, in_dim, granularity, data, params, inv_q, row_sums, packed: None };
+        m.packed = match pack {
+            PackMode::None => None,
+            PackMode::U8 => Some(Box::new(PackedQMatrix::pack(&m))),
+            PackMode::I4 => Some(Box::new(PackedQMatrix::pack_i4(&m))),
+        };
         m
     }
 
@@ -287,6 +416,7 @@ impl QMatrix {
             granularity: Granularity::PerMatrix,
             data,
             params: vec![params],
+            inv_q: vec![1.0 / params.q as f64],
             row_sums,
             packed: None,
         };
@@ -464,6 +594,88 @@ mod tests {
         assert!(pr.packed.is_none() && pr.packed_bytes() == 0);
         let sb = QMatrix::from_f32_math_layout(&w, 20, 10, Granularity::SubBlock { size: 4 });
         assert!(sb.packed.is_none());
+    }
+
+    /// Read one int4 packed element back through the documented nibble
+    /// layout.
+    fn packed_i4_at(p: &PackedQMatrix, o: usize, k: usize) -> u8 {
+        let panel = o / PackedQMatrix::NR;
+        let r = o % PackedQMatrix::NR;
+        let kb = (k / PackedQMatrix::K_CHUNK_I4) * PackedQMatrix::K_CHUNK_I4;
+        let base = panel * PackedQMatrix::NR * p.k_padded / 2;
+        let off = k - kb;
+        let b = p.data
+            [base + (kb / 2) * PackedQMatrix::NR + r * PackedQMatrix::K_CHUNK + off % PackedQMatrix::K_CHUNK];
+        if off < PackedQMatrix::K_CHUNK {
+            b & 0x0F
+        } else {
+            b >> 4
+        }
+    }
+
+    #[test]
+    fn i4_pack_unpack_roundtrips_every_element() {
+        forall("i4 packed layout", 60, 0x14AC, |g: &mut Gen| {
+            let in_dim = g.usize_in(0, 70);
+            let out_dim = g.usize_in(0, 30);
+            let w = g.vec_normal(in_dim * out_dim, 0.5);
+            let m = QMatrix::from_f32_math_layout_scheme(
+                &w, in_dim, out_dim, QuantScheme::PerChannelI4,
+            );
+            assert_eq!(m.granularity, Granularity::PerRow);
+            assert!(m.data.iter().all(|&v| v <= 15), "int4 grid escaped [0,15]");
+            let p = m.packed.as_deref().expect("i4 scheme must pack");
+            assert_eq!(p.bits, 4);
+            assert!(!p.signed, "int4 panels are unsigned on every arch");
+            assert_eq!(p.k_padded % PackedQMatrix::K_CHUNK_I4, 0);
+            assert!(p.k_padded >= in_dim && p.k_padded < in_dim + PackedQMatrix::K_CHUNK_I4);
+            assert_eq!(p.panels, out_dim.div_ceil(PackedQMatrix::NR));
+            assert_eq!(p.data.len(), p.panels * PackedQMatrix::NR * p.k_padded / 2);
+            assert_eq!(p.panel_stride(), PackedQMatrix::NR * p.k_padded / 2);
+            for o in 0..out_dim {
+                for k in 0..in_dim {
+                    assert_eq!(packed_i4_at(p, o, k), m.data[o * in_dim + k], "o={o} k={k}");
+                }
+                for k in in_dim..p.k_padded {
+                    assert_eq!(packed_i4_at(p, o, k), 0, "tail o={o} k={k}");
+                }
+            }
+            for o in out_dim..p.panels * PackedQMatrix::NR {
+                for k in 0..p.k_padded {
+                    assert_eq!(packed_i4_at(p, o, k), 0, "pad row o={o} k={k}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn scheme_constructors_build_expected_shapes() {
+        let mut g = Gen::new(0x5C4E);
+        let (in_dim, out_dim) = (37, 11);
+        let w = g.vec_normal(in_dim * out_dim, 0.6);
+        // PerMatrixU8 is byte-identical to the seed constructor.
+        let seed = QMatrix::from_f32_math_layout(&w, in_dim, out_dim, Granularity::PerMatrix);
+        let pm = QMatrix::from_f32_math_layout_scheme(&w, in_dim, out_dim, QuantScheme::PerMatrixU8);
+        assert_eq!(seed.data, pm.data);
+        assert_eq!(seed.row_sums, pm.row_sums);
+        assert_eq!(seed.packed.as_ref().unwrap().data, pm.packed.as_ref().unwrap().data);
+        // PerChannelU8: per-row params on the u8 grid, packed mirror present.
+        let pc = QMatrix::from_f32_math_layout_scheme(&w, in_dim, out_dim, QuantScheme::PerChannelU8);
+        assert_eq!(pc.granularity, Granularity::PerRow);
+        assert_eq!(pc.params.len(), out_dim);
+        assert_eq!(pc.inv_q.len(), out_dim);
+        let pk = pc.packed.as_deref().expect("per-channel-u8 packs");
+        assert_eq!(pk.bits, 8);
+        assert_eq!(pk.signed, cfg!(target_arch = "x86_64"));
+        // The per-row grid matches the plain PerRow quantization.
+        let pr = QMatrix::from_f32_math_layout(&w, in_dim, out_dim, Granularity::PerRow);
+        assert_eq!(pc.data, pr.data);
+        // The i4 mirror halves the packed bytes of the u8 mirror (same
+        // panel geometry, two values per byte; padding differs by ≤16
+        // columns).
+        let i4 = QMatrix::from_f32_math_layout_scheme(&w, in_dim, out_dim, QuantScheme::PerChannelI4);
+        let i4p = i4.packed.as_deref().unwrap();
+        assert!(i4p.storage_bytes() <= pk.storage_bytes());
     }
 
     #[test]

@@ -19,6 +19,100 @@
 /// S = 2⁸ − 1.
 pub const SCALE: f32 = 255.0;
 
+/// S = 2⁴ − 1 (int4 weight grid; activations stay 8-bit).
+pub const SCALE_I4: f32 = 15.0;
+
+/// An **in-situ requantization** scheme: how a loaded model's weight
+/// matrices are (re)quantized at load time, independent of what the
+/// `.qam` artifact stores.  Selected per deployment via `--isq <scheme>`
+/// or `QUANTASR_ISQ` (mistral.rs-style ISQ), so one trained artifact
+/// serves at 8-bit or 4-bit without re-export.
+///
+/// | scheme | params | weight grid | packed panels |
+/// |---|---|---|---|
+/// | `PerMatrixU8` | one (Q, zp) per matrix | u8, S=255 | u8 (seed layout) |
+/// | `PerChannelU8` | one (Q, zp) per output row | u8, S=255 | u8 |
+/// | `PerChannelI4` | one (Q, zp) per output row | u8 grid on [0,15] | two nibbles per byte |
+///
+/// Every scheme runs on the same GEMM kernel ladder with the same
+/// bit-exactness contract (any SIMD rung ≡ its scalar reference); only
+/// the per-output finish arithmetic differs (see `quant::gemm`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantScheme {
+    /// The paper's scheme (§3.1): one scale per weight matrix, 8-bit.
+    /// Stored-u8 `.qam` grids are served untouched under this scheme.
+    PerMatrixU8,
+    /// One scale per output row (NVIDIA-style per-channel), 8-bit.
+    PerChannelU8,
+    /// Per-output-row scales with 4-bit weights (two per byte in the
+    /// packed panels) and 8-bit activations.
+    PerChannelI4,
+}
+
+impl QuantScheme {
+    /// Canonical name (CLI/env spelling, registry rows, BENCH_quant.json).
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantScheme::PerMatrixU8 => "per-matrix-u8",
+            QuantScheme::PerChannelU8 => "per-channel-u8",
+            QuantScheme::PerChannelI4 => "per-channel-i4",
+        }
+    }
+
+    /// Parse a CLI/env spelling (canonical names plus short aliases).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "per-matrix-u8" | "per-matrix" | "u8" | "q8" => Some(QuantScheme::PerMatrixU8),
+            "per-channel-u8" | "per-channel" | "pc-u8" => Some(QuantScheme::PerChannelU8),
+            "per-channel-i4" | "i4" | "int4" | "q4" => Some(QuantScheme::PerChannelI4),
+            _ => None,
+        }
+    }
+
+    /// Weight-grid scale `S = 2^bits − 1`.
+    pub fn weight_scale(&self) -> f32 {
+        match self {
+            QuantScheme::PerChannelI4 => SCALE_I4,
+            _ => SCALE,
+        }
+    }
+
+    /// Weight bits (packed-panel storage width).
+    pub fn weight_bits(&self) -> u32 {
+        match self {
+            QuantScheme::PerChannelI4 => 4,
+            _ => 8,
+        }
+    }
+
+    /// The process-wide `QUANTASR_ISQ` override, or [`PerMatrixU8`]
+    /// (the seed scheme) when unset.  Parsed once; unknown values warn
+    /// and fall back to the default rather than panic (same contract as
+    /// `QUANTASR_KERNEL`).
+    ///
+    /// [`PerMatrixU8`]: QuantScheme::PerMatrixU8
+    pub fn from_env_or_default() -> Self {
+        use std::sync::OnceLock;
+        static FORCED: OnceLock<QuantScheme> = OnceLock::new();
+        *FORCED.get_or_init(|| {
+            let Ok(v) = std::env::var("QUANTASR_ISQ") else {
+                return QuantScheme::PerMatrixU8;
+            };
+            match QuantScheme::parse(&v) {
+                Some(s) => s,
+                None => {
+                    eprintln!(
+                        "warning: unknown QUANTASR_ISQ '{v}' \
+                         (want per-matrix-u8 | per-channel-u8 | per-channel-i4); \
+                         using per-matrix-u8"
+                    );
+                    QuantScheme::PerMatrixU8
+                }
+            }
+        })
+    }
+}
+
 /// Quantization parameters for one group of values.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QuantParams {

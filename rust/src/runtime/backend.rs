@@ -122,6 +122,15 @@ pub trait AmBackend: Send + Sync + 'static {
     fn model_name(&self) -> String {
         self.backend_name().to_string()
     }
+
+    /// Numeric representation this backend executes under, for the serving
+    /// registry (`'Q'` frame) and per-model metrics: a
+    /// [`crate::quant::QuantScheme`] name (`"per-matrix-u8"`, …) or
+    /// `"float"`.  Backends that don't requantize report their native
+    /// numerics.
+    fn scheme_name(&self) -> &'static str {
+        "float"
+    }
 }
 
 /// The native int8/f32 engine — the production hot path.  `Arena` is the
@@ -187,6 +196,10 @@ impl AmBackend for AcousticModel {
 
     fn model_name(&self) -> String {
         self.header.name.clone()
+    }
+
+    fn scheme_name(&self) -> &'static str {
+        AcousticModel::scheme_name(self)
     }
 }
 
@@ -367,6 +380,7 @@ mod tests {
         assert_eq!(AmBackend::num_labels(&m), 7);
         assert!(AmBackend::lane_capacity(&m).is_none());
         assert_eq!(m.backend_name(), "native");
+        assert_eq!(AmBackend::scheme_name(&m), "per-matrix-u8");
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! The CI accuracy gate for in-situ requantization (`--isq`).
+//!
+//! Two tiers:
+//!
+//! - [`isq_accuracy_gate_and_bench`] always runs: it prices every scheme on
+//!   a deterministic random model + sim-generated eval set — weight
+//!   reconstruction RMS, posterior divergence vs the f32 path, greedy
+//!   phone-LER deltas — asserts the documented ceilings, and writes
+//!   `BENCH_quant.json` (CI uploads it) including the batch-32 i4-vs-u8
+//!   GEMM throughput ratio, so the accuracy/speed trade-off of the int4
+//!   ladder is recorded next to the WER evidence.
+//! - [`isq_wer_gate_on_trained_model`] runs when `make artifacts` models
+//!   exist: the real decoder-in-the-loop WER deltas vs f32 on the trained
+//!   p24 grid, with the per-scheme WER ceilings CI enforces.
+//!
+//! Documented bounds (the gate):
+//! - PerChannelU8 weight RMS ≤ PerMatrixU8 weight RMS on every matrix
+//!   (finer granularity can only help).
+//! - PerChannelI4 weight RMS ≤ 20× PerMatrixU8 (the 4-bit grid has 17×
+//!   the step size; per-channel ranges claw some back).
+//! - Trained-model WER: per-channel-u8 ≤ per-matrix-u8 + 2% absolute;
+//!   per-channel-i4 ≤ f32 + 10% absolute.
+
+mod common;
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use quantasr::decoder::{ctc, wer};
+use quantasr::io::model_fmt::Tensor;
+use quantasr::nn::{AcousticModel, ExecMode};
+use quantasr::quant::gemm::{qgemm, Kernel, QScratch};
+use quantasr::quant::{QMatrix, QuantScheme};
+use quantasr::sim::dataset::{generate_split, Style};
+use quantasr::sim::World;
+
+const SCHEMES: [QuantScheme; 3] =
+    [QuantScheme::PerMatrixU8, QuantScheme::PerChannelU8, QuantScheme::PerChannelI4];
+
+/// RMS of `recover(quantize(w)) − w` for one scheme over one matrix.
+fn recon_rms(w: &[f32], in_dim: usize, out_dim: usize, scheme: QuantScheme) -> f64 {
+    let m = QMatrix::from_f32_math_layout_scheme(w, in_dim, out_dim, scheme);
+    let r = m.recover_math_layout();
+    (w.iter().zip(&r).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>() / w.len() as f64).sqrt()
+}
+
+#[test]
+fn isq_accuracy_gate_and_bench() {
+    let qam = common::random_model_seeded(2, 64, Some(32), 0x15_0A);
+    let world = World::new();
+    let utts = generate_split(6, 0xA11, &world, Style::Clean);
+
+    // --- Weight reconstruction error per scheme, every 2-D tensor. ---
+    let mut rms = [0.0f64; 3]; // summed over matrices, per scheme
+    let mut mats = 0usize;
+    for t in qam.tensors.values() {
+        let shape = t.shape().to_vec();
+        if shape.len() != 2 {
+            continue;
+        }
+        mats += 1;
+        let w = match t {
+            Tensor::F32 { data, .. } => data.clone(),
+            q => q.to_f32(),
+        };
+        let per_scheme: Vec<f64> =
+            SCHEMES.iter().map(|&s| recon_rms(&w, shape[0], shape[1], s)).collect();
+        // Finer granularity can only shrink the error (same 8-bit grid,
+        // tighter ranges) — enforced per matrix, not just on average.
+        assert!(
+            per_scheme[1] <= per_scheme[0] * 1.0001 + 1e-12,
+            "per-channel-u8 RMS {} > per-matrix-u8 RMS {} on a {shape:?} matrix",
+            per_scheme[1],
+            per_scheme[0]
+        );
+        assert!(
+            per_scheme[2] <= per_scheme[0] * 20.0,
+            "per-channel-i4 RMS {} blew past 20× the u8 baseline {} on {shape:?}",
+            per_scheme[2],
+            per_scheme[0]
+        );
+        for (acc, v) in rms.iter_mut().zip(&per_scheme) {
+            *acc += v;
+        }
+    }
+    assert!(mats >= 5, "random model should have several matrices");
+    for v in rms.iter_mut() {
+        *v /= mats as f64;
+    }
+
+    // --- Posterior divergence + greedy phone LER vs the f32 path. ---
+    let mf = AcousticModel::from_qam(&qam, ExecMode::Float).unwrap();
+    let f32_lp: Vec<Vec<f32>> =
+        utts.iter().map(|u| mf.forward_utt(&u.feats, u.num_frames)).collect();
+    let ler_of = |lps: &[Vec<f32>]| -> f64 {
+        let mut st = wer::EditStats::default();
+        for (lp, u) in lps.iter().zip(&utts) {
+            st.add(&wer::align(&ctc::greedy(lp, mf.num_labels()), &u.phones));
+        }
+        st.rate()
+    };
+    let f32_ler = ler_of(&f32_lp);
+    // (max |Δ log p| ceiling, |Δ LER| ceiling) per scheme — the u8 bounds
+    // mirror the nn::model close-to-float contract; i4 gets the coarser
+    // documented budget.
+    let budgets = [(1.5f32, 0.05f64), (1.5, 0.05), (6.0, 0.25)];
+    let mut max_dlp = [0.0f32; 3];
+    let mut lers = [0.0f64; 3];
+    for (si, &scheme) in SCHEMES.iter().enumerate() {
+        let mq = AcousticModel::from_qam_scheme(&qam, ExecMode::Quant, scheme).unwrap();
+        let lps: Vec<Vec<f32>> =
+            utts.iter().map(|u| mq.forward_utt(&u.feats, u.num_frames)).collect();
+        for (lp, flp) in lps.iter().zip(&f32_lp) {
+            for (a, b) in lp.iter().zip(flp) {
+                max_dlp[si] = max_dlp[si].max((a - b).abs());
+            }
+        }
+        lers[si] = ler_of(&lps);
+        let (lp_bound, ler_bound) = budgets[si];
+        assert!(
+            max_dlp[si] < lp_bound,
+            "{scheme:?}: max |Δ log p| {} ≥ ceiling {lp_bound}",
+            max_dlp[si]
+        );
+        assert!(
+            (lers[si] - f32_ler).abs() < ler_bound,
+            "{scheme:?}: greedy LER {} drifted from f32 LER {f32_ler} past {ler_bound}",
+            lers[si]
+        );
+    }
+
+    // --- Batch-32 GEMM throughput, i4 vs u8, on the auto rung. ---
+    // Small enough to stay cheap in debug builds; the CI quant-accuracy
+    // job runs --release, where this ratio is the acceptance number.
+    let (k, n, batch) = (256usize, 1024usize, 32usize);
+    let wf: Vec<f32> = (0..k * n).map(|i| ((i * 2654435761) as f32).sin() * 0.05).collect();
+    let x: Vec<f32> = (0..batch * k).map(|i| ((i * 40503) as f32).cos()).collect();
+    let mut gemm_ns = [0.0f64; 3];
+    for (si, &scheme) in SCHEMES.iter().enumerate() {
+        let qm = QMatrix::from_f32_math_layout_scheme(&wf, k, n, scheme);
+        let mut y = vec![0f32; batch * n];
+        let mut scratch = QScratch::default();
+        // warm-up, then best-of-5 (min filters scheduler noise)
+        qgemm(&x, batch, &qm, None, &mut y, &mut scratch, Kernel::Auto, false);
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            qgemm(&x, batch, &qm, None, &mut y, &mut scratch, Kernel::Auto, false);
+            best = best.min(t0.elapsed().as_secs_f64() * 1e9);
+        }
+        gemm_ns[si] = best;
+    }
+    let i4_vs_u8 = gemm_ns[1] / gemm_ns[2];
+    println!("i4 vs per-channel-u8 GEMM at batch {batch}: {i4_vs_u8:.2}×");
+
+    // --- BENCH_quant.json: the accuracy/speed trade-off artifact. ---
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"quant\",\n  \"schemes\": [\n");
+    for (si, &scheme) in SCHEMES.iter().enumerate() {
+        let comma = if si + 1 < SCHEMES.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"scheme\": \"{}\", \"weight_rms\": {:.6e}, \
+             \"max_dlogp\": {:.4}, \"greedy_ler\": {:.4}, \
+             \"gemm_b32_ns\": {:.0}}}{comma}",
+            scheme.name(),
+            rms[si],
+            max_dlp[si],
+            lers[si],
+            gemm_ns[si],
+        );
+    }
+    let _ = writeln!(
+        json,
+        "  ],\n  \"f32_greedy_ler\": {f32_ler:.4},\n  \
+         \"gemm\": {{\"batch\": {batch}, \"k\": {k}, \"n\": {n}, \
+         \"i4_vs_pc_u8\": {i4_vs_u8:.3}}}\n}}"
+    );
+    match std::fs::write("BENCH_quant.json", &json) {
+        Ok(()) => println!("wrote BENCH_quant.json"),
+        Err(e) => eprintln!("could not write BENCH_quant.json: {e}"),
+    }
+}
+
+#[test]
+fn isq_wer_gate_on_trained_model() {
+    use quantasr::decoder::DecoderConfig;
+    use quantasr::eval::{build_decoder, evaluate};
+    use quantasr::io::feat_fmt::read_feats;
+
+    let Some(art) = common::artifacts() else { return };
+    let utts = read_feats(art.join("data/eval_clean.feats")).unwrap();
+    let utts = &utts[..32.min(utts.len())];
+    let qam = quantasr::io::model_fmt::QamFile::load(art.join("models/p24.float.qam")).unwrap();
+    let world = World::new();
+    let decoder = build_decoder(&world, DecoderConfig::default());
+
+    let mf = AcousticModel::from_qam(&qam, ExecMode::Float).unwrap();
+    let f32_wer = evaluate(&mf, &decoder, utts, 4).wer;
+    let mut wers = [0.0f64; 3];
+    for (si, &scheme) in SCHEMES.iter().enumerate() {
+        let m = AcousticModel::from_qam_scheme(&qam, ExecMode::Quant, scheme).unwrap();
+        wers[si] = evaluate(&m, &decoder, utts, 4).wer;
+        println!("{}: WER {:.2}% (f32 {:.2}%)", scheme.name(), 100.0 * wers[si], 100.0 * f32_wer);
+    }
+    // The CI ceilings: finer u8 granularity must not cost accuracy, and
+    // the 4-bit ladder must stay within its documented WER budget.
+    assert!(
+        wers[1] <= wers[0] + 0.02,
+        "per-channel-u8 WER {} > per-matrix-u8 WER {} + 2%",
+        wers[1],
+        wers[0]
+    );
+    assert!(
+        wers[2] <= f32_wer + 0.10,
+        "per-channel-i4 WER {} > f32 WER {f32_wer} + 10% budget",
+        wers[2]
+    );
+}

@@ -18,6 +18,7 @@ use quantasr::decoder::DecoderConfig;
 use quantasr::eval::build_decoder;
 use quantasr::frontend::spec;
 use quantasr::nn::{AcousticModel, ExecMode};
+use quantasr::quant::QuantScheme;
 use quantasr::sched::{
     AdmissionConfig, BudgetLedger, ModelParams, ModelRegistry, Priority, QuantumPolicy,
     RejectReason, StreamOptions,
@@ -896,4 +897,107 @@ fn tcp_swap_metrics_and_snapshot() {
     stop2.store(true, Ordering::SeqCst);
     drop(admin2);
     server2.join().unwrap();
+}
+
+/// In-situ requantization on the serving plane: a per-matrix-u8 model and
+/// a per-channel-i4 model share one engine, oversubscribed so quantum
+/// preemption parks and restores int4-lane state mid-utterance — every
+/// stream must stay bit-identical to its unpreempted solo run, and the
+/// registry must report each model's scheme.  Then a canaried
+/// [`Engine::swap_model`] replaces the u8 model with an i4 build of the
+/// same weights: a live survivor drains bit-exactly on the old numerics
+/// while newcomers dialing the old id are served by the i4 replacement.
+#[test]
+fn mixed_scheme_models_serve_concurrently_and_swap_u8_to_i4() {
+    let qam_a = common::random_model_seeded(2, 16, Some(8), 0x15_0A8);
+    let qam_b = common::random_model_seeded(2, 12, Some(6), 0x15_0B4);
+    let model_a = Arc::new(
+        AcousticModel::from_qam_scheme(&qam_a, ExecMode::Quant, QuantScheme::PerMatrixU8).unwrap(),
+    );
+    let model_b = Arc::new(
+        AcousticModel::from_qam_scheme(&qam_b, ExecMode::Quant, QuantScheme::PerChannelI4)
+            .unwrap(),
+    );
+    let mut registry = ModelRegistry::new();
+    assert_eq!(registry.register_named("pm-u8", model_a.clone()), 0);
+    assert_eq!(registry.register_named("pc-i4", model_b.clone()), 1);
+    let decoder =
+        Arc::new(build_decoder(&World::new(), DecoderConfig { beam: 4, ..Default::default() }));
+    // 2 lanes for 6 streams with a short quantum: both schemes get parked
+    // and restored repeatedly while the other model holds the lane.
+    let eng = Engine::start_registry(registry, decoder, sched_config(2, 3, 32));
+
+    let reg = eng.registry();
+    assert_eq!(reg.len(), 2);
+    assert_eq!(reg[0].scheme, "per-matrix-u8");
+    assert_eq!(reg[1].scheme, "per-channel-i4");
+
+    let per_model_streams = 3usize;
+    let total = 15usize;
+    let mut rxs = Vec::new();
+    for s in 0..per_model_streams {
+        for (midx, model) in [(0usize, &model_a), (1usize, &model_b)] {
+            let f = frames(total, 0x9100 + (midx * 100 + s) as u64);
+            let want = greedy_ref(model, &f, total);
+            let (id, rx) = eng
+                .try_open_stream(StreamOptions { model: midx, priority: Priority::Interactive })
+                .expect("admission");
+            eng.push_frames(id, &f).unwrap();
+            eng.finish_stream(id).unwrap();
+            rxs.push((rx, midx, want));
+        }
+    }
+    for (rx, midx, want) in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(r.num_frames, total);
+        assert_eq!(r.phones, want, "model {midx}: mixed-scheme serving changed numerics");
+    }
+    assert!(
+        *eng.metrics().preemptions.lock().unwrap() >= 1,
+        "6 streams on 2 lanes with quantum 3 must preempt (park/restore exercised)"
+    );
+
+    // Canaried swap u8 → i4 on the same weights.  The survivor keeps its
+    // stream open across the swap and must finish on the old u8 numerics.
+    let model_a_i4 = Arc::new(
+        AcousticModel::from_qam_scheme(&qam_a, ExecMode::Quant, QuantScheme::PerChannelI4)
+            .unwrap(),
+    );
+    let n = 15usize;
+    let f = frames(n, 0x51_7E);
+    let want_u8 = greedy_ref(&model_a, &f, n);
+    let want_i4 = greedy_ref(&model_a_i4, &f, n);
+    let (sid, survivor_rx) = eng
+        .try_open_stream(StreamOptions { model: 0, priority: Priority::Interactive })
+        .expect("survivor admission");
+    eng.push_frames(sid, &f).unwrap();
+    let new_id = eng
+        .swap_model(0, model_a_i4, ModelParams { weight: 1, lanes: Some(1) })
+        .expect("canaried u8→i4 swap");
+    // A newcomer still dialing the old id is redirected to the i4
+    // replacement and gets its numerics, not the old u8 ones.
+    let (nid, newcomer_rx) = eng
+        .try_open_stream(StreamOptions { model: 0, priority: Priority::Interactive })
+        .expect("redirected admission");
+    eng.push_frames(nid, &f).unwrap();
+    eng.finish_stream(nid).unwrap();
+    let r = newcomer_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(r.phones, want_i4, "redirected stream not served by the i4 replacement");
+    // The survivor drains bit-exactly on the swapped-out u8 weights.
+    eng.finish_stream(sid).unwrap();
+    let r = survivor_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(r.phones, want_u8, "swap changed the survivor's u8 numerics");
+    // Old slot tears down once drained; the replacement row carries the
+    // i4 scheme tag.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let reg = eng.registry();
+        let done = !reg.iter().any(|m| m.id == 0)
+            && reg.iter().any(|m| m.id == new_id && m.scheme == "per-channel-i4" && !m.draining);
+        if done {
+            break;
+        }
+        assert!(Instant::now() < deadline, "old u8 slot never tore down: {reg:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
 }

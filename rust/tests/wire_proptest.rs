@@ -162,6 +162,9 @@ fn gen_server_frame(g: &mut Gen) -> Vec<u8> {
                 let name_len = g.usize_in(0, 12);
                 b.extend_from_slice(&(name_len as u32).to_le_bytes());
                 b.extend((0..name_len).map(|_| b'm'));
+                let scheme_len = g.usize_in(0, 14); // scheme text after name
+                b.extend_from_slice(&(scheme_len as u32).to_le_bytes());
+                b.extend((0..scheme_len).map(|_| b'q'));
             }
             b
         }
